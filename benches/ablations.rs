@@ -1,0 +1,95 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//! 1. prefetch lookahead window w (paper: lookahead-1 at layer-node
+//!    granularity ≈ w=10 at our op granularity);
+//! 2. baseline framework-overhead calibration knob;
+//! 3. KV paging policy (direct SM-from-remote vs staged through local);
+//! 4. Eq 4.1 link-efficiency curve (on vs ideal line rate);
+//! 5. TAB striping granularity (functional pool throughput).
+
+use fenghuang::config::{baseline8, fh4_15xm};
+use fenghuang::fabric::tab::TabPool;
+use fenghuang::models::arch::{gpt3_175b, grok1};
+use fenghuang::sim::{simulate, simulate_with_policy, PrefetchPolicy};
+use fenghuang::trace::Phase;
+use fenghuang::units::Bandwidth;
+
+fn main() {
+    let fh = fh4_15xm(Bandwidth::tbps(4.8));
+    let decode = Phase::Decode { kv_len: 4608 };
+
+    println!("== Ablation 1: prefetch lookahead window (Grok-1 decode, FH4@4.8) ==");
+    println!("window  TPOT(ms)  exposed(ms)  peak_local(GB)");
+    for w in [1usize, 2, 4, 6, 10, 16, 32] {
+        let p = PrefetchPolicy { window: w, ..Default::default() };
+        let r = simulate_with_policy(&fh, &grok1(), 8, decode, &p).unwrap();
+        println!(
+            "{w:>6}  {:>8.2}  {:>11.2}  {:>8.2}",
+            r.total.as_ms(),
+            r.exposed_prefetch.as_ms(),
+            r.peak_local.as_gb()
+        );
+    }
+
+    println!("\n== Ablation 2: baseline framework-overhead knob (GPT-3 TTFT) ==");
+    println!("overhead  base TTFT(s)  FH TTFT(s)  FH advantage");
+    let fh_r = simulate(&fh, &gpt3_175b(), 8, Phase::Prefill { prompt_len: 4096 }).unwrap();
+    for ov in [1.0, 1.2, 1.4, 1.55, 1.7, 1.9] {
+        let mut base = baseline8();
+        base.framework_overhead = ov;
+        let b = simulate(&base, &gpt3_175b(), 8, Phase::Prefill { prompt_len: 4096 }).unwrap();
+        println!(
+            "{ov:>8.2}  {:>11.2}  {:>10.2}  {:>+9.1}%",
+            b.total.value(),
+            fh_r.total.value(),
+            (1.0 - fh_r.total / b.total) * 100.0
+        );
+    }
+
+    println!("\n== Ablation 3: KV path — direct-from-remote vs paged-through-local ==");
+    for (label, page_kv) in [("direct (default)", false), ("paged", true)] {
+        let p = PrefetchPolicy { page_kv, ..Default::default() };
+        let r = simulate_with_policy(&fh, &gpt3_175b(), 8, decode, &p).unwrap();
+        println!(
+            "{label:<18} TPOT {:>7.2} ms  peak local {:>6.2} GB  paging busy {:>7.2} ms",
+            r.total.as_ms(),
+            r.peak_local.as_gb(),
+            r.paging_busy.as_ms()
+        );
+    }
+
+    println!("\n== Ablation 4: Eq 4.1 efficiency curve vs ideal link ==");
+    use fenghuang::models::mfu::{link_eff, transfer_time};
+    use fenghuang::units::Bytes;
+    let bw = Bandwidth::tbps(4.0);
+    println!("tensor      eff     modelled(µs)  ideal(µs)  penalty");
+    for mib in [0.25, 1.0, 16.0, 256.0, 1024.0] {
+        let b = Bytes::mib(mib);
+        let t = transfer_time(b, bw);
+        let ideal = b.over(bw);
+        println!(
+            "{:>7.2}MiB {:>6.3} {:>12.2} {:>10.2} {:>8.2}×",
+            mib,
+            link_eff(b, bw),
+            t.as_us(),
+            ideal.as_us(),
+            t / ideal
+        );
+    }
+
+    println!("\n== Ablation 5: TAB striping granularity (functional pool, 16 MiB writes) ==");
+    let data = vec![1.0f32; 1 << 22];
+    for granule in [64usize, 256, 1024, 4096, 16384] {
+        let pool = TabPool::new(1 << 23, 8, granule);
+        let region = pool.alloc(1 << 22).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            pool.write_accumulate(region, 0, &data).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64() / 10.0;
+        println!(
+            "granule {granule:>6} elems: {:>7.2} GB/s accumulate",
+            (data.len() * 4) as f64 / dt / 1e9
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench target: §3.3.3 — FengHuang vs NVLink collective speed-ups
+//! (70× latency-bound / 15.56× bandwidth-bound), the payload sweep, and
+//! measured functional-collective throughput on the host.
+
+mod common;
+
+use fenghuang::fabric::collectives::group;
+use fenghuang::fabric::nvlink::run_ring;
+use fenghuang::fabric::tab::TabPool;
+use std::sync::Arc;
+
+fn main() {
+    print!("{}", fenghuang::analysis::speedup_report());
+
+    println!("functional collectives, host wall time (4 ranks × 1 MiB):");
+    let len = 1 << 18;
+    common::bench("ring.all_reduce 4x1MiB", 2, 10, || {
+        run_ring(4, move |c| c.all_reduce(&vec![c.rank() as f32; len]))
+    });
+    common::bench("tab.all_reduce 4x1MiB", 2, 10, || {
+        let pool = Arc::new(TabPool::new(len * 4, 8, 1024));
+        let comms = group(pool, 4);
+        let hs: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || c.all_reduce(&vec![c.rank() as f32; len]).unwrap())
+            })
+            .collect();
+        hs.into_iter().for_each(|h| {
+            h.join().unwrap();
+        });
+    });
+}

@@ -1,0 +1,63 @@
+//! Shared micro-benchmark harness.
+//!
+//! The offline build environment has no criterion crate, so `cargo bench`
+//! targets are plain binaries (`harness = false`) using this warmup +
+//! repeated-timing helper. Reported numbers: median and mean over
+//! `iters` runs after `warmup` discarded runs.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let (val, unit) = humanize(self.median_ns);
+        let (mval, munit) = humanize(self.mean_ns);
+        println!(
+            "bench {:<44} median {val:>9.3} {unit:<2} mean {mval:>9.3} {munit:<2} ({} iters)",
+            self.name, self.iters
+        );
+    }
+}
+
+fn humanize(ns: f64) -> (f64, &'static str) {
+    if ns < 1e3 {
+        (ns, "ns")
+    } else if ns < 1e6 {
+        (ns / 1e3, "µs")
+    } else if ns < 1e9 {
+        (ns / 1e6, "ms")
+    } else {
+        (ns / 1e9, "s")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_ns = samples[samples.len() / 2];
+    let mean_ns = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult { name: name.to_string(), median_ns, mean_ns, iters };
+    r.print();
+    r
+}
+
+/// Throughput helper: bytes processed per wall second.
+#[allow(dead_code)] // not every bench reports throughput
+pub fn gbps(bytes: usize, median_ns: f64) -> f64 {
+    bytes as f64 / median_ns * 1e9 / 1e9
+}

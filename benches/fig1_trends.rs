@@ -1,0 +1,4 @@
+//! Bench target: regenerate Figure 1.1 (AI users + model-size trends).
+fn main() {
+    print!("{}", fenghuang::analysis::fig1_trends());
+}

@@ -1,0 +1,7 @@
+//! Bench target: regenerate the hardware-side Chapter-2 figures
+//! (2.5 FLOPS/GB, 2.7 byte-per-FLOP, 2.9 FLOPS-per-Gbps) and the
+//! Chapter-5 bandwidth-per-capacity arithmetic.
+fn main() {
+    print!("{}", fenghuang::analysis::fig2_hw_trends());
+    print!("{}", fenghuang::analysis::chapter5());
+}

@@ -1,0 +1,6 @@
+//! Bench target: regenerate the model-side Chapter-2 figures
+//! (2.1 memory capacity, 2.2 MFU-vs-batch, 2.3 FLOPs/token, 2.4
+//! compute/memory ratio, 2.6 byte-per-FLOP, 2.8 FLOPs per comm byte).
+fn main() {
+    print!("{}", fenghuang::analysis::fig2_model_trends());
+}

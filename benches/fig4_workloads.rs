@@ -1,0 +1,31 @@
+//! Bench target: Figure 4.1 + Table 4.3 — the paper's workload
+//! evaluation: TTFT / TPOT / E2E for GPT-3, Grok-1, Qwen3 (+ Qwen3-R
+//! reasoning) on Baseline8 vs FH4-1.5xM / FH4-2.0xM across the
+//! 4.0–6.4 TB/s remote-bandwidth sweep, and the per-workload local-memory
+//! peak.
+
+mod common;
+
+use fenghuang::config::{baseline8, fh4_15xm};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::trace::Phase;
+use fenghuang::units::Bandwidth;
+
+fn main() {
+    print!("{}", fenghuang::analysis::fig41_and_table43().expect("fig41"));
+
+    println!("simulator cost (one full workload evaluation):");
+    common::bench("sim.gpt3.baseline8.decode", 2, 20, || {
+        fenghuang::sim::simulate(&baseline8(), &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 })
+            .unwrap()
+    });
+    common::bench("sim.gpt3.fh4.decode", 2, 20, || {
+        fenghuang::sim::simulate(
+            &fh4_15xm(Bandwidth::tbps(4.8)),
+            &gpt3_175b(),
+            8,
+            Phase::Decode { kv_len: 4608 },
+        )
+        .unwrap()
+    });
+}

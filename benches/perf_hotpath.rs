@@ -1,0 +1,105 @@
+//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
+//!
+//! L3 targets: trace generation, DES scheduling, whole-simulation
+//! latency, serving-loop throughput, TAB accumulate bandwidth. Run before
+//! and after each optimization; the iteration log lives in EXPERIMENTS.md.
+
+mod common;
+
+use fenghuang::config::{baseline8, fh4_15xm};
+use fenghuang::coordinator::{synthetic_workload, Batcher, Scheduler, SimBackend};
+use fenghuang::fabric::tab::TabPool;
+use fenghuang::models::arch::{gpt3_175b, qwen3_235b};
+use fenghuang::sim::{simulate_trace, PrefetchPolicy};
+use fenghuang::trace::{generate, Phase, TraceConfig};
+use fenghuang::units::{Bandwidth, Seconds};
+use std::sync::Arc;
+
+fn main() {
+    let fh = fh4_15xm(Bandwidth::tbps(4.8));
+
+    // Trace generation (per simulation).
+    common::bench("trace.generate gpt3 decode", 3, 50, || {
+        generate(&TraceConfig {
+            model: gpt3_175b(),
+            tp: 4,
+            batch: 8,
+            phase: Phase::Decode { kv_len: 4608 },
+        })
+    });
+    common::bench("trace.generate qwen3 decode (846 ops)", 3, 50, || {
+        generate(&TraceConfig {
+            model: qwen3_235b(),
+            tp: 4,
+            batch: 8,
+            phase: Phase::Decode { kv_len: 4608 },
+        })
+    });
+
+    // Pure scheduling over a pre-built trace.
+    let tr = generate(&TraceConfig {
+        model: qwen3_235b(),
+        tp: 4,
+        batch: 8,
+        phase: Phase::Decode { kv_len: 4608 },
+    });
+    let policy = PrefetchPolicy::default();
+    let r = common::bench("sim.schedule qwen3 trace", 3, 200, || {
+        simulate_trace(&fh, &tr, &policy)
+    });
+    println!(
+        "  -> {:.1} M ops/s through the two-stream engine",
+        tr.ops.len() as f64 / r.median_ns * 1e9 / 1e6
+    );
+
+    // End-to-end simulate (trace + schedule + occupancy).
+    common::bench("sim.simulate gpt3 fh4 decode", 3, 50, || {
+        fenghuang::sim::simulate(&fh, &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }).unwrap()
+    });
+    common::bench("sim.simulate gpt3 baseline decode", 3, 50, || {
+        fenghuang::sim::simulate(&baseline8(), &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 })
+            .unwrap()
+    });
+
+    // Serving loop: 64 requests through the simulation backend.
+    let r = common::bench("coordinator.serve 64 reqs (sim backend)", 1, 10, || {
+        let backend = SimBackend::new(fh.clone(), gpt3_175b(), 8);
+        let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 131072));
+        sched.submit_all(synthetic_workload(64, 1024, 64, Seconds::ms(10.0)));
+        sched.run_to_completion().unwrap();
+        sched.metrics.completed
+    });
+    println!("  -> {:.0} requests/s coordinator throughput", 64.0 / r.median_ns * 1e9);
+
+    // TAB pool hot path.
+    let pool = Arc::new(TabPool::new(1 << 23, 8, 1024));
+    let region = pool.alloc(1 << 21).unwrap();
+    let data = vec![1.0f32; 1 << 21];
+    let r = common::bench("tab.write_accumulate 8MiB", 3, 50, || {
+        pool.write_accumulate(region, 0, &data).unwrap()
+    });
+    println!("  -> {:.2} GB/s single-thread accumulate", common::gbps(data.len() * 4, r.median_ns));
+
+    // Concurrent accumulate scaling (the TAB's parallel-bank claim).
+    for threads in [1usize, 2, 4, 8] {
+        let pool = Arc::new(TabPool::new(1 << 24, 16, 1024));
+        let region = pool.alloc(1 << 22).unwrap();
+        let name = format!("tab.accumulate 4MiB x{threads} threads");
+        let r = common::bench(&name, 2, 20, || {
+            let hs: Vec<_> = (0..threads)
+                .map(|_| {
+                    let p = Arc::clone(&pool);
+                    std::thread::spawn(move || {
+                        let d = vec![1.0f32; 1 << 20];
+                        for off in 0..4 {
+                            p.write_accumulate(region, off * (1 << 20), &d).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            hs.into_iter().for_each(|h| h.join().unwrap());
+        });
+        let total_bytes = threads * 4 * (1 << 20) * 4;
+        println!("  -> {:.2} GB/s aggregate", common::gbps(total_bytes, r.median_ns));
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench target: Table 3.1 — TAB operation latency model, plus measured
+//! host-side latencies of the *functional* pool operations (the substrate
+//! the serving example runs on).
+
+mod common;
+
+use fenghuang::fabric::tab::TabPool;
+use fenghuang::units::{Bandwidth, Bytes};
+
+fn main() {
+    print!("{}", fenghuang::analysis::table31());
+
+    println!("modelled op latency vs payload (Eqs 3.1–3.3 at 4.0 TB/s):");
+    let lat = fenghuang::fabric::FabricLatencies::default();
+    let bw = Bandwidth::tbps(4.0);
+    for kib in [2.0, 64.0, 1024.0, 16384.0] {
+        let b = Bytes::kib(kib);
+        println!(
+            "  {:>6.0} KiB  read {:>9.1} ns  write {:>9.1} ns  write-acc {:>9.1} ns",
+            kib,
+            lat.read_latency(b, bw).as_ns(),
+            lat.write_latency(b, bw).as_ns(),
+            lat.write_accumulate_latency(b, bw).as_ns()
+        );
+    }
+
+    println!("\nfunctional TabPool host performance:");
+    let pool = TabPool::new(1 << 24, 8, 1024);
+    let region = pool.alloc(1 << 22).unwrap();
+    let data = vec![1.0f32; 1 << 22]; // 16 MiB
+    let bytes = data.len() * 4;
+    let r = common::bench("tab.write 16MiB", 3, 30, || pool.write(region, 0, &data).unwrap());
+    println!("  -> {:.2} GB/s", common::gbps(bytes, r.median_ns));
+    let r = common::bench("tab.write_accumulate 16MiB", 3, 30, || {
+        pool.write_accumulate(region, 0, &data).unwrap()
+    });
+    println!("  -> {:.2} GB/s", common::gbps(bytes, r.median_ns));
+    let mut out = vec![0.0f32; 1 << 22];
+    let r = common::bench("tab.read 16MiB", 3, 30, || pool.read_into(region, 0, &mut out).unwrap());
+    println!("  -> {:.2} GB/s", common::gbps(bytes, r.median_ns));
+    common::bench("tab.alloc+free 1MiB", 10, 1000, || {
+        let r = pool.alloc(1 << 18).unwrap();
+        pool.free(r);
+    });
+    common::bench("tab.notify+wait", 10, 1000, || {
+        pool.notify("bench", 1);
+        pool.wait_notifications("bench", 1);
+        pool.reset_notifications("bench");
+    });
+}

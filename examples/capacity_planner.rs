@@ -1,0 +1,54 @@
+//! Capacity planner: which models fit which systems, and at what cost?
+//!
+//! Sweeps the paper's workloads across Baseline8 / FH4 presets and prints
+//! the infrastructure view the paper's abstract argues from: local-memory
+//! reduction, GPU-count reduction, and whether each deployment is even
+//! feasible (does the working set fit?).
+//!
+//! ```bash
+//! cargo run --release --example capacity_planner
+//! ```
+
+use fenghuang::models::{arch, memory};
+use fenghuang::prelude::*;
+use fenghuang::sim::run_workload;
+use fenghuang::units::Bandwidth;
+
+fn main() -> Result<()> {
+    println!("model        weights(GB)  kv@8x5k(GB)  | baseline8 fit? | FH4 local need | GPU savings");
+    for m in arch::eval_models() {
+        let w = memory::param_bytes(&m);
+        let kv = memory::kv_cache_bytes(&m, 8, 5120);
+        // Baseline: per-GPU share of weights+KV must fit 141 GB.
+        let per_gpu = (w + kv) / 8.0;
+        let fits = per_gpu.as_gb() < 141.0;
+        let fh = run_workload(&fh4_15xm(Bandwidth::tbps(4.8)), &m, 8, 4096, 1024)?;
+        println!(
+            "{:<12} {:>10.0} {:>12.0}  | {:<14} | {:>8.2} GB    | 8 → 4 GPUs ({:.0}% local-mem reduction)",
+            m.name,
+            w.as_gb(),
+            kv.as_gb(),
+            if fits { "yes" } else { "NO (shard!)" },
+            fh.peak_local.as_gb(),
+            (1.0 - fh.peak_local.as_gb() / 144.0) * 100.0,
+        );
+    }
+
+    println!("\nremote-bandwidth sensitivity (GPT-3 E2E, Q&A):");
+    let m = arch::gpt3_175b();
+    let base = run_workload(&baseline8(), &m, 8, 4096, 1024)?;
+    println!("  Baseline8          E2E {:>7.2} s", base.e2e.value());
+    for tbps in [4.0, 4.4, 4.8, 5.2, 5.6, 6.0, 6.4] {
+        for sys in [fh4_15xm(Bandwidth::tbps(tbps)), fh4_20xm(Bandwidth::tbps(tbps))] {
+            let r = run_workload(&sys, &m, 8, 4096, 1024)?;
+            println!(
+                "  {:<10} @ {:.1} TB/s E2E {:>7.2} s ({:+.1}% vs baseline)",
+                r.system,
+                tbps,
+                r.e2e.value(),
+                (r.e2e / base.e2e - 1.0) * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Quickstart: simulate the paper's headline comparison in ~30 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fenghuang::prelude::*;
+use fenghuang::sim::run_workload;
+use fenghuang::units::Bandwidth;
+
+fn main() -> Result<()> {
+    let model = arch::gpt3_175b();
+    let batch = 8;
+    let (prompt, gen) = (4096, 1024); // the paper's Q&A task
+
+    let base = run_workload(&baseline8(), &model, batch, prompt, gen)?;
+    println!(
+        "{:<11} TTFT {:>8.1} ms  TPOT {:>6.2} ms  E2E {:>6.2} s  GPUs 8",
+        base.system,
+        base.ttft.as_ms(),
+        base.tpot.as_ms(),
+        base.e2e.value()
+    );
+
+    for tbps in [4.0, 4.8, 5.6, 6.4] {
+        let sys = fh4_15xm(Bandwidth::tbps(tbps));
+        let r = run_workload(&sys, &model, batch, prompt, gen)?;
+        println!(
+            "{:<11} TTFT {:>8.1} ms  TPOT {:>6.2} ms  E2E {:>6.2} s  GPUs 4  @ {tbps} TB/s  local {:.1} GB",
+            r.system,
+            r.ttft.as_ms(),
+            r.tpot.as_ms(),
+            r.e2e.value(),
+            r.peak_local.as_gb()
+        );
+    }
+    println!("\nFengHuang serves the same workload with HALF the GPUs (paper: up to 50% GPU reduction).");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT export: lower the L2/L1 graphs to HLO text + parameter blobs.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust coordinator
+loads these artifacts through PJRT and never touches Python again.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  model_fwd.hlo.txt        full tiny-transformer forward  (tokens→logits)
+  layer_shard_fwd.hlo.txt  one TP-sharded block (partial sums for the TAB)
+  attention.hlo.txt        standalone L1 attention kernel
+  writeacc.hlo.txt         standalone L1 write-accumulate kernel
+  params.bin               f32 LE parameter blob (full + per-rank shards)
+  manifest.txt             tensor table:  name offset_elems shape...
+  meta.txt                 model/config scalars for the Rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention as attn_k
+from .kernels import writeacc as wa_k
+
+# Export shapes (static — one compiled executable per variant).
+BATCH = 4
+SEQ = 64
+TP = 4
+WRITEACC_LANES = 65536
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params: dict, cfg: model.TinyConfig) -> list[tuple[str, jax.Array]]:
+    """Deterministic (name, array) order shared with the Rust loader."""
+    out = [("embed", params["embed"]), ("final_norm", params["final_norm"])]
+    keys = ["norm1", "norm2", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+    for l, lp in enumerate(params["layers"]):
+        for k in keys:
+            out.append((f"layers.{l}.{k}", lp[k]))
+    # Per-rank shard tensors (the Rust workers feed these to the shard HLO).
+    for l, lp in enumerate(params["layers"]):
+        for r in range(TP):
+            sp = model.shard_layer_params(lp, TP, r, cfg.heads)
+            for k in keys:
+                out.append((f"shard.{l}.r{r}.{k}", sp[k]))
+    return out
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = model.TinyConfig()
+    params = model.init_params(cfg)
+
+    # ---- model_fwd: (tokens, *param_arrays) → logits --------------------
+    flat_full = [
+        ("embed", params["embed"]),
+        ("final_norm", params["final_norm"]),
+    ]
+    keys = ["norm1", "norm2", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+    for lp in params["layers"]:
+        for k in keys:
+            flat_full.append((k, lp[k]))
+
+    def fwd_flat(tokens, *arrays):
+        p = {
+            "embed": arrays[0],
+            "final_norm": arrays[1],
+            "layers": [
+                dict(zip(keys, arrays[2 + i * len(keys) : 2 + (i + 1) * len(keys)]))
+                for i in range(cfg.layers)
+            ],
+        }
+        return (model.forward(p, tokens, cfg),)
+
+    tok_spec = jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32)
+    arr_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flat_full]
+    lowered = jax.jit(fwd_flat).lower(tok_spec, *arr_specs)
+    path = os.path.join(out_dir, "model_fwd.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # ---- layer_shard_fwd: (x, 9 shard weights) → (attn_partial, ffn_partial)
+    shard_fn = model.make_shard_fn(cfg, TP)
+    x_spec = jax.ShapeDtypeStruct((BATCH, SEQ, cfg.hidden), jnp.float32)
+    sp0 = model.shard_layer_params(params["layers"][0], TP, 0, cfg.heads)
+    shard_specs = [jax.ShapeDtypeStruct(sp0[k].shape, sp0[k].dtype) for k in keys]
+    lowered = jax.jit(lambda x, *w: shard_fn(x, *w)).lower(x_spec, *shard_specs)
+    path = os.path.join(out_dir, "layer_shard_fwd.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # ---- standalone kernels ---------------------------------------------
+    q_spec = jax.ShapeDtypeStruct((1, cfg.heads, SEQ, cfg.head_dim), jnp.float32)
+    lowered = jax.jit(
+        lambda q, k, v: (attn_k.flash_attention(q, k, v),)
+    ).lower(q_spec, q_spec, q_spec)
+    path = os.path.join(out_dir, "attention.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    c_spec = jax.ShapeDtypeStruct((TP, WRITEACC_LANES), jnp.float32)
+    lowered = jax.jit(lambda c: (wa_k.write_accumulate(c),)).lower(c_spec)
+    path = os.path.join(out_dir, "writeacc.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"wrote {path}")
+
+    # ---- parameter blob + manifest --------------------------------------
+    tensors = flatten_params(params, cfg)
+    blob_path = os.path.join(out_dir, "params.bin")
+    manifest_path = os.path.join(out_dir, "manifest.txt")
+    offset = 0
+    with open(blob_path, "wb") as blob, open(manifest_path, "w") as man:
+        for name, arr in tensors:
+            a = np.asarray(arr, dtype="<f4")
+            blob.write(a.tobytes())
+            shape = " ".join(str(d) for d in a.shape)
+            man.write(f"{name} {offset} {shape}\n")
+            offset += a.size
+    print(f"wrote {blob_path} ({offset * 4 / 1e6:.1f} MB) + manifest")
+
+    meta_path = os.path.join(out_dir, "meta.txt")
+    with open(meta_path, "w") as f:
+        f.write(
+            f"vocab {cfg.vocab}\nlayers {cfg.layers}\nhidden {cfg.hidden}\n"
+            f"heads {cfg.heads}\nffn {cfg.ffn}\nbatch {BATCH}\nseq {SEQ}\n"
+            f"tp {TP}\nwriteacc_lanes {WRITEACC_LANES}\n"
+            f"param_count {cfg.param_count()}\n"
+        )
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with `make artifacts` single-file target.
+    ap.add_argument("--out", default=None, help="(ignored; kept for Makefile stamp)")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    export(out_dir)
+
+
+if __name__ == "__main__":
+    main()

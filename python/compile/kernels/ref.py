@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these functions at build
+time (pytest); the kernels themselves lower (interpret=True) into the HLO
+artifacts the Rust runtime executes. Keeping the oracles dependency-free
+jnp makes the correctness contract auditable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention.
+
+    Shapes: q [B, H, S, D], k/v [B, H, T, D] → [B, H, S, D].
+    With ``causal=True`` query i attends to keys ≤ i + (T − S) (so decode
+    steps with S=1, T=ctx attend to everything).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    if causal:
+        s_len, t_len = q.shape[2], k.shape[2]
+        offset = t_len - s_len
+        qi = jnp.arange(s_len)[:, None]
+        kj = jnp.arange(t_len)[None, :]
+        mask = kj <= qi + offset
+        scores = jnp.where(mask, scores, jnp.asarray(-jnp.inf, scores.dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", probs, v)
+
+
+def write_accumulate(contributions: jax.Array) -> jax.Array:
+    """TAB in-memory reduction: sum over the leading (xPU) axis.
+
+    ``contributions`` has shape [N, ...]; the result is the element-wise
+    sum — the value every xPU reads back after an AllReduce through
+    FengHuang Remote Memory.
+    """
+    return jnp.sum(contributions, axis=0)
+
+
+def gated_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU-style gated FFN: (silu(x·Wg) * (x·Wu)) · Wd."""
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def moe_ffn(
+    x: jax.Array,
+    router_w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    top_k: int,
+) -> jax.Array:
+    """Top-k mixture-of-experts FFN (dense compute, sparse combine).
+
+    x [T, H]; router_w [H, E]; w_gate/w_up [E, H, F]; w_down [E, F, H].
+    Router probabilities are renormalised over the selected top-k.
+    """
+    logits = x @ router_w  # [T, E]
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)  # [T, k]
+    gates = jax.nn.softmax(top_vals.astype(jnp.float32), axis=-1).astype(x.dtype)
+    # Dense evaluation of every expert (reference path — O(T·E·H·F)).
+    h_gate = jnp.einsum("th,ehf->tef", x, w_gate)
+    h_up = jnp.einsum("th,ehf->tef", x, w_up)
+    h = jax.nn.silu(h_gate) * h_up
+    y_all = jnp.einsum("tef,efh->teh", h, w_down)  # [T, E, H]
+    t = x.shape[0]
+    sel = y_all[jnp.arange(t)[:, None], top_idx]  # [T, k, H]
+    return jnp.einsum("tkh,tk->th", sel, gates)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS normalisation."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w

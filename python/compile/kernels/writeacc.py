@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: TAB write-accumulate (in-memory tensor reduction).
+
+The TAB performs line-rate accumulation of tensors written by multiple
+xPUs into the same shared-memory region (§3.3.1): each write-accumulate is
+commutative, so the hardware needs no write ordering. This kernel is the
+L1 expression of that contract — a grid dimension ranges over the N
+contributing xPUs and accumulates each contribution into one output block.
+Grid-carried accumulation into an output ref across grid steps is exactly
+the "no ordering, just +=" semantics the TAB guarantees.
+
+Tile shape: contributions are striped into `block` chunks (the uniform
+striping of §3.3.1) so each grid step touches one VMEM-resident tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _writeacc_kernel(x_ref, o_ref):
+    """Grid (N, num_blocks): accumulate contributor i's block j."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[0, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def write_accumulate(
+    contributions: jax.Array, *, block: int = 1024, interpret: bool = True
+) -> jax.Array:
+    """Sum ``contributions`` [N, L] over axis 0 via grid accumulation.
+
+    L must divide by ``block`` (stripe granularity).
+    """
+    n, length = contributions.shape
+    block = min(block, length)
+    if length % block:
+        raise ValueError(f"length {length} must tile by block {block}")
+    grid = (n, length // block)
+    return pl.pallas_call(
+        _writeacc_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((length,), jnp.float32),
+        interpret=interpret,
+    )(contributions)

@@ -1,0 +1,226 @@
+"""L2 JAX model: a tiny GPT-style transformer built on the L1 kernels.
+
+Two build targets:
+
+* ``forward`` — the full replicated model (embed → L blocks → norm → lm
+  head). AOT-exported as ``model_fwd.hlo.txt``; the Rust serving example
+  uses it for decode (recompute-style generation) and as the numerical
+  oracle for the sharded pipeline.
+* ``layer_shard_forward`` — ONE transformer block with tensor-parallel
+  sharded weights (heads and FFN columns split across `tp` workers),
+  producing a *partial* residual contribution. Each Rust worker executes
+  this artifact for its shard; the partial outputs are summed through the
+  functional TAB pool (write-accumulate) — the paper's "communication
+  collapsed into memory ops" path, end to end. Exported as
+  ``layer_shard_fwd.hlo.txt``.
+
+Weights are explicit function arguments (not baked constants), so the same
+HLO serves any parameter values the coordinator supplies.
+
+The real workloads (GPT-3 175B / Grok-1 / Qwen3-235B) obviously cannot run
+through a CPU PJRT plugin; DESIGN.md §1 documents this substitution — the
+tiny model proves the three-layer stack composes, while the simulator
+reproduces the paper-scale numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Architecture of the end-to-end demo model (~4.3M params)."""
+
+    vocab: int = 512
+    layers: int = 4
+    hidden: int = 256
+    heads: int = 8
+    ffn: int = 1024
+    max_seq: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        per_layer = (
+            4 * self.hidden * self.hidden
+            + 3 * self.hidden * self.ffn
+            + 2 * self.hidden  # the two norm vectors
+        )
+        return self.vocab * self.hidden + self.layers * per_layer + self.hidden
+
+
+def init_params(cfg: TinyConfig, seed: int = 0) -> dict:
+    """Deterministic parameter pytree (dict of arrays, f32)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, 2 + cfg.layers)
+    scale = 1.0 / math.sqrt(cfg.hidden)
+    params: dict = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.hidden), jnp.float32) * scale,
+        "final_norm": jnp.ones((cfg.hidden,), jnp.float32),
+        "layers": [],
+    }
+    for l in range(cfg.layers):
+        lk = jax.random.split(keys[2 + l], 7)
+        params["layers"].append(
+            {
+                "norm1": jnp.ones((cfg.hidden,), jnp.float32),
+                "norm2": jnp.ones((cfg.hidden,), jnp.float32),
+                "wq": jax.random.normal(lk[0], (cfg.hidden, cfg.hidden), jnp.float32) * scale,
+                "wk": jax.random.normal(lk[1], (cfg.hidden, cfg.hidden), jnp.float32) * scale,
+                "wv": jax.random.normal(lk[2], (cfg.hidden, cfg.hidden), jnp.float32) * scale,
+                "wo": jax.random.normal(lk[3], (cfg.hidden, cfg.hidden), jnp.float32) * scale,
+                "wg": jax.random.normal(lk[4], (cfg.hidden, cfg.ffn), jnp.float32) * scale,
+                "wu": jax.random.normal(lk[5], (cfg.hidden, cfg.ffn), jnp.float32) * scale,
+                "wd": jax.random.normal(lk[6], (cfg.ffn, cfg.hidden), jnp.float32) * scale,
+            }
+        )
+    return params
+
+
+def _split_heads(x: jax.Array, heads: int) -> jax.Array:
+    b, s, h = x.shape
+    return x.reshape(b, s, heads, h // heads).transpose(0, 2, 1, 3)  # [B,He,S,D]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, he, s, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, he * d)
+
+
+def block_forward(x: jax.Array, lp: dict, heads: int, *, interpret: bool = True) -> jax.Array:
+    """One full (unsharded) transformer block with pre-norm residuals."""
+    h1 = ref.rmsnorm(x, lp["norm1"])
+    q = _split_heads(h1 @ lp["wq"], heads)
+    k = _split_heads(h1 @ lp["wk"], heads)
+    v = _split_heads(h1 @ lp["wv"], heads)
+    a = attn_k.flash_attention(q, k, v, causal=True, interpret=interpret)
+    x = x + _merge_heads(a) @ lp["wo"]
+    h2 = ref.rmsnorm(x, lp["norm2"])
+    x = x + ref.gated_ffn(h2, lp["wg"], lp["wu"], lp["wd"])
+    return x
+
+
+def forward(params: dict, tokens: jax.Array, cfg: TinyConfig, *, interpret: bool = True) -> jax.Array:
+    """Full model: tokens [B, S] int32 → logits [B, S, V]."""
+    x = params["embed"][tokens]
+    for lp in params["layers"]:
+        x = block_forward(x, lp, cfg.heads, interpret=interpret)
+    x = ref.rmsnorm(x, params["final_norm"])
+    return x @ params["embed"].T
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel shard (the artifact each Rust worker executes).
+# ---------------------------------------------------------------------------
+
+
+def shard_layer_params(lp: dict, tp: int, rank: int, heads: int) -> dict:
+    """Megatron-style split of one layer's weights for worker `rank`.
+
+    Column-parallel: wq/wk/wv (by heads) and wg/wu (by FFN columns).
+    Row-parallel: wo and wd (by input rows). Norm weights are replicated.
+    """
+    hd = lp["wq"].shape[1] // heads
+    hpr = heads // tp  # heads per rank
+    cs = slice(rank * hpr * hd, (rank + 1) * hpr * hd)
+    f = lp["wg"].shape[1]
+    fpr = f // tp
+    fs = slice(rank * fpr, (rank + 1) * fpr)
+    return {
+        "norm1": lp["norm1"],
+        "norm2": lp["norm2"],
+        "wq": lp["wq"][:, cs],
+        "wk": lp["wk"][:, cs],
+        "wv": lp["wv"][:, cs],
+        "wo": lp["wo"][cs, :],
+        "wg": lp["wg"][:, fs],
+        "wu": lp["wu"][:, fs],
+        "wd": lp["wd"][fs, :],
+    }
+
+
+def make_shard_fn(cfg: TinyConfig, tp: int, *, interpret: bool = True):
+    """Build the shard-forward function for a fixed (cfg, tp).
+
+    Signature: (x, norm1, norm2, wq, wk, wv, wo, wg, wu, wd) →
+    (attn_partial [B,S,H], ffn_partial [B,S,H]).
+    """
+    shard_heads = cfg.heads // tp
+
+    def shard_fwd(x, norm1, norm2, wq, wk, wv, wo, wg, wu, wd):
+        h1 = ref.rmsnorm(x, norm1)
+        q = _split_heads(h1 @ wq, shard_heads)
+        k = _split_heads(h1 @ wk, shard_heads)
+        v = _split_heads(h1 @ wv, shard_heads)
+        a = attn_k.flash_attention(q, k, v, causal=True, interpret=interpret)
+        attn_partial = _merge_heads(a) @ wo
+        h2 = ref.rmsnorm(x, norm2)
+        ffn_partial = ref.gated_ffn(h2, wg, wu, wd)
+        return attn_partial, ffn_partial
+
+    return shard_fwd
+
+
+def tp_forward_reference(
+    params: dict, tokens: jax.Array, cfg: TinyConfig, tp: int, *, interpret: bool = True
+) -> jax.Array:
+    """Pure-python reference of the TP pipeline the Rust coordinator runs:
+    shard partials summed (the TAB write-accumulate), residuals applied in
+    order. Must match ``forward`` up to float-accumulation order.
+    """
+    shard_fn = make_shard_fn(cfg, tp, interpret=interpret)
+    x = params["embed"][tokens]
+    for lp in params["layers"]:
+        shards = [shard_layer_params(lp, tp, r, cfg.heads) for r in range(tp)]
+        attn_sum = None
+        for sp in shards:
+            ap, _ = shard_fn(
+                x, sp["norm1"], sp["norm2"], sp["wq"], sp["wk"], sp["wv"],
+                sp["wo"], sp["wg"], sp["wu"], sp["wd"],
+            )
+            attn_sum = ap if attn_sum is None else attn_sum + ap
+        x = x + attn_sum
+        ffn_sum = None
+        for sp in shards:
+            _, fp = shard_fn(
+                x, sp["norm1"], sp["norm2"], sp["wq"], sp["wk"], sp["wv"],
+                sp["wo"], sp["wg"], sp["wu"], sp["wd"],
+            )
+            ffn_sum = fp if ffn_sum is None else ffn_sum + fp
+        x = x + ffn_sum
+    x = ref.rmsnorm(x, params["final_norm"])
+    return x @ params["embed"].T
+
+
+def greedy_generate(
+    params: dict,
+    prompt: jax.Array,
+    cfg: TinyConfig,
+    steps: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Greedy decoding by full-prefix recompute (the strategy the serving
+    example uses: simple, artifact-friendly; KV-cache decode is listed as
+    future work in DESIGN.md)."""
+    tokens = prompt
+    for _ in range(steps):
+        cur = tokens.shape[1]
+        # Pad right to the attention tile size; causality makes the padded
+        # positions invisible to position cur−1.
+        padded_len = -(-cur // 64) * 64
+        padded = jnp.pad(tokens, ((0, 0), (0, padded_len - cur)))
+        logits = forward(params, padded, cfg, interpret=interpret)
+        nxt = jnp.argmax(logits[:, cur - 1, :], axis=-1).astype(tokens.dtype)
+        tokens = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    return tokens

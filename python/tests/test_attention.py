@@ -1,0 +1,101 @@
+"""L1 attention kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 64, 16), (2, 4, 64, 32), (1, 8, 128, 32)])
+def test_matches_ref_causal(b, h, s, d):
+    q, k, v = (rand(i, (b, h, s, d), jnp.float32) for i in range(3))
+    out = attn_k.flash_attention(q, k, v, causal=True)
+    exp = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 2, 64, 16), (2, 2, 128, 64)])
+def test_matches_ref_noncausal(b, h, s, d):
+    q, k, v = (rand(i + 10, (b, h, s, d), jnp.float32) for i in range(3))
+    out = attn_k.flash_attention(q, k, v, causal=False)
+    exp = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+def test_decode_shape_s1_attends_to_full_context():
+    # Decode: S (=64 block min) shorter than T; offset handling must let the
+    # last query row see every key.
+    q = rand(1, (1, 2, 64, 16), jnp.float32)
+    k = rand(2, (1, 2, 128, 16), jnp.float32)
+    v = rand(3, (1, 2, 128, 16), jnp.float32)
+    out = attn_k.flash_attention(q, k, v, causal=True)
+    exp = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=1e-4)
+
+
+def test_block_size_invariance():
+    q, k, v = (rand(i + 20, (1, 2, 128, 32), jnp.float32) for i in range(3))
+    a = attn_k.flash_attention(q, k, v, block_q=32, block_k=32)
+    b = attn_k.flash_attention(q, k, v, block_q=128, block_k=64)
+    np.testing.assert_allclose(a, b, atol=3e-5, rtol=1e-4)
+
+
+def test_bf16_runs_with_loose_tolerance():
+    q, k, v = (rand(i + 30, (1, 2, 64, 32), jnp.bfloat16) for i in range(3))
+    out = attn_k.flash_attention(q, k, v)
+    exp = ref.attention(q, k, v)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), exp.astype(jnp.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_rejects_non_tiling_lengths():
+    q = rand(0, (1, 1, 65, 16), jnp.float32)
+    with pytest.raises(ValueError, match="tile"):
+        attn_k.flash_attention(q, q, q, block_q=64, block_k=64)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([64, 128]),
+    extra_ctx=st.sampled_from([0, 64, 128]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_hypothesis_shape_sweep(b, h, sq, extra_ctx, d, causal, seed):
+    """Property sweep across shapes/dtypes: kernel ≡ oracle."""
+    t = sq + extra_ctx
+    kq = jax.random.PRNGKey(seed)
+    ks = jax.random.split(kq, 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, t, d), jnp.float32)
+    out = attn_k.flash_attention(q, k, v, causal=causal)
+    exp = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, exp, atol=5e-5, rtol=2e-4)
+
+
+def test_softmax_rows_bounded():
+    # Output is a convex combination of V rows → within [min(V), max(V)].
+    q, k, v = (rand(i + 40, (1, 1, 64, 16), jnp.float32) for i in range(3))
+    out = attn_k.flash_attention(q, k, v, causal=False)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-5
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-5
+
+
+def test_vmem_footprint_estimate_reasonable():
+    # 64×64 f32 tiles with d=128: well under the ~16 MiB VMEM of a TPU core.
+    bytes_ = attn_k.vmem_footprint_bytes(64, 64, 4096, 128)
+    assert bytes_ < 16 * 1024 * 1024
+    assert bytes_ > 0

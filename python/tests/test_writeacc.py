@@ -1,0 +1,55 @@
+"""Write-accumulate kernel vs oracle: the TAB reduction contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, writeacc
+
+
+@pytest.mark.parametrize("n,length", [(1, 1024), (4, 4096), (8, 2048)])
+def test_matches_ref(n, length):
+    c = jax.random.normal(jax.random.PRNGKey(n), (n, length), jnp.float32)
+    out = writeacc.write_accumulate(c)
+    np.testing.assert_allclose(out, ref.write_accumulate(c), atol=1e-5, rtol=1e-5)
+
+
+def test_commutativity():
+    """§3.3.1: accumulation is order-independent — permuting contributors
+    must not change the result (up to float associativity at this scale)."""
+    c = jax.random.normal(jax.random.PRNGKey(7), (6, 1024), jnp.float32)
+    perm = jnp.array([3, 0, 5, 1, 4, 2])
+    a = writeacc.write_accumulate(c)
+    b = writeacc.write_accumulate(c[perm])
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_zero_contributions():
+    c = jnp.zeros((4, 1024), jnp.float32)
+    assert float(jnp.max(jnp.abs(writeacc.write_accumulate(c)))) == 0.0
+
+
+def test_single_contributor_is_identity():
+    c = jax.random.normal(jax.random.PRNGKey(9), (1, 2048), jnp.float32)
+    np.testing.assert_allclose(writeacc.write_accumulate(c), c[0], atol=0, rtol=0)
+
+
+def test_rejects_non_tiling():
+    c = jnp.ones((2, 1000), jnp.float32)
+    with pytest.raises(ValueError, match="tile"):
+        writeacc.write_accumulate(c, block=512)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([256, 512, 1024]),
+    seed=st.integers(0, 100),
+)
+def test_hypothesis_sweep(n, blocks, block, seed):
+    c = jax.random.normal(jax.random.PRNGKey(seed), (n, blocks * block), jnp.float32)
+    out = writeacc.write_accumulate(c, block=block)
+    np.testing.assert_allclose(out, jnp.sum(c, axis=0), atol=2e-5, rtol=1e-4)

@@ -1,0 +1,172 @@
+//! CSV emitters for every figure — the machine-readable counterpart of
+//! the text reports (downstream users plot these directly:
+//! `fenghuang figures-csv <artifact> > fig.csv`).
+
+use crate::config::{baseline8, fh4_15xm, fh4_20xm, fig41_bandwidth_sweep};
+use crate::error::Result;
+use crate::models::arch::{eval_models, trend_models};
+use crate::models::{comm, flops, memory};
+use crate::sim;
+use crate::units::Bandwidth;
+use std::fmt::Write as _;
+
+/// Render a named artifact as CSV.
+pub fn render_csv(which: &str) -> Result<String> {
+    match which {
+        "fig1" => Ok(fig1()),
+        "fig2-model" => Ok(fig2_model()),
+        "fig2-hw" => Ok(fig2_hw()),
+        "fig41" => fig41(),
+        "speedup" => Ok(speedup()),
+        other => Err(crate::FhError::Config(format!(
+            "unknown csv artifact '{other}' (fig1 fig2-model fig2-hw fig41 speedup)"
+        ))),
+    }
+}
+
+fn fig1() -> String {
+    let mut s = String::from("year,users_millions,model,params_b\n");
+    for (year, users, name, params) in super::trends::AI_TREND {
+        let _ = writeln!(s, "{year},{users},{name},{params}");
+    }
+    s
+}
+
+fn fig2_model() -> String {
+    let mut s = String::from(
+        "model,year,hidden,params_gb,kv16_gb,decode_gflop_per_tok,flop_per_weight_byte,\
+         prefill_byte_per_flop,decode_byte_per_flop,flops_per_comm_byte\n",
+    );
+    for m in trend_models() {
+        let _ = writeln!(
+            s,
+            "{},{},{},{:.2},{:.2},{:.2},{:.4},{:.4e},{:.4e},{:.1}",
+            m.name,
+            m.year,
+            m.hidden,
+            memory::param_bytes(&m).as_gb(),
+            memory::kv_cache_bytes(&m, 16, m.max_seq).as_gb(),
+            flops::decode_flops_per_token(&m, 1024).as_gflop(),
+            flops::compute_per_memory_ratio(&m, 1024),
+            flops::prefill_byte_per_flop(&m, 4096),
+            flops::decode_byte_per_flop(&m, 1, 4096),
+            comm::flops_per_comm_byte(&m, 1024),
+        );
+    }
+    s
+}
+
+fn fig2_hw() -> String {
+    let mut s = String::from(
+        "gpu,year,fp16_tflops,hbm_gb,hbm_tbps,link_gbps,flops_per_gb,byte_per_flop,flops_per_gbps\n",
+    );
+    for g in crate::hardware::catalog() {
+        let _ = writeln!(
+            s,
+            "{},{},{:.0},{:.0},{:.2},{:.0},{:.3e},{:.3e},{:.3e}",
+            g.name,
+            g.year,
+            g.fp16_flops.as_tflops(),
+            g.hbm_capacity.as_gb(),
+            g.hbm_bw.as_tbps(),
+            g.link_bw_bidir.as_gbps(),
+            g.flops_per_gb(false),
+            g.byte_per_flop(),
+            g.flops_per_gbps(),
+        );
+    }
+    s
+}
+
+fn fig41() -> Result<String> {
+    let mut s = String::from(
+        "model,task,system,remote_tbps,ttft_ms,tpot_ms,e2e_s,peak_local_gb\n",
+    );
+    let mut emit = |m: &crate::models::ModelArch,
+                    task: &str,
+                    prompt: u64,
+                    gen: u64|
+     -> Result<()> {
+        let base = sim::run_workload(&baseline8(), m, 8, prompt, gen)?;
+        let _ = writeln!(
+            s,
+            "{},{task},Baseline8,,{:.2},{:.3},{:.3},{:.2}",
+            m.name,
+            base.ttft.as_ms(),
+            base.tpot.as_ms(),
+            base.e2e.value(),
+            base.peak_local.as_gb()
+        );
+        for sysf in [fh4_15xm as fn(Bandwidth) -> _, fh4_20xm as fn(Bandwidth) -> _] {
+            for bw in fig41_bandwidth_sweep() {
+                let r = sim::run_workload(&sysf(bw), m, 8, prompt, gen)?;
+                let _ = writeln!(
+                    s,
+                    "{},{task},{},{},{:.2},{:.3},{:.3},{:.2}",
+                    m.name,
+                    r.system,
+                    bw.as_tbps(),
+                    r.ttft.as_ms(),
+                    r.tpot.as_ms(),
+                    r.e2e.value(),
+                    r.peak_local.as_gb()
+                );
+            }
+        }
+        Ok(())
+    };
+    for m in eval_models() {
+        emit(&m, "qa", 4096, 1024)?;
+    }
+    emit(&crate::models::arch::qwen3_235b(), "reasoning", 512, 16384)?;
+    Ok(s)
+}
+
+fn speedup() -> String {
+    use crate::fabric::analysis::{allreduce_speedup_at, SpeedupConfig};
+    use crate::units::Bytes;
+    let cfg = SpeedupConfig::default();
+    let mut s = String::from("payload_kib,allreduce_speedup\n");
+    let mut kib = 2.0f64;
+    while kib <= 4.0 * 1024.0 * 1024.0 {
+        let _ = writeln!(s, "{kib},{:.3}", allreduce_speedup_at(Bytes::kib(kib), &cfg));
+        kib *= 4.0;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_artifacts_emit_valid_csv() {
+        for which in ["fig1", "fig2-model", "fig2-hw", "speedup"] {
+            let csv = render_csv(which).unwrap();
+            let mut lines = csv.lines();
+            let header = lines.next().unwrap();
+            let cols = header.split(',').count();
+            assert!(cols >= 2, "{which}: header {header}");
+            let mut rows = 0;
+            for line in lines {
+                assert_eq!(line.split(',').count(), cols, "{which}: ragged row {line}");
+                rows += 1;
+            }
+            assert!(rows >= 5, "{which}: only {rows} rows");
+        }
+    }
+
+    #[test]
+    fn fig41_csv_covers_full_grid() {
+        let csv = render_csv("fig41").unwrap();
+        // 4 workloads × (1 baseline + 2 systems × 4 bandwidths) = 36 rows.
+        assert_eq!(csv.lines().count() - 1, 36);
+        assert!(csv.contains("Qwen3,reasoning"));
+        assert!(csv.contains("FH4-2.0xM,6.4"));
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        assert!(render_csv("fig99").is_err());
+    }
+}

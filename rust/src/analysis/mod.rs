@@ -1,0 +1,310 @@
+//! Figure/table generators: text reports reproducing every artifact in
+//! the paper's evaluation (see DESIGN.md §4 for the index).
+
+pub mod csv;
+pub mod trends;
+
+pub use csv::render_csv;
+
+use crate::config::{baseline8, fh4_15xm, fh4_20xm, fig41_bandwidth_sweep};
+use crate::error::Result;
+use crate::fabric::analysis::{allreduce_speedup_at, latency_floors, speedup, SpeedupConfig};
+use crate::fabric::latency::{component_totals, READ_COMPONENTS, WRITE_COMPONENTS};
+use crate::models::arch::{eval_models, trend_models};
+use crate::models::{comm, flops, memory, mfu};
+use crate::sim;
+use crate::units::{Bandwidth, Bytes};
+use std::fmt::Write as _;
+
+/// Render a named artifact ("all" renders everything).
+pub fn render(which: &str) -> Result<String> {
+    let mut out = String::new();
+    let all = which == "all";
+    if all || which == "fig1" {
+        out.push_str(&fig1_trends());
+    }
+    if all || which == "fig2-model" {
+        out.push_str(&fig2_model_trends());
+    }
+    if all || which == "fig2-hw" {
+        out.push_str(&fig2_hw_trends());
+    }
+    if all || which == "table31" {
+        out.push_str(&table31());
+    }
+    if all || which == "speedup" {
+        out.push_str(&speedup_report());
+    }
+    if all || which == "fig41" || which == "table43" {
+        out.push_str(&fig41_and_table43()?);
+    }
+    if all || which == "chapter5" {
+        out.push_str(&chapter5());
+    }
+    if out.is_empty() {
+        return Err(crate::FhError::Config(format!(
+            "unknown artifact '{which}' (try: all fig1 fig2-model fig2-hw table31 speedup fig41 table43 chapter5)"
+        )));
+    }
+    Ok(out)
+}
+
+/// Fig 1.1 — AI users worldwide + SOTA model sizes over time.
+pub fn fig1_trends() -> String {
+    let mut s = String::from("== Figure 1.1: AI adoption and model-size scaling ==\n");
+    s.push_str("year  users(M)   flagship model        params(B)\n");
+    for (year, users, name, params) in trends::AI_TREND {
+        let _ = writeln!(s, "{year}  {users:>8}   {name:<20} {params:>9.1}");
+    }
+    s.push('\n');
+    s
+}
+
+/// Figs 2.1–2.4, 2.6, 2.8 — model-side trends.
+pub fn fig2_model_trends() -> String {
+    let mut s = String::new();
+    s.push_str("== Figure 2.1: memory capacity requirement (batch 16, max seq) ==\n");
+    s.push_str("model         params(GB)  kv@16(GB)   total(GB)\n");
+    for m in trend_models() {
+        let p = memory::param_bytes(&m);
+        let kv = memory::kv_cache_bytes(&m, 16, m.max_seq);
+        let _ = writeln!(
+            s,
+            "{:<12} {:>10.1} {:>10.1} {:>11.1}",
+            m.name,
+            p.as_gb(),
+            kv.as_gb(),
+            (p + kv).as_gb()
+        );
+    }
+
+    s.push_str("\n== Figure 2.2: MFU vs batch size (decode GEMM) ==\nbatch  mfu\n");
+    for (b, v) in mfu::fig22_mfu_vs_batch(12288) {
+        let _ = writeln!(s, "{b:>5}  {v:.3}");
+    }
+
+    s.push_str("\n== Figure 2.3: FLOPs per generated token (1K KV) ==\n");
+    for m in trend_models() {
+        let f = flops::decode_flops_per_token(&m, 1024);
+        let _ = writeln!(s, "{:<12} {:>10.1} GFLOP/token", m.name, f.as_gflop());
+    }
+
+    s.push_str("\n== Figure 2.4: model compute / memory-footprint ratio ==\n");
+    for m in trend_models() {
+        let r = flops::compute_per_memory_ratio(&m, 1024);
+        let _ = writeln!(s, "{:<12} {:>8.2} FLOP per byte of weights", m.name, r);
+    }
+
+    s.push_str("\n== Figure 2.6: Byte-per-FLOP, prefill vs decode (vs GB200 HW line) ==\n");
+    s.push_str("model         prefill      decode      decode/prefill\n");
+    for m in trend_models() {
+        let p = flops::prefill_byte_per_flop(&m, 4096);
+        let d = flops::decode_byte_per_flop(&m, 1, 4096);
+        let _ = writeln!(s, "{:<12} {p:>10.2e} {d:>11.2e} {:>10.0}×", m.name, d / p);
+    }
+    let gb200 = crate::hardware::gb200();
+    let _ = writeln!(
+        s,
+        "GB200 hardware byte/FLOP: {:.2e}",
+        gb200.hbm_bw.value() / gb200.fp16_flops.value()
+    );
+
+    s.push_str("\n== Figure 2.8: model FLOPs per communication byte (TP) ==\n");
+    for m in trend_models() {
+        let f = comm::flops_per_comm_byte(&m, 1024);
+        let _ = writeln!(
+            s,
+            "{:<12} hidden {:>6}  {:>8.0} FLOP/byte",
+            m.name, m.hidden, f
+        );
+    }
+    s.push('\n');
+    s
+}
+
+/// Figs 2.5, 2.7, 2.9 — hardware-side trends.
+pub fn fig2_hw_trends() -> String {
+    let mut s = String::new();
+    s.push_str("== Figure 2.5: FLOPS per GB of HBM capacity ==\n");
+    s.push_str("gpu     year  fp16(TF/GB)  advertised(TF/GB)\n");
+    for g in crate::hardware::catalog() {
+        let _ = writeln!(
+            s,
+            "{:<7} {}  {:>10.2} {:>15.2}",
+            g.name,
+            g.year,
+            g.flops_per_gb(false) / 1e12,
+            g.flops_per_gb(true) / 1e12
+        );
+    }
+    let v = crate::hardware::v100();
+    let gb = crate::hardware::gb200();
+    let _ = writeln!(
+        s,
+        "V100→GB200 ratio: fp16 {:.1}×, advertised {:.1}× (paper: ≈34×)",
+        gb.flops_per_gb(false) / v.flops_per_gb(false),
+        gb.flops_per_gb(true) / v.flops_per_gb(true)
+    );
+
+    s.push_str("\n== Figure 2.7: HBM bytes per FP16 FLOP ==\n");
+    for g in crate::hardware::catalog() {
+        let _ = writeln!(s, "{:<7} {:>9.2e} B/FLOP", g.name, g.byte_per_flop());
+    }
+
+    s.push_str("\n== Figure 2.9: FP16 FLOPS per Gbps of interconnect ==\n");
+    for g in crate::hardware::catalog() {
+        let _ = writeln!(s, "{:<7} {:>10.1} GFLOP/s per Gbps", g.name, g.flops_per_gbps() / 1e9);
+    }
+    let a = crate::hardware::a100();
+    let g3 = crate::hardware::gb300();
+    let _ = writeln!(
+        s,
+        "A100→GB300 ratio: {:.2}× (paper: ≈2.5×)\n",
+        g3.flops_per_gbps() / a.flops_per_gbps()
+    );
+    s
+}
+
+/// Table 3.1 — operation latency breakdown.
+pub fn table31() -> String {
+    let mut s = String::from("== Table 3.1: minimal operation latency (2 KB) ==\n");
+    for c in READ_COMPONENTS {
+        let _ = writeln!(s, "read   {:<55} {:>5.0} ns", c.label, c.ns);
+    }
+    for c in WRITE_COMPONENTS {
+        let _ = writeln!(s, "write  {:<55} {:>5.0} ns", c.label, c.ns);
+    }
+    let (r, w) = component_totals();
+    let _ = writeln!(s, "total read {:.0} ns | total write {:.0} ns | notification 40 ns\n", r.as_ns(), w.as_ns());
+    s
+}
+
+/// §3.3.3 — speed-up decomposition + payload sweep.
+pub fn speedup_report() -> String {
+    let cfg = SpeedupConfig::default();
+    let r = speedup(&cfg);
+    let (ring_floor, tab_floor) = latency_floors(&cfg);
+    let mut s = String::from("== §3.3.3: FengHuang vs NVLink AllReduce speed-up (N=8) ==\n");
+    let _ = writeln!(s, "Enabler 1 (data movement): latency-bound {:.0}×, bandwidth-bound {:.2}×", r.enabler1_latency, r.enabler1_bandwidth);
+    let _ = writeln!(
+        s,
+        "Enabler 2 (link): read {:.2}× / write {:.2}× latency, {:.2}× bandwidth",
+        r.enabler2_latency_read, r.enabler2_latency_write, r.enabler2_bandwidth
+    );
+    let _ = writeln!(
+        s,
+        "Overall: latency-bound {:.0}× (paper: 70×), bandwidth-bound {:.2}× (paper: 15.56×)",
+        r.overall_latency_bound, r.overall_bandwidth_bound
+    );
+    let _ = writeln!(
+        s,
+        "latency floors: ring {:.0} ns vs TAB {:.0} ns",
+        ring_floor.as_ns(),
+        tab_floor.as_ns()
+    );
+    s.push_str("payload sweep (simulated AllReduce):\n  size        speedup\n");
+    for kib in [2.0, 16.0, 128.0, 1024.0, 8192.0, 65536.0, 524288.0, 4194304.0] {
+        let sp = allreduce_speedup_at(Bytes::kib(kib), &cfg);
+        let _ = writeln!(s, "  {:>8.0} KiB {sp:>7.1}×", kib);
+    }
+    s.push('\n');
+    s
+}
+
+/// Fig 4.1 + Table 4.3 — workload performance and local-memory needs.
+pub fn fig41_and_table43() -> Result<String> {
+    let mut s = String::from(
+        "== Figure 4.1: TTFT / TPOT / E2E — Baseline8 vs FH4 sweeps ==\n\
+         (Q&A: prompt 4096 gen 1024; reasoning `Qwen3-R`: prompt 512 gen 16384; batch 8)\n",
+    );
+    let mut table43: Vec<(String, f64)> = Vec::new();
+    for m in eval_models() {
+        let base = sim::run_workload(&baseline8(), &m, 8, 4096, 1024)?;
+        let _ = writeln!(
+            s,
+            "{:<8} {:<11} TTFT {:>8.1} ms | TPOT {:>7.2} ms | E2E {:>7.2} s",
+            m.name,
+            "Baseline8",
+            base.ttft.as_ms(),
+            base.tpot.as_ms(),
+            base.e2e.value()
+        );
+        for sysf in [fh4_15xm as fn(Bandwidth) -> _, fh4_20xm as fn(Bandwidth) -> _] {
+            for bw in fig41_bandwidth_sweep() {
+                let r = sim::run_workload(&sysf(bw), &m, 8, 4096, 1024)?;
+                let _ = writeln!(
+                    s,
+                    "{:<8} {:<11} TTFT {:>8.1} ms | TPOT {:>7.2} ms | E2E {:>7.2} s  @ {:.1} TB/s (vs base: TTFT {:+.1}%, TPOT {:+.1}%)",
+                    m.name,
+                    r.system,
+                    r.ttft.as_ms(),
+                    r.tpot.as_ms(),
+                    r.e2e.value(),
+                    bw.as_tbps(),
+                    (r.ttft / base.ttft - 1.0) * 100.0,
+                    (r.tpot / base.tpot - 1.0) * 100.0,
+                );
+                if (bw.as_tbps() - 4.8).abs() < 1e-9 && r.system.contains("1.5x") {
+                    table43.push((m.name.clone(), r.peak_local.as_gb()));
+                }
+            }
+        }
+    }
+    // Qwen3-R reasoning task.
+    let qwen = crate::models::arch::qwen3_235b();
+    let base = sim::run_workload(&baseline8(), &qwen, 8, 512, 16384)?;
+    let _ = writeln!(
+        s,
+        "{:<8} {:<11} TTFT {:>8.1} ms | TPOT {:>7.2} ms | E2E {:>7.2} s",
+        "Qwen3-R", "Baseline8", base.ttft.as_ms(), base.tpot.as_ms(), base.e2e.value()
+    );
+    for bw in fig41_bandwidth_sweep() {
+        let r = sim::run_workload(&fh4_15xm(bw), &qwen, 8, 512, 16384)?;
+        let _ = writeln!(
+            s,
+            "{:<8} {:<11} TTFT {:>8.1} ms | TPOT {:>7.2} ms | E2E {:>7.2} s  @ {:.1} TB/s (vs base E2E {:+.1}%)",
+            "Qwen3-R",
+            r.system,
+            r.ttft.as_ms(),
+            r.tpot.as_ms(),
+            r.e2e.value(),
+            bw.as_tbps(),
+            (r.e2e / base.e2e - 1.0) * 100.0,
+        );
+        if (bw.as_tbps() - 4.8).abs() < 1e-9 {
+            table43.push(("Qwen3-R".into(), r.peak_local.as_gb()));
+        }
+    }
+
+    s.push_str("\n== Table 4.3: FH local-memory capacity requirement (per GPU) ==\n");
+    s.push_str("model     ours(GB)  paper(GB)  vs 144 GB HBM\n");
+    let paper = [("GPT-3", 10.0), ("Grok-1", 18.0), ("Qwen3", 20.0), ("Qwen3-R", 20.0)];
+    for ((name, gb), (_, pgb)) in table43.iter().zip(paper) {
+        let _ = writeln!(
+            s,
+            "{:<9} {:>7.2} {:>9.1} {:>10.1}% reduction",
+            name,
+            gb,
+            pgb,
+            (1.0 - gb / 144.0) * 100.0
+        );
+    }
+    s.push('\n');
+    Ok(s)
+}
+
+/// Chapter 5 — bandwidth-per-capacity roadmap arithmetic.
+pub fn chapter5() -> String {
+    let mut s = String::from("== Chapter 5: bandwidth-to-capacity ratios ==\n");
+    // Classical 2029-30 projection: 500 GB @ 50 TB/s → 100 TB/s per TB.
+    let classical = 50.0 / 0.5;
+    // FengHuang two-tier: 20 GB local @ 10 TB/s → 500 TB/s per TB.
+    let fh = 10.0 / 0.02;
+    let _ = writeln!(s, "classical roadmap: {classical:.0} TB/s per TB");
+    let _ = writeln!(s, "FengHuang local tier: {fh:.0} TB/s per TB ({:.0}× — paper: 5×)", fh / classical);
+    let _ = writeln!(
+        s,
+        "TAB remote tier: up to 4096 TB capacity, 11.5–23 TB/s per-GPU links (4–8× roadmap)\n"
+    );
+    s
+}

@@ -1,0 +1,44 @@
+//! Fig 1.1 data series — AI users worldwide and flagship model sizes,
+//! as cited by the paper ([1, 23] for users; [8, 7, 5, 9, 6] for models).
+
+/// (year, AI tool users in millions, flagship model, parameters in B).
+pub const AI_TREND: [(u32, u32, &str, f64); 6] = [
+    (2019, 60, "GPT-2-XL", 1.5),
+    (2020, 116, "GPT-3", 175.0),
+    (2021, 148, "MT-NLG 530B", 530.0),
+    (2022, 200, "PaLM / GLaM", 1200.0),
+    (2023, 255, "GPT-4 (est.)", 1760.0),
+    (2024, 314, "DeepSeek-V3 / Grok", 671.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn users_grow_threefold_2020_to_2024() {
+        // §1: "116 million people in 2020 to 314 million people in 2024,
+        // an almost threefold increase".
+        let u2020 = AI_TREND.iter().find(|t| t.0 == 2020).unwrap().1;
+        let u2024 = AI_TREND.iter().find(|t| t.0 == 2024).unwrap().1;
+        assert_eq!(u2020, 116);
+        assert_eq!(u2024, 314);
+        let ratio = u2024 as f64 / u2020 as f64;
+        assert!(ratio > 2.5 && ratio < 3.0);
+    }
+
+    #[test]
+    fn gpt3_to_gpt4_is_about_10x() {
+        // §1: 175B (2020) → ~1.8T (2023).
+        let gpt3 = AI_TREND.iter().find(|t| t.0 == 2020).unwrap().3;
+        let gpt4 = AI_TREND.iter().find(|t| t.0 == 2023).unwrap().3;
+        assert!(gpt4 / gpt3 > 9.0);
+    }
+
+    #[test]
+    fn years_monotone() {
+        for w in AI_TREND.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+}

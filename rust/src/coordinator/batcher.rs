@@ -1,0 +1,122 @@
+//! Continuous batcher.
+//!
+//! Groups queued requests into prefill batches (up to `max_batch`, padded
+//! to a common tile length) and maintains the running decode set,
+//! admitting new requests between decode rounds — the standard
+//! continuous-batching discipline of vLLM/SGLang-class servers, which the
+//! paper's software stack plugs into (§3.4).
+
+use super::request::Request;
+use std::collections::VecDeque;
+
+/// Batch formed for one prefill pass.
+#[derive(Debug, Clone)]
+pub struct PrefillBatch {
+    pub requests: Vec<Request>,
+    /// Common padded prompt length (tile multiple).
+    pub padded_len: usize,
+}
+
+/// Continuous batcher state.
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub max_batch: usize,
+    /// Sequence-length tile (attention block size of the L1 kernel).
+    pub tile: usize,
+    /// Cap on admitted prompt length.
+    pub max_prompt: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, tile: usize, max_prompt: usize) -> Self {
+        assert!(max_batch >= 1 && tile >= 1);
+        Batcher { queue: VecDeque::new(), max_batch, tile, max_prompt }
+    }
+
+    /// Enqueue a request. Returns false (rejecting it) if the prompt
+    /// exceeds the admissible length.
+    pub fn submit(&mut self, req: Request) -> bool {
+        if req.prompt_len() > self.max_prompt || req.prompt.is_empty() {
+            return false;
+        }
+        self.queue.push_back(req);
+        true
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next prefill batch: up to `room` requests (bounded by
+    /// `max_batch`), padded to the longest member rounded up to the tile.
+    pub fn next_batch(&mut self, room: usize) -> Option<PrefillBatch> {
+        if self.queue.is_empty() || room == 0 {
+            return None;
+        }
+        let n = room.min(self.max_batch).min(self.queue.len());
+        let requests: Vec<Request> = self.queue.drain(..n).collect();
+        let longest = requests.iter().map(|r| r.prompt_len()).max().unwrap_or(1);
+        let padded_len = longest.div_ceil(self.tile) * self.tile;
+        Some(PrefillBatch { requests, padded_len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Seconds;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, prompt: vec![1; len], max_new_tokens: 4, arrival: Seconds::ZERO }
+    }
+
+    #[test]
+    fn batches_respect_max_batch_and_room() {
+        let mut b = Batcher::new(4, 64, 1024);
+        for i in 0..10 {
+            assert!(b.submit(req(i, 10)));
+        }
+        let batch = b.next_batch(8).unwrap();
+        assert_eq!(batch.requests.len(), 4); // max_batch wins
+        let batch = b.next_batch(2).unwrap();
+        assert_eq!(batch.requests.len(), 2); // room wins
+        assert_eq!(b.queued(), 4);
+    }
+
+    #[test]
+    fn padding_rounds_to_tile() {
+        let mut b = Batcher::new(4, 64, 1024);
+        b.submit(req(0, 10));
+        b.submit(req(1, 70));
+        let batch = b.next_batch(4).unwrap();
+        assert_eq!(batch.padded_len, 128);
+    }
+
+    #[test]
+    fn rejects_oversized_and_empty_prompts() {
+        let mut b = Batcher::new(4, 64, 100);
+        assert!(!b.submit(req(0, 101)));
+        assert!(!b.submit(req(1, 0)));
+        assert!(b.submit(req(2, 100)));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(8, 64, 1024);
+        for i in 0..5 {
+            b.submit(req(i, 8));
+        }
+        let batch = b.next_batch(3).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut b = Batcher::new(4, 64, 1024);
+        assert!(b.next_batch(4).is_none());
+        b.submit(req(0, 8));
+        assert!(b.next_batch(0).is_none());
+    }
+}

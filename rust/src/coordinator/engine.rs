@@ -1,0 +1,167 @@
+//! Execution backends for the scheduler.
+//!
+//! * [`MockBackend`] — fixed-cost steps (scheduler unit tests).
+//! * [`SimBackend`] — paper-scale models on simulated FengHuang/Baseline
+//!   nodes: step costs come from the trace-driven simulator (`crate::sim`)
+//!   on a virtual clock. This is what `fenghuang serve` uses.
+//! * The PJRT tiny-model backend lives in [`super::tp`] (real compute,
+//!   real wall clock, TAB-pool communication) and drives
+//!   `examples/serve_e2e.rs`.
+
+use crate::config::SystemConfig;
+use crate::error::Result;
+use crate::models::arch::ModelArch;
+use crate::sim;
+use crate::trace::Phase;
+use crate::units::Seconds;
+use std::collections::HashMap;
+
+/// One request's view handed to a prefill call.
+#[derive(Debug, Clone)]
+pub struct PrefillItem {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// An execution backend the scheduler can drive.
+pub trait Backend {
+    /// Max simultaneously active sequences.
+    fn max_concurrency(&self) -> usize;
+    /// Run one batched prefill at `padded_len`; return (elapsed, first
+    /// generated token per item).
+    fn prefill(&mut self, items: &[PrefillItem], padded_len: usize) -> Result<(Seconds, Vec<i32>)>;
+    /// Advance every sequence by one token; return (elapsed, next tokens).
+    fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)>;
+}
+
+/// Deterministic pseudo-token (the simulation backends don't model real
+/// vocabularies; serving correctness for real tokens is proven by the
+/// PJRT backend).
+fn pseudo_token(seed: u64) -> i32 {
+    ((seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407) >> 33) % 512)
+        as i32
+}
+
+/// Fixed-cost backend for scheduler tests.
+pub struct MockBackend {
+    conc: usize,
+    prefill_cost: Seconds,
+    decode_cost: Seconds,
+}
+
+impl MockBackend {
+    pub fn new(conc: usize, prefill_cost: Seconds, decode_cost: Seconds) -> Self {
+        MockBackend { conc, prefill_cost, decode_cost }
+    }
+}
+
+impl Backend for MockBackend {
+    fn max_concurrency(&self) -> usize {
+        self.conc
+    }
+
+    fn prefill(&mut self, items: &[PrefillItem], _padded: usize) -> Result<(Seconds, Vec<i32>)> {
+        Ok((self.prefill_cost, items.iter().map(|i| pseudo_token(i.id)).collect()))
+    }
+
+    fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)> {
+        Ok((self.decode_cost, seqs.iter().map(|s| pseudo_token(s.len() as u64)).collect()))
+    }
+}
+
+/// Simulation backend: paper-scale model on a configured node; step costs
+/// from the discrete-event simulator, memoised per (batch, length) bucket.
+pub struct SimBackend {
+    pub sys: SystemConfig,
+    pub model: ModelArch,
+    max_conc: usize,
+    prefill_cache: HashMap<(u64, u64), Seconds>,
+    decode_cache: HashMap<(u64, u64), Seconds>,
+}
+
+impl SimBackend {
+    pub fn new(sys: SystemConfig, model: ModelArch, max_conc: usize) -> Self {
+        SimBackend { sys, model, max_conc, prefill_cache: HashMap::new(), decode_cache: HashMap::new() }
+    }
+
+    fn bucket(len: u64) -> u64 {
+        len.next_power_of_two().max(64)
+    }
+}
+
+impl Backend for SimBackend {
+    fn max_concurrency(&self) -> usize {
+        self.max_conc
+    }
+
+    fn prefill(&mut self, items: &[PrefillItem], padded_len: usize) -> Result<(Seconds, Vec<i32>)> {
+        let batch = items.len() as u64;
+        let key = (batch, Self::bucket(padded_len as u64));
+        let t = match self.prefill_cache.get(&key) {
+            Some(t) => *t,
+            None => {
+                let r = sim::simulate(
+                    &self.sys,
+                    &self.model,
+                    batch,
+                    Phase::Prefill { prompt_len: key.1 },
+                )?;
+                self.prefill_cache.insert(key, r.total);
+                r.total
+            }
+        };
+        Ok((t, items.iter().map(|i| pseudo_token(i.id)).collect()))
+    }
+
+    fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)> {
+        let batch = seqs.len() as u64;
+        let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(1) as u64;
+        let key = (batch, Self::bucket(max_len));
+        let t = match self.decode_cache.get(&key) {
+            Some(t) => *t,
+            None => {
+                let r =
+                    sim::simulate(&self.sys, &self.model, batch, Phase::Decode { kv_len: key.1 })?;
+                self.decode_cache.insert(key, r.total);
+                r.total
+            }
+        };
+        Ok((t, seqs.iter().enumerate().map(|(i, s)| pseudo_token(s.len() as u64 + i as u64)).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::fh4_15xm;
+    use crate::models::arch::gpt3_175b;
+    use crate::units::Bandwidth;
+
+    #[test]
+    fn sim_backend_costs_scale_with_length() {
+        let mut b = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), gpt3_175b(), 8);
+        let items: Vec<PrefillItem> =
+            (0..4).map(|i| PrefillItem { id: i, tokens: vec![1; 512] }).collect();
+        let (short, _) = b.prefill(&items, 512).unwrap();
+        let (long, _) = b.prefill(&items, 4096).unwrap();
+        assert!(long > short);
+    }
+
+    #[test]
+    fn sim_backend_memoises() {
+        let mut b = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), gpt3_175b(), 8);
+        let seqs = vec![vec![1i32; 1000]; 4];
+        let (a, _) = b.decode_step(&seqs).unwrap();
+        let (c, _) = b.decode_step(&seqs).unwrap();
+        assert_eq!(a, c);
+        assert_eq!(b.decode_cache.len(), 1);
+    }
+
+    #[test]
+    fn pseudo_tokens_in_vocab_range() {
+        for i in 0..1000 {
+            let t = pseudo_token(i);
+            assert!((0..512).contains(&t));
+        }
+    }
+}

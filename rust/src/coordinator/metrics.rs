@@ -1,0 +1,134 @@
+//! Serving metrics: latency distributions and throughput counters.
+
+use crate::units::Seconds;
+
+/// Online latency statistics with exact percentiles (stores samples; the
+/// serving demos run ≤ thousands of requests).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStat {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStat {
+    pub fn record(&mut self, v: Seconds) {
+        self.samples_ms.push(v.as_ms());
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Exact percentile (nearest-rank).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * s.len() as f64).ceil().max(1.0) as usize - 1;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub ttft: LatencyStat,
+    pub tpot: LatencyStat,
+    pub e2e: LatencyStat,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_generated: u64,
+    pub clock: Seconds,
+}
+
+impl Metrics {
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        if self.clock.value() <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.clock.value()
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        if self.clock.value() <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.clock.value()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed {} | rejected {} | tokens {} | wall {:.3}s\n\
+             TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  max {:.2}\n\
+             TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}\n\
+             E2E   mean {:.2} ms  p95 {:.2}\n\
+             throughput {:.1} tok/s | {:.2} req/s",
+            self.completed,
+            self.rejected,
+            self.tokens_generated,
+            self.clock.value(),
+            self.ttft.mean_ms(),
+            self.ttft.percentile_ms(50.0),
+            self.ttft.percentile_ms(95.0),
+            self.ttft.max_ms(),
+            self.tpot.mean_ms(),
+            self.tpot.percentile_ms(50.0),
+            self.tpot.percentile_ms(95.0),
+            self.e2e.mean_ms(),
+            self.e2e.percentile_ms(95.0),
+            self.throughput_tokens_per_s(),
+            self.requests_per_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = LatencyStat::default();
+        for ms in [10.0, 20.0, 30.0, 40.0, 50.0] {
+            s.record(Seconds::ms(ms));
+        }
+        assert_eq!(s.percentile_ms(50.0), 30.0);
+        assert_eq!(s.percentile_ms(100.0), 50.0);
+        assert_eq!(s.percentile_ms(1.0), 10.0);
+        assert_eq!(s.max_ms(), 50.0);
+        assert!((s.mean_ms() - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStat::default();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.percentile_ms(95.0), 0.0);
+        let m = Metrics::default();
+        assert_eq!(m.throughput_tokens_per_s(), 0.0);
+    }
+
+    #[test]
+    fn throughput_counts_over_clock() {
+        let m = Metrics {
+            tokens_generated: 500,
+            completed: 10,
+            clock: Seconds::new(2.0),
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_tokens_per_s(), 250.0);
+        assert_eq!(m.requests_per_s(), 5.0);
+    }
+}

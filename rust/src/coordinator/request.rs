@@ -1,0 +1,73 @@
+//! Request and response types for the serving layer.
+
+use crate::units::Seconds;
+
+/// A generation request entering the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (tiny-model vocab) or just a length for the
+    /// simulation backend.
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival time on the serving clock.
+    pub arrival: Seconds,
+}
+
+impl Request {
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.len()
+    }
+}
+
+/// Lifecycle state tracked by the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding { generated: usize },
+    Finished,
+}
+
+/// A completed request with its latency breakdown.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time to first token (arrival → first prefill completion).
+    pub ttft: Seconds,
+    /// Total latency (arrival → last token).
+    pub total: Seconds,
+    /// Tokens generated.
+    pub generated: usize,
+}
+
+impl Response {
+    /// Mean time per output token after the first.
+    pub fn tpot(&self) -> Seconds {
+        if self.generated <= 1 {
+            Seconds::ZERO
+        } else {
+            (self.total - self.ttft) / (self.generated - 1) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_divides_decode_time() {
+        let r = Response {
+            id: 1,
+            tokens: vec![1, 2, 3],
+            ttft: Seconds::ms(100.0),
+            total: Seconds::ms(300.0),
+            generated: 5,
+        };
+        assert!((r.tpot().as_ms() - 50.0).abs() < 1e-9);
+        let single = Response { generated: 1, ..r };
+        assert_eq!(single.tpot(), Seconds::ZERO);
+    }
+}

@@ -1,0 +1,101 @@
+//! Request router across engine replicas (vllm-router-style).
+//!
+//! A FengHuang rack hosts several independent 4-GPU nodes; the router
+//! spreads incoming requests across them. Policies: round-robin and
+//! least-loaded (by outstanding token estimate).
+
+use super::request::Request;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+/// Router state over `n` replicas.
+pub struct Router {
+    policy: Policy,
+    next: usize,
+    /// Outstanding work estimate per replica (prompt + max_new tokens).
+    load: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(replicas: usize, policy: Policy) -> Self {
+        assert!(replicas > 0);
+        Router { policy, next: 0, load: vec![0; replicas] }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Choose a replica for `req` and account its load.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let idx = match self.policy {
+            Policy::RoundRobin => {
+                let i = self.next;
+                self.next = (self.next + 1) % self.load.len();
+                i
+            }
+            Policy::LeastLoaded => self
+                .load
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.load[idx] += (req.prompt_len() + req.max_new_tokens) as u64;
+        idx
+    }
+
+    /// Report completion of a request previously routed to `replica`.
+    pub fn complete(&mut self, replica: usize, req: &Request) {
+        let w = (req.prompt_len() + req.max_new_tokens) as u64;
+        self.load[replica] = self.load[replica].saturating_sub(w);
+    }
+
+    pub fn load(&self, replica: usize) -> u64 {
+        self.load[replica]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Seconds;
+
+    fn req(id: u64, len: usize) -> Request {
+        Request { id, prompt: vec![1; len], max_new_tokens: 8, arrival: Seconds::ZERO }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, Policy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 10))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_unequal_requests() {
+        let mut r = Router::new(2, Policy::LeastLoaded);
+        let a = r.route(&req(0, 1000)); // heavy → replica 0
+        let b = r.route(&req(1, 10)); // light → replica 1
+        let c = r.route(&req(2, 10)); // replica 1 still lighter
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        assert_eq!(c, 1);
+    }
+
+    #[test]
+    fn completion_releases_load() {
+        let mut r = Router::new(2, Policy::LeastLoaded);
+        let q = req(0, 100);
+        let idx = r.route(&q);
+        assert!(r.load(idx) > 0);
+        r.complete(idx, &q);
+        assert_eq!(r.load(idx), 0);
+    }
+}

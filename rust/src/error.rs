@@ -1,0 +1,44 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the FengHuang library.
+#[derive(Debug, Error)]
+pub enum FhError {
+    /// A configuration file or preset was invalid.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// A shared-memory operation addressed memory outside an allocation.
+    #[error("shared memory out of bounds: offset {offset} + len {len} > region {region}")]
+    OutOfBounds { offset: usize, len: usize, region: usize },
+
+    /// The shared pool has no room for the requested allocation.
+    #[error("shared memory pool exhausted: requested {requested} B, free {free} B")]
+    PoolExhausted { requested: usize, free: usize },
+
+    /// A collective was invoked with inconsistent participants.
+    #[error("collective error: {0}")]
+    Collective(String),
+
+    /// Local memory capacity exceeded and nothing is evictable.
+    #[error("local memory thrash: op {op} needs {need_gb:.2} GB but capacity is {cap_gb:.2} GB")]
+    LocalMemoryThrash { op: String, need_gb: f64, cap_gb: f64 },
+
+    /// A simulation invariant was violated (bug, not user error).
+    #[error("simulation invariant violated: {0}")]
+    Invariant(String),
+
+    /// The PJRT runtime failed to load / compile / execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Serving-layer error (queue closed, request rejected, …).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, FhError>;

@@ -1,0 +1,429 @@
+//! The five communication operations on FengHuang shared memory (§3.3.2),
+//! implemented *functionally* against [`TabPool`] — real data moves through
+//! the striped pool via write / write-accumulate / notification — plus the
+//! analytic cost model used by the simulator.
+//!
+//! Protocols follow the paper exactly:
+//!
+//! * **AllReduce / ReduceScatter** — every xPU `write_accumulate`s its
+//!   contribution into a shared buffer in parallel; the TAB raises a
+//!   completion signal once all have landed; consumers then read either the
+//!   whole aggregated tensor (AllReduce) or their own shard
+//!   (ReduceScatter).
+//! * **AllGather / AllToAll** — every xPU writes its chunk(s); completion
+//!   notification; consumers read the whole buffer (AllGather) or their
+//!   own column (AllToAll).
+//! * **P2P Send/Recv** — sender writes to a designated location; the TAB
+//!   notifies the receiver; receiver reads.
+
+use super::latency::FabricLatencies;
+use super::tab::{Region, TabPool};
+use crate::error::{FhError, Result};
+use crate::units::{Bandwidth, Bytes, Seconds};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Which collective (for cost queries and trace ops).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    ReduceScatter,
+    AllGather,
+    AllToAll,
+    P2p,
+}
+
+impl std::fmt::Display for Collective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Collective::AllReduce => "allreduce",
+            Collective::ReduceScatter => "reducescatter",
+            Collective::AllGather => "allgather",
+            Collective::AllToAll => "alltoall",
+            Collective::P2p => "p2p",
+        };
+        f.write_str(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional group over a TabPool.
+// ---------------------------------------------------------------------------
+
+struct Round {
+    region: Region,
+    /// Ranks that have finished reading (so the last one can free).
+    readers_done: usize,
+}
+
+struct GroupShared {
+    pool: Arc<TabPool>,
+    world: usize,
+    rounds: Mutex<HashMap<(Collective, u64), Round>>,
+    cv: Condvar,
+}
+
+impl GroupShared {
+    /// First arriver allocates (and zeroes, for accumulating ops); everyone
+    /// gets the same region for `(op, round)`.
+    fn round_region(&self, op: Collective, round: u64, elems: usize, zero: bool) -> Result<Region> {
+        let mut rounds = self.rounds.lock().unwrap();
+        if let Some(r) = rounds.get(&(op, round)) {
+            return Ok(r.region);
+        }
+        let region = self.pool.alloc(elems)?;
+        if zero {
+            self.pool.zero(region)?;
+        }
+        rounds.insert((op, round), Round { region, readers_done: 0 });
+        Ok(region)
+    }
+
+    /// Mark this rank done with the round; last one frees the region and
+    /// clears the notification tag.
+    fn finish_round(&self, op: Collective, round: u64, tag: &str) {
+        let mut rounds = self.rounds.lock().unwrap();
+        let entry = rounds.get_mut(&(op, round)).expect("finishing unknown round");
+        entry.readers_done += 1;
+        if entry.readers_done == self.world {
+            let r = rounds.remove(&(op, round)).unwrap();
+            self.pool.free(r.region);
+            self.pool.reset_notifications(tag);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// A per-rank handle to a collective group over the TAB.
+pub struct TabCommunicator {
+    shared: Arc<GroupShared>,
+    rank: usize,
+    /// Per-op local round counters (each rank must call collectives in the
+    /// same order — standard communicator semantics).
+    round: HashMap<Collective, u64>,
+}
+
+/// Create `world` communicator handles over `pool`.
+pub fn group(pool: Arc<TabPool>, world: usize) -> Vec<TabCommunicator> {
+    assert!(world > 0);
+    let shared = Arc::new(GroupShared {
+        pool,
+        world,
+        rounds: Mutex::new(HashMap::new()),
+        cv: Condvar::new(),
+    });
+    (0..world)
+        .map(|rank| TabCommunicator { shared: Arc::clone(&shared), rank, round: HashMap::new() })
+        .collect()
+}
+
+impl TabCommunicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    fn next_round(&mut self, op: Collective) -> u64 {
+        let c = self.round.entry(op).or_insert(0);
+        let r = *c;
+        *c += 1;
+        r
+    }
+
+    /// AllReduce: sum of every rank's `data`, returned to all ranks.
+    pub fn all_reduce(&mut self, data: &[f32]) -> Result<Vec<f32>> {
+        let op = Collective::AllReduce;
+        let round = self.next_round(op);
+        let tag = format!("ar:{round}");
+        let region = self.shared.round_region(op, round, data.len(), true)?;
+        // 1–2. write-accumulate own chunk(s) in parallel with other ranks.
+        self.shared.pool.write_accumulate(region, 0, data)?;
+        // 3. completion signal from the TAB; wait for all participants.
+        self.shared.pool.notify(&tag, 1);
+        self.shared.pool.wait_notifications(&tag, self.shared.world as u64);
+        let out = self.shared.pool.read(region, 0, data.len())?;
+        self.shared.finish_round(op, round, &tag);
+        Ok(out)
+    }
+
+    /// ReduceScatter: sum of every rank's `data`; rank i gets shard i.
+    /// `data.len()` must divide evenly by world size.
+    pub fn reduce_scatter(&mut self, data: &[f32]) -> Result<Vec<f32>> {
+        let w = self.shared.world;
+        if data.len() % w != 0 {
+            return Err(FhError::Collective(format!(
+                "reduce_scatter length {} not divisible by world {w}",
+                data.len()
+            )));
+        }
+        let op = Collective::ReduceScatter;
+        let round = self.next_round(op);
+        let tag = format!("rs:{round}");
+        let region = self.shared.round_region(op, round, data.len(), true)?;
+        self.shared.pool.write_accumulate(region, 0, data)?;
+        self.shared.pool.notify(&tag, 1);
+        self.shared.pool.wait_notifications(&tag, w as u64);
+        let shard = data.len() / w;
+        let out = self.shared.pool.read(region, self.rank * shard, shard)?;
+        self.shared.finish_round(op, round, &tag);
+        Ok(out)
+    }
+
+    /// AllGather: concatenation of every rank's `data`, to all ranks.
+    pub fn all_gather(&mut self, data: &[f32]) -> Result<Vec<f32>> {
+        let w = self.shared.world;
+        let op = Collective::AllGather;
+        let round = self.next_round(op);
+        let tag = format!("ag:{round}");
+        let region = self.shared.round_region(op, round, data.len() * w, false)?;
+        self.shared.pool.write(region, self.rank * data.len(), data)?;
+        self.shared.pool.notify(&tag, 1);
+        self.shared.pool.wait_notifications(&tag, w as u64);
+        let out = self.shared.pool.read(region, 0, data.len() * w)?;
+        self.shared.finish_round(op, round, &tag);
+        Ok(out)
+    }
+
+    /// AllToAll: `data` is `world` equal chunks; chunk j goes to rank j.
+    /// Returns the chunks addressed to this rank, ordered by source.
+    pub fn all_to_all(&mut self, data: &[f32]) -> Result<Vec<f32>> {
+        let w = self.shared.world;
+        if data.len() % w != 0 {
+            return Err(FhError::Collective(format!(
+                "all_to_all length {} not divisible by world {w}",
+                data.len()
+            )));
+        }
+        let chunk = data.len() / w;
+        let op = Collective::AllToAll;
+        let round = self.next_round(op);
+        let tag = format!("a2a:{round}");
+        // Layout: [dst][src] chunks.
+        let region = self.shared.round_region(op, round, chunk * w * w, false)?;
+        for dst in 0..w {
+            let slot = (dst * w + self.rank) * chunk;
+            self.shared.pool.write(region, slot, &data[dst * chunk..(dst + 1) * chunk])?;
+        }
+        self.shared.pool.notify(&tag, 1);
+        self.shared.pool.wait_notifications(&tag, w as u64);
+        let out = self.shared.pool.read(region, self.rank * w * chunk, w * chunk)?;
+        self.shared.finish_round(op, round, &tag);
+        Ok(out)
+    }
+
+    /// P2P send: write to a designated location, then the TAB notifies the
+    /// receiver (§3.3.2). Pairs with [`TabCommunicator::recv`].
+    pub fn send(&mut self, dst: usize, seq: u64, data: &[f32]) -> Result<()> {
+        let op = Collective::P2p;
+        let tag = format!("p2p:{}:{}:{}", self.rank, dst, seq);
+        // Key P2P rounds by a hash of (src, dst, seq) so different pairs
+        // don't collide.
+        let key = (self.rank as u64) << 40 | (dst as u64) << 20 | seq;
+        let region = self.shared.round_region(op, key, data.len(), false)?;
+        self.shared.pool.write(region, 0, data)?;
+        self.shared.pool.notify(&tag, 1);
+        // Sender is immediately done; receiver will finish the round.
+        self.shared.finish_round(op, key, &tag);
+        Ok(())
+    }
+
+    /// P2P recv: wait for the completion notification, then read.
+    pub fn recv(&mut self, src: usize, seq: u64, len: usize) -> Result<Vec<f32>> {
+        let op = Collective::P2p;
+        let tag = format!("p2p:{}:{}:{}", src, self.rank, seq);
+        let key = (src as u64) << 40 | (self.rank as u64) << 20 | seq;
+        let region = self.shared.round_region(op, key, len, false)?;
+        self.shared.pool.wait_notifications(&tag, 1);
+        let out = self.shared.pool.read(region, 0, len)?;
+        self.shared.finish_round(op, key, &tag);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cost model (used by the DES and the §3.3.3 analysis).
+// ---------------------------------------------------------------------------
+
+/// Analytic completion time of a collective on the TAB, per §3.3.2/§3.3.3.
+///
+/// `payload` is the per-GPU tensor size (the "T" of §3.3.3); `bw` is the
+/// per-GPU crossbar bandwidth **per direction** (the crossbar is
+/// bidirectional). All GPUs operate in parallel, and the paper's
+/// accounting ("Data Transfer (FengHuang) = T") treats the write stream
+/// and the read-back stream as pipelined over the two link directions —
+/// the bandwidth term is `max(write_bytes, read_bytes) / bw`, while the
+/// fixed latencies (write-accumulate + notification + read, Table 3.1)
+/// are paid once.
+pub fn tab_collective_time(
+    op: Collective,
+    payload: Bytes,
+    world: usize,
+    bw: Bandwidth,
+    lat: &FabricLatencies,
+) -> Seconds {
+    let fixed = lat.tab_write_accumulate + lat.notification_latency() + lat.tab_read;
+    fixed + tab_wire_bytes(op, payload, world).over(bw)
+}
+
+/// Per-GPU bytes that bound the GPU↔TAB link time for a collective —
+/// `max(write stream, read stream)` over the full-duplex link (Enabler 1
+/// of §3.3.3: in-memory reduction means one transfer of T, not
+/// `2(N−1)/N` ring steps).
+pub fn tab_wire_bytes(op: Collective, payload: Bytes, world: usize) -> Bytes {
+    let _ = world;
+    match op {
+        // write T (accumulate), read T → max = T.
+        Collective::AllReduce => payload,
+        // write T, read T/N → max = T.
+        Collective::ReduceScatter => payload,
+        // write T/N, read T → max = T.
+        Collective::AllGather => payload,
+        // write own row T, read own column T → max = T.
+        Collective::AllToAll => payload,
+        Collective::P2p => payload,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_group<F, R>(world: usize, f: F) -> Vec<R>
+    where
+        F: Fn(&mut TabCommunicator) -> R + Send + Sync + Copy + 'static,
+        R: Send + 'static,
+    {
+        let pool = Arc::new(TabPool::new(1 << 20, 8, 128));
+        let comms = group(pool, world);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| thread::spawn(move || f(&mut c)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let outs = run_group(4, |c| {
+            let data: Vec<f32> = (0..256).map(|i| (c.rank() + 1) as f32 * i as f32).collect();
+            c.all_reduce(&data).unwrap()
+        });
+        // Sum over ranks of (r+1)*i = 10*i.
+        for out in outs {
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, 10.0 * i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_gives_each_rank_its_shard() {
+        let outs = run_group(4, |c| {
+            let data = vec![1.0f32; 64];
+            (c.rank(), c.reduce_scatter(&data).unwrap())
+        });
+        for (rank, out) in outs {
+            assert_eq!(out.len(), 16, "rank {rank} shard size");
+            assert!(out.iter().all(|&v| v == 4.0));
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let outs = run_group(3, |c| {
+            let data = vec![c.rank() as f32; 8];
+            c.all_gather(&data).unwrap()
+        });
+        for out in outs {
+            assert_eq!(out.len(), 24);
+            for r in 0..3 {
+                assert!(out[r * 8..(r + 1) * 8].iter().all(|&v| v == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes_chunks() {
+        let outs = run_group(4, |c| {
+            // Rank r sends chunk value 10*r + dst.
+            let mut data = Vec::new();
+            for dst in 0..4 {
+                data.extend(vec![(10 * c.rank() + dst) as f32; 4]);
+            }
+            (c.rank(), c.all_to_all(&data).unwrap())
+        });
+        for (rank, out) in outs {
+            assert_eq!(out.len(), 16);
+            for src in 0..4 {
+                let expected = (10 * src + rank) as f32;
+                assert!(
+                    out[src * 4..(src + 1) * 4].iter().all(|&v| v == expected),
+                    "rank {rank} from src {src}: {out:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_send_recv() {
+        let pool = Arc::new(TabPool::new(1 << 18, 4, 64));
+        let mut comms = group(pool, 2);
+        let mut receiver = comms.pop().unwrap();
+        let mut sender = comms.pop().unwrap();
+        let t = thread::spawn(move || receiver.recv(0, 7, 100).unwrap());
+        sender.send(1, 7, &vec![3.25f32; 100]).unwrap();
+        assert_eq!(t.join().unwrap(), vec![3.25f32; 100]);
+    }
+
+    #[test]
+    fn repeated_rounds_reuse_pool() {
+        // Regions must be freed between rounds — run many rounds on a pool
+        // that only fits a few buffers at once.
+        let pool = Arc::new(TabPool::new(4096, 2, 64));
+        let comms = group(pool.clone(), 2);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    for round in 0..50 {
+                        let data = vec![round as f32; 1024];
+                        let out = c.all_reduce(&data).unwrap();
+                        assert!(out.iter().all(|&v| v == 2.0 * round as f32));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.free_elems(), pool.capacity());
+    }
+
+    #[test]
+    fn cost_model_allreduce_matches_hand_calc() {
+        // Fixed 90+40+220 ns plus one full-duplex-pipelined transfer of T.
+        let lat = FabricLatencies::default();
+        let t = tab_collective_time(
+            Collective::AllReduce,
+            Bytes::mib(1.0),
+            8,
+            Bandwidth::tbps(4.0),
+            &lat,
+        );
+        let xfer = 1024.0 * 1024.0 / 4e12 * 1e9; // ns, one direction
+        let expected = 90.0 + 40.0 + 220.0 + xfer;
+        assert!((t.as_ns() - expected).abs() < 1e-6, "t={} exp={}", t.as_ns(), expected);
+    }
+
+    #[test]
+    fn wire_bytes_single_transfer_property() {
+        // Enabler 1: per-GPU wire traffic is O(T), independent of N.
+        let b8 = tab_wire_bytes(Collective::AllReduce, Bytes::mib(64.0), 8);
+        let b64 = tab_wire_bytes(Collective::AllReduce, Bytes::mib(64.0), 64);
+        assert_eq!(b8.value(), b64.value());
+    }
+}

@@ -1,0 +1,132 @@
+//! Table 3.1 latency constants and Eqs 3.1–3.4.
+//!
+//! The paper gives a fixed latency breakdown for each TAB operation
+//! (measured at 2 KB payloads) plus a `data_size / bandwidth` serialization
+//! term. NVLink-side constants come from Table 4.2 ("measured in real
+//! systems": ~1000 ns read / ~500 ns write).
+
+use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// One row of Table 3.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyComponent {
+    pub label: &'static str,
+    pub ns: f64,
+}
+
+/// The read path of Table 3.1 (six components, 220 ns total).
+pub const READ_COMPONENTS: [LatencyComponent; 6] = [
+    LatencyComponent { label: "Read command from GPU to FengHuang", ns: 40.0 },
+    LatencyComponent { label: "Read command processing in FengHuang", ns: 10.0 },
+    LatencyComponent { label: "Read command from FengHuang to remote HBM", ns: 40.0 },
+    LatencyComponent { label: "Remote HBM read time", ns: 50.0 },
+    LatencyComponent { label: "Data from remote HBM to FengHuang", ns: 40.0 },
+    LatencyComponent { label: "Data from FengHuang to GPU", ns: 40.0 },
+];
+
+/// The write path of Table 3.1 (post-write scheme, 90 ns total).
+pub const WRITE_COMPONENTS: [LatencyComponent; 3] = [
+    LatencyComponent { label: "Write command and data from GPU to FengHuang", ns: 40.0 },
+    LatencyComponent { label: "Write command processing in FengHuang", ns: 10.0 },
+    LatencyComponent { label: "Write completion notification from FengHuang to GPU", ns: 40.0 },
+];
+
+/// Fixed latencies of the TAB fabric (Table 3.1) and the NVLink baseline
+/// (Table 4.2 footnote).
+#[derive(Debug, Clone, Copy)]
+pub struct FabricLatencies {
+    pub tab_read: Seconds,
+    pub tab_write: Seconds,
+    pub tab_write_accumulate: Seconds,
+    pub tab_notification: Seconds,
+    pub nvlink_read: Seconds,
+    pub nvlink_write: Seconds,
+}
+
+impl Default for FabricLatencies {
+    fn default() -> Self {
+        FabricLatencies {
+            tab_read: Seconds::ns(220.0),
+            tab_write: Seconds::ns(90.0),
+            tab_write_accumulate: Seconds::ns(90.0),
+            tab_notification: Seconds::ns(40.0),
+            nvlink_read: Seconds::ns(1000.0),
+            nvlink_write: Seconds::ns(500.0),
+        }
+    }
+}
+
+impl FabricLatencies {
+    /// Eq 3.1: `220 ns + data_size / bandwidth`.
+    pub fn read_latency(&self, data: Bytes, bw: Bandwidth) -> Seconds {
+        self.tab_read + data.over(bw)
+    }
+
+    /// Eq 3.2: `90 ns + data_size / bandwidth`.
+    pub fn write_latency(&self, data: Bytes, bw: Bandwidth) -> Seconds {
+        self.tab_write + data.over(bw)
+    }
+
+    /// Eq 3.3: `90 ns + data_size / bandwidth`.
+    pub fn write_accumulate_latency(&self, data: Bytes, bw: Bandwidth) -> Seconds {
+        self.tab_write_accumulate + data.over(bw)
+    }
+
+    /// Eq 3.4: fixed 40 ns.
+    pub fn notification_latency(&self) -> Seconds {
+        self.tab_notification
+    }
+}
+
+/// Verify that the component tables sum to the headline totals.
+pub fn component_totals() -> (Seconds, Seconds) {
+    let read: f64 = READ_COMPONENTS.iter().map(|c| c.ns).sum();
+    let write: f64 = WRITE_COMPONENTS.iter().map(|c| c.ns).sum();
+    (Seconds::ns(read), Seconds::ns(write))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table31_totals() {
+        let (read, write) = component_totals();
+        assert_eq!(read, Seconds::ns(220.0));
+        assert_eq!(write, Seconds::ns(90.0));
+    }
+
+    #[test]
+    fn eq31_read_latency_2kb_at_4tbps() {
+        let l = FabricLatencies::default();
+        let t = l.read_latency(Bytes::kib(2.0), Bandwidth::tbps(4.0));
+        // 220 ns + 2048 B / 4 TB/s = 220 + 0.512 ns
+        assert!((t.as_ns() - 220.512).abs() < 1e-9, "t={}", t.as_ns());
+    }
+
+    #[test]
+    fn eq32_33_write_paths_match() {
+        let l = FabricLatencies::default();
+        let bw = Bandwidth::tbps(4.0);
+        assert_eq!(
+            l.write_latency(Bytes::mib(1.0), bw),
+            l.write_accumulate_latency(Bytes::mib(1.0), bw)
+        );
+    }
+
+    #[test]
+    fn eq34_notification_fixed() {
+        let l = FabricLatencies::default();
+        assert_eq!(l.notification_latency(), Seconds::ns(40.0));
+    }
+
+    #[test]
+    fn enabler2_latency_ratios() {
+        // §3.3.3 Enabler 2: 1000/220 and 500/90 are both ≈ 5×.
+        let l = FabricLatencies::default();
+        let read_ratio = l.nvlink_read / l.tab_read;
+        let write_ratio = l.nvlink_write / l.tab_write;
+        assert!((4.5..5.6).contains(&read_ratio));
+        assert!((5.0..6.0).contains(&write_ratio));
+    }
+}

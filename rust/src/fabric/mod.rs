@@ -1,0 +1,21 @@
+//! Interconnect substrate: the FengHuang TAB shared-memory fabric and the
+//! shared-nothing NVLink baseline.
+//!
+//! Two faces:
+//! * **Functional** — [`tab::TabPool`] + [`collectives::TabCommunicator`]
+//!   move real `f32` data; [`nvlink::RingCommunicator`] is the
+//!   message-passing ring baseline. Used by the serving example and the
+//!   numerics cross-checks.
+//! * **Analytic** — [`latency`] (Table 3.1 / Eqs 3.1–3.4),
+//!   [`collectives::tab_collective_time`], [`nvlink::ring_collective_time`]
+//!   and [`analysis`] (§3.3.3) feed the discrete-event simulator.
+
+pub mod analysis;
+pub mod collectives;
+pub mod latency;
+pub mod nvlink;
+pub mod tab;
+
+pub use collectives::{group, Collective, TabCommunicator};
+pub use latency::FabricLatencies;
+pub use tab::{Region, TabPool};

@@ -1,0 +1,276 @@
+//! Shared-nothing NVLink baseline: ring-algorithm collectives.
+//!
+//! The paper's Baseline8 exchanges data over NVLink 4.0 (450 GB/s per
+//! direction per GPU) using ring collectives (§3.3.3 footnote: "the NVLink
+//! baseline uses ring-allreduce algorithm"). This module provides
+//!
+//! * the analytic **cost model** — `2(N−1)` steps of `T/N` for AllReduce,
+//!   with the measured fixed latencies of Table 4.2 (~1000 ns read /
+//!   ~500 ns write) per step — and
+//! * a **functional** message-passing ring over std channels, used to
+//!   cross-check that TAB collectives and ring collectives compute the
+//!   same numbers.
+
+use super::collectives::Collective;
+use super::latency::FabricLatencies;
+use crate::units::{Bandwidth, Bytes, Seconds};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+/// Analytic completion time of a ring collective over NVLink.
+///
+/// `payload` is the logical tensor size T per GPU; `bw` is the
+/// per-direction per-GPU link bandwidth (450 GB/s for NVLink 4.0).
+pub fn ring_collective_time(
+    op: Collective,
+    payload: Bytes,
+    world: usize,
+    bw: Bandwidth,
+    lat: &FabricLatencies,
+) -> Seconds {
+    let n = world as f64;
+    let step_lat = lat.nvlink_write; // each ring step is a neighbour send
+    match op {
+        Collective::AllReduce => {
+            // 2(N−1) steps, each moving T/N.
+            let steps = 2.0 * (n - 1.0);
+            (payload / n).over(bw) * steps + step_lat * steps
+        }
+        Collective::ReduceScatter | Collective::AllGather => {
+            let steps = n - 1.0;
+            (payload / n).over(bw) * steps + step_lat * steps
+        }
+        Collective::AllToAll => {
+            // Each GPU serialises (N−1) distinct chunks of T/N onto its link.
+            let steps = n - 1.0;
+            (payload / n).over(bw) * steps + step_lat * steps
+        }
+        Collective::P2p => payload.over(bw) + lat.nvlink_read,
+    }
+}
+
+/// Per-GPU bytes crossing NVLink for a collective (Enabler 1 numerator:
+/// `2(N−1)·T/N` for AllReduce).
+pub fn ring_wire_bytes(op: Collective, payload: Bytes, world: usize) -> Bytes {
+    let n = world as f64;
+    match op {
+        Collective::AllReduce => payload * (2.0 * (n - 1.0) / n),
+        Collective::ReduceScatter | Collective::AllGather | Collective::AllToAll => {
+            payload * ((n - 1.0) / n)
+        }
+        Collective::P2p => payload,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional ring (baseline comparator for numerics).
+// ---------------------------------------------------------------------------
+
+/// A per-rank handle for a functional ring group.
+pub struct RingCommunicator {
+    rank: usize,
+    world: usize,
+    to_next: Sender<Vec<f32>>,
+    from_prev: Receiver<Vec<f32>>,
+}
+
+/// Build a ring of `world` communicators connected by channels.
+pub fn ring_group(world: usize) -> Vec<RingCommunicator> {
+    assert!(world > 0);
+    let mut senders = Vec::with_capacity(world);
+    let mut receivers = Vec::with_capacity(world);
+    for _ in 0..world {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // Rank r sends to rank (r+1) % world; receives from (r−1+world) % world.
+    // receivers[i] receives what was sent on senders[i]; give rank r the
+    // receiver paired with its predecessor's sender.
+    let mut out = Vec::with_capacity(world);
+    let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
+        receivers.into_iter().map(Some).collect();
+    for rank in 0..world {
+        let to_next = senders[(rank + 1) % world].clone();
+        let from_prev = receivers[rank].take().unwrap();
+        out.push(RingCommunicator { rank, world, to_next, from_prev });
+    }
+    out
+}
+
+impl RingCommunicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Classic ring AllReduce: N−1 reduce-scatter steps followed by N−1
+    /// all-gather steps over `world` chunks.
+    pub fn all_reduce(&self, data: &[f32]) -> Vec<f32> {
+        let w = self.world;
+        if w == 1 {
+            return data.to_vec();
+        }
+        let chunk = data.len().div_ceil(w);
+        let mut buf = data.to_vec();
+        buf.resize(chunk * w, 0.0); // pad
+        // Phase 1: reduce-scatter. At step s, send chunk (rank − s) and
+        // accumulate into chunk (rank − s − 1).
+        for s in 0..w - 1 {
+            let send_idx = (self.rank + w - s) % w;
+            let recv_idx = (self.rank + w - s - 1) % w;
+            self.to_next.send(buf[send_idx * chunk..(send_idx + 1) * chunk].to_vec()).unwrap();
+            let incoming = self.from_prev.recv().unwrap();
+            for (d, v) in buf[recv_idx * chunk..(recv_idx + 1) * chunk]
+                .iter_mut()
+                .zip(incoming)
+            {
+                *d += v;
+            }
+        }
+        // Phase 2: all-gather the reduced chunks around the ring.
+        for s in 0..w - 1 {
+            let send_idx = (self.rank + 1 + w - s) % w;
+            let recv_idx = (self.rank + w - s) % w;
+            self.to_next.send(buf[send_idx * chunk..(send_idx + 1) * chunk].to_vec()).unwrap();
+            let incoming = self.from_prev.recv().unwrap();
+            buf[recv_idx * chunk..(recv_idx + 1) * chunk].copy_from_slice(&incoming);
+        }
+        buf.truncate(data.len());
+        buf
+    }
+
+    /// Ring AllGather: N−1 forwarding steps.
+    pub fn all_gather(&self, data: &[f32]) -> Vec<f32> {
+        let w = self.world;
+        let len = data.len();
+        let mut out = vec![0.0; len * w];
+        out[self.rank * len..(self.rank + 1) * len].copy_from_slice(data);
+        let mut current = (self.rank, data.to_vec());
+        for _ in 0..w - 1 {
+            self.to_next.send(current.1.clone()).unwrap();
+            let incoming = self.from_prev.recv().unwrap();
+            let src = (current.0 + w - 1) % w;
+            out[src * len..(src + 1) * len].copy_from_slice(&incoming);
+            current = (src, incoming);
+        }
+        out
+    }
+}
+
+/// Run a closure on every rank of a fresh ring group (test helper).
+pub fn run_ring<R: Send + 'static>(
+    world: usize,
+    f: impl Fn(&RingCommunicator) -> R + Send + Sync + Copy + 'static,
+) -> Vec<R> {
+    let handles: Vec<_> = ring_group(world)
+        .into_iter()
+        .map(|c| thread::spawn(move || f(&c)))
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::collectives::{group, tab_collective_time};
+    use crate::fabric::tab::TabPool;
+    use std::sync::Arc;
+
+    #[test]
+    fn ring_allreduce_sums() {
+        let outs = run_ring(4, |c| {
+            let data: Vec<f32> = (0..37).map(|i| (c.rank() * 100 + i) as f32).collect();
+            c.all_reduce(&data)
+        });
+        for out in outs {
+            for (i, v) in out.iter().enumerate() {
+                let want: f32 = (0..4).map(|r| (r * 100 + i) as f32).sum();
+                assert_eq!(*v, want, "element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allgather_orders_by_rank() {
+        let outs = run_ring(5, |c| c.all_gather(&[c.rank() as f32; 3]));
+        for out in outs {
+            for r in 0..5 {
+                assert!(out[r * 3..(r + 1) * 3].iter().all(|&v| v == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_and_tab_allreduce_agree_numerically() {
+        // The two fabrics must compute identical reductions — this is the
+        // "baseline comparator implemented too" check.
+        let world = 4;
+        let len = 513; // deliberately not divisible by world
+        let ring_out = run_ring(world, move |c| {
+            let data: Vec<f32> = (0..len).map(|i| ((c.rank() + 1) * (i + 1)) as f32).collect();
+            c.all_reduce(&data)
+        });
+        let pool = Arc::new(TabPool::new(1 << 16, 4, 64));
+        let tab_out: Vec<Vec<f32>> = {
+            let comms = group(pool, world);
+            let hs: Vec<_> = comms
+                .into_iter()
+                .map(|mut c| {
+                    thread::spawn(move || {
+                        let data: Vec<f32> =
+                            (0..len).map(|i| ((c.rank() + 1) * (i + 1)) as f32).collect();
+                        c.all_reduce(&data).unwrap()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        assert_eq!(ring_out[0], tab_out[0]);
+        assert_eq!(ring_out[3], tab_out[3]);
+    }
+
+    #[test]
+    fn cost_model_allreduce_2n_minus_1_steps() {
+        let lat = FabricLatencies::default();
+        let t = ring_collective_time(
+            Collective::AllReduce,
+            Bytes::mib(8.0),
+            8,
+            Bandwidth::gbps(450.0),
+            &lat,
+        );
+        let step_ns = 8.0 * 1024.0 * 1024.0 / 8.0 / 450e9 * 1e9 + 500.0;
+        let expected = 14.0 * step_ns;
+        assert!((t.as_ns() - expected).abs() < 1.0, "t={} exp={}", t.as_ns(), expected);
+    }
+
+    #[test]
+    fn tab_beats_ring_at_all_sizes_for_n8() {
+        let lat = FabricLatencies::default();
+        for kb in [2.0, 32.0, 1024.0, 65536.0, 1048576.0] {
+            let payload = Bytes::kib(kb);
+            let ring = ring_collective_time(
+                Collective::AllReduce,
+                payload,
+                8,
+                Bandwidth::gbps(450.0),
+                &lat,
+            );
+            let tab = tab_collective_time(
+                Collective::AllReduce,
+                payload,
+                8,
+                Bandwidth::tbps(4.0),
+                &lat,
+            );
+            assert!(tab < ring, "TAB must win at {kb} KiB: {tab} vs {ring}");
+        }
+    }
+
+    #[test]
+    fn wire_bytes_match_paper_formulas() {
+        let t = Bytes::mib(64.0);
+        let ar = ring_wire_bytes(Collective::AllReduce, t, 8);
+        assert!((ar.value() - t.value() * 14.0 / 8.0).abs() < 1e-6);
+    }
+}

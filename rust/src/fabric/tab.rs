@@ -1,0 +1,451 @@
+//! Functional model of the Tensor Addressable Bridge (TAB) shared-memory
+//! pool (§3.1–§3.3).
+//!
+//! This is a *working* substrate, not just a cost model: xPU workers hold an
+//! `Arc<TabPool>` and exchange real tensor data through it. It implements
+//! the paper's memory semantics:
+//!
+//! * a single shared address space, **striped evenly across memory
+//!   modules** ("uniform data layout, evenly striping tensors across all
+//!   memory modules to maximize bandwidth utilization", §3.3.1);
+//! * plain `read` / `write`;
+//! * **write-accumulate** — commutative in-memory reduction performed by
+//!   the TAB, requiring no write ordering (§3.3.1);
+//! * **write-completion notifications** — counter-based synchronisation
+//!   boards that signal when a group of writes has finished (§3.3.1).
+//!
+//! Elements are `f32`; striping is by fixed-size granules. Each module is
+//! independently locked, so concurrent accumulates to different stripes
+//! proceed in parallel — the functional analogue of per-module line-rate
+//! reduction hardware.
+
+use crate::error::{FhError, Result};
+use crate::units::Bytes;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A contiguous allocation in the shared (global) address space.
+/// Offsets and lengths are in `f32` elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Region {
+    pub fn bytes(&self) -> Bytes {
+        Bytes::new(self.len as f64 * 4.0)
+    }
+}
+
+/// Operation counters (observability; used by tests and the metrics API).
+#[derive(Debug, Default)]
+pub struct TabStats {
+    pub reads: AtomicU64,
+    pub writes: AtomicU64,
+    pub accumulates: AtomicU64,
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub bytes_accumulated: AtomicU64,
+    pub notifications: AtomicU64,
+}
+
+/// Snapshot of [`TabStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TabStatsSnapshot {
+    pub reads: u64,
+    pub writes: u64,
+    pub accumulates: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub bytes_accumulated: u64,
+    pub notifications: u64,
+}
+
+struct Allocator {
+    /// Free list of (offset, len), sorted by offset, coalesced.
+    free: Vec<(usize, usize)>,
+}
+
+impl Allocator {
+    fn new(capacity: usize) -> Self {
+        Allocator { free: vec![(0, capacity)] }
+    }
+
+    fn alloc(&mut self, len: usize) -> Option<usize> {
+        // First fit.
+        let idx = self.free.iter().position(|&(_, flen)| flen >= len)?;
+        let (off, flen) = self.free[idx];
+        if flen == len {
+            self.free.remove(idx);
+        } else {
+            self.free[idx] = (off + len, flen - len);
+        }
+        Some(off)
+    }
+
+    fn free(&mut self, offset: usize, len: usize) {
+        let pos = self.free.partition_point(|&(o, _)| o < offset);
+        self.free.insert(pos, (offset, len));
+        // Coalesce neighbours.
+        if pos + 1 < self.free.len() {
+            let (o, l) = self.free[pos];
+            let (no, nl) = self.free[pos + 1];
+            if o + l == no {
+                self.free[pos] = (o, l + nl);
+                self.free.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (po, pl) = self.free[pos - 1];
+            let (o, l) = self.free[pos];
+            if po + pl == o {
+                self.free[pos - 1] = (po, pl + l);
+                self.free.remove(pos);
+            }
+        }
+    }
+
+    fn free_total(&self) -> usize {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+/// A notification board: named counters with blocking waits — the
+/// "write completion notification" primitive of §3.3.1.
+#[derive(Default)]
+struct NotifyBoard {
+    counts: Mutex<HashMap<String, u64>>,
+    cv: Condvar,
+}
+
+impl NotifyBoard {
+    fn signal(&self, tag: &str, n: u64) {
+        let mut counts = self.counts.lock().unwrap();
+        *counts.entry(tag.to_string()).or_insert(0) += n;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, tag: &str, target: u64) {
+        let mut counts = self.counts.lock().unwrap();
+        while counts.get(tag).copied().unwrap_or(0) < target {
+            counts = self.cv.wait(counts).unwrap();
+        }
+    }
+
+    fn reset(&self, tag: &str) {
+        self.counts.lock().unwrap().remove(tag);
+    }
+}
+
+/// The shared TAB memory pool.
+pub struct TabPool {
+    /// Per-module storage. Global element `e` lives in module
+    /// `(e / granule) % modules` at local slot
+    /// `(e / (granule*modules)) * granule + e % granule`.
+    modules: Vec<Mutex<Vec<f32>>>,
+    granule: usize,
+    capacity: usize,
+    allocator: Mutex<Allocator>,
+    board: NotifyBoard,
+    pub stats: TabStats,
+}
+
+impl TabPool {
+    /// Create a pool of `capacity` f32 elements striped over `modules`
+    /// memory modules at `granule`-element granularity.
+    pub fn new(capacity: usize, modules: usize, granule: usize) -> Self {
+        assert!(modules > 0 && granule > 0, "degenerate TAB configuration");
+        // Round capacity up so it divides evenly across modules.
+        let per_module = capacity.div_ceil(modules * granule) * granule;
+        let capacity = per_module * modules;
+        TabPool {
+            modules: (0..modules).map(|_| Mutex::new(vec![0.0; per_module])).collect(),
+            granule,
+            capacity,
+            allocator: Mutex::new(Allocator::new(capacity)),
+            board: NotifyBoard::default(),
+            stats: TabStats::default(),
+        }
+    }
+
+    /// Pool matching the paper's FH configuration: `cap_gb` of remote
+    /// memory over `modules` modules (elements are f32).
+    pub fn with_gb(cap_gb: f64, modules: usize) -> Self {
+        let elems = (cap_gb * 1e9 / 4.0) as usize;
+        TabPool::new(elems, modules, 1024)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn num_modules(&self) -> usize {
+        self.modules.len()
+    }
+
+    /// Allocate a region of `len` elements.
+    pub fn alloc(&self, len: usize) -> Result<Region> {
+        if len == 0 {
+            return Ok(Region { offset: 0, len: 0 });
+        }
+        let mut a = self.allocator.lock().unwrap();
+        match a.alloc(len) {
+            Some(offset) => Ok(Region { offset, len }),
+            None => Err(FhError::PoolExhausted { requested: len * 4, free: a.free_total() * 4 }),
+        }
+    }
+
+    /// Return a region to the pool.
+    pub fn free(&self, region: Region) {
+        if region.len == 0 {
+            return;
+        }
+        self.allocator.lock().unwrap().free(region.offset, region.len);
+    }
+
+    /// Free elements remaining (for capacity planning / tests).
+    pub fn free_elems(&self) -> usize {
+        self.allocator.lock().unwrap().free_total()
+    }
+
+    #[inline]
+    fn locate(&self, global: usize) -> (usize, usize) {
+        let g = self.granule;
+        let m = self.modules.len();
+        let stripe = global / g;
+        let module = stripe % m;
+        let local = (stripe / m) * g + global % g;
+        (module, local)
+    }
+
+    fn check(&self, region: Region, offset: usize, len: usize) -> Result<()> {
+        if offset + len > region.len || region.offset + region.len > self.capacity {
+            return Err(FhError::OutOfBounds {
+                offset: region.offset + offset,
+                len,
+                region: self.capacity,
+            });
+        }
+        Ok(())
+    }
+
+    /// Visit the stripe runs of `[region.offset+offset, +len)`, calling
+    /// `f(module, local_start, global_start_rel, run_len)` per contiguous
+    /// run inside one module.
+    fn for_runs(&self, start: usize, len: usize, mut f: impl FnMut(usize, usize, usize, usize)) {
+        let g = self.granule;
+        let mut done = 0;
+        while done < len {
+            let global = start + done;
+            let within = global % g;
+            let run = (g - within).min(len - done);
+            let (module, local) = self.locate(global);
+            f(module, local, done, run);
+            done += run;
+        }
+    }
+
+    /// Plain write: `data` into `region` at `offset` elements.
+    pub fn write(&self, region: Region, offset: usize, data: &[f32]) -> Result<()> {
+        self.check(region, offset, data.len())?;
+        self.for_runs(region.offset + offset, data.len(), |m, local, rel, run| {
+            let mut module = self.modules[m].lock().unwrap();
+            module[local..local + run].copy_from_slice(&data[rel..rel + run]);
+        });
+        self.stats.writes.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_written.fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Write-accumulate (§3.3.1): `pool[i] += data[i]`. Commutative, so no
+    /// ordering is required between concurrent accumulators; per-module
+    /// locks make each stripe-run atomic.
+    ///
+    /// (Perf note: a stripe-rotation scheme to avoid lock convoys was
+    /// tried and reverted — the path is DRAM-bandwidth-bound, and the
+    /// rotation's locality loss cost ~12%; see EXPERIMENTS.md §Perf.)
+    pub fn write_accumulate(&self, region: Region, offset: usize, data: &[f32]) -> Result<()> {
+        self.check(region, offset, data.len())?;
+        self.for_runs(region.offset + offset, data.len(), |m, local, rel, run| {
+            let mut module = self.modules[m].lock().unwrap();
+            let dst = &mut module[local..local + run];
+            let src = &data[rel..rel + run];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        });
+        self.stats.accumulates.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_accumulated.fetch_add(data.len() as u64 * 4, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Read `out.len()` elements from `region` at `offset`.
+    pub fn read_into(&self, region: Region, offset: usize, out: &mut [f32]) -> Result<()> {
+        self.check(region, offset, out.len())?;
+        self.for_runs(region.offset + offset, out.len(), |m, local, rel, run| {
+            let module = self.modules[m].lock().unwrap();
+            out[rel..rel + run].copy_from_slice(&module[local..local + run]);
+        });
+        self.stats.reads.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes_read.fetch_add(out.len() as u64 * 4, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn read(&self, region: Region, offset: usize, len: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0; len];
+        self.read_into(region, offset, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero a region (used to reset accumulation buffers between rounds).
+    pub fn zero(&self, region: Region) -> Result<()> {
+        self.check(region, 0, region.len)?;
+        self.for_runs(region.offset, region.len, |m, local, _, run| {
+            let mut module = self.modules[m].lock().unwrap();
+            module[local..local + run].fill(0.0);
+        });
+        Ok(())
+    }
+
+    // --- Write-completion notifications (§3.3.1) ---
+
+    /// Signal `n` completion events on `tag`.
+    pub fn notify(&self, tag: &str, n: u64) {
+        self.stats.notifications.fetch_add(n, Ordering::Relaxed);
+        self.board.signal(tag, n);
+    }
+
+    /// Block until `target` completion events have been signalled on `tag`.
+    pub fn wait_notifications(&self, tag: &str, target: u64) {
+        self.board.wait(tag, target);
+    }
+
+    /// Clear a tag's counter (start of a new collective round).
+    pub fn reset_notifications(&self, tag: &str) {
+        self.board.reset(tag);
+    }
+
+    pub fn stats_snapshot(&self) -> TabStatsSnapshot {
+        TabStatsSnapshot {
+            reads: self.stats.reads.load(Ordering::Relaxed),
+            writes: self.stats.writes.load(Ordering::Relaxed),
+            accumulates: self.stats.accumulates.load(Ordering::Relaxed),
+            bytes_read: self.stats.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.stats.bytes_written.load(Ordering::Relaxed),
+            bytes_accumulated: self.stats.bytes_accumulated.load(Ordering::Relaxed),
+            notifications: self.stats.notifications.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let pool = TabPool::new(1 << 16, 4, 256);
+        let r = pool.alloc(1000).unwrap();
+        let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        pool.write(r, 0, &data).unwrap();
+        assert_eq!(pool.read(r, 0, 1000).unwrap(), data);
+        // Partial read with offset.
+        assert_eq!(pool.read(r, 500, 3).unwrap(), vec![500.0, 501.0, 502.0]);
+    }
+
+    #[test]
+    fn striping_spans_modules() {
+        let pool = TabPool::new(4096, 4, 16);
+        let r = pool.alloc(64).unwrap();
+        // 64 elements at granule 16 touch 4 stripes → all 4 modules.
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        pool.write(r, 0, &data).unwrap();
+        assert_eq!(pool.read(r, 0, 64).unwrap(), data);
+    }
+
+    #[test]
+    fn write_accumulate_sums() {
+        let pool = TabPool::new(4096, 2, 8);
+        let r = pool.alloc(100).unwrap();
+        pool.zero(r).unwrap();
+        for _ in 0..4 {
+            pool.write_accumulate(r, 0, &vec![1.5f32; 100]).unwrap();
+        }
+        assert_eq!(pool.read(r, 0, 100).unwrap(), vec![6.0f32; 100]);
+    }
+
+    #[test]
+    fn concurrent_accumulate_is_correct_regardless_of_order() {
+        // §3.3.1: commutative accumulation needs no write ordering.
+        let pool = Arc::new(TabPool::new(1 << 18, 8, 64));
+        let r = pool.alloc(10_000).unwrap();
+        pool.zero(r).unwrap();
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let data: Vec<f32> = (0..10_000).map(|i| (t * i % 7) as f32).collect();
+                    pool.write_accumulate(r, 0, &data).unwrap();
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let got = pool.read(r, 0, 10_000).unwrap();
+        for i in 0..10_000usize {
+            let want: f32 = (0..8).map(|t| (t * i % 7) as f32).sum();
+            assert_eq!(got[i], want, "element {i}");
+        }
+    }
+
+    #[test]
+    fn alloc_free_reuse() {
+        let pool = TabPool::new(1024, 2, 8);
+        let a = pool.alloc(512).unwrap();
+        let b = pool.alloc(512).unwrap();
+        assert!(pool.alloc(1).is_err(), "pool should be full");
+        pool.free(a);
+        pool.free(b);
+        assert_eq!(pool.free_elems(), 1024);
+        // Coalesced: a full-size alloc must succeed again.
+        assert!(pool.alloc(1024).is_ok());
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let pool = TabPool::new(1024, 2, 8);
+        let r = pool.alloc(10).unwrap();
+        assert!(pool.write(r, 5, &[0.0; 10]).is_err());
+        assert!(pool.read(r, 0, 11).is_err());
+    }
+
+    #[test]
+    fn notifications_block_until_target() {
+        let pool = Arc::new(TabPool::new(1024, 2, 8));
+        let p2 = Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || {
+            p2.wait_notifications("round0", 4);
+        });
+        for _ in 0..4 {
+            pool.notify("round0", 1);
+        }
+        waiter.join().unwrap();
+        assert_eq!(pool.stats_snapshot().notifications, 4);
+    }
+
+    #[test]
+    fn pool_exhaustion_reports_free_bytes() {
+        let pool = TabPool::new(100, 1, 10);
+        match pool.alloc(1000) {
+            Err(FhError::PoolExhausted { requested, free }) => {
+                assert_eq!(requested, 4000);
+                assert_eq!(free, 400);
+            }
+            other => panic!("expected PoolExhausted, got {other:?}"),
+        }
+    }
+}

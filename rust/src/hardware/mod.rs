@@ -1,0 +1,159 @@
+//! xPU and interconnect catalog (→ Fig 2.5, 2.7, 2.9).
+//!
+//! Datasheet numbers for the GPU generations the paper's trend figures
+//! cover. FLOPs are *dense* (non-sparse) tensor-core rates. Where the paper
+//! plots "peak advertised FLOPS" (which mixes precisions across
+//! generations, e.g. FP4 for Blackwell) we carry both the FP16-dense rate
+//! and the lowest-precision advertised dense rate.
+
+use crate::units::{Bandwidth, Bytes, FlopRate};
+
+/// One accelerator generation.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: String,
+    pub year: u32,
+    /// Dense FP16/BF16 tensor throughput.
+    pub fp16_flops: FlopRate,
+    /// Dense throughput at the lowest advertised precision (FP8/FP4).
+    pub min_precision_flops: FlopRate,
+    pub hbm_capacity: Bytes,
+    pub hbm_bw: Bandwidth,
+    /// Aggregate bidirectional inter-GPU link bandwidth per GPU.
+    pub link_bw_bidir: Bandwidth,
+    /// Link generation label (for reports).
+    pub link_name: String,
+}
+
+impl GpuSpec {
+    /// Per-direction link bandwidth (the number that bounds a ring step).
+    pub fn link_bw_unidir(&self) -> Bandwidth {
+        self.link_bw_bidir / 2.0
+    }
+
+    /// FLOPS per GB of HBM capacity (→ Fig 2.5).
+    pub fn flops_per_gb(&self, advertised: bool) -> f64 {
+        let f = if advertised { self.min_precision_flops } else { self.fp16_flops };
+        f.value() / self.hbm_capacity.as_gb()
+    }
+
+    /// HBM bytes per FP16 FLOP (→ Fig 2.7).
+    pub fn byte_per_flop(&self) -> f64 {
+        self.hbm_bw.value() / self.fp16_flops.value()
+    }
+
+    /// FP16 FLOPS per Gbps of interconnect (→ Fig 2.9).
+    pub fn flops_per_gbps(&self) -> f64 {
+        self.fp16_flops.value() / (self.link_bw_bidir.value() * 8.0 / 1e9)
+    }
+}
+
+fn spec(
+    name: &str,
+    year: u32,
+    fp16_tflops: f64,
+    min_prec_tflops: f64,
+    cap_gb: f64,
+    hbm_tbps: f64,
+    link_gbps_bidir: f64,
+    link_name: &str,
+) -> GpuSpec {
+    GpuSpec {
+        name: name.into(),
+        year,
+        fp16_flops: FlopRate::tflops(fp16_tflops),
+        min_precision_flops: FlopRate::tflops(min_prec_tflops),
+        hbm_capacity: Bytes::gb(cap_gb),
+        hbm_bw: Bandwidth::tbps(hbm_tbps),
+        link_bw_bidir: Bandwidth::gbps(link_gbps_bidir),
+        link_name: link_name.into(),
+    }
+}
+
+pub fn v100() -> GpuSpec {
+    spec("V100", 2017, 125.0, 125.0, 32.0, 0.9, 300.0, "NVLink2")
+}
+pub fn a100() -> GpuSpec {
+    spec("A100", 2020, 312.0, 624.0, 80.0, 2.039, 600.0, "NVLink3")
+}
+pub fn h100() -> GpuSpec {
+    spec("H100", 2022, 989.0, 1979.0, 80.0, 3.35, 900.0, "NVLink4")
+}
+pub fn h200() -> GpuSpec {
+    spec("H200", 2023, 989.0, 1979.0, 141.0, 4.8, 900.0, "NVLink4")
+}
+pub fn b200() -> GpuSpec {
+    spec("B200", 2024, 2250.0, 9000.0, 192.0, 8.0, 1800.0, "NVLink5")
+}
+pub fn gb200() -> GpuSpec {
+    spec("GB200", 2024, 2500.0, 10000.0, 192.0, 8.0, 1800.0, "NVLink5")
+}
+pub fn gb300() -> GpuSpec {
+    spec("GB300", 2025, 2500.0, 15000.0, 288.0, 8.0, 1800.0, "NVLink5")
+}
+
+/// The xPU generations plotted by Figs 2.5 / 2.7 / 2.9, chronological.
+pub fn catalog() -> Vec<GpuSpec> {
+    vec![v100(), a100(), h100(), h200(), b200(), gb200(), gb300()]
+}
+
+pub fn by_name(name: &str) -> Option<GpuSpec> {
+    catalog().into_iter().find(|g| g.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h200_datasheet_numbers() {
+        // NVIDIA H200 datasheet: 141 GB HBM3e, 4.8 TB/s. (Paper Table 4.1/4.2.)
+        let g = h200();
+        assert_eq!(g.hbm_capacity.as_gb(), 141.0);
+        assert_eq!(g.hbm_bw.as_tbps(), 4.8);
+        assert_eq!(g.link_bw_bidir.as_gbps(), 900.0);
+        assert_eq!(g.link_bw_unidir().as_gbps(), 450.0);
+    }
+
+    #[test]
+    fn fig25_flops_per_gb_rises_steeply() {
+        // §2.1.1: "FLOPs-per-GB-capacity ratio of GPUs has risen by
+        // approximately 34× from the V100 to the GB200". With advertised
+        // (lowest-precision) rates we land in the same decade; with
+        // FP16-dense the trend is ~3×. Both directions must be upward.
+        let v = v100();
+        let gb = gb200();
+        let adv = gb.flops_per_gb(true) / v.flops_per_gb(true);
+        let fp16 = gb.flops_per_gb(false) / v.flops_per_gb(false);
+        assert!(adv > 10.0, "advertised ratio {adv:.1}");
+        assert!(fp16 > 2.5, "fp16 ratio {fp16:.1}");
+    }
+
+    #[test]
+    fn fig27_byte_per_flop_declines() {
+        let cat = catalog();
+        let first = cat.first().unwrap().byte_per_flop();
+        let last = cat.last().unwrap().byte_per_flop();
+        assert!(last < first, "byte/FLOP must decline across generations");
+    }
+
+    #[test]
+    fn fig29_flops_per_gbps_rises_about_2_5x_a100_to_gb300() {
+        let r = gb300().flops_per_gbps() / a100().flops_per_gbps();
+        assert!((2.0..3.5).contains(&r), "A100→GB300 FLOPs/Gbps ratio {r:.2}");
+    }
+
+    #[test]
+    fn catalog_is_chronological() {
+        let years: Vec<u32> = catalog().iter().map(|g| g.year).collect();
+        let mut sorted = years.clone();
+        sorted.sort();
+        assert_eq!(years, sorted);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(by_name("h200").is_some());
+        assert!(by_name("TPUv7").is_none());
+    }
+}

@@ -1,0 +1,49 @@
+//! # FengHuang — disaggregated shared-memory orchestration for AI inference
+//!
+//! Reproduction of *FengHuang: Next-Generation Memory Orchestration for AI
+//! Inferencing* (Microsoft Research, 2025). The library provides:
+//!
+//! * [`models`] — analytical LLM architecture library (parameters, KV
+//!   cache, FLOPs, communication volumes) for the paper's workloads;
+//! * [`hardware`] — xPU / interconnect catalog for the trend figures;
+//! * [`fabric`] — the TAB shared-memory pool with write-accumulate and
+//!   completion notifications (functional + analytic), NVLink ring
+//!   baseline, and the §3.3.3 speed-up analysis;
+//! * [`trace`] — synthetic operator traces (the Nsight-trace substitute);
+//! * [`sim`] — discrete-event simulator with the tensor prefetcher and
+//!   paging stream (→ Fig 4.1, Table 4.3);
+//! * [`coordinator`] — serving layer: request router, continuous batcher,
+//!   prefill/decode scheduler over simulated FengHuang nodes;
+//! * [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
+//!   artifacts from the Rust hot path;
+//! * [`analysis`] — figure/table generators for every artifact in the
+//!   paper's evaluation;
+//! * [`config`] — system presets (Table 4.1/4.2) and TOML configuration.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod fabric;
+pub mod hardware;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod units;
+
+pub use error::{FhError, Result};
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
+    pub use crate::error::{FhError, Result};
+    pub use crate::fabric::{Collective, FabricLatencies, TabPool};
+    pub use crate::models::arch::{self, ModelArch};
+    pub use crate::sim::{simulate, SimReport};
+    pub use crate::trace::{Phase, TraceConfig};
+    pub use crate::units::{Bandwidth, Bytes, Dtype, FlopRate, Flops, Seconds};
+}

@@ -1,0 +1,126 @@
+//! FengHuang CLI — leader entrypoint.
+//!
+//! ```text
+//! fenghuang simulate [--model M] [--system S] [--remote-tbps X]
+//!                    [--batch B] [--prompt P] [--gen G]
+//! fenghuang figures  [all|fig1|fig2-model|fig2-hw|table31|speedup|fig41|table43|chapter5]
+//! fenghuang speedup
+//! fenghuang serve    [--model M] [--requests N] [--max-batch B]
+//! fenghuang help
+//! ```
+//!
+//! (Arg parsing is hand-rolled; the offline build environment has no clap.)
+
+use anyhow::{anyhow, bail, Result};
+use fenghuang::prelude::*;
+use fenghuang::units::Bandwidth;
+use std::collections::HashMap;
+
+const USAGE: &str = "\
+fenghuang — FengHuang memory-orchestration reproduction
+
+USAGE:
+  fenghuang simulate [--model gpt3|grok1|qwen3|deepseek-v3|gpt2]
+                     [--system baseline8|fh4-1.5xm|fh4-2.0xm]
+                     [--remote-tbps 4.8] [--batch 8] [--prompt 4096] [--gen 1024]
+  fenghuang figures  [all|fig1|fig2-model|fig2-hw|table31|speedup|fig41|table43|chapter5]
+  fenghuang figures-csv [fig1|fig2-model|fig2-hw|fig41|speedup]
+  fenghuang speedup
+  fenghuang serve    [--model gpt3] [--requests 64] [--max-batch 8]
+  fenghuang help
+";
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            bail!("unexpected argument '{k}' (flags are --key value)");
+        }
+        let v = args.get(i + 1).ok_or_else(|| anyhow!("flag {k} needs a value"))?;
+        flags.insert(k.trim_start_matches("--").to_string(), v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        None => Ok(default),
+    }
+}
+
+fn system_by_name(name: &str, remote_tbps: f64) -> Result<SystemConfig> {
+    let bw = Bandwidth::tbps(remote_tbps);
+    match name.to_ascii_lowercase().as_str() {
+        "baseline8" => Ok(baseline8()),
+        "fh4-1.5xm" | "fh4_15xm" => Ok(fh4_15xm(bw)),
+        "fh4-2.0xm" | "fh4_20xm" => Ok(fh4_20xm(bw)),
+        other => Err(anyhow!("unknown system preset '{other}'")),
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "simulate" => {
+            let f = parse_flags(&args[1..])?;
+            let model: String = flag(&f, "model", "gpt3".to_string())?;
+            let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
+            let remote_tbps: f64 = flag(&f, "remote-tbps", 4.8)?;
+            let batch: u64 = flag(&f, "batch", 8)?;
+            let prompt: u64 = flag(&f, "prompt", 4096)?;
+            let gen: u64 = flag(&f, "gen", 1024)?;
+            let m = arch::by_name(&model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+            let sys = system_by_name(&system, remote_tbps)?;
+            let r = fenghuang::sim::run_workload(&sys, &m, batch, prompt, gen)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("{} on {} (batch {batch}, prompt {prompt}, gen {gen})", r.model, r.system);
+            println!("  TTFT       {:>10.2} ms", r.ttft.as_ms());
+            println!("  TPOT       {:>10.3} ms", r.tpot.as_ms());
+            println!("  E2E        {:>10.2} s", r.e2e.value());
+            println!("  peak local {:>10.2} GB", r.peak_local.as_gb());
+        }
+        "figures" => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
+            print!("{}", fenghuang::analysis::render(which).map_err(|e| anyhow!("{e}"))?);
+        }
+        "figures-csv" => {
+            let which = args.get(1).map(|s| s.as_str()).unwrap_or("fig41");
+            print!("{}", fenghuang::analysis::render_csv(which).map_err(|e| anyhow!("{e}"))?);
+        }
+        "speedup" => {
+            print!("{}", fenghuang::analysis::render("speedup").map_err(|e| anyhow!("{e}"))?);
+        }
+        "serve" => {
+            let f = parse_flags(&args[1..])?;
+            let model: String = flag(&f, "model", "gpt3".to_string())?;
+            let requests: usize = flag(&f, "requests", 64)?;
+            let max_batch: usize = flag(&f, "max-batch", 8)?;
+            let m = arch::by_name(&model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+            let summary = fenghuang::coordinator::demo_serve(&m, requests, max_batch)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("{summary}");
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,364 @@
+//! LLM architecture descriptors.
+//!
+//! These are the published architectures the paper evaluates (GPT-3 175B,
+//! Grok-1, Qwen3-235B) plus the models used in the Chapter 2 trend figures
+//! (GPT-2, DeepSeek-V3, and the historical scaling set of Fig 1.1).
+//!
+//! Every analytical quantity the simulator needs — parameter counts,
+//! KV-cache footprints, FLOPs, communication volume — is derived from these
+//! descriptors, replacing the Nsight profiling traces of the paper's own
+//! simulator (see DESIGN.md §1).
+
+use crate::units::Dtype;
+
+/// Attention flavour — determines KV-cache size per token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attention {
+    /// Multi-head attention: KV heads == query heads.
+    Mha,
+    /// Grouped-query attention with the given number of KV heads.
+    Gqa { kv_heads: u32 },
+    /// Multi-head latent attention (DeepSeek): KV compressed to
+    /// `kv_lora_rank` plus a decoupled RoPE key of `rope_head_dim`.
+    Mla { kv_lora_rank: u32, rope_head_dim: u32 },
+}
+
+/// Feed-forward flavour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FeedForward {
+    /// Dense MLP with the given intermediate size. `gated` adds the third
+    /// (gate) projection used by SwiGLU-style blocks.
+    Dense { intermediate: u64, gated: bool },
+    /// Sparse mixture-of-experts.
+    Moe {
+        experts: u32,
+        top_k: u32,
+        /// Intermediate size of each routed expert.
+        expert_intermediate: u64,
+        /// Number of always-active shared experts (DeepSeek-V3 style).
+        shared_experts: u32,
+        /// Intermediate size of each shared expert.
+        shared_intermediate: u64,
+        gated: bool,
+    },
+}
+
+/// A transformer architecture, sufficient to derive memory / compute /
+/// communication requirements analytically.
+#[derive(Debug, Clone)]
+pub struct ModelArch {
+    pub name: String,
+    /// Release year — used by the Chapter 2 trend figures.
+    pub year: u32,
+    pub layers: u32,
+    pub hidden: u64,
+    pub heads: u32,
+    pub head_dim: u64,
+    pub attention: Attention,
+    pub ffn: FeedForward,
+    pub vocab: u64,
+    /// Maximum supported sequence length.
+    pub max_seq: u64,
+    /// Weight precision used for inference deployments of this model.
+    pub weight_dtype: Dtype,
+    /// KV-cache precision.
+    pub kv_dtype: Dtype,
+    /// Layers at the start of the network that use a dense FFN even in MoE
+    /// models (DeepSeek-V3 uses 3).
+    pub dense_prefix_layers: u32,
+}
+
+impl ModelArch {
+    /// Query projection output width (= heads * head_dim).
+    pub fn q_dim(&self) -> u64 {
+        self.heads as u64 * self.head_dim
+    }
+
+    /// KV projection output width per K or V.
+    pub fn kv_dim(&self) -> u64 {
+        match self.attention {
+            Attention::Mha => self.q_dim(),
+            Attention::Gqa { kv_heads } => kv_heads as u64 * self.head_dim,
+            // MLA stores a joint compressed KV plus the RoPE key; the
+            // projection width used for weight sizing is the compression
+            // rank (the up-projections are accounted separately in
+            // `attn_params_per_layer`).
+            Attention::Mla { kv_lora_rank, rope_head_dim } => {
+                (kv_lora_rank + rope_head_dim) as u64
+            }
+        }
+    }
+
+    /// Number of MoE layers (total minus the dense prefix).
+    pub fn moe_layers(&self) -> u32 {
+        match self.ffn {
+            FeedForward::Dense { .. } => 0,
+            FeedForward::Moe { .. } => self.layers - self.dense_prefix_layers,
+        }
+    }
+
+    /// Number of layers with a dense FFN.
+    pub fn dense_ffn_layers(&self) -> u32 {
+        self.layers - self.moe_layers()
+    }
+
+    pub fn is_moe(&self) -> bool {
+        matches!(self.ffn, FeedForward::Moe { .. })
+    }
+}
+
+/// Builder-style construction for presets and tests.
+pub struct ArchBuilder(ModelArch);
+
+impl ArchBuilder {
+    pub fn new(name: &str, year: u32) -> Self {
+        ArchBuilder(ModelArch {
+            name: name.to_string(),
+            year,
+            layers: 12,
+            hidden: 768,
+            heads: 12,
+            head_dim: 64,
+            attention: Attention::Mha,
+            ffn: FeedForward::Dense { intermediate: 3072, gated: false },
+            vocab: 50257,
+            max_seq: 1024,
+            weight_dtype: Dtype::F16,
+            kv_dtype: Dtype::F16,
+            dense_prefix_layers: 0,
+        })
+    }
+
+    pub fn layers(mut self, v: u32) -> Self {
+        self.0.layers = v;
+        self
+    }
+    pub fn hidden(mut self, v: u64) -> Self {
+        self.0.hidden = v;
+        self
+    }
+    pub fn heads(mut self, v: u32) -> Self {
+        self.0.heads = v;
+        self
+    }
+    pub fn head_dim(mut self, v: u64) -> Self {
+        self.0.head_dim = v;
+        self
+    }
+    pub fn attention(mut self, v: Attention) -> Self {
+        self.0.attention = v;
+        self
+    }
+    pub fn ffn(mut self, v: FeedForward) -> Self {
+        self.0.ffn = v;
+        self
+    }
+    pub fn vocab(mut self, v: u64) -> Self {
+        self.0.vocab = v;
+        self
+    }
+    pub fn max_seq(mut self, v: u64) -> Self {
+        self.0.max_seq = v;
+        self
+    }
+    pub fn weight_dtype(mut self, v: Dtype) -> Self {
+        self.0.weight_dtype = v;
+        self
+    }
+    pub fn kv_dtype(mut self, v: Dtype) -> Self {
+        self.0.kv_dtype = v;
+        self
+    }
+    pub fn dense_prefix_layers(mut self, v: u32) -> Self {
+        self.0.dense_prefix_layers = v;
+        self
+    }
+    pub fn build(self) -> ModelArch {
+        let a = self.0;
+        assert!(a.layers > 0 && a.hidden > 0 && a.heads > 0, "degenerate arch {}", a.name);
+        assert!(a.dense_prefix_layers <= a.layers, "dense prefix exceeds layer count");
+        a
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Presets — published architectures.
+// ---------------------------------------------------------------------------
+
+/// GPT-2 small (124M) — the 768-hidden entry of Fig 2.8.
+pub fn gpt2() -> ModelArch {
+    ArchBuilder::new("GPT-2", 2019)
+        .layers(12)
+        .hidden(768)
+        .heads(12)
+        .head_dim(64)
+        .ffn(FeedForward::Dense { intermediate: 3072, gated: false })
+        .vocab(50257)
+        .max_seq(1024)
+        .build()
+}
+
+/// GPT-2 XL (1.5B) — the headline GPT-2 size of Fig 1.1.
+pub fn gpt2_xl() -> ModelArch {
+    ArchBuilder::new("GPT-2-XL", 2019)
+        .layers(48)
+        .hidden(1600)
+        .heads(25)
+        .head_dim(64)
+        .ffn(FeedForward::Dense { intermediate: 6400, gated: false })
+        .vocab(50257)
+        .max_seq(1024)
+        .build()
+}
+
+/// GPT-3 175B (Brown et al. 2020) — dense transformer workload of §4.
+pub fn gpt3_175b() -> ModelArch {
+    ArchBuilder::new("GPT-3", 2020)
+        .layers(96)
+        .hidden(12288)
+        .heads(96)
+        .head_dim(128)
+        .ffn(FeedForward::Dense { intermediate: 49152, gated: false })
+        .vocab(50257)
+        .max_seq(4096)
+        .build()
+}
+
+/// Grok-1 (xAI, 314B total, 8 experts top-2) — MoE workload of §4.
+/// Each expert is a replica of the original FFN (intermediate 32768).
+pub fn grok1() -> ModelArch {
+    ArchBuilder::new("Grok-1", 2024)
+        .layers(64)
+        .hidden(6144)
+        .heads(48)
+        .head_dim(128)
+        .attention(Attention::Gqa { kv_heads: 8 })
+        .ffn(FeedForward::Moe {
+            experts: 8,
+            top_k: 2,
+            expert_intermediate: 32768,
+            shared_experts: 0,
+            shared_intermediate: 0,
+            gated: true,
+        })
+        .vocab(131072)
+        .max_seq(8192)
+        .build()
+}
+
+/// Qwen3-235B-A22B (128 experts, top-8, fine-grained experts) — MoE
+/// workload of §4 with 128K context for the reasoning task.
+pub fn qwen3_235b() -> ModelArch {
+    ArchBuilder::new("Qwen3", 2025)
+        .layers(94)
+        .hidden(4096)
+        .heads(64)
+        .head_dim(128)
+        .attention(Attention::Gqa { kv_heads: 4 })
+        .ffn(FeedForward::Moe {
+            experts: 128,
+            top_k: 8,
+            expert_intermediate: 1536,
+            shared_experts: 0,
+            shared_intermediate: 0,
+            gated: true,
+        })
+        .vocab(151936)
+        .max_seq(131072)
+        .build()
+}
+
+/// DeepSeek-V3 (671B total, 256 experts top-8 + 1 shared, MLA) — used by
+/// the Chapter 2 trend figures. FP8 deployment precision.
+pub fn deepseek_v3() -> ModelArch {
+    ArchBuilder::new("DeepSeek-V3", 2024)
+        .layers(61)
+        .hidden(7168)
+        .heads(128)
+        .head_dim(128)
+        .attention(Attention::Mla { kv_lora_rank: 512, rope_head_dim: 64 })
+        .ffn(FeedForward::Moe {
+            experts: 256,
+            top_k: 8,
+            expert_intermediate: 2048,
+            shared_experts: 1,
+            shared_intermediate: 2048,
+            gated: true,
+        })
+        .vocab(129280)
+        .max_seq(163840)
+        .weight_dtype(Dtype::Fp8)
+        .dense_prefix_layers(3)
+        .build()
+}
+
+/// The five models of the Chapter 2 model-trend figures, in paper order.
+pub fn trend_models() -> Vec<ModelArch> {
+    vec![gpt2(), gpt3_175b(), grok1(), qwen3_235b(), deepseek_v3()]
+}
+
+/// The §4 evaluation workloads.
+pub fn eval_models() -> Vec<ModelArch> {
+    vec![gpt3_175b(), grok1(), qwen3_235b()]
+}
+
+/// Look a preset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelArch> {
+    let n = name.to_ascii_lowercase();
+    let m = match n.as_str() {
+        "gpt2" | "gpt-2" => gpt2(),
+        "gpt2-xl" | "gpt-2-xl" => gpt2_xl(),
+        "gpt3" | "gpt-3" | "gpt3-175b" => gpt3_175b(),
+        "grok1" | "grok-1" => grok1(),
+        "qwen3" | "qwen3-235b" => qwen3_235b(),
+        "deepseek" | "deepseek-v3" | "dsv3" => deepseek_v3(),
+        _ => return None,
+    };
+    Some(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_published_hidden_sizes() {
+        assert_eq!(gpt2().hidden, 768);
+        assert_eq!(gpt3_175b().hidden, 12288);
+        assert_eq!(grok1().hidden, 6144);
+        assert_eq!(qwen3_235b().hidden, 4096);
+        assert_eq!(deepseek_v3().hidden, 7168);
+    }
+
+    #[test]
+    fn kv_dim_reflects_attention_flavour() {
+        assert_eq!(gpt3_175b().kv_dim(), 96 * 128); // MHA
+        assert_eq!(grok1().kv_dim(), 8 * 128); // GQA
+        assert_eq!(deepseek_v3().kv_dim(), 512 + 64); // MLA
+    }
+
+    #[test]
+    fn moe_layer_partition() {
+        let ds = deepseek_v3();
+        assert_eq!(ds.moe_layers(), 58);
+        assert_eq!(ds.dense_ffn_layers(), 3);
+        let g = gpt3_175b();
+        assert_eq!(g.moe_layers(), 0);
+        assert_eq!(g.dense_ffn_layers(), 96);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("Qwen3").is_some());
+        assert!(by_name("gpt-3").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn max_seq_matches_paper_claims() {
+        // §2.1.1: Qwen3 128K, DeepSeek 160K, Grok-1 8K.
+        assert_eq!(qwen3_235b().max_seq, 131072);
+        assert_eq!(deepseek_v3().max_seq, 163840);
+        assert_eq!(grok1().max_seq, 8192);
+    }
+}

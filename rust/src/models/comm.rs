@@ -1,0 +1,76 @@
+//! Tensor-parallel communication-volume arithmetic (→ Fig 2.8).
+//!
+//! With Megatron-style tensor parallelism each transformer layer performs
+//! two AllReduces over the activations (after the attention output
+//! projection and after the FFN down projection). MoE layers with expert
+//! parallelism additionally exchange tokens via AllToAll; we fold that into
+//! the same per-layer payload accounting used by the paper (volume is
+//! driven by hidden size — §2.1.3).
+
+use super::arch::ModelArch;
+use crate::units::{Bytes, Dtype};
+
+/// Activation precision on the wire (communication payloads).
+pub const ACT_DTYPE: Dtype = Dtype::F16;
+
+/// AllReduce payload bytes per token per layer (one direction, logical
+/// tensor size — algorithm-dependent wire traffic is applied by `fabric`).
+pub fn allreduce_payload_per_token_per_layer(m: &ModelArch) -> Bytes {
+    Bytes::new(m.hidden as f64 * ACT_DTYPE.bytes())
+}
+
+/// Number of collective phases per layer (2 AllReduce for TP; MoE adds
+/// 2 AllToAll phases for dispatch/combine).
+pub fn collectives_per_layer(m: &ModelArch) -> u32 {
+    if m.is_moe() {
+        4
+    } else {
+        2
+    }
+}
+
+/// Total logical communication payload for generating one token across all
+/// layers (→ denominator of Fig 2.8).
+pub fn comm_bytes_per_token(m: &ModelArch) -> Bytes {
+    allreduce_payload_per_token_per_layer(m)
+        * (collectives_per_layer(m) as f64 * m.layers as f64)
+}
+
+/// FLOPs executed per byte of inter-device communication (→ Fig 2.8).
+pub fn flops_per_comm_byte(m: &ModelArch, kv_len: u64) -> f64 {
+    let f = super::flops::decode_flops_per_token(m, kv_len).value();
+    f / comm_bytes_per_token(m).value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::*;
+
+    #[test]
+    fn payload_tracks_hidden_size() {
+        // §2.1.3: transfer volume is primarily determined by hidden size.
+        let p_gpt2 = comm_bytes_per_token(&gpt2()).value() / gpt2().layers as f64;
+        let p_ds = comm_bytes_per_token(&deepseek_v3()).value() / deepseek_v3().layers as f64;
+        // DeepSeek hidden (7168) ≈ 9.3× GPT-2 (768); MoE doubles phases.
+        let ratio = p_ds / p_gpt2;
+        assert!(ratio > 15.0 && ratio < 22.0, "ratio={ratio:.1}");
+    }
+
+    #[test]
+    fn moe_models_have_lower_flops_per_comm_byte() {
+        // §2.1.3: "sparse MoE architectures in Qwen3 and DeepSeek-V3 yield
+        // significantly lower FLOPs per transfer byte compared to Grok1".
+        let grok = flops_per_comm_byte(&grok1(), 1024);
+        let qwen = flops_per_comm_byte(&qwen3_235b(), 1024);
+        let ds = flops_per_comm_byte(&deepseek_v3(), 1024);
+        assert!(qwen < grok, "qwen {qwen:.0} !< grok {grok:.0}");
+        assert!(ds < grok, "ds {ds:.0} !< grok {grok:.0}");
+    }
+
+    #[test]
+    fn dense_models_use_two_collectives_per_layer() {
+        assert_eq!(collectives_per_layer(&gpt3_175b()), 2);
+        assert_eq!(collectives_per_layer(&qwen3_235b()), 4);
+    }
+}

@@ -1,0 +1,181 @@
+//! FLOP arithmetic for prefill and decode (→ Fig 2.3, 2.4, 2.6).
+//!
+//! Matmul convention: a GEMM of M×K by K×N costs 2·M·K·N FLOPs. Per-token
+//! linear-layer cost is therefore 2 × (active parameters). Attention
+//! score/value products add 4·q_dim·context FLOPs per layer per token.
+
+use super::arch::ModelArch;
+use super::memory::active_param_count;
+use crate::units::Flops;
+
+/// Attention (QKᵀ + AV) FLOPs for one token attending over `context` keys.
+pub fn attn_flops_per_token(m: &ModelArch, context: u64) -> Flops {
+    // 2 GEMMs (scores, values), each 2 · q_dim · context FLOPs, per layer.
+    Flops::new(4.0 * m.q_dim() as f64 * context as f64 * m.layers as f64)
+}
+
+/// FLOPs to generate ONE token in decode with `kv_len` cached tokens.
+pub fn decode_flops_per_token(m: &ModelArch, kv_len: u64) -> Flops {
+    let linear = 2.0 * active_param_count(m) as f64;
+    Flops::new(linear) + attn_flops_per_token(m, kv_len)
+}
+
+/// FLOPs for a full prefill over a prompt of `prompt_len` tokens
+/// (single request; multiply by batch for a batched prefill).
+///
+/// Causal attention: token i attends to i keys, so the attention term sums
+/// to prompt_len·(prompt_len+1)/2 contexts.
+pub fn prefill_flops(m: &ModelArch, prompt_len: u64) -> Flops {
+    let linear = 2.0 * active_param_count(m) as f64 * prompt_len as f64;
+    let contexts = prompt_len as f64 * (prompt_len as f64 + 1.0) / 2.0;
+    let attn = 4.0 * m.q_dim() as f64 * contexts * m.layers as f64;
+    Flops::new(linear + attn)
+}
+
+/// Memory traffic (bytes) to generate one token in decode: every active
+/// parameter is read once, plus the KV cache of `kv_len` tokens, per
+/// `batch` tokens amortised (weights are read once per *step*, not per
+/// token — the paper's Byte-per-FLOP figure 2.6 uses batch=1 semantics
+/// unless stated).
+pub fn decode_bytes_per_step(m: &ModelArch, batch: u64, kv_len: u64) -> f64 {
+    // Weights: a batched decode step still reads each active weight once.
+    // For MoE, different tokens may route to different experts; with batch
+    // B and top-k routing over E experts the expected number of *distinct*
+    // activated experts per layer is E·(1 − (1 − k/E)^B).
+    let weights = distinct_active_param_count(m, batch) as f64 * m.weight_dtype.bytes();
+    let kv = super::memory::kv_bytes_per_token_per_layer(m).value()
+        * m.layers as f64
+        * kv_len as f64
+        * batch as f64;
+    weights + kv
+}
+
+/// Active parameters counted with batch-aware expert de-duplication.
+pub fn distinct_active_param_count(m: &ModelArch, batch: u64) -> u64 {
+    use super::arch::FeedForward;
+    match m.ffn {
+        FeedForward::Dense { .. } => active_param_count(m),
+        FeedForward::Moe {
+            experts,
+            top_k,
+            expert_intermediate,
+            shared_experts,
+            shared_intermediate,
+            gated,
+        } => {
+            let e = experts as f64;
+            let k = top_k as f64;
+            let b = batch as f64;
+            let distinct = e * (1.0 - (1.0 - k / e).powf(b));
+            let mats = if gated { 3.0 } else { 2.0 };
+            let expert_params = mats * m.hidden as f64 * expert_intermediate as f64;
+            let shared = shared_experts as f64
+                * mats
+                * m.hidden as f64
+                * shared_intermediate as f64;
+            let router = m.hidden as f64 * e;
+            let moe = m.moe_layers() as f64 * (distinct * expert_params + shared + router);
+            let attn = m.layers as u64 as f64 * super::memory::attn_params_per_layer(m) as f64;
+            let dense = m.dense_ffn_layers() as f64
+                * super::memory::dense_ffn_params_per_layer(m) as f64;
+            (attn + dense + moe) as u64
+        }
+    }
+}
+
+/// Byte-per-FLOP ratio for a decode step (→ Fig 2.6 decode bars).
+pub fn decode_byte_per_flop(m: &ModelArch, batch: u64, kv_len: u64) -> f64 {
+    let bytes = decode_bytes_per_step(m, batch, kv_len);
+    let flops = decode_flops_per_token(m, kv_len).value() * batch as f64;
+    bytes / flops
+}
+
+/// Byte-per-FLOP ratio for prefill (→ Fig 2.6 prefill bars).
+/// Weights are read once; activations/KV writes are second-order.
+pub fn prefill_byte_per_flop(m: &ModelArch, prompt_len: u64) -> f64 {
+    let bytes = super::memory::param_bytes(m).value();
+    let flops = prefill_flops(m, prompt_len).value();
+    bytes / flops
+}
+
+/// FLOPs-per-generated-token over model-memory-footprint ratio (→ Fig 2.4,
+/// FLOP per byte of model storage; the paper reports this falling ~10×
+/// from GPT-2 to DeepSeek-V3).
+pub fn compute_per_memory_ratio(m: &ModelArch, kv_len: u64) -> f64 {
+    decode_flops_per_token(m, kv_len).value() / super::memory::param_bytes(m).value()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::*;
+
+    #[test]
+    fn decode_flops_approx_2x_active_params() {
+        // With a short context, linear terms dominate: ≈ 2 · active.
+        let m = gpt3_175b();
+        let f = decode_flops_per_token(&m, 1).value();
+        let expected = 2.0 * 175e9;
+        assert!((f - expected).abs() / expected < 0.05, "f={f:.3e}");
+    }
+
+    #[test]
+    fn moe_decode_flops_stay_flat_despite_param_growth() {
+        // §2.1.1 Trend 2: FLOPs/token stabilise or decline after GPT-3.
+        let dense = decode_flops_per_token(&gpt3_175b(), 1024).value();
+        let qwen = decode_flops_per_token(&qwen3_235b(), 1024).value();
+        let ds = decode_flops_per_token(&deepseek_v3(), 1024).value();
+        assert!(qwen < dense, "qwen3 FLOPs/token should be below GPT-3");
+        assert!(ds < dense, "deepseek FLOPs/token should be below GPT-3");
+    }
+
+    #[test]
+    fn fig24_ratio_drops_order_of_magnitude_gpt2_to_dsv3() {
+        let r_gpt2 = compute_per_memory_ratio(&gpt2(), 1024);
+        let r_ds = compute_per_memory_ratio(&deepseek_v3(), 1024);
+        let drop = r_gpt2 / r_ds;
+        assert!(drop > 5.0, "compute/memory ratio drop only {drop:.1}×");
+    }
+
+    #[test]
+    fn prefill_flops_scale_quadratically_in_attention_term() {
+        let m = gpt2();
+        let f1 = prefill_flops(&m, 1024).value();
+        let f2 = prefill_flops(&m, 2048).value();
+        // Strictly more than linear scaling.
+        assert!(f2 > 2.0 * f1);
+        assert!(f2 < 4.5 * f1);
+    }
+
+    #[test]
+    fn decode_is_much_more_memory_bound_than_prefill() {
+        // §2.1.2: Qwen3 decode Byte/FLOP ≈ 100× prefill.
+        let m = qwen3_235b();
+        let d = decode_byte_per_flop(&m, 1, 4096);
+        let p = prefill_byte_per_flop(&m, 4096);
+        let ratio = d / p;
+        assert!(ratio > 50.0, "decode/prefill byte-per-flop ratio {ratio:.0}×");
+    }
+
+    #[test]
+    fn distinct_experts_saturate_with_batch() {
+        let m = qwen3_235b();
+        let b1 = distinct_active_param_count(&m, 1);
+        let b64 = distinct_active_param_count(&m, 64);
+        let all = crate::models::memory::param_count(&m);
+        assert!(b1 < b64, "more batch → more distinct experts");
+        assert!(b64 < all, "never exceeds total");
+        // Huge batches touch essentially every expert.
+        let b4096 = distinct_active_param_count(&m, 4096) as f64;
+        assert!(b4096 > 0.95 * (all - m.vocab * m.hidden) as f64);
+    }
+
+    #[test]
+    fn grok_distinct_experts_small_batch() {
+        // Grok-1: 8 experts top-2; batch 8 activates E(1-(1-1/4)^8) ≈ 7.2.
+        let m = grok1();
+        let d = distinct_active_param_count(&m, 8) as f64;
+        let total = crate::models::memory::param_count(&m) as f64;
+        assert!(d / total > 0.85, "grok batch-8 touches most weights: {}", d / total);
+    }
+}

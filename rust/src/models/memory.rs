@@ -1,0 +1,227 @@
+//! Parameter-count and memory-footprint arithmetic (→ Fig 2.1, Fig 2.4).
+//!
+//! All quantities derive from [`ModelArch`]; cross-checked against the
+//! published totals (175B / 314B / 235B / 671B) in the unit tests.
+
+use super::arch::{Attention, FeedForward, ModelArch};
+use crate::units::Bytes;
+
+/// Attention parameters in one layer (Q, K, V, O projections).
+///
+/// MLA is approximated as: joint KV down-projection (hidden → rank+rope),
+/// K/V up-projections (rank → q_dim each), plus full Q and O projections.
+/// This slightly over-counts DeepSeek-V3's low-rank Q path (~0.5% of total).
+pub fn attn_params_per_layer(m: &ModelArch) -> u64 {
+    let h = m.hidden;
+    let q = m.q_dim();
+    match m.attention {
+        Attention::Mha | Attention::Gqa { .. } => {
+            let kv = m.kv_dim();
+            h * q + 2 * h * kv + q * h
+        }
+        Attention::Mla { kv_lora_rank, rope_head_dim } => {
+            let rank = kv_lora_rank as u64;
+            let down = h * (rank + rope_head_dim as u64);
+            let up = 2 * rank * q;
+            h * q + down + up + q * h
+        }
+    }
+}
+
+/// Dense-FFN parameters for the given intermediate size.
+fn dense_ffn_params(hidden: u64, intermediate: u64, gated: bool) -> u64 {
+    let mats = if gated { 3 } else { 2 };
+    mats * hidden * intermediate
+}
+
+/// FFN parameters in one *MoE* layer (all experts + router + shared).
+pub fn moe_ffn_params_per_layer(m: &ModelArch) -> u64 {
+    match m.ffn {
+        FeedForward::Dense { .. } => 0,
+        FeedForward::Moe {
+            experts,
+            expert_intermediate,
+            shared_experts,
+            shared_intermediate,
+            gated,
+            ..
+        } => {
+            let router = m.hidden * experts as u64;
+            experts as u64 * dense_ffn_params(m.hidden, expert_intermediate, gated)
+                + shared_experts as u64 * dense_ffn_params(m.hidden, shared_intermediate, gated)
+                + router
+        }
+    }
+}
+
+/// FFN parameters in one layer with a *dense* FFN. For MoE models with a
+/// dense prefix (DeepSeek-V3) the prefix FFN intermediate is approximated
+/// as 4·hidden, gated (documented in DESIGN.md; <0.1% of total).
+pub fn dense_ffn_params_per_layer(m: &ModelArch) -> u64 {
+    match m.ffn {
+        FeedForward::Dense { intermediate, gated } => {
+            dense_ffn_params(m.hidden, intermediate, gated)
+        }
+        FeedForward::Moe { .. } => dense_ffn_params(m.hidden, 4 * m.hidden, true),
+    }
+}
+
+/// Total parameter count (embeddings counted once — tied head).
+pub fn param_count(m: &ModelArch) -> u64 {
+    let attn = m.layers as u64 * attn_params_per_layer(m);
+    let moe = m.moe_layers() as u64 * moe_ffn_params_per_layer(m);
+    let dense = m.dense_ffn_layers() as u64 * dense_ffn_params_per_layer(m);
+    let embed = m.vocab * m.hidden;
+    attn + moe + dense + embed
+}
+
+/// Parameters touched when generating one token (MoE: only routed experts).
+pub fn active_param_count(m: &ModelArch) -> u64 {
+    let attn = m.layers as u64 * attn_params_per_layer(m);
+    let dense = m.dense_ffn_layers() as u64 * dense_ffn_params_per_layer(m);
+    let moe_active = match m.ffn {
+        FeedForward::Dense { .. } => 0,
+        FeedForward::Moe {
+            top_k,
+            expert_intermediate,
+            shared_experts,
+            shared_intermediate,
+            gated,
+            experts,
+            ..
+        } => {
+            let router = m.hidden * experts as u64;
+            m.moe_layers() as u64
+                * (top_k as u64 * dense_ffn_params(m.hidden, expert_intermediate, gated)
+                    + shared_experts as u64
+                        * dense_ffn_params(m.hidden, shared_intermediate, gated)
+                    + router)
+        }
+    };
+    let embed = m.hidden; // one row of the embedding table
+    attn + dense + moe_active + embed
+}
+
+/// Bytes of weight storage at the model's deployment precision.
+pub fn param_bytes(m: &ModelArch) -> Bytes {
+    Bytes::new(param_count(m) as f64 * m.weight_dtype.bytes())
+}
+
+/// KV-cache bytes *per token per layer*.
+pub fn kv_bytes_per_token_per_layer(m: &ModelArch) -> Bytes {
+    let elems = match m.attention {
+        Attention::Mha | Attention::Gqa { .. } => 2 * m.kv_dim(),
+        // MLA stores the joint compressed latent + RoPE key once (not 2×).
+        Attention::Mla { kv_lora_rank, rope_head_dim } => {
+            (kv_lora_rank + rope_head_dim) as u64
+        }
+    };
+    Bytes::new(elems as f64 * m.kv_dtype.bytes())
+}
+
+/// KV-cache bytes for a full batch at the given per-request sequence length.
+pub fn kv_cache_bytes(m: &ModelArch, batch: u64, seq_len: u64) -> Bytes {
+    kv_bytes_per_token_per_layer(m) * (m.layers as u64 * batch * seq_len) as f64
+}
+
+/// Total inference memory requirement: weights + KV cache (→ Fig 2.1).
+pub fn inference_memory(m: &ModelArch, batch: u64, seq_len: u64) -> Bytes {
+    param_bytes(m) + kv_cache_bytes(m, batch, seq_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::*;
+
+    fn close(actual: f64, expected: f64, tol_frac: f64) -> bool {
+        (actual - expected).abs() <= expected * tol_frac
+    }
+
+    #[test]
+    fn gpt3_has_175b_params() {
+        let n = param_count(&gpt3_175b()) as f64;
+        assert!(close(n, 175e9, 0.02), "gpt3 params {n:.3e}");
+    }
+
+    #[test]
+    fn grok1_has_314b_params() {
+        let n = param_count(&grok1()) as f64;
+        assert!(close(n, 314e9, 0.03), "grok1 params {n:.3e}");
+    }
+
+    #[test]
+    fn qwen3_has_235b_params() {
+        let n = param_count(&qwen3_235b()) as f64;
+        assert!(close(n, 235e9, 0.03), "qwen3 params {n:.3e}");
+    }
+
+    #[test]
+    fn deepseek_has_671b_params() {
+        let n = param_count(&deepseek_v3()) as f64;
+        assert!(close(n, 671e9, 0.04), "dsv3 params {n:.3e}");
+    }
+
+    #[test]
+    fn qwen3_active_is_22b() {
+        // Qwen3-235B-A22B: ~22B active per token.
+        let n = active_param_count(&qwen3_235b()) as f64;
+        assert!(close(n, 22e9, 0.10), "qwen3 active {n:.3e}");
+    }
+
+    #[test]
+    fn deepseek_active_is_37b() {
+        let n = active_param_count(&deepseek_v3()) as f64;
+        assert!(close(n, 37e9, 0.15), "dsv3 active {n:.3e}");
+    }
+
+    #[test]
+    fn paper_claim_gpt3_fp16_storage() {
+        // §2.1.1: "a 671B-parameter model in FP16 requiring over 1.34 TB".
+        let mut ds = deepseek_v3();
+        ds.weight_dtype = crate::units::Dtype::F16;
+        assert!(param_bytes(&ds).as_gb() > 1340.0);
+        // FP8 halves it.
+        assert!(param_bytes(&deepseek_v3()).as_gb() < 700.0);
+    }
+
+    #[test]
+    fn mla_compresses_kv_by_order_of_magnitude() {
+        // §2.1.1: MLA reduces KV footprint up to ~10× vs conventional MHA.
+        let ds = deepseek_v3();
+        let mla = kv_bytes_per_token_per_layer(&ds).value();
+        let mut mha = ds.clone();
+        mha.attention = Attention::Mha;
+        let full = kv_bytes_per_token_per_layer(&mha).value();
+        let ratio = full / mla;
+        assert!(ratio > 8.0, "MLA compression only {ratio:.1}×");
+    }
+
+    #[test]
+    fn kv_scales_linearly_with_batch_and_seq() {
+        let m = qwen3_235b();
+        let base = kv_cache_bytes(&m, 1, 1024).value();
+        assert_eq!(kv_cache_bytes(&m, 16, 1024).value(), base * 16.0);
+        assert_eq!(kv_cache_bytes(&m, 1, 4096).value(), base * 4.0);
+    }
+
+    #[test]
+    fn active_leq_total() {
+        for m in trend_models() {
+            assert!(
+                active_param_count(&m) <= param_count(&m),
+                "{}: active > total",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn deepseek_leaves_most_params_inactive() {
+        // §2.1.2: "models such as DeepSeek-V3 leave up to 95% of parameters
+        // inactive during inference".
+        let m = deepseek_v3();
+        let frac = active_param_count(&m) as f64 / param_count(&m) as f64;
+        assert!(frac < 0.08, "active fraction {frac:.3}");
+    }
+}

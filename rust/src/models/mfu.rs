@@ -1,0 +1,174 @@
+//! Hardware-efficiency curves (→ Fig 2.2) and calibration knobs.
+//!
+//! The paper's simulator replays *measured* Nsight kernel timings, which
+//! embed the real-world efficiency of small-batch tensor-parallel serving
+//! (MFU well below peak, memory bandwidth utilisation dependent on shard
+//! size, link efficiency dependent on message size). We replace those
+//! traces with explicit, documented efficiency curves:
+//!
+//! * `mfu(tokens, shard_cols)` — Model FLOPs Utilisation of a GEMM with M =
+//!   `tokens` rows and per-GPU output width `shard_cols`. Saturating in both
+//!   axes; reproduces the Fig 2.2 "MFU rises with batch size" curve and the
+//!   tensor-parallel sharding penalty (smaller per-GPU matrices utilise the
+//!   MXU/tensor cores worse).
+//! * `mem_eff(bytes)` — achieved fraction of peak DRAM bandwidth for a
+//!   kernel streaming `bytes` from memory. Small shards pay fixed kernel
+//!   and DRAM-page overheads; large streams approach `MEM_EFF_MAX`.
+//! * `link_eff(bytes, bw)` — Eq 4.1's `Efficiency(Tensor Size)`: effective
+//!   fraction of link bandwidth for a transfer, with a latency-dominated
+//!   ramp ("larger tensor sizes achieve higher effective bandwidth and
+//!   exhibit reduced latency dominance").
+//!
+//! Every constant here is a calibration knob listed in DESIGN.md §5.
+
+use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// Peak achievable MFU for a well-shaped dense GEMM (FlashAttention-3 era).
+pub const MFU_MAX: f64 = 0.65;
+/// Tokens at which the batch axis reaches half of `MFU_MAX`.
+pub const MFU_TOKENS_HALF: f64 = 64.0;
+/// Per-GPU output-columns at which the shard axis reaches half saturation.
+pub const MFU_COLS_HALF: f64 = 1536.0;
+
+/// Peak achieved fraction of DRAM bandwidth for a streaming kernel.
+pub const MEM_EFF_MAX: f64 = 0.82;
+/// Stream size at which memory efficiency reaches half of max.
+pub const MEM_EFF_HALF: Bytes = Bytes(96.0 * 1024.0 * 1024.0);
+
+/// Peak link efficiency (fraction of line rate) for bulk transfers.
+pub const LINK_EFF_MAX: f64 = 0.95;
+/// Latency-equivalent ramp time of a link transfer (Eq 4.1 shaping).
+pub const LINK_RAMP: Seconds = Seconds(5.0e-6);
+
+/// Local-memory efficiency of FengHuang kernels. The FH local tier is a
+/// *paging cache*: the Tensor Prefetcher stages each kernel's working set
+/// contiguously, so kernel reads are long sequential streams ("local
+/// memory … capacity and bandwidth are tuned to workload characteristics
+/// for efficient caching and computation", §3.1) rather than the scattered
+/// per-shard access of a conventional resident layout.
+pub const FH_LOCAL_STREAM_EFF: f64 = 0.85;
+
+/// Efficiency of direct SM reads of the KV stream from remote memory
+/// (§3.1: remote tensors can be "accessed by the SMs through the caching
+/// hierarchy" without staging in local memory). Bulk sequential stream on
+/// a dedicated virtual channel.
+pub const FH_KV_STREAM_EFF: f64 = 0.90;
+
+/// Framework-level inefficiency multiplier applied to the *baseline*
+/// (shared-nothing NVLink) system's kernel times. Represents the measured
+/// overheads the paper's Nsight traces embed — kernel-launch gaps,
+/// synchronization with NCCL streams, scheduler bubbles — which published
+/// TP-8 small-batch serving measurements consistently show (30–45% MFU,
+/// 40–55% MBU). FengHuang's execution model instead pays its overheads
+/// explicitly through the prefetch/paging simulation, per the paper's own
+/// methodology (§4.1.3). Calibration knob; see DESIGN.md §5 and the
+/// EXPERIMENTS.md sensitivity ablation.
+pub const BASELINE_FRAMEWORK_OVERHEAD: f64 = 1.45;
+
+/// Model FLOPs Utilisation for a GEMM with `tokens` rows on a shard with
+/// `shard_cols` output columns (→ Fig 2.2).
+pub fn mfu(tokens: f64, shard_cols: f64) -> f64 {
+    debug_assert!(tokens >= 0.0 && shard_cols >= 0.0);
+    let batch_axis = tokens / (tokens + MFU_TOKENS_HALF);
+    let shard_axis = shard_cols / (shard_cols + MFU_COLS_HALF);
+    MFU_MAX * batch_axis * shard_axis
+}
+
+/// Achieved fraction of peak DRAM bandwidth for a kernel streaming `bytes`.
+pub fn mem_eff(bytes: Bytes) -> f64 {
+    debug_assert!(bytes.value() >= 0.0);
+    MEM_EFF_MAX * bytes.value() / (bytes.value() + MEM_EFF_HALF.value())
+}
+
+/// Eq 4.1 link efficiency: fraction of `bw` achieved when moving `bytes`.
+pub fn link_eff(bytes: Bytes, bw: Bandwidth) -> f64 {
+    debug_assert!(bytes.value() >= 0.0);
+    let ramp_bytes = bw.value() * LINK_RAMP.value();
+    LINK_EFF_MAX * bytes.value() / (bytes.value() + ramp_bytes)
+}
+
+/// Effective transfer time under Eq 4.1:
+/// `tensor_size / (bandwidth × Efficiency(tensor_size))`.
+pub fn transfer_time(bytes: Bytes, bw: Bandwidth) -> Seconds {
+    if bytes.value() <= 0.0 {
+        return Seconds::ZERO;
+    }
+    let eff = link_eff(bytes, bw);
+    Seconds(bytes.value() / (bw.value() * eff))
+}
+
+/// The Fig 2.2 series: MFU at the paper's plotted batch sizes for a decode
+/// step (GEMM M = batch) on an unsharded model.
+pub fn fig22_mfu_vs_batch(hidden: u64) -> Vec<(u64, f64)> {
+    [1u64, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024]
+        .iter()
+        .map(|&b| (b, mfu(b as f64, hidden as f64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mfu_monotone_in_batch() {
+        let series = fig22_mfu_vs_batch(12288);
+        for w in series.windows(2) {
+            assert!(w[1].1 > w[0].1, "MFU must rise with batch: {series:?}");
+        }
+    }
+
+    #[test]
+    fn mfu_small_batch_is_poor_large_batch_is_decent() {
+        // Fig 2.2 shape: single-token decode MFU is a few percent; large
+        // batches reach tens of percent.
+        assert!(mfu(1.0, 12288.0) < 0.02);
+        assert!(mfu(1024.0, 12288.0) > 0.5);
+    }
+
+    #[test]
+    fn mfu_penalises_tensor_parallel_sharding() {
+        let full = mfu(4096.0, 49152.0);
+        let tp8 = mfu(4096.0, 49152.0 / 8.0);
+        assert!(tp8 < full);
+        assert!(tp8 > 0.5 * full, "penalty should be moderate, not cliff");
+    }
+
+    #[test]
+    fn mem_eff_saturates() {
+        assert!(mem_eff(Bytes::mib(1.0)) < 0.01);
+        assert!(mem_eff(Bytes::gib(1.0)) > 0.7);
+        assert!(mem_eff(Bytes::gib(64.0)) <= MEM_EFF_MAX);
+    }
+
+    #[test]
+    fn link_eff_matches_eq41_shape() {
+        let bw = Bandwidth::tbps(4.0);
+        // 2 KB transfer: latency dominated.
+        let small = link_eff(Bytes::kib(2.0), bw);
+        // 1 GB transfer: near line rate.
+        let large = link_eff(Bytes::gib(1.0), bw);
+        assert!(small < 0.001, "small={small}");
+        assert!(large > 0.9, "large={large}");
+    }
+
+    #[test]
+    fn transfer_time_includes_ramp() {
+        let bw = Bandwidth::tbps(4.0);
+        let t = transfer_time(Bytes::gb(4.0), bw);
+        // Ideal would be 1 ms; with eff ≤ 0.95 it must exceed 1.05 ms.
+        assert!(t.as_ms() > 1.05 && t.as_ms() < 1.3, "t={}", t.as_ms());
+        assert_eq!(transfer_time(Bytes::ZERO, bw), Seconds::ZERO);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_size() {
+        let bw = Bandwidth::tbps(4.0);
+        let mut prev = Seconds::ZERO;
+        for mb in [1.0, 4.0, 16.0, 64.0, 256.0, 1024.0] {
+            let t = transfer_time(Bytes::mib(mb), bw);
+            assert!(t > prev);
+            prev = t;
+        }
+    }
+}

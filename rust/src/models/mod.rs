@@ -1,0 +1,14 @@
+//! Analytical LLM model library.
+//!
+//! Architecture descriptors ([`arch`]), memory footprints ([`memory`]),
+//! FLOP counts ([`flops`]), tensor-parallel communication volumes
+//! ([`comm`]) and hardware-efficiency curves ([`mfu`]). Together these
+//! replace the Nsight profiling traces used by the paper's simulator.
+
+pub mod arch;
+pub mod comm;
+pub mod flops;
+pub mod memory;
+pub mod mfu;
+
+pub use arch::{Attention, FeedForward, ModelArch};

@@ -1,0 +1,189 @@
+//! Artifact bundle loader: manifest.txt + params.bin + meta.txt.
+//!
+//! `python -m compile.aot` writes a flat f32-LE parameter blob and a
+//! manifest mapping tensor names to (offset, shape). This loader memory-
+//! maps... — reads — the blob once and hands out shaped slices to the
+//! serving engine.
+
+use crate::error::{FhError, Result};
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// One tensor's location in the blob.
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    /// Offset in f32 elements.
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl TensorEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Model/config scalars from meta.txt.
+#[derive(Debug, Clone, Default)]
+pub struct Meta {
+    pub vocab: usize,
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub tp: usize,
+    pub writeacc_lanes: usize,
+    pub param_count: usize,
+}
+
+/// The loaded artifact bundle.
+pub struct Bundle {
+    pub dir: PathBuf,
+    pub meta: Meta,
+    blob: Vec<f32>,
+    index: HashMap<String, TensorEntry>,
+    order: Vec<String>,
+}
+
+impl Bundle {
+    /// Load `manifest.txt`, `params.bin` and `meta.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut index = HashMap::new();
+        let mut order = Vec::new();
+        for (lineno, line) in manifest.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 2 {
+                return Err(FhError::Config(format!(
+                    "manifest line {}: expected `name offset shape...`",
+                    lineno + 1
+                )));
+            }
+            let entry = TensorEntry {
+                name: parts[0].to_string(),
+                offset: parts[1]
+                    .parse()
+                    .map_err(|e| FhError::Config(format!("manifest offset: {e}")))?,
+                shape: parts[2..]
+                    .iter()
+                    .map(|s| s.parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| FhError::Config(format!("manifest shape: {e}")))?,
+            };
+            order.push(entry.name.clone());
+            index.insert(entry.name.clone(), entry);
+        }
+
+        let mut raw = Vec::new();
+        std::fs::File::open(dir.join("params.bin"))?.read_to_end(&mut raw)?;
+        if raw.len() % 4 != 0 {
+            return Err(FhError::Config("params.bin length not a multiple of 4".into()));
+        }
+        let blob: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        let expected: usize = index.values().map(|e| e.numel()).sum();
+        if expected != blob.len() {
+            return Err(FhError::Config(format!(
+                "params.bin has {} elements, manifest expects {expected}",
+                blob.len()
+            )));
+        }
+
+        let meta_s = std::fs::read_to_string(dir.join("meta.txt"))?;
+        let kv: HashMap<&str, &str> =
+            meta_s.lines().filter_map(|l| l.split_once(' ')).collect();
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| FhError::Config(format!("meta.txt missing '{k}'")))?
+                .trim()
+                .parse()
+                .map_err(|e| FhError::Config(format!("meta {k}: {e}")))
+        };
+        let meta = Meta {
+            vocab: get("vocab")?,
+            layers: get("layers")?,
+            hidden: get("hidden")?,
+            heads: get("heads")?,
+            ffn: get("ffn")?,
+            batch: get("batch")?,
+            seq: get("seq")?,
+            tp: get("tp")?,
+            writeacc_lanes: get("writeacc_lanes")?,
+            param_count: get("param_count")?,
+        };
+
+        Ok(Bundle { dir: dir.to_path_buf(), meta, blob, index, order })
+    }
+
+    /// Default artifact directory (repo-root `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn tensor_names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&TensorEntry> {
+        self.index
+            .get(name)
+            .ok_or_else(|| FhError::Config(format!("unknown tensor '{name}'")))
+    }
+
+    /// Raw f32 view of a tensor.
+    pub fn tensor(&self, name: &str) -> Result<&[f32]> {
+        let e = self.entry(name)?;
+        Ok(&self.blob[e.offset..e.offset + e.numel()])
+    }
+
+    /// Tensor as a shaped PJRT literal.
+    pub fn literal(&self, name: &str) -> Result<xla::Literal> {
+        let e = self.entry(name)?;
+        super::literal_f32(self.tensor(name)?, &e.dims_i64())
+    }
+
+    /// Path of an HLO artifact in this bundle.
+    pub fn hlo_path(&self, stem: &str) -> PathBuf {
+        self.dir.join(format!("{stem}.hlo.txt"))
+    }
+
+    /// Names of a full layer's tensors in the lowering's argument order.
+    pub fn layer_tensor_names(layer: usize) -> Vec<String> {
+        ["norm1", "norm2", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+            .iter()
+            .map(|k| format!("layers.{layer}.{k}"))
+            .collect()
+    }
+
+    /// Names of a shard's tensors in the shard HLO's argument order.
+    pub fn shard_tensor_names(layer: usize, rank: usize) -> Vec<String> {
+        ["norm1", "norm2", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+            .iter()
+            .map(|k| format!("shard.{layer}.r{rank}.{k}"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_and_shard_name_order() {
+        let names = Bundle::layer_tensor_names(2);
+        assert_eq!(names[0], "layers.2.norm1");
+        assert_eq!(names[8], "layers.2.wd");
+        let s = Bundle::shard_tensor_names(0, 3);
+        assert_eq!(s[2], "shard.0.r3.wq");
+    }
+
+    // Loading tests against the real bundle live in rust/tests/.
+}

@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path.
+//!
+//! Python/JAX runs once at build time (`make artifacts`); this module is
+//! the only bridge at serve time: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
+//! the interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos — see /opt/xla-example/README.md).
+
+pub mod artifacts;
+
+use crate::error::{FhError, Result};
+use std::path::Path;
+
+fn rt_err<E: std::fmt::Display>(ctx: String) -> impl FnOnce(E) -> FhError {
+    move |e| FhError::Runtime(format!("{ctx}: {e}"))
+}
+
+/// A PJRT client (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu".into()))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(rt_err(format!("parse {}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(rt_err(format!("compile {}", path.display())))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened tuple of
+    /// outputs (jax.jit lowering uses `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(rt_err(format!("execute {}", self.name)))?;
+        let literal = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| FhError::Runtime(format!("{}: empty result", self.name)))?
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync".into()))?;
+        literal.to_tuple().map_err(rt_err("to_tuple".into()))
+    }
+
+    /// Execute with borrowed inputs (avoids cloning cached weight
+    /// literals on the hot path); returns the flattened output tuple.
+    pub fn run_refs(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(rt_err(format!("execute {}", self.name)))?;
+        let literal = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| FhError::Runtime(format!("{}: empty result", self.name)))?
+            .to_literal_sync()
+            .map_err(rt_err("to_literal_sync".into()))?;
+        literal.to_tuple().map_err(rt_err("to_tuple".into()))
+    }
+
+    /// Execute and return the single output.
+    pub fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut outs = self.run(inputs)?;
+        if outs.len() != 1 {
+            return Err(FhError::Runtime(format!(
+                "{}: expected 1 output, got {}",
+                self.name,
+                outs.len()
+            )));
+        }
+        Ok(outs.pop().unwrap())
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected as usize != data.len() {
+        return Err(FhError::Runtime(format!(
+            "literal shape {dims:?} needs {expected} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(rt_err("reshape".into()))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected as usize != data.len() {
+        return Err(FhError::Runtime(format!(
+            "literal shape {dims:?} needs {expected} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(rt_err("reshape".into()))
+}
+
+/// Extract a literal's data as `Vec<f32>`.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(rt_err("to_vec::<f32>".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0; 5], &[2, 3]).is_err());
+        assert!(literal_i32(&[1; 7], &[2, 3]).is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_e2e.rs (they need the
+    // artifacts/ directory built by `make artifacts`).
+}

@@ -1,0 +1,56 @@
+//! Eq 4.1 — prefetching overhead with size-dependent link efficiency.
+//!
+//! "To more accurately model prefetching overhead, we apply a scaling
+//! coefficient to the theoretical remote memory bandwidth, similar to
+//! empirical NVLink behavior. In particular, larger tensor sizes achieve
+//! higher effective bandwidth and exhibit reduced latency dominance."
+//!
+//! The shaping curve lives in [`crate::models::mfu`]; this module gives it
+//! the paper's Eq 4.1 name and adds the fixed TAB read latency (Table 3.1)
+//! that bounds small transfers.
+
+use crate::fabric::FabricLatencies;
+use crate::models::mfu;
+use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// Eq 4.1: `Tensor Size / (Remote Memory Bandwidth × Efficiency(Size))`,
+/// plus the fixed TAB read latency for the initiating command.
+pub fn prefetch_overhead(tensor: Bytes, remote_bw: Bandwidth, lat: &FabricLatencies) -> Seconds {
+    if tensor.value() <= 0.0 {
+        return Seconds::ZERO;
+    }
+    lat.tab_read + mfu::transfer_time(tensor, remote_bw)
+}
+
+/// Effective bandwidth achieved for a transfer of `tensor` (reported by
+/// the ablation benches).
+pub fn effective_bandwidth(tensor: Bytes, remote_bw: Bandwidth) -> Bandwidth {
+    remote_bw * mfu::link_eff(tensor, remote_bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn larger_tensors_get_higher_effective_bandwidth() {
+        let bw = Bandwidth::tbps(4.0);
+        let small = effective_bandwidth(Bytes::mib(1.0), bw);
+        let large = effective_bandwidth(Bytes::gib(1.0), bw);
+        assert!(large.value() > small.value() * 5.0);
+        assert!(large.value() < bw.value(), "never exceeds line rate");
+    }
+
+    #[test]
+    fn zero_tensor_is_free() {
+        let lat = FabricLatencies::default();
+        assert_eq!(prefetch_overhead(Bytes::ZERO, Bandwidth::tbps(4.0), &lat), Seconds::ZERO);
+    }
+
+    #[test]
+    fn overhead_includes_fixed_read_latency() {
+        let lat = FabricLatencies::default();
+        let t = prefetch_overhead(Bytes::new(64.0), Bandwidth::tbps(4.0), &lat);
+        assert!(t.as_ns() >= 220.0);
+    }
+}

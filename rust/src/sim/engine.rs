@@ -1,0 +1,154 @@
+//! Two-stream timeline engine.
+//!
+//! The paper's execution model (§3.2): a **Regular Stream** executes
+//! kernels in program order while a **Paging Stream** prefetches each op's
+//! remote working set ahead of use (lookahead *w*; the paper evaluates
+//! w = 1 — "each node initiates prefetching for its immediate successor").
+//!
+//! The schedule is the fixed-point of three constraints:
+//!
+//! 1. the paging stream is serial (one DMA at a time);
+//! 2. the prefetch for op *k* may not be issued before op *k − w* has
+//!    *started* computing (that is what a lookahead-w window means —
+//!    the prefetcher only sees w ops ahead of the op currently entering
+//!    execution);
+//! 3. op *k* may not start before its prefetch completed and op *k − 1*
+//!    finished.
+//!
+//! Because dependencies only point backwards, a single forward pass
+//! computes the exact schedule in O(n).
+
+use crate::units::Seconds;
+
+/// Computed schedule for one op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpSchedule {
+    /// When the paging stream began fetching this op's working set.
+    pub fetch_start: Seconds,
+    /// When the working set became resident.
+    pub fetch_done: Seconds,
+    /// When the regular stream began executing the op.
+    pub start: Seconds,
+    /// When the op finished.
+    pub end: Seconds,
+    /// Stall attributable to prefetch (op was ready to run but waited on
+    /// the paging stream).
+    pub exposed: Seconds,
+}
+
+/// Compute the two-stream schedule.
+///
+/// `fetch[k]` is the prefetch duration of op k's remote working set (zero
+/// if nothing is remote); `run[k]` is the op's execution time once
+/// resident; `window` is the lookahead w ≥ 1.
+pub fn schedule(fetch: &[Seconds], run: &[Seconds], window: usize) -> Vec<OpSchedule> {
+    assert_eq!(fetch.len(), run.len());
+    assert!(window >= 1, "lookahead window must be ≥ 1");
+    let n = fetch.len();
+    let mut out = Vec::with_capacity(n);
+    let mut paging_free = Seconds::ZERO;
+    let mut compute_free = Seconds::ZERO;
+    let mut starts: Vec<Seconds> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Constraint 2: window gate.
+        let gate = if k >= window { starts[k - window] } else { Seconds::ZERO };
+        // Constraint 1: serial paging stream.
+        let fetch_start = paging_free.max(gate);
+        let fetch_done = fetch_start + fetch[k];
+        paging_free = fetch_done;
+        // Constraint 3: both predecessor-done and residency.
+        let start = compute_free.max(fetch_done);
+        let exposed = start - compute_free;
+        let end = start + run[k];
+        compute_free = end;
+        starts.push(start);
+        out.push(OpSchedule { fetch_start, fetch_done, start, end, exposed });
+    }
+    out
+}
+
+/// Total runtime of a schedule.
+pub fn makespan(sched: &[OpSchedule]) -> Seconds {
+    sched.last().map(|s| s.end).unwrap_or(Seconds::ZERO)
+}
+
+/// Total prefetch-exposed stall.
+pub fn total_exposed(sched: &[OpSchedule]) -> Seconds {
+    sched.iter().map(|s| s.exposed).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: f64) -> Seconds {
+        Seconds::new(v)
+    }
+
+    #[test]
+    fn fully_hidden_prefetch() {
+        // Long compute, short fetches: makespan = fetch[0] + Σ run.
+        let fetch = vec![s(1.0); 4];
+        let run = vec![s(10.0); 4];
+        let sched = schedule(&fetch, &run, 1);
+        assert_eq!(makespan(&sched), s(1.0 + 40.0));
+        // Only the first op's fetch is exposed (cold start).
+        assert_eq!(total_exposed(&sched), s(1.0));
+    }
+
+    #[test]
+    fn prefetch_bound_pipeline() {
+        // Fetches dominate: makespan ≈ Σ fetch + last run.
+        let fetch = vec![s(10.0); 4];
+        let run = vec![s(1.0); 4];
+        let sched = schedule(&fetch, &run, 1);
+        assert_eq!(makespan(&sched), s(40.0 + 1.0));
+        assert_eq!(total_exposed(&sched), s(40.0 - 3.0)); // run overlap hides 3
+    }
+
+    #[test]
+    fn window_gate_limits_lookahead() {
+        // With w=1, fetch k may not start before op k−1 starts. First op
+        // starts at fetch[0]=10; so fetch[1] starts at 10, not 0.
+        let fetch = vec![s(10.0), s(10.0)];
+        let run = vec![s(1.0), s(1.0)];
+        let sched = schedule(&fetch, &run, 1);
+        assert_eq!(sched[1].fetch_start, s(10.0));
+        assert_eq!(sched[1].start, s(20.0));
+    }
+
+    #[test]
+    fn wider_window_reduces_makespan_when_fetches_vary() {
+        // A large fetch late in the trace benefits from an earlier issue.
+        let fetch = vec![s(0.0), s(1.0), s(1.0), s(30.0), s(0.0)];
+        let run = vec![s(10.0), s(10.0), s(10.0), s(1.0), s(1.0)];
+        let w1 = makespan(&schedule(&fetch, &run, 1));
+        let w3 = makespan(&schedule(&fetch, &run, 3));
+        assert!(w3 < w1, "w=3 {w3:?} should beat w=1 {w1:?}");
+    }
+
+    #[test]
+    fn zero_fetch_ops_run_back_to_back() {
+        let fetch = vec![Seconds::ZERO; 5];
+        let run = vec![s(2.0); 5];
+        let sched = schedule(&fetch, &run, 1);
+        assert_eq!(makespan(&sched), s(10.0));
+        assert_eq!(total_exposed(&sched), Seconds::ZERO);
+        for (i, os) in sched.iter().enumerate() {
+            assert_eq!(os.start, s(2.0 * i as f64));
+        }
+    }
+
+    #[test]
+    fn monotone_nonoverlapping_compute() {
+        let fetch: Vec<_> = (0..20).map(|i| s((i % 3) as f64)).collect();
+        let run: Vec<_> = (0..20).map(|i| s((i % 5) as f64 + 0.5)).collect();
+        let sched = schedule(&fetch, &run, 2);
+        for w in sched.windows(2) {
+            assert!(w[1].start >= w[0].end, "regular stream must be serial");
+        }
+        for os in &sched {
+            assert!(os.fetch_done <= os.start, "op must wait for residency");
+        }
+    }
+}

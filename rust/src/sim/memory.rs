@@ -1,0 +1,142 @@
+//! Local-memory occupancy tracking (→ Table 4.3).
+//!
+//! The paper reports "the required local memory capacity … determined by
+//! the peak memory usage observed during execution on the FengHuang
+//! system" under the lookahead-1 prefetch strategy. We track residency as
+//! timed intervals — a tensor occupies local memory from the moment its
+//! prefetch completes (or its producing op starts, for scratch) until the
+//! consuming op finishes — and compute the exact peak by sweeping the
+//! interval endpoints.
+
+use crate::units::{Bytes, Seconds};
+
+/// A residency interval: `bytes` live in local memory during [from, to).
+#[derive(Debug, Clone, Copy)]
+struct Interval {
+    from: Seconds,
+    to: Seconds,
+    bytes: Bytes,
+}
+
+/// Accumulates residency intervals and reports the peak occupancy.
+#[derive(Debug, Default)]
+pub struct OccupancyTracker {
+    intervals: Vec<Interval>,
+    /// Bytes resident for the whole run (weights pinned across steps, …).
+    pinned: Bytes,
+}
+
+impl OccupancyTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pin `bytes` for the entire run (baseline weights, KV cache).
+    pub fn pin(&mut self, bytes: Bytes) {
+        self.pinned += bytes;
+    }
+
+    /// Record `bytes` resident during `[from, to)`.
+    pub fn add(&mut self, from: Seconds, to: Seconds, bytes: Bytes) {
+        debug_assert!(to >= from, "inverted interval");
+        if bytes.value() <= 0.0 || to <= from {
+            return;
+        }
+        self.intervals.push(Interval { from, to, bytes });
+    }
+
+    /// Exact peak occupancy: sweep over interval endpoints.
+    pub fn peak(&self) -> Bytes {
+        if self.intervals.is_empty() {
+            return self.pinned;
+        }
+        let mut events: Vec<(f64, f64)> = Vec::with_capacity(self.intervals.len() * 2);
+        for iv in &self.intervals {
+            events.push((iv.from.value(), iv.bytes.value()));
+            events.push((iv.to.value(), -iv.bytes.value()));
+        }
+        // Sort by time; at equal times apply releases before acquisitions
+        // (an op's working set replaces its predecessor's, it does not
+        // stack with it instantaneously). Unstable sort: equal keys are
+        // already disambiguated by the second component.
+        events.sort_unstable_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.partial_cmp(&b.1).unwrap())
+        });
+        let mut current = 0.0;
+        let mut peak = 0.0f64;
+        for (_, delta) in events {
+            current += delta;
+            peak = peak.max(current);
+        }
+        Bytes::new(peak + self.pinned.value())
+    }
+
+    /// Time-weighted average occupancy (for reports).
+    pub fn average(&self, span: Seconds) -> Bytes {
+        if span.value() <= 0.0 {
+            return self.pinned;
+        }
+        let weighted: f64 = self
+            .intervals
+            .iter()
+            .map(|iv| iv.bytes.value() * (iv.to.value() - iv.from.value()))
+            .sum();
+        Bytes::new(weighted / span.value() + self.pinned.value())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: f64) -> Seconds {
+        Seconds::new(v)
+    }
+    fn b(v: f64) -> Bytes {
+        Bytes::new(v)
+    }
+
+    #[test]
+    fn peak_of_overlapping_intervals() {
+        let mut t = OccupancyTracker::new();
+        t.add(s(0.0), s(2.0), b(100.0));
+        t.add(s(1.0), s(3.0), b(50.0)); // overlap in [1,2) → 150
+        t.add(s(4.0), s(5.0), b(120.0));
+        assert_eq!(t.peak().value(), 150.0);
+    }
+
+    #[test]
+    fn back_to_back_intervals_do_not_stack() {
+        // Release at t=1 applies before the acquisition at t=1.
+        let mut t = OccupancyTracker::new();
+        t.add(s(0.0), s(1.0), b(100.0));
+        t.add(s(1.0), s(2.0), b(100.0));
+        assert_eq!(t.peak().value(), 100.0);
+    }
+
+    #[test]
+    fn pinned_adds_to_everything() {
+        let mut t = OccupancyTracker::new();
+        t.pin(b(1000.0));
+        t.add(s(0.0), s(1.0), b(10.0));
+        assert_eq!(t.peak().value(), 1010.0);
+        let empty = OccupancyTracker::new();
+        assert_eq!(empty.peak().value(), 0.0);
+    }
+
+    #[test]
+    fn zero_length_and_zero_byte_intervals_ignored() {
+        let mut t = OccupancyTracker::new();
+        t.add(s(1.0), s(1.0), b(500.0));
+        t.add(s(0.0), s(2.0), b(0.0));
+        assert_eq!(t.peak().value(), 0.0);
+    }
+
+    #[test]
+    fn average_is_time_weighted() {
+        let mut t = OccupancyTracker::new();
+        t.add(s(0.0), s(1.0), b(100.0));
+        t.add(s(1.0), s(2.0), b(300.0));
+        assert_eq!(t.average(s(2.0)).value(), 200.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event simulator of FengHuang and baseline nodes.
+//!
+//! * [`engine`] — two-stream (Regular + Paging) schedule computation;
+//! * [`prefetcher`] — the Tensor Prefetcher policy (lookahead window,
+//!   remote working sets, minimal-residency eviction);
+//! * [`efficiency`] — Eq 4.1 prefetching-overhead model;
+//! * [`memory`] — local-memory occupancy tracking (→ Table 4.3);
+//! * [`exec`] — op timing, per-phase simulation, and full-workload
+//!   TTFT / TPOT / E2E reports (→ Fig 4.1).
+
+pub mod efficiency;
+pub mod engine;
+pub mod exec;
+pub mod memory;
+pub mod prefetcher;
+
+pub use exec::{run_workload, simulate, simulate_trace, simulate_with_policy, SimReport, WorkloadReport};
+pub use prefetcher::PrefetchPolicy;

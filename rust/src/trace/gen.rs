@@ -1,0 +1,408 @@
+//! Synthetic operator-trace generator.
+//!
+//! Produces the per-layer kernel sequence a tensor-parallel SGLang-style
+//! engine executes for one prefill pass or one decode step, with the same
+//! metadata the paper extracts from Nsight traces (§4.1.3): FLOPs, memory
+//! traffic, weight working sets, collective payloads.
+//!
+//! Layer structure (Megatron-style TP over `tp` GPUs):
+//!
+//! ```text
+//! embed → [ qkv_proj → attention → o_proj → AllReduce →
+//!           (router → experts → AllReduce)  |  (ffn_up → ffn_down → AllReduce) ]×L
+//!       → final_norm → lm_head
+//! ```
+//!
+//! MoE layers route tokens to experts; with batch-level top-k routing the
+//! expected number of *distinct* experts activated bounds the weight bytes
+//! a decode step touches (see `models::flops::distinct_active_param_count`).
+
+use super::op::{Op, OpKind, OpName, Phase, Trace, WeightRef};
+use crate::fabric::Collective;
+use crate::models::arch::{Attention, FeedForward, ModelArch};
+use crate::models::comm::ACT_DTYPE;
+use crate::units::{Bytes, Flops};
+
+/// Trace-generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub model: ModelArch,
+    /// Tensor-parallel degree (8 for Baseline8, 4 for FH4).
+    pub tp: usize,
+    pub batch: u64,
+    pub phase: Phase,
+}
+
+struct Gen<'a> {
+    cfg: &'a TraceConfig,
+    ops: Vec<Op>,
+    next_id: u64,
+}
+
+impl<'a> Gen<'a> {
+    fn tokens(&self) -> f64 {
+        match self.cfg.phase {
+            Phase::Prefill { prompt_len } => (self.cfg.batch * prompt_len) as f64,
+            Phase::Decode { .. } => self.cfg.batch as f64,
+        }
+    }
+
+    fn context(&self) -> f64 {
+        match self.cfg.phase {
+            Phase::Prefill { prompt_len } => prompt_len as f64 / 2.0, // causal average
+            Phase::Decode { kv_len } => kv_len as f64,
+        }
+    }
+
+    fn wdt(&self) -> f64 {
+        self.cfg.model.weight_dtype.bytes()
+    }
+
+    fn adt(&self) -> f64 {
+        ACT_DTYPE.bytes()
+    }
+
+    fn fresh_id(&mut self) -> super::op::TensorId {
+        let id = self.next_id;
+        self.next_id += 1;
+        super::op::TensorId(id)
+    }
+
+    /// Emit a weight-bearing GEMM: `params` weights (full, pre-TP), output
+    /// width `out_cols` (full). Activation in/out included in scratch.
+    fn gemm(&mut self, name: OpName, layer: u32, kind: OpKind, params: f64, out_cols: f64) {
+        let tp = self.cfg.tp as f64;
+        let tokens = self.tokens();
+        let w_bytes = params / tp * self.wdt();
+        let act_in = tokens * self.cfg.model.hidden as f64 * self.adt();
+        let act_out = tokens * out_cols / tp * self.adt();
+        let id = self.fresh_id();
+        self.ops.push(Op {
+            op: name,
+            layer,
+            kind,
+            flops: Flops::new(2.0 * tokens * params / tp),
+            read_bytes: Bytes::new(w_bytes + act_in),
+            write_bytes: Bytes::new(act_out),
+            weights: vec![WeightRef { id, bytes: Bytes::new(w_bytes) }],
+            m_tokens: tokens,
+            shard_cols: out_cols / tp,
+            comm_payload: Bytes::ZERO,
+            scratch_bytes: Bytes::new(act_in + act_out),
+            kv_stream_bytes: Bytes::ZERO,
+        });
+    }
+
+    fn collective(&mut self, name: OpName, layer: u32, op: Collective, payload_elems: f64) {
+        let payload = Bytes::new(payload_elems * self.adt());
+        self.ops.push(Op {
+            op: name,
+            layer,
+            kind: OpKind::Collective(op),
+            flops: Flops::ZERO,
+            read_bytes: Bytes::ZERO,
+            write_bytes: Bytes::ZERO,
+            weights: vec![],
+            m_tokens: self.tokens(),
+            shard_cols: 0.0,
+            comm_payload: payload,
+            scratch_bytes: payload,
+            kv_stream_bytes: Bytes::ZERO,
+        });
+    }
+
+    fn attention(&mut self, layer: u32) {
+        let m = &self.cfg.model;
+        let tp = self.cfg.tp as f64;
+        let tokens = self.tokens();
+        let ctx = self.context();
+        // Score + value GEMMs, sharded by heads.
+        let flops = 4.0 * m.q_dim() as f64 * ctx * tokens / tp;
+        // KV stream: context × kv bytes per token per layer, per batch lane
+        // for decode; for prefill KV is produced as it goes (count once).
+        let kv_per_tok = crate::models::memory::kv_bytes_per_token_per_layer(m).value();
+        let kv_read = match self.cfg.phase {
+            Phase::Prefill { prompt_len } => {
+                self.cfg.batch as f64 * prompt_len as f64 * kv_per_tok / tp
+            }
+            Phase::Decode { kv_len } => self.cfg.batch as f64 * kv_len as f64 * kv_per_tok / tp,
+        };
+        let act = tokens * m.q_dim() as f64 / tp * self.adt();
+        let kv_write = tokens * kv_per_tok / tp;
+        self.ops.push(Op {
+            op: OpName::Attn,
+            layer,
+            kind: OpKind::Attention,
+            flops: Flops::new(flops),
+            read_bytes: Bytes::new(kv_read + act),
+            write_bytes: Bytes::new(act + kv_write),
+            weights: vec![],
+            m_tokens: tokens,
+            shard_cols: m.q_dim() as f64 / tp,
+            comm_payload: Bytes::ZERO,
+            scratch_bytes: Bytes::new(kv_read + 2.0 * act),
+            kv_stream_bytes: Bytes::new(kv_read),
+        });
+    }
+
+    /// Expected number of distinct experts activated in one step.
+    fn distinct_experts(&self, experts: u32, top_k: u32) -> f64 {
+        let e = experts as f64;
+        let k = top_k as f64;
+        let routed_tokens = self.tokens();
+        e * (1.0 - (1.0 - k / e).powf(routed_tokens))
+    }
+
+    fn layer(&mut self, l: u32) {
+        let m = self.cfg.model.clone();
+        let h = m.hidden as f64;
+        let tokens = self.tokens();
+
+        // QKV projection.
+        let (qkv_params, qkv_cols) = match m.attention {
+            Attention::Mha | Attention::Gqa { .. } => {
+                let cols = (m.q_dim() + 2 * m.kv_dim()) as f64;
+                (h * cols, cols)
+            }
+            Attention::Mla { kv_lora_rank, rope_head_dim } => {
+                let q = m.q_dim() as f64;
+                let rank = kv_lora_rank as f64;
+                let rope = rope_head_dim as f64;
+                // q proj + joint kv down-proj + kv up-projs.
+                let params = h * q + h * (rank + rope) + 2.0 * rank * q;
+                (params, q + rank + rope)
+            }
+        };
+        self.gemm(OpName::Qkv, l, OpKind::Gemm, qkv_params, qkv_cols);
+        self.attention(l);
+        self.gemm(OpName::OProj, l, OpKind::Gemm, m.q_dim() as f64 * h, h);
+        self.collective(OpName::ArAttn, l, Collective::AllReduce, tokens * h);
+
+        let is_moe_layer = m.is_moe() && l >= m.dense_prefix_layers;
+        match m.ffn {
+            FeedForward::Moe {
+                experts,
+                top_k,
+                expert_intermediate,
+                shared_experts,
+                shared_intermediate,
+                gated,
+            } if is_moe_layer => {
+                // Router.
+                self.gemm(OpName::Router, l, OpKind::Gemm, h * experts as f64, experts as f64);
+                // Token dispatch (AllToAll on expert-parallel systems; TP
+                // systems fold this into the same payload accounting).
+                self.collective(OpName::A2aDispatch, l, Collective::AllToAll, tokens * h);
+                // Expert FFNs: weight working set = distinct experts.
+                let mats = if gated { 3.0 } else { 2.0 };
+                let distinct = self.distinct_experts(experts, top_k);
+                let expert_params = mats * h * expert_intermediate as f64;
+                let shared_params =
+                    shared_experts as f64 * mats * h * shared_intermediate as f64;
+                let tp = self.cfg.tp as f64;
+                let w_bytes = (distinct * expert_params + shared_params) / tp * self.wdt();
+                // FLOPs: every token runs top_k experts (+ shared).
+                let flops = 2.0
+                    * tokens
+                    * (top_k as f64 * expert_params + shared_params)
+                    / tp;
+                let act = tokens * h * self.adt();
+                let id = self.fresh_id();
+                self.ops.push(Op {
+                    op: OpName::Experts,
+                    layer: l,
+                    kind: OpKind::MoeExperts,
+                    flops: Flops::new(flops),
+                    read_bytes: Bytes::new(w_bytes + act),
+                    write_bytes: Bytes::new(act),
+                    weights: vec![WeightRef { id, bytes: Bytes::new(w_bytes) }],
+                    m_tokens: tokens * top_k as f64 / distinct.max(1.0),
+                    shard_cols: expert_intermediate as f64 / tp,
+                    comm_payload: Bytes::ZERO,
+                    scratch_bytes: Bytes::new(2.0 * act),
+                    kv_stream_bytes: Bytes::ZERO,
+                });
+                self.collective(OpName::A2aCombine, l, Collective::AllToAll, tokens * h);
+                self.collective(OpName::ArFfn, l, Collective::AllReduce, tokens * h);
+            }
+            _ => {
+                // Dense FFN (or dense-prefix layer of a MoE model).
+                let (inter, gated) = match m.ffn {
+                    FeedForward::Dense { intermediate, gated } => (intermediate as f64, gated),
+                    FeedForward::Moe { .. } => (4.0 * h, true),
+                };
+                let up_mats = if gated { 2.0 } else { 1.0 };
+                self.gemm(OpName::FfnUp, l, OpKind::Gemm, up_mats * h * inter, inter);
+                self.gemm(OpName::FfnDown, l, OpKind::Gemm, inter * h, h);
+                self.collective(OpName::ArFfn, l, Collective::AllReduce, tokens * h);
+            }
+        }
+    }
+
+    fn run(mut self) -> Trace {
+        let m = self.cfg.model.clone();
+        let tokens = self.tokens();
+        let h = m.hidden as f64;
+        // Embedding lookup: bandwidth-only (gather of `tokens` rows).
+        let embed_read = tokens * h * self.wdt();
+        self.ops.push(Op {
+            op: OpName::Embed,
+            layer: 0,
+            kind: OpKind::Memory,
+            flops: Flops::ZERO,
+            read_bytes: Bytes::new(embed_read),
+            write_bytes: Bytes::new(tokens * h * self.adt()),
+            weights: vec![],
+            m_tokens: tokens,
+            shard_cols: h,
+            comm_payload: Bytes::ZERO,
+            scratch_bytes: Bytes::new(tokens * h * self.adt()),
+            kv_stream_bytes: Bytes::ZERO,
+        });
+        for l in 0..m.layers {
+            self.layer(l);
+        }
+        // LM head: only the last position of each request produces logits.
+        let logit_tokens = self.cfg.batch as f64;
+        let tp = self.cfg.tp as f64;
+        let head_params = m.vocab as f64 * h;
+        let id = self.fresh_id();
+        self.ops.push(Op {
+            op: OpName::LmHead,
+            layer: m.layers,
+            kind: OpKind::Gemm,
+            flops: Flops::new(2.0 * logit_tokens * head_params / tp),
+            read_bytes: Bytes::new(head_params / tp * self.wdt()),
+            write_bytes: Bytes::new(logit_tokens * m.vocab as f64 / tp * self.adt()),
+            weights: vec![WeightRef {
+                id,
+                bytes: Bytes::new(head_params / tp * self.wdt()),
+            }],
+            m_tokens: logit_tokens,
+            shard_cols: m.vocab as f64 / tp,
+            comm_payload: Bytes::ZERO,
+            scratch_bytes: Bytes::new(logit_tokens * m.vocab as f64 / tp * self.adt()),
+            kv_stream_bytes: Bytes::ZERO,
+        });
+        Trace {
+            model: m.name.clone(),
+            phase: self.cfg.phase,
+            tp: self.cfg.tp,
+            batch: self.cfg.batch,
+            ops: self.ops,
+        }
+    }
+}
+
+/// Generate the operator trace for one prefill pass or one decode step.
+pub fn generate(cfg: &TraceConfig) -> Trace {
+    assert!(cfg.tp >= 1, "tp must be ≥ 1");
+    assert!(cfg.batch >= 1, "batch must be ≥ 1");
+    Gen { cfg, ops: Vec::new(), next_id: 0 }.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::*;
+    use crate::units::Dtype;
+
+    fn cfg(m: ModelArch, tp: usize, batch: u64, phase: Phase) -> TraceConfig {
+        TraceConfig { model: m, tp, batch, phase }
+    }
+
+    #[test]
+    fn dense_trace_has_expected_op_count() {
+        // GPT-3: embed + 96 × (qkv, attn, o, AR, up, down, AR) + lm_head.
+        let t = generate(&cfg(gpt3_175b(), 8, 8, Phase::Decode { kv_len: 1024 }));
+        assert_eq!(t.ops.len(), 2 + 96 * 7);
+        assert_eq!(t.num_collectives(), 96 * 2);
+    }
+
+    #[test]
+    fn moe_trace_has_router_and_a2a() {
+        let t = generate(&cfg(qwen3_235b(), 4, 8, Phase::Decode { kv_len: 1024 }));
+        // Per layer: qkv, attn, o, AR, router, a2a, experts, a2a, AR = 9.
+        assert_eq!(t.ops.len(), 2 + 94 * 9);
+        // 2 AllReduce + 2 AllToAll per MoE layer (matches
+        // models::comm::collectives_per_layer).
+        assert_eq!(t.num_collectives(), 94 * 4);
+    }
+
+    #[test]
+    fn decode_flops_match_analytical_model() {
+        // The trace's total FLOPs (×tp, since each op is per-GPU) must be
+        // close to models::flops::decode_flops_per_token × batch.
+        let m = gpt3_175b();
+        let batch = 8u64;
+        let kv = 2048u64;
+        let t = generate(&cfg(m.clone(), 8, batch, Phase::Decode { kv_len: kv }));
+        let trace_flops = t.total_flops().value() * 8.0;
+        let analytic =
+            crate::models::flops::decode_flops_per_token(&m, kv).value() * batch as f64;
+        let rel = (trace_flops - analytic).abs() / analytic;
+        assert!(rel < 0.05, "trace {trace_flops:.3e} vs analytic {analytic:.3e} ({rel:.3})");
+    }
+
+    #[test]
+    fn prefill_flops_match_analytical_model() {
+        let m = qwen3_235b();
+        let t = generate(&cfg(m.clone(), 4, 8, Phase::Prefill { prompt_len: 4096 }));
+        let trace_flops = t.total_flops().value() * 4.0;
+        let analytic = crate::models::flops::prefill_flops(&m, 4096).value() * 8.0;
+        let rel = (trace_flops - analytic).abs() / analytic;
+        assert!(rel < 0.08, "trace {trace_flops:.3e} vs analytic {analytic:.3e} ({rel:.3})");
+    }
+
+    #[test]
+    fn unique_weight_bytes_close_to_param_shard() {
+        // Dense model: every parameter appears exactly once in the trace;
+        // unique weight bytes ≈ param_bytes / tp (embedding excluded — it
+        // is gathered, not matmul'd; lm_head shares it).
+        let m = gpt3_175b();
+        let t = generate(&cfg(m.clone(), 8, 8, Phase::Decode { kv_len: 128 }));
+        let total = crate::models::memory::param_bytes(&m).value() / 8.0;
+        let traced = t.unique_weight_bytes().value();
+        let rel = (traced - total).abs() / total;
+        assert!(rel < 0.02, "traced {traced:.3e} vs shard {total:.3e}");
+    }
+
+    #[test]
+    fn grok_expert_working_set_is_large() {
+        // Grok-1 batch 8: E(1−(1−2/8)^8)·expert_params ≈ 7.2 experts of
+        // 3·6144·32768 — the "large expert architecture" the paper blames
+        // for the 4.0 TB/s slowdown.
+        let t = generate(&cfg(grok1(), 4, 8, Phase::Decode { kv_len: 1024 }));
+        let experts_op = t.ops.iter().find(|o| o.name() == "l0.experts").unwrap();
+        let gb = experts_op.weight_bytes().as_gb();
+        assert!(gb > 1.5 && gb < 3.0, "grok per-layer expert shard {gb:.2} GB");
+    }
+
+    #[test]
+    fn decode_touches_fewer_expert_bytes_than_prefill() {
+        let m = qwen3_235b();
+        let d = generate(&cfg(m.clone(), 4, 8, Phase::Decode { kv_len: 1024 }));
+        let p = generate(&cfg(m, 4, 8, Phase::Prefill { prompt_len: 4096 }));
+        assert!(d.unique_weight_bytes() < p.unique_weight_bytes());
+    }
+
+    #[test]
+    fn tensor_ids_are_unique_within_trace() {
+        let t = generate(&cfg(deepseek_v3(), 4, 8, Phase::Decode { kv_len: 512 }));
+        let ids: Vec<_> = t.ops.iter().flat_map(|o| o.weights.iter().map(|w| w.id)).collect();
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(ids.len(), dedup.len());
+    }
+
+    #[test]
+    fn fp8_model_halves_weight_bytes() {
+        let mut m = deepseek_v3();
+        let t8 = generate(&cfg(m.clone(), 4, 8, Phase::Decode { kv_len: 512 }));
+        m.weight_dtype = Dtype::F16;
+        let t16 = generate(&cfg(m, 4, 8, Phase::Decode { kv_len: 512 }));
+        let r = t16.unique_weight_bytes() / t8.unique_weight_bytes();
+        assert!((r - 2.0).abs() < 0.05, "fp16/fp8 weight ratio {r:.3}");
+    }
+}

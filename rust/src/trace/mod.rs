@@ -1,0 +1,8 @@
+//! Synthetic operator traces — the stand-in for the paper's Nsight
+//! profiling traces (§4.1.3, and DESIGN.md §1 substitution table).
+
+pub mod gen;
+pub mod op;
+
+pub use gen::{generate, TraceConfig};
+pub use op::{Op, OpKind, Phase, TensorId, Trace, WeightRef};

@@ -1,0 +1,178 @@
+//! Operator-level trace records.
+//!
+//! The paper's simulator "constructs a dependency graph from profiling
+//! traces" (§4.1.3). Our traces carry the same information Nsight would:
+//! for every kernel, its FLOPs, its local-memory traffic, the weight
+//! tensors it needs resident, and — for communication ops — the collective
+//! kind and payload. Dependencies are the sequential program order of one
+//! decoder step (SGLang executes layers in order; parallelism lives inside
+//! ops, not between them).
+
+use crate::fabric::Collective;
+use crate::units::{Bytes, Flops};
+
+/// Stable identity of a weight tensor (same across decode steps, so the
+/// paging simulator can reason about residency and reuse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u64);
+
+/// A weight tensor an op needs resident in local memory before it runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightRef {
+    pub id: TensorId,
+    pub bytes: Bytes,
+}
+
+/// What an op does — drives the timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpKind {
+    /// Dense GEMM-like compute (projections, FFN, router, lm head).
+    Gemm,
+    /// Attention score/value kernels (streams KV cache).
+    Attention,
+    /// Expert FFN of a MoE layer (large weight working set).
+    MoeExperts,
+    /// Inter-GPU collective.
+    Collective(Collective),
+    /// Element-wise / norm / embedding — bandwidth-only.
+    Memory,
+}
+
+/// Which operator within a layer (cheap, Copy — avoids per-op string
+/// allocation on the simulator hot path; render with [`Op::name`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpName {
+    Embed,
+    Qkv,
+    Attn,
+    OProj,
+    ArAttn,
+    Router,
+    A2aDispatch,
+    Experts,
+    A2aCombine,
+    ArFfn,
+    FfnUp,
+    FfnDown,
+    LmHead,
+}
+
+impl OpName {
+    pub fn suffix(self) -> &'static str {
+        match self {
+            OpName::Embed => "embed",
+            OpName::Qkv => "qkv",
+            OpName::Attn => "attn",
+            OpName::OProj => "o_proj",
+            OpName::ArAttn => "ar_attn",
+            OpName::Router => "router",
+            OpName::A2aDispatch => "a2a_dispatch",
+            OpName::Experts => "experts",
+            OpName::A2aCombine => "a2a_combine",
+            OpName::ArFfn => "ar_ffn",
+            OpName::FfnUp => "ffn_up",
+            OpName::FfnDown => "ffn_down",
+            OpName::LmHead => "lm_head",
+        }
+    }
+}
+
+/// One operator in the trace.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub op: OpName,
+    pub layer: u32,
+    pub kind: OpKind,
+    /// FLOPs executed by this GPU (already divided by TP degree).
+    pub flops: Flops,
+    /// Bytes this GPU reads from local memory: weights + activations + KV.
+    pub read_bytes: Bytes,
+    /// Bytes written back to local memory (outputs, KV appends).
+    pub write_bytes: Bytes,
+    /// Weight tensors that must be resident before execution (per-GPU
+    /// shard sizes). Empty for collectives / attention.
+    pub weights: Vec<WeightRef>,
+    /// GEMM M dimension (tokens) — drives the MFU batch axis.
+    pub m_tokens: f64,
+    /// Per-GPU GEMM output columns — drives the MFU shard axis.
+    pub shard_cols: f64,
+    /// Collective payload per GPU (logical tensor size), if a collective.
+    pub comm_payload: Bytes,
+    /// Non-weight working set (activations in + out + KV read) the op
+    /// needs in local memory while running.
+    pub scratch_bytes: Bytes,
+    /// KV-cache stream bytes (attention ops). On FengHuang systems these
+    /// are read *directly* from remote memory through the caching
+    /// hierarchy (§3.1: tensors can be "accessed by the SMs through the
+    /// caching hierarchy" without staging), on a separate virtual channel
+    /// from the paging stream.
+    pub kv_stream_bytes: Bytes,
+}
+
+impl Op {
+    /// Human-readable name, e.g. `l3.qkv` (rendered on demand).
+    pub fn name(&self) -> String {
+        match self.op {
+            OpName::Embed | OpName::LmHead => self.op.suffix().to_string(),
+            _ => format!("l{}.{}", self.layer, self.op.suffix()),
+        }
+    }
+
+    pub fn weight_bytes(&self) -> Bytes {
+        self.weights.iter().map(|w| w.bytes).sum()
+    }
+
+    /// Total local-memory working set while this op runs.
+    pub fn working_set(&self) -> Bytes {
+        self.weight_bytes() + self.scratch_bytes
+    }
+
+    pub fn is_collective(&self) -> bool {
+        matches!(self.kind, OpKind::Collective(_))
+    }
+}
+
+/// Inference phase described by a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Process a prompt of `prompt_len` tokens per request.
+    Prefill { prompt_len: u64 },
+    /// Generate one token with `kv_len` tokens of context per request.
+    Decode { kv_len: u64 },
+}
+
+/// A full single-step trace: one prefill pass or one decode step.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub model: String,
+    pub phase: Phase,
+    pub tp: usize,
+    pub batch: u64,
+    pub ops: Vec<Op>,
+}
+
+impl Trace {
+    pub fn total_flops(&self) -> Flops {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_read_bytes(&self) -> Bytes {
+        self.ops.iter().map(|o| o.read_bytes).sum()
+    }
+
+    /// Total unique weight bytes (each tensor counted once — decode steps
+    /// revisit the same tensors).
+    pub fn unique_weight_bytes(&self) -> Bytes {
+        let mut seen = std::collections::HashSet::new();
+        self.ops
+            .iter()
+            .flat_map(|o| o.weights.iter())
+            .filter(|w| seen.insert(w.id))
+            .map(|w| w.bytes)
+            .sum()
+    }
+
+    pub fn num_collectives(&self) -> usize {
+        self.ops.iter().filter(|o| o.is_collective()).count()
+    }
+}

@@ -1,0 +1,311 @@
+//! Typed scalar units used throughout the simulator.
+//!
+//! Everything is `f64`-backed: the simulator works at nanosecond / byte /
+//! FLOP granularity and the dynamic range (40 ns notification latencies up
+//! to 10^16 FLOP prefill passes) fits comfortably in a double. Newtypes keep
+//! bandwidths from being added to latencies by accident.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub};
+
+macro_rules! unit {
+    ($(#[$meta:meta])* $name:ident, $suffix:expr) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(pub f64);
+
+        impl $name {
+            pub const ZERO: $name = $name(0.0);
+
+            #[inline]
+            pub fn new(v: f64) -> Self {
+                debug_assert!(v.is_finite(), concat!(stringify!($name), " must be finite"));
+                $name(v)
+            }
+
+            #[inline]
+            pub fn value(self) -> f64 {
+                self.0
+            }
+
+            #[inline]
+            pub fn max(self, other: Self) -> Self {
+                $name(self.0.max(other.0))
+            }
+
+            #[inline]
+            pub fn min(self, other: Self) -> Self {
+                $name(self.0.min(other.0))
+            }
+        }
+
+        impl Add for $name {
+            type Output = $name;
+            #[inline]
+            fn add(self, rhs: $name) -> $name {
+                $name(self.0 + rhs.0)
+            }
+        }
+
+        impl AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, rhs: $name) {
+                self.0 += rhs.0;
+            }
+        }
+
+        impl Sub for $name {
+            type Output = $name;
+            #[inline]
+            fn sub(self, rhs: $name) -> $name {
+                $name(self.0 - rhs.0)
+            }
+        }
+
+        impl Mul<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn mul(self, rhs: f64) -> $name {
+                $name(self.0 * rhs)
+            }
+        }
+
+        impl Div<f64> for $name {
+            type Output = $name;
+            #[inline]
+            fn div(self, rhs: f64) -> $name {
+                $name(self.0 / rhs)
+            }
+        }
+
+        /// Ratio of two quantities of the same unit is a plain scalar.
+        impl Div for $name {
+            type Output = f64;
+            #[inline]
+            fn div(self, rhs: $name) -> f64 {
+                self.0 / rhs.0
+            }
+        }
+
+        impl Sum for $name {
+            fn sum<I: Iterator<Item = $name>>(iter: I) -> $name {
+                $name(iter.map(|v| v.0).sum())
+            }
+        }
+
+        impl fmt::Display for $name {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "{:.4}{}", self.0, $suffix)
+            }
+        }
+    };
+}
+
+unit!(
+    /// A quantity of bytes.
+    Bytes,
+    "B"
+);
+unit!(
+    /// A duration in seconds (simulation clock).
+    Seconds,
+    "s"
+);
+unit!(
+    /// A number of floating-point operations.
+    Flops,
+    "FLOP"
+);
+unit!(
+    /// A memory / link bandwidth in bytes per second.
+    Bandwidth,
+    "B/s"
+);
+unit!(
+    /// A compute throughput in FLOP per second.
+    FlopRate,
+    "FLOP/s"
+);
+
+impl Bytes {
+    pub fn kib(v: f64) -> Self {
+        Bytes(v * 1024.0)
+    }
+    pub fn mib(v: f64) -> Self {
+        Bytes(v * 1024.0 * 1024.0)
+    }
+    pub fn gib(v: f64) -> Self {
+        Bytes(v * 1024.0 * 1024.0 * 1024.0)
+    }
+    /// Decimal gigabytes — hardware datasheets (H200 "141 GB") use GB.
+    pub fn gb(v: f64) -> Self {
+        Bytes(v * 1e9)
+    }
+    pub fn tb(v: f64) -> Self {
+        Bytes(v * 1e12)
+    }
+    pub fn as_gib(self) -> f64 {
+        self.0 / (1024.0 * 1024.0 * 1024.0)
+    }
+    pub fn as_gb(self) -> f64 {
+        self.0 / 1e9
+    }
+    /// Time to move this many bytes at `bw`.
+    pub fn over(self, bw: Bandwidth) -> Seconds {
+        debug_assert!(bw.0 > 0.0, "bandwidth must be positive");
+        Seconds(self.0 / bw.0)
+    }
+}
+
+impl Seconds {
+    pub fn ns(v: f64) -> Self {
+        Seconds(v * 1e-9)
+    }
+    pub fn us(v: f64) -> Self {
+        Seconds(v * 1e-6)
+    }
+    pub fn ms(v: f64) -> Self {
+        Seconds(v * 1e-3)
+    }
+    pub fn as_ns(self) -> f64 {
+        self.0 * 1e9
+    }
+    pub fn as_us(self) -> f64 {
+        self.0 * 1e6
+    }
+    pub fn as_ms(self) -> f64 {
+        self.0 * 1e3
+    }
+}
+
+impl Flops {
+    pub fn giga(v: f64) -> Self {
+        Flops(v * 1e9)
+    }
+    pub fn tera(v: f64) -> Self {
+        Flops(v * 1e12)
+    }
+    pub fn as_gflop(self) -> f64 {
+        self.0 / 1e9
+    }
+    pub fn as_tflop(self) -> f64 {
+        self.0 / 1e12
+    }
+    /// Time to execute this many FLOPs at `rate`.
+    pub fn over(self, rate: FlopRate) -> Seconds {
+        debug_assert!(rate.0 > 0.0, "flop rate must be positive");
+        Seconds(self.0 / rate.0)
+    }
+}
+
+impl Bandwidth {
+    pub fn gbps(v: f64) -> Self {
+        Bandwidth(v * 1e9)
+    }
+    pub fn tbps(v: f64) -> Self {
+        Bandwidth(v * 1e12)
+    }
+    pub fn as_gbps(self) -> f64 {
+        self.0 / 1e9
+    }
+    pub fn as_tbps(self) -> f64 {
+        self.0 / 1e12
+    }
+}
+
+impl FlopRate {
+    pub fn tflops(v: f64) -> Self {
+        FlopRate(v * 1e12)
+    }
+    pub fn pflops(v: f64) -> Self {
+        FlopRate(v * 1e15)
+    }
+    pub fn as_tflops(self) -> f64 {
+        self.0 / 1e12
+    }
+}
+
+/// Numeric precision of a tensor element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    Bf16,
+    F16,
+    Fp8,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> f64 {
+        match self {
+            Dtype::F32 => 4.0,
+            Dtype::Bf16 | Dtype::F16 => 2.0,
+            Dtype::Fp8 => 1.0,
+        }
+    }
+}
+
+impl fmt::Display for Dtype {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Dtype::F32 => "f32",
+            Dtype::Bf16 => "bf16",
+            Dtype::F16 => "f16",
+            Dtype::Fp8 => "fp8",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_constructors_roundtrip() {
+        assert_eq!(Bytes::gib(1.0).value(), 1024.0 * 1024.0 * 1024.0);
+        assert_eq!(Bytes::gb(1.0).value(), 1e9);
+        assert!((Bytes::tb(1.5).as_gb() - 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_time_matches_hand_calc() {
+        // 4 GB over 4 TB/s = 1 ms
+        let t = Bytes::gb(4.0).over(Bandwidth::tbps(4.0));
+        assert!((t.as_ms() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flop_time_matches_hand_calc() {
+        // 989 TFLOP at 989 TFLOP/s = 1 s
+        let t = Flops::tera(989.0).over(FlopRate::tflops(989.0));
+        assert!((t.value() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_ratio_is_scalar() {
+        assert_eq!(Bytes::gb(8.0) / Bytes::gb(2.0), 4.0);
+        assert_eq!(Seconds::ns(1000.0) / Seconds::ns(220.0), 1000.0 / 220.0);
+    }
+
+    #[test]
+    fn seconds_conversions() {
+        assert!((Seconds::ns(1500.0).as_us() - 1.5).abs() < 1e-12);
+        assert!((Seconds::ms(2.0).as_ns() - 2e6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dtype_widths() {
+        assert_eq!(Dtype::F32.bytes(), 4.0);
+        assert_eq!(Dtype::Bf16.bytes(), 2.0);
+        assert_eq!(Dtype::Fp8.bytes(), 1.0);
+    }
+
+    #[test]
+    fn sum_and_ordering() {
+        let total: Seconds = [Seconds::ns(40.0), Seconds::ns(50.0)].into_iter().sum();
+        assert!((total.as_ns() - 90.0).abs() < 1e-9);
+        assert!(Seconds::ns(90.0) < Seconds::ns(220.0));
+        assert_eq!(Seconds::ns(90.0).max(Seconds::ns(220.0)), Seconds::ns(220.0));
+    }
+}

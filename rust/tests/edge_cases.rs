@@ -1,0 +1,207 @@
+//! Edge cases and failure injection across the stack.
+
+use fenghuang::config::{baseline8, fh4_15xm, SystemConfig};
+use fenghuang::coordinator::router::{Policy, Router};
+use fenghuang::coordinator::{synthetic_workload, Batcher, Scheduler, SimBackend};
+use fenghuang::fabric::analysis::{speedup, SpeedupConfig};
+use fenghuang::fabric::tab::TabPool;
+use fenghuang::models::arch;
+use fenghuang::sim;
+use fenghuang::trace::{generate, Phase, TraceConfig};
+use fenghuang::units::{Bandwidth, Bytes, Seconds};
+use fenghuang::FhError;
+
+// ---------------------------------------------------------------------------
+// Capacity / thrash failure paths.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn baseline_with_tiny_hbm_reports_thrash() {
+    let mut sys = baseline8();
+    sys.local_capacity = Some(Bytes::gb(1.0)); // GPT-3 shard cannot fit
+    let err = sim::simulate(&sys, &arch::gpt3_175b(), 8, Phase::Decode { kv_len: 1024 })
+        .unwrap_err();
+    match err {
+        FhError::LocalMemoryThrash { need_gb, cap_gb, .. } => {
+            assert!(need_gb > cap_gb);
+        }
+        other => panic!("expected thrash, got {other}"),
+    }
+}
+
+#[test]
+fn fh_unlimited_local_never_thrashes() {
+    let sys = fh4_15xm(Bandwidth::tbps(4.0));
+    assert!(sys.local_capacity.is_none());
+    for kv in [128u64, 131072] {
+        sim::simulate(&sys, &arch::qwen3_235b(), 8, Phase::Decode { kv_len: kv }).unwrap();
+    }
+}
+
+#[test]
+fn pool_exhaustion_then_recovery() {
+    let pool = TabPool::new(1024, 2, 64);
+    let a = pool.alloc(1000).unwrap();
+    assert!(matches!(pool.alloc(100), Err(FhError::PoolExhausted { .. })));
+    pool.free(a);
+    pool.alloc(1024).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate workloads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_gpu_single_batch_trace_runs() {
+    // TP=1 means no collectives at all.
+    let tr = generate(&TraceConfig {
+        model: arch::gpt2(),
+        tp: 1,
+        batch: 1,
+        phase: Phase::Decode { kv_len: 1 },
+    });
+    assert!(tr.num_collectives() > 0); // allreduce nodes still exist…
+    let mut sys = baseline8();
+    sys.num_gpus = 1;
+    let r = sim::simulate(&sys, &arch::gpt2(), 1, Phase::Decode { kv_len: 1 }).unwrap();
+    assert!(r.total.value() > 0.0);
+}
+
+#[test]
+fn scheduler_with_no_requests_finishes_immediately() {
+    let backend = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), arch::gpt3_175b(), 8);
+    let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 4096));
+    sched.submit_all(vec![]);
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.metrics.completed, 0);
+    assert_eq!(sched.clock(), Seconds::ZERO);
+}
+
+#[test]
+fn scheduler_all_rejected_still_terminates() {
+    let backend = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), arch::gpt3_175b(), 8);
+    let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 8)); // max prompt 8
+    let reqs = synthetic_workload(5, 1024, 4, Seconds::ms(1.0)); // prompts ≫ 8
+    sched.submit_all(reqs);
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.metrics.completed, 0);
+    assert_eq!(sched.metrics.rejected, 5);
+}
+
+// ---------------------------------------------------------------------------
+// Config robustness.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_roundtrip_fh_with_unlimited_capacity() {
+    let sys = fh4_15xm(Bandwidth::tbps(5.6));
+    let text = sys.to_toml().unwrap();
+    let back = SystemConfig::from_toml(&text).unwrap();
+    assert_eq!(back.name, "FH4-1.5xM");
+    assert!(back.local_capacity.is_none());
+    assert!((back.fabric_bw.as_tbps() - 5.6).abs() < 1e-9);
+    assert!((back.latencies.tab_read.as_ns() - 220.0).abs() < 1e-9);
+}
+
+#[test]
+fn config_parser_rejects_garbage() {
+    assert!(SystemConfig::from_toml("not a config").is_err());
+    assert!(SystemConfig::from_toml("name = \"x\"\n").is_err()); // missing keys
+    let sys = baseline8();
+    let mut text = sys.to_toml().unwrap();
+    text = text.replace("fabric = \"nvlink\"", "fabric = \"carrier-pigeon\"");
+    assert!(SystemConfig::from_toml(&text).is_err());
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("fh_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("node.toml");
+    baseline8().save(&path).unwrap();
+    let back = SystemConfig::load(&path).unwrap();
+    assert_eq!(back.num_gpus, 8);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-replica routing + serving.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn routed_multi_replica_serving_balances_and_completes() {
+    // Route a workload across 3 FH replicas, run each replica's schedule,
+    // and check global completion + rough balance.
+    let replicas = 3;
+    let mut router = Router::new(replicas, Policy::LeastLoaded);
+    let reqs = synthetic_workload(30, 1024, 16, Seconds::ms(1.0));
+    let mut per_replica: Vec<Vec<_>> = vec![Vec::new(); replicas];
+    for r in reqs {
+        let idx = router.route(&r);
+        per_replica[idx].push(r);
+    }
+    let sizes: Vec<usize> = per_replica.iter().map(|v| v.len()).collect();
+    assert!(sizes.iter().all(|&s| s >= 6), "unbalanced routing: {sizes:?}");
+    let mut total = 0;
+    for bucket in per_replica {
+        let backend = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), arch::qwen3_235b(), 8);
+        let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 1 << 20));
+        sched.submit_all(bucket);
+        sched.run_to_completion().unwrap();
+        total += sched.metrics.completed;
+    }
+    assert_eq!(total, 30);
+}
+
+// ---------------------------------------------------------------------------
+// §3.1 scaling claims: N and bandwidth sensitivity of the analysis.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speedup_grows_with_world_size() {
+    // Enabler 1 is 2(N−1): more GPUs → bigger ring penalty → bigger win.
+    let mut last = 0.0;
+    for n in [2usize, 4, 8, 16, 32] {
+        let cfg = SpeedupConfig { world: n, ..Default::default() };
+        let r = speedup(&cfg);
+        assert!(r.overall_latency_bound > last);
+        last = r.overall_latency_bound;
+    }
+    // N=8 stays the paper's 70×.
+    let r = speedup(&SpeedupConfig::default());
+    assert_eq!(r.overall_latency_bound, 70.0);
+}
+
+#[test]
+fn trace_scales_linearly_with_layers() {
+    let mut small = arch::gpt2();
+    small.layers = 6;
+    let t6 = generate(&TraceConfig {
+        model: small.clone(),
+        tp: 2,
+        batch: 2,
+        phase: Phase::Decode { kv_len: 64 },
+    });
+    small.layers = 12;
+    let t12 = generate(&TraceConfig {
+        model: small,
+        tp: 2,
+        batch: 2,
+        phase: Phase::Decode { kv_len: 64 },
+    });
+    assert_eq!(t12.ops.len() - 2, 2 * (t6.ops.len() - 2));
+}
+
+#[test]
+fn op_names_render_stably() {
+    let tr = generate(&TraceConfig {
+        model: arch::qwen3_235b(),
+        tp: 4,
+        batch: 8,
+        phase: Phase::Decode { kv_len: 64 },
+    });
+    assert_eq!(tr.ops[0].name(), "embed");
+    assert_eq!(tr.ops[1].name(), "l0.qkv");
+    assert!(tr.ops.iter().any(|o| o.name() == "l93.ar_ffn"));
+    assert_eq!(tr.ops.last().unwrap().name(), "lm_head");
+}

@@ -1,0 +1,292 @@
+//! Cross-module integration + property tests.
+//!
+//! The offline build has no proptest crate, so properties are exercised
+//! with a deterministic xorshift generator over many random cases —
+//! same spirit: each test states an invariant and hammers it with
+//! randomised inputs.
+
+use fenghuang::config::{baseline8, fh4_15xm, fh4_20xm};
+use fenghuang::coordinator::{synthetic_workload, Batcher, Scheduler, SimBackend};
+use fenghuang::fabric::collectives::group;
+use fenghuang::fabric::tab::TabPool;
+use fenghuang::models::arch::{self, eval_models};
+use fenghuang::sim::{self, PrefetchPolicy};
+use fenghuang::trace::Phase;
+use fenghuang::units::{Bandwidth, Seconds};
+use std::sync::Arc;
+
+/// Deterministic xorshift64* PRNG for property loops.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.next() % (hi - lo).max(1)
+    }
+    fn f32(&mut self) -> f32 {
+        (self.next() >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fabric properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tab_write_read_roundtrip_random_regions() {
+    let mut rng = Rng::new(42);
+    let pool = TabPool::new(1 << 16, 7, 129); // deliberately odd striping
+    for case in 0..200 {
+        let len = rng.range(1, 4000) as usize;
+        let region = pool.alloc(len).unwrap();
+        let data: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+        pool.write(region, 0, &data).unwrap();
+        // Random sub-read must match the slice.
+        let off = rng.range(0, len as u64) as usize;
+        let sub = rng.range(0, (len - off) as u64 + 1) as usize;
+        let got = pool.read(region, off, sub).unwrap();
+        assert_eq!(got, &data[off..off + sub], "case {case} len {len} off {off}");
+        pool.free(region);
+    }
+    assert_eq!(pool.free_elems(), pool.capacity(), "all regions returned");
+}
+
+#[test]
+fn prop_allocator_never_hands_out_overlapping_regions() {
+    let mut rng = Rng::new(7);
+    let pool = TabPool::new(1 << 14, 4, 64);
+    let mut live: Vec<fenghuang::fabric::Region> = Vec::new();
+    for _ in 0..500 {
+        if rng.next() % 3 != 0 || live.is_empty() {
+            let len = rng.range(1, 1 << 10) as usize;
+            if let Ok(r) = pool.alloc(len) {
+                for other in &live {
+                    let a = r.offset..r.offset + r.len;
+                    let b = other.offset..other.offset + other.len;
+                    assert!(
+                        a.end <= b.start || b.end <= a.start,
+                        "overlap: {r:?} vs {other:?}"
+                    );
+                }
+                live.push(r);
+            }
+        } else {
+            let idx = rng.range(0, live.len() as u64) as usize;
+            pool.free(live.swap_remove(idx));
+        }
+    }
+    for r in live.drain(..) {
+        pool.free(r);
+    }
+    assert_eq!(pool.free_elems(), pool.capacity());
+}
+
+#[test]
+fn prop_collectives_match_scalar_reduction_random_worlds() {
+    let mut rng = Rng::new(99);
+    for case in 0..10 {
+        let world = rng.range(2, 7) as usize;
+        let len = rng.range(1, 2048) as usize;
+        let seeds: Vec<u64> = (0..world).map(|_| rng.next()).collect();
+        let pool = Arc::new(TabPool::new(1 << 18, 8, 128));
+        let comms = group(pool, world);
+        let outs: Vec<Vec<f32>> = comms
+            .into_iter()
+            .zip(seeds.clone())
+            .map(|(mut c, seed)| {
+                std::thread::spawn(move || {
+                    let mut r = Rng::new(seed);
+                    let data: Vec<f32> = (0..len).map(|_| r.f32()).collect();
+                    c.all_reduce(&data).unwrap()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        // Scalar oracle.
+        let mut expect = vec![0f32; len];
+        for seed in seeds {
+            let mut r = Rng::new(seed);
+            for e in expect.iter_mut() {
+                *e += r.f32();
+            }
+        }
+        for (rank, out) in outs.iter().enumerate() {
+            for i in 0..len {
+                assert!(
+                    (out[i] - expect[i]).abs() < 1e-4,
+                    "case {case} rank {rank} elem {i}: {} vs {}",
+                    out[i],
+                    expect[i]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_makespan_at_least_busy_time() {
+    for m in eval_models() {
+        for kv in [512u64, 4608, 16384] {
+            let sys = fh4_15xm(Bandwidth::tbps(4.8));
+            let r = sim::simulate(&sys, &m, 8, Phase::Decode { kv_len: kv }).unwrap();
+            assert!(
+                r.total + Seconds::ns(1.0) >= r.compute_busy,
+                "{}@{kv}: makespan {} < busy {}",
+                m.name,
+                r.total.as_ms(),
+                r.compute_busy.as_ms()
+            );
+            assert!(r.exposed_prefetch >= Seconds::ZERO);
+            assert!(r.peak_local.value() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_huge_remote_bandwidth_hides_all_prefetch() {
+    // As remote bandwidth → ∞ the paging stream vanishes from the
+    // critical path: exposure ≈ 0 and total → compute-side total.
+    let sys = fh4_15xm(Bandwidth::tbps(10_000.0));
+    let r = sim::simulate(&sys, &arch::gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }).unwrap();
+    assert!(
+        r.exposure_frac() < 0.02,
+        "exposure {:.4} should vanish at infinite bandwidth",
+        r.exposure_frac()
+    );
+}
+
+#[test]
+fn prop_ttft_monotone_in_prompt_and_tpot_monotone_in_kv() {
+    let sys = baseline8();
+    let m = arch::qwen3_235b();
+    let mut last = Seconds::ZERO;
+    for prompt in [256u64, 1024, 4096, 16384] {
+        let r = sim::simulate(&sys, &m, 8, Phase::Prefill { prompt_len: prompt }).unwrap();
+        assert!(r.total > last, "TTFT must grow with prompt");
+        last = r.total;
+    }
+    let mut last = Seconds::ZERO;
+    for kv in [256u64, 2048, 16384, 65536] {
+        let r = sim::simulate(&sys, &m, 8, Phase::Decode { kv_len: kv }).unwrap();
+        assert!(r.total >= last, "TPOT must not shrink with context");
+        last = r.total;
+    }
+}
+
+#[test]
+fn prop_wider_window_never_hurts_much() {
+    // Deeper lookahead can only add overlap opportunity; allow 1% noise.
+    let sys = fh4_15xm(Bandwidth::tbps(4.0));
+    for m in eval_models() {
+        let mut last = f64::INFINITY;
+        for w in [1usize, 2, 4, 10, 20] {
+            let p = PrefetchPolicy { window: w, ..Default::default() };
+            let r = sim::simulate_with_policy(&sys, &m, 8, Phase::Decode { kv_len: 4608 }, &p)
+                .unwrap();
+            assert!(
+                r.total.value() <= last * 1.01,
+                "{}: w={w} slower than narrower window",
+                m.name
+            );
+            last = last.min(r.total.value());
+        }
+    }
+}
+
+#[test]
+fn prop_fh_local_memory_an_order_below_baseline() {
+    // The abstract's "up to 93% local memory capacity reduction".
+    for m in eval_models() {
+        let base =
+            sim::simulate(&baseline8(), &m, 8, Phase::Decode { kv_len: 5120 }).unwrap();
+        let fh = sim::simulate(&fh4_15xm(Bandwidth::tbps(4.8)), &m, 8, Phase::Decode { kv_len: 5120 })
+            .unwrap();
+        let reduction = 1.0 - fh.peak_local.value() / base.peak_local.value();
+        assert!(
+            reduction > 0.80,
+            "{}: local-memory reduction only {:.1}%",
+            m.name,
+            reduction * 100.0
+        );
+    }
+}
+
+#[test]
+fn prop_fh4_20xm_never_slower_than_15xm() {
+    for m in eval_models() {
+        for tbps in [4.0, 4.8, 6.4] {
+            let r15 = sim::run_workload(&fh4_15xm(Bandwidth::tbps(tbps)), &m, 8, 4096, 1024)
+                .unwrap();
+            let r20 = sim::run_workload(&fh4_20xm(Bandwidth::tbps(tbps)), &m, 8, 4096, 1024)
+                .unwrap();
+            assert!(
+                r20.e2e.value() <= r15.e2e.value() * 1.001,
+                "{}@{tbps}: 2.0xM slower than 1.5xM",
+                m.name
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator properties.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_conserves_tokens_random_workloads() {
+    let mut rng = Rng::new(2024);
+    for case in 0..5 {
+        let n = rng.range(5, 30) as usize;
+        let backend = SimBackend::new(fh4_15xm(Bandwidth::tbps(4.8)), arch::gpt3_175b(), 8);
+        let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 1 << 20));
+        let gen = rng.range(1, 32) as usize;
+        let reqs = synthetic_workload(n, 1024, gen, Seconds::ms(rng.range(1, 100) as f64));
+        sched.submit_all(reqs);
+        sched.run_to_completion().unwrap();
+        assert_eq!(sched.metrics.completed as usize, n, "case {case}");
+        let total_generated: usize = sched.responses.iter().map(|r| r.generated).sum();
+        assert_eq!(sched.metrics.tokens_generated as usize, total_generated);
+        for r in &sched.responses {
+            assert!(r.ttft <= r.total, "TTFT ≤ E2E");
+            assert_eq!(r.generated, gen);
+        }
+    }
+}
+
+#[test]
+fn fh4_serving_beats_baseline8_on_qa_throughput() {
+    // End-to-end coordinator view of the paper's claim: half the GPUs,
+    // comparable-or-better service. Same workload on both systems.
+    let workload = || synthetic_workload(24, 2048, 64, Seconds::ms(5.0));
+    let run = |sys| {
+        let backend = SimBackend::new(sys, arch::qwen3_235b(), 8);
+        let mut sched = Scheduler::new(backend, Batcher::new(8, 64, 1 << 20));
+        sched.submit_all(workload());
+        sched.run_to_completion().unwrap();
+        sched.metrics.clone()
+    };
+    let base = run(baseline8());
+    let fh = run(fh4_15xm(Bandwidth::tbps(4.8)));
+    assert!(
+        fh.throughput_tokens_per_s() > 0.9 * base.throughput_tokens_per_s(),
+        "FH4 throughput {:.1} vs baseline {:.1} tok/s",
+        fh.throughput_tokens_per_s(),
+        base.throughput_tokens_per_s()
+    );
+}

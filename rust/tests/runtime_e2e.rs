@@ -1,0 +1,153 @@
+//! Integration tests over the PJRT runtime + artifact bundle.
+//!
+//! These need `make artifacts` to have run; they skip (with a loud
+//! message) if the bundle is missing so `cargo test` stays usable in a
+//! fresh checkout.
+
+use fenghuang::coordinator::tp::{verify_against_full_model, PjrtBackend, TpPipeline};
+use fenghuang::runtime::artifacts::Bundle;
+use fenghuang::runtime::{literal_f32, to_vec_f32, Runtime};
+
+fn bundle_or_skip() -> Option<Bundle> {
+    let dir = Bundle::default_dir();
+    if !dir.join("model_fwd.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Bundle::load(&dir).expect("bundle loads"))
+}
+
+#[test]
+fn bundle_loads_and_indexes_tensors() {
+    let Some(b) = bundle_or_skip() else { return };
+    assert_eq!(b.meta.tp, 4);
+    assert_eq!(b.meta.hidden, 256);
+    let embed = b.tensor("embed").unwrap();
+    assert_eq!(embed.len(), b.meta.vocab * b.meta.hidden);
+    assert!(b.tensor("nonexistent").is_err());
+    // Every manifest tensor is addressable.
+    for name in b.tensor_names() {
+        assert!(b.tensor(name).is_ok(), "{name}");
+    }
+}
+
+#[test]
+fn pjrt_executes_writeacc_kernel() {
+    let Some(b) = bundle_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&b.hlo_path("writeacc")).unwrap();
+    let n = b.meta.tp;
+    let lanes = b.meta.writeacc_lanes;
+    let data: Vec<f32> = (0..n * lanes).map(|i| (i % 13) as f32).collect();
+    let input = literal_f32(&data, &[n as i64, lanes as i64]).unwrap();
+    let out = exe.run(&[input]).unwrap();
+    let sum = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(sum.len(), lanes);
+    for (j, v) in sum.iter().enumerate().take(100) {
+        let expect: f32 = (0..n).map(|i| ((i * lanes + j) % 13) as f32).sum();
+        assert_eq!(*v, expect, "lane {j}");
+    }
+}
+
+#[test]
+fn pjrt_executes_attention_kernel_with_softmax_property() {
+    let Some(b) = bundle_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo(&b.hlo_path("attention")).unwrap();
+    let (h, s, d) = (b.meta.heads, b.meta.seq, b.meta.hidden / b.meta.heads);
+    let n = h * s * d;
+    let q: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+    let k: Vec<f32> = (0..n).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect();
+    let v: Vec<f32> = (0..n).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+    let dims = [1i64, h as i64, s as i64, d as i64];
+    let out = exe
+        .run(&[
+            literal_f32(&q, &dims).unwrap(),
+            literal_f32(&k, &dims).unwrap(),
+            literal_f32(&v, &dims).unwrap(),
+        ])
+        .unwrap();
+    let o = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(o.len(), n);
+    // Attention output is a convex combination of V rows.
+    let vmax = v.iter().cloned().fold(f32::MIN, f32::max);
+    let vmin = v.iter().cloned().fold(f32::MAX, f32::min);
+    for &x in &o {
+        assert!(x <= vmax + 1e-4 && x >= vmin - 1e-4, "{x} outside [{vmin}, {vmax}]");
+    }
+}
+
+#[test]
+fn full_model_forward_is_deterministic_and_causal() {
+    let Some(b) = bundle_or_skip() else { return };
+    let backend = PjrtBackend::new(&b.dir).unwrap();
+    let meta = backend.meta.clone();
+    let tokens: Vec<Vec<i32>> = (0..meta.batch)
+        .map(|bi| (0..meta.seq).map(|si| ((bi * 31 + si * 3) % meta.vocab) as i32).collect())
+        .collect();
+    let a = backend.forward(&tokens).unwrap();
+    let bb = backend.forward(&tokens).unwrap();
+    assert_eq!(a, bb, "same input → same logits");
+    // Causality: perturb the LAST token; logits at position 0 must not move.
+    let mut t2 = tokens.clone();
+    t2[0][meta.seq - 1] = (t2[0][meta.seq - 1] + 1) % meta.vocab as i32;
+    let c = backend.forward(&t2).unwrap();
+    let v = meta.vocab;
+    for j in 0..v {
+        assert!((a[j] - c[j]).abs() < 1e-5, "position 0 logit {j} moved");
+    }
+    // …and the last position must move.
+    let s = meta.seq;
+    let last = (s - 1) * v;
+    let moved = (0..v).any(|j| (a[last + j] - c[last + j]).abs() > 1e-4);
+    assert!(moved, "perturbing last token must change its logits");
+}
+
+#[test]
+fn tp_pipeline_matches_full_model_through_tab_pool() {
+    // The end-to-end composition check (also exercised by
+    // examples/serve_e2e.rs): 4 PJRT workers + write-accumulate == one
+    // full executable.
+    let Some(b) = bundle_or_skip() else { return };
+    let mut tp = TpPipeline::new(&b.dir).unwrap();
+    let full = PjrtBackend::new(&b.dir).unwrap();
+    let meta = tp.meta.clone();
+    let tokens: Vec<Vec<i32>> = (0..meta.batch)
+        .map(|bi| (0..meta.seq).map(|si| ((bi * 7 + si) % meta.vocab) as i32).collect())
+        .collect();
+    let max_diff = verify_against_full_model(&mut tp, &full, &tokens).unwrap();
+    assert!(max_diff < 1e-2, "TP-over-TAB diverged: {max_diff}");
+    let stats = tp.pool_stats();
+    assert_eq!(stats.accumulates as usize, meta.layers * 2 * meta.tp);
+    assert!(stats.notifications as usize >= meta.layers * 2 * meta.tp);
+}
+
+#[test]
+fn serving_loop_over_pjrt_completes_with_real_tokens() {
+    let Some(b) = bundle_or_skip() else { return };
+    use fenghuang::coordinator::{Batcher, Request, Scheduler};
+    use fenghuang::units::Seconds;
+    let backend = PjrtBackend::new(&b.dir).unwrap();
+    let meta = backend.meta.clone();
+    let batcher = Batcher::new(meta.batch, 64, meta.seq - 4);
+    let mut sched = Scheduler::new(backend, batcher);
+    let reqs: Vec<Request> = (0..6)
+        .map(|id| Request {
+            id,
+            prompt: (0..20).map(|i| ((id as usize + i) % meta.vocab) as i32).collect(),
+            max_new_tokens: 3,
+            arrival: Seconds::ZERO,
+        })
+        .collect();
+    sched.submit_all(reqs);
+    sched.run_to_completion().unwrap();
+    assert_eq!(sched.metrics.completed, 6);
+    for r in &sched.responses {
+        assert_eq!(r.tokens.len(), 23);
+        // Generated tokens must be valid vocab entries.
+        for &t in &r.tokens[20..] {
+            assert!((0..meta.vocab as i32).contains(&t));
+        }
+        assert!(r.ttft.value() > 0.0 && r.total >= r.ttft);
+    }
+}
