@@ -1,0 +1,100 @@
+//! Bench target: cluster-scale serving sweep (EXPERIMENTS.md §Serve-Scale).
+//!
+//! 1. Replica-count sweep 1→16 on the paper's three workloads: fleet
+//!    throughput and makespan under a fixed saturating request stream.
+//! 2. Policy shoot-out at 4 replicas on a heterogeneous stream:
+//!    round-robin vs least-outstanding-tokens vs kv-affinity (load
+//!    imbalance + tail TTFT).
+//! 3. Aggregated 4 vs disaggregated 2:2 — KV handoff cost over the TAB
+//!    fabric vs a shared-nothing link.
+
+use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
+use fenghuang::coordinator::router::Policy;
+use fenghuang::coordinator::Request;
+use fenghuang::models::arch::{gpt3_175b, grok1, qwen3_235b};
+use fenghuang::units::Seconds;
+
+/// Saturating stream: arrivals much faster than service, so makespan is
+/// capacity-bound and throughput reflects fleet width.
+fn stream(n: usize) -> Vec<Request> {
+    session_workload(n, 8, 1024, 32, Seconds::ms(1.0))
+}
+
+/// Alternating long/short prompts to stress routing balance.
+fn lopsided(n: usize) -> Vec<Request> {
+    let mut reqs = stream(n);
+    for (i, r) in reqs.iter_mut().enumerate() {
+        let len = if i % 2 == 0 { 3000 } else { 128 };
+        r.prompt = vec![(i % 500) as i32 + 1; len];
+    }
+    reqs
+}
+
+fn main() {
+    println!("== serve-scale: replica sweep (least-outstanding-tokens, 48 requests) ==");
+    println!("model     replicas  makespan(s)  tok/s   p95 TTFT(ms)  mean util");
+    for model in [gpt3_175b(), grok1(), qwen3_235b()] {
+        let mut base_tps = 0.0;
+        for replicas in [1usize, 2, 4, 8, 16] {
+            let cfg = ClusterConfig { policy: Policy::LeastLoaded, ..Default::default() };
+            let mut c = Cluster::fh4(replicas, &model, cfg).expect("cluster");
+            let r = c.run(stream(48)).expect("run");
+            let tps = r.throughput_tokens_per_s();
+            if replicas == 1 {
+                base_tps = tps;
+            }
+            let util: f64 = r.per_replica.iter().map(|p| p.utilization).sum::<f64>()
+                / r.per_replica.len() as f64;
+            println!(
+                "{:<9} {:>8}  {:>10.2}  {:>6.0}  {:>11.1}  {:>8.2}  ({:.2}x vs 1 replica)",
+                model.name,
+                replicas,
+                r.makespan().value(),
+                tps,
+                r.fleet.ttft.percentile_ms(95.0),
+                util,
+                if base_tps > 0.0 { tps / base_tps } else { 0.0 },
+            );
+        }
+    }
+
+    println!("\n== serve-scale: policy shoot-out (4 replicas, lopsided stream) ==");
+    println!("policy                      imbalance  p95 TTFT(ms)  p99 TTFT(ms)  makespan(s)");
+    for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::KvAffinity] {
+        let cfg = ClusterConfig { policy, ..Default::default() };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).expect("cluster");
+        let r = c.run(lopsided(48)).expect("run");
+        println!(
+            "{:<26} {:>9.3}  {:>11.1}  {:>11.1}  {:>10.2}",
+            policy.name(),
+            r.imbalance,
+            r.fleet.ttft.percentile_ms(95.0),
+            r.fleet.ttft.percentile_ms(99.0),
+            r.makespan().value(),
+        );
+    }
+
+    println!("\n== serve-scale: aggregated 4 vs disaggregated 2:2 (gpt3) ==");
+    for disagg in [None, Some((2usize, 2usize))] {
+        let cfg = ClusterConfig {
+            policy: Policy::LeastLoaded,
+            max_batch: 8,
+            disaggregate: disagg,
+        };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).expect("cluster");
+        let r = c.run(stream(48)).expect("run");
+        let label = match disagg {
+            None => "aggregated 4".to_string(),
+            Some((p, d)) => format!("disaggregated {p}:{d}"),
+        };
+        println!(
+            "{:<18} makespan {:>7.2}s  p95 TTFT {:>8.1} ms  p95 TPOT {:>7.2} ms  handoffs {} ({:.3} ms KV transfer)",
+            label,
+            r.makespan().value(),
+            r.fleet.ttft.percentile_ms(95.0),
+            r.fleet.tpot.percentile_ms(95.0),
+            r.handoffs,
+            r.handoff_time.as_ms(),
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Rack-scale serving demo: route a multi-session workload across a
+//! fleet of simulated FH4 nodes, then compare the same fleet in
+//! disaggregated prefill/decode mode.
+//!
+//! ```bash
+//! cargo run --release --example cluster_serve
+//! # or, equivalently, via the CLI:
+//! fenghuang serve --replicas 4 --policy kv-affinity
+//! ```
+
+use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
+use fenghuang::coordinator::router::Policy;
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::units::Seconds;
+
+fn main() -> fenghuang::Result<()> {
+    let model = gpt3_175b();
+    let workload = || session_workload(32, 8, 1024, 64, Seconds::ms(5.0));
+
+    println!("== 4-replica FH4 rack, three routing policies ==");
+    for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::KvAffinity] {
+        let cfg = ClusterConfig { policy, ..Default::default() };
+        let mut cluster = Cluster::fh4(4, &model, cfg)?;
+        let report = cluster.run(workload())?;
+        println!("{}", report.summary());
+    }
+
+    println!("== same rack, disaggregated 2 prefill : 2 decode ==");
+    let cfg = ClusterConfig {
+        policy: Policy::LeastLoaded,
+        max_batch: 8,
+        disaggregate: Some((2, 2)),
+    };
+    let mut cluster = Cluster::fh4(4, &model, cfg)?;
+    let report = cluster.run(workload())?;
+    println!("{}", report.summary());
+    Ok(())
+}

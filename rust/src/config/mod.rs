@@ -251,6 +251,32 @@ pub fn fig41_bandwidth_sweep() -> Vec<Bandwidth> {
     [4.0, 4.8, 5.6, 6.4].iter().map(|&t| Bandwidth::tbps(t)).collect()
 }
 
+/// Cluster preset: a rack of `replicas` identical FH4-1.5xM nodes, each
+/// with its own TAB pool at `remote_bw` (the unit the paper's "50% fewer
+/// GPUs at rack scale" claim multiplies out from; DESIGN.md §6). An empty
+/// rack is valid data here; `Cluster::new` is where zero replicas errors.
+pub fn fh4_rack(replicas: usize, remote_bw: Bandwidth) -> Vec<SystemConfig> {
+    (0..replicas)
+        .map(|i| {
+            let mut s = fh4_15xm(remote_bw);
+            s.name = format!("FH4-1.5xM/r{i}");
+            s
+        })
+        .collect()
+}
+
+/// Cluster preset: a rack of `replicas` Baseline8 nodes (the
+/// shared-nothing comparison fleet).
+pub fn baseline_rack(replicas: usize) -> Vec<SystemConfig> {
+    (0..replicas)
+        .map(|i| {
+            let mut s = baseline8();
+            s.name = format!("Baseline8/r{i}");
+            s
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,5 +332,20 @@ mod tests {
         let s = fig41_bandwidth_sweep();
         assert_eq!(s.first().unwrap().as_tbps(), 4.0);
         assert_eq!(s.last().unwrap().as_tbps(), 6.4);
+    }
+
+    #[test]
+    fn rack_presets_name_replicas_distinctly() {
+        let rack = fh4_rack(4, Bandwidth::tbps(4.8));
+        assert_eq!(rack.len(), 4);
+        assert_eq!(rack[0].name, "FH4-1.5xM/r0");
+        assert_eq!(rack[3].name, "FH4-1.5xM/r3");
+        for s in &rack {
+            assert!(s.is_fenghuang());
+            s.validate().unwrap();
+        }
+        let base = baseline_rack(2);
+        assert_eq!(base[1].name, "Baseline8/r1");
+        assert!(!base[0].is_fenghuang());
     }
 }

@@ -33,10 +33,16 @@ impl Batcher {
         Batcher { queue: VecDeque::new(), max_batch, tile, max_prompt }
     }
 
+    /// Whether a request would be accepted: the single admission rule,
+    /// also consulted by the cluster front door before routing.
+    pub fn admits(&self, req: &Request) -> bool {
+        req.prompt_len() <= self.max_prompt && !req.prompt.is_empty()
+    }
+
     /// Enqueue a request. Returns false (rejecting it) if the prompt
     /// exceeds the admissible length.
     pub fn submit(&mut self, req: Request) -> bool {
-        if req.prompt_len() > self.max_prompt || req.prompt.is_empty() {
+        if !self.admits(&req) {
             return false;
         }
         self.queue.push_back(req);

@@ -1,0 +1,583 @@
+//! Multi-replica cluster simulator: rack-scale FengHuang serving
+//! (DESIGN.md §6).
+//!
+//! A [`Cluster`] owns N replicas — each a [`Scheduler`] over its own
+//! [`SimBackend`] node — co-simulated on a shared virtual clock. Requests
+//! enter through the [`Router`] (round-robin / least-outstanding-tokens /
+//! KV-affinity); the event loop processes arrivals in global time order,
+//! advancing every replica's local clock to each arrival before the
+//! routing decision so the router observes *current* outstanding load,
+//! not admission-time guesses.
+//!
+//! Two topologies:
+//!
+//! * **Aggregated** — every replica runs the full prefill+decode loop.
+//! * **Disaggregated** — replicas split into a prefill pool and a decode
+//!   pool. Prefill replicas emit [`Handoff`]s; the cluster charges the
+//!   KV transfer ([`FabricLatencies::kv_handoff`]) and injects the
+//!   sequence into the least-loaded decode replica. On TAB fabrics the
+//!   KV pages already live in shared memory, so the handoff is
+//!   metadata-only — the cluster-scope payoff of the paper's memory
+//!   orchestration; on shared-nothing fabrics the full KV serialises
+//!   over the link.
+//!
+//! [`FabricLatencies::kv_handoff`]: crate::fabric::FabricLatencies::kv_handoff
+//! [`Handoff`]: super::scheduler::Handoff
+
+use super::batcher::Batcher;
+use super::engine::SimBackend;
+use super::metrics::Metrics;
+use super::request::Request;
+use super::router::{Policy, Router};
+use super::scheduler::{SchedMode, Scheduler};
+use crate::config::{fh4_rack, SystemConfig};
+use crate::error::{FhError, Result};
+use crate::models::arch::ModelArch;
+use crate::models::memory;
+use crate::units::{Bandwidth, Seconds};
+
+/// Cluster topology and policy knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub policy: Policy,
+    /// Per-replica continuous-batching width.
+    pub max_batch: usize,
+    /// `Some((prefill, decode))` splits the fleet into disaggregated
+    /// pools of those sizes; `None` runs every replica aggregated.
+    pub disaggregate: Option<(usize, usize)>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { policy: Policy::LeastLoaded, max_batch: 8, disaggregate: None }
+    }
+}
+
+/// Per-replica slice of a [`ClusterReport`].
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub name: String,
+    pub role: SchedMode,
+    pub completed: u64,
+    pub handoffs: u64,
+    /// Cumulative tokens the router sent this replica.
+    pub routed_tokens: u64,
+    pub busy: Seconds,
+    pub clock: Seconds,
+    pub utilization: f64,
+}
+
+/// Fleet-level result of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub model: String,
+    pub policy: Policy,
+    /// Merged metrics: latency samples from every replica, counters
+    /// summed, clock = fleet makespan.
+    pub fleet: Metrics,
+    pub per_replica: Vec<ReplicaReport>,
+    /// Max/mean of routed tokens across the serving (or prefill) pool.
+    pub imbalance: f64,
+    /// Disaggregated mode only: handoff count and total KV-transfer time.
+    pub handoffs: u64,
+    pub handoff_time: Seconds,
+}
+
+impl ClusterReport {
+    pub fn makespan(&self) -> Seconds {
+        self.fleet.clock
+    }
+
+    /// Fleet throughput in generated tokens per virtual second.
+    pub fn throughput_tokens_per_s(&self) -> f64 {
+        self.fleet.throughput_tokens_per_s()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "cluster of {} replicas (policy {}) serving {}\n{}\n",
+            self.per_replica.len(),
+            self.policy.name(),
+            self.model,
+            self.fleet.summary()
+        );
+        for r in &self.per_replica {
+            let role = match r.role {
+                SchedMode::Full => "serve",
+                SchedMode::PrefillOnly => "prefill",
+                SchedMode::DecodeOnly => "decode",
+            };
+            s.push_str(&format!(
+                "  {:<14} [{role:^7}] completed {:>4} | handoffs {:>4} | routed {:>9} tok | busy {:>8.3}s | util {:>5.1}%\n",
+                r.name,
+                r.completed,
+                r.handoffs,
+                r.routed_tokens,
+                r.busy.value(),
+                r.utilization * 100.0
+            ));
+        }
+        s.push_str(&format!(
+            "load imbalance (max/mean routed tokens): {:.3}\n",
+            self.imbalance
+        ));
+        if self.handoffs > 0 {
+            s.push_str(&format!(
+                "KV handoffs: {} totalling {:.3} ms of transfer\n",
+                self.handoffs,
+                self.handoff_time.as_ms()
+            ));
+        }
+        s
+    }
+}
+
+/// The multi-replica cluster simulator.
+pub struct Cluster {
+    replicas: Vec<Scheduler<SimBackend>>,
+    names: Vec<String>,
+    roles: Vec<SchedMode>,
+    cfg: ClusterConfig,
+    model: ModelArch,
+    /// Routes arrivals over the serving pool (all replicas when
+    /// aggregated, the prefill pool when disaggregated).
+    router: Router,
+    /// Disaggregated mode: least-outstanding-tokens over the decode pool.
+    decode_router: Option<Router>,
+    /// First decode-pool index (== prefill pool size).
+    decode_base: usize,
+    /// Response / handoff high-water marks per replica (for draining).
+    resp_seen: Vec<usize>,
+    handoff_seen: Vec<usize>,
+    handoffs: u64,
+    handoff_time: Seconds,
+    /// Requests refused at the cluster front door (inadmissible prompts)
+    /// — never routed, so they can't leak outstanding load in the router.
+    rejected: u64,
+}
+
+impl Cluster {
+    /// Build a cluster from per-replica node configs (see
+    /// [`fh4_rack`] / [`crate::config::baseline_rack`]). With
+    /// `cfg.disaggregate = Some((p, d))`, the first `p` systems form the
+    /// prefill pool and the next `d` the decode pool; `p + d` must equal
+    /// `systems.len()`.
+    pub fn new(systems: Vec<SystemConfig>, model: &ModelArch, cfg: ClusterConfig) -> Result<Self> {
+        if systems.is_empty() {
+            return Err(FhError::Config("cluster needs at least one replica".into()));
+        }
+        let (serving_pool, decode_base) = match cfg.disaggregate {
+            Some((p, d)) => {
+                if p == 0 || d == 0 || p + d != systems.len() {
+                    return Err(FhError::Config(format!(
+                        "disaggregate {p}:{d} does not cover {} replicas",
+                        systems.len()
+                    )));
+                }
+                (p, p)
+            }
+            None => (systems.len(), systems.len()),
+        };
+        let mut replicas = Vec::with_capacity(systems.len());
+        let mut names = Vec::with_capacity(systems.len());
+        let mut roles = Vec::with_capacity(systems.len());
+        for (i, sys) in systems.into_iter().enumerate() {
+            sys.validate()?;
+            let role = match cfg.disaggregate {
+                Some(_) if i < decode_base => SchedMode::PrefillOnly,
+                Some(_) => SchedMode::DecodeOnly,
+                None => SchedMode::Full,
+            };
+            names.push(sys.name.clone());
+            let backend = SimBackend::new(sys, model.clone(), cfg.max_batch);
+            let batcher = Batcher::new(cfg.max_batch, 64, model.max_seq as usize);
+            replicas.push(Scheduler::new(backend, batcher).with_mode(role));
+            roles.push(role);
+        }
+        let router = Router::new(serving_pool, cfg.policy);
+        let decode_router = cfg
+            .disaggregate
+            .map(|(_, d)| Router::new(d, Policy::LeastLoaded));
+        let n = replicas.len();
+        Ok(Cluster {
+            replicas,
+            names,
+            roles,
+            cfg,
+            model: model.clone(),
+            router,
+            decode_router,
+            decode_base,
+            resp_seen: vec![0; n],
+            handoff_seen: vec![0; n],
+            handoffs: 0,
+            handoff_time: Seconds::ZERO,
+            rejected: 0,
+        })
+    }
+
+    /// Convenience: an FH4-1.5xM rack at 4.8 TB/s remote bandwidth.
+    pub fn fh4(replicas: usize, model: &ModelArch, cfg: ClusterConfig) -> Result<Self> {
+        Cluster::new(fh4_rack(replicas, Bandwidth::tbps(4.8)), model, cfg)
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Release router load for responses this replica finished since the
+    /// last drain. A completed response's token vector is exactly the
+    /// work the router charged (prompt + generation budget).
+    fn drain_completions(&mut self, idx: usize) {
+        let fresh = &self.replicas[idx].responses[self.resp_seen[idx]..];
+        let works: Vec<u64> = fresh.iter().map(|r| r.tokens.len() as u64).collect();
+        self.resp_seen[idx] = self.replicas[idx].responses.len();
+        for w in works {
+            match self.roles[idx] {
+                SchedMode::DecodeOnly => {
+                    if let Some(dr) = self.decode_router.as_mut() {
+                        dr.complete_work(idx - self.decode_base, w);
+                    }
+                }
+                _ => self.router.complete_work(idx, w),
+            }
+        }
+    }
+
+    /// Move fresh handoffs from prefill replica `idx` into decode
+    /// replicas, charging the KV transfer over the fabric.
+    fn transfer_handoffs(&mut self, idx: usize) {
+        let fresh: Vec<_> =
+            self.replicas[idx].handoffs[self.handoff_seen[idx]..].to_vec();
+        self.handoff_seen[idx] = self.replicas[idx].handoffs.len();
+        for h in fresh {
+            // Prefill work (what route_work charged) leaves the prefill
+            // replica once handed off.
+            self.router
+                .complete_work(idx, (h.req.prompt_len() + 1) as u64);
+            let ctx = h.tokens.len() as u64;
+            let kv = memory::kv_cache_bytes(&self.model, 1, ctx);
+            let sys = &self.replicas[idx].backend().sys;
+            let cost = sys.latencies.kv_handoff(kv, sys.fabric_bw, sys.is_fenghuang());
+            self.handoffs += 1;
+            self.handoff_time += cost;
+            let dr = self.decode_router.as_mut().expect("disaggregated");
+            // Outstanding decode work: context plus remaining generation
+            // budget — released as the response's final token count.
+            let work = (ctx + h.req.max_new_tokens as u64).saturating_sub(1);
+            let di = self.decode_base + dr.route_work(h.req.affinity_key(), work);
+            let ready = h.done_at + cost;
+            self.replicas[di].inject(h, ready);
+        }
+    }
+
+    /// Advance every replica's local clock to global time `t`, moving
+    /// handoffs and releasing completed load along the way.
+    fn advance_to(&mut self, t: Seconds) -> Result<()> {
+        for i in 0..self.decode_base {
+            self.replicas[i].run_until(t)?;
+            self.drain_completions(i);
+            if self.cfg.disaggregate.is_some() {
+                self.transfer_handoffs(i);
+            }
+        }
+        for i in self.decode_base..self.replicas.len() {
+            self.replicas[i].run_until(t)?;
+            self.drain_completions(i);
+        }
+        Ok(())
+    }
+
+    /// Serve a workload to completion and produce the fleet report.
+    pub fn run(&mut self, mut reqs: Vec<Request>) -> Result<ClusterReport> {
+        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for req in reqs {
+            self.advance_to(req.arrival)?;
+            // Aggregated replicas own prompt + generation; a prefill pool
+            // member only owns the prompt (+1 first token) until handoff.
+            let charged = match self.cfg.disaggregate {
+                Some(_) => (req.prompt_len() + 1) as u64,
+                None => req.work_tokens(),
+            };
+            let idx = self.router.route_work(req.affinity_key(), charged);
+            // Admission control: a request the target replica's batcher
+            // would refuse must not keep its routing charge (the load
+            // would never be released and would repel least-loaded and
+            // kv-affinity decisions from that replica forever).
+            if !self.replicas[idx].admits(&req) {
+                self.router.unroute(idx, charged);
+                self.rejected += 1;
+                continue;
+            }
+            self.replicas[idx].submit_all(vec![req]);
+        }
+        // Drain. Prefill/serving pool first; in disaggregated mode its
+        // completion produces the final handoffs, which the decode pool
+        // then drains (prefill replicas never depend on decode ones, so
+        // running each pool to completion preserves event order).
+        for i in 0..self.decode_base {
+            self.replicas[i].run_to_completion()?;
+            self.drain_completions(i);
+            if self.cfg.disaggregate.is_some() {
+                self.transfer_handoffs(i);
+            }
+        }
+        for i in self.decode_base..self.replicas.len() {
+            self.replicas[i].run_to_completion()?;
+            self.drain_completions(i);
+        }
+        Ok(self.report())
+    }
+
+    fn report(&self) -> ClusterReport {
+        let mut fleet = Metrics::default();
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        fleet.rejected = self.rejected;
+        for (i, r) in self.replicas.iter().enumerate() {
+            fleet.merge(&r.metrics);
+            let routed_tokens = match self.roles[i] {
+                SchedMode::DecodeOnly => self
+                    .decode_router
+                    .as_ref()
+                    .map(|dr| dr.routed()[i - self.decode_base])
+                    .unwrap_or(0),
+                _ => self.router.routed()[i],
+            };
+            per_replica.push(ReplicaReport {
+                name: self.names[i].clone(),
+                role: self.roles[i],
+                completed: r.metrics.completed,
+                handoffs: r.handoffs.len() as u64,
+                routed_tokens,
+                busy: r.metrics.busy,
+                clock: r.metrics.clock,
+                utilization: r.metrics.utilization(),
+            });
+        }
+        ClusterReport {
+            model: self.model.name.clone(),
+            policy: self.cfg.policy,
+            fleet,
+            per_replica,
+            imbalance: self.router.imbalance(),
+            handoffs: self.handoffs,
+            handoff_time: self.handoff_time,
+        }
+    }
+}
+
+/// Deterministic multi-session workload: `n` requests spread over
+/// `sessions` conversations. Requests of one session share a prompt
+/// prefix (its "system prompt"), so [`Request::affinity_key`] groups them
+/// — the workload KV-affinity routing is built for.
+pub fn session_workload(
+    n: usize,
+    sessions: usize,
+    prompt: usize,
+    gen: usize,
+    mean_gap: Seconds,
+) -> Vec<Request> {
+    let sessions = sessions.max(1);
+    let mut state: u64 = 0x243F6A8885A308D3;
+    let mut t = Seconds::ZERO;
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let jitter = ((state >> 33) % 1000) as f64 / 1000.0;
+        t += mean_gap * (2.0 * jitter);
+        let session = id % sessions; // every session sees traffic
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let plen = (prompt / 2 + ((state >> 33) as usize % prompt.max(1))).max(64);
+        // Prefix identifies the session; the tail varies per request.
+        let mut tokens: Vec<i32> = Vec::with_capacity(plen);
+        for i in 0..plen.min(super::request::AFFINITY_PREFIX) {
+            tokens.push(((session * 131 + i * 7) % 509) as i32 + 1);
+        }
+        for i in tokens.len()..plen {
+            tokens.push(((id * 31 + i) % 509) as i32 + 1);
+        }
+        out.push(Request { id: id as u64, prompt: tokens, max_new_tokens: gen, arrival: t });
+    }
+    out
+}
+
+/// `fenghuang serve --replicas N`: run a multi-session workload on an
+/// FH4 rack and return the fleet summary.
+pub fn demo_serve_cluster(
+    model: &ModelArch,
+    requests: usize,
+    max_batch: usize,
+    replicas: usize,
+    policy: Policy,
+    disaggregate: Option<(usize, usize)>,
+    sessions: usize,
+) -> Result<String> {
+    let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
+    let cfg = ClusterConfig { policy, max_batch, disaggregate };
+    let mut cluster = Cluster::fh4(total, model, cfg)?;
+    // Keep per-replica pressure constant as the fleet grows.
+    let gap = Seconds::ms(50.0 / total.max(1) as f64);
+    let report = cluster.run(session_workload(requests, sessions, 1024, 128, gap))?;
+    Ok(report.summary())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::gpt3_175b;
+
+    fn small_workload(n: usize) -> Vec<Request> {
+        session_workload(n, 4, 256, 8, Seconds::ms(5.0))
+    }
+
+    #[test]
+    fn cluster_completes_every_request() {
+        let mut c = Cluster::fh4(2, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let r = c.run(small_workload(12)).unwrap();
+        assert_eq!(r.fleet.completed, 12);
+        assert_eq!(r.fleet.ttft.count(), 12);
+        assert_eq!(r.fleet.tokens_generated, 12 * 8);
+        assert!(r.makespan() > Seconds::ZERO);
+        assert_eq!(r.per_replica.len(), 2);
+        let sum: u64 = r.per_replica.iter().map(|p| p.completed).sum();
+        assert_eq!(sum, 12);
+    }
+
+    #[test]
+    fn throughput_scales_with_replica_count() {
+        // Same saturating workload on 1 vs 4 replicas: the fleet must
+        // finish it in substantially less virtual time.
+        let load = || session_workload(32, 8, 512, 16, Seconds::ms(1.0));
+        let mut c1 = Cluster::fh4(1, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let r1 = c1.run(load()).unwrap();
+        let mut c4 = Cluster::fh4(4, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let r4 = c4.run(load()).unwrap();
+        assert_eq!(r1.fleet.completed, 32);
+        assert_eq!(r4.fleet.completed, 32);
+        assert!(
+            r4.makespan().value() < 0.6 * r1.makespan().value(),
+            "4 replicas: {:.3}s vs 1 replica: {:.3}s",
+            r4.makespan().value(),
+            r1.makespan().value()
+        );
+    }
+
+    #[test]
+    fn least_loaded_beats_round_robin_on_imbalance() {
+        // Heterogeneous prompts: round-robin ignores size, LOT equalises.
+        let lopsided = || {
+            let mut reqs = small_workload(24);
+            for (i, r) in reqs.iter_mut().enumerate() {
+                let len = if i % 2 == 0 { 2000 } else { 64 };
+                r.prompt = vec![(i % 500) as i32 + 1; len];
+            }
+            reqs
+        };
+        let run = |policy| {
+            let cfg = ClusterConfig { policy, ..Default::default() };
+            let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
+            c.run(lopsided()).unwrap()
+        };
+        let rr = run(Policy::RoundRobin);
+        let lot = run(Policy::LeastLoaded);
+        assert_eq!(rr.fleet.completed, 24);
+        assert_eq!(lot.fleet.completed, 24);
+        assert!(
+            lot.imbalance <= rr.imbalance,
+            "LOT imbalance {:.3} vs RR {:.3}",
+            lot.imbalance,
+            rr.imbalance
+        );
+    }
+
+    #[test]
+    fn kv_affinity_cluster_serves_sessions() {
+        let cfg = ClusterConfig { policy: Policy::KvAffinity, ..Default::default() };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(small_workload(20)).unwrap();
+        assert_eq!(r.fleet.completed, 20);
+        assert!(r.imbalance >= 1.0);
+        assert!(r.summary().contains("kv-affinity"));
+    }
+
+    #[test]
+    fn disaggregated_cluster_hands_off_and_completes() {
+        let cfg = ClusterConfig {
+            policy: Policy::LeastLoaded,
+            max_batch: 8,
+            disaggregate: Some((2, 2)),
+        };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(small_workload(16)).unwrap();
+        assert_eq!(r.fleet.completed, 16);
+        assert_eq!(r.handoffs, 16, "every request crosses the pools once");
+        // TTFT measured on the prefill pool, decode latencies downstream.
+        assert_eq!(r.fleet.ttft.count(), 16);
+        assert!(r.fleet.tpot.count() > 0);
+        // TAB fabric: handoff is metadata-only (≈350 ns each).
+        assert!(
+            r.handoff_time.as_ms() < 1.0,
+            "TAB handoff cost {:.3} ms",
+            r.handoff_time.as_ms()
+        );
+        let prefill_done: u64 = r
+            .per_replica
+            .iter()
+            .filter(|p| p.role == SchedMode::PrefillOnly)
+            .map(|p| p.completed)
+            .sum();
+        assert_eq!(prefill_done, 0, "prefill pool hands off instead of completing");
+    }
+
+    #[test]
+    fn inadmissible_prompts_rejected_without_charging_router() {
+        let mut c = Cluster::fh4(2, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let mut reqs = small_workload(6);
+        // Oversize two prompts beyond the model's max_seq.
+        let cap = gpt3_175b().max_seq as usize;
+        reqs[1].prompt = vec![1; cap + 1];
+        reqs[4].prompt = vec![1; cap * 2];
+        let admitted_work: u64 = reqs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 1 && *i != 4)
+            .map(|(_, r)| r.work_tokens())
+            .sum();
+        let r = c.run(reqs).unwrap();
+        assert_eq!(r.fleet.completed, 4);
+        assert_eq!(r.fleet.rejected, 2);
+        // Rejected requests never touched the router's accounting.
+        let routed: u64 = r.per_replica.iter().map(|p| p.routed_tokens).sum();
+        assert_eq!(routed, admitted_work);
+    }
+
+    #[test]
+    fn disaggregate_split_must_cover_fleet() {
+        let cfg = ClusterConfig { disaggregate: Some((3, 2)), ..Default::default() };
+        assert!(Cluster::fh4(4, &gpt3_175b(), cfg).is_err());
+        let cfg = ClusterConfig { disaggregate: Some((0, 4)), ..Default::default() };
+        assert!(Cluster::fh4(4, &gpt3_175b(), cfg).is_err());
+    }
+
+    #[test]
+    fn session_workload_groups_by_prefix() {
+        let reqs = session_workload(50, 5, 256, 8, Seconds::ms(1.0));
+        assert_eq!(reqs.len(), 50);
+        let mut keys: Vec<u64> = reqs.iter().map(|r| r.affinity_key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 5, "one affinity key per session");
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn demo_serve_cluster_reports_fleet_percentiles() {
+        let s =
+            demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4).unwrap();
+        assert!(s.contains("completed 12"), "{s}");
+        assert!(s.contains("p99"), "{s}");
+        assert!(s.contains("load imbalance"), "{s}");
+    }
+}

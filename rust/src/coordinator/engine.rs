@@ -4,8 +4,8 @@
 //! * [`SimBackend`] — paper-scale models on simulated FengHuang/Baseline
 //!   nodes: step costs come from the trace-driven simulator (`crate::sim`)
 //!   on a virtual clock. This is what `fenghuang serve` uses.
-//! * The PJRT tiny-model backend lives in [`super::tp`] (real compute,
-//!   real wall clock, TAB-pool communication) and drives
+//! * The PJRT tiny-model backend lives in `super::tp` (real compute,
+//!   real wall clock, TAB-pool communication; `pjrt` feature) and drives
 //!   `examples/serve_e2e.rs`.
 
 use crate::config::SystemConfig;

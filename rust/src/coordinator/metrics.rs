@@ -1,4 +1,5 @@
-//! Serving metrics: latency distributions and throughput counters.
+//! Serving metrics: latency distributions, throughput counters, and
+//! fleet-level aggregation across cluster replicas (DESIGN.md §6).
 
 use crate::units::Seconds;
 
@@ -39,6 +40,11 @@ impl LatencyStat {
     pub fn max_ms(&self) -> f64 {
         self.samples_ms.iter().copied().fold(0.0, f64::max)
     }
+
+    /// Absorb another stat's samples (fleet aggregation).
+    pub fn merge(&mut self, other: &LatencyStat) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
 }
 
 /// Aggregate serving metrics.
@@ -51,6 +57,9 @@ pub struct Metrics {
     pub rejected: u64,
     pub tokens_generated: u64,
     pub clock: Seconds,
+    /// Time the backend actually spent executing prefill/decode steps
+    /// (clock minus idle gaps) — per-replica utilization numerator.
+    pub busy: Seconds,
 }
 
 impl Metrics {
@@ -68,11 +77,34 @@ impl Metrics {
         self.completed as f64 / self.clock.value()
     }
 
+    /// Fraction of the serving clock the backend was busy.
+    pub fn utilization(&self) -> f64 {
+        if self.clock.value() <= 0.0 {
+            return 0.0;
+        }
+        (self.busy / self.clock).min(1.0)
+    }
+
+    /// Fold another replica's metrics into this one. Latency samples
+    /// concatenate, counters add, busy time adds (fleet GPU-seconds), and
+    /// the clock takes the max (fleet makespan on the shared virtual
+    /// clock).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.e2e.merge(&other.e2e);
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.tokens_generated += other.tokens_generated;
+        self.busy += other.busy;
+        self.clock = self.clock.max(other.clock);
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "completed {} | rejected {} | tokens {} | wall {:.3}s\n\
-             TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  max {:.2}\n\
-             TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}\n\
+             TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}\n\
+             TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}\n\
              E2E   mean {:.2} ms  p95 {:.2}\n\
              throughput {:.1} tok/s | {:.2} req/s",
             self.completed,
@@ -82,10 +114,12 @@ impl Metrics {
             self.ttft.mean_ms(),
             self.ttft.percentile_ms(50.0),
             self.ttft.percentile_ms(95.0),
+            self.ttft.percentile_ms(99.0),
             self.ttft.max_ms(),
             self.tpot.mean_ms(),
             self.tpot.percentile_ms(50.0),
             self.tpot.percentile_ms(95.0),
+            self.tpot.percentile_ms(99.0),
             self.e2e.mean_ms(),
             self.e2e.percentile_ms(95.0),
             self.throughput_tokens_per_s(),
@@ -118,6 +152,7 @@ mod tests {
         assert_eq!(s.percentile_ms(95.0), 0.0);
         let m = Metrics::default();
         assert_eq!(m.throughput_tokens_per_s(), 0.0);
+        assert_eq!(m.utilization(), 0.0);
     }
 
     #[test]
@@ -130,5 +165,42 @@ mod tests {
         };
         assert_eq!(m.throughput_tokens_per_s(), 250.0);
         assert_eq!(m.requests_per_s(), 5.0);
+    }
+
+    #[test]
+    fn merge_concatenates_samples_and_takes_max_clock() {
+        let mut a = Metrics {
+            completed: 3,
+            tokens_generated: 30,
+            clock: Seconds::new(1.0),
+            busy: Seconds::new(0.5),
+            ..Default::default()
+        };
+        a.ttft.record(Seconds::ms(10.0));
+        let mut b = Metrics {
+            completed: 2,
+            tokens_generated: 20,
+            clock: Seconds::new(2.0),
+            busy: Seconds::new(1.0),
+            ..Default::default()
+        };
+        b.ttft.record(Seconds::ms(30.0));
+        a.merge(&b);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.tokens_generated, 50);
+        assert_eq!(a.clock, Seconds::new(2.0));
+        assert_eq!(a.busy, Seconds::new(1.5));
+        assert_eq!(a.ttft.count(), 2);
+        assert_eq!(a.ttft.max_ms(), 30.0);
+    }
+
+    #[test]
+    fn utilization_is_busy_over_clock() {
+        let m = Metrics {
+            clock: Seconds::new(4.0),
+            busy: Seconds::new(3.0),
+            ..Default::default()
+        };
+        assert!((m.utilization() - 0.75).abs() < 1e-12);
     }
 }

@@ -5,24 +5,33 @@
 //! * [`scheduler`] — the prefill/decode serving loop (virtual or wall
 //!   clock, backend-agnostic);
 //! * [`engine`] — backends: mock, simulation (paper-scale models);
-//! * [`tp`] — the PJRT tensor-parallel pipeline over the functional TAB
-//!   pool (the end-to-end request path of `examples/serve_e2e.rs`);
-//! * [`router`] — multi-replica request routing;
-//! * [`metrics`] — latency/throughput accounting.
+//! * `tp` — the PJRT tensor-parallel pipeline over the functional TAB
+//!   pool (the end-to-end request path of `examples/serve_e2e.rs`;
+//!   requires the `pjrt` feature);
+//! * [`router`] — multi-replica request routing (round-robin,
+//!   least-outstanding-tokens, KV-affinity);
+//! * [`cluster`] — rack-scale co-simulation of N replicas with routed
+//!   dispatch and optional disaggregated prefill/decode pools;
+//! * [`metrics`] — latency/throughput accounting, per-replica and
+//!   fleet-level.
 
 pub mod batcher;
+pub mod cluster;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod tp;
 
 pub use batcher::Batcher;
+pub use cluster::{demo_serve_cluster, session_workload, Cluster, ClusterConfig, ClusterReport};
 pub use engine::{Backend, SimBackend};
 pub use metrics::Metrics;
 pub use request::{Request, Response};
-pub use scheduler::Scheduler;
+pub use router::{Policy, Router};
+pub use scheduler::{SchedMode, Scheduler};
 
 use crate::config::fh4_15xm;
 use crate::error::Result;

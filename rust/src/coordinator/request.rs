@@ -18,7 +18,28 @@ impl Request {
     pub fn prompt_len(&self) -> usize {
         self.prompt.len()
     }
+
+    /// Routing work estimate: prompt plus generation budget in tokens.
+    pub fn work_tokens(&self) -> u64 {
+        (self.prompt.len() + self.max_new_tokens) as u64
+    }
+
+    /// Session/prefix key for KV-affinity routing: FNV-1a over the first
+    /// [`AFFINITY_PREFIX`] prompt tokens. Requests of the same session
+    /// share a prompt prefix (system prompt + conversation head), so they
+    /// hash to the same replica and can reuse its KV/prefix cache.
+    pub fn affinity_key(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &t in self.prompt.iter().take(AFFINITY_PREFIX) {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
 }
+
+/// Number of leading prompt tokens hashed by [`Request::affinity_key`].
+pub const AFFINITY_PREFIX: usize = 32;
 
 /// Lifecycle state tracked by the scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,5 +90,23 @@ mod tests {
         assert!((r.tpot().as_ms() - 50.0).abs() < 1e-9);
         let single = Response { generated: 1, ..r };
         assert_eq!(single.tpot(), Seconds::ZERO);
+    }
+
+    #[test]
+    fn affinity_key_depends_on_prefix_only() {
+        let base = Request {
+            id: 0,
+            prompt: (0..100).collect(),
+            max_new_tokens: 8,
+            arrival: Seconds::ZERO,
+        };
+        // Same prefix, different tail → same key (prefix-cache hit).
+        let mut tail = base.clone();
+        tail.prompt[AFFINITY_PREFIX + 5] = 999;
+        assert_eq!(base.affinity_key(), tail.affinity_key());
+        // Different prefix → different key.
+        let mut other = base.clone();
+        other.prompt[0] = 999;
+        assert_ne!(base.affinity_key(), other.affinity_key());
     }
 }

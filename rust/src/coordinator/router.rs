@@ -1,17 +1,53 @@
 //! Request router across engine replicas (vllm-router-style).
 //!
 //! A FengHuang rack hosts several independent 4-GPU nodes; the router
-//! spreads incoming requests across them. Policies: round-robin and
-//! least-loaded (by outstanding token estimate).
+//! spreads incoming requests across them. Policies (DESIGN.md §6):
+//!
+//! * **round-robin** — stateless cycling;
+//! * **least-outstanding-tokens** — pick the replica with the smallest
+//!   outstanding work estimate (prompt + generation-budget tokens);
+//! * **kv-affinity** — requests sharing a prompt prefix
+//!   ([`Request::affinity_key`]) stick to one replica so its KV/prefix
+//!   cache stays hot, spilling to the least-loaded replica only when the
+//!   sticky replica is overloaded.
 
 use super::request::Request;
+use std::collections::HashMap;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    KvAffinity,
 }
+
+impl Policy {
+    /// Parse a CLI policy name.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "rr" => Some(Policy::RoundRobin),
+            "least-loaded" | "least-outstanding-tokens" | "lot" => Some(Policy::LeastLoaded),
+            "kv-affinity" | "session-affinity" | "kv" => Some(Policy::KvAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-outstanding-tokens",
+            Policy::KvAffinity => "kv-affinity",
+        }
+    }
+}
+
+/// Default overload spill threshold for [`Policy::KvAffinity`], in
+/// outstanding tokens above the least-loaded replica: a sticky replica
+/// this far ahead of the fleet minimum loses the session to the
+/// least-loaded replica (cache locality is worth a bounded, not
+/// unbounded, queueing penalty).
+pub const DEFAULT_SPILL_TOKENS: u64 = 16 * 1024;
 
 /// Router state over `n` replicas.
 pub struct Router {
@@ -19,46 +55,118 @@ pub struct Router {
     next: usize,
     /// Outstanding work estimate per replica (prompt + max_new tokens).
     load: Vec<u64>,
+    /// Cumulative tokens ever routed per replica (imbalance metric).
+    routed: Vec<u64>,
+    /// Sticky session → replica map for [`Policy::KvAffinity`].
+    affinity: HashMap<u64, usize>,
+    spill_tokens: u64,
 }
 
 impl Router {
     pub fn new(replicas: usize, policy: Policy) -> Self {
         assert!(replicas > 0);
-        Router { policy, next: 0, load: vec![0; replicas] }
+        Router {
+            policy,
+            next: 0,
+            load: vec![0; replicas],
+            routed: vec![0; replicas],
+            affinity: HashMap::new(),
+            spill_tokens: DEFAULT_SPILL_TOKENS,
+        }
+    }
+
+    /// Override the KV-affinity overload spill threshold.
+    pub fn with_spill_tokens(mut self, tokens: u64) -> Self {
+        self.spill_tokens = tokens;
+        self
     }
 
     pub fn replicas(&self) -> usize {
         self.load.len()
     }
 
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    fn least_loaded(&self) -> usize {
+        self.load
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &l)| l)
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
     /// Choose a replica for `req` and account its load.
     pub fn route(&mut self, req: &Request) -> usize {
+        self.route_work(req.affinity_key(), req.work_tokens())
+    }
+
+    /// Policy core: choose a replica for a request with session key `key`
+    /// and outstanding-work estimate `work` tokens, and account the load.
+    pub fn route_work(&mut self, key: u64, work: u64) -> usize {
         let idx = match self.policy {
             Policy::RoundRobin => {
                 let i = self.next;
                 self.next = (self.next + 1) % self.load.len();
                 i
             }
-            Policy::LeastLoaded => self
-                .load
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, &l)| l)
-                .map(|(i, _)| i)
-                .unwrap(),
+            Policy::LeastLoaded => self.least_loaded(),
+            Policy::KvAffinity => {
+                let min = *self.load.iter().min().unwrap();
+                match self.affinity.get(&key) {
+                    Some(&i) if self.load[i] <= min + self.spill_tokens => i,
+                    _ => {
+                        let i = self.least_loaded();
+                        self.affinity.insert(key, i);
+                        i
+                    }
+                }
+            }
         };
-        self.load[idx] += (req.prompt_len() + req.max_new_tokens) as u64;
+        self.load[idx] += work;
+        self.routed[idx] += work;
         idx
     }
 
     /// Report completion of a request previously routed to `replica`.
     pub fn complete(&mut self, replica: usize, req: &Request) {
-        let w = (req.prompt_len() + req.max_new_tokens) as u64;
-        self.load[replica] = self.load[replica].saturating_sub(w);
+        self.complete_work(replica, req.work_tokens());
+    }
+
+    /// Release `work` tokens of outstanding load from `replica`.
+    pub fn complete_work(&mut self, replica: usize, work: u64) {
+        self.load[replica] = self.load[replica].saturating_sub(work);
+    }
+
+    /// Revoke a routing decision whose request was refused downstream:
+    /// releases the outstanding load *and* removes the tokens from the
+    /// cumulative routed count, as if the route never happened.
+    pub fn unroute(&mut self, replica: usize, work: u64) {
+        self.load[replica] = self.load[replica].saturating_sub(work);
+        self.routed[replica] = self.routed[replica].saturating_sub(work);
     }
 
     pub fn load(&self, replica: usize) -> u64 {
         self.load[replica]
+    }
+
+    /// Cumulative tokens routed to each replica.
+    pub fn routed(&self) -> &[u64] {
+        &self.routed
+    }
+
+    /// Load imbalance of the cumulative routing decisions: max/mean of
+    /// per-replica routed tokens (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let total: u64 = self.routed.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.routed.len() as f64;
+        let max = *self.routed.iter().max().unwrap() as f64;
+        max / mean
     }
 }
 
@@ -69,6 +177,15 @@ mod tests {
 
     fn req(id: u64, len: usize) -> Request {
         Request { id, prompt: vec![1; len], max_new_tokens: 8, arrival: Seconds::ZERO }
+    }
+
+    /// Request whose affinity prefix encodes `session`.
+    fn session_req(id: u64, session: i32, len: usize) -> Request {
+        let mut prompt = vec![session; len.max(1)];
+        for (i, t) in prompt.iter_mut().enumerate().skip(32) {
+            *t = (i % 100) as i32 + 1000 * id as i32; // tails differ per request
+        }
+        Request { id, prompt, max_new_tokens: 8, arrival: Seconds::ZERO }
     }
 
     #[test]
@@ -97,5 +214,69 @@ mod tests {
         assert!(r.load(idx) > 0);
         r.complete(idx, &q);
         assert_eq!(r.load(idx), 0);
+        // Releasing more than outstanding saturates at zero.
+        r.complete_work(idx, 10_000);
+        assert_eq!(r.load(idx), 0);
+    }
+
+    #[test]
+    fn policy_names_parse() {
+        assert_eq!(Policy::parse("round-robin"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("least-outstanding-tokens"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::parse("least-loaded"), Some(Policy::LeastLoaded));
+        assert_eq!(Policy::parse("KV-Affinity"), Some(Policy::KvAffinity));
+        assert_eq!(Policy::parse("carrier-pigeon"), None);
+        assert_eq!(Policy::KvAffinity.name(), "kv-affinity");
+    }
+
+    #[test]
+    fn kv_affinity_sticks_across_request_stream() {
+        let mut r = Router::new(4, Policy::KvAffinity);
+        // Interleaved stream from 4 sessions: each session must always
+        // land on the replica it was first assigned.
+        // Outstanding load stays far below the default spill threshold,
+        // so stickiness is never overridden; least-loaded seeding of the
+        // first request per session spreads the four sessions out.
+        let mut assigned: HashMap<i32, usize> = HashMap::new();
+        for i in 0..40 {
+            let session = (i % 4) as i32 + 1;
+            let q = session_req(i, session, 200);
+            let idx = r.route(&q);
+            let expect = *assigned.entry(session).or_insert(idx);
+            assert_eq!(idx, expect, "session {session} moved replicas at request {i}");
+        }
+        // 4 sessions over 4 replicas via least-loaded seeding: all distinct.
+        let mut seen: Vec<usize> = assigned.values().copied().collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 4, "sessions should spread over replicas");
+    }
+
+    #[test]
+    fn kv_affinity_spills_when_replica_overloaded() {
+        let mut r = Router::new(2, Policy::KvAffinity).with_spill_tokens(100);
+        let q0 = session_req(0, 7, 400); // session 7 → some replica, 408 tokens
+        let home = r.route(&q0);
+        // Same session while home is >100 tokens above the idle replica:
+        // must spill to the other replica (and re-home there).
+        let q1 = session_req(1, 7, 40);
+        let spill = r.route(&q1);
+        assert_ne!(spill, home, "overloaded sticky replica must spill");
+        // The session re-homed: with load now balanced-ish it stays put.
+        let q2 = session_req(2, 7, 40);
+        assert_eq!(r.route(&q2), spill);
+    }
+
+    #[test]
+    fn imbalance_metric_tracks_routed_tokens() {
+        let mut r = Router::new(2, Policy::RoundRobin);
+        r.route(&req(0, 992)); // 1000 tokens → replica 0
+        r.route(&req(1, 92)); // 100 tokens → replica 1
+        assert_eq!(r.routed(), &[1000, 100]);
+        let exp = 1000.0 / 550.0;
+        assert!((r.imbalance() - exp).abs() < 1e-9, "imbalance {}", r.imbalance());
+        // A fresh router is "balanced".
+        assert_eq!(Router::new(3, Policy::LeastLoaded).imbalance(), 1.0);
     }
 }

@@ -7,6 +7,21 @@
 //! PJRT backend (advanced by measured wall time) — the same scheduler
 //! drives both, which is what makes the end-to-end example a true test of
 //! the coordinator.
+//!
+//! The loop is exposed at three granularities so a [`cluster`] of
+//! replicas can co-simulate on a shared virtual clock:
+//!
+//! * [`Scheduler::step`] — one scheduling action;
+//! * [`Scheduler::run_until`] — advance to a global timestamp;
+//! * [`Scheduler::run_to_completion`] — drain everything (single-node
+//!   behaviour, unchanged).
+//!
+//! A replica can also serve a single *role* in a disaggregated pool
+//! ([`SchedMode`]): prefill-only replicas emit [`Handoff`]s instead of
+//! decoding, and decode-only replicas adopt handed-off sequences via
+//! [`Scheduler::inject`] once the KV transfer completes.
+//!
+//! [`cluster`]: super::cluster
 
 use super::batcher::Batcher;
 use super::engine::{Backend, PrefillItem};
@@ -15,6 +30,37 @@ use super::request::{Request, Response};
 use crate::error::Result;
 use crate::units::Seconds;
 use std::collections::VecDeque;
+
+/// Which phases of the serving loop this scheduler runs (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Aggregated serving: prefill and decode on the same replica.
+    #[default]
+    Full,
+    /// Disaggregated prefill pool member: prefill batches, then hand the
+    /// sequence (KV state) off instead of decoding.
+    PrefillOnly,
+    /// Disaggregated decode pool member: no local prefill; sequences
+    /// arrive via [`Scheduler::inject`].
+    DecodeOnly,
+}
+
+/// A prefilled sequence leaving a prefill-only replica: everything the
+/// decode side needs to continue generation. The KV cache itself moves
+/// over the fabric; the transfer cost is charged by the cluster layer
+/// ([`FabricLatencies::kv_handoff`]).
+///
+/// [`FabricLatencies::kv_handoff`]: crate::fabric::FabricLatencies::kv_handoff
+#[derive(Debug, Clone)]
+pub struct Handoff {
+    pub req: Request,
+    /// Prompt + first generated token.
+    pub tokens: Vec<i32>,
+    pub ttft: Seconds,
+    pub generated: usize,
+    /// Prefill-replica clock when the sequence became ready.
+    pub done_at: Seconds,
+}
 
 struct Active {
     req: Request,
@@ -27,9 +73,14 @@ struct Active {
 pub struct Scheduler<B: Backend> {
     backend: B,
     batcher: Batcher,
+    mode: SchedMode,
     /// Requests not yet arrived (sorted by arrival).
     future: VecDeque<Request>,
     active: Vec<Active>,
+    /// Handed-off sequences waiting for their KV transfer: (ready, seq).
+    injected: Vec<(Seconds, Handoff)>,
+    /// Sequences handed off by a prefill-only replica.
+    pub handoffs: Vec<Handoff>,
     pub metrics: Metrics,
     pub responses: Vec<Response>,
     clock: Seconds,
@@ -40,12 +91,25 @@ impl<B: Backend> Scheduler<B> {
         Scheduler {
             backend,
             batcher,
+            mode: SchedMode::Full,
             future: VecDeque::new(),
             active: Vec::new(),
+            injected: Vec::new(),
+            handoffs: Vec::new(),
             metrics: Metrics::default(),
             responses: Vec::new(),
             clock: Seconds::ZERO,
         }
+    }
+
+    /// Set the disaggregation role (default [`SchedMode::Full`]).
+    pub fn with_mode(mut self, mode: SchedMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn mode(&self) -> SchedMode {
+        self.mode
     }
 
     /// Submit a workload (requests may have future arrival times; must be
@@ -53,6 +117,23 @@ impl<B: Backend> Scheduler<B> {
     pub fn submit_all(&mut self, mut reqs: Vec<Request>) {
         reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         self.future.extend(reqs);
+    }
+
+    /// Adopt a prefilled sequence from another replica; it becomes
+    /// decodable once the clock reaches `ready` (KV transfer complete).
+    pub fn inject(&mut self, handoff: Handoff, ready: Seconds) {
+        self.injected.push((ready, handoff));
+    }
+
+    /// Whether this replica's batcher would accept the request (the
+    /// cluster consults this before charging the router).
+    pub fn admits(&self, req: &Request) -> bool {
+        self.batcher.admits(req)
+    }
+
+    /// Outstanding work: queued + active + in-flight injected sequences.
+    pub fn pending(&self) -> usize {
+        self.batcher.queued() + self.active.len() + self.injected.len() + self.future.len()
     }
 
     fn admit_arrived(&mut self) {
@@ -68,22 +149,105 @@ impl<B: Backend> Scheduler<B> {
         }
     }
 
-    /// Run until every submitted request completes. Returns the responses.
-    pub fn run_to_completion(&mut self) -> Result<&[Response]> {
+    fn admit_injected(&mut self) {
+        let clock = self.clock;
+        // Earliest-ready first, and never beyond the backend's
+        // concurrency cap — a decode-pool replica must queue overflow
+        // exactly like an aggregated replica would.
         loop {
-            self.admit_arrived();
-            let room = self.backend.max_concurrency().saturating_sub(self.active.len());
-            if self.batcher.queued() > 0 && room > 0 {
-                self.step_prefill(room)?;
-            } else if !self.active.is_empty() {
-                self.step_decode()?;
-            } else if let Some(front) = self.future.front() {
-                // Idle: jump to the next arrival.
-                self.clock = front.arrival;
-            } else {
+            if self.active.len() >= self.backend.max_concurrency() {
                 break;
             }
+            let mut best: Option<usize> = None;
+            for (i, (ready, _)) in self.injected.iter().enumerate() {
+                if *ready <= clock && best.map_or(true, |b| *ready < self.injected[b].0) {
+                    best = Some(i);
+                }
+            }
+            let Some(i) = best else { break };
+            let (_, h) = self.injected.swap_remove(i);
+            self.active.push(Active {
+                req: h.req,
+                tokens: h.tokens,
+                ttft: h.ttft,
+                generated: h.generated,
+            });
         }
+        // A handed-off request may already have hit its generation budget
+        // (max_new_tokens == 1): complete it without a decode step.
+        self.finish_done();
+    }
+
+    /// Earliest future event (arrival or injected-ready) strictly ahead
+    /// of the clock, if any.
+    fn next_event_time(&self) -> Option<Seconds> {
+        let arrival = self.future.front().map(|r| r.arrival);
+        let ready = self
+            .injected
+            .iter()
+            .map(|(t, _)| *t)
+            .min_by(|a, b| a.partial_cmp(b).unwrap());
+        match (arrival, ready) {
+            (Some(a), Some(r)) => Some(a.min(r)),
+            (Some(a), None) => Some(a),
+            (None, Some(r)) => Some(r),
+            (None, None) => None,
+        }
+    }
+
+    /// The scheduling core: a prefill batch, a decode round, or an idle
+    /// jump to the next event. With a `limit`, work that would start at or
+    /// beyond the limit (and idle jumps past it) is deferred instead.
+    /// Returns false when nothing was done.
+    fn step_bounded(&mut self, limit: Option<Seconds>) -> Result<bool> {
+        self.admit_arrived();
+        self.admit_injected();
+        let past = |t: Seconds| limit.is_some_and(|l| t >= l);
+        let room = self.backend.max_concurrency().saturating_sub(self.active.len());
+        if self.batcher.queued() > 0 && room > 0 {
+            if past(self.clock) {
+                return Ok(false);
+            }
+            self.step_prefill(room)?;
+        } else if !self.active.is_empty() {
+            if past(self.clock) {
+                return Ok(false);
+            }
+            self.step_decode()?;
+        } else if let Some(t) = self.next_event_time() {
+            if limit.is_some_and(|l| t > l) {
+                return Ok(false);
+            }
+            // Idle: jump to the next arrival / KV-transfer completion.
+            self.clock = self.clock.max(t);
+        } else {
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// One scheduling action. Returns false when fully drained.
+    pub fn step(&mut self) -> Result<bool> {
+        self.step_bounded(None)
+    }
+
+    /// Run until the local clock reaches the cluster timestamp `t`: all
+    /// work that starts before `t` executes (steps may overshoot `t` —
+    /// that batch was already in flight), and an idle replica's clock
+    /// advances to `t`.
+    pub fn run_until(&mut self, t: Seconds) -> Result<()> {
+        while self.clock < t && self.step_bounded(Some(t))? {}
+        // Idle until t: catch the clock up so later load observations and
+        // idle jumps stay monotone across the fleet.
+        if self.clock < t && self.active.is_empty() && self.batcher.queued() == 0 {
+            self.clock = t;
+        }
+        Ok(())
+    }
+
+    /// Run until every submitted request completes. Returns the responses.
+    pub fn run_to_completion(&mut self) -> Result<&[Response]> {
+        while self.step()? {}
         self.metrics.clock = self.clock;
         Ok(&self.responses)
     }
@@ -99,13 +263,24 @@ impl<B: Backend> Scheduler<B> {
             .collect();
         let (elapsed, first_tokens) = self.backend.prefill(&items, batch.padded_len)?;
         self.clock += elapsed;
+        self.metrics.busy += elapsed;
         for (req, first) in batch.requests.into_iter().zip(first_tokens) {
             let ttft = self.clock - req.arrival;
             self.metrics.ttft.record(ttft);
             let mut tokens = req.prompt.clone();
             tokens.push(first);
             self.metrics.tokens_generated += 1;
-            self.active.push(Active { req, tokens, ttft, generated: 1 });
+            if self.mode == SchedMode::PrefillOnly {
+                self.handoffs.push(Handoff {
+                    req,
+                    tokens,
+                    ttft,
+                    generated: 1,
+                    done_at: self.clock,
+                });
+            } else {
+                self.active.push(Active { req, tokens, ttft, generated: 1 });
+            }
         }
         self.finish_done();
         Ok(())
@@ -115,6 +290,7 @@ impl<B: Backend> Scheduler<B> {
         let seqs: Vec<Vec<i32>> = self.active.iter().map(|a| a.tokens.clone()).collect();
         let (elapsed, next_tokens) = self.backend.decode_step(&seqs)?;
         self.clock += elapsed;
+        self.metrics.busy += elapsed;
         let per_tok = elapsed; // one step produced one token per sequence
         for (a, tok) in self.active.iter_mut().zip(next_tokens) {
             a.tokens.push(tok);
@@ -150,6 +326,12 @@ impl<B: Backend> Scheduler<B> {
 
     pub fn clock(&self) -> Seconds {
         self.clock
+    }
+
+    /// Shared view of the execution backend (the cluster layer reads the
+    /// node config off it for KV-handoff costing).
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 }
 
@@ -231,5 +413,73 @@ mod tests {
         assert_eq!(resp.len(), 2);
         let late = resp.iter().find(|r| r.id == 1).unwrap();
         assert!(late.ttft.as_ms() < 100.0, "late ttft {}", late.ttft.as_ms());
+    }
+
+    #[test]
+    fn run_until_stops_at_timestamp_and_catches_up_idle_clock() {
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut s = Scheduler::new(backend, Batcher::new(4, 64, 4096));
+        s.submit_all(vec![req(0, 16, 4, 0.0), req(1, 16, 4, 900.0)]);
+        // Run to t=100 ms: request 0 (prefill 10 + 3 decodes) is done,
+        // request 1 has not arrived, and the idle clock sits at t.
+        s.run_until(Seconds::ms(100.0)).unwrap();
+        assert_eq!(s.metrics.completed, 1);
+        assert!((s.clock().as_ms() - 100.0).abs() < 1e-9, "clock {}", s.clock().as_ms());
+        assert_eq!(s.pending(), 1);
+        // Draining picks up the second request.
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.completed, 2);
+    }
+
+    #[test]
+    fn busy_time_excludes_idle_gaps() {
+        let reqs = vec![req(0, 16, 2, 0.0), req(1, 16, 2, 500.0)];
+        let (_, m) = run(reqs, 4);
+        // Two prefills (10 ms) + two decode rounds (1 ms) each ≈ 22 ms of
+        // busy time against a ≥500 ms clock.
+        assert!(m.busy.as_ms() < 30.0, "busy {}", m.busy.as_ms());
+        assert!(m.clock.as_ms() >= 500.0);
+        assert!(m.utilization() < 0.1);
+    }
+
+    #[test]
+    fn prefill_only_hands_off_instead_of_decoding() {
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut s = Scheduler::new(backend, Batcher::new(4, 64, 4096))
+            .with_mode(SchedMode::PrefillOnly);
+        s.submit_all((0..6).map(|i| req(i, 16, 8, 0.0)).collect());
+        s.run_to_completion().unwrap();
+        assert_eq!(s.handoffs.len(), 6);
+        assert_eq!(s.metrics.completed, 0, "prefill pool never completes requests");
+        assert_eq!(s.metrics.ttft.count(), 6, "TTFT is measured at prefill");
+        for h in &s.handoffs {
+            assert_eq!(h.generated, 1);
+            assert_eq!(h.tokens.len(), 16 + 1);
+            assert!(h.done_at > Seconds::ZERO);
+        }
+    }
+
+    #[test]
+    fn decode_only_resumes_injected_sequences() {
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut s =
+            Scheduler::new(backend, Batcher::new(4, 64, 4096)).with_mode(SchedMode::DecodeOnly);
+        let h = Handoff {
+            req: req(7, 16, 4, 0.0),
+            tokens: vec![1; 17],
+            ttft: Seconds::ms(12.0),
+            generated: 1,
+            done_at: Seconds::ms(12.0),
+        };
+        // KV transfer lands at 50 ms; decode must not start earlier.
+        s.inject(h, Seconds::ms(50.0));
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.completed, 1);
+        let r = &s.responses[0];
+        assert_eq!(r.generated, 4);
+        assert_eq!(r.tokens.len(), 17 + 3);
+        assert_eq!(r.ttft, Seconds::ms(12.0), "handoff TTFT is preserved");
+        // 3 decode steps after the 50 ms transfer.
+        assert!(r.total.as_ms() >= 53.0 - 1e-9, "total {}", r.total.as_ms());
     }
 }

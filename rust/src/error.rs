@@ -1,44 +1,100 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline build environment
+//! has no thiserror crate (DESIGN.md §1).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the FengHuang library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum FhError {
     /// A configuration file or preset was invalid.
-    #[error("config error: {0}")]
     Config(String),
 
     /// A shared-memory operation addressed memory outside an allocation.
-    #[error("shared memory out of bounds: offset {offset} + len {len} > region {region}")]
     OutOfBounds { offset: usize, len: usize, region: usize },
 
     /// The shared pool has no room for the requested allocation.
-    #[error("shared memory pool exhausted: requested {requested} B, free {free} B")]
     PoolExhausted { requested: usize, free: usize },
 
     /// A collective was invoked with inconsistent participants.
-    #[error("collective error: {0}")]
     Collective(String),
 
     /// Local memory capacity exceeded and nothing is evictable.
-    #[error("local memory thrash: op {op} needs {need_gb:.2} GB but capacity is {cap_gb:.2} GB")]
     LocalMemoryThrash { op: String, need_gb: f64, cap_gb: f64 },
 
     /// A simulation invariant was violated (bug, not user error).
-    #[error("simulation invariant violated: {0}")]
     Invariant(String),
 
     /// The PJRT runtime failed to load / compile / execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Serving-layer error (queue closed, request rejected, …).
-    #[error("serving error: {0}")]
     Serving(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// An underlying I/O operation failed.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FhError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FhError::Config(s) => write!(f, "config error: {s}"),
+            FhError::OutOfBounds { offset, len, region } => write!(
+                f,
+                "shared memory out of bounds: offset {offset} + len {len} > region {region}"
+            ),
+            FhError::PoolExhausted { requested, free } => write!(
+                f,
+                "shared memory pool exhausted: requested {requested} B, free {free} B"
+            ),
+            FhError::Collective(s) => write!(f, "collective error: {s}"),
+            FhError::LocalMemoryThrash { op, need_gb, cap_gb } => write!(
+                f,
+                "local memory thrash: op {op} needs {need_gb:.2} GB but capacity is {cap_gb:.2} GB"
+            ),
+            FhError::Invariant(s) => write!(f, "simulation invariant violated: {s}"),
+            FhError::Runtime(s) => write!(f, "runtime error: {s}"),
+            FhError::Serving(s) => write!(f, "serving error: {s}"),
+            FhError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FhError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FhError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FhError {
+    fn from(e: std::io::Error) -> Self {
+        FhError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, FhError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_format() {
+        let e = FhError::OutOfBounds { offset: 8, len: 4, region: 10 };
+        assert_eq!(e.to_string(), "shared memory out of bounds: offset 8 + len 4 > region 10");
+        let e = FhError::Config("bad".into());
+        assert_eq!(e.to_string(), "config error: bad");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: FhError = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

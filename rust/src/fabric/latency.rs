@@ -76,6 +76,26 @@ impl FabricLatencies {
     pub fn notification_latency(&self) -> Seconds {
         self.tab_notification
     }
+
+    /// Prefill→decode KV handoff cost in a disaggregated cluster
+    /// (DESIGN.md §6).
+    ///
+    /// * `shared_pool = true` (TAB fabric): the KV pages already live in
+    ///   the shared pool, so ownership moves by metadata — one write of
+    ///   the page table, a completion notification, and the decode side's
+    ///   first read (Eqs 3.2 + 3.4 + 3.1 fixed parts). Independent of KV
+    ///   size: this is the paper's memory-orchestration advantage applied
+    ///   at cluster scope.
+    /// * `shared_pool = false` (shared-nothing link): the full KV cache
+    ///   serialises over the inter-node link at `link_bw`, bracketed by
+    ///   the NVLink-class write/read latencies.
+    pub fn kv_handoff(&self, kv: Bytes, link_bw: Bandwidth, shared_pool: bool) -> Seconds {
+        if shared_pool {
+            self.tab_write + self.tab_notification + self.tab_read
+        } else {
+            self.nvlink_write + kv.over(link_bw) + self.nvlink_read
+        }
+    }
 }
 
 /// Verify that the component tables sum to the headline totals.
@@ -118,6 +138,21 @@ mod tests {
     fn eq34_notification_fixed() {
         let l = FabricLatencies::default();
         assert_eq!(l.notification_latency(), Seconds::ns(40.0));
+    }
+
+    #[test]
+    fn kv_handoff_shared_pool_is_size_independent() {
+        let l = FabricLatencies::default();
+        let bw = Bandwidth::tbps(4.8);
+        let small = l.kv_handoff(Bytes::mib(1.0), bw, true);
+        let big = l.kv_handoff(Bytes::gb(40.0), bw, true);
+        assert_eq!(small, big, "TAB handoff is metadata-only");
+        assert!((small.as_ns() - (90.0 + 40.0 + 220.0)).abs() < 1e-9);
+        // Shared-nothing pays the full serialization: 40 GB at 4.8 TB/s
+        // ≈ 8.3 ms, dwarfing the 350 ns TAB path.
+        let link = l.kv_handoff(Bytes::gb(40.0), bw, false);
+        assert!(link.as_ms() > 8.0, "link handoff {} ms", link.as_ms());
+        assert!(link > big * 1000.0);
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //! * [`sim`] — discrete-event simulator with the tensor prefetcher and
 //!   paging stream (→ Fig 4.1, Table 4.3);
 //! * [`coordinator`] — serving layer: request router, continuous batcher,
-//!   prefill/decode scheduler over simulated FengHuang nodes;
+//!   prefill/decode scheduler over simulated FengHuang nodes, and the
+//!   rack-scale multi-replica cluster simulator with KV-aware routing
+//!   and disaggregated prefill/decode pools;
 //! * [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
 //!   artifacts from the Rust hot path;
 //! * [`analysis`] — figure/table generators for every artifact in the

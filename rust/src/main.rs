@@ -6,12 +6,15 @@
 //! fenghuang figures  [all|fig1|fig2-model|fig2-hw|table31|speedup|fig41|table43|chapter5]
 //! fenghuang speedup
 //! fenghuang serve    [--model M] [--requests N] [--max-batch B]
+//!                    [--replicas R] [--policy P] [--disaggregate P:D]
+//!                    [--sessions S]
 //! fenghuang help
 //! ```
 //!
-//! (Arg parsing is hand-rolled; the offline build environment has no clap.)
+//! (Arg parsing and error plumbing are hand-rolled; the offline build
+//! environment has no clap or anyhow — see DESIGN.md §1.)
 
-use anyhow::{anyhow, bail, Result};
+use fenghuang::coordinator::router::Policy;
 use fenghuang::prelude::*;
 use fenghuang::units::Bandwidth;
 use std::collections::HashMap;
@@ -27,8 +30,14 @@ USAGE:
   fenghuang figures-csv [fig1|fig2-model|fig2-hw|fig41|speedup]
   fenghuang speedup
   fenghuang serve    [--model gpt3] [--requests 64] [--max-batch 8]
+                     [--replicas 1] [--policy round-robin|least-outstanding-tokens|kv-affinity]
+                     [--disaggregate P:D] [--sessions 8]
   fenghuang help
 ";
+
+fn cli_err(msg: String) -> FhError {
+    FhError::Config(msg)
+}
 
 /// Parse `--key value` pairs after the subcommand.
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
@@ -37,25 +46,23 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
     while i < args.len() {
         let k = &args[i];
         if !k.starts_with("--") {
-            bail!("unexpected argument '{k}' (flags are --key value)");
+            return Err(cli_err(format!("unexpected argument '{k}' (flags are --key value)")));
         }
-        let v = args.get(i + 1).ok_or_else(|| anyhow!("flag {k} needs a value"))?;
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
         flags.insert(k.trim_start_matches("--").to_string(), v.clone());
         i += 2;
     }
     Ok(flags)
 }
 
-fn flag<T: std::str::FromStr>(
-    flags: &HashMap<String, String>,
-    key: &str,
-    default: T,
-) -> Result<T>
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
 where
     T::Err: std::fmt::Display,
 {
     match flags.get(key) {
-        Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+        Some(v) => v.parse().map_err(|e| cli_err(format!("--{key}: {e}"))),
         None => Ok(default),
     }
 }
@@ -66,11 +73,24 @@ fn system_by_name(name: &str, remote_tbps: f64) -> Result<SystemConfig> {
         "baseline8" => Ok(baseline8()),
         "fh4-1.5xm" | "fh4_15xm" => Ok(fh4_15xm(bw)),
         "fh4-2.0xm" | "fh4_20xm" => Ok(fh4_20xm(bw)),
-        other => Err(anyhow!("unknown system preset '{other}'")),
+        other => Err(cli_err(format!("unknown system preset '{other}'"))),
     }
 }
 
-fn main() -> Result<()> {
+/// Parse `--disaggregate P:D` (prefill:decode pool sizes).
+fn parse_disaggregate(v: &str) -> Result<(usize, usize)> {
+    let (p, d) = v
+        .split_once(':')
+        .ok_or_else(|| cli_err(format!("--disaggregate wants P:D, got '{v}'")))?;
+    let p: usize = p.parse().map_err(|e| cli_err(format!("--disaggregate prefill: {e}")))?;
+    let d: usize = d.parse().map_err(|e| cli_err(format!("--disaggregate decode: {e}")))?;
+    if p == 0 || d == 0 {
+        return Err(cli_err("--disaggregate pools must be non-empty".into()));
+    }
+    Ok((p, d))
+}
+
+fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else {
         print!("{USAGE}");
@@ -85,10 +105,10 @@ fn main() -> Result<()> {
             let batch: u64 = flag(&f, "batch", 8)?;
             let prompt: u64 = flag(&f, "prompt", 4096)?;
             let gen: u64 = flag(&f, "gen", 1024)?;
-            let m = arch::by_name(&model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+            let m = arch::by_name(&model)
+                .ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
             let sys = system_by_name(&system, remote_tbps)?;
-            let r = fenghuang::sim::run_workload(&sys, &m, batch, prompt, gen)
-                .map_err(|e| anyhow!("{e}"))?;
+            let r = fenghuang::sim::run_workload(&sys, &m, batch, prompt, gen)?;
             println!("{} on {} (batch {batch}, prompt {prompt}, gen {gen})", r.model, r.system);
             println!("  TTFT       {:>10.2} ms", r.ttft.as_ms());
             println!("  TPOT       {:>10.3} ms", r.tpot.as_ms());
@@ -97,24 +117,58 @@ fn main() -> Result<()> {
         }
         "figures" => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("all");
-            print!("{}", fenghuang::analysis::render(which).map_err(|e| anyhow!("{e}"))?);
+            print!("{}", fenghuang::analysis::render(which)?);
         }
         "figures-csv" => {
             let which = args.get(1).map(|s| s.as_str()).unwrap_or("fig41");
-            print!("{}", fenghuang::analysis::render_csv(which).map_err(|e| anyhow!("{e}"))?);
+            print!("{}", fenghuang::analysis::render_csv(which)?);
         }
         "speedup" => {
-            print!("{}", fenghuang::analysis::render("speedup").map_err(|e| anyhow!("{e}"))?);
+            print!("{}", fenghuang::analysis::render("speedup")?);
         }
         "serve" => {
             let f = parse_flags(&args[1..])?;
             let model: String = flag(&f, "model", "gpt3".to_string())?;
             let requests: usize = flag(&f, "requests", 64)?;
             let max_batch: usize = flag(&f, "max-batch", 8)?;
-            let m = arch::by_name(&model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
-            let summary = fenghuang::coordinator::demo_serve(&m, requests, max_batch)
-                .map_err(|e| anyhow!("{e}"))?;
-            println!("{summary}");
+            let replicas: usize = flag(&f, "replicas", 1)?;
+            let sessions: usize = flag(&f, "sessions", 8)?;
+            let policy_s: String = flag(&f, "policy", "least-outstanding-tokens".to_string())?;
+            let policy = Policy::parse(&policy_s)
+                .ok_or_else(|| cli_err(format!("unknown policy '{policy_s}'")))?;
+            let disaggregate = match f.get("disaggregate") {
+                Some(v) => Some(parse_disaggregate(v)?),
+                None => None,
+            };
+            if let Some((p, d)) = disaggregate {
+                // Pool sizes define the fleet; an explicit conflicting
+                // --replicas would otherwise be silently ignored.
+                if f.contains_key("replicas") && p + d != replicas {
+                    return Err(cli_err(format!(
+                        "--replicas {replicas} conflicts with --disaggregate {p}:{d} (= {} replicas)",
+                        p + d
+                    )));
+                }
+            }
+            let m = arch::by_name(&model)
+                .ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
+            if replicas <= 1 && disaggregate.is_none() && !f.contains_key("policy") {
+                // Single node, no routing: the original serving path.
+                println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
+            } else {
+                println!(
+                    "{}",
+                    fenghuang::coordinator::demo_serve_cluster(
+                        &m,
+                        requests,
+                        max_batch,
+                        replicas,
+                        policy,
+                        disaggregate,
+                        sessions,
+                    )?
+                );
+            }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
@@ -123,4 +177,11 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
 }

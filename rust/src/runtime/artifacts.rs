@@ -145,6 +145,7 @@ impl Bundle {
     }
 
     /// Tensor as a shaped PJRT literal.
+    #[cfg(feature = "pjrt")]
     pub fn literal(&self, name: &str) -> Result<xla::Literal> {
         let e = self.entry(name)?;
         super::literal_f32(self.tensor(name)?, &e.dims_i64())

@@ -6,21 +6,30 @@
 //! `HloModuleProto::from_text_file` → `compile` → `execute`. HLO *text* is
 //! the interchange format (xla_extension 0.5.1 rejects jax ≥ 0.5's
 //! 64-bit-id serialized protos — see /opt/xla-example/README.md).
+//!
+//! Everything touching the out-of-tree `xla` bindings is gated behind
+//! the `pjrt` cargo feature so the default (offline) build stays
+//! dependency-free; the [`artifacts`] bundle loader is always available.
 
 pub mod artifacts;
 
+#[cfg(feature = "pjrt")]
 use crate::error::{FhError, Result};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(feature = "pjrt")]
 fn rt_err<E: std::fmt::Display>(ctx: String) -> impl FnOnce(E) -> FhError {
     move |e| FhError::Runtime(format!("{ctx}: {e}"))
 }
 
+#[cfg(feature = "pjrt")]
 /// A PJRT client (CPU).
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -49,12 +58,14 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 /// A compiled artifact ready to execute.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with the given inputs; returns the flattened tuple of
     /// outputs (jax.jit lowering uses `return_tuple=True`).
@@ -102,6 +113,7 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "pjrt")]
 /// Build an f32 literal of the given shape from a flat slice.
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     let expected: i64 = dims.iter().product();
@@ -114,6 +126,7 @@ pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(rt_err("reshape".into()))
 }
 
+#[cfg(feature = "pjrt")]
 /// Build an i32 literal of the given shape from a flat slice.
 pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     let expected: i64 = dims.iter().product();
@@ -126,11 +139,13 @@ pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(rt_err("reshape".into()))
 }
 
+#[cfg(feature = "pjrt")]
 /// Extract a literal's data as `Vec<f32>`.
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(rt_err("to_vec::<f32>".into()))
 }
 
+#[cfg(feature = "pjrt")]
 #[cfg(test)]
 mod tests {
     use super::*;

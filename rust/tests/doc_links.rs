@@ -1,0 +1,170 @@
+//! Documentation-reference checker: every section citation of DESIGN.md
+//! or EXPERIMENTS.md in the source tree must resolve to a real heading
+//! of that document, so the docs layer can't silently rot. (The offline
+//! build has no regex crate; matching is plain string scanning.)
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Collect every .rs/.py file under the code roots.
+fn source_files() -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for root in ["rust", "benches", "examples", "python"] {
+        walk(&repo_root().join(root), &mut out);
+    }
+    assert!(out.len() > 30, "source walk looks broken: {} files", out.len());
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out);
+        } else if matches!(p.extension().and_then(|x| x.to_str()), Some("rs" | "py")) {
+            out.push(p);
+        }
+    }
+}
+
+/// Section token at the head of `tail` (text right after a '§'):
+/// returns (raw length consumed, trimmed token), or None.
+fn token_at(tail: &str) -> Option<(usize, String)> {
+    let raw: String = tail
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '.' || *c == '-')
+        .collect();
+    let tok = raw.trim_end_matches(['.', '-']).to_string();
+    if tok.is_empty() {
+        None
+    } else {
+        Some((raw.len(), tok))
+    }
+}
+
+/// Sections of `doc` cited on `line`, via the two adjacency patterns the
+/// tree uses: `DOC §TOK` and `§TOK of DOC`. Bare paper references like
+/// "(§3.3.1)" never bind to a doc file.
+fn cited_sections(line: &str, doc: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let pat = format!("{doc} §");
+    let mut start = 0;
+    while let Some(i) = line[start..].find(&pat) {
+        let at = start + i + pat.len();
+        if let Some((_, tok)) = token_at(&line[at..]) {
+            out.push(tok);
+        }
+        start = at;
+    }
+    for (i, _) in line.match_indices('§') {
+        let tail = &line[i + '§'.len_utf8()..];
+        if let Some((raw, tok)) = token_at(tail) {
+            let rest = &tail[raw..];
+            if rest.starts_with(&format!(" of {doc}")) {
+                out.push(tok);
+            }
+        }
+    }
+    out
+}
+
+/// §-markers carried by the markdown headings of `doc`: the *first*
+/// §-token per heading line only, so incidental paper references in a
+/// heading ("## §Speedup — §3.3.3 …") don't become citable targets.
+fn headings(doc: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in doc.lines().filter(|l| l.starts_with('#')) {
+        if let Some(i) = line.find('§') {
+            if let Some((_, tok)) = token_at(&line[i + '§'.len_utf8()..]) {
+                out.push(tok);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn design_and_experiments_docs_exist() {
+    for doc in ["DESIGN.md", "EXPERIMENTS.md", "README.md"] {
+        let p = repo_root().join(doc);
+        assert!(p.exists(), "{doc} is missing (cited throughout the source tree)");
+        let text = fs::read_to_string(&p).unwrap();
+        assert!(text.len() > 500, "{doc} is a stub ({} bytes)", text.len());
+    }
+}
+
+#[test]
+fn every_inline_doc_section_reference_resolves() {
+    let mut missing = Vec::new();
+    let docs: Vec<(&str, Vec<String>)> = ["DESIGN.md", "EXPERIMENTS.md"]
+        .into_iter()
+        .map(|name| {
+            let text = fs::read_to_string(repo_root().join(name)).unwrap_or_default();
+            let secs = headings(&text);
+            assert!(!secs.is_empty(), "{name} has no §-marked headings");
+            (name, secs)
+        })
+        .collect();
+    let files = source_files();
+    let mut checked = 0usize;
+    for file in &files {
+        let Ok(text) = fs::read_to_string(file) else { continue };
+        for (lineno, line) in text.lines().enumerate() {
+            for (doc_name, secs) in &docs {
+                if !line.contains(doc_name) {
+                    continue;
+                }
+                for sec in cited_sections(line, doc_name) {
+                    checked += 1;
+                    // A §N citation accepts any §N or §N.x heading.
+                    let ok = secs
+                        .iter()
+                        .any(|h| h == &sec || h.starts_with(&format!("{sec}.")));
+                    if !ok {
+                        missing.push(format!(
+                            "{}:{}: §{} not found in {}",
+                            file.strip_prefix(repo_root()).unwrap_or(file).display(),
+                            lineno + 1,
+                            sec,
+                            doc_name,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked >= 8, "doc-reference scan found only {checked} citations — scanner broken?");
+    assert!(missing.is_empty(), "dangling doc references:\n{}", missing.join("\n"));
+}
+
+#[test]
+fn citation_parser_handles_the_tree_idioms() {
+    assert_eq!(
+        cited_sections("traces (§4.1.3, and DESIGN.md §1 substitution table).", "DESIGN.md"),
+        vec!["1"],
+        "paper §refs on the same line must not bind to the doc"
+    );
+    assert_eq!(
+        cited_sections("(for DESIGN.md §Perf: VMEM)", "DESIGN.md"),
+        vec!["Perf"]
+    );
+    assert_eq!(
+        cited_sections("(DESIGN.md §Hardware-Adaptation): x", "DESIGN.md"),
+        vec!["Hardware-Adaptation"]
+    );
+    assert_eq!(
+        cited_sections("microbenchmarks (§Perf of EXPERIMENTS.md).", "EXPERIMENTS.md"),
+        vec!["Perf"]
+    );
+    assert_eq!(
+        cited_sections("see EXPERIMENTS.md §Perf.)", "EXPERIMENTS.md"),
+        vec!["Perf"]
+    );
+    assert!(cited_sections("plain (§3.3.1) reference", "DESIGN.md").is_empty());
+    assert_eq!(headings("# Title\n## §5 Knobs\ntext §9\n### §4.1 Figures"), vec!["5", "4.1"]);
+}
