@@ -5,6 +5,10 @@
 //! repeated-timing helper. Reported numbers: median and mean over
 //! `iters` runs after `warmup` discarded runs.
 
+// Each bench binary compiles its own copy of this module and uses a
+// different subset of it.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -60,4 +64,52 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 #[allow(dead_code)] // not every bench reports throughput
 pub fn gbps(bytes: usize, median_ns: f64) -> f64 {
     bytes as f64 / median_ns * 1e9 / 1e9
+}
+
+/// Whether the bench was invoked with `--json`
+/// (`cargo bench --bench X -- --json`; see scripts/bench_json.sh).
+pub fn json_requested() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Write `BENCH_<name>.json` at the repo root — the perf-trajectory
+/// artifact format (EXPERIMENTS.md §Capacity-Sweep).
+pub fn write_bench_json(name: &str, body: &str) {
+    let path = format!("{}/BENCH_{}.json", env!("CARGO_MANIFEST_DIR"), name);
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+/// Standard envelope for row-oriented bench artifacts:
+/// `{"bench": <name>, "rows": [<row>, …]}` where each row is an
+/// already-serialised JSON object.
+pub fn write_rows_json(name: &str, rows: &[String]) {
+    let mut body = format!("{{\n  \"bench\": {},\n  \"rows\": [\n", json_str(name));
+    for (i, row) in rows.iter().enumerate() {
+        body.push_str("    ");
+        body.push_str(row);
+        body.push_str(if i + 1 == rows.len() { "\n" } else { ",\n" });
+    }
+    body.push_str("  ]\n}\n");
+    write_bench_json(name, &body);
+}
+
+/// Minimal JSON escaping for the hand-rolled emitters (no serde in the
+/// offline build).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }

@@ -1,0 +1,173 @@
+//! Bench target: local-capacity sweep of the active-tensor-paging
+//! orchestrator (EXPERIMENTS.md §Capacity-Sweep — the Table 4.3
+//! capacity-reduction curve).
+//!
+//! For each paper workload (GPT-3, Grok-1, QWEN3-235B) the sweep caps the
+//! local paged-byte budget at 7%…100% of the per-GPU remote working set
+//! and reports the steady-state decode step versus the full-residency
+//! roofline, per eviction policy. Expected shape: the stall/capacity
+//! trade-off is monotone, and at paper-band budgets (~10–20 GB) the
+//! slowdown stays inside the paper's "performance maintained" envelope
+//! while local capacity drops ≥ 90% vs the Baseline8 144 GB HBM.
+//!
+//! `cargo bench --bench paging_sweep -- --json` additionally writes
+//! `BENCH_paging_sweep.json` at the repo root (scripts/bench_json.sh).
+
+mod common;
+
+use fenghuang::config::fh4_15xm;
+use fenghuang::models::arch::{gpt3_175b, grok1, qwen3_235b};
+use fenghuang::paging::{
+    simulate_paged, NmcConfig, PagingConfig, PlacementPolicy, PolicyKind,
+};
+use fenghuang::trace::Phase;
+use fenghuang::units::{Bandwidth, Bytes};
+
+const FRACS: [f64; 8] = [0.07, 0.10, 0.15, 0.20, 0.30, 0.50, 0.75, 1.00];
+const REFERENCE_HBM_GB: f64 = 144.0;
+
+struct Row {
+    model: String,
+    policy: &'static str,
+    budget_frac: f64,
+    budget_gb: f64,
+    steady_ms: f64,
+    full_ms: f64,
+    slowdown: f64,
+    peak_gb: f64,
+    reduction: f64,
+    paged_gb: f64,
+}
+
+fn main() {
+    let sys = fh4_15xm(Bandwidth::tbps(4.8));
+    let phase = Phase::Decode { kv_len: 4608 };
+    let batch = 8u64;
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("== paging sweep: steady decode step vs local budget (FH4-1.5xM @ 4.8 TB/s) ==");
+    for model in [gpt3_175b(), grok1(), qwen3_235b()] {
+        // Full-residency roofline: uncapped LRU reaches zero-fetch steady
+        // state after the first step.
+        let full_cfg = PagingConfig {
+            policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
+            steps: 2,
+            ..Default::default()
+        };
+        let full = simulate_paged(&sys, &model, batch, phase, &full_cfg).expect("full residency");
+        let ws_gb = full.working_set.as_gb();
+        println!(
+            "\n{}: working set {ws_gb:.1} GB/GPU, full-residency step {:.3} ms",
+            model.name,
+            full.steady_step.as_ms()
+        );
+        println!(
+            "{:<18} {:>6} {:>9} {:>11} {:>9} {:>9} {:>11}",
+            "policy", "frac", "budget GB", "steady ms", "slowdown", "peak GB", "vs 144GB"
+        );
+        for kind in PolicyKind::all() {
+            for frac in FRACS {
+                let budget = Bytes::gb(ws_gb * frac);
+                let cfg = PagingConfig {
+                    local_budget: Some(budget),
+                    policy: PlacementPolicy { kind, ..Default::default() },
+                    steps: 2,
+                    ..Default::default()
+                };
+                match simulate_paged(&sys, &model, batch, phase, &cfg) {
+                    Ok(r) => {
+                        let slowdown = r.steady_step / full.steady_step;
+                        let reduction = r.capacity_reduction_vs(Bytes::gb(REFERENCE_HBM_GB));
+                        println!(
+                            "{:<18} {:>5.0}% {:>9.1} {:>11.3} {:>8.3}x {:>9.2} {:>10.1}%",
+                            kind.name(),
+                            frac * 100.0,
+                            budget.as_gb(),
+                            r.steady_step.as_ms(),
+                            slowdown,
+                            r.peak_local.as_gb(),
+                            reduction * 100.0,
+                        );
+                        rows.push(Row {
+                            model: model.name.clone(),
+                            policy: kind.name(),
+                            budget_frac: frac,
+                            budget_gb: budget.as_gb(),
+                            steady_ms: r.steady_step.as_ms(),
+                            full_ms: full.steady_step.as_ms(),
+                            slowdown,
+                            peak_gb: r.peak_local.as_gb(),
+                            reduction,
+                            paged_gb: r.migration.bytes_in.as_gb(),
+                        });
+                    }
+                    Err(e) => {
+                        println!(
+                            "{:<18} {:>5.0}% {:>9.1}   infeasible ({e})",
+                            kind.name(),
+                            frac * 100.0,
+                            budget.as_gb(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // NMC ablation at the paper-band budget.
+    println!("\n== NMC offload ablation (minimal residency, 15% budget) ==");
+    for model in [gpt3_175b(), grok1(), qwen3_235b()] {
+        let full_cfg = PagingConfig {
+            policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
+            steps: 2,
+            ..Default::default()
+        };
+        let full = simulate_paged(&sys, &model, batch, phase, &full_cfg).expect("full");
+        let budget = Bytes::gb(full.working_set.as_gb() * 0.15);
+        let mk = |nmc: bool| {
+            let cfg = PagingConfig {
+                local_budget: Some(budget),
+                nmc: NmcConfig { enabled: nmc },
+                steps: 2,
+                ..Default::default()
+            };
+            simulate_paged(&sys, &model, batch, phase, &cfg)
+        };
+        match (mk(false), mk(true)) {
+            (Ok(off), Ok(on)) => println!(
+                "{:<10} off {:>9.3} ms | on {:>9.3} ms | {} ops in-pool",
+                model.name,
+                off.steady_step.as_ms(),
+                on.steady_step.as_ms(),
+                on.nmc_offloads,
+            ),
+            _ => println!("{:<10} infeasible at 15%", model.name),
+        }
+    }
+
+    if common::json_requested() {
+        let json_rows: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"model\": {}, \"policy\": {}, \"budget_frac\": {}, \
+                     \"budget_gb\": {:.3}, \"steady_ms\": {:.6}, \"full_ms\": {:.6}, \
+                     \"slowdown\": {:.4}, \"peak_gb\": {:.3}, \
+                     \"reference_hbm_gb\": {REFERENCE_HBM_GB}, \"reduction_vs_ref\": {:.4}, \
+                     \"paged_gb\": {:.3}}}",
+                    common::json_str(&r.model),
+                    common::json_str(r.policy),
+                    r.budget_frac,
+                    r.budget_gb,
+                    r.steady_ms,
+                    r.full_ms,
+                    r.slowdown,
+                    r.peak_gb,
+                    r.reduction,
+                    r.paged_gb,
+                )
+            })
+            .collect();
+        common::write_rows_json("paging_sweep", &json_rows);
+    }
+}

@@ -8,6 +8,8 @@
 //! 3. Aggregated 4 vs disaggregated 2:2 — KV handoff cost over the TAB
 //!    fabric vs a shared-nothing link.
 
+mod common;
+
 use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::Request;
@@ -31,6 +33,7 @@ fn lopsided(n: usize) -> Vec<Request> {
 }
 
 fn main() {
+    let mut json_rows: Vec<String> = Vec::new();
     println!("== serve-scale: replica sweep (least-outstanding-tokens, 48 requests) ==");
     println!("model     replicas  makespan(s)  tok/s   p95 TTFT(ms)  mean util");
     for model in [gpt3_175b(), grok1(), qwen3_235b()] {
@@ -55,6 +58,17 @@ fn main() {
                 util,
                 if base_tps > 0.0 { tps / base_tps } else { 0.0 },
             );
+            json_rows.push(format!(
+                "{{\"section\": \"replica_sweep\", \"model\": {}, \"replicas\": {replicas}, \
+                 \"makespan_s\": {:.6}, \"tokens_per_s\": {:.3}, \"p95_ttft_ms\": {:.3}, \
+                 \"p99_ttft_ms\": {:.3}, \"mean_util\": {:.4}}}",
+                common::json_str(&model.name),
+                r.makespan().value(),
+                tps,
+                r.fleet.ttft.percentile_ms(95.0),
+                r.fleet.ttft.percentile_ms(99.0),
+                util,
+            ));
         }
     }
 
@@ -72,6 +86,15 @@ fn main() {
             r.fleet.ttft.percentile_ms(99.0),
             r.makespan().value(),
         );
+        json_rows.push(format!(
+            "{{\"section\": \"policy_shootout\", \"policy\": {}, \"imbalance\": {:.4}, \
+             \"p95_ttft_ms\": {:.3}, \"p99_ttft_ms\": {:.3}, \"makespan_s\": {:.6}}}",
+            common::json_str(policy.name()),
+            r.imbalance,
+            r.fleet.ttft.percentile_ms(95.0),
+            r.fleet.ttft.percentile_ms(99.0),
+            r.makespan().value(),
+        ));
     }
 
     println!("\n== serve-scale: aggregated 4 vs disaggregated 2:2 (gpt3) ==");
@@ -80,6 +103,7 @@ fn main() {
             policy: Policy::LeastLoaded,
             max_batch: 8,
             disaggregate: disagg,
+            ..Default::default()
         };
         let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).expect("cluster");
         let r = c.run(stream(48)).expect("run");
@@ -96,5 +120,54 @@ fn main() {
             r.handoffs,
             r.handoff_time.as_ms(),
         );
+        json_rows.push(format!(
+            "{{\"section\": \"disaggregation\", \"mode\": {}, \"makespan_s\": {:.6}, \
+             \"p95_ttft_ms\": {:.3}, \"p95_tpot_ms\": {:.3}, \"handoffs\": {}, \
+             \"handoff_ms\": {:.4}}}",
+            common::json_str(&label),
+            r.makespan().value(),
+            r.fleet.ttft.percentile_ms(95.0),
+            r.fleet.tpot.percentile_ms(95.0),
+            r.handoffs,
+            r.handoff_time.as_ms(),
+        ));
+    }
+
+    println!("\n== serve-scale: per-replica KV budget sweep (2 replicas, gpt3) ==");
+    println!("kv budget        makespan(s)  p99 TTFT(ms)  paging stall(ms)  peak spill(GB)");
+    for budget_gb in [f64::INFINITY, 64.0, 16.0, 4.0] {
+        let kv_budget =
+            if budget_gb.is_finite() { Some(fenghuang::units::Bytes::gb(budget_gb)) } else { None };
+        let cfg = ClusterConfig { kv_budget, ..Default::default() };
+        let mut c = Cluster::fh4(2, &gpt3_175b(), cfg).expect("cluster");
+        let r = c.run(stream(32)).expect("run");
+        let label = if budget_gb.is_finite() {
+            format!("{budget_gb:.0} GB")
+        } else {
+            "unlimited".to_string()
+        };
+        let p99 = r.fleet.ttft.percentile_ms(99.0);
+        assert!(p99.is_finite(), "p99 TTFT must stay finite under KV pressure");
+        println!(
+            "{:<16} {:>11.2}  {:>12.1}  {:>16.3}  {:>13.2}",
+            label,
+            r.makespan().value(),
+            p99,
+            r.fleet.paging_stall.as_ms(),
+            r.kv_spilled_peak.as_gb(),
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"kv_budget\", \"budget\": {}, \"makespan_s\": {:.6}, \
+             \"p99_ttft_ms\": {:.3}, \"paging_stall_ms\": {:.4}, \"peak_spill_gb\": {:.3}}}",
+            common::json_str(&label),
+            r.makespan().value(),
+            p99,
+            r.fleet.paging_stall.as_ms(),
+            r.kv_spilled_peak.as_gb(),
+        ));
+    }
+
+    if common::json_requested() {
+        common::write_rows_json("serve_scale", &json_rows);
     }
 }

@@ -30,6 +30,16 @@ fn main() -> fenghuang::Result<()> {
         policy: Policy::LeastLoaded,
         max_batch: 8,
         disaggregate: Some((2, 2)),
+        ..Default::default()
+    };
+    let mut cluster = Cluster::fh4(4, &model, cfg)?;
+    let report = cluster.run(workload())?;
+    println!("{}", report.summary());
+
+    println!("== same rack under per-replica KV capacity pressure (4 GB budget) ==");
+    let cfg = ClusterConfig {
+        kv_budget: Some(fenghuang::units::Bytes::gb(4.0)),
+        ..Default::default()
     };
     let mut cluster = Cluster::fh4(4, &model, cfg)?;
     let report = cluster.run(workload())?;

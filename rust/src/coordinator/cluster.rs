@@ -34,7 +34,7 @@ use crate::config::{fh4_rack, SystemConfig};
 use crate::error::{FhError, Result};
 use crate::models::arch::ModelArch;
 use crate::models::memory;
-use crate::units::{Bandwidth, Seconds};
+use crate::units::{Bandwidth, Bytes, Seconds};
 
 /// Cluster topology and policy knobs.
 #[derive(Debug, Clone)]
@@ -45,11 +45,21 @@ pub struct ClusterConfig {
     /// `Some((prefill, decode))` splits the fleet into disaggregated
     /// pools of those sizes; `None` runs every replica aggregated.
     pub disaggregate: Option<(usize, usize)>,
+    /// Per-replica local KV budget (`crate::paging::KvPressure`). `None`
+    /// keeps the pre-paging assumption of infinite local KV capacity;
+    /// `Some(b)` spills session KV beyond `b` to the remote tier and
+    /// charges decode steps the paging stall (DESIGN.md §Paging).
+    pub kv_budget: Option<Bytes>,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        ClusterConfig { policy: Policy::LeastLoaded, max_batch: 8, disaggregate: None }
+        ClusterConfig {
+            policy: Policy::LeastLoaded,
+            max_batch: 8,
+            disaggregate: None,
+            kv_budget: None,
+        }
     }
 }
 
@@ -65,6 +75,10 @@ pub struct ReplicaReport {
     pub busy: Seconds,
     pub clock: Seconds,
     pub utilization: f64,
+    /// KV-paging stall this replica's decode steps absorbed.
+    pub paging_stall: Seconds,
+    /// High-water mark of KV bytes spilled to the remote tier.
+    pub kv_spilled_peak: Bytes,
 }
 
 /// Fleet-level result of a cluster run.
@@ -81,6 +95,9 @@ pub struct ClusterReport {
     /// Disaggregated mode only: handoff count and total KV-transfer time.
     pub handoffs: u64,
     pub handoff_time: Seconds,
+    /// Peak KV bytes spilled to the remote tier on any replica (the
+    /// fleet stall total lives in `fleet.paging_stall`).
+    pub kv_spilled_peak: Bytes,
 }
 
 impl ClusterReport {
@@ -126,6 +143,13 @@ impl ClusterReport {
                 "KV handoffs: {} totalling {:.3} ms of transfer\n",
                 self.handoffs,
                 self.handoff_time.as_ms()
+            ));
+        }
+        if self.fleet.paging_stall.value() > 0.0 || self.kv_spilled_peak.value() > 0.0 {
+            s.push_str(&format!(
+                "KV paging: {:.3} ms of decode stall | peak spill {:.2} GB to remote tier\n",
+                self.fleet.paging_stall.as_ms(),
+                self.kv_spilled_peak.as_gb()
             ));
         }
         s
@@ -189,7 +213,10 @@ impl Cluster {
                 None => SchedMode::Full,
             };
             names.push(sys.name.clone());
-            let backend = SimBackend::new(sys, model.clone(), cfg.max_batch);
+            let mut backend = SimBackend::new(sys, model.clone(), cfg.max_batch);
+            if let Some(budget) = cfg.kv_budget {
+                backend = backend.with_kv_budget(budget);
+            }
             let batcher = Batcher::new(cfg.max_batch, 64, model.max_seq as usize);
             replicas.push(Scheduler::new(backend, batcher).with_mode(role));
             roles.push(role);
@@ -332,9 +359,16 @@ impl Cluster {
     fn report(&self) -> ClusterReport {
         let mut fleet = Metrics::default();
         let mut per_replica = Vec::with_capacity(self.replicas.len());
+        let mut kv_spilled_peak = Bytes::ZERO;
         fleet.rejected = self.rejected;
         for (i, r) in self.replicas.iter().enumerate() {
             fleet.merge(&r.metrics);
+            let spilled = r
+                .backend()
+                .kv_pressure()
+                .map(|kv| kv.spilled_peak)
+                .unwrap_or(Bytes::ZERO);
+            kv_spilled_peak = kv_spilled_peak.max(spilled);
             let routed_tokens = match self.roles[i] {
                 SchedMode::DecodeOnly => self
                     .decode_router
@@ -352,11 +386,14 @@ impl Cluster {
                 busy: r.metrics.busy,
                 clock: r.metrics.clock,
                 utilization: r.metrics.utilization(),
+                paging_stall: r.metrics.paging_stall,
+                kv_spilled_peak: spilled,
             });
         }
         ClusterReport {
             model: self.model.name.clone(),
             policy: self.cfg.policy,
+            kv_spilled_peak,
             fleet,
             per_replica,
             imbalance: self.router.imbalance(),
@@ -411,9 +448,10 @@ pub fn demo_serve_cluster(
     policy: Policy,
     disaggregate: Option<(usize, usize)>,
     sessions: usize,
+    kv_budget: Option<Bytes>,
 ) -> Result<String> {
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
-    let cfg = ClusterConfig { policy, max_batch, disaggregate };
+    let cfg = ClusterConfig { policy, max_batch, disaggregate, kv_budget };
     let mut cluster = Cluster::fh4(total, model, cfg)?;
     // Keep per-replica pressure constant as the fleet grows.
     let gap = Seconds::ms(50.0 / total.max(1) as f64);
@@ -506,6 +544,7 @@ mod tests {
             policy: Policy::LeastLoaded,
             max_batch: 8,
             disaggregate: Some((2, 2)),
+            ..Default::default()
         };
         let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
         let r = c.run(small_workload(16)).unwrap();
@@ -574,10 +613,33 @@ mod tests {
 
     #[test]
     fn demo_serve_cluster_reports_fleet_percentiles() {
-        let s =
-            demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4).unwrap();
+        let s = demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4, None)
+            .unwrap();
         assert!(s.contains("completed 12"), "{s}");
         assert!(s.contains("p99"), "{s}");
         assert!(s.contains("load imbalance"), "{s}");
+    }
+
+    #[test]
+    fn kv_budget_degrades_gracefully_with_finite_tails() {
+        // A deliberately tiny per-replica KV budget: decode steps pay
+        // paging stalls, yet every request completes and the fleet tail
+        // latencies stay finite — no more infinite-local-KV assumption.
+        let capped = ClusterConfig { kv_budget: Some(Bytes::gb(2.0)), ..Default::default() };
+        let mut c = Cluster::fh4(2, &gpt3_175b(), capped).unwrap();
+        let r = c.run(small_workload(12)).unwrap();
+        assert_eq!(r.fleet.completed, 12);
+        assert!(r.fleet.paging_stall > Seconds::ZERO, "budget must bind");
+        assert!(r.kv_spilled_peak.value() > 0.0);
+        let p99 = r.fleet.ttft.percentile_ms(99.0);
+        assert!(p99.is_finite() && p99 > 0.0);
+        assert!(r.summary().contains("KV paging"), "{}", r.summary());
+        // Same workload without pressure is strictly faster.
+        let mut free = Cluster::fh4(2, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let rf = free.run(small_workload(12)).unwrap();
+        assert_eq!(rf.fleet.paging_stall, Seconds::ZERO);
+        assert!(r.makespan() >= rf.makespan());
+        let stalls: Seconds = r.per_replica.iter().map(|p| p.paging_stall).sum();
+        assert_eq!(stalls, r.fleet.paging_stall);
     }
 }

@@ -11,9 +11,11 @@
 use crate::config::SystemConfig;
 use crate::error::Result;
 use crate::models::arch::ModelArch;
+use crate::models::memory;
+use crate::paging::KvPressure;
 use crate::sim;
 use crate::trace::Phase;
-use crate::units::Seconds;
+use crate::units::{Bytes, Seconds};
 use std::collections::HashMap;
 
 /// One request's view handed to a prefill call.
@@ -32,6 +34,12 @@ pub trait Backend {
     fn prefill(&mut self, items: &[PrefillItem], padded_len: usize) -> Result<(Seconds, Vec<i32>)>;
     /// Advance every sequence by one token; return (elapsed, next tokens).
     fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)>;
+    /// Drain the KV-paging stall the backend folded into the last step's
+    /// elapsed time (zero for backends without KV capacity pressure; the
+    /// scheduler attributes it to [`super::metrics::Metrics`]).
+    fn take_paging_stall(&mut self) -> Seconds {
+        Seconds::ZERO
+    }
 }
 
 /// Deterministic pseudo-token (the simulation backends don't model real
@@ -77,11 +85,36 @@ pub struct SimBackend {
     max_conc: usize,
     prefill_cache: HashMap<(u64, u64), Seconds>,
     decode_cache: HashMap<(u64, u64), Seconds>,
+    /// Per-replica KV capacity pressure (None = infinite local KV, the
+    /// pre-paging behaviour).
+    kv: Option<KvPressure>,
+    pending_stall: Seconds,
 }
 
 impl SimBackend {
     pub fn new(sys: SystemConfig, model: ModelArch, max_conc: usize) -> Self {
-        SimBackend { sys, model, max_conc, prefill_cache: HashMap::new(), decode_cache: HashMap::new() }
+        SimBackend {
+            sys,
+            model,
+            max_conc,
+            prefill_cache: HashMap::new(),
+            decode_cache: HashMap::new(),
+            kv: None,
+            pending_stall: Seconds::ZERO,
+        }
+    }
+
+    /// Enable KV capacity pressure: active sequences' KV beyond `budget`
+    /// (per replica, aggregate across its GPUs) spills to the remote tier
+    /// and decode steps are charged the paging stall.
+    pub fn with_kv_budget(mut self, budget: Bytes) -> Self {
+        self.kv = Some(KvPressure::new(budget, &self.sys));
+        self
+    }
+
+    /// KV-pressure counters (spilled peak, total stall), when enabled.
+    pub fn kv_pressure(&self) -> Option<&KvPressure> {
+        self.kv.as_ref()
     }
 
     fn bucket(len: u64) -> u64 {
@@ -117,7 +150,7 @@ impl Backend for SimBackend {
         let batch = seqs.len() as u64;
         let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(1) as u64;
         let key = (batch, Self::bucket(max_len));
-        let t = match self.decode_cache.get(&key) {
+        let mut t = match self.decode_cache.get(&key) {
             Some(t) => *t,
             None => {
                 let r =
@@ -126,7 +159,20 @@ impl Backend for SimBackend {
                 r.total
             }
         };
+        if let Some(kv) = self.kv.as_mut() {
+            // Exact resident KV across the batch (not the bucketed cost
+            // key): a decode step touches all of it.
+            let total_tokens: u64 = seqs.iter().map(|s| s.len() as u64).sum();
+            let resident = memory::kv_cache_bytes(&self.model, 1, total_tokens);
+            let stall = kv.step_stall(resident, resident);
+            t += stall;
+            self.pending_stall += stall;
+        }
         Ok((t, seqs.iter().enumerate().map(|(i, s)| pseudo_token(s.len() as u64 + i as u64)).collect()))
+    }
+
+    fn take_paging_stall(&mut self) -> Seconds {
+        std::mem::take(&mut self.pending_stall)
     }
 }
 
@@ -155,6 +201,28 @@ mod tests {
         let (c, _) = b.decode_step(&seqs).unwrap();
         assert_eq!(a, c);
         assert_eq!(b.decode_cache.len(), 1);
+    }
+
+    #[test]
+    fn kv_budget_charges_decode_stall() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut free = SimBackend::new(sys.clone(), gpt3_175b(), 8);
+        let mut capped =
+            SimBackend::new(sys, gpt3_175b(), 8).with_kv_budget(Bytes::gb(1.0));
+        // 8 × 8K-context sequences: GPT-3 MHA KV is ~4.6 MB/token, far
+        // beyond a 1 GB budget — most of it spills.
+        let seqs = vec![vec![1i32; 8192]; 8];
+        let (a, _) = free.decode_step(&seqs).unwrap();
+        let (b, _) = capped.decode_step(&seqs).unwrap();
+        assert!(b > a, "capped step {b:?} must exceed free step {a:?}");
+        let stall = capped.take_paging_stall();
+        assert!(stall > Seconds::ZERO);
+        assert_eq!(capped.take_paging_stall(), Seconds::ZERO, "stall drains once");
+        let kv = capped.kv_pressure().unwrap();
+        assert!(kv.spilled_peak.value() > 0.0);
+        assert_eq!(kv.stall_total, stall);
+        assert!(free.take_paging_stall() == Seconds::ZERO);
+        assert!(free.kv_pressure().is_none());
     }
 
     #[test]

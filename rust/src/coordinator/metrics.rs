@@ -60,6 +60,9 @@ pub struct Metrics {
     /// Time the backend actually spent executing prefill/decode steps
     /// (clock minus idle gaps) — per-replica utilization numerator.
     pub busy: Seconds,
+    /// Portion of `busy` that was KV-paging stall (decode steps waiting
+    /// on spilled KV pages; zero when KV capacity pressure is off).
+    pub paging_stall: Seconds,
 }
 
 impl Metrics {
@@ -97,12 +100,18 @@ impl Metrics {
         self.rejected += other.rejected;
         self.tokens_generated += other.tokens_generated;
         self.busy += other.busy;
+        self.paging_stall += other.paging_stall;
         self.clock = self.clock.max(other.clock);
     }
 
     pub fn summary(&self) -> String {
+        let stall = if self.paging_stall.value() > 0.0 {
+            format!(" | kv-paging stall {:.3}s", self.paging_stall.value())
+        } else {
+            String::new()
+        };
         format!(
-            "completed {} | rejected {} | tokens {} | wall {:.3}s\n\
+            "completed {} | rejected {} | tokens {} | wall {:.3}s{stall}\n\
              TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}\n\
              TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}\n\
              E2E   mean {:.2} ms  p95 {:.2}\n\

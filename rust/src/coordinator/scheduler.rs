@@ -291,6 +291,9 @@ impl<B: Backend> Scheduler<B> {
         let (elapsed, next_tokens) = self.backend.decode_step(&seqs)?;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
+        // KV capacity pressure: the backend folded any paging stall into
+        // `elapsed`; attribute it so fleet reports can separate it out.
+        self.metrics.paging_stall += self.backend.take_paging_stall();
         let per_tok = elapsed; // one step produced one token per sequence
         for (a, tok) in self.active.iter_mut().zip(next_tokens) {
             a.tokens.push(tok);

@@ -440,12 +440,10 @@ mod tests {
     #[test]
     fn pool_exhaustion_reports_free_bytes() {
         let pool = TabPool::new(100, 1, 10);
-        match pool.alloc(1000) {
-            Err(FhError::PoolExhausted { requested, free }) => {
-                assert_eq!(requested, 4000);
-                assert_eq!(free, 400);
-            }
-            other => panic!("expected PoolExhausted, got {other:?}"),
-        }
+        let got = pool.alloc(1000);
+        assert!(
+            matches!(got, Err(FhError::PoolExhausted { requested: 4000, free: 400 })),
+            "expected PoolExhausted {{ requested: 4000, free: 400 }}, got {got:?}"
+        );
     }
 }

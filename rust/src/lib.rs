@@ -12,6 +12,9 @@
 //! * [`trace`] — synthetic operator traces (the Nsight-trace substitute);
 //! * [`sim`] — discrete-event simulator with the tensor prefetcher and
 //!   paging stream (→ Fig 4.1, Table 4.3);
+//! * [`paging`] — active tensor paging: page-granular multi-tier memory
+//!   orchestration (page table, eviction policies, batched migration)
+//!   with near-memory compute offload (→ Table 4.3 capacity sweep);
 //! * [`coordinator`] — serving layer: request router, continuous batcher,
 //!   prefill/decode scheduler over simulated FengHuang nodes, and the
 //!   rack-scale multi-replica cluster simulator with KV-aware routing
@@ -32,6 +35,7 @@ pub mod error;
 pub mod fabric;
 pub mod hardware;
 pub mod models;
+pub mod paging;
 pub mod runtime;
 pub mod sim;
 pub mod trace;
@@ -45,6 +49,7 @@ pub mod prelude {
     pub use crate::error::{FhError, Result};
     pub use crate::fabric::{Collective, FabricLatencies, TabPool};
     pub use crate::models::arch::{self, ModelArch};
+    pub use crate::paging::{simulate_paged, PagedReport, PagingConfig, PlacementPolicy, PolicyKind};
     pub use crate::sim::{simulate, SimReport};
     pub use crate::trace::{Phase, TraceConfig};
     pub use crate::units::{Bandwidth, Bytes, Dtype, FlopRate, Flops, Seconds};

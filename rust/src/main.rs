@@ -7,14 +7,20 @@
 //! fenghuang speedup
 //! fenghuang serve    [--model M] [--requests N] [--max-batch B]
 //!                    [--replicas R] [--policy P] [--disaggregate P:D]
-//!                    [--sessions S]
+//!                    [--sessions S] [--kv-budget-gb G]
+//! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
+//!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //! fenghuang help
 //! ```
 //!
 //! (Arg parsing and error plumbing are hand-rolled; the offline build
-//! environment has no clap or anyhow — see DESIGN.md §1.)
+//! environment has no clap or anyhow — see DESIGN.md §1.) Every
+//! subcommand validates its flag set: unknown flags and out-of-range
+//! values fail with actionable messages instead of silently falling back
+//! to defaults.
 
 use fenghuang::coordinator::router::Policy;
+use fenghuang::paging::NmcConfig;
 use fenghuang::prelude::*;
 use fenghuang::units::Bandwidth;
 use std::collections::HashMap;
@@ -31,16 +37,52 @@ USAGE:
   fenghuang speedup
   fenghuang serve    [--model gpt3] [--requests 64] [--max-batch 8]
                      [--replicas 1] [--policy round-robin|least-outstanding-tokens|kv-affinity]
-                     [--disaggregate P:D] [--sessions 8]
+                     [--disaggregate P:D] [--sessions 8] [--kv-budget-gb G]
+  fenghuang page     [--model gpt3] [--system fh4-1.5xm|fh4-2.0xm] [--remote-tbps 4.8]
+                     [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
+                     [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
+                     [--steps 3] [--page-mib 2] [--pin-frac 0.0] [--page-kv on|off]
+                     [--nmc on|off]
   fenghuang help
 ";
+
+const SIMULATE_FLAGS: &[&str] = &["model", "system", "remote-tbps", "batch", "prompt", "gen"];
+const SERVE_FLAGS: &[&str] = &[
+    "model",
+    "requests",
+    "max-batch",
+    "replicas",
+    "policy",
+    "disaggregate",
+    "sessions",
+    "kv-budget-gb",
+];
+const PAGE_FLAGS: &[&str] = &[
+    "model",
+    "system",
+    "remote-tbps",
+    "batch",
+    "phase",
+    "kv-len",
+    "prompt",
+    "local-gb",
+    "policy",
+    "window",
+    "steps",
+    "page-mib",
+    "pin-frac",
+    "page-kv",
+    "nmc",
+];
 
 fn cli_err(msg: String) -> FhError {
     FhError::Config(msg)
 }
 
-/// Parse `--key value` pairs after the subcommand.
-fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+/// Parse `--key value` pairs after the subcommand, rejecting flags the
+/// subcommand does not understand (a typo'd flag must not silently fall
+/// back to a default).
+fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
@@ -48,10 +90,20 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
         if !k.starts_with("--") {
             return Err(cli_err(format!("unexpected argument '{k}' (flags are --key value)")));
         }
+        let key = k.trim_start_matches("--").to_string();
+        if !allowed.contains(&key.as_str()) {
+            let mut expected: Vec<String> =
+                allowed.iter().map(|a| format!("--{a}")).collect();
+            expected.sort();
+            return Err(cli_err(format!(
+                "unknown flag --{key} for '{cmd}' (expected one of: {})",
+                expected.join(", ")
+            )));
+        }
         let v = args
             .get(i + 1)
             .ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
-        flags.insert(k.trim_start_matches("--").to_string(), v.clone());
+        flags.insert(key, v.clone());
         i += 2;
     }
     Ok(flags)
@@ -67,13 +119,40 @@ where
     }
 }
 
+/// A flag that must parse to a value ≥ 1 (counts, sizes).
+fn positive<T>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T: std::str::FromStr + PartialOrd + From<u8> + std::fmt::Display,
+    T::Err: std::fmt::Display,
+{
+    let v = flag(flags, key, default)?;
+    if v < T::from(1u8) {
+        return Err(cli_err(format!("--{key} must be ≥ 1, got {v}")));
+    }
+    Ok(v)
+}
+
+/// An on/off switch flag.
+fn switch(flags: &HashMap<String, String>, key: &str) -> Result<bool> {
+    match flags.get(key).map(|s| s.to_ascii_lowercase()) {
+        None => Ok(false),
+        Some(v) => match v.as_str() {
+            "on" | "true" | "1" | "yes" => Ok(true),
+            "off" | "false" | "0" | "no" => Ok(false),
+            other => Err(cli_err(format!("--{key} wants on|off, got '{other}'"))),
+        },
+    }
+}
+
 fn system_by_name(name: &str, remote_tbps: f64) -> Result<SystemConfig> {
     let bw = Bandwidth::tbps(remote_tbps);
     match name.to_ascii_lowercase().as_str() {
         "baseline8" => Ok(baseline8()),
         "fh4-1.5xm" | "fh4_15xm" => Ok(fh4_15xm(bw)),
         "fh4-2.0xm" | "fh4_20xm" => Ok(fh4_20xm(bw)),
-        other => Err(cli_err(format!("unknown system preset '{other}'"))),
+        other => Err(cli_err(format!(
+            "unknown system preset '{other}' (expected baseline8, fh4-1.5xm or fh4-2.0xm)"
+        ))),
     }
 }
 
@@ -85,9 +164,221 @@ fn parse_disaggregate(v: &str) -> Result<(usize, usize)> {
     let p: usize = p.parse().map_err(|e| cli_err(format!("--disaggregate prefill: {e}")))?;
     let d: usize = d.parse().map_err(|e| cli_err(format!("--disaggregate decode: {e}")))?;
     if p == 0 || d == 0 {
-        return Err(cli_err("--disaggregate pools must be non-empty".into()));
+        return Err(cli_err(format!(
+            "--disaggregate pools must be non-empty, got {p}:{d}"
+        )));
     }
     Ok((p, d))
+}
+
+fn run_serve(args: &[String]) -> Result<()> {
+    let f = parse_flags("serve", args, SERVE_FLAGS)?;
+    let model: String = flag(&f, "model", "gpt3".to_string())?;
+    let requests: usize = positive(&f, "requests", 64)?;
+    let max_batch: usize = positive(&f, "max-batch", 8)?;
+    let replicas: usize = positive(&f, "replicas", 1)?;
+    let sessions: usize = positive(&f, "sessions", 8)?;
+    let policy_s: String = flag(&f, "policy", "least-outstanding-tokens".to_string())?;
+    let policy = Policy::parse(&policy_s).ok_or_else(|| {
+        cli_err(format!(
+            "unknown policy '{policy_s}' (expected round-robin, \
+             least-outstanding-tokens or kv-affinity)"
+        ))
+    })?;
+    let disaggregate = match f.get("disaggregate") {
+        Some(v) => Some(parse_disaggregate(v)?),
+        None => None,
+    };
+    if let Some((p, d)) = disaggregate {
+        // Pool sizes define the fleet; an explicit conflicting
+        // --replicas would otherwise be silently ignored.
+        if f.contains_key("replicas") && p + d != replicas {
+            return Err(cli_err(format!(
+                "--replicas {replicas} conflicts with --disaggregate {p}:{d} \
+                 (the pools make a {}-replica fleet; drop --replicas or make them agree)",
+                p + d
+            )));
+        }
+    }
+    let kv_budget = match f.get("kv-budget-gb") {
+        Some(v) => {
+            let gb: f64 = v
+                .parse()
+                .map_err(|e| cli_err(format!("--kv-budget-gb: {e}")))?;
+            if gb <= 0.0 {
+                return Err(cli_err(format!("--kv-budget-gb must be > 0, got {gb}")));
+            }
+            Some(Bytes::gb(gb))
+        }
+        None => None,
+    };
+    let m =
+        arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
+    if replicas <= 1 && disaggregate.is_none() && !f.contains_key("policy") && kv_budget.is_none()
+    {
+        // Single node, no routing: the original serving path.
+        println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
+    } else {
+        println!(
+            "{}",
+            fenghuang::coordinator::demo_serve_cluster(
+                &m,
+                requests,
+                max_batch,
+                replicas,
+                policy,
+                disaggregate,
+                sessions,
+                kv_budget,
+            )?
+        );
+    }
+    Ok(())
+}
+
+fn run_page(args: &[String]) -> Result<()> {
+    let f = parse_flags("page", args, PAGE_FLAGS)?;
+    let model: String = flag(&f, "model", "gpt3".to_string())?;
+    let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
+    let remote_tbps: f64 = flag(&f, "remote-tbps", 4.8)?;
+    if remote_tbps <= 0.0 {
+        return Err(cli_err(format!("--remote-tbps must be > 0, got {remote_tbps}")));
+    }
+    let batch: u64 = positive(&f, "batch", 8)?;
+    let phase_s: String = flag(&f, "phase", "decode".to_string())?;
+    let phase = match phase_s.to_ascii_lowercase().as_str() {
+        "decode" => {
+            if f.contains_key("prompt") {
+                return Err(cli_err(
+                    "--prompt only applies to --phase prefill (use --kv-len for decode)".into(),
+                ));
+            }
+            Phase::Decode { kv_len: positive(&f, "kv-len", 4608)? }
+        }
+        "prefill" => {
+            if f.contains_key("kv-len") {
+                return Err(cli_err(
+                    "--kv-len only applies to --phase decode (use --prompt for prefill)".into(),
+                ));
+            }
+            Phase::Prefill { prompt_len: positive(&f, "prompt", 4096)? }
+        }
+        other => {
+            return Err(cli_err(format!("--phase wants decode|prefill, got '{other}'")));
+        }
+    };
+    let local_raw: String = flag(&f, "local-gb", "unlimited".to_string())?;
+    let local_budget = if local_raw == "unlimited" {
+        None
+    } else {
+        let gb: f64 = local_raw
+            .parse()
+            .map_err(|e| cli_err(format!("--local-gb: {e} (number of GB or 'unlimited')")))?;
+        if gb <= 0.0 {
+            return Err(cli_err(format!("--local-gb must be > 0, got {gb}")));
+        }
+        Some(Bytes::gb(gb))
+    };
+    let policy_s: String = flag(&f, "policy", "minimal".to_string())?;
+    let kind = PolicyKind::parse(&policy_s).ok_or_else(|| {
+        cli_err(format!(
+            "unknown paging policy '{policy_s}' (expected minimal, lru or heat)"
+        ))
+    })?;
+    let window: usize = positive(&f, "window", 10)?;
+    let steps: usize = positive(&f, "steps", 3)?;
+    let page_mib: f64 = flag(&f, "page-mib", 2.0)?;
+    if page_mib <= 0.0 {
+        return Err(cli_err(format!("--page-mib must be > 0, got {page_mib}")));
+    }
+    let pin_frac: f64 = flag(&f, "pin-frac", 0.0)?;
+    if !(0.0..=1.0).contains(&pin_frac) {
+        return Err(cli_err(format!("--pin-frac must be in [0, 1], got {pin_frac}")));
+    }
+    if pin_frac > 0.0 && local_budget.is_none() {
+        return Err(cli_err(
+            "--pin-frac reserves a fraction of the local budget — give --local-gb too".into(),
+        ));
+    }
+    let page_kv = switch(&f, "page-kv")?;
+    let nmc = switch(&f, "nmc")?;
+
+    let m =
+        arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
+    let sys = system_by_name(&system, remote_tbps)?;
+    let cfg = PagingConfig {
+        page_bytes: Bytes::mib(page_mib),
+        local_budget,
+        policy: PlacementPolicy { kind, window, page_kv, pin_frac },
+        nmc: NmcConfig { enabled: nmc },
+        steps,
+        ..Default::default()
+    };
+    let r = fenghuang::paging::simulate_paged(&sys, &m, batch, phase, &cfg)?;
+    // Full-residency reference: uncapped LRU reaches the zero-fetch
+    // steady state, the "all weights resident" roofline.
+    let full_cfg = PagingConfig {
+        local_budget: None,
+        policy: PlacementPolicy { kind: PolicyKind::Lru, window, page_kv, pin_frac: 0.0 },
+        steps: steps.max(2),
+        ..cfg
+    };
+    let full = fenghuang::paging::simulate_paged(&sys, &m, batch, phase, &full_cfg)?;
+    let slowdown = if full.steady_step.value() > 0.0 {
+        r.steady_step / full.steady_step
+    } else {
+        1.0
+    };
+
+    println!(
+        "{} on {} ({:?}, batch {batch}) — policy {}, window {window}, {} steps",
+        r.model,
+        r.system,
+        r.phase,
+        r.policy.name(),
+        r.steps
+    );
+    match local_budget {
+        Some(b) => println!("  local budget      {:>10.2} GB", b.as_gb()),
+        None => println!("  local budget       unlimited"),
+    }
+    println!("  working set       {:>10.2} GB (remote pool)", r.working_set.as_gb());
+    println!("  cold step         {:>10.3} ms", r.cold_step.as_ms());
+    println!("  steady step       {:>10.3} ms", r.steady_step.as_ms());
+    println!("  full-residency    {:>10.3} ms  (slowdown {slowdown:.3}x)", full.steady_step.as_ms());
+    println!(
+        "  exposed stall     {:>10.3} ms ({:.1}% of step)",
+        r.exposed.as_ms(),
+        100.0 * r.exposure_frac()
+    );
+    println!("  peak local        {:>10.2} GB", r.peak_local.as_gb());
+    println!(
+        "  vs Baseline8 HBM  {:>9.1}% capacity reduction (144 GB reference)",
+        100.0 * r.capacity_reduction_vs(Bytes::gb(144.0))
+    );
+    if r.pinned.value() > 0.0 {
+        println!("  pinned weights    {:>10.2} GB", r.pinned.as_gb());
+    }
+    println!(
+        "  paged in          {:>10.2} GB in {} pages / {} batches",
+        r.migration.bytes_in.as_gb(),
+        r.migration.pages_in,
+        r.migration.batches
+    );
+    if r.migration.bytes_out.value() > 0.0 {
+        println!(
+            "  written back      {:>10.2} GB ({} write-backs)",
+            r.migration.bytes_out.as_gb(),
+            r.migration.writebacks
+        );
+    }
+    if r.evictions > 0 {
+        println!("  evictions         {:>10}", r.evictions);
+    }
+    if nmc {
+        println!("  NMC offloads      {:>10} ops executed in-pool", r.nmc_offloads);
+    }
+    Ok(())
 }
 
 fn run() -> Result<()> {
@@ -98,13 +389,13 @@ fn run() -> Result<()> {
     };
     match cmd.as_str() {
         "simulate" => {
-            let f = parse_flags(&args[1..])?;
+            let f = parse_flags("simulate", &args[1..], SIMULATE_FLAGS)?;
             let model: String = flag(&f, "model", "gpt3".to_string())?;
             let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
             let remote_tbps: f64 = flag(&f, "remote-tbps", 4.8)?;
-            let batch: u64 = flag(&f, "batch", 8)?;
-            let prompt: u64 = flag(&f, "prompt", 4096)?;
-            let gen: u64 = flag(&f, "gen", 1024)?;
+            let batch: u64 = positive(&f, "batch", 8)?;
+            let prompt: u64 = positive(&f, "prompt", 4096)?;
+            let gen: u64 = positive(&f, "gen", 1024)?;
             let m = arch::by_name(&model)
                 .ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
             let sys = system_by_name(&system, remote_tbps)?;
@@ -126,50 +417,8 @@ fn run() -> Result<()> {
         "speedup" => {
             print!("{}", fenghuang::analysis::render("speedup")?);
         }
-        "serve" => {
-            let f = parse_flags(&args[1..])?;
-            let model: String = flag(&f, "model", "gpt3".to_string())?;
-            let requests: usize = flag(&f, "requests", 64)?;
-            let max_batch: usize = flag(&f, "max-batch", 8)?;
-            let replicas: usize = flag(&f, "replicas", 1)?;
-            let sessions: usize = flag(&f, "sessions", 8)?;
-            let policy_s: String = flag(&f, "policy", "least-outstanding-tokens".to_string())?;
-            let policy = Policy::parse(&policy_s)
-                .ok_or_else(|| cli_err(format!("unknown policy '{policy_s}'")))?;
-            let disaggregate = match f.get("disaggregate") {
-                Some(v) => Some(parse_disaggregate(v)?),
-                None => None,
-            };
-            if let Some((p, d)) = disaggregate {
-                // Pool sizes define the fleet; an explicit conflicting
-                // --replicas would otherwise be silently ignored.
-                if f.contains_key("replicas") && p + d != replicas {
-                    return Err(cli_err(format!(
-                        "--replicas {replicas} conflicts with --disaggregate {p}:{d} (= {} replicas)",
-                        p + d
-                    )));
-                }
-            }
-            let m = arch::by_name(&model)
-                .ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
-            if replicas <= 1 && disaggregate.is_none() && !f.contains_key("policy") {
-                // Single node, no routing: the original serving path.
-                println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
-            } else {
-                println!(
-                    "{}",
-                    fenghuang::coordinator::demo_serve_cluster(
-                        &m,
-                        requests,
-                        max_batch,
-                        replicas,
-                        policy,
-                        disaggregate,
-                        sessions,
-                    )?
-                );
-            }
-        }
+        "serve" => run_serve(&args[1..])?,
+        "page" => run_page(&args[1..])?,
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {
             eprint!("unknown command '{other}'\n\n{USAGE}");

@@ -1,0 +1,168 @@
+//! Page-migration engine: batches page moves between tiers and charges
+//! them through the Table 3.1 fabric latencies (DESIGN.md §Paging).
+//!
+//! Page-ins coalesce contiguous pages into large DMA batches — one TAB
+//! read command per batch (Eq 3.1 fixed part) plus the Eq 4.1
+//! size-dependent serialization of the whole payload. Write-backs of
+//! dirty pages (evicted KV) pay the Eq 3.2 write path symmetrically.
+
+use crate::config::SystemConfig;
+use crate::fabric::FabricLatencies;
+use crate::models::mfu;
+use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// Migration knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationConfig {
+    /// Pages coalesced into one DMA batch (one fixed command latency per
+    /// batch). 64 × 2 MiB = 128 MiB batches by default.
+    pub batch_pages: u64,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        MigrationConfig { batch_pages: 64 }
+    }
+}
+
+/// Cumulative migration counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MigrationStats {
+    pub pages_in: u64,
+    pub pages_out: u64,
+    pub bytes_in: Bytes,
+    pub bytes_out: Bytes,
+    /// DMA batches issued (page-in and write-back).
+    pub batches: u64,
+    /// Paging-stream time spent on page-ins.
+    pub time_in: Seconds,
+    /// Paging-stream time spent on dirty-page write-backs.
+    pub time_out: Seconds,
+    /// Eviction events that required a write-back.
+    pub writebacks: u64,
+}
+
+/// Charges page moves over the remote fabric.
+#[derive(Debug, Clone)]
+pub struct MigrationEngine {
+    cfg: MigrationConfig,
+    bw: Bandwidth,
+    lat: FabricLatencies,
+    pub stats: MigrationStats,
+}
+
+impl MigrationEngine {
+    pub fn new(sys: &SystemConfig, cfg: MigrationConfig) -> Self {
+        MigrationEngine {
+            cfg,
+            bw: sys.fabric_bw,
+            lat: sys.latencies,
+            stats: MigrationStats::default(),
+        }
+    }
+
+    fn batches(&self, pages: u64) -> u64 {
+        if pages == 0 {
+            0
+        } else {
+            let bp = self.cfg.batch_pages.max(1);
+            (pages + bp - 1) / bp
+        }
+    }
+
+    /// Charge a batched page-in of `bytes` spanning `pages` pages.
+    pub fn page_in(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let t = self.lat.tab_read * batches as f64 + mfu::transfer_time(bytes, self.bw);
+        self.stats.pages_in += pages;
+        self.stats.bytes_in += bytes;
+        self.stats.batches += batches;
+        self.stats.time_in += t;
+        t
+    }
+
+    /// Charge a write-back of `bytes` of dirty pages spanning `pages`.
+    pub fn write_back(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let t = self.lat.tab_write * batches as f64 + mfu::transfer_time(bytes, self.bw);
+        self.stats.pages_out += pages;
+        self.stats.bytes_out += bytes;
+        self.stats.batches += batches;
+        self.stats.time_out += t;
+        self.stats.writebacks += 1;
+        t
+    }
+
+    /// Total paging-stream busy time charged so far.
+    pub fn busy(&self) -> Seconds {
+        self.stats.time_in + self.stats.time_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::fh4_15xm;
+    use crate::units::Bandwidth;
+
+    fn engine() -> MigrationEngine {
+        MigrationEngine::new(
+            &fh4_15xm(Bandwidth::tbps(4.0)),
+            MigrationConfig { batch_pages: 64 },
+        )
+    }
+
+    #[test]
+    fn page_in_charges_fixed_latency_per_batch() {
+        let mut m = engine();
+        // 65 pages → 2 batches → 2 × 220 ns of fixed read latency.
+        let t = m.page_in(Bytes::mib(130.0), 65);
+        let floor = 2.0 * 220.0; // ns
+        assert!(t.as_ns() > floor, "t {} ns", t.as_ns());
+        assert_eq!(m.stats.batches, 2);
+        assert_eq!(m.stats.pages_in, 65);
+        // Bulk transfer dominates: 130 MiB / 4 TB/s ≈ 34 µs plus eff loss.
+        assert!(t.as_us() > 30.0 && t.as_us() < 60.0, "t {} µs", t.as_us());
+    }
+
+    #[test]
+    fn empty_moves_are_free() {
+        let mut m = engine();
+        assert_eq!(m.page_in(Bytes::ZERO, 0), Seconds::ZERO);
+        assert_eq!(m.write_back(Bytes::ZERO, 0), Seconds::ZERO);
+        assert_eq!(m.stats.batches, 0);
+        assert_eq!(m.busy(), Seconds::ZERO);
+    }
+
+    #[test]
+    fn write_back_uses_write_path_and_counts() {
+        let mut m = engine();
+        let t = m.page_in(Bytes::mib(2.0), 1);
+        let w = m.write_back(Bytes::mib(2.0), 1);
+        // Same payload: the write path's fixed latency (90 ns) is smaller
+        // than the read path's (220 ns).
+        assert!(w < t, "write {} vs read {}", w.as_ns(), t.as_ns());
+        assert_eq!(m.stats.writebacks, 1);
+        assert_eq!(m.stats.pages_out, 1);
+        assert_eq!(m.busy(), t + w);
+    }
+
+    #[test]
+    fn batching_amortises_fixed_latency() {
+        // Moving 256 pages as one call beats 256 single-page calls.
+        let mut batched = engine();
+        let t1 = batched.page_in(Bytes::mib(512.0), 256);
+        let mut unbatched = engine();
+        let mut t2 = Seconds::ZERO;
+        for _ in 0..256 {
+            t2 += unbatched.page_in(Bytes::mib(2.0), 1);
+        }
+        assert!(t1 < t2, "batched {} vs unbatched {}", t1.as_us(), t2.as_us());
+    }
+}

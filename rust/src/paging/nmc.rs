@@ -1,0 +1,133 @@
+//! Near-memory compute (NMC) offload: eligible ops execute *in the pool*
+//! and skip page-in entirely (DESIGN.md §Paging).
+//!
+//! The paper's pool is active memory — the TAB already performs
+//! write-accumulate reductions in-memory (§3.3.1, the functional
+//! semantics live in [`crate::fabric::tab`]). This module generalises
+//! that capability into an offload model:
+//!
+//! * **Write-accumulate reductions** (AllReduce / ReduceScatter): each
+//!   GPU `write_accumulate`s its contribution and the pool reduces in
+//!   place. The consumer-side read-back command of the ordinary TAB
+//!   collective path is elided — the reduced tensor stays in the pool for
+//!   the next consumer.
+//! * **Embedding gather**: the embedding table never pages in; the pool
+//!   gathers the addressed rows and streams only those to the GPU.
+//! * **KV gather**: the attention KV stream is gathered pool-side, so
+//!   even under a `page_kv` policy the KV pages skip the paging stream.
+//!
+//! Offload times are grounded on the same Table 3.1 latencies and Eq 4.1
+//! link efficiency as every other remote access.
+
+use crate::config::SystemConfig;
+use crate::fabric::collectives::{tab_wire_bytes, Collective};
+use crate::models::mfu;
+use crate::trace::{Op, OpKind, OpName};
+use crate::units::Seconds;
+
+/// NMC knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NmcConfig {
+    pub enabled: bool,
+}
+
+/// Which in-pool execution an op maps to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NmcKind {
+    /// In-pool write-accumulate reduction (AllReduce / ReduceScatter).
+    ReduceAccumulate,
+    /// Pool-side gather of embedding rows.
+    EmbeddingGather,
+    /// Pool-side gather of the attention KV stream.
+    KvGather,
+}
+
+/// Whether `op` can execute in the pool, and how.
+pub fn eligible(op: &Op) -> Option<NmcKind> {
+    match op.kind {
+        OpKind::Collective(Collective::AllReduce | Collective::ReduceScatter) => {
+            Some(NmcKind::ReduceAccumulate)
+        }
+        OpKind::Memory if op.op == OpName::Embed => Some(NmcKind::EmbeddingGather),
+        OpKind::Attention if op.kv_stream_bytes.value() > 0.0 => Some(NmcKind::KvGather),
+        _ => None,
+    }
+}
+
+/// In-pool reduction time: write-accumulate + completion notification +
+/// the write stream; the read-back command of the ordinary collective
+/// path (Eq 3.1 fixed part) is elided because the result stays in-pool.
+pub fn reduce_time(op: &Op, sys: &SystemConfig) -> Seconds {
+    let OpKind::Collective(c) = op.kind else {
+        return Seconds::ZERO;
+    };
+    let fixed = sys.latencies.tab_write_accumulate + sys.latencies.notification_latency();
+    fixed + tab_wire_bytes(c, op.comm_payload, sys.num_gpus).over(sys.fabric_bw)
+}
+
+/// Pool-side gather time: one read command, then only the gathered rows
+/// stream to the GPU at Eq 4.1 efficiency. The gathered payload equals
+/// the op's read traffic (the rows themselves); the *table* moves
+/// nothing.
+pub fn gather_time(op: &Op, sys: &SystemConfig) -> Seconds {
+    sys.latencies.tab_read + mfu::transfer_time(op.read_bytes, sys.fabric_bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::fh4_15xm;
+    use crate::fabric::collectives::tab_collective_time;
+    use crate::models::arch::gpt3_175b;
+    use crate::trace::{generate, Phase, TraceConfig};
+    use crate::units::Bandwidth;
+
+    fn trace() -> crate::trace::Trace {
+        generate(&TraceConfig {
+            model: gpt3_175b(),
+            tp: 4,
+            batch: 8,
+            phase: Phase::Decode { kv_len: 2048 },
+        })
+    }
+
+    #[test]
+    fn eligibility_covers_the_three_offload_classes() {
+        let t = trace();
+        let embed = t.ops.iter().find(|o| o.op == OpName::Embed).unwrap();
+        assert_eq!(eligible(embed), Some(NmcKind::EmbeddingGather));
+        let attn = t.ops.iter().find(|o| o.op == OpName::Attn).unwrap();
+        assert_eq!(eligible(attn), Some(NmcKind::KvGather));
+        let ar = t.ops.iter().find(|o| o.is_collective()).unwrap();
+        assert_eq!(eligible(ar), Some(NmcKind::ReduceAccumulate));
+        let qkv = t.ops.iter().find(|o| o.op == OpName::Qkv).unwrap();
+        assert_eq!(eligible(qkv), None, "dense GEMMs stay on the GPU");
+    }
+
+    #[test]
+    fn in_pool_reduction_beats_readback_path() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let t = trace();
+        let ar = t.ops.iter().find(|o| o.is_collective()).unwrap();
+        let OpKind::Collective(c) = ar.kind else { unreachable!() };
+        let ordinary =
+            tab_collective_time(c, ar.comm_payload, sys.num_gpus, sys.fabric_bw, &sys.latencies);
+        let nmc = reduce_time(ar, &sys);
+        // Eliding the read-back saves exactly the fixed read latency.
+        let saved = ordinary - nmc;
+        assert!((saved.as_ns() - 220.0).abs() < 1e-6, "saved {} ns", saved.as_ns());
+    }
+
+    #[test]
+    fn gather_streams_only_the_rows() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let t = trace();
+        let embed = t.ops.iter().find(|o| o.op == OpName::Embed).unwrap();
+        let g = gather_time(embed, &sys);
+        assert!(g > Seconds::ZERO);
+        // The gather must be dwarfed by a hypothetical table page-in: the
+        // decode-step rows are a few hundred KB vs a multi-GB table.
+        let table_pagein = mfu::transfer_time(crate::units::Bytes::gb(1.0), sys.fabric_bw);
+        assert!(g < table_pagein, "gather {} vs table {}", g.as_us(), table_pagein.as_us());
+    }
+}

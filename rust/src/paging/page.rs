@@ -1,0 +1,349 @@
+//! Page table: tensor ranges → fixed-size pages with per-page residency
+//! (DESIGN.md §Paging).
+//!
+//! The orchestrator reasons about memory at *page* granularity: every
+//! tensor the trace touches is split into fixed-size pages (default
+//! 2 MiB — large enough to amortise the Table 3.1 command latencies,
+//! small enough that partial working sets page independently). Each page
+//! carries its residency tier, a dirty bit (remote copy stale; eviction
+//! must write back), and access metadata (heat / last use) that the
+//! eviction policies in [`super::policy`] consume.
+
+use crate::trace::TensorId;
+use crate::units::Bytes;
+use std::collections::HashMap;
+
+/// Default page size: 2 MiB.
+pub const DEFAULT_PAGE_BYTES: Bytes = Bytes(2.0 * 1024.0 * 1024.0);
+
+/// Residency state of one page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    /// Only the remote-pool copy exists.
+    Remote,
+    /// Staged in GPU-local memory (the remote copy remains authoritative
+    /// unless the page is dirty).
+    Local,
+}
+
+/// Per-page state.
+#[derive(Debug, Clone, Copy)]
+pub struct PageState {
+    pub residency: Residency,
+    /// Local copy modified (KV appends); eviction must write back.
+    pub dirty: bool,
+    pub bytes: Bytes,
+}
+
+/// All pages of one registered tensor, plus tensor-level access metadata
+/// (every op touches a tensor's pages together, so heat/recency are
+/// tracked once per tensor).
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub pages: Vec<PageState>,
+    pub bytes: Bytes,
+    pub pinned: bool,
+    /// Monotone access counter value at last touch.
+    pub last_use: u64,
+    /// Number of touches since registration.
+    pub heat: u64,
+}
+
+impl TensorEntry {
+    pub fn resident_bytes(&self) -> Bytes {
+        self.pages
+            .iter()
+            .filter(|p| p.residency == Residency::Local)
+            .map(|p| p.bytes)
+            .sum()
+    }
+
+    pub fn resident_pages(&self) -> u64 {
+        self.pages.iter().filter(|p| p.residency == Residency::Local).count() as u64
+    }
+}
+
+/// Result of an eviction: what left local memory.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Evicted {
+    pub bytes: Bytes,
+    pub dirty_bytes: Bytes,
+    pub pages: u64,
+}
+
+/// The page table: tensor → pages, with aggregate residency accounting.
+#[derive(Debug)]
+pub struct PageTable {
+    page_bytes: Bytes,
+    tensors: HashMap<TensorId, TensorEntry>,
+    resident: Bytes,
+    peak_resident: Bytes,
+}
+
+impl PageTable {
+    pub fn new(page_bytes: Bytes) -> Self {
+        assert!(page_bytes.value() > 0.0, "page size must be positive");
+        PageTable {
+            page_bytes,
+            tensors: HashMap::new(),
+            resident: Bytes::ZERO,
+            peak_resident: Bytes::ZERO,
+        }
+    }
+
+    pub fn page_bytes(&self) -> Bytes {
+        self.page_bytes
+    }
+
+    /// Number of pages a tensor of `bytes` occupies at this page size.
+    pub fn pages_for(&self, bytes: Bytes) -> u64 {
+        (bytes.value() / self.page_bytes.value()).ceil().max(0.0) as u64
+    }
+
+    /// Register (or grow — KV tensors grow with context) a tensor. New
+    /// pages start [`Residency::Remote`]. Shrinking is not supported;
+    /// re-registering with fewer bytes is a no-op.
+    pub fn register(&mut self, id: TensorId, bytes: Bytes) {
+        let page = self.page_bytes;
+        let mut resident_delta = Bytes::ZERO;
+        let entry = self.tensors.entry(id).or_insert(TensorEntry {
+            pages: Vec::new(),
+            bytes: Bytes::ZERO,
+            pinned: false,
+            last_use: 0,
+            heat: 0,
+        });
+        if bytes <= entry.bytes {
+            return;
+        }
+        let want_pages = (bytes.value() / page.value()).ceil() as usize;
+        // Re-size the (previously last, possibly partial) page up to full.
+        if let Some(last) = entry.pages.last_mut() {
+            if last.bytes < page {
+                let grow = (page - last.bytes).min(bytes - entry.bytes);
+                // Growing a resident page keeps it resident and counts the
+                // grown bytes toward residency.
+                if last.residency == Residency::Local {
+                    resident_delta += grow;
+                }
+                last.bytes += grow;
+            }
+        }
+        let covered: Bytes = entry.pages.iter().map(|p| p.bytes).sum();
+        let mut remaining = bytes - covered;
+        while entry.pages.len() < want_pages && remaining.value() > 0.0 {
+            let b = remaining.min(page);
+            entry.pages.push(PageState { residency: Residency::Remote, dirty: false, bytes: b });
+            remaining = remaining - b;
+        }
+        entry.bytes = entry.pages.iter().map(|p| p.bytes).sum();
+        self.resident += resident_delta;
+        self.peak_resident = self.peak_resident.max(self.resident);
+    }
+
+    pub fn contains(&self, id: TensorId) -> bool {
+        self.tensors.contains_key(&id)
+    }
+
+    pub fn entry(&self, id: TensorId) -> Option<&TensorEntry> {
+        self.tensors.get(&id)
+    }
+
+    /// Bytes of `id` not currently staged locally.
+    pub fn missing_bytes(&self, id: TensorId) -> Bytes {
+        match self.tensors.get(&id) {
+            Some(e) => e.bytes - e.resident_bytes(),
+            None => Bytes::ZERO,
+        }
+    }
+
+    /// Pages of `id` not currently staged locally.
+    pub fn missing_pages(&self, id: TensorId) -> u64 {
+        match self.tensors.get(&id) {
+            Some(e) => {
+                e.pages.iter().filter(|p| p.residency == Residency::Remote).count() as u64
+            }
+            None => 0,
+        }
+    }
+
+    /// Stage every page of `id` locally; returns (bytes, pages) actually
+    /// moved (already-resident pages move nothing). Marks the access.
+    pub fn page_in(&mut self, id: TensorId, now: u64, dirty: bool) -> (Bytes, u64) {
+        let Some(e) = self.tensors.get_mut(&id) else {
+            return (Bytes::ZERO, 0);
+        };
+        let mut moved = Bytes::ZERO;
+        let mut pages = 0u64;
+        for p in e.pages.iter_mut() {
+            if p.residency == Residency::Remote {
+                p.residency = Residency::Local;
+                moved += p.bytes;
+                pages += 1;
+            }
+            if dirty {
+                p.dirty = true;
+            }
+        }
+        e.last_use = now;
+        e.heat += 1;
+        self.resident += moved;
+        self.peak_resident = self.peak_resident.max(self.resident);
+        (moved, pages)
+    }
+
+    /// Record an access without moving pages.
+    pub fn touch(&mut self, id: TensorId, now: u64) {
+        if let Some(e) = self.tensors.get_mut(&id) {
+            e.last_use = now;
+            e.heat += 1;
+        }
+    }
+
+    /// Pin `id`: its pages may never be selected for eviction. Returns the
+    /// tensor's size (pinned budget accounting).
+    pub fn pin(&mut self, id: TensorId) -> Bytes {
+        match self.tensors.get_mut(&id) {
+            Some(e) => {
+                e.pinned = true;
+                e.bytes
+            }
+            None => Bytes::ZERO,
+        }
+    }
+
+    /// Drop every local page of `id` (no-op on pinned tensors).
+    pub fn evict(&mut self, id: TensorId) -> Evicted {
+        let Some(e) = self.tensors.get_mut(&id) else {
+            return Evicted::default();
+        };
+        if e.pinned {
+            return Evicted::default();
+        }
+        let mut out = Evicted::default();
+        for p in e.pages.iter_mut() {
+            if p.residency == Residency::Local {
+                out.bytes += p.bytes;
+                out.pages += 1;
+                if p.dirty {
+                    out.dirty_bytes += p.bytes;
+                    p.dirty = false;
+                }
+                p.residency = Residency::Remote;
+            }
+        }
+        self.resident = self.resident - out.bytes;
+        out
+    }
+
+    /// Iterate all tensors (policy victim scans).
+    pub fn iter(&self) -> impl Iterator<Item = (&TensorId, &TensorEntry)> {
+        self.tensors.iter()
+    }
+
+    pub fn resident_bytes(&self) -> Bytes {
+        self.resident
+    }
+
+    pub fn peak_resident(&self) -> Bytes {
+        self.peak_resident
+    }
+
+    /// Total bytes registered (the remote working set).
+    pub fn registered_bytes(&self) -> Bytes {
+        self.tensors.values().map(|e| e.bytes).sum()
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(v: f64) -> Bytes {
+        Bytes::new(v)
+    }
+
+    #[test]
+    fn register_splits_into_pages_with_partial_tail() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(1), b(250.0));
+        let e = t.entry(TensorId(1)).unwrap();
+        assert_eq!(e.pages.len(), 3);
+        assert_eq!(e.pages[0].bytes, b(100.0));
+        assert_eq!(e.pages[2].bytes, b(50.0));
+        assert_eq!(t.missing_bytes(TensorId(1)), b(250.0));
+        assert_eq!(t.missing_pages(TensorId(1)), 3);
+        assert_eq!(t.registered_bytes(), b(250.0));
+    }
+
+    #[test]
+    fn page_in_moves_only_missing_pages() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(1), b(250.0));
+        let (moved, pages) = t.page_in(TensorId(1), 1, false);
+        assert_eq!(moved, b(250.0));
+        assert_eq!(pages, 3);
+        assert_eq!(t.resident_bytes(), b(250.0));
+        // Second page-in is a pure cache hit.
+        let (moved, pages) = t.page_in(TensorId(1), 2, false);
+        assert_eq!(moved, Bytes::ZERO);
+        assert_eq!(pages, 0);
+        let e = t.entry(TensorId(1)).unwrap();
+        assert_eq!(e.heat, 2);
+        assert_eq!(e.last_use, 2);
+    }
+
+    #[test]
+    fn evict_returns_dirty_bytes_and_frees_residency() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(7), b(150.0));
+        t.page_in(TensorId(7), 1, true);
+        let ev = t.evict(TensorId(7));
+        assert_eq!(ev.bytes, b(150.0));
+        assert_eq!(ev.dirty_bytes, b(150.0));
+        assert_eq!(ev.pages, 2);
+        assert_eq!(t.resident_bytes(), Bytes::ZERO);
+        // Pages are clean after writeback; re-evicting is a no-op.
+        assert_eq!(t.evict(TensorId(7)), Evicted::default());
+        assert_eq!(t.peak_resident(), b(150.0));
+    }
+
+    #[test]
+    fn pinned_tensors_refuse_eviction() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(3), b(100.0));
+        assert_eq!(t.pin(TensorId(3)), b(100.0));
+        t.page_in(TensorId(3), 1, false);
+        assert_eq!(t.evict(TensorId(3)), Evicted::default());
+        assert_eq!(t.resident_bytes(), b(100.0));
+    }
+
+    #[test]
+    fn kv_growth_appends_pages_and_preserves_residency() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(9), b(120.0)); // pages: 100, 20
+        t.page_in(TensorId(9), 1, true);
+        assert_eq!(t.resident_bytes(), b(120.0));
+        // Context grows: 120 → 260 bytes. The partial page fills to 100,
+        // then a new 60-byte page appends (remote until next access).
+        t.register(TensorId(9), b(260.0));
+        let e = t.entry(TensorId(9)).unwrap();
+        assert_eq!(e.bytes, b(260.0));
+        assert_eq!(e.pages.len(), 3);
+        // The grown part of the already-resident page counts as resident.
+        assert_eq!(t.resident_bytes(), b(200.0));
+        assert_eq!(t.missing_bytes(TensorId(9)), b(60.0));
+    }
+
+    #[test]
+    fn shrinking_reregistration_is_noop() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(2), b(300.0));
+        t.register(TensorId(2), b(100.0));
+        assert_eq!(t.entry(TensorId(2)).unwrap().bytes, b(300.0));
+    }
+}

@@ -1,0 +1,203 @@
+//! Placement / eviction policies of the paging orchestrator
+//! (DESIGN.md §Paging).
+//!
+//! * [`PolicyKind::MinimalResidency`] — the paper's default: a tensor's
+//!   pages are dropped the moment its consuming op completes ("only the
+//!   minimum required data are stored locally").
+//! * [`PolicyKind::Lru`] — keep pages until capacity pressure, evict the
+//!   least-recently-used tensor first (classic cache; wins when the
+//!   budget fits a useful fraction of the per-step working set).
+//! * [`PolicyKind::Heat`] — evict the least-frequently-touched tensor
+//!   first (access-heat; protects tensors reused across steps from
+//!   one-shot streaming traffic).
+//!
+//! [`PlacementPolicy`] also carries the lookahead window and the KV
+//! staging switch — a generalisation of the older
+//! [`crate::sim::prefetcher::PrefetchPolicy`] (see
+//! [`PlacementPolicy::from_prefetch`]), which keeps working for the
+//! stateless whole-tensor path.
+
+use super::page::PageTable;
+use crate::sim::prefetcher::PrefetchPolicy;
+use crate::trace::{Op, OpKind, TensorId};
+use crate::units::Bytes;
+use std::collections::HashSet;
+
+/// Eviction strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// Paper default: evict as soon as the consuming op completes.
+    #[default]
+    MinimalResidency,
+    /// Least-recently-used, evicted under capacity pressure only.
+    Lru,
+    /// Least-frequently-used (access heat), under capacity pressure only.
+    Heat,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "minimal" | "minimal-residency" | "min" => Some(PolicyKind::MinimalResidency),
+            "lru" => Some(PolicyKind::Lru),
+            "heat" | "lfu" | "access-heat" => Some(PolicyKind::Heat),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::MinimalResidency => "minimal-residency",
+            PolicyKind::Lru => "lru",
+            PolicyKind::Heat => "access-heat",
+        }
+    }
+
+    /// All policies, for sweeps.
+    pub fn all() -> [PolicyKind; 3] {
+        [PolicyKind::MinimalResidency, PolicyKind::Lru, PolicyKind::Heat]
+    }
+}
+
+/// Full placement policy of the orchestrator.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementPolicy {
+    pub kind: PolicyKind,
+    /// Lookahead window w for the paging stream (generalises
+    /// [`PrefetchPolicy::window`]; the paper evaluates one node ahead).
+    pub window: usize,
+    /// Stage the attention KV stream through local memory instead of
+    /// direct SM-from-remote reads (ablation; default false per §3.1).
+    pub page_kv: bool,
+    /// Fraction of the local budget reserved for pinned weights: tensors
+    /// are pinned in program order until the reservation fills. Pinned
+    /// pages are fetched once and never evicted.
+    pub pin_frac: f64,
+}
+
+impl Default for PlacementPolicy {
+    fn default() -> Self {
+        let p = PrefetchPolicy::default();
+        PlacementPolicy { kind: PolicyKind::default(), window: p.window, page_kv: p.page_kv, pin_frac: 0.0 }
+    }
+}
+
+impl PlacementPolicy {
+    /// Bridge from the stateless prefetcher policy (subsumption: the same
+    /// window/KV semantics, plus stateful residency on top).
+    pub fn from_prefetch(p: &PrefetchPolicy) -> Self {
+        PlacementPolicy { window: p.window, page_kv: p.page_kv, ..Default::default() }
+    }
+
+    /// Whether this op's KV stream is staged through the pager.
+    pub fn stages_kv(&self, op: &Op) -> bool {
+        self.page_kv
+            && matches!(op.kind, OpKind::Attention)
+            && op.kv_stream_bytes.value() > 0.0
+    }
+
+    /// Pick eviction victims freeing at least `need` bytes, best victim
+    /// first. `protect` holds tensors the current op needs (never
+    /// victims). Pinned and non-resident tensors are skipped.
+    pub fn victims(
+        &self,
+        table: &PageTable,
+        need: Bytes,
+        protect: &HashSet<TensorId>,
+    ) -> Vec<TensorId> {
+        let mut cands: Vec<(TensorId, u64, u64, Bytes)> = table
+            .iter()
+            .filter(|(id, e)| {
+                !e.pinned && e.resident_bytes().value() > 0.0 && !protect.contains(id)
+            })
+            .map(|(id, e)| (*id, e.last_use, e.heat, e.resident_bytes()))
+            .collect();
+        match self.kind {
+            // Minimal residency evicts eagerly after use; when pressure
+            // still arises (working sets bigger than budget), fall back to
+            // coldest-first like LRU.
+            PolicyKind::MinimalResidency | PolicyKind::Lru => {
+                cands.sort_unstable_by_key(|c| c.1);
+            }
+            PolicyKind::Heat => {
+                cands.sort_unstable_by_key(|c| (c.2, c.1));
+            }
+        }
+        let mut out = Vec::new();
+        let mut freed = Bytes::ZERO;
+        for (id, _, _, bytes) in cands {
+            if freed >= need {
+                break;
+            }
+            out.push(id);
+            freed += bytes;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Bytes;
+
+    fn table_with(entries: &[(u64, f64, u64, u64)]) -> PageTable {
+        // (id, bytes, last_use, extra_touches)
+        let mut t = PageTable::new(Bytes::new(64.0));
+        for &(id, bytes, last, touches) in entries {
+            let id = TensorId(id);
+            t.register(id, Bytes::new(bytes));
+            t.page_in(id, last, false);
+            for k in 0..touches {
+                t.touch(id, last + k + 1);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for k in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("LRU"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::parse("minimal"), Some(PolicyKind::MinimalResidency));
+        assert!(PolicyKind::parse("belady").is_none());
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first() {
+        let t = table_with(&[(1, 100.0, 5, 0), (2, 100.0, 1, 0), (3, 100.0, 9, 0)]);
+        let p = PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() };
+        let v = p.victims(&t, Bytes::new(150.0), &HashSet::new());
+        assert_eq!(v, vec![TensorId(2), TensorId(1)]);
+    }
+
+    #[test]
+    fn heat_evicts_least_touched_first() {
+        // id 1 touched 4×, id 2 once, id 3 twice.
+        let t = table_with(&[(1, 100.0, 1, 3), (2, 100.0, 8, 0), (3, 100.0, 2, 1)]);
+        let p = PlacementPolicy { kind: PolicyKind::Heat, ..Default::default() };
+        let v = p.victims(&t, Bytes::new(1.0), &HashSet::new());
+        assert_eq!(v, vec![TensorId(2)]);
+    }
+
+    #[test]
+    fn protected_and_pinned_are_never_victims() {
+        let mut t = table_with(&[(1, 100.0, 1, 0), (2, 100.0, 2, 0), (3, 100.0, 3, 0)]);
+        t.pin(TensorId(3));
+        let protect: HashSet<TensorId> = [TensorId(1)].into_iter().collect();
+        let p = PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() };
+        let v = p.victims(&t, Bytes::new(500.0), &protect);
+        assert_eq!(v, vec![TensorId(2)], "only the unprotected unpinned tensor");
+    }
+
+    #[test]
+    fn from_prefetch_preserves_window_and_kv() {
+        let pf = PrefetchPolicy { window: 3, page_kv: true };
+        let p = PlacementPolicy::from_prefetch(&pf);
+        assert_eq!(p.window, 3);
+        assert!(p.page_kv);
+        assert_eq!(p.kind, PolicyKind::MinimalResidency);
+    }
+}

@@ -1,0 +1,187 @@
+//! Memory-tier model: GPU-local HBM → FengHuang remote pool, plus the
+//! per-replica KV capacity-pressure model the cluster layer charges
+//! (DESIGN.md §Paging).
+//!
+//! Capacities and bandwidths are drawn from the node's [`SystemConfig`]
+//! (which in turn comes from the `hardware` catalog presets): the local
+//! tier is the GPU HBM (`local_bw`, `local_capacity`), the remote tier is
+//! the pool behind the TAB crossbar (`fabric_bw`, `remote_capacity`).
+
+use crate::config::{FabricKind, SystemConfig};
+use crate::fabric::FabricLatencies;
+use crate::models::mfu;
+use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// Which tier a page lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// GPU-local HBM (the paging cache on FengHuang nodes).
+    LocalHbm,
+    /// The FengHuang remote pool behind the TAB.
+    RemotePool,
+}
+
+/// One tier's capacity/bandwidth envelope.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    pub tier: Tier,
+    pub name: String,
+    /// `None` = uncapped (Table 4.1 "as much as needed").
+    pub capacity: Option<Bytes>,
+    pub bandwidth: Bandwidth,
+}
+
+/// The two-tier hierarchy of a FengHuang node.
+#[derive(Debug, Clone)]
+pub struct TierModel {
+    pub local: TierSpec,
+    pub remote: TierSpec,
+}
+
+impl TierModel {
+    /// Derive the hierarchy from a node config (per-GPU view: the paging
+    /// simulator models one GPU's shard of the working set).
+    pub fn from_system(sys: &SystemConfig) -> Self {
+        TierModel {
+            local: TierSpec {
+                tier: Tier::LocalHbm,
+                name: format!("{}/local", sys.name),
+                capacity: sys.local_capacity,
+                bandwidth: sys.local_bw,
+            },
+            remote: TierSpec {
+                tier: Tier::RemotePool,
+                name: format!("{}/pool", sys.name),
+                capacity: if sys.remote_capacity.value() > 0.0 {
+                    Some(sys.remote_capacity)
+                } else {
+                    None
+                },
+                bandwidth: sys.fabric_bw,
+            },
+        }
+    }
+
+    /// Override the local budget (the Table 4.3 sweep knob).
+    pub fn with_local_budget(mut self, budget: Option<Bytes>) -> Self {
+        self.local.capacity = budget;
+        self
+    }
+}
+
+/// Per-replica KV capacity pressure (coordinator wiring of the paging
+/// subsystem; EXPERIMENTS.md §Capacity-Sweep).
+///
+/// A serving replica holds the KV cache of every active sequence. Under a
+/// finite local budget the overflow spills to the remote tier; each
+/// decode step must then stream the spilled fraction of the KV it touches
+/// back over the fabric — an added serial stall on top of the modelled
+/// step time (conservative: no overlap with compute is assumed for the
+/// spilled fraction).
+#[derive(Debug, Clone)]
+pub struct KvPressure {
+    /// Per-replica local KV budget (aggregate across the node's GPUs).
+    pub budget: Bytes,
+    remote_bw: Bandwidth,
+    lat: FabricLatencies,
+    shared_pool: bool,
+    /// High-water mark of bytes spilled to the remote tier.
+    pub spilled_peak: Bytes,
+    /// Total stall charged to decode steps.
+    pub stall_total: Seconds,
+    /// Decode steps that paid a paging stall.
+    pub steps_stalled: u64,
+}
+
+impl KvPressure {
+    pub fn new(budget: Bytes, sys: &SystemConfig) -> Self {
+        KvPressure {
+            budget,
+            remote_bw: sys.fabric_bw,
+            lat: sys.latencies,
+            shared_pool: sys.fabric == FabricKind::TabSharedMemory,
+            spilled_peak: Bytes::ZERO,
+            stall_total: Seconds::ZERO,
+            steps_stalled: 0,
+        }
+    }
+
+    /// Bytes currently spilled for a resident KV footprint of `total`.
+    pub fn spilled(&self, total: Bytes) -> Bytes {
+        if total > self.budget {
+            total - self.budget
+        } else {
+            Bytes::ZERO
+        }
+    }
+
+    /// Stall charged to one decode step that touches `touched` bytes of a
+    /// `total`-byte resident KV footprint. The spilled fraction of the
+    /// touched bytes streams from the remote tier (Eq 4.1 link
+    /// efficiency), behind one fixed command latency.
+    pub fn step_stall(&mut self, total: Bytes, touched: Bytes) -> Seconds {
+        let spill = self.spilled(total);
+        self.spilled_peak = self.spilled_peak.max(spill);
+        if spill.value() <= 0.0 || total.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let frac = (spill / total).min(1.0);
+        let remote_touched = touched * frac;
+        let fixed = if self.shared_pool { self.lat.tab_read } else { self.lat.nvlink_read };
+        let stall = fixed + mfu::transfer_time(remote_touched, self.remote_bw);
+        self.stall_total += stall;
+        self.steps_stalled += 1;
+        stall
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{baseline8, fh4_15xm};
+
+    #[test]
+    fn tier_model_mirrors_system_config() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let t = TierModel::from_system(&sys);
+        assert_eq!(t.local.tier, Tier::LocalHbm);
+        assert!(t.local.capacity.is_none(), "FH4 local is uncapped");
+        assert_eq!(t.local.bandwidth, sys.local_bw);
+        assert_eq!(t.remote.tier, Tier::RemotePool);
+        assert_eq!(t.remote.capacity, Some(sys.remote_capacity));
+        assert_eq!(t.remote.bandwidth, sys.fabric_bw);
+        let capped = t.with_local_budget(Some(Bytes::gb(12.0)));
+        assert_eq!(capped.local.capacity, Some(Bytes::gb(12.0)));
+
+        let b = TierModel::from_system(&baseline8());
+        assert_eq!(b.local.capacity, baseline8().local_capacity);
+        assert!(b.remote.capacity.is_none(), "shared-nothing has no pool");
+    }
+
+    #[test]
+    fn kv_pressure_is_free_under_budget() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut kv = KvPressure::new(Bytes::gb(10.0), &sys);
+        let s = kv.step_stall(Bytes::gb(8.0), Bytes::gb(8.0));
+        assert_eq!(s, Seconds::ZERO);
+        assert_eq!(kv.steps_stalled, 0);
+        assert_eq!(kv.spilled_peak, Bytes::ZERO);
+    }
+
+    #[test]
+    fn kv_pressure_charges_spilled_fraction() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut kv = KvPressure::new(Bytes::gb(10.0), &sys);
+        // 40 GB resident, 10 GB budget → 75% spilled; touching all 40 GB
+        // streams 30 GB from the pool: ≥ 30 GB / 4.8 TB/s = 6.25 ms.
+        let s = kv.step_stall(Bytes::gb(40.0), Bytes::gb(40.0));
+        assert!(s.as_ms() > 6.0, "stall {} ms", s.as_ms());
+        assert!(s.as_ms() < 20.0, "stall {} ms", s.as_ms());
+        assert_eq!(kv.steps_stalled, 1);
+        assert_eq!(kv.spilled_peak, Bytes::gb(30.0));
+        assert_eq!(kv.stall_total, s);
+        // More spill → more stall.
+        let s2 = kv.step_stall(Bytes::gb(80.0), Bytes::gb(80.0));
+        assert!(s2 > s);
+    }
+}

@@ -69,6 +69,14 @@ impl SimReport {
 /// directly from remote memory by the SMs ([`mfu::FH_KV_STREAM_EFF`],
 /// §3.1) on a virtual channel distinct from the paging stream.
 fn local_op_time(op: &Op, sys: &SystemConfig) -> Seconds {
+    local_op_time_with(op, sys, false)
+}
+
+/// As [`local_op_time`], but with `kv_staged = true` the attention KV
+/// stream has been staged into local memory by the paging subsystem
+/// (`crate::paging`), so it reads at local-tier bandwidth instead of the
+/// remote KV virtual channel.
+fn local_op_time_with(op: &Op, sys: &SystemConfig, kv_staged: bool) -> Seconds {
     let compute = if op.flops.value() > 0.0 {
         let eff = mfu::mfu(op.m_tokens, op.shard_cols.max(1.0));
         let rate = sys.compute_per_gpu * eff.max(1e-4);
@@ -87,7 +95,7 @@ fn local_op_time(op: &Op, sys: &SystemConfig) -> Seconds {
             }
         }
         FabricKind::TabSharedMemory => {
-            let kv = op.kv_stream_bytes;
+            let kv = if kv_staged { Bytes::ZERO } else { op.kv_stream_bytes };
             let local = traffic - kv;
             let kv_time = if kv.value() > 0.0 {
                 kv.over(sys.fabric_bw * mfu::FH_KV_STREAM_EFF)
@@ -128,11 +136,21 @@ fn collective_op_time(op: &Op, sys: &SystemConfig) -> Seconds {
     }
 }
 
-fn op_time(op: &Op, sys: &SystemConfig) -> Seconds {
+pub(crate) fn op_time(op: &Op, sys: &SystemConfig) -> Seconds {
     if op.is_collective() {
         collective_op_time(op, sys)
     } else {
         local_op_time(op, sys)
+    }
+}
+
+/// Per-op time with the KV stream staged locally by the pager
+/// (`crate::paging` orchestrator, `page_kv` policies).
+pub(crate) fn op_time_kv_staged(op: &Op, sys: &SystemConfig) -> Seconds {
+    if op.is_collective() {
+        collective_op_time(op, sys)
+    } else {
+        local_op_time_with(op, sys, true)
     }
 }
 

@@ -139,4 +139,51 @@ mod tests {
         t.add(s(1.0), s(2.0), b(300.0));
         assert_eq!(t.average(s(2.0)).value(), 200.0);
     }
+
+    #[test]
+    fn zero_length_interval_between_real_ones_never_contributes() {
+        // A zero-length interval at a live instant must not spike the
+        // peak, nor shift the average.
+        let mut t = OccupancyTracker::new();
+        t.add(s(0.0), s(2.0), b(100.0));
+        t.add(s(1.0), s(1.0), b(1000.0));
+        assert_eq!(t.peak().value(), 100.0);
+        assert_eq!(t.average(s(2.0)).value(), 100.0);
+    }
+
+    #[test]
+    fn pinned_only_run_reports_pin_for_peak_and_average() {
+        // No intervals at all: both peak and average are exactly the
+        // pinned footprint, for any span (including a zero span).
+        let mut t = OccupancyTracker::new();
+        t.pin(b(700.0));
+        t.pin(b(300.0));
+        assert_eq!(t.peak().value(), 1000.0);
+        assert_eq!(t.average(s(5.0)).value(), 1000.0);
+        assert_eq!(t.average(s(0.0)).value(), 1000.0);
+    }
+
+    #[test]
+    fn overlapping_intervals_ending_at_identical_endpoints() {
+        // Three intervals all releasing at t=3: the releases coincide
+        // with an acquisition at t=3, which must apply first (negative
+        // deltas sort before positive at equal timestamps).
+        let mut t = OccupancyTracker::new();
+        t.add(s(0.0), s(3.0), b(100.0));
+        t.add(s(1.0), s(3.0), b(50.0));
+        t.add(s(2.0), s(3.0), b(25.0));
+        t.add(s(3.0), s(4.0), b(120.0));
+        // Peak is in [2,3): 100 + 50 + 25; the t=3 handover never stacks.
+        assert_eq!(t.peak().value(), 175.0);
+    }
+
+    #[test]
+    fn identical_intervals_stack_exactly() {
+        // Two byte-identical intervals are distinct residents (two
+        // tensors staged together), not a dedup target.
+        let mut t = OccupancyTracker::new();
+        t.add(s(1.0), s(2.0), b(40.0));
+        t.add(s(1.0), s(2.0), b(40.0));
+        assert_eq!(t.peak().value(), 80.0);
+    }
 }

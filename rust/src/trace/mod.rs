@@ -5,4 +5,4 @@ pub mod gen;
 pub mod op;
 
 pub use gen::{generate, TraceConfig};
-pub use op::{Op, OpKind, Phase, TensorId, Trace, WeightRef};
+pub use op::{Op, OpKind, OpName, Phase, TensorId, Trace, WeightRef};

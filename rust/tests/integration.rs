@@ -290,3 +290,60 @@ fn fh4_serving_beats_baseline8_on_qa_throughput() {
         base.throughput_tokens_per_s()
     );
 }
+
+// ---------------------------------------------------------------------------
+// Active tensor paging (DESIGN.md §Paging).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_orchestrator_hits_table43_band_with_finite_steps() {
+    use fenghuang::paging::{simulate_paged, PagingConfig};
+    let sys = fh4_15xm(Bandwidth::tbps(4.8));
+    let r = simulate_paged(
+        &sys,
+        &arch::gpt3_175b(),
+        8,
+        Phase::Decode { kv_len: 4608 },
+        &PagingConfig::default(),
+    )
+    .unwrap();
+    assert!(r.steady_step.value() > 0.0 && r.steady_step.value().is_finite());
+    assert!(r.cold_step >= r.steady_step);
+    // Table 4.3 band: the minimal-residency default needs an order of
+    // magnitude less local memory than the 144 GB Baseline8 HBM.
+    assert!(r.peak_local.as_gb() < 20.0, "peak {} GB", r.peak_local.as_gb());
+    assert!(r.capacity_reduction_vs(fenghuang::units::Bytes::gb(144.0)) > 0.85);
+}
+
+#[test]
+fn prop_paged_capacity_stall_tradeoff_is_monotone() {
+    // The acceptance property of the capacity sweep: shrinking the local
+    // budget never speeds the steady step up (LRU, GPT-3 decode).
+    use fenghuang::paging::{simulate_paged, PagingConfig, PlacementPolicy, PolicyKind};
+    use fenghuang::units::Bytes;
+    let sys = fh4_15xm(Bandwidth::tbps(4.8));
+    let full_cfg = PagingConfig {
+        policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
+        ..Default::default()
+    };
+    let full = simulate_paged(&sys, &arch::gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }, &full_cfg)
+        .unwrap();
+    let ws = full.working_set.as_gb();
+    let mut prev = f64::INFINITY;
+    for frac in [0.10, 0.25, 0.60, 1.0] {
+        let cfg = PagingConfig {
+            local_budget: Some(Bytes::gb(ws * frac)),
+            policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
+            ..Default::default()
+        };
+        let r = simulate_paged(&sys, &arch::gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }, &cfg)
+            .unwrap();
+        let step = r.steady_step.value();
+        assert!(
+            step <= prev * 1.001,
+            "budget {frac} of WS: step {step} regressed above {prev}"
+        );
+        assert!(step + 1e-12 >= full.steady_step.value() * 0.999, "capped can't beat uncapped");
+        prev = step;
+    }
+}

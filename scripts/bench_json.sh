@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Emit the machine-readable bench artifacts (BENCH_*.json at the repo
+# root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
+# §Serve-Scale).
+#
+#   scripts/bench_json.sh            # paging_sweep + serve_scale
+#   scripts/bench_json.sh paging     # just the capacity sweep
+#   scripts/bench_json.sh serve      # just the cluster sweep
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+want="${1:-all}"
+
+if [[ "$want" == "all" || "$want" == "paging" ]]; then
+    cargo bench --bench paging_sweep -- --json
+fi
+if [[ "$want" == "all" || "$want" == "serve" ]]; then
+    cargo bench --bench serve_scale -- --json
+fi
+
+echo
+echo "artifacts:"
+ls -l BENCH_*.json
