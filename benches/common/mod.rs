@@ -72,6 +72,13 @@ pub fn json_requested() -> bool {
     std::env::args().any(|a| a == "--json")
 }
 
+/// Whether the bench should run its tiny CI smoke sweep instead of the
+/// full grid: `-- --smoke` or `FH_BENCH_SMOKE=1` (scripts/ci.sh). Heavy
+/// benches shrink their sweeps; benches that are already cheap ignore it.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke") || std::env::var_os("FH_BENCH_SMOKE").is_some()
+}
+
 /// Write `BENCH_<name>.json` at the repo root — the perf-trajectory
 /// artifact format (EXPERIMENTS.md §Capacity-Sweep).
 pub fn write_bench_json(name: &str, body: &str) {

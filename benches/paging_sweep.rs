@@ -40,13 +40,18 @@ struct Row {
 }
 
 fn main() {
+    // CI smoke mode (scripts/ci.sh): one model, three budget points.
+    let smoke = common::smoke();
+    let models: Vec<_> =
+        if smoke { vec![gpt3_175b()] } else { vec![gpt3_175b(), grok1(), qwen3_235b()] };
+    let fracs: &[f64] = if smoke { &[0.10, 0.50, 1.00] } else { &FRACS };
     let sys = fh4_15xm(Bandwidth::tbps(4.8));
     let phase = Phase::Decode { kv_len: 4608 };
     let batch = 8u64;
     let mut rows: Vec<Row> = Vec::new();
 
     println!("== paging sweep: steady decode step vs local budget (FH4-1.5xM @ 4.8 TB/s) ==");
-    for model in [gpt3_175b(), grok1(), qwen3_235b()] {
+    for model in models.clone() {
         // Full-residency roofline: uncapped LRU reaches zero-fetch steady
         // state after the first step.
         let full_cfg = PagingConfig {
@@ -66,7 +71,7 @@ fn main() {
             "policy", "frac", "budget GB", "steady ms", "slowdown", "peak GB", "vs 144GB"
         );
         for kind in PolicyKind::all() {
-            for frac in FRACS {
+            for &frac in fracs {
                 let budget = Bytes::gb(ws_gb * frac);
                 let cfg = PagingConfig {
                     local_budget: Some(budget),
@@ -116,7 +121,7 @@ fn main() {
 
     // NMC ablation at the paper-band budget.
     println!("\n== NMC offload ablation (minimal residency, 15% budget) ==");
-    for model in [gpt3_175b(), grok1(), qwen3_235b()] {
+    for model in models {
         let full_cfg = PagingConfig {
             policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
             steps: 2,

@@ -33,15 +33,19 @@ fn lopsided(n: usize) -> Vec<Request> {
 }
 
 fn main() {
+    // CI smoke mode (scripts/ci.sh): tiny sweep, same code paths.
+    let smoke = common::smoke();
+    let n = if smoke { 16 } else { 48 };
+    let replica_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8, 16] };
     let mut json_rows: Vec<String> = Vec::new();
-    println!("== serve-scale: replica sweep (least-outstanding-tokens, 48 requests) ==");
+    println!("== serve-scale: replica sweep (least-outstanding-tokens, {n} requests) ==");
     println!("model     replicas  makespan(s)  tok/s   p95 TTFT(ms)  mean util");
     for model in [gpt3_175b(), grok1(), qwen3_235b()] {
         let mut base_tps = 0.0;
-        for replicas in [1usize, 2, 4, 8, 16] {
+        for &replicas in replica_counts {
             let cfg = ClusterConfig { policy: Policy::LeastLoaded, ..Default::default() };
             let mut c = Cluster::fh4(replicas, &model, cfg).expect("cluster");
-            let r = c.run(stream(48)).expect("run");
+            let r = c.run(stream(n)).expect("run");
             let tps = r.throughput_tokens_per_s();
             if replicas == 1 {
                 base_tps = tps;
@@ -77,7 +81,7 @@ fn main() {
     for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::KvAffinity] {
         let cfg = ClusterConfig { policy, ..Default::default() };
         let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).expect("cluster");
-        let r = c.run(lopsided(48)).expect("run");
+        let r = c.run(lopsided(n)).expect("run");
         println!(
             "{:<26} {:>9.3}  {:>11.1}  {:>11.1}  {:>10.2}",
             policy.name(),
@@ -106,7 +110,7 @@ fn main() {
             ..Default::default()
         };
         let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).expect("cluster");
-        let r = c.run(stream(48)).expect("run");
+        let r = c.run(stream(n)).expect("run");
         let label = match disagg {
             None => "aggregated 4".to_string(),
             Some((p, d)) => format!("disaggregated {p}:{d}"),
@@ -140,7 +144,7 @@ fn main() {
             if budget_gb.is_finite() { Some(fenghuang::units::Bytes::gb(budget_gb)) } else { None };
         let cfg = ClusterConfig { kv_budget, ..Default::default() };
         let mut c = Cluster::fh4(2, &gpt3_175b(), cfg).expect("cluster");
-        let r = c.run(stream(32)).expect("run");
+        let r = c.run(stream(n.min(32))).expect("run");
         let label = if budget_gb.is_finite() {
             format!("{budget_gb:.0} GB")
         } else {

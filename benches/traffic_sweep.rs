@@ -1,0 +1,173 @@
+//! Bench target: open-loop traffic sweep (EXPERIMENTS.md §Traffic-Sweep).
+//!
+//! 1. Pattern × mix grid on a static 4-replica FH4 fleet per paper
+//!    workload (GPT-3 / Grok-1 / QWEN3-235B): SLO attainment, goodput,
+//!    tail latency under Poisson / bursty / diurnal arrivals.
+//! 2. Elastic vs static: the same diurnal chat+rag stream served by a
+//!    static 8-replica fleet and by the autoscaler breathing between 1
+//!    and 8 replicas — GPU-hours (replica-seconds) vs SLO attainment,
+//!    the closed-loop form of the paper's 50 %-fewer-GPUs claim (§4.4).
+//!
+//! `cargo bench --bench traffic_sweep -- --json` writes
+//! `BENCH_traffic_sweep.json` at the repo root (scripts/bench_json.sh);
+//! `-- --smoke` (scripts/ci.sh) shrinks the grid to a CI-sized run.
+
+mod common;
+
+use fenghuang::coordinator::{AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, SloTarget};
+use fenghuang::models::arch::{gpt3_175b, grok1, qwen3_235b, ModelArch};
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::units::Seconds;
+
+const SEED: u64 = 7;
+
+fn traffic(
+    model: &ModelArch,
+    pattern: ArrivalPattern,
+    mix: &str,
+    qps: f64,
+    requests: usize,
+    slo: SloTarget,
+) -> TrafficConfig {
+    TrafficConfig {
+        arrivals: ArrivalConfig { pattern, qps, ..Default::default() },
+        mix: WorkloadMix::parse(mix).expect("mix"),
+        requests,
+        seed: SEED,
+        max_prompt: model.max_seq as usize,
+        slo: Some(slo),
+    }
+}
+
+fn run(model: &ModelArch, replicas: usize, cfg: ClusterConfig, tc: &TrafficConfig) -> ClusterReport {
+    let mut cluster = Cluster::fh4(replicas, model, cfg).expect("cluster");
+    cluster.run(traffic::generate(tc).expect("workload")).expect("run")
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    // ---- 1. pattern × mix grid, static 4-replica fleet ------------------
+    let models: Vec<ModelArch> = if smoke {
+        vec![gpt3_175b()]
+    } else {
+        vec![gpt3_175b(), grok1(), qwen3_235b()]
+    };
+    let mixes: &[&str] = if smoke { &["chat"] } else { &["chat", "chat+rag", "agentic+batch"] };
+    let grid_requests = if smoke { 12 } else { 48 };
+    let base_slo = SloTarget { ttft: Seconds::ms(2000.0), tpot: Seconds::ms(80.0) };
+
+    println!("== traffic-sweep: pattern × mix grid (4 replicas, {grid_requests} requests, qps 8, seed {SEED}) ==");
+    println!("model     pattern  mix            attain%  goodput(tok/s)  p95 TTFT(ms)  p95 TPOT(ms)  makespan(s)");
+    for model in &models {
+        for pattern in ArrivalPattern::synthetic() {
+            for mix in mixes {
+                let tc = traffic(model, pattern, mix, 8.0, grid_requests, base_slo);
+                let r = run(model, 4, ClusterConfig::default(), &tc);
+                println!(
+                    "{:<9} {:<8} {:<14} {:>6.1}  {:>14.1}  {:>12.1}  {:>12.2}  {:>11.2}",
+                    model.name,
+                    pattern.name(),
+                    mix,
+                    100.0 * r.fleet.slo_attainment(),
+                    r.fleet.goodput_tokens_per_s(),
+                    r.fleet.ttft.percentile_ms(95.0),
+                    r.fleet.tpot.percentile_ms(95.0),
+                    r.makespan().value(),
+                );
+                json_rows.push(format!(
+                    "{{\"section\": \"grid\", \"model\": {}, \"pattern\": {}, \"mix\": {}, \
+                     \"attainment\": {:.4}, \"goodput_tok_s\": {:.3}, \"p95_ttft_ms\": {:.3}, \
+                     \"p95_tpot_ms\": {:.4}, \"makespan_s\": {:.6}, \"completed\": {}, \
+                     \"shed\": {}}}",
+                    common::json_str(&model.name),
+                    common::json_str(pattern.name()),
+                    common::json_str(mix),
+                    r.fleet.slo_attainment(),
+                    r.fleet.goodput_tokens_per_s(),
+                    r.fleet.ttft.percentile_ms(95.0),
+                    r.fleet.tpot.percentile_ms(95.0),
+                    r.makespan().value(),
+                    r.fleet.completed,
+                    r.fleet.shed,
+                ));
+            }
+        }
+    }
+
+    // ---- 2. elastic vs static under a diurnal curve ---------------------
+    // Fixed SLO, diurnal chat+rag at 12 qps peak: the static fleet is
+    // provisioned for the peak all day; the autoscaler follows the curve.
+    // The claim (EXPERIMENTS.md §Traffic-Sweep): the elastic fleet meets
+    // the same SLO with ≥ 30 % fewer replica-seconds.
+    let elastic_models: Vec<ModelArch> =
+        if smoke { vec![gpt3_175b()] } else { vec![gpt3_175b(), qwen3_235b()] };
+    let elastic_requests = if smoke { 32 } else { 192 };
+    let elastic_slo = SloTarget { ttft: Seconds::ms(4000.0), tpot: Seconds::ms(150.0) };
+
+    println!("\n== traffic-sweep: elastic vs static (diurnal chat+rag, 8-replica fleet, qps 12 peak) ==");
+    println!("model     config    attain%  goodput(tok/s)  replica-s  GPU-s   saving");
+    for model in &elastic_models {
+        let tc = traffic(
+            model,
+            ArrivalPattern::Diurnal,
+            "chat+rag",
+            12.0,
+            elastic_requests,
+            elastic_slo,
+        );
+        let stat = run(model, 8, ClusterConfig::default(), &tc);
+        // Target ≈ 75 % of a replica's in-flight capacity (max_batch 8 ×
+        // ~1.6k work tokens for this mix): provisions headroom for the
+        // SLO while letting the trough actually scale down.
+        let auto_cfg = ClusterConfig {
+            autoscale: Some(AutoscaleConfig { target_tokens: 8192, ..Default::default() }),
+            ..Default::default()
+        };
+        let auto = run(model, 8, auto_cfg, &tc);
+        let saving = 1.0 - auto.replica_seconds / stat.replica_seconds.max(1e-12);
+        for (label, r) in [("static-8", &stat), ("elastic", &auto)] {
+            println!(
+                "{:<9} {:<9} {:>6.1}  {:>14.1}  {:>9.1}  {:>6.1}  {}",
+                model.name,
+                label,
+                100.0 * r.fleet.slo_attainment(),
+                r.fleet.goodput_tokens_per_s(),
+                r.replica_seconds,
+                r.gpu_seconds,
+                if r.elastic { format!("{:.1}%", 100.0 * saving) } else { "—".to_string() },
+            );
+        }
+        let meets = auto.fleet.slo_attainment() >= 0.9 && stat.fleet.slo_attainment() >= 0.9;
+        println!(
+            "  → elastic saving {:.1}% of replica-seconds at equal SLO ({} scale events, meets-SLO: {})",
+            100.0 * saving,
+            auto.scale_events.len(),
+            meets,
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"elastic\", \"model\": {}, \"slo_ttft_ms\": {:.1}, \
+             \"slo_tpot_ms\": {:.1}, \"static_attainment\": {:.4}, \"elastic_attainment\": {:.4}, \
+             \"static_replica_s\": {:.4}, \"elastic_replica_s\": {:.4}, \
+             \"static_gpu_s\": {:.4}, \"elastic_gpu_s\": {:.4}, \"saving_frac\": {:.4}, \
+             \"scale_events\": {}, \"meets_slo\": {}}}",
+            common::json_str(&model.name),
+            elastic_slo.ttft.as_ms(),
+            elastic_slo.tpot.as_ms(),
+            stat.fleet.slo_attainment(),
+            auto.fleet.slo_attainment(),
+            stat.replica_seconds,
+            auto.replica_seconds,
+            stat.gpu_seconds,
+            auto.gpu_seconds,
+            saving,
+            auto.scale_events.len(),
+            meets,
+        ));
+    }
+
+    if common::json_requested() {
+        common::write_rows_json("traffic_sweep", &json_rows);
+    }
+}

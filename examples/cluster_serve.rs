@@ -6,11 +6,14 @@
 //! cargo run --release --example cluster_serve
 //! # or, equivalently, via the CLI:
 //! fenghuang serve --replicas 4 --policy kv-affinity
+//! fenghuang serve --replicas 8 --qps 12 --pattern diurnal --mix chat+rag --autoscale --seed 7
 //! ```
 
 use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
 use fenghuang::coordinator::router::Policy;
+use fenghuang::coordinator::AutoscaleConfig;
 use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::Seconds;
 
 fn main() -> fenghuang::Result<()> {
@@ -44,5 +47,34 @@ fn main() -> fenghuang::Result<()> {
     let mut cluster = Cluster::fh4(4, &model, cfg)?;
     let report = cluster.run(workload())?;
     println!("{}", report.summary());
+
+    println!("== open-loop diurnal traffic: static 8 vs elastic 1–8 replicas ==");
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps: 12.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat+rag").expect("mix"),
+        requests: 96,
+        seed: 7,
+        max_prompt: model.max_seq as usize,
+        ..Default::default()
+    };
+    let mut stat = Cluster::fh4(8, &model, ClusterConfig::default())?;
+    let rs = stat.run(traffic::generate(&tc)?)?;
+    println!("-- static 8 --\n{}", rs.summary());
+    let cfg = ClusterConfig {
+        autoscale: Some(AutoscaleConfig { target_tokens: 8192, ..Default::default() }),
+        ..Default::default()
+    };
+    let mut auto = Cluster::fh4(8, &model, cfg)?;
+    let ra = auto.run(traffic::generate(&tc)?)?;
+    println!("-- elastic --\n{}", ra.summary());
+    println!(
+        "elastic saving vs static: {:.1}% of replica-seconds at attainment {:.1}%",
+        100.0 * (1.0 - ra.replica_seconds / rs.replica_seconds.max(1e-12)),
+        100.0 * ra.fleet.slo_attainment(),
+    );
     Ok(())
 }

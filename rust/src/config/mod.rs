@@ -203,6 +203,11 @@ impl SystemConfig {
     }
 }
 
+/// Default TAB remote bandwidth (TB/s per GPU) used by the cluster and
+/// serving presets — the paper's headline 4.8 TB/s operating point
+/// (Fig 4.1 sweeps 4.0–6.4).
+pub const DEFAULT_REMOTE_TBPS: f64 = 4.8;
+
 /// `Baseline8`: 8×H200, NVLink 4.0 (450 GB/s per direction), 1152 GB HBM.
 pub fn baseline8() -> SystemConfig {
     let h200 = hardware::h200();

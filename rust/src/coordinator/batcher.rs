@@ -73,7 +73,21 @@ mod tests {
     use crate::units::Seconds;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, prompt: vec![1; len], max_new_tokens: 4, arrival: Seconds::ZERO }
+        Request { id, prompt: vec![1; len], max_new_tokens: 4, arrival: Seconds::ZERO, slo: None }
+    }
+
+    #[test]
+    fn admits_boundary_lengths_exactly() {
+        let b = Batcher::new(4, 64, 100);
+        assert!(!b.admits(&req(0, 0)), "empty prompts are inadmissible");
+        assert!(b.admits(&req(1, 1)), "one token is the smallest admissible prompt");
+        assert!(b.admits(&req(2, 99)));
+        assert!(b.admits(&req(3, 100)), "the cap itself is admissible");
+        assert!(!b.admits(&req(4, 101)), "one past the cap is not");
+        // A cap of 1 still admits single-token prompts.
+        let tight = Batcher::new(1, 1, 1);
+        assert!(tight.admits(&req(5, 1)));
+        assert!(!tight.admits(&req(6, 2)));
     }
 
     #[test]

@@ -26,10 +26,13 @@ pub mod scheduler;
 pub mod tp;
 
 pub use batcher::Batcher;
-pub use cluster::{demo_serve_cluster, session_workload, Cluster, ClusterConfig, ClusterReport};
+pub use cluster::{
+    demo_serve_cluster, demo_serve_traffic, session_workload, AutoscaleConfig, Cluster,
+    ClusterConfig, ClusterReport,
+};
 pub use engine::{Backend, SimBackend};
 pub use metrics::Metrics;
-pub use request::{Request, Response};
+pub use request::{Request, Response, SloTarget};
 pub use router::{Policy, Router};
 pub use scheduler::{SchedMode, Scheduler};
 
@@ -56,6 +59,7 @@ pub fn synthetic_workload(n: usize, prompt: usize, gen: usize, mean_gap: Seconds
             prompt: (0..plen).map(|i| (i % 509) as i32 + 1).collect(),
             max_new_tokens: gen,
             arrival: t,
+            slo: None,
         });
     }
     out

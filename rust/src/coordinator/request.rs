@@ -2,8 +2,27 @@
 
 use crate::units::Seconds;
 
+/// Per-request latency service-level objective: the request is *SLO-met*
+/// iff its TTFT and its mean TPOT both land at or under the targets
+/// (scored by the scheduler at completion; fleet attainment and goodput
+/// aggregate in [`super::metrics::Metrics`], DESIGN.md §Traffic).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloTarget {
+    /// Time-to-first-token target.
+    pub ttft: Seconds,
+    /// Time-per-output-token target (mean over the decode phase).
+    pub tpot: Seconds,
+}
+
+impl SloTarget {
+    /// Whether an observed (ttft, tpot) pair meets this target.
+    pub fn met(&self, ttft: Seconds, tpot: Seconds) -> bool {
+        ttft <= self.ttft && tpot <= self.tpot
+    }
+}
+
 /// A generation request entering the coordinator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Request {
     pub id: u64,
     /// Prompt token ids (tiny-model vocab) or just a length for the
@@ -12,6 +31,9 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival time on the serving clock.
     pub arrival: Seconds,
+    /// Latency SLO this request is scored against (`None` = untracked:
+    /// legacy workloads and offline batch classes).
+    pub slo: Option<SloTarget>,
 }
 
 impl Request {
@@ -93,12 +115,20 @@ mod tests {
     }
 
     #[test]
+    fn slo_met_requires_both_targets() {
+        let slo = SloTarget { ttft: Seconds::ms(100.0), tpot: Seconds::ms(10.0) };
+        assert!(slo.met(Seconds::ms(100.0), Seconds::ms(10.0)), "boundaries count as met");
+        assert!(!slo.met(Seconds::ms(100.1), Seconds::ms(5.0)));
+        assert!(!slo.met(Seconds::ms(50.0), Seconds::ms(10.1)));
+    }
+
+    #[test]
     fn affinity_key_depends_on_prefix_only() {
         let base = Request {
             id: 0,
             prompt: (0..100).collect(),
             max_new_tokens: 8,
-            arrival: Seconds::ZERO,
+            ..Default::default()
         };
         // Same prefix, different tail → same key (prefix-cache hit).
         let mut tail = base.clone();

@@ -49,7 +49,11 @@ impl Policy {
 /// unbounded, queueing penalty).
 pub const DEFAULT_SPILL_TOKENS: u64 = 16 * 1024;
 
-/// Router state over `n` replicas.
+/// Router state over `n` replicas. The *active set* is the prefix
+/// `[0, active)`: new work only routes there, so the elastic autoscaler
+/// (DESIGN.md §Traffic) can shrink/grow the serving fleet while
+/// deactivated replicas drain — `complete_work` still releases their
+/// outstanding load.
 pub struct Router {
     policy: Policy,
     next: usize,
@@ -60,6 +64,8 @@ pub struct Router {
     /// Sticky session → replica map for [`Policy::KvAffinity`].
     affinity: HashMap<u64, usize>,
     spill_tokens: u64,
+    /// Replicas currently receiving new work (always ≥ 1, ≤ n).
+    active: usize,
 }
 
 impl Router {
@@ -72,6 +78,7 @@ impl Router {
             routed: vec![0; replicas],
             affinity: HashMap::new(),
             spill_tokens: DEFAULT_SPILL_TOKENS,
+            active: replicas,
         }
     }
 
@@ -89,13 +96,39 @@ impl Router {
         self.policy
     }
 
+    /// Resize the active set (clamped to `[1, n]`). Shrinking never
+    /// cancels outstanding work — deactivated replicas drain naturally.
+    pub fn set_active(&mut self, n: usize) {
+        self.active = n.clamp(1, self.load.len());
+        if self.next >= self.active {
+            self.next = 0;
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
     fn least_loaded(&self) -> usize {
-        self.load
+        self.load[..self.active]
             .iter()
             .enumerate()
             .min_by_key(|(_, &l)| l)
             .map(|(i, _)| i)
             .unwrap()
+    }
+
+    /// Smallest outstanding load across the active set (the front-door
+    /// shed check reads this: if even the emptiest active replica is
+    /// over the watermark, the fleet is saturated).
+    pub fn min_active_load(&self) -> u64 {
+        *self.load[..self.active].iter().min().unwrap()
+    }
+
+    /// Total outstanding load across the whole fleet, draining replicas
+    /// included (the autoscaler's demand signal).
+    pub fn total_load(&self) -> u64 {
+        self.load.iter().sum()
     }
 
     /// Choose a replica for `req` and account its load.
@@ -109,14 +142,16 @@ impl Router {
         let idx = match self.policy {
             Policy::RoundRobin => {
                 let i = self.next;
-                self.next = (self.next + 1) % self.load.len();
+                self.next = (self.next + 1) % self.active;
                 i
             }
             Policy::LeastLoaded => self.least_loaded(),
             Policy::KvAffinity => {
-                let min = *self.load.iter().min().unwrap();
+                let min = self.min_active_load();
                 match self.affinity.get(&key) {
-                    Some(&i) if self.load[i] <= min + self.spill_tokens => i,
+                    // A sticky replica outside the active set re-homes
+                    // (it is draining and must not receive new work).
+                    Some(&i) if i < self.active && self.load[i] <= min + self.spill_tokens => i,
                     _ => {
                         let i = self.least_loaded();
                         self.affinity.insert(key, i);
@@ -176,7 +211,7 @@ mod tests {
     use crate::units::Seconds;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, prompt: vec![1; len], max_new_tokens: 8, arrival: Seconds::ZERO }
+        Request { id, prompt: vec![1; len], max_new_tokens: 8, arrival: Seconds::ZERO, slo: None }
     }
 
     /// Request whose affinity prefix encodes `session`.
@@ -185,7 +220,7 @@ mod tests {
         for (i, t) in prompt.iter_mut().enumerate().skip(32) {
             *t = (i % 100) as i32 + 1000 * id as i32; // tails differ per request
         }
-        Request { id, prompt, max_new_tokens: 8, arrival: Seconds::ZERO }
+        Request { id, prompt, max_new_tokens: 8, arrival: Seconds::ZERO, slo: None }
     }
 
     #[test]
@@ -266,6 +301,50 @@ mod tests {
         // The session re-homed: with load now balanced-ish it stays put.
         let q2 = session_req(2, 7, 40);
         assert_eq!(r.route(&q2), spill);
+    }
+
+    #[test]
+    fn active_set_confines_new_work_and_drains_the_rest() {
+        let mut r = Router::new(4, Policy::RoundRobin);
+        assert_eq!(r.active(), 4);
+        r.set_active(2);
+        let picks: Vec<usize> = (0..6).map(|i| r.route(&req(i, 10))).collect();
+        assert!(picks.iter().all(|&i| i < 2), "{picks:?}");
+        // Releasing load on a deactivated replica still works (drain).
+        r.complete_work(3, 100);
+        // Clamp: never below one, never above the fleet.
+        r.set_active(0);
+        assert_eq!(r.active(), 1);
+        r.set_active(99);
+        assert_eq!(r.active(), 4);
+    }
+
+    #[test]
+    fn least_loaded_ignores_inactive_replicas() {
+        let mut r = Router::new(3, Policy::LeastLoaded);
+        // Load up replicas 0 and 1, leave 2 empty — then deactivate 2.
+        r.route(&req(0, 500));
+        r.route(&req(1, 400));
+        r.set_active(2);
+        let pick = r.route(&req(2, 10));
+        assert!(pick < 2, "empty-but-inactive replica 2 must not be picked");
+        assert_eq!(r.min_active_load(), r.load(0).min(r.load(1)));
+        assert_eq!(r.total_load(), r.load(0) + r.load(1) + r.load(2));
+    }
+
+    #[test]
+    fn kv_affinity_rehomes_sessions_off_deactivated_replicas() {
+        let mut r = Router::new(4, Policy::KvAffinity);
+        // Bias replica 0 so the session homes on a later replica, then
+        // shrink the active set below that home.
+        r.route(&req(100, 2000));
+        let home = r.route(&session_req(0, 9, 100));
+        assert!(home >= 1, "session must avoid the loaded replica 0");
+        r.set_active(1);
+        let next = r.route(&session_req(1, 9, 100));
+        assert_eq!(next, 0, "session must re-home into the active set");
+        // Sticky thereafter (home now inside the active set).
+        assert_eq!(r.route(&session_req(2, 9, 100)), 0);
     }
 
     #[test]

@@ -313,6 +313,21 @@ impl<B: Backend> Scheduler<B> {
                 let total = clock - a.req.arrival;
                 self.metrics.e2e.record(total);
                 self.metrics.completed += 1;
+                // SLO scoring (DESIGN.md §Traffic): a tagged request is
+                // met iff TTFT *and* mean TPOT land under target; only
+                // met requests feed the goodput numerator.
+                if let Some(slo) = a.req.slo {
+                    self.metrics.slo_total += 1;
+                    let tpot = if a.generated > 1 {
+                        (total - a.ttft) / (a.generated - 1) as f64
+                    } else {
+                        Seconds::ZERO
+                    };
+                    if slo.met(a.ttft, tpot) {
+                        self.metrics.slo_met += 1;
+                        self.metrics.goodput_tokens += a.generated as u64;
+                    }
+                }
                 self.responses.push(Response {
                     id: a.req.id,
                     tokens: a.tokens,
@@ -349,6 +364,7 @@ mod tests {
             prompt: vec![(id % 7) as i32 + 1; len],
             max_new_tokens: gen,
             arrival: Seconds::ms(arrival_ms),
+            slo: None,
         }
     }
 
@@ -443,6 +459,24 @@ mod tests {
         assert!(m.busy.as_ms() < 30.0, "busy {}", m.busy.as_ms());
         assert!(m.clock.as_ms() >= 500.0);
         assert!(m.utilization() < 0.1);
+    }
+
+    #[test]
+    fn slo_scoring_counts_met_and_missed_requests() {
+        use crate::coordinator::request::SloTarget;
+        // MockBackend: prefill 10 ms, decode 1 ms → TTFT ≈ 10 ms,
+        // TPOT = 1 ms for a lone request.
+        let mut generous = req(0, 16, 4, 0.0);
+        generous.slo = Some(SloTarget { ttft: Seconds::ms(50.0), tpot: Seconds::ms(5.0) });
+        let mut strict = req(1, 16, 4, 0.0);
+        strict.slo = Some(SloTarget { ttft: Seconds::us(1.0), tpot: Seconds::ms(5.0) });
+        let untracked = req(2, 16, 4, 0.0);
+        let (_, m) = run(vec![generous, strict, untracked], 4);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.slo_total, 2, "untracked requests stay out of attainment");
+        assert_eq!(m.slo_met, 1);
+        assert_eq!(m.goodput_tokens, 4, "only the met request's tokens are goodput");
+        assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
     }
 
     #[test]

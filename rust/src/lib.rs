@@ -17,8 +17,13 @@
 //!   with near-memory compute offload (→ Table 4.3 capacity sweep);
 //! * [`coordinator`] — serving layer: request router, continuous batcher,
 //!   prefill/decode scheduler over simulated FengHuang nodes, and the
-//!   rack-scale multi-replica cluster simulator with KV-aware routing
-//!   and disaggregated prefill/decode pools;
+//!   rack-scale multi-replica cluster simulator with KV-aware routing,
+//!   disaggregated prefill/decode pools, front-door load shedding, and
+//!   an SLO-driven elastic autoscaler;
+//! * [`traffic`] — deterministic open-loop workload engine: seedable
+//!   RNG, arrival processes (Poisson / bursty / diurnal / replay), and
+//!   workload mixes (chat, RAG, agentic, batch) with per-request
+//!   TTFT/TPOT SLO targets;
 //! * [`runtime`] — PJRT client wrapper executing AOT-compiled JAX/Pallas
 //!   artifacts from the Rust hot path;
 //! * [`analysis`] — figure/table generators for every artifact in the
@@ -39,6 +44,7 @@ pub mod paging;
 pub mod runtime;
 pub mod sim;
 pub mod trace;
+pub mod traffic;
 pub mod units;
 
 pub use error::{FhError, Result};
@@ -52,5 +58,6 @@ pub mod prelude {
     pub use crate::paging::{simulate_paged, PagedReport, PagingConfig, PlacementPolicy, PolicyKind};
     pub use crate::sim::{simulate, SimReport};
     pub use crate::trace::{Phase, TraceConfig};
+    pub use crate::traffic::{ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
     pub use crate::units::{Bandwidth, Bytes, Dtype, FlopRate, Flops, Seconds};
 }

@@ -8,6 +8,10 @@
 //! fenghuang serve    [--model M] [--requests N] [--max-batch B]
 //!                    [--replicas R] [--policy P] [--disaggregate P:D]
 //!                    [--sessions S] [--kv-budget-gb G]
+//!                    [--qps Q] [--pattern P] [--mix M] [--seed S]
+//!                    [--slo-ttft-ms X] [--slo-tpot-ms Y]
+//!                    [--autoscale [on|off]] [--autoscale-min N]
+//!                    [--shed-tokens T]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //! fenghuang help
@@ -38,6 +42,11 @@ USAGE:
   fenghuang serve    [--model gpt3] [--requests 64] [--max-batch 8]
                      [--replicas 1] [--policy round-robin|least-outstanding-tokens|kv-affinity]
                      [--disaggregate P:D] [--sessions 8] [--kv-budget-gb G]
+                     open-loop traffic (any of these flags selects the traffic engine):
+                     [--qps 8] [--pattern poisson|bursty|diurnal|replay]
+                     [--mix chat|rag|agentic|batch, '+'-combined, e.g. chat+rag]
+                     [--slo-ttft-ms 2000] [--slo-tpot-ms 80] [--seed 42]
+                     [--autoscale [on|off]] [--autoscale-min 1] [--shed-tokens T]
   fenghuang page     [--model gpt3] [--system fh4-1.5xm|fh4-2.0xm] [--remote-tbps 4.8]
                      [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
@@ -56,6 +65,31 @@ const SERVE_FLAGS: &[&str] = &[
     "disaggregate",
     "sessions",
     "kv-budget-gb",
+    "qps",
+    "pattern",
+    "mix",
+    "slo-ttft-ms",
+    "slo-tpot-ms",
+    "autoscale",
+    "autoscale-min",
+    "shed-tokens",
+    "seed",
+];
+/// Serve flags that may appear without a value (`--autoscale` ≡
+/// `--autoscale on`).
+const SERVE_BARE: &[&str] = &["autoscale"];
+/// Any of these flags routes `serve` through the open-loop traffic
+/// engine instead of the legacy fixed-gap workload.
+const TRAFFIC_FLAGS: &[&str] = &[
+    "qps",
+    "pattern",
+    "mix",
+    "slo-ttft-ms",
+    "slo-tpot-ms",
+    "autoscale",
+    "autoscale-min",
+    "shed-tokens",
+    "seed",
 ];
 const PAGE_FLAGS: &[&str] = &[
     "model",
@@ -81,8 +115,14 @@ fn cli_err(msg: String) -> FhError {
 
 /// Parse `--key value` pairs after the subcommand, rejecting flags the
 /// subcommand does not understand (a typo'd flag must not silently fall
-/// back to a default).
-fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<String, String>> {
+/// back to a default). Flags listed in `bare` are switches: they may
+/// stand alone (`--autoscale`), in which case they read as "on".
+fn parse_flags(
+    cmd: &str,
+    args: &[String],
+    allowed: &[&str],
+    bare: &[&str],
+) -> Result<HashMap<String, String>> {
     let mut flags = HashMap::new();
     let mut i = 0;
     while i < args.len() {
@@ -100,9 +140,13 @@ fn parse_flags(cmd: &str, args: &[String], allowed: &[&str]) -> Result<HashMap<S
                 expected.join(", ")
             )));
         }
-        let v = args
-            .get(i + 1)
-            .ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
+        let next = args.get(i + 1);
+        if bare.contains(&key.as_str()) && next.map_or(true, |v| v.starts_with("--")) {
+            flags.insert(key, "on".to_string());
+            i += 1;
+            continue;
+        }
+        let v = next.ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
         flags.insert(key, v.clone());
         i += 2;
     }
@@ -172,7 +216,7 @@ fn parse_disaggregate(v: &str) -> Result<(usize, usize)> {
 }
 
 fn run_serve(args: &[String]) -> Result<()> {
-    let f = parse_flags("serve", args, SERVE_FLAGS)?;
+    let f = parse_flags("serve", args, SERVE_FLAGS, SERVE_BARE)?;
     let model: String = flag(&f, "model", "gpt3".to_string())?;
     let requests: usize = positive(&f, "requests", 64)?;
     let max_batch: usize = positive(&f, "max-batch", 8)?;
@@ -214,6 +258,10 @@ fn run_serve(args: &[String]) -> Result<()> {
     };
     let m =
         arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
+    if TRAFFIC_FLAGS.iter().any(|k| f.contains_key(*k)) {
+        // Open-loop traffic engine (DESIGN.md §Traffic).
+        return run_serve_traffic(&f, &m, requests, max_batch, replicas, policy, disaggregate, kv_budget);
+    }
     if replicas <= 1 && disaggregate.is_none() && !f.contains_key("policy") && kv_budget.is_none()
     {
         // Single node, no routing: the original serving path.
@@ -236,11 +284,111 @@ fn run_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The `serve` traffic path: build a [`TrafficConfig`] + elastic
+/// [`fenghuang::coordinator::ClusterConfig`] from the flags and run the
+/// open-loop experiment.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_traffic(
+    f: &HashMap<String, String>,
+    m: &ModelArch,
+    requests: usize,
+    max_batch: usize,
+    replicas: usize,
+    policy: Policy,
+    disaggregate: Option<(usize, usize)>,
+    kv_budget: Option<Bytes>,
+) -> Result<()> {
+    use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
+
+    if f.contains_key("sessions") {
+        return Err(cli_err(
+            "--sessions belongs to the legacy fixed-gap workload; the traffic engine's \
+             agentic class carries its own session pool (use --mix agentic)"
+                .into(),
+        ));
+    }
+    let qps: f64 = flag(f, "qps", 8.0)?;
+    if qps <= 0.0 {
+        return Err(cli_err(format!("--qps must be > 0, got {qps}")));
+    }
+    let pattern_s: String = flag(f, "pattern", "poisson".to_string())?;
+    let pattern = ArrivalPattern::parse(&pattern_s).ok_or_else(|| {
+        cli_err(format!(
+            "unknown pattern '{pattern_s}' (expected poisson, bursty, diurnal or replay)"
+        ))
+    })?;
+    let mix_s: String = flag(f, "mix", "chat".to_string())?;
+    let mix = WorkloadMix::parse(&mix_s).ok_or_else(|| {
+        cli_err(format!(
+            "bad mix '{mix_s}' (classes chat|rag|agentic|batch joined by '+', \
+             optional :weight — e.g. chat:3+rag:1)"
+        ))
+    })?;
+    let slo_ttft_ms: f64 = flag(f, "slo-ttft-ms", fenghuang::traffic::DEFAULT_SLO_TTFT_MS)?;
+    let slo_tpot_ms: f64 = flag(f, "slo-tpot-ms", fenghuang::traffic::DEFAULT_SLO_TPOT_MS)?;
+    if slo_ttft_ms <= 0.0 || slo_tpot_ms <= 0.0 {
+        return Err(cli_err(format!(
+            "SLO targets must be > 0 (got --slo-ttft-ms {slo_ttft_ms}, \
+             --slo-tpot-ms {slo_tpot_ms})"
+        )));
+    }
+    let seed: u64 = flag(f, "seed", 42)?;
+    let autoscale = if switch(f, "autoscale")? {
+        let min: usize = positive(f, "autoscale-min", 1)?;
+        Some(AutoscaleConfig { min_replicas: min, ..Default::default() })
+    } else {
+        if f.contains_key("autoscale-min") {
+            return Err(cli_err("--autoscale-min needs --autoscale".into()));
+        }
+        None
+    };
+    let shed_tokens = match f.get("shed-tokens") {
+        Some(v) => {
+            let t: u64 = v.parse().map_err(|e| cli_err(format!("--shed-tokens: {e}")))?;
+            if t == 0 {
+                return Err(cli_err("--shed-tokens must be ≥ 1".into()));
+            }
+            Some(t)
+        }
+        None => None,
+    };
+    // Replay from the legacy fixed-gap cadence: the degenerate recorded
+    // trace, kept so `--pattern replay` works without a trace file.
+    let replay_gaps = if pattern == ArrivalPattern::Replay {
+        vec![Seconds::new(1.0 / qps)]
+    } else {
+        Vec::new()
+    };
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig { pattern, qps, replay_gaps, ..Default::default() },
+        mix,
+        requests,
+        seed,
+        max_prompt: m.max_seq as usize,
+        slo: Some(SloTarget {
+            ttft: Seconds::ms(slo_ttft_ms),
+            tpot: Seconds::ms(slo_tpot_ms),
+        }),
+    };
+    let cfg = ClusterConfig {
+        policy,
+        max_batch,
+        disaggregate,
+        kv_budget,
+        shed_tokens,
+        autoscale,
+    };
+    let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
+    println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);
+    Ok(())
+}
+
 fn run_page(args: &[String]) -> Result<()> {
-    let f = parse_flags("page", args, PAGE_FLAGS)?;
+    let f = parse_flags("page", args, PAGE_FLAGS, &[])?;
     let model: String = flag(&f, "model", "gpt3".to_string())?;
     let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
-    let remote_tbps: f64 = flag(&f, "remote-tbps", 4.8)?;
+    let remote_tbps: f64 =
+        flag(&f, "remote-tbps", fenghuang::config::DEFAULT_REMOTE_TBPS)?;
     if remote_tbps <= 0.0 {
         return Err(cli_err(format!("--remote-tbps must be > 0, got {remote_tbps}")));
     }
@@ -389,10 +537,11 @@ fn run() -> Result<()> {
     };
     match cmd.as_str() {
         "simulate" => {
-            let f = parse_flags("simulate", &args[1..], SIMULATE_FLAGS)?;
+            let f = parse_flags("simulate", &args[1..], SIMULATE_FLAGS, &[])?;
             let model: String = flag(&f, "model", "gpt3".to_string())?;
             let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
-            let remote_tbps: f64 = flag(&f, "remote-tbps", 4.8)?;
+            let remote_tbps: f64 =
+        flag(&f, "remote-tbps", fenghuang::config::DEFAULT_REMOTE_TBPS)?;
             let batch: u64 = positive(&f, "batch", 8)?;
             let prompt: u64 = positive(&f, "prompt", 4096)?;
             let gen: u64 = positive(&f, "gen", 1024)?;

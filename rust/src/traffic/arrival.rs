@@ -1,0 +1,312 @@
+//! Open-loop arrival processes (DESIGN.md §Traffic).
+//!
+//! The generator is *open-loop*: arrival timestamps are drawn from the
+//! process alone and never react to serving latency, which is what makes
+//! goodput-under-SLO a meaningful metric (a closed loop would throttle
+//! itself out of the overload the SLO is supposed to expose). Patterns:
+//!
+//! * **poisson** — homogeneous Poisson at `qps` (exponential gaps);
+//! * **bursty** — a two-state MMPP: an *on* state firing at `qps` and an
+//!   *off* state at `burst_idle_frac · qps`, with exponentially
+//!   distributed dwell times (flash-crowd shape);
+//! * **diurnal** — non-homogeneous Poisson whose rate ramps
+//!   sinusoidally from `diurnal_floor · qps` (trough, at t = 0) to `qps`
+//!   (peak, half a period in) — the day/night curve the elastic
+//!   autoscaler is measured against;
+//! * **replay** — replay a recorded gap slice, cycled (trace-driven
+//!   load; the CLI feeds it fixed `1/qps` gaps as the degenerate case).
+//!
+//! Non-homogeneous patterns use Lewis–Shedler thinning against the peak
+//! rate, so every pattern is exact and fully determined by the seed.
+
+use super::rng::XorShift;
+use crate::error::{FhError, Result};
+use crate::units::Seconds;
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    Poisson,
+    Bursty,
+    Diurnal,
+    Replay,
+}
+
+impl ArrivalPattern {
+    /// Parse a CLI pattern name.
+    pub fn parse(s: &str) -> Option<ArrivalPattern> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" => Some(ArrivalPattern::Poisson),
+            "bursty" | "mmpp" | "onoff" => Some(ArrivalPattern::Bursty),
+            "diurnal" | "ramp" => Some(ArrivalPattern::Diurnal),
+            "replay" | "trace" => Some(ArrivalPattern::Replay),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalPattern::Poisson => "poisson",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::Diurnal => "diurnal",
+            ArrivalPattern::Replay => "replay",
+        }
+    }
+
+    /// The synthetic patterns (replay needs a recorded slice), for sweeps.
+    pub fn synthetic() -> [ArrivalPattern; 3] {
+        [ArrivalPattern::Poisson, ArrivalPattern::Bursty, ArrivalPattern::Diurnal]
+    }
+}
+
+/// Arrival-process knobs. `qps` is the *peak* rate; non-homogeneous
+/// patterns modulate below it.
+#[derive(Debug, Clone)]
+pub struct ArrivalConfig {
+    pub pattern: ArrivalPattern,
+    /// Peak arrival rate (requests per virtual second).
+    pub qps: f64,
+    /// Diurnal cycle length.
+    pub diurnal_period: Seconds,
+    /// Trough rate as a fraction of peak, in [0, 1].
+    pub diurnal_floor: f64,
+    /// Bursty: mean dwell in the on state.
+    pub burst_on: Seconds,
+    /// Bursty: mean dwell in the off state.
+    pub burst_off: Seconds,
+    /// Bursty: off-state rate as a fraction of peak, in [0, 1].
+    pub burst_idle_frac: f64,
+    /// Replay: recorded inter-arrival gaps, cycled.
+    pub replay_gaps: Vec<Seconds>,
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        ArrivalConfig {
+            pattern: ArrivalPattern::Poisson,
+            qps: 8.0,
+            diurnal_period: Seconds::new(30.0),
+            diurnal_floor: 0.1,
+            burst_on: Seconds::new(2.0),
+            burst_off: Seconds::new(6.0),
+            burst_idle_frac: 0.05,
+            replay_gaps: Vec::new(),
+        }
+    }
+}
+
+impl ArrivalConfig {
+    fn validate(&self) -> Result<()> {
+        if !(self.qps > 0.0) {
+            return Err(FhError::Config(format!("qps must be > 0, got {}", self.qps)));
+        }
+        if !(0.0..=1.0).contains(&self.diurnal_floor) {
+            return Err(FhError::Config(format!(
+                "diurnal floor must be in [0, 1], got {}",
+                self.diurnal_floor
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.burst_idle_frac) {
+            return Err(FhError::Config(format!(
+                "burst idle fraction must be in [0, 1], got {}",
+                self.burst_idle_frac
+            )));
+        }
+        if self.diurnal_period.value() <= 0.0
+            || self.burst_on.value() <= 0.0
+            || self.burst_off.value() <= 0.0
+        {
+            return Err(FhError::Config("arrival dwell/period knobs must be positive".into()));
+        }
+        if self.pattern == ArrivalPattern::Replay && self.replay_gaps.is_empty() {
+            return Err(FhError::Config(
+                "replay pattern needs a non-empty gap slice (replay_gaps)".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate at time `t` (the thinning intensity), as a
+    /// fraction of peak. Homogeneous patterns are flat at 1.
+    fn intensity_frac(&self, t: Seconds, burst_on_now: bool) -> f64 {
+        match self.pattern {
+            ArrivalPattern::Poisson | ArrivalPattern::Replay => 1.0,
+            ArrivalPattern::Bursty => {
+                if burst_on_now {
+                    1.0
+                } else {
+                    self.burst_idle_frac
+                }
+            }
+            ArrivalPattern::Diurnal => {
+                let phase = t.value() / self.diurnal_period.value();
+                let shape = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+                self.diurnal_floor + (1.0 - self.diurnal_floor) * shape
+            }
+        }
+    }
+}
+
+/// Two-state dwell machine for the bursty pattern: tracks whether the
+/// process is in the on state at a given (monotone) query time.
+struct BurstState {
+    on: bool,
+    until: f64,
+}
+
+impl BurstState {
+    fn at(&mut self, t: f64, cfg: &ArrivalConfig, rng: &mut XorShift) -> bool {
+        while t >= self.until {
+            self.on = !self.on;
+            let mean = if self.on { cfg.burst_on.value() } else { cfg.burst_off.value() };
+            self.until += rng.exp(mean);
+        }
+        self.on
+    }
+}
+
+/// Draw `n` monotone arrival timestamps from the configured process.
+pub fn arrival_times(cfg: &ArrivalConfig, n: usize, rng: &mut XorShift) -> Result<Vec<Seconds>> {
+    cfg.validate()?;
+    let mut out = Vec::with_capacity(n);
+    if cfg.pattern == ArrivalPattern::Replay {
+        let mut t = Seconds::ZERO;
+        for i in 0..n {
+            t += cfg.replay_gaps[i % cfg.replay_gaps.len()];
+            out.push(t);
+        }
+        return Ok(out);
+    }
+    // Lewis–Shedler thinning against the peak rate: candidates from a
+    // homogeneous Poisson at qps, accepted with probability λ(t)/qps.
+    let mean_gap = 1.0 / cfg.qps;
+    let mut burst = BurstState { on: false, until: 0.0 };
+    let mut t = 0.0f64;
+    while out.len() < n {
+        t += rng.exp(mean_gap);
+        let on = if cfg.pattern == ArrivalPattern::Bursty {
+            burst.at(t, cfg, rng)
+        } else {
+            false
+        };
+        let frac = cfg.intensity_frac(Seconds::new(t), on);
+        if rng.next_f64() < frac {
+            out.push(Seconds::new(t));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn times(pattern: ArrivalPattern, qps: f64, n: usize, seed: u64) -> Vec<Seconds> {
+        let cfg = ArrivalConfig { pattern, qps, ..Default::default() };
+        arrival_times(&cfg, n, &mut XorShift::new(seed)).unwrap()
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for p in ArrivalPattern::synthetic() {
+            assert_eq!(ArrivalPattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(ArrivalPattern::parse("replay"), Some(ArrivalPattern::Replay));
+        assert_eq!(ArrivalPattern::parse("MMPP"), Some(ArrivalPattern::Bursty));
+        assert!(ArrivalPattern::parse("lunar").is_none());
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_deterministic() {
+        for p in ArrivalPattern::synthetic() {
+            let a = times(p, 10.0, 200, 7);
+            let b = times(p, 10.0, 200, 7);
+            assert_eq!(a.len(), 200);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x, y, "{} must be seed-deterministic", p.name());
+            }
+            for w in a.windows(2) {
+                assert!(w[1] >= w[0], "{} arrivals must be monotone", p.name());
+            }
+            let c = times(p, 10.0, 200, 8);
+            assert_ne!(
+                a.last().unwrap(),
+                c.last().unwrap(),
+                "{} must vary with the seed",
+                p.name()
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_rate_converges_to_qps() {
+        let a = times(ArrivalPattern::Poisson, 20.0, 4000, 3);
+        let span = a.last().unwrap().value();
+        let rate = 4000.0 / span;
+        assert!((rate - 20.0).abs() < 1.5, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn diurnal_trough_is_sparser_than_peak() {
+        // Rate at t≈0 is floor·qps; at period/2 it is qps. Count arrivals
+        // in the first vs the middle tenth of one period.
+        let cfg = ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps: 50.0,
+            diurnal_period: Seconds::new(40.0),
+            diurnal_floor: 0.05,
+            ..Default::default()
+        };
+        let a = arrival_times(&cfg, 1200, &mut XorShift::new(9)).unwrap();
+        let count_in = |lo: f64, hi: f64| {
+            a.iter().filter(|t| t.value() >= lo && t.value() < hi).count()
+        };
+        let trough = count_in(0.0, 4.0);
+        let peak = count_in(18.0, 22.0);
+        assert!(
+            peak > 4 * trough.max(1),
+            "peak window {peak} must dwarf trough window {trough}"
+        );
+    }
+
+    #[test]
+    fn bursty_mean_rate_sits_between_idle_and_peak() {
+        let cfg = ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 40.0,
+            burst_on: Seconds::new(1.0),
+            burst_off: Seconds::new(3.0),
+            burst_idle_frac: 0.05,
+            ..Default::default()
+        };
+        let a = arrival_times(&cfg, 2000, &mut XorShift::new(4)).unwrap();
+        let rate = 2000.0 / a.last().unwrap().value();
+        // Duty cycle 25%: expected ≈ 40·(0.25 + 0.75·0.05) ≈ 11.5 qps.
+        assert!(rate > 40.0 * 0.05 * 1.5, "rate {rate} stuck at idle");
+        assert!(rate < 40.0 * 0.8, "rate {rate} never left the on state");
+    }
+
+    #[test]
+    fn replay_cycles_the_gap_slice() {
+        let cfg = ArrivalConfig {
+            pattern: ArrivalPattern::Replay,
+            replay_gaps: vec![Seconds::ms(10.0), Seconds::ms(30.0)],
+            ..Default::default()
+        };
+        let a = arrival_times(&cfg, 4, &mut XorShift::new(1)).unwrap();
+        assert!((a[0].as_ms() - 10.0).abs() < 1e-9);
+        assert!((a[1].as_ms() - 40.0).abs() < 1e-9);
+        assert!((a[3].as_ms() - 80.0).abs() < 1e-9);
+        // Empty slice is a config error, not a hang.
+        let bad = ArrivalConfig { pattern: ArrivalPattern::Replay, ..Default::default() };
+        assert!(arrival_times(&bad, 4, &mut XorShift::new(1)).is_err());
+    }
+
+    #[test]
+    fn invalid_knobs_are_rejected() {
+        let bad = ArrivalConfig { qps: 0.0, ..Default::default() };
+        assert!(arrival_times(&bad, 4, &mut XorShift::new(1)).is_err());
+        let bad = ArrivalConfig { diurnal_floor: 1.5, ..Default::default() };
+        assert!(arrival_times(&bad, 4, &mut XorShift::new(1)).is_err());
+    }
+}

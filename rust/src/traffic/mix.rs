@@ -1,0 +1,253 @@
+//! Workload classes and mixes (DESIGN.md §Traffic).
+//!
+//! Each class models one serving population with its own prompt/output
+//! length distributions and SLO posture:
+//!
+//! * **chat** — interactive conversations: short-to-medium prompts,
+//!   medium generations, strict TTFT/TPOT;
+//! * **rag** — retrieval-augmented long-prompt queries: the prompt
+//!   carries stuffed context, so the TTFT target is relaxed (2× base)
+//!   while the decode target stays strict;
+//! * **agentic** — multi-turn tool-use sessions drawn from a small
+//!   session pool; requests of one session share the affinity prefix
+//!   ([`crate::coordinator::request::AFFINITY_PREFIX`]) and the context
+//!   grows every turn — the workload KV-affinity routing is built for;
+//! * **batch** — offline/background generation with no latency SLO:
+//!   it fills troughs, contributes throughput, and is excluded from
+//!   goodput by construction.
+//!
+//! A [`WorkloadMix`] is a weighted set of classes; the CLI grammar is
+//! `chat+rag` or `chat:3+batch:1` (weights default to 1).
+
+use crate::coordinator::request::SloTarget;
+
+/// The built-in workload populations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClassKind {
+    Chat,
+    Rag,
+    Agentic,
+    Batch,
+}
+
+impl ClassKind {
+    pub fn parse(s: &str) -> Option<ClassKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "chat" => Some(ClassKind::Chat),
+            "rag" | "long-prompt" => Some(ClassKind::Rag),
+            "agentic" | "agent" | "multi-turn" => Some(ClassKind::Agentic),
+            "batch" | "offline" => Some(ClassKind::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ClassKind::Chat => "chat",
+            ClassKind::Rag => "rag",
+            ClassKind::Agentic => "agentic",
+            ClassKind::Batch => "batch",
+        }
+    }
+
+    pub fn all() -> [ClassKind; 4] {
+        [ClassKind::Chat, ClassKind::Rag, ClassKind::Agentic, ClassKind::Batch]
+    }
+}
+
+/// One class of a [`WorkloadMix`]: sampling ranges plus SLO posture.
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    pub kind: ClassKind,
+    /// Relative share of arrivals routed to this class.
+    pub weight: f64,
+    /// Prompt length range (tokens, inclusive; clamped to the serving
+    /// model's admissible prompt at generation time).
+    pub prompt_lo: usize,
+    pub prompt_hi: usize,
+    /// Generation budget range (tokens, inclusive).
+    pub gen_lo: usize,
+    pub gen_hi: usize,
+    /// TTFT/TPOT multipliers on the base [`SloTarget`]; `None` = no
+    /// latency SLO (offline work, excluded from goodput).
+    pub slo_scale: Option<(f64, f64)>,
+    /// Session pool size: requests draw a session and share its affinity
+    /// prefix. 0 = every request gets a unique prefix.
+    pub sessions: usize,
+    /// Context tokens appended per session turn (agentic growth).
+    pub turn_growth: usize,
+}
+
+impl ClassSpec {
+    /// The calibrated default spec for a class.
+    pub fn preset(kind: ClassKind) -> ClassSpec {
+        match kind {
+            ClassKind::Chat => ClassSpec {
+                kind,
+                weight: 1.0,
+                prompt_lo: 96,
+                prompt_hi: 768,
+                gen_lo: 48,
+                gen_hi: 192,
+                slo_scale: Some((1.0, 1.0)),
+                sessions: 0,
+                turn_growth: 0,
+            },
+            ClassKind::Rag => ClassSpec {
+                kind,
+                weight: 1.0,
+                prompt_lo: 1536,
+                prompt_hi: 3584,
+                gen_lo: 64,
+                gen_hi: 160,
+                slo_scale: Some((2.0, 1.0)),
+                sessions: 0,
+                turn_growth: 0,
+            },
+            ClassKind::Agentic => ClassSpec {
+                kind,
+                weight: 1.0,
+                prompt_lo: 128,
+                prompt_hi: 512,
+                gen_lo: 24,
+                gen_hi: 96,
+                slo_scale: Some((1.0, 1.5)),
+                sessions: 8,
+                turn_growth: 96,
+            },
+            ClassKind::Batch => ClassSpec {
+                kind,
+                weight: 1.0,
+                prompt_lo: 256,
+                prompt_hi: 2048,
+                gen_lo: 128,
+                gen_hi: 384,
+                slo_scale: None,
+                sessions: 0,
+                turn_growth: 0,
+            },
+        }
+    }
+
+    /// This class's per-request SLO, scaled off the fleet base target.
+    pub fn slo_for(&self, base: Option<SloTarget>) -> Option<SloTarget> {
+        match (base, self.slo_scale) {
+            (Some(b), Some((ft, fp))) => {
+                Some(SloTarget { ttft: b.ttft * ft, tpot: b.tpot * fp })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A weighted set of workload classes.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    pub classes: Vec<ClassSpec>,
+}
+
+impl WorkloadMix {
+    /// Single-class mix from a preset.
+    pub fn of(kind: ClassKind) -> WorkloadMix {
+        WorkloadMix { classes: vec![ClassSpec::preset(kind)] }
+    }
+
+    /// Parse the CLI mix grammar: `chat+rag`, `chat:3+batch:1`. Weights
+    /// default to 1 and must be positive; duplicate classes are rejected.
+    pub fn parse(s: &str) -> Option<WorkloadMix> {
+        let mut classes: Vec<ClassSpec> = Vec::new();
+        for part in s.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                return None;
+            }
+            let (name, weight) = match part.split_once(':') {
+                Some((n, w)) => (n, w.parse::<f64>().ok()?),
+                None => (part, 1.0),
+            };
+            if !(weight > 0.0) {
+                return None;
+            }
+            let kind = ClassKind::parse(name)?;
+            if classes.iter().any(|c| c.kind == kind) {
+                return None;
+            }
+            let mut spec = ClassSpec::preset(kind);
+            spec.weight = weight;
+            classes.push(spec);
+        }
+        if classes.is_empty() {
+            None
+        } else {
+            Some(WorkloadMix { classes })
+        }
+    }
+
+    /// Canonical display name (`chat+rag`).
+    pub fn name(&self) -> String {
+        self.classes
+            .iter()
+            .map(|c| c.kind.name())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Per-class sampling weights.
+    pub fn weights(&self) -> Vec<f64> {
+        self.classes.iter().map(|c| c.weight).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::units::Seconds;
+
+    #[test]
+    fn class_names_roundtrip() {
+        for k in ClassKind::all() {
+            assert_eq!(ClassKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ClassKind::parse("OFFLINE"), Some(ClassKind::Batch));
+        assert!(ClassKind::parse("cryptomining").is_none());
+    }
+
+    #[test]
+    fn mix_grammar_parses_weights_and_rejects_garbage() {
+        let m = WorkloadMix::parse("chat+rag").unwrap();
+        assert_eq!(m.classes.len(), 2);
+        assert_eq!(m.name(), "chat+rag");
+        assert_eq!(m.weights(), vec![1.0, 1.0]);
+
+        let m = WorkloadMix::parse("chat:3+batch:1").unwrap();
+        assert_eq!(m.weights(), vec![3.0, 1.0]);
+
+        assert!(WorkloadMix::parse("").is_none());
+        assert!(WorkloadMix::parse("chat+chat").is_none(), "duplicates rejected");
+        assert!(WorkloadMix::parse("chat:-1").is_none(), "weights must be positive");
+        assert!(WorkloadMix::parse("chat:zero").is_none());
+        assert!(WorkloadMix::parse("warez+chat").is_none());
+    }
+
+    #[test]
+    fn presets_are_internally_consistent() {
+        for k in ClassKind::all() {
+            let c = ClassSpec::preset(k);
+            assert!(c.prompt_lo >= 1 && c.prompt_lo <= c.prompt_hi, "{:?}", k);
+            assert!(c.gen_lo >= 1 && c.gen_lo <= c.gen_hi, "{:?}", k);
+            assert!(c.weight > 0.0);
+        }
+        assert!(ClassSpec::preset(ClassKind::Batch).slo_scale.is_none());
+        assert!(ClassSpec::preset(ClassKind::Agentic).sessions > 0);
+    }
+
+    #[test]
+    fn slo_scaling_applies_per_class() {
+        let base = Some(SloTarget { ttft: Seconds::ms(1000.0), tpot: Seconds::ms(50.0) });
+        let rag = ClassSpec::preset(ClassKind::Rag).slo_for(base).unwrap();
+        assert!((rag.ttft.as_ms() - 2000.0).abs() < 1e-9, "RAG TTFT is relaxed 2x");
+        assert!((rag.tpot.as_ms() - 50.0).abs() < 1e-9);
+        assert!(ClassSpec::preset(ClassKind::Batch).slo_for(base).is_none());
+        assert!(ClassSpec::preset(ClassKind::Chat).slo_for(None).is_none());
+    }
+}

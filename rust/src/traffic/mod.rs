@@ -1,0 +1,270 @@
+//! Open-loop traffic engine (DESIGN.md §Traffic; → EXPERIMENTS.md
+//! §Traffic-Sweep).
+//!
+//! The paper's headline economic claim — up to 50 % fewer GPUs *while
+//! maintaining end-user performance* (§4.4) — is a statement about
+//! serving under live traffic with latency SLOs. This module supplies
+//! the live traffic: a deterministic, zero-dependency workload engine
+//! that turns a seed into an open-loop request stream the cluster
+//! simulator can serve.
+//!
+//! * [`rng`] — seedable xorshift64* generator (no `rand` crate offline);
+//! * [`arrival`] — arrival processes: Poisson, bursty (MMPP on-off),
+//!   diurnal ramp, and replay-from-slice;
+//! * [`mix`] — workload classes (chat, long-prompt RAG, agentic
+//!   multi-turn with session-prefix reuse, offline batch) with per-class
+//!   prompt/output length distributions and SLO posture.
+//!
+//! [`generate`] composes the three: requests arrive per the pattern, are
+//! classed per the mix weights, and carry per-request [`SloTarget`]s the
+//! coordinator scores on completion (fleet SLO attainment + goodput;
+//! `coordinator::metrics`). Everything downstream of the seed is
+//! bit-for-bit reproducible — the property the golden regression tests
+//! (`rust/tests/golden.rs`) pin.
+
+pub mod arrival;
+pub mod mix;
+pub mod rng;
+
+pub use arrival::{arrival_times, ArrivalConfig, ArrivalPattern};
+pub use mix::{ClassKind, ClassSpec, WorkloadMix};
+pub use rng::XorShift;
+
+use crate::coordinator::request::{Request, SloTarget, AFFINITY_PREFIX};
+use crate::error::{FhError, Result};
+use crate::units::Seconds;
+
+/// Default base SLO: interactive chat at 2 s to first token, 80 ms per
+/// output token (classes scale these; see [`ClassSpec::slo_for`]).
+pub const DEFAULT_SLO_TTFT_MS: f64 = 2000.0;
+pub const DEFAULT_SLO_TPOT_MS: f64 = 80.0;
+
+/// Full traffic-engine configuration: one seed in, one workload out.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    pub arrivals: ArrivalConfig,
+    pub mix: WorkloadMix,
+    /// Number of requests to draw.
+    pub requests: usize,
+    pub seed: u64,
+    /// Admissible prompt cap (the serving model's `max_seq`); class
+    /// ranges are clamped to it so no request is dead on arrival.
+    pub max_prompt: usize,
+    /// Base per-request SLO; classes scale it ([`ClassSpec::slo_scale`]).
+    /// `None` disables SLO tagging entirely.
+    pub slo: Option<SloTarget>,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            arrivals: ArrivalConfig::default(),
+            mix: WorkloadMix::of(ClassKind::Chat),
+            requests: 64,
+            seed: 42,
+            max_prompt: 4096,
+            slo: Some(SloTarget {
+                ttft: Seconds::ms(DEFAULT_SLO_TTFT_MS),
+                tpot: Seconds::ms(DEFAULT_SLO_TPOT_MS),
+            }),
+        }
+    }
+}
+
+/// Affinity-prefix token for (marker, position): requests sharing a
+/// marker share the whole prefix, hence the same
+/// [`Request::affinity_key`]. The marker is mixed through a
+/// splitmix64-style finaliser *per position* so distinct markers keep
+/// distinct 32-token prefixes (a plain `marker % vocab` would alias
+/// unrelated sessions once ids wrap the vocab size).
+fn prefix_token(marker: u64, i: usize) -> i32 {
+    let mut z = marker ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    (z % 509) as i32 + 1
+}
+
+/// Draw the full open-loop workload for `cfg`. Deterministic in the
+/// seed; requests come out sorted by arrival time.
+pub fn generate(cfg: &TrafficConfig) -> Result<Vec<Request>> {
+    if cfg.max_prompt == 0 {
+        return Err(FhError::Config("traffic max_prompt must be ≥ 1".into()));
+    }
+    if cfg.mix.classes.is_empty() {
+        return Err(FhError::Config("traffic mix needs at least one class".into()));
+    }
+    let mut rng = XorShift::new(cfg.seed);
+    let times = arrival_times(&cfg.arrivals, cfg.requests, &mut rng)?;
+    let weights = cfg.mix.weights();
+    // Per-class, per-session turn counters (agentic context growth).
+    let mut turns: Vec<Vec<u64>> =
+        cfg.mix.classes.iter().map(|c| vec![0u64; c.sessions]).collect();
+    let mut out = Vec::with_capacity(cfg.requests);
+    for (id, t) in times.into_iter().enumerate() {
+        let ci = rng.pick_weighted(&weights);
+        let class = &cfg.mix.classes[ci];
+        // Session draw: pooled classes share prefixes, the rest get a
+        // unique per-request marker (class-disambiguated so chat and
+        // batch never alias).
+        let (marker, turn) = if class.sessions > 0 {
+            let s = rng.range(0, class.sessions as u64 - 1) as usize;
+            let turn = turns[ci][s];
+            turns[ci][s] += 1;
+            (((ci as u64) << 32) | s as u64, turn)
+        } else {
+            (((ci as u64) << 32) | (1 << 20) | id as u64, 0)
+        };
+        let lo = class.prompt_lo.clamp(1, cfg.max_prompt);
+        let hi = class.prompt_hi.clamp(lo, cfg.max_prompt);
+        let grown = turn as usize * class.turn_growth;
+        let plen = (rng.range(lo as u64, hi as u64) as usize + grown).min(cfg.max_prompt);
+        let gen = rng.range(class.gen_lo as u64, class.gen_hi as u64).max(1) as usize;
+        let mut prompt = Vec::with_capacity(plen);
+        for i in 0..plen.min(AFFINITY_PREFIX) {
+            prompt.push(prefix_token(marker, i));
+        }
+        for i in prompt.len()..plen {
+            prompt.push(((id * 31 + i * 13) % 509) as i32 + 1);
+        }
+        out.push(Request {
+            id: id as u64,
+            prompt,
+            max_new_tokens: gen,
+            arrival: t,
+            slo: class.slo_for(cfg.slo),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mix: &str, requests: usize) -> TrafficConfig {
+        TrafficConfig {
+            mix: WorkloadMix::parse(mix).unwrap(),
+            requests,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generation_is_seed_deterministic() {
+        let a = generate(&cfg("chat+rag", 64)).unwrap();
+        let b = generate(&cfg("chat+rag", 64)).unwrap();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.slo.map(|s| s.ttft), y.slo.map(|s| s.ttft));
+        }
+        let mut c = cfg("chat+rag", 64);
+        c.seed = 8;
+        let c = generate(&c).unwrap();
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt || x.arrival != y.arrival),
+            "a different seed must change the workload"
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_prompts_admissible() {
+        let mut c = cfg("chat+rag+agentic+batch", 200);
+        c.max_prompt = 1024;
+        let reqs = generate(&c).unwrap();
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for r in &reqs {
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt.len() <= 1024, "prompt {} exceeds cap", r.prompt.len());
+            assert!(r.max_new_tokens >= 1);
+        }
+    }
+
+    #[test]
+    fn rag_prompts_are_longer_and_slo_relaxed() {
+        let reqs = generate(&cfg("rag", 32)).unwrap();
+        for r in &reqs {
+            assert!(r.prompt.len() >= 1536);
+            let slo = r.slo.expect("rag carries an SLO");
+            assert!((slo.ttft.as_ms() - 2.0 * DEFAULT_SLO_TTFT_MS).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batch_requests_carry_no_slo() {
+        let reqs = generate(&cfg("batch", 32)).unwrap();
+        assert!(reqs.iter().all(|r| r.slo.is_none()));
+    }
+
+    #[test]
+    fn agentic_sessions_share_affinity_keys_and_grow() {
+        let reqs = generate(&cfg("agentic", 120)).unwrap();
+        let mut keys: Vec<u64> = reqs.iter().map(|r| r.affinity_key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        let pool = ClassSpec::preset(ClassKind::Agentic).sessions;
+        assert!(
+            keys.len() <= pool,
+            "{} distinct keys from a {pool}-session pool",
+            keys.len()
+        );
+        assert!(keys.len() >= 2, "several sessions should see traffic");
+        // Later turns of a session carry more context than its first turn.
+        let by_key = |k: u64| -> Vec<usize> {
+            reqs.iter().filter(|r| r.affinity_key() == k).map(|r| r.prompt.len()).collect()
+        };
+        let busiest = keys
+            .iter()
+            .copied()
+            .max_by_key(|&k| by_key(k).len())
+            .unwrap();
+        let lens = by_key(busiest);
+        assert!(
+            lens.last().unwrap() > lens.first().unwrap(),
+            "context must grow across turns: {lens:?}"
+        );
+    }
+
+    #[test]
+    fn unique_prefixes_do_not_alias_across_many_requests() {
+        // Regression: a `marker % vocab` prefix would collapse distinct
+        // sessions onto 509 sticky keys once ids wrap the vocab.
+        let reqs = generate(&cfg("chat+rag", 600)).unwrap();
+        let mut keys: Vec<u64> = reqs.iter().map(|r| r.affinity_key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 600, "every chat/rag request is its own session");
+    }
+
+    #[test]
+    fn mixed_stream_draws_every_class() {
+        let reqs = generate(&cfg("chat+batch", 200)).unwrap();
+        let with_slo = reqs.iter().filter(|r| r.slo.is_some()).count();
+        let without = reqs.len() - with_slo;
+        assert!(with_slo > 20 && without > 20, "chat {with_slo} / batch {without}");
+    }
+
+    #[test]
+    fn invalid_configs_error() {
+        let mut c = cfg("chat", 8);
+        c.max_prompt = 0;
+        assert!(generate(&c).is_err());
+        let mut c = cfg("chat", 8);
+        c.mix.classes.clear();
+        assert!(generate(&c).is_err());
+        let mut c = cfg("chat", 8);
+        c.arrivals.qps = -1.0;
+        assert!(generate(&c).is_err());
+    }
+
+    #[test]
+    fn empty_workload_is_fine() {
+        assert!(generate(&cfg("chat", 0)).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,150 @@
+//! Seedable, dependency-free pseudo-random source for the traffic engine
+//! (DESIGN.md §Traffic).
+//!
+//! The offline build has no `rand` crate, and the serving experiments
+//! demand bit-for-bit reproducibility (`--seed` on the CLI, fixed seeds
+//! in the golden tests), so the engine carries its own generator:
+//! xorshift64* seeded through a splitmix64 scramble so that nearby seeds
+//! (0, 1, 2, …) still produce decorrelated streams.
+
+/// xorshift64* generator. Cheap, deterministic, and good enough for
+/// workload synthesis (this is not a cryptographic source).
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    /// Seed the generator. Any seed is valid, including 0 (the scramble
+    /// maps it away from the forbidden all-zero xorshift state).
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 finaliser: decorrelates consecutive small seeds.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        XorShift { state: if z == 0 { 0x9E3779B97F4A7C15 } else { z } }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi] (inclusive). `lo > hi` is a caller bug.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range {lo}..={hi} is empty");
+        let span = hi - lo + 1;
+        // Modulo bias is irrelevant at simulation spans (≪ 2^64).
+        lo + if span == 0 { self.next_u64() } else { self.next_u64() % span }
+    }
+
+    /// Exponential variate with the given mean (inverse-CDF sampling).
+    /// The draw uses 1 − u ∈ (0, 1] so ln never sees zero.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0, "exponential mean must be positive");
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+
+    /// Index drawn proportionally to `weights` (all non-negative, at
+    /// least one positive).
+    pub fn pick_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must sum to a positive value");
+        let mut x = self.next_f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = XorShift::new(7);
+        let mut b = XorShift::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn nearby_seeds_decorrelate() {
+        let mut a = XorShift::new(0);
+        let mut b = XorShift::new(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0, "seeds 0 and 1 must not share draws");
+    }
+
+    #[test]
+    fn zero_seed_is_valid() {
+        let mut r = XorShift::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn f64_stays_in_unit_interval() {
+        let mut r = XorShift::new(42);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut r = XorShift::new(3);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(5, 8);
+            assert!((5..=8).contains(&v));
+            seen_lo |= v == 5;
+            seen_hi |= v == 8;
+        }
+        assert!(seen_lo && seen_hi, "both endpoints must be reachable");
+        assert_eq!(r.range(9, 9), 9);
+    }
+
+    #[test]
+    fn exponential_mean_converges() {
+        let mut r = XorShift::new(11);
+        let n = 50_000;
+        let sum: f64 = (0..n).map(|_| r.exp(0.25)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn weighted_pick_respects_weights() {
+        let mut r = XorShift::new(5);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[r.pick_weighted(&[1.0, 2.0, 1.0])] += 1;
+        }
+        // Middle class has weight 1/2; the edges 1/4 each.
+        assert!((counts[1] as f64 / 30_000.0 - 0.5).abs() < 0.03);
+        assert!(counts[0] > 0 && counts[2] > 0);
+        // A zero-weight class is never drawn.
+        let mut r = XorShift::new(6);
+        for _ in 0..1000 {
+            assert_ne!(r.pick_weighted(&[1.0, 0.0]), 1);
+        }
+    }
+}

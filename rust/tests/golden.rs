@@ -1,0 +1,173 @@
+//! Golden regression tests: fixed-seed cluster runs whose fleet metrics
+//! are pinned to a checked-in snapshot at 1e-9 relative tolerance, so a
+//! silent cost-model drift (a changed latency constant, a reordered
+//! charge, an accidental f32 truncation) fails tier-1 instead of
+//! quietly skewing every experiment downstream.
+//!
+//! Snapshot lifecycle: `rust/tests/golden_values.txt` is written on the
+//! first run in an environment where it does not exist (the test passes
+//! and prints a notice — commit the file), and enforced thereafter.
+//! `FH_GOLDEN_REGEN=1 cargo test -q --test golden` regenerates it after
+//! an *intentional* cost-model change.
+
+use fenghuang::coordinator::{AutoscaleConfig, Cluster, ClusterConfig, ClusterReport};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::units::Bytes;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden_values.txt")
+}
+
+fn workload_cfg(requests: usize) -> TrafficConfig {
+    TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 10.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat+rag").unwrap(),
+        requests,
+        seed: 7,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    }
+}
+
+fn run(replicas: usize, cfg: ClusterConfig, requests: usize) -> ClusterReport {
+    let mut cluster = Cluster::fh4(replicas, &gpt3_175b(), cfg).expect("cluster");
+    let reqs = traffic::generate(&workload_cfg(requests)).expect("workload");
+    cluster.run(reqs).expect("run")
+}
+
+/// The pinned observables of one run, in a stable order.
+fn observe(prefix: &str, r: &ClusterReport, out: &mut BTreeMap<String, f64>) {
+    let m = |k: &str, v: f64| (format!("{prefix}.{k}"), v);
+    for (k, v) in [
+        m("completed", r.fleet.completed as f64),
+        m("makespan_s", r.makespan().value()),
+        m("p95_ttft_ms", r.fleet.ttft.percentile_ms(95.0)),
+        m("p95_tpot_ms", r.fleet.tpot.percentile_ms(95.0)),
+        m("paging_stall_s", r.fleet.paging_stall.value()),
+        m("imbalance", r.imbalance),
+        m("slo_attainment", r.fleet.slo_attainment()),
+        m("goodput_tok_s", r.fleet.goodput_tokens_per_s()),
+        m("replica_seconds", r.replica_seconds),
+    ] {
+        out.insert(k, v);
+    }
+}
+
+/// Every metric the snapshot pins, from fresh runs.
+fn current_metrics() -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    // Single replica under KV pressure: exercises the paging-stall path.
+    let single = run(
+        1,
+        ClusterConfig { kv_budget: Some(Bytes::gb(2.0)), ..Default::default() },
+        24,
+    );
+    assert!(single.fleet.paging_stall.value() > 0.0, "KV budget must bind");
+    observe("single", &single, &mut out);
+    // 4-replica elastic fleet: routing, autoscaling, SLO scoring.
+    let quad = run(
+        4,
+        ClusterConfig {
+            autoscale: Some(AutoscaleConfig { target_tokens: 1024, ..Default::default() }),
+            ..Default::default()
+        },
+        32,
+    );
+    observe("quad", &quad, &mut out);
+    out
+}
+
+fn render(metrics: &BTreeMap<String, f64>) -> String {
+    let mut s = String::from(
+        "# Golden fleet metrics (fixed seed 7; see rust/tests/golden.rs).\n\
+         # Regenerate intentionally with FH_GOLDEN_REGEN=1 cargo test -q --test golden\n",
+    );
+    for (k, v) in metrics {
+        writeln!(s, "{k} {v:.17e}").unwrap();
+    }
+    s
+}
+
+fn parse(text: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (k, v) = line.split_once(' ').expect("golden line is `key value`");
+        out.insert(k.to_string(), v.trim().parse().expect("golden value parses"));
+    }
+    out
+}
+
+#[test]
+fn cluster_runs_are_bitwise_deterministic() {
+    // The engine contract the snapshot relies on: same seed, same fleet
+    // → identical metrics within 1e-9 relative (in practice, bit-equal).
+    let a = current_metrics();
+    let b = current_metrics();
+    assert_eq!(a.len(), b.len());
+    for (k, va) in &a {
+        let vb = b[k];
+        let tol = 1e-9 * va.abs().max(1.0);
+        assert!(
+            (va - vb).abs() <= tol,
+            "{k} differs across identical runs: {va} vs {vb}"
+        );
+    }
+}
+
+#[test]
+fn fleet_metrics_match_golden_snapshot() {
+    let path = snapshot_path();
+    let current = current_metrics();
+    let regen = std::env::var_os("FH_GOLDEN_REGEN").is_some();
+    if regen || !path.exists() {
+        std::fs::write(&path, render(&current)).expect("write golden snapshot");
+        eprintln!(
+            "golden: {} snapshot at {} — commit it to pin the cost model",
+            if regen { "regenerated" } else { "created" },
+            path.display()
+        );
+        return;
+    }
+    let golden = parse(&std::fs::read_to_string(&path).expect("read golden snapshot"));
+    let mut drift = Vec::new();
+    for (k, want) in &golden {
+        match current.get(k) {
+            None => drift.push(format!("{k}: present in snapshot, missing from run")),
+            Some(got) => {
+                let tol = 1e-9 * want.abs().max(1e-9);
+                if (got - want).abs() > tol {
+                    drift.push(format!(
+                        "{k}: golden {want:.12e} vs current {got:.12e} \
+                         (rel {:.3e})",
+                        (got - want).abs() / want.abs().max(1e-300)
+                    ));
+                }
+            }
+        }
+    }
+    for k in current.keys() {
+        if !golden.contains_key(k) {
+            drift.push(format!(
+                "{k}: new metric not in snapshot (regenerate with FH_GOLDEN_REGEN=1)"
+            ));
+        }
+    }
+    assert!(
+        drift.is_empty(),
+        "cost model drifted from the golden snapshot \
+         (FH_GOLDEN_REGEN=1 to accept intentionally):\n{}",
+        drift.join("\n")
+    );
+}

@@ -1,21 +1,37 @@
 #!/usr/bin/env bash
 # Emit the machine-readable bench artifacts (BENCH_*.json at the repo
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
-# §Serve-Scale).
+# §Serve-Scale, §Traffic-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
+#   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 want="${1:-all}"
+
+case "$want" in
+    all|paging|serve|traffic) ;;
+    *)
+        echo "error: unknown target '$want' (expected: all, paging, serve or traffic)" >&2
+        exit 2
+        ;;
+esac
+if [[ $# -gt 1 ]]; then
+    echo "error: unexpected extra arguments: ${*:2} (one target at most)" >&2
+    exit 2
+fi
 
 if [[ "$want" == "all" || "$want" == "paging" ]]; then
     cargo bench --bench paging_sweep -- --json
 fi
 if [[ "$want" == "all" || "$want" == "serve" ]]; then
     cargo bench --bench serve_scale -- --json
+fi
+if [[ "$want" == "all" || "$want" == "traffic" ]]; then
+    cargo bench --bench traffic_sweep -- --json
 fi
 
 echo

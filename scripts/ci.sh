@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate, offline-safe (the crate is zero-dependency, so no
+# network is needed beyond a Rust toolchain):
+#
+#   1. release build + full test suite (the ROADMAP tier-1 contract);
+#   2. a --json --smoke run of every bench target, so the JSON emitters
+#      and every sweep's code path stay green without burning CI minutes
+#      on the full grids (heavy benches shrink under --smoke; cheap
+#      analytic benches ignore it).
+#
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh build      # build + tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+want="${1:-all}"
+case "$want" in
+    all|build) ;;
+    *)
+        echo "error: unknown target '$want' (expected: all or build)" >&2
+        exit 2
+        ;;
+esac
+if [[ $# -gt 1 ]]; then
+    echo "error: unexpected extra arguments: ${*:2} (one target at most)" >&2
+    exit 2
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+# The golden regression floor only binds across checkouts once the
+# snapshot the first test run generates is committed (rust/tests/golden.rs).
+if [[ -f rust/tests/golden_values.txt ]] && command -v git >/dev/null \
+    && ! git ls-files --error-unmatch rust/tests/golden_values.txt >/dev/null 2>&1; then
+    echo "notice: rust/tests/golden_values.txt was generated but is NOT committed —"
+    echo "        commit it so golden.rs compares instead of re-seeding every checkout."
+fi
+
+if [[ "$want" == "build" ]]; then
+    exit 0
+fi
+
+BENCHES=(
+    ablations
+    collective_speedup
+    fig1_trends
+    fig2_hw_trends
+    fig2_model_trends
+    fig4_workloads
+    paging_sweep
+    perf_hotpath
+    serve_scale
+    tab_latency
+    traffic_sweep
+)
+for b in "${BENCHES[@]}"; do
+    echo "== bench smoke: $b =="
+    cargo bench --bench "$b" -- --json --smoke
+done
+
+echo
+echo "smoke artifacts:"
+ls -l BENCH_*.json
