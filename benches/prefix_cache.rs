@@ -1,0 +1,184 @@
+//! Bench target: shared prefix-KV cache sweep
+//! (EXPERIMENTS.md §Prefix-Cache).
+//!
+//! Mix × pool-share × paper-workload grid on a 4-replica FH4 fleet:
+//! each cell serves the same seeded open-loop stream with the cache off
+//! (the baseline — bit-identical to the pre-cache serving path) and on,
+//! and reports hit rate, prefill tokens saved, the token-weighted
+//! prefill-compute saving, and the measured makespan delta. A second
+//! section ablates the NMC gather path (in-pool KV reads elide the
+//! page-in, collapsing the fetch to the fixed command latency).
+//!
+//! `cargo bench --bench prefix_cache -- --json` writes
+//! `BENCH_prefix_cache.json` at the repo root (scripts/bench_json.sh);
+//! `-- --smoke` (scripts/ci.sh) shrinks the grid to a CI-sized run.
+
+mod common;
+
+use fenghuang::coordinator::{
+    Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig,
+};
+use fenghuang::models::arch::{gpt3_175b, grok1, qwen3_235b, ModelArch};
+use fenghuang::traffic::{self, TrafficConfig, WorkloadMix};
+
+const SEED: u64 = 7;
+const REPLICAS: usize = 4;
+
+fn traffic(model: &ModelArch, mix: &str, requests: usize) -> TrafficConfig {
+    TrafficConfig {
+        mix: WorkloadMix::parse(mix).expect("mix"),
+        requests,
+        seed: SEED,
+        max_prompt: model.max_seq as usize,
+        ..Default::default()
+    }
+}
+
+fn run(model: &ModelArch, cfg: ClusterConfig, tc: &TrafficConfig) -> ClusterReport {
+    let mut cluster = Cluster::fh4(REPLICAS, model, cfg).expect("cluster");
+    cluster.run(traffic::generate(tc).expect("workload")).expect("run")
+}
+
+fn cached_cfg(pool_share: f64, nmc: bool) -> ClusterConfig {
+    ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig { pool_share, nmc_gather: nmc, ..Default::default() }),
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    let models: Vec<ModelArch> = if smoke {
+        vec![gpt3_175b()]
+    } else {
+        vec![gpt3_175b(), grok1(), qwen3_235b()]
+    };
+    // `agentic` is the reuse-heavy workload the cache is built for;
+    // `chat+agentic` dilutes it with one-shot traffic; `chat+rag` is the
+    // no-reuse control (every prefix unique → hit rate ≈ 0).
+    let mixes: &[&str] =
+        if smoke { &["agentic"] } else { &["agentic", "chat+agentic", "chat+rag"] };
+    let shares: &[f64] = if smoke { &[0.05] } else { &[0.01, 0.05, 0.25] };
+    let requests = if smoke { 12 } else { 48 };
+
+    println!(
+        "== prefix-cache sweep ({REPLICAS} replicas, {requests} requests, seed {SEED}) =="
+    );
+    println!(
+        "model     mix            share  hit%   tok-hit%  saved-tok  compute-sav%  \
+         makespan-sav%  pool-peak(GB)  evict"
+    );
+    for model in &models {
+        for mix in mixes {
+            let tc = traffic(model, mix, requests);
+            // The no-cache baseline: the pre-cache serving path, run
+            // twice to prove the off-configuration is bit-stable.
+            let base = run(model, ClusterConfig::default(), &tc);
+            let base2 = run(model, ClusterConfig::default(), &tc);
+            assert_eq!(
+                base.makespan(),
+                base2.makespan(),
+                "no-cache serving must be bit-identical across runs"
+            );
+            assert_eq!(base.fleet.prefill_tokens_saved, 0);
+            for &share in shares {
+                let r = run(model, cached_cfg(share, false), &tc);
+                let pc = r.prefix_cache.expect("cache report");
+                assert_eq!(
+                    r.fleet.completed, base.fleet.completed,
+                    "the cache must not lose requests"
+                );
+                if *mix == "agentic" && requests > 8 {
+                    // > sessions requests of a pooled class: pigeonhole
+                    // guarantees a repeated session, hence a hit.
+                    assert!(pc.hits > 0, "agentic mix must hit the shared prefix");
+                    assert!(r.fleet.prefill_tokens_saved > 0);
+                }
+                let makespan_saving =
+                    1.0 - r.makespan().value() / base.makespan().value().max(1e-12);
+                println!(
+                    "{:<9} {:<14} {:>5.2} {:>5.1}  {:>8.1}  {:>9}  {:>12.1}  {:>13.1}  {:>13.3}  {:>5}",
+                    model.name,
+                    mix,
+                    share,
+                    100.0 * pc.hit_rate,
+                    100.0 * pc.token_hit_rate,
+                    r.fleet.prefill_tokens_saved,
+                    100.0 * r.prefill_compute_saving(),
+                    100.0 * makespan_saving,
+                    pc.pool_bytes_peak.as_gb(),
+                    pc.evicted_tokens,
+                );
+                json_rows.push(format!(
+                    "{{\"section\": \"sweep\", \"model\": {}, \"mix\": {}, \
+                     \"pool_share\": {share}, \"requests\": {requests}, \
+                     \"hit_rate\": {:.6}, \"token_hit_rate\": {:.6}, \
+                     \"prefill_tokens_saved\": {}, \"prefill_tokens\": {}, \
+                     \"compute_saving_frac\": {:.6}, \"makespan_saving_frac\": {:.6}, \
+                     \"base_makespan_s\": {:.9}, \"cached_makespan_s\": {:.9}, \
+                     \"fetch_ms\": {:.6}, \"pool_peak_gb\": {:.6}, \
+                     \"evicted_tokens\": {}, \"completed\": {}}}",
+                    common::json_str(&model.name),
+                    common::json_str(mix),
+                    pc.hit_rate,
+                    pc.token_hit_rate,
+                    r.fleet.prefill_tokens_saved,
+                    r.fleet.prefill_tokens,
+                    r.prefill_compute_saving(),
+                    makespan_saving,
+                    base.makespan().value(),
+                    r.makespan().value(),
+                    r.fleet.prefix_fetch.as_ms(),
+                    pc.pool_bytes_peak.as_gb(),
+                    pc.evicted_tokens,
+                    r.fleet.completed,
+                ));
+            }
+            // Determinism of the cached path: repeat one share.
+            let a = run(model, cached_cfg(shares[0], false), &tc);
+            let b = run(model, cached_cfg(shares[0], false), &tc);
+            assert_eq!(a.makespan(), b.makespan(), "cached serving must be deterministic");
+            assert_eq!(a.fleet.prefill_tokens_saved, b.fleet.prefill_tokens_saved);
+        }
+    }
+
+    // ---- NMC gather ablation --------------------------------------------
+    // Same stream, same pool share; only the fetch path changes: staged
+    // page-in (Eq 3.1 serialization) vs in-pool gather (fixed latency).
+    println!("\n== NMC gather ablation (agentic, share 0.25) ==");
+    for model in &models {
+        let tc = traffic(model, "agentic", requests);
+        let staged = run(model, cached_cfg(0.25, false), &tc);
+        let gathered = run(model, cached_cfg(0.25, true), &tc);
+        assert_eq!(
+            staged.fleet.prefill_tokens_saved,
+            gathered.fleet.prefill_tokens_saved,
+            "the gather path changes fetch cost, not hit structure"
+        );
+        assert!(
+            gathered.fleet.prefix_fetch <= staged.fleet.prefix_fetch,
+            "eliding the page-in cannot cost more"
+        );
+        println!(
+            "{:<9} staged fetch {:>9.3} ms | nmc-gather fetch {:>9.3} ms | saved tokens {}",
+            model.name,
+            staged.fleet.prefix_fetch.as_ms(),
+            gathered.fleet.prefix_fetch.as_ms(),
+            staged.fleet.prefill_tokens_saved,
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"nmc\", \"model\": {}, \"staged_fetch_ms\": {:.6}, \
+             \"gather_fetch_ms\": {:.6}, \"prefill_tokens_saved\": {}}}",
+            common::json_str(&model.name),
+            staged.fleet.prefix_fetch.as_ms(),
+            gathered.fleet.prefix_fetch.as_ms(),
+            staged.fleet.prefill_tokens_saved,
+        ));
+    }
+
+    if common::json_requested() {
+        common::write_rows_json("prefix_cache", &json_rows);
+    }
+}

@@ -11,7 +11,7 @@
 
 use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
 use fenghuang::coordinator::router::Policy;
-use fenghuang::coordinator::AutoscaleConfig;
+use fenghuang::coordinator::{AutoscaleConfig, PrefixCacheConfig};
 use fenghuang::models::arch::gpt3_175b;
 use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::Seconds;
@@ -75,6 +75,36 @@ fn main() -> fenghuang::Result<()> {
         "elastic saving vs static: {:.1}% of replica-seconds at attainment {:.1}%",
         100.0 * (1.0 - ra.replica_seconds / rs.replica_seconds.max(1e-12)),
         100.0 * ra.fleet.slo_attainment(),
+    );
+
+    println!("== shared prefix-KV cache: agentic sessions, cache off vs on ==");
+    // Multi-turn agentic traffic re-sends its growing conversation head
+    // every turn; the shared cache in the TAB pool serves that prefix to
+    // *any* replica, so prefill compute shrinks fleet-wide
+    // (DESIGN.md §Prefix-Cache).
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").expect("mix"),
+        requests: 48,
+        seed: 7,
+        max_prompt: model.max_seq as usize,
+        ..Default::default()
+    };
+    let mut plain = Cluster::fh4(4, &model, ClusterConfig::default())?;
+    let rp = plain.run(traffic::generate(&tc)?)?;
+    println!("-- cache off --\n{}", rp.summary());
+    let cfg = ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        ..Default::default()
+    };
+    let mut cached = Cluster::fh4(4, &model, cfg)?;
+    let rc = cached.run(traffic::generate(&tc)?)?;
+    println!("-- cache on --\n{}", rc.summary());
+    println!(
+        "prefix cache: {:.1}% of prefill tokens served from the pool | \
+         makespan {:.3}s → {:.3}s",
+        100.0 * rc.prefill_compute_saving(),
+        rp.makespan().value(),
+        rc.makespan().value(),
     );
     Ok(())
 }

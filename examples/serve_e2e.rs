@@ -67,7 +67,7 @@ fn main() -> fenghuang::Result<()> {
             prompt: (0..40).map(|i| ((id as usize * 17 + i * 3) % meta.vocab) as i32).collect(),
             max_new_tokens: 8,
             arrival: Seconds::ZERO,
-            slo: None,
+            ..Default::default()
         })
         .collect();
     sched.submit_all(reqs);

@@ -1,0 +1,410 @@
+//! CLI flag parsing for the `fenghuang` binary — extracted into the
+//! library so the per-subcommand whitelists, bare-switch handling, and
+//! conflict rules are unit-testable (`cargo test` covers what a typo'd
+//! flag does *before* a user hits it).
+//!
+//! Arg parsing is hand-rolled; the offline build environment has no clap
+//! (DESIGN.md §1). Every subcommand validates its flag set: unknown
+//! flags and out-of-range values fail with actionable messages instead
+//! of silently falling back to defaults.
+
+use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
+use crate::coordinator::prefix_cache::PrefixCacheConfig;
+use crate::error::{FhError, Result};
+use crate::units::{Bandwidth, Bytes};
+use std::collections::HashMap;
+
+/// Flags understood by `fenghuang simulate`.
+pub const SIMULATE_FLAGS: &[&str] = &["model", "system", "remote-tbps", "batch", "prompt", "gen"];
+
+/// Flags understood by `fenghuang serve`.
+pub const SERVE_FLAGS: &[&str] = &[
+    "model",
+    "requests",
+    "max-batch",
+    "replicas",
+    "policy",
+    "disaggregate",
+    "sessions",
+    "kv-budget-gb",
+    "prefix-cache",
+    "prefix-cache-gb",
+    "qps",
+    "pattern",
+    "mix",
+    "slo-ttft-ms",
+    "slo-tpot-ms",
+    "autoscale",
+    "autoscale-min",
+    "shed-tokens",
+    "seed",
+];
+
+/// Serve flags that may appear without a value (`--autoscale` ≡
+/// `--autoscale on`, `--prefix-cache` ≡ `--prefix-cache on`).
+pub const SERVE_BARE: &[&str] = &["autoscale", "prefix-cache"];
+
+/// Any of these flags routes `serve` through the open-loop traffic
+/// engine instead of the legacy fixed-gap workload.
+pub const TRAFFIC_FLAGS: &[&str] = &[
+    "qps",
+    "pattern",
+    "mix",
+    "slo-ttft-ms",
+    "slo-tpot-ms",
+    "autoscale",
+    "autoscale-min",
+    "shed-tokens",
+    "seed",
+];
+
+/// Flags understood by `fenghuang page`.
+pub const PAGE_FLAGS: &[&str] = &[
+    "model",
+    "system",
+    "remote-tbps",
+    "batch",
+    "phase",
+    "kv-len",
+    "prompt",
+    "local-gb",
+    "policy",
+    "window",
+    "steps",
+    "page-mib",
+    "pin-frac",
+    "page-kv",
+    "nmc",
+];
+
+pub fn cli_err(msg: String) -> FhError {
+    FhError::Config(msg)
+}
+
+/// Parse `--key value` pairs after the subcommand, rejecting flags the
+/// subcommand does not understand (a typo'd flag must not silently fall
+/// back to a default). Flags listed in `bare` are switches: they may
+/// stand alone (`--autoscale`), in which case they read as "on".
+pub fn parse_flags(
+    cmd: &str,
+    args: &[String],
+    allowed: &[&str],
+    bare: &[&str],
+) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = &args[i];
+        if !k.starts_with("--") {
+            return Err(cli_err(format!("unexpected argument '{k}' (flags are --key value)")));
+        }
+        let key = k.trim_start_matches("--").to_string();
+        if !allowed.contains(&key.as_str()) {
+            let mut expected: Vec<String> =
+                allowed.iter().map(|a| format!("--{a}")).collect();
+            expected.sort();
+            return Err(cli_err(format!(
+                "unknown flag --{key} for '{cmd}' (expected one of: {})",
+                expected.join(", ")
+            )));
+        }
+        let next = args.get(i + 1);
+        if bare.contains(&key.as_str()) && next.map_or(true, |v| v.starts_with("--")) {
+            flags.insert(key, "on".to_string());
+            i += 1;
+            continue;
+        }
+        let v = next.ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
+        flags.insert(key, v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+/// Typed flag lookup with a default.
+pub fn flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    default: T,
+) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match flags.get(key) {
+        Some(v) => v.parse().map_err(|e| cli_err(format!("--{key}: {e}"))),
+        None => Ok(default),
+    }
+}
+
+/// A flag that must parse to a value ≥ 1 (counts, sizes).
+pub fn positive<T>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
+where
+    T: std::str::FromStr + PartialOrd + From<u8> + std::fmt::Display,
+    T::Err: std::fmt::Display,
+{
+    let v = flag(flags, key, default)?;
+    if v < T::from(1u8) {
+        return Err(cli_err(format!("--{key} must be ≥ 1, got {v}")));
+    }
+    Ok(v)
+}
+
+/// An on/off switch flag (absent = off; bare = on via [`parse_flags`]).
+pub fn switch(flags: &HashMap<String, String>, key: &str) -> Result<bool> {
+    match flags.get(key).map(|s| s.to_ascii_lowercase()) {
+        None => Ok(false),
+        Some(v) => match v.as_str() {
+            "on" | "true" | "1" | "yes" => Ok(true),
+            "off" | "false" | "0" | "no" => Ok(false),
+            other => Err(cli_err(format!("--{key} wants on|off, got '{other}'"))),
+        },
+    }
+}
+
+/// Resolve a `--system` preset name.
+pub fn system_by_name(name: &str, remote_tbps: f64) -> Result<SystemConfig> {
+    let bw = Bandwidth::tbps(remote_tbps);
+    match name.to_ascii_lowercase().as_str() {
+        "baseline8" => Ok(baseline8()),
+        "fh4-1.5xm" | "fh4_15xm" => Ok(fh4_15xm(bw)),
+        "fh4-2.0xm" | "fh4_20xm" => Ok(fh4_20xm(bw)),
+        other => Err(cli_err(format!(
+            "unknown system preset '{other}' (expected baseline8, fh4-1.5xm or fh4-2.0xm)"
+        ))),
+    }
+}
+
+/// Parse `--disaggregate P:D` (prefill:decode pool sizes).
+pub fn parse_disaggregate(v: &str) -> Result<(usize, usize)> {
+    let (p, d) = v
+        .split_once(':')
+        .ok_or_else(|| cli_err(format!("--disaggregate wants P:D, got '{v}'")))?;
+    let p: usize = p.parse().map_err(|e| cli_err(format!("--disaggregate prefill: {e}")))?;
+    let d: usize = d.parse().map_err(|e| cli_err(format!("--disaggregate decode: {e}")))?;
+    if p == 0 || d == 0 {
+        return Err(cli_err(format!(
+            "--disaggregate pools must be non-empty, got {p}:{d}"
+        )));
+    }
+    Ok((p, d))
+}
+
+/// Reject an explicit `--replicas` that contradicts `--disaggregate P:D`
+/// (the pools define the fleet; a conflicting count must not be silently
+/// ignored).
+pub fn check_disaggregate_replicas(
+    flags: &HashMap<String, String>,
+    replicas: usize,
+    (p, d): (usize, usize),
+) -> Result<()> {
+    if flags.contains_key("replicas") && p + d != replicas {
+        return Err(cli_err(format!(
+            "--replicas {replicas} conflicts with --disaggregate {p}:{d} \
+             (the pools make a {}-replica fleet; drop --replicas or make them agree)",
+            p + d
+        )));
+    }
+    Ok(())
+}
+
+/// Build the shared prefix-cache config from `--prefix-cache [on|off]`
+/// and `--prefix-cache-gb G` (DESIGN.md §Prefix-Cache). A bare
+/// `--prefix-cache` enables the default pool share; `--prefix-cache-gb`
+/// both enables the cache and pins its capacity; an explicit
+/// `--prefix-cache off` alongside a capacity is a conflict.
+pub fn parse_prefix_cache(flags: &HashMap<String, String>) -> Result<Option<PrefixCacheConfig>> {
+    let explicit = flags.contains_key("prefix-cache");
+    let on = switch(flags, "prefix-cache")?;
+    let capacity = match flags.get("prefix-cache-gb") {
+        Some(v) => {
+            let gb: f64 =
+                v.parse().map_err(|e| cli_err(format!("--prefix-cache-gb: {e}")))?;
+            if gb <= 0.0 {
+                return Err(cli_err(format!("--prefix-cache-gb must be > 0, got {gb}")));
+            }
+            if explicit && !on {
+                return Err(cli_err(
+                    "--prefix-cache-gb conflicts with --prefix-cache off".into(),
+                ));
+            }
+            Some(Bytes::gb(gb))
+        }
+        None => None,
+    };
+    if !on && capacity.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(PrefixCacheConfig { capacity, ..Default::default() }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_flags_fail_with_the_whitelist() {
+        let e = parse_flags("serve", &args(&["--replica", "4"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("unknown flag --replica"), "{msg}");
+        assert!(msg.contains("--replicas"), "message must list valid flags: {msg}");
+        // Non-flag positional arguments are rejected too.
+        let e = parse_flags("serve", &args(&["gpt3"]), SERVE_FLAGS, SERVE_BARE).unwrap_err();
+        assert!(e.to_string().contains("unexpected argument"), "{e}");
+        // A value-taking flag at the end of the line needs its value.
+        let e = parse_flags("serve", &args(&["--model"]), SERVE_FLAGS, SERVE_BARE).unwrap_err();
+        assert!(e.to_string().contains("needs a value"), "{e}");
+    }
+
+    #[test]
+    fn bare_switches_read_as_on() {
+        let f = parse_flags(
+            "serve",
+            &args(&["--autoscale", "--replicas", "4"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert_eq!(f.get("autoscale").map(String::as_str), Some("on"));
+        assert_eq!(f.get("replicas").map(String::as_str), Some("4"));
+        assert!(switch(&f, "autoscale").unwrap());
+        // Trailing bare switch.
+        let f = parse_flags("serve", &args(&["--prefix-cache"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert!(switch(&f, "prefix-cache").unwrap());
+        // Explicit value still accepted.
+        let f = parse_flags(
+            "serve",
+            &args(&["--prefix-cache", "off"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert!(!switch(&f, "prefix-cache").unwrap());
+        // Garbage switch values are rejected.
+        let f = parse_flags(
+            "serve",
+            &args(&["--autoscale", "sideways"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert!(switch(&f, "autoscale").is_err());
+    }
+
+    #[test]
+    fn typed_and_positive_flags_validate() {
+        let f = parse_flags("serve", &args(&["--requests", "12"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert_eq!(positive::<usize>(&f, "requests", 64).unwrap(), 12);
+        assert_eq!(positive::<usize>(&f, "replicas", 3).unwrap(), 3, "default passes through");
+        let f = parse_flags("serve", &args(&["--requests", "0"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert!(positive::<usize>(&f, "requests", 64).is_err());
+        let f = parse_flags("serve", &args(&["--requests", "many"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert!(flag::<usize>(&f, "requests", 64).is_err());
+    }
+
+    #[test]
+    fn disaggregate_parses_and_conflicts_with_replicas() {
+        assert_eq!(parse_disaggregate("2:2").unwrap(), (2, 2));
+        assert_eq!(parse_disaggregate("1:7").unwrap(), (1, 7));
+        assert!(parse_disaggregate("4").is_err());
+        assert!(parse_disaggregate("0:4").is_err());
+        assert!(parse_disaggregate("2:0").is_err());
+        assert!(parse_disaggregate("a:b").is_err());
+        // Explicit but agreeing --replicas is fine; disagreeing is not;
+        // absent --replicas never conflicts.
+        let f = parse_flags(
+            "serve",
+            &args(&["--replicas", "4", "--disaggregate", "2:2"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert!(check_disaggregate_replicas(&f, 4, (2, 2)).is_ok());
+        assert!(check_disaggregate_replicas(&f, 4, (3, 2)).is_err());
+        let f = parse_flags("serve", &args(&["--disaggregate", "3:2"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert!(check_disaggregate_replicas(&f, 1, (3, 2)).is_ok());
+    }
+
+    #[test]
+    fn prefix_cache_flags_build_the_config() {
+        // Absent → no cache.
+        let f = parse_flags("serve", &args(&[]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        assert!(parse_prefix_cache(&f).unwrap().is_none());
+        // Bare switch → defaults (pool-share capacity).
+        let f = parse_flags("serve", &args(&["--prefix-cache"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        let pc = parse_prefix_cache(&f).unwrap().unwrap();
+        assert!(pc.capacity.is_none());
+        assert!((pc.pool_share - PrefixCacheConfig::default().pool_share).abs() < 1e-12);
+        // Explicit capacity implies the cache.
+        let f = parse_flags(
+            "serve",
+            &args(&["--prefix-cache-gb", "32"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let pc = parse_prefix_cache(&f).unwrap().unwrap();
+        assert_eq!(pc.capacity, Some(Bytes::gb(32.0)));
+        // Explicit off keeps it off; off + capacity is a conflict.
+        let f = parse_flags(
+            "serve",
+            &args(&["--prefix-cache", "off"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert!(parse_prefix_cache(&f).unwrap().is_none());
+        let f = parse_flags(
+            "serve",
+            &args(&["--prefix-cache", "off", "--prefix-cache-gb", "8"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        assert!(parse_prefix_cache(&f).is_err());
+        // Bad capacities are rejected.
+        for bad in ["0", "-3", "plenty"] {
+            let f = parse_flags(
+                "serve",
+                &args(&["--prefix-cache-gb", bad]),
+                SERVE_FLAGS,
+                SERVE_BARE,
+            )
+            .unwrap();
+            assert!(parse_prefix_cache(&f).is_err(), "--prefix-cache-gb {bad} must fail");
+        }
+    }
+
+    #[test]
+    fn system_presets_resolve_case_insensitively() {
+        assert_eq!(system_by_name("baseline8", 4.8).unwrap().name, "Baseline8");
+        assert_eq!(system_by_name("FH4-1.5xM", 4.8).unwrap().name, "FH4-1.5xM");
+        assert_eq!(system_by_name("fh4_20xm", 6.4).unwrap().name, "FH4-2.0xM");
+        assert!(system_by_name("tpu-pod", 4.8).is_err());
+    }
+
+    #[test]
+    fn whitelists_cover_the_documented_surface() {
+        // The traffic selector flags must all be valid serve flags, and
+        // every bare switch must be in the whitelist too — otherwise a
+        // documented flag would be unreachable.
+        for k in TRAFFIC_FLAGS {
+            assert!(SERVE_FLAGS.contains(k), "--{k} missing from SERVE_FLAGS");
+        }
+        for k in SERVE_BARE {
+            assert!(SERVE_FLAGS.contains(k), "--{k} missing from SERVE_FLAGS");
+        }
+        assert!(SERVE_FLAGS.contains(&"prefix-cache"));
+        assert!(SERVE_FLAGS.contains(&"prefix-cache-gb"));
+    }
+}

@@ -61,7 +61,10 @@ impl Batcher {
         }
         let n = room.min(self.max_batch).min(self.queue.len());
         let requests: Vec<Request> = self.queue.drain(..n).collect();
-        let longest = requests.iter().map(|r| r.prompt_len()).max().unwrap_or(1);
+        // Padding follows the *prefill* length: tokens served from the
+        // shared prefix cache (DESIGN.md §Prefix-Cache) never enter the
+        // prefill kernel, so they must not inflate the tile either.
+        let longest = requests.iter().map(|r| r.prefill_len()).max().unwrap_or(1);
         let padded_len = longest.div_ceil(self.tile) * self.tile;
         Some(PrefillBatch { requests, padded_len })
     }
@@ -73,7 +76,13 @@ mod tests {
     use crate::units::Seconds;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, prompt: vec![1; len], max_new_tokens: 4, arrival: Seconds::ZERO, slo: None }
+        Request {
+            id,
+            prompt: vec![1; len],
+            max_new_tokens: 4,
+            arrival: Seconds::ZERO,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -110,6 +119,21 @@ mod tests {
         b.submit(req(1, 70));
         let batch = b.next_batch(4).unwrap();
         assert_eq!(batch.padded_len, 128);
+    }
+
+    #[test]
+    fn padding_follows_prefill_length_under_cache_hits() {
+        let mut b = Batcher::new(4, 64, 4096);
+        let mut hit = req(0, 1000);
+        hit.cached_prefix = 960; // 40 tokens left to prefill
+        b.submit(hit);
+        b.submit(req(1, 50));
+        let batch = b.next_batch(4).unwrap();
+        assert_eq!(batch.padded_len, 64, "cached tokens must not inflate the tile");
+        // Admission still judges the full prompt (KV must fit max_seq).
+        let mut long = req(2, 5000);
+        long.cached_prefix = 4990;
+        assert!(!b.admits(&long));
     }
 
     #[test]

@@ -27,6 +27,7 @@
 use super::batcher::Batcher;
 use super::engine::SimBackend;
 use super::metrics::Metrics;
+use super::prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport};
 use super::request::Request;
 use super::router::{Policy, Router};
 use super::scheduler::{SchedMode, Scheduler};
@@ -87,6 +88,10 @@ pub struct ClusterConfig {
     /// Elastic serving: `Some` lets the fleet breathe with the traffic
     /// curve (aggregated topologies only).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Shared prefix-KV cache in the TAB pool (DESIGN.md §Prefix-Cache):
+    /// KV produced by any replica becomes reusable by every replica.
+    /// Requires a FengHuang (TAB) fabric.
+    pub prefix_cache: Option<PrefixCacheConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -98,6 +103,7 @@ impl Default for ClusterConfig {
             kv_budget: None,
             shed_tokens: None,
             autoscale: None,
+            prefix_cache: None,
         }
     }
 }
@@ -137,6 +143,8 @@ pub struct ClusterReport {
     /// Peak KV bytes spilled to the remote tier on any replica (the
     /// fleet stall total lives in `fleet.paging_stall`).
     pub kv_spilled_peak: Bytes,
+    /// Shared prefix-cache observables (None when the cache is off).
+    pub prefix_cache: Option<PrefixCacheReport>,
     /// Whether the elastic autoscaler drove this run.
     pub elastic: bool,
     /// Provisioned capacity: ∫ active-replica-count dt over the run —
@@ -162,6 +170,13 @@ impl ClusterReport {
     /// What the same run would have cost fully provisioned.
     pub fn static_replica_seconds(&self) -> f64 {
         self.per_replica.len() as f64 * self.makespan().value()
+    }
+
+    /// Fraction of demanded prefill tokens the shared prefix cache kept
+    /// off the GPUs (0 without the cache); see
+    /// [`Metrics::prefill_compute_saving`].
+    pub fn prefill_compute_saving(&self) -> f64 {
+        self.fleet.prefill_compute_saving()
     }
 
     /// Fractional replica-seconds saved vs the static fleet (the
@@ -216,6 +231,23 @@ impl ClusterReport {
                 self.kv_spilled_peak.as_gb()
             ));
         }
+        if let Some(pc) = &self.prefix_cache {
+            s.push_str(&format!(
+                "prefix-cache: hit-rate {:.1}% ({}/{} probes) | {} tokens reused | \
+                 prefill compute saving {:.1}% | pool {:.2}/{:.2} GB held (peak {:.2}) | \
+                 {} extents, {} evicted\n",
+                100.0 * pc.hit_rate,
+                pc.hits,
+                pc.lookups,
+                pc.hit_tokens,
+                100.0 * self.prefill_compute_saving(),
+                pc.pool_bytes_held.as_gb(),
+                pc.capacity.as_gb(),
+                pc.pool_bytes_peak.as_gb(),
+                pc.entries,
+                pc.evicted_tokens,
+            ));
+        }
         if self.elastic {
             s.push_str(&format!(
                 "elastic: {:.1} replica-s provisioned vs {:.1} static ({:.1}% saving, \
@@ -255,6 +287,9 @@ pub struct Cluster {
     rejected: u64,
     /// Requests dropped by overload shedding (`ClusterConfig::shed_tokens`).
     shed: u64,
+    /// Cluster-wide shared prefix-KV cache in the TAB pool — one
+    /// instance serving every replica (DESIGN.md §Prefix-Cache).
+    prefix_cache: Option<PrefixCache>,
     /// Current active-set size (== fleet size without an autoscaler).
     active: usize,
     /// ∫ active dt accumulator and its last accounting timestamp.
@@ -286,6 +321,12 @@ impl Cluster {
                 (p, p)
             }
             None => (systems.len(), systems.len()),
+        };
+        // The shared cache lives in the pool of the (homogeneous) rack;
+        // its geometry comes from the first replica's node config.
+        let prefix_cache = match cfg.prefix_cache {
+            Some(pc) => Some(PrefixCache::new(pc, &systems[0], model)?),
+            None => None,
         };
         let mut replicas = Vec::with_capacity(systems.len());
         let mut names = Vec::with_capacity(systems.len());
@@ -348,6 +389,7 @@ impl Cluster {
             handoff_time: Seconds::ZERO,
             rejected: 0,
             shed: 0,
+            prefix_cache,
             active,
             replica_seconds: 0.0,
             last_account: Seconds::ZERO,
@@ -474,7 +516,7 @@ impl Cluster {
     /// Serve a workload to completion and produce the fleet report.
     pub fn run(&mut self, mut reqs: Vec<Request>) -> Result<ClusterReport> {
         reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-        for req in reqs {
+        for mut req in reqs {
             // Autoscaler decisions fire on their own cadence, interleaved
             // in virtual-time order with the arrivals.
             if let Some(a) = self.cfg.autoscale {
@@ -495,13 +537,23 @@ impl Cluster {
                     continue;
                 }
             }
+            // Shared prefix-cache probe (DESIGN.md §Prefix-Cache): the
+            // longest cached prefix of this prompt skips prefill compute
+            // and is fetched from the pool instead. The probe also names
+            // the replica with warm local pages so least-loaded routing
+            // can prefer it before falling back to the shared pool.
+            let hit = match self.prefix_cache.as_mut() {
+                Some(pc) => pc.lookup(&req.prompt),
+                None => super::prefix_cache::PrefixHit::MISS,
+            };
+            let warm = if hit.tokens > 0 { hit.replica } else { None };
             // Aggregated replicas own prompt + generation; a prefill pool
             // member only owns the prompt (+1 first token) until handoff.
             let charged = match self.cfg.disaggregate {
                 Some(_) => (req.prompt_len() + 1) as u64,
                 None => req.work_tokens(),
             };
-            let idx = self.router.route_work(req.affinity_key(), charged);
+            let idx = self.router.route_work_warm(req.affinity_key(), charged, warm);
             // Admission control: a request the target replica's batcher
             // would refuse must not keep its routing charge (the load
             // would never be released and would repel least-loaded and
@@ -510,6 +562,14 @@ impl Cluster {
                 self.router.unroute(idx, charged);
                 self.rejected += 1;
                 continue;
+            }
+            if let Some(pc) = self.prefix_cache.as_mut() {
+                req.cached_prefix = hit.tokens;
+                req.prefix_fetch = hit.fetch;
+                // Publish this request's prefix KV: produced into the
+                // pool by `idx`, visible to every replica from the next
+                // arrival on (publication is metadata-only on TAB).
+                pc.insert(&req.prompt, idx);
             }
             self.replicas[idx].submit_all(vec![req]);
         }
@@ -600,6 +660,7 @@ impl Cluster {
             model: self.model.name.clone(),
             policy: self.cfg.policy,
             kv_spilled_peak,
+            prefix_cache: self.prefix_cache.as_ref().map(|pc| pc.report()),
             fleet,
             per_replica,
             imbalance: self.router.imbalance(),
@@ -648,7 +709,7 @@ pub fn session_workload(
             prompt: tokens,
             max_new_tokens: gen,
             arrival: t,
-            slo: None,
+            ..Default::default()
         });
     }
     out
@@ -656,6 +717,7 @@ pub fn session_workload(
 
 /// `fenghuang serve --replicas N`: run a multi-session workload on an
 /// FH4 rack and return the fleet summary.
+#[allow(clippy::too_many_arguments)]
 pub fn demo_serve_cluster(
     model: &ModelArch,
     requests: usize,
@@ -665,6 +727,7 @@ pub fn demo_serve_cluster(
     disaggregate: Option<(usize, usize)>,
     sessions: usize,
     kv_budget: Option<Bytes>,
+    prefix_cache: Option<PrefixCacheConfig>,
 ) -> Result<String> {
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     let cfg = ClusterConfig {
@@ -672,6 +735,7 @@ pub fn demo_serve_cluster(
         max_batch,
         disaggregate,
         kv_budget,
+        prefix_cache,
         ..Default::default()
     };
     let mut cluster = Cluster::fh4(total, model, cfg)?;
@@ -859,11 +923,92 @@ mod tests {
 
     #[test]
     fn demo_serve_cluster_reports_fleet_percentiles() {
-        let s = demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4, None)
-            .unwrap();
+        let s =
+            demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4, None, None)
+                .unwrap();
         assert!(s.contains("completed 12"), "{s}");
         assert!(s.contains("p99"), "{s}");
         assert!(s.contains("load imbalance"), "{s}");
+        assert!(!s.contains("prefix-cache"), "cache off → silent summary\n{s}");
+        // With the cache on, sessions share their affinity prefixes and
+        // the summary reports reuse.
+        let s = demo_serve_cluster(
+            &gpt3_175b(),
+            12,
+            4,
+            2,
+            Policy::KvAffinity,
+            None,
+            4,
+            None,
+            Some(PrefixCacheConfig::default()),
+        )
+        .unwrap();
+        assert!(s.contains("completed 12"), "{s}");
+        assert!(s.contains("prefix-cache: hit-rate"), "{s}");
+    }
+
+    #[test]
+    fn prefix_cache_reuses_session_prefixes_across_replicas() {
+        use crate::traffic::{ClassKind, TrafficConfig, WorkloadMix};
+        let tc = TrafficConfig {
+            mix: WorkloadMix::of(ClassKind::Agentic),
+            requests: 40,
+            seed: 11,
+            max_prompt: gpt3_175b().max_seq as usize,
+            slo: None,
+            ..Default::default()
+        };
+        let reqs = || crate::traffic::generate(&tc).unwrap();
+        let cached_cfg = || ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            ..Default::default()
+        };
+        let mut cached = Cluster::fh4(4, &gpt3_175b(), cached_cfg()).unwrap();
+        let rc = cached.run(reqs()).unwrap();
+        assert_eq!(rc.fleet.completed, 40);
+        let pc = rc.prefix_cache.expect("cache report");
+        assert!(pc.hits > 0, "agentic sessions must hit the shared prefix");
+        assert!(pc.hit_rate > 0.0 && pc.hit_rate <= 1.0);
+        assert!(rc.fleet.prefill_tokens_saved > 0);
+        assert!(rc.prefill_compute_saving() > 0.0);
+        assert!(rc.fleet.prefix_fetch > Seconds::ZERO, "hits pay the TAB fetch");
+        assert!(pc.pool_bytes_held.value() > 0.0);
+        assert!(pc.pool_bytes_held <= pc.capacity);
+        assert!(rc.summary().contains("prefix-cache"), "{}", rc.summary());
+        // The cache is shared: sessions are sticky per replica under
+        // least-loaded spill, yet total hits exceed what any single
+        // replica's private cache could see only if inserts from one
+        // replica serve lookups routed elsewhere — asserted indirectly:
+        // reuse happened while > 1 replica served traffic.
+        let served = rc.per_replica.iter().filter(|r| r.completed > 0).count();
+        assert!(served > 1, "traffic must actually spread over replicas");
+        // No-cache run: same fleet, no savings, no report.
+        let mut plain = Cluster::fh4(4, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let rp = plain.run(reqs()).unwrap();
+        assert_eq!(rp.fleet.completed, 40);
+        assert!(rp.prefix_cache.is_none());
+        assert_eq!(rp.fleet.prefill_tokens_saved, 0);
+        assert_eq!(rp.prefill_compute_saving(), 0.0);
+        // Cache runs are deterministic: same seed, same savings.
+        let mut again = Cluster::fh4(4, &gpt3_175b(), cached_cfg()).unwrap();
+        let ra = again.run(reqs()).unwrap();
+        assert_eq!(ra.fleet.prefill_tokens_saved, rc.fleet.prefill_tokens_saved);
+        assert_eq!(ra.makespan(), rc.makespan());
+        let pa = ra.prefix_cache.unwrap();
+        assert_eq!(pa.hits, pc.hits);
+        assert_eq!(pa.hit_tokens, pc.hit_tokens);
+        assert_eq!(pa.evicted_tokens, pc.evicted_tokens);
+    }
+
+    #[test]
+    fn prefix_cache_requires_tab_fabric() {
+        let cfg = ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            ..Default::default()
+        };
+        let r = Cluster::new(crate::config::baseline_rack(2), &gpt3_175b(), cfg);
+        assert!(r.is_err(), "shared-nothing racks have no pool to share");
     }
 
     #[test]

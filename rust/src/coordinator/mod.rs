@@ -9,9 +9,11 @@
 //!   pool (the end-to-end request path of `examples/serve_e2e.rs`;
 //!   requires the `pjrt` feature);
 //! * [`router`] — multi-replica request routing (round-robin,
-//!   least-outstanding-tokens, KV-affinity);
+//!   least-outstanding-tokens, KV-affinity) with a warm-page hit-probe;
 //! * [`cluster`] — rack-scale co-simulation of N replicas with routed
 //!   dispatch and optional disaggregated prefill/decode pools;
+//! * [`prefix_cache`] — cluster-wide shared prefix-KV cache in the TAB
+//!   pool: cross-replica prefill reuse (DESIGN.md §Prefix-Cache);
 //! * [`metrics`] — latency/throughput accounting, per-replica and
 //!   fleet-level.
 
@@ -19,6 +21,7 @@ pub mod batcher;
 pub mod cluster;
 pub mod engine;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -31,6 +34,7 @@ pub use cluster::{
     ClusterConfig, ClusterReport,
 };
 pub use engine::{Backend, SimBackend};
+pub use prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport, PrefixHit};
 pub use metrics::Metrics;
 pub use request::{Request, Response, SloTarget};
 pub use router::{Policy, Router};
@@ -59,7 +63,7 @@ pub fn synthetic_workload(n: usize, prompt: usize, gen: usize, mean_gap: Seconds
             prompt: (0..plen).map(|i| (i % 509) as i32 + 1).collect(),
             max_new_tokens: gen,
             arrival: t,
-            slo: None,
+            ..Default::default()
         });
     }
     out

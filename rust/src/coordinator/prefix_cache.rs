@@ -1,0 +1,714 @@
+//! Shared prefix-KV cache in the TAB pool (DESIGN.md §Prefix-Cache).
+//!
+//! FengHuang's central claim is that disaggregated memory is *shared*:
+//! KV state produced by one GPU is reachable by every other GPU at
+//! fabric latency (§ GPU-compute offload). This module models the
+//! serving-layer payoff: a cluster-wide prefix-KV cache living in the
+//! TAB pool. Prompts are indexed by their affinity-prefix token chain in
+//! a deterministic radix trie; each trie node owns the KV page extent of
+//! one prompt token, resident in a reserved share of the remote pool.
+//! On admission the cluster looks up the longest cached prefix — hit
+//! tokens skip prefill compute entirely and are charged a TAB fetch
+//! ([`FabricLatencies::read_latency`]) instead; the NMC gather path
+//! elides even the page-in, leaving only the fixed command latency.
+//! Misses insert the freshly produced prefix KV back into the trie,
+//! making it visible to *every* replica, not just the sticky one.
+//!
+//! Accounting is backed by the paging layer: every node registers its
+//! extent in a [`PageTable`] over the pool tier
+//! ([`TierModel::from_system`]), and capacity pressure evicts leaf nodes
+//! through the existing [`PlacementPolicy`] victim selection (LRU /
+//! access-heat), so the byte ledger of the cache is exactly the page
+//! table's resident ledger.
+//!
+//! [`FabricLatencies::read_latency`]: crate::fabric::FabricLatencies::read_latency
+//! [`TierModel::from_system`]: crate::paging::TierModel::from_system
+
+use crate::config::SystemConfig;
+use crate::error::{FhError, Result};
+use crate::fabric::FabricLatencies;
+use crate::models::arch::ModelArch;
+use crate::models::memory;
+use crate::paging::{PageTable, PlacementPolicy, PolicyKind, TierModel, DEFAULT_PAGE_BYTES};
+use crate::trace::TensorId;
+use crate::units::{Bandwidth, Bytes, Seconds};
+use std::collections::HashSet;
+
+/// Synthetic tensor-id space for prefix-KV extents (disjoint from the
+/// paging orchestrator's weight ids and its `1 << 40` KV stream ids —
+/// this cache owns its own table, the offset just keeps debug output
+/// unambiguous).
+const PREFIX_KV_ID_BASE: u64 = 1 << 41;
+
+/// Knobs of the shared prefix cache ([`super::cluster::ClusterConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixCacheConfig {
+    /// Fraction of the node's remote pool reserved for shared prefix KV,
+    /// in (0, 1]. Ignored when `capacity` is set.
+    pub pool_share: f64,
+    /// Explicit capacity override (`serve --prefix-cache-gb`).
+    pub capacity: Option<Bytes>,
+    /// Victim selection under capacity pressure (leaf nodes only, so the
+    /// trie never orphans children). [`PolicyKind::MinimalResidency`]
+    /// degenerates to LRU here — a cache that drops entries after one
+    /// use would never produce a hit.
+    pub policy: PolicyKind,
+    /// Longest indexed prefix per request, in tokens (bounds trie depth).
+    pub max_tokens: usize,
+    /// NMC gather: attention reads cached KV in-pool, eliding the page-in
+    /// — the fetch charge collapses to the fixed TAB command latency.
+    pub nmc_gather: bool,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig {
+            pool_share: 0.25,
+            capacity: None,
+            policy: PolicyKind::Lru,
+            max_tokens: 1024,
+            nmc_gather: false,
+        }
+    }
+}
+
+/// Lifetime counters of the cache (conservation laws pinned by
+/// `rust/tests/prefix_props.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixCacheStats {
+    /// Admission-time probes.
+    pub lookups: u64,
+    /// Probes that matched ≥ 1 token.
+    pub hits: u64,
+    /// Tokens served from the pool across all hits.
+    pub hit_tokens: u64,
+    /// Prompt tokens probed across all lookups (hit-token denominator).
+    pub probed_tokens: u64,
+    /// Trie nodes (token extents) ever inserted.
+    pub inserted_tokens: u64,
+    /// Trie nodes evicted under capacity pressure.
+    pub evicted_tokens: u64,
+    /// High-water mark of pool bytes held.
+    pub bytes_peak: Bytes,
+}
+
+/// Result of a longest-prefix probe.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixHit {
+    /// Tokens whose KV is already in the pool (always < prompt length —
+    /// at least the final prompt token must run through prefill to
+    /// produce logits).
+    pub tokens: usize,
+    /// KV bytes those tokens occupy.
+    pub bytes: Bytes,
+    /// Replica that last produced/extended the deepest matched extent —
+    /// its local pages are warm, so the router prefers it
+    /// ([`super::router::Router::route_work_warm`]).
+    pub replica: Option<usize>,
+    /// Stall charged to the request's prefill step for fetching the
+    /// cached KV out of the pool.
+    pub fetch: Seconds,
+}
+
+impl PrefixHit {
+    pub const MISS: PrefixHit =
+        PrefixHit { tokens: 0, bytes: Bytes::ZERO, replica: None, fetch: Seconds::ZERO };
+}
+
+/// One trie node: the KV extent of one prompt token, reached through the
+/// token chain from the root.
+#[derive(Debug, Clone)]
+struct Node {
+    token: i32,
+    parent: usize,
+    /// (token, node index), sorted by token — deterministic traversal.
+    children: Vec<(i32, usize)>,
+    depth: usize,
+    /// Replica that last inserted/extended through this node (warm-page
+    /// probe for the router).
+    last_replica: usize,
+}
+
+/// Cluster-wide shared prefix-KV cache (one instance per
+/// [`super::cluster::Cluster`]; every replica reads and writes it — the
+/// TAB pool semantics).
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    /// Arena of trie nodes; slot 0 is the root sentinel. `None` = freed.
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    /// Live non-root nodes (== inserted − evicted).
+    live: usize,
+    /// Byte ledger over the pool tier: node slot → one-extent tensor.
+    table: PageTable,
+    policy: PlacementPolicy,
+    capacity: Bytes,
+    bytes_per_token: Bytes,
+    lat: FabricLatencies,
+    fabric_bw: Bandwidth,
+    /// Monotone access counter; advanced once per node touch so victim
+    /// ordering never ties (deterministic eviction).
+    tick: u64,
+    pub stats: PrefixCacheStats,
+}
+
+impl PrefixCache {
+    /// Build the cache over `sys`'s pool tier for `model`'s KV geometry.
+    pub fn new(cfg: PrefixCacheConfig, sys: &SystemConfig, model: &ModelArch) -> Result<Self> {
+        if !sys.is_fenghuang() {
+            return Err(FhError::Config(
+                "the shared prefix cache lives in the TAB pool — shared-nothing \
+                 fabrics have no pool to share KV through"
+                    .into(),
+            ));
+        }
+        if !(cfg.pool_share > 0.0 && cfg.pool_share <= 1.0) {
+            return Err(FhError::Config(format!(
+                "prefix-cache pool share must be in (0, 1], got {}",
+                cfg.pool_share
+            )));
+        }
+        if cfg.max_tokens == 0 {
+            return Err(FhError::Config("prefix-cache max_tokens must be ≥ 1".into()));
+        }
+        let tiers = TierModel::from_system(sys);
+        let pool = tiers.remote.capacity.ok_or_else(|| {
+            FhError::Config("TAB node reports no remote pool capacity".into())
+        })?;
+        let capacity = match cfg.capacity {
+            Some(c) => {
+                if c.value() <= 0.0 {
+                    return Err(FhError::Config("prefix-cache capacity must be > 0".into()));
+                }
+                c.min(pool)
+            }
+            None => pool * cfg.pool_share,
+        };
+        let bytes_per_token = memory::kv_cache_bytes(model, 1, 1);
+        Ok(PrefixCache {
+            cfg,
+            nodes: vec![Some(Node {
+                token: 0,
+                parent: 0,
+                children: Vec::new(),
+                depth: 0,
+                last_replica: 0,
+            })],
+            free: Vec::new(),
+            live: 0,
+            table: PageTable::new(DEFAULT_PAGE_BYTES),
+            policy: PlacementPolicy { kind: cfg.policy, ..Default::default() },
+            capacity,
+            bytes_per_token,
+            lat: sys.latencies,
+            fabric_bw: sys.fabric_bw,
+            tick: 0,
+            stats: PrefixCacheStats::default(),
+        })
+    }
+
+    /// Reserved pool capacity.
+    pub fn capacity(&self) -> Bytes {
+        self.capacity
+    }
+
+    /// Pool bytes currently held by cached extents.
+    pub fn held_bytes(&self) -> Bytes {
+        self.table.resident_bytes()
+    }
+
+    /// KV bytes of one cached token extent.
+    pub fn bytes_per_token(&self) -> Bytes {
+        self.bytes_per_token
+    }
+
+    /// Live cached token extents.
+    pub fn entries(&self) -> usize {
+        self.live
+    }
+
+    fn tid(slot: usize) -> TensorId {
+        TensorId(PREFIX_KV_ID_BASE + slot as u64)
+    }
+
+    fn slot_of(id: TensorId) -> usize {
+        (id.0 - PREFIX_KV_ID_BASE) as usize
+    }
+
+    fn node(&self, slot: usize) -> &Node {
+        self.nodes[slot].as_ref().expect("live trie node")
+    }
+
+    fn child(&self, slot: usize, token: i32) -> Option<usize> {
+        self.node(slot)
+            .children
+            .binary_search_by_key(&token, |&(t, _)| t)
+            .ok()
+            .map(|i| self.node(slot).children[i].1)
+    }
+
+    /// Longest-prefix probe for `prompt`. Touches the matched path (LRU /
+    /// heat bookkeeping) and charges the fetch for the hit extent.
+    pub fn lookup(&mut self, prompt: &[i32]) -> PrefixHit {
+        self.stats.lookups += 1;
+        // At least one prompt token must always prefill (logits for the
+        // first generated token come from running it).
+        let limit = prompt.len().saturating_sub(1).min(self.cfg.max_tokens);
+        self.stats.probed_tokens += limit as u64;
+        let mut cur = 0usize;
+        let mut depth = 0usize;
+        let mut replica = None;
+        while depth < limit {
+            let Some(next) = self.child(cur, prompt[depth]) else { break };
+            cur = next;
+            depth += 1;
+            replica = Some(self.node(cur).last_replica);
+            self.tick += 1;
+            self.table.touch(Self::tid(cur), self.tick);
+        }
+        if depth == 0 {
+            return PrefixHit::MISS;
+        }
+        self.stats.hits += 1;
+        self.stats.hit_tokens += depth as u64;
+        let bytes = self.bytes_per_token * depth as f64;
+        // NMC gather executes in-pool: the SMs stream KV directly from
+        // the pool during attention, so only the command latency is
+        // exposed. Without it the extent pages into local HBM first
+        // (Eq 3.1: fixed latency + serialization).
+        let fetch = if self.cfg.nmc_gather {
+            self.lat.tab_read
+        } else {
+            self.lat.read_latency(bytes, self.fabric_bw)
+        };
+        PrefixHit { tokens: depth, bytes, replica, fetch }
+    }
+
+    /// Publish the prefix KV `replica` produced for `prompt`: extend the
+    /// trie along the token chain (bounded by `max_tokens`), evicting
+    /// under capacity pressure. Returns the number of token extents newly
+    /// inserted. On TAB fabrics the KV pages are *produced into* the pool
+    /// — publication itself is metadata-only and free.
+    pub fn insert(&mut self, prompt: &[i32], replica: usize) -> usize {
+        let chain = &prompt[..prompt.len().min(self.cfg.max_tokens)];
+        let mut cur = 0usize;
+        let mut matched = 0usize;
+        for &tok in chain {
+            let Some(next) = self.child(cur, tok) else { break };
+            cur = next;
+            matched += 1;
+            self.tick += 1;
+            let tick = self.tick;
+            self.table.touch(Self::tid(cur), tick);
+            self.nodes[cur].as_mut().expect("live trie node").last_replica = replica;
+        }
+        let mut inserted = 0usize;
+        for &tok in &chain[matched..] {
+            if !self.make_room(cur) {
+                break;
+            }
+            let slot = match self.free.pop() {
+                Some(s) => s,
+                None => {
+                    self.nodes.push(None);
+                    self.nodes.len() - 1
+                }
+            };
+            let depth = self.node(cur).depth + 1;
+            self.nodes[slot] = Some(Node {
+                token: tok,
+                parent: cur,
+                children: Vec::new(),
+                depth,
+                last_replica: replica,
+            });
+            let parent = self.nodes[cur].as_mut().expect("live trie node");
+            let at = parent
+                .children
+                .binary_search_by_key(&tok, |&(t, _)| t)
+                .expect_err("token was not a child");
+            parent.children.insert(at, (tok, slot));
+            self.tick += 1;
+            self.table.register(Self::tid(slot), self.bytes_per_token);
+            // Pool pages are authoritative (the TAB copy *is* the KV) —
+            // staged clean, so eviction is a metadata drop.
+            self.table.page_in(Self::tid(slot), self.tick, false);
+            self.live += 1;
+            inserted += 1;
+            cur = slot;
+        }
+        self.stats.inserted_tokens += inserted as u64;
+        self.stats.bytes_peak = self.stats.bytes_peak.max(self.table.resident_bytes());
+        inserted
+    }
+
+    /// Make room for one more token extent: evict leaf extents (policy
+    /// order) until it fits. `tip` is the node the insertion will extend —
+    /// its root path is protected. Returns false when nothing evictable
+    /// remains and the extent still does not fit.
+    ///
+    /// Cost note: when the cache is saturated, each pressured token pays
+    /// an O(live) protect-set rebuild plus the policy's victim scan. This
+    /// is deliberate: freeing one extent at a time keeps eviction at the
+    /// policy's exact per-extent granularity (batching the whole incoming
+    /// chain would let a long insert dip past cold leaves into hot ones),
+    /// and the under-capacity fast path above stays O(1). At bench scale
+    /// (≲ tens of thousands of live extents) the saturated path costs
+    /// seconds per sweep cell; revisit with an incremental leaf set if a
+    /// workload ever holds millions of extents under sustained pressure.
+    fn make_room(&mut self, tip: usize) -> bool {
+        loop {
+            let over = self.held_bytes() + self.bytes_per_token - self.capacity;
+            if over.value() <= 0.0 {
+                return true;
+            }
+            // Internal nodes are structural: evicting one would orphan
+            // its children, so only leaves are candidates. The insertion
+            // path stays protected even where it is a leaf (`tip`).
+            let mut protect: HashSet<TensorId> = HashSet::new();
+            for (slot, n) in self.nodes.iter().enumerate() {
+                if let Some(n) = n {
+                    if slot != 0 && !n.children.is_empty() {
+                        protect.insert(Self::tid(slot));
+                    }
+                }
+            }
+            let mut p = tip;
+            while p != 0 {
+                protect.insert(Self::tid(p));
+                p = self.node(p).parent;
+            }
+            let victims = self.policy.victims(&self.table, over, &protect);
+            if victims.is_empty() {
+                return false;
+            }
+            for v in victims {
+                self.remove_leaf(Self::slot_of(v));
+            }
+        }
+    }
+
+    /// Drop a leaf extent: detach from its parent and release its pool
+    /// bytes (clean pages — no write-back; the pool copy was
+    /// authoritative and is simply forgotten).
+    fn remove_leaf(&mut self, slot: usize) {
+        let node = self.nodes[slot].take().expect("live trie node");
+        debug_assert!(node.children.is_empty(), "evicting an internal trie node");
+        let parent = self.nodes[node.parent].as_mut().expect("live parent");
+        if let Ok(i) = parent.children.binary_search_by_key(&node.token, |&(t, _)| t) {
+            parent.children.remove(i);
+        }
+        self.table.remove(Self::tid(slot));
+        self.free.push(slot);
+        self.live -= 1;
+        self.stats.evicted_tokens += 1;
+    }
+
+    /// Hit rate over lookups (0 when nothing was probed).
+    pub fn hit_rate(&self) -> f64 {
+        if self.stats.lookups == 0 {
+            0.0
+        } else {
+            self.stats.hits as f64 / self.stats.lookups as f64
+        }
+    }
+
+    /// Fraction of probed prompt tokens served from the pool.
+    pub fn token_hit_rate(&self) -> f64 {
+        if self.stats.probed_tokens == 0 {
+            0.0
+        } else {
+            self.stats.hit_tokens as f64 / self.stats.probed_tokens as f64
+        }
+    }
+
+    /// Structural + ledger invariants, checked by the property tests:
+    /// parent/child consistency, sorted children, no orphans, exact byte
+    /// accounting against the page-table ledger, capacity respected, and
+    /// counter conservation. Returns a description of the first violation.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        let mut live = 0usize;
+        for (slot, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if slot != 0 {
+                live += 1;
+                let Some(parent) = self.nodes.get(n.parent).and_then(|p| p.as_ref()) else {
+                    return Err(format!("node {slot} has a dead parent {}", n.parent));
+                };
+                if parent
+                    .children
+                    .binary_search_by_key(&n.token, |&(t, _)| t)
+                    .ok()
+                    .map(|i| parent.children[i].1)
+                    != Some(slot)
+                {
+                    return Err(format!("node {slot} is orphaned from parent {}", n.parent));
+                }
+                if n.depth != parent.depth + 1 {
+                    return Err(format!("node {slot} depth {} breaks the chain", n.depth));
+                }
+                let resident = self
+                    .table
+                    .entry(Self::tid(slot))
+                    .map(|e| e.resident_bytes())
+                    .unwrap_or(Bytes::ZERO);
+                if (resident.value() - self.bytes_per_token.value()).abs()
+                    > 1e-6 * self.bytes_per_token.value()
+                {
+                    return Err(format!(
+                        "node {slot} holds {} B in the ledger, expected {} B",
+                        resident.value(),
+                        self.bytes_per_token.value()
+                    ));
+                }
+            }
+            for (i, &(t, c)) in n.children.iter().enumerate() {
+                if i > 0 && n.children[i - 1].0 >= t {
+                    return Err(format!("node {slot} children unsorted at {i}"));
+                }
+                let Some(child) = self.nodes.get(c).and_then(|p| p.as_ref()) else {
+                    return Err(format!("node {slot} lists dead child {c}"));
+                };
+                if child.parent != slot {
+                    return Err(format!("child {c} disowns parent {slot}"));
+                }
+            }
+        }
+        if live != self.live {
+            return Err(format!("live counter {} vs walked {live}", self.live));
+        }
+        let expect = self.bytes_per_token * live as f64;
+        let held = self.held_bytes();
+        if (held.value() - expect.value()).abs() > 1e-6 * expect.value().max(1.0) {
+            return Err(format!(
+                "ledger holds {} B but {live} extents should hold {} B",
+                held.value(),
+                expect.value()
+            ));
+        }
+        if held.value() > self.capacity.value() * (1.0 + 1e-9) {
+            return Err(format!(
+                "held {} B exceeds capacity {} B",
+                held.value(),
+                self.capacity.value()
+            ));
+        }
+        if self.stats.evicted_tokens > self.stats.inserted_tokens
+            || self.stats.inserted_tokens - self.stats.evicted_tokens != live as u64
+        {
+            return Err(format!(
+                "conservation broken: inserted {} − evicted {} ≠ live {live}",
+                self.stats.inserted_tokens, self.stats.evicted_tokens
+            ));
+        }
+        if self.stats.hits > self.stats.lookups || self.stats.hit_tokens > self.stats.probed_tokens
+        {
+            return Err("hit counters exceed their denominators".into());
+        }
+        Ok(())
+    }
+}
+
+/// Aggregated cache observables for [`super::cluster::ClusterReport`].
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixCacheReport {
+    pub lookups: u64,
+    pub hits: u64,
+    pub hit_tokens: u64,
+    pub inserted_tokens: u64,
+    pub evicted_tokens: u64,
+    /// Live token extents at end of run.
+    pub entries: usize,
+    pub pool_bytes_held: Bytes,
+    pub pool_bytes_peak: Bytes,
+    pub capacity: Bytes,
+    pub hit_rate: f64,
+    pub token_hit_rate: f64,
+}
+
+impl PrefixCache {
+    pub fn report(&self) -> PrefixCacheReport {
+        PrefixCacheReport {
+            lookups: self.stats.lookups,
+            hits: self.stats.hits,
+            hit_tokens: self.stats.hit_tokens,
+            inserted_tokens: self.stats.inserted_tokens,
+            evicted_tokens: self.stats.evicted_tokens,
+            entries: self.live,
+            pool_bytes_held: self.held_bytes(),
+            pool_bytes_peak: self.stats.bytes_peak,
+            capacity: self.capacity,
+            hit_rate: self.hit_rate(),
+            token_hit_rate: self.token_hit_rate(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{baseline8, fh4_15xm};
+    use crate::models::arch::gpt3_175b;
+    use crate::units::Bandwidth;
+
+    fn cache(cfg: PrefixCacheConfig) -> PrefixCache {
+        PrefixCache::new(cfg, &fh4_15xm(Bandwidth::tbps(4.8)), &gpt3_175b()).unwrap()
+    }
+
+    #[test]
+    fn shared_nothing_fabric_is_rejected() {
+        let r = PrefixCache::new(PrefixCacheConfig::default(), &baseline8(), &gpt3_175b());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn config_knobs_are_validated() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let m = gpt3_175b();
+        let bad = PrefixCacheConfig { pool_share: 0.0, ..Default::default() };
+        assert!(PrefixCache::new(bad, &sys, &m).is_err());
+        let bad = PrefixCacheConfig { pool_share: 1.5, ..Default::default() };
+        assert!(PrefixCache::new(bad, &sys, &m).is_err());
+        let bad = PrefixCacheConfig { max_tokens: 0, ..Default::default() };
+        assert!(PrefixCache::new(bad, &sys, &m).is_err());
+        let bad = PrefixCacheConfig { capacity: Some(Bytes::ZERO), ..Default::default() };
+        assert!(PrefixCache::new(bad, &sys, &m).is_err());
+    }
+
+    #[test]
+    fn capacity_derives_from_the_pool_tier() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let pool = TierModel::from_system(&sys).remote.capacity.unwrap();
+        let c = cache(PrefixCacheConfig { pool_share: 0.25, ..Default::default() });
+        assert!((c.capacity().value() - (pool * 0.25).value()).abs() < 1e-6);
+        // Explicit capacity wins, clamped to the pool.
+        let c = cache(PrefixCacheConfig {
+            capacity: Some(Bytes::gb(4.0)),
+            ..Default::default()
+        });
+        assert_eq!(c.capacity(), Bytes::gb(4.0));
+        let c = cache(PrefixCacheConfig {
+            capacity: Some(pool * 3.0),
+            ..Default::default()
+        });
+        assert_eq!(c.capacity(), pool);
+    }
+
+    #[test]
+    fn longest_prefix_lookup_after_insert() {
+        let mut c = cache(PrefixCacheConfig::default());
+        let prompt: Vec<i32> = (1..=100).collect();
+        assert_eq!(c.lookup(&prompt).tokens, 0, "cold cache misses");
+        assert_eq!(c.insert(&prompt, 2), 100);
+        // Full re-probe: every token but the mandatory last one hits.
+        let hit = c.lookup(&prompt);
+        assert_eq!(hit.tokens, 99);
+        assert_eq!(hit.replica, Some(2));
+        assert!(hit.fetch > Seconds::ZERO);
+        assert_eq!(hit.bytes, c.bytes_per_token() * 99.0);
+        // A diverging tail hits only the shared head.
+        let mut fork = prompt.clone();
+        fork[40] = 999;
+        assert_eq!(c.lookup(&fork).tokens, 40);
+        // Re-inserting the shared head adds only the new tail.
+        assert_eq!(c.insert(&fork, 0), 60);
+        assert_eq!(c.entries(), 160);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lookup_never_returns_the_whole_prompt() {
+        let mut c = cache(PrefixCacheConfig::default());
+        let prompt = vec![5i32; 8];
+        c.insert(&prompt, 0);
+        assert_eq!(c.lookup(&prompt).tokens, 7, "one token always prefills");
+        assert_eq!(c.lookup(&[5i32]).tokens, 0);
+        assert_eq!(c.lookup(&[]).tokens, 0);
+    }
+
+    #[test]
+    fn max_tokens_bounds_trie_depth() {
+        let mut c = cache(PrefixCacheConfig { max_tokens: 10, ..Default::default() });
+        let prompt: Vec<i32> = (1..=50).collect();
+        assert_eq!(c.insert(&prompt, 0), 10);
+        assert_eq!(c.lookup(&prompt).tokens, 10);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn nmc_gather_elides_the_page_in() {
+        let mk = |nmc| {
+            let mut c = cache(PrefixCacheConfig { nmc_gather: nmc, ..Default::default() });
+            let prompt: Vec<i32> = (1..=200).collect();
+            c.insert(&prompt, 0);
+            c.lookup(&prompt).fetch
+        };
+        let staged = mk(false);
+        let gathered = mk(true);
+        assert_eq!(gathered, Seconds::ns(220.0), "NMC pays only the command latency");
+        // 199 tokens × ~4.7 MB over 4.8 TB/s dwarfs 220 ns.
+        assert!(staged > gathered * 100.0, "staged {staged:?} vs gathered {gathered:?}");
+    }
+
+    #[test]
+    fn eviction_keeps_capacity_and_invariants() {
+        // Capacity for ~20 gpt3 token extents.
+        let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+        let mut c = cache(PrefixCacheConfig {
+            capacity: Some(bpt * 20.0),
+            ..Default::default()
+        });
+        for s in 0..8 {
+            let prompt: Vec<i32> = (0..10).map(|i| s * 100 + i + 1).collect();
+            c.insert(&prompt, (s % 3) as usize);
+            c.check_invariants().unwrap();
+        }
+        assert!(c.held_bytes() <= c.capacity());
+        assert!(c.stats.evicted_tokens > 0, "pressure must evict");
+        assert_eq!(
+            c.stats.inserted_tokens - c.stats.evicted_tokens,
+            c.entries() as u64
+        );
+        // The most recently inserted chain survived whole (its path was
+        // protected during its own insert).
+        let last: Vec<i32> = (0..10).map(|i| 700 + i + 1).collect();
+        assert_eq!(c.lookup(&last).tokens, 9);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_deterministic() {
+        let run = || {
+            let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+            let mut c = cache(PrefixCacheConfig {
+                capacity: Some(bpt * 16.0),
+                ..Default::default()
+            });
+            for s in 0..12 {
+                let prompt: Vec<i32> = (0..6).map(|i| s * 37 + i + 1).collect();
+                c.insert(&prompt, 0);
+            }
+            let mut survivors = Vec::new();
+            for s in 0..12 {
+                let prompt: Vec<i32> = (0..6).map(|i| s * 37 + i + 1).collect();
+                survivors.push(c.lookup(&prompt).tokens);
+            }
+            survivors
+        };
+        assert_eq!(run(), run(), "victim selection must not depend on hash order");
+    }
+
+    #[test]
+    fn tiny_capacity_truncates_instead_of_thrashing() {
+        let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+        let mut c = cache(PrefixCacheConfig {
+            capacity: Some(bpt * 3.0),
+            ..Default::default()
+        });
+        let prompt: Vec<i32> = (1..=50).collect();
+        let inserted = c.insert(&prompt, 0);
+        assert_eq!(inserted, 3, "only what fits is published");
+        assert_eq!(c.lookup(&prompt).tokens, 3);
+        c.check_invariants().unwrap();
+    }
+}

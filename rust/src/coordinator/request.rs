@@ -34,11 +34,26 @@ pub struct Request {
     /// Latency SLO this request is scored against (`None` = untracked:
     /// legacy workloads and offline batch classes).
     pub slo: Option<SloTarget>,
+    /// Leading prompt tokens whose KV was found in the shared prefix
+    /// cache (DESIGN.md §Prefix-Cache): they skip prefill compute, and
+    /// the fetch of their pooled KV is charged via `prefix_fetch`. Set by
+    /// the cluster at admission; 0 everywhere else.
+    pub cached_prefix: usize,
+    /// Stall charged to this request's prefill step for fetching the
+    /// cached prefix KV out of the TAB pool.
+    pub prefix_fetch: Seconds,
 }
 
 impl Request {
     pub fn prompt_len(&self) -> usize {
         self.prompt.len()
+    }
+
+    /// Tokens this request actually runs through prefill compute: the
+    /// prompt minus the cached prefix, never below one (the final prompt
+    /// token always executes to produce the first logits).
+    pub fn prefill_len(&self) -> usize {
+        self.prompt.len().saturating_sub(self.cached_prefix).max(1)
     }
 
     /// Routing work estimate: prompt plus generation budget in tokens.
@@ -120,6 +135,24 @@ mod tests {
         assert!(slo.met(Seconds::ms(100.0), Seconds::ms(10.0)), "boundaries count as met");
         assert!(!slo.met(Seconds::ms(100.1), Seconds::ms(5.0)));
         assert!(!slo.met(Seconds::ms(50.0), Seconds::ms(10.1)));
+    }
+
+    #[test]
+    fn prefill_len_subtracts_cached_prefix_but_keeps_one_token() {
+        let mut r = Request {
+            id: 0,
+            prompt: vec![1; 100],
+            max_new_tokens: 8,
+            ..Default::default()
+        };
+        assert_eq!(r.prefill_len(), 100, "no cache hit → full prompt prefills");
+        r.cached_prefix = 60;
+        assert_eq!(r.prefill_len(), 40);
+        assert_eq!(r.work_tokens(), 108, "routing estimate stays the full work");
+        r.cached_prefix = 99;
+        assert_eq!(r.prefill_len(), 1);
+        r.cached_prefix = 100;
+        assert_eq!(r.prefill_len(), 1, "at least one token always prefills");
     }
 
     #[test]

@@ -165,6 +165,27 @@ impl Router {
         idx
     }
 
+    /// Warm-page-aware routing (DESIGN.md §Prefix-Cache): the prefix
+    /// cache's hit-probe names the replica whose *local* pages are warm
+    /// for this prefix. Least-loaded routing prefers it while its load
+    /// stays within the spill threshold of the fleet minimum — locality
+    /// is worth a bounded queueing penalty, exactly the kv-affinity
+    /// trade-off — and otherwise falls back to the shared pool via the
+    /// normal policy. Round-robin stays deliberately stateless and
+    /// kv-affinity keeps its own (session-sticky) map.
+    pub fn route_work_warm(&mut self, key: u64, work: u64, warm: Option<usize>) -> usize {
+        if self.policy == Policy::LeastLoaded {
+            if let Some(i) = warm {
+                if i < self.active && self.load[i] <= self.min_active_load() + self.spill_tokens {
+                    self.load[i] += work;
+                    self.routed[i] += work;
+                    return i;
+                }
+            }
+        }
+        self.route_work(key, work)
+    }
+
     /// Report completion of a request previously routed to `replica`.
     pub fn complete(&mut self, replica: usize, req: &Request) {
         self.complete_work(replica, req.work_tokens());
@@ -211,7 +232,13 @@ mod tests {
     use crate::units::Seconds;
 
     fn req(id: u64, len: usize) -> Request {
-        Request { id, prompt: vec![1; len], max_new_tokens: 8, arrival: Seconds::ZERO, slo: None }
+        Request {
+            id,
+            prompt: vec![1; len],
+            max_new_tokens: 8,
+            arrival: Seconds::ZERO,
+            ..Default::default()
+        }
     }
 
     /// Request whose affinity prefix encodes `session`.
@@ -220,7 +247,7 @@ mod tests {
         for (i, t) in prompt.iter_mut().enumerate().skip(32) {
             *t = (i % 100) as i32 + 1000 * id as i32; // tails differ per request
         }
-        Request { id, prompt, max_new_tokens: 8, arrival: Seconds::ZERO, slo: None }
+        Request { id, prompt, max_new_tokens: 8, arrival: Seconds::ZERO, ..Default::default() }
     }
 
     #[test]
@@ -301,6 +328,37 @@ mod tests {
         // The session re-homed: with load now balanced-ish it stays put.
         let q2 = session_req(2, 7, 40);
         assert_eq!(r.route(&q2), spill);
+    }
+
+    #[test]
+    fn warm_probe_bends_least_loaded_within_spill_threshold() {
+        let mut r = Router::new(3, Policy::LeastLoaded).with_spill_tokens(100);
+        // Replica 2 carries slightly more load than the minimum but holds
+        // the warm pages: the probe wins.
+        r.route_work(1, 50); // replica picked deterministically: least-loaded = 0
+        assert_eq!(r.load(0), 50);
+        let warm = r.route_work_warm(2, 40, Some(2));
+        assert_eq!(warm, 2, "warm replica within threshold is preferred");
+        // Pile load onto the warm replica past the threshold: fall back
+        // to least-loaded.
+        r.complete_work(2, 40);
+        r.route_work_warm(3, 500, Some(2));
+        let spill = r.route_work_warm(4, 10, Some(2));
+        assert_ne!(spill, 2, "overloaded warm replica must spill");
+        // No warm hint behaves exactly like route_work.
+        let mut a = Router::new(2, Policy::LeastLoaded);
+        let mut b = Router::new(2, Policy::LeastLoaded);
+        for i in 0..6 {
+            assert_eq!(a.route_work_warm(i, 10 + i, None), b.route_work(i, 10 + i));
+        }
+        // Round-robin ignores the probe entirely.
+        let mut rr = Router::new(3, Policy::RoundRobin);
+        let picks: Vec<usize> = (0..3).map(|i| rr.route_work_warm(i, 10, Some(2))).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+        // An out-of-active-set warm replica is never used.
+        let mut ll = Router::new(3, Policy::LeastLoaded);
+        ll.set_active(2);
+        assert!(ll.route_work_warm(9, 10, Some(2)) < 2);
     }
 
     #[test]

@@ -261,10 +261,20 @@ impl<B: Backend> Scheduler<B> {
             .iter()
             .map(|r| PrefillItem { id: r.id, tokens: r.prompt.clone() })
             .collect();
-        let (elapsed, first_tokens) = self.backend.prefill(&items, batch.padded_len)?;
+        // Cached prefix tokens (DESIGN.md §Prefix-Cache) skip the compute
+        // — `padded_len` already reflects the prefill lengths — but their
+        // pooled KV must be fetched before attention can run over the
+        // full context: the TAB read is a serial stall on the step.
+        let fetch: Seconds = batch.requests.iter().map(|r| r.prefix_fetch).sum();
+        let (compute, first_tokens) = self.backend.prefill(&items, batch.padded_len)?;
+        let elapsed = compute + fetch;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
+        self.metrics.prefix_fetch += fetch;
         for (req, first) in batch.requests.into_iter().zip(first_tokens) {
+            self.metrics.prefill_tokens += req.prompt_len() as u64;
+            self.metrics.prefill_tokens_saved +=
+                req.cached_prefix.min(req.prompt_len()) as u64;
             let ttft = self.clock - req.arrival;
             self.metrics.ttft.record(ttft);
             let mut tokens = req.prompt.clone();
@@ -364,7 +374,7 @@ mod tests {
             prompt: vec![(id % 7) as i32 + 1; len],
             max_new_tokens: gen,
             arrival: Seconds::ms(arrival_ms),
-            slo: None,
+            ..Default::default()
         }
     }
 
@@ -477,6 +487,33 @@ mod tests {
         assert_eq!(m.slo_met, 1);
         assert_eq!(m.goodput_tokens, 4, "only the met request's tokens are goodput");
         assert!((m.slo_attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_fetch_is_charged_and_saved_tokens_counted() {
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut s = Scheduler::new(backend, Batcher::new(4, 64, 4096));
+        let mut hit = req(0, 64, 2, 0.0);
+        hit.cached_prefix = 48;
+        hit.prefix_fetch = Seconds::ms(3.0);
+        s.submit_all(vec![hit, req(1, 64, 2, 0.0)]);
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.completed, 2);
+        assert_eq!(s.metrics.prefill_tokens, 128);
+        assert_eq!(s.metrics.prefill_tokens_saved, 48);
+        assert_eq!(s.metrics.prefix_fetch, Seconds::ms(3.0));
+        // The fetch stall lands on the batch's TTFT: prefill 10 ms +
+        // fetch 3 ms, before any decode round.
+        let hit_resp = s.responses.iter().find(|r| r.id == 0).unwrap();
+        assert!(hit_resp.ttft.as_ms() >= 13.0 - 1e-9, "ttft {}", hit_resp.ttft.as_ms());
+        // An uncached run charges no fetch and saves nothing.
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut plain = Scheduler::new(backend, Batcher::new(4, 64, 4096));
+        plain.submit_all(vec![req(2, 64, 2, 0.0)]);
+        plain.run_to_completion().unwrap();
+        assert_eq!(plain.metrics.prefill_tokens_saved, 0);
+        assert_eq!(plain.metrics.prefix_fetch, Seconds::ZERO);
+        assert_eq!(plain.metrics.prefill_tokens, 64);
     }
 
     #[test]

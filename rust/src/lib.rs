@@ -18,8 +18,10 @@
 //! * [`coordinator`] — serving layer: request router, continuous batcher,
 //!   prefill/decode scheduler over simulated FengHuang nodes, and the
 //!   rack-scale multi-replica cluster simulator with KV-aware routing,
-//!   disaggregated prefill/decode pools, front-door load shedding, and
-//!   an SLO-driven elastic autoscaler;
+//!   disaggregated prefill/decode pools, front-door load shedding, an
+//!   SLO-driven elastic autoscaler, and a cluster-wide shared prefix-KV
+//!   cache in the TAB pool (cross-replica prefill reuse);
+//! * [`cli`] — unit-tested flag parsing for the `fenghuang` binary;
 //! * [`traffic`] — deterministic open-loop workload engine: seedable
 //!   RNG, arrival processes (Poisson / bursty / diurnal / replay), and
 //!   workload mixes (chat, RAG, agentic, batch) with per-request
@@ -34,6 +36,7 @@
 //! paper-vs-measured results.
 
 pub mod analysis;
+pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod error;

@@ -8,6 +8,7 @@
 //! fenghuang serve    [--model M] [--requests N] [--max-batch B]
 //!                    [--replicas R] [--policy P] [--disaggregate P:D]
 //!                    [--sessions S] [--kv-budget-gb G]
+//!                    [--prefix-cache [on|off]] [--prefix-cache-gb G]
 //!                    [--qps Q] [--pattern P] [--mix M] [--seed S]
 //!                    [--slo-ttft-ms X] [--slo-tpot-ms Y]
 //!                    [--autoscale [on|off]] [--autoscale-min N]
@@ -17,16 +18,22 @@
 //! fenghuang help
 //! ```
 //!
-//! (Arg parsing and error plumbing are hand-rolled; the offline build
-//! environment has no clap or anyhow — see DESIGN.md §1.) Every
+//! Flag parsing, the per-subcommand whitelists, and the conflict rules
+//! live in [`fenghuang::cli`] so they are unit-tested (the offline build
+//! environment has no clap or anyhow — see DESIGN.md §1). Every
 //! subcommand validates its flag set: unknown flags and out-of-range
 //! values fail with actionable messages instead of silently falling back
 //! to defaults.
 
+use fenghuang::cli::{
+    check_disaggregate_replicas, cli_err, flag, parse_disaggregate, parse_flags,
+    parse_prefix_cache, positive, switch, system_by_name, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS,
+    SIMULATE_FLAGS, TRAFFIC_FLAGS,
+};
 use fenghuang::coordinator::router::Policy;
+use fenghuang::coordinator::PrefixCacheConfig;
 use fenghuang::paging::NmcConfig;
 use fenghuang::prelude::*;
-use fenghuang::units::Bandwidth;
 use std::collections::HashMap;
 
 const USAGE: &str = "\
@@ -42,6 +49,7 @@ USAGE:
   fenghuang serve    [--model gpt3] [--requests 64] [--max-batch 8]
                      [--replicas 1] [--policy round-robin|least-outstanding-tokens|kv-affinity]
                      [--disaggregate P:D] [--sessions 8] [--kv-budget-gb G]
+                     [--prefix-cache [on|off]] [--prefix-cache-gb G]
                      open-loop traffic (any of these flags selects the traffic engine):
                      [--qps 8] [--pattern poisson|bursty|diurnal|replay]
                      [--mix chat|rag|agentic|batch, '+'-combined, e.g. chat+rag]
@@ -54,166 +62,6 @@ USAGE:
                      [--nmc on|off]
   fenghuang help
 ";
-
-const SIMULATE_FLAGS: &[&str] = &["model", "system", "remote-tbps", "batch", "prompt", "gen"];
-const SERVE_FLAGS: &[&str] = &[
-    "model",
-    "requests",
-    "max-batch",
-    "replicas",
-    "policy",
-    "disaggregate",
-    "sessions",
-    "kv-budget-gb",
-    "qps",
-    "pattern",
-    "mix",
-    "slo-ttft-ms",
-    "slo-tpot-ms",
-    "autoscale",
-    "autoscale-min",
-    "shed-tokens",
-    "seed",
-];
-/// Serve flags that may appear without a value (`--autoscale` ≡
-/// `--autoscale on`).
-const SERVE_BARE: &[&str] = &["autoscale"];
-/// Any of these flags routes `serve` through the open-loop traffic
-/// engine instead of the legacy fixed-gap workload.
-const TRAFFIC_FLAGS: &[&str] = &[
-    "qps",
-    "pattern",
-    "mix",
-    "slo-ttft-ms",
-    "slo-tpot-ms",
-    "autoscale",
-    "autoscale-min",
-    "shed-tokens",
-    "seed",
-];
-const PAGE_FLAGS: &[&str] = &[
-    "model",
-    "system",
-    "remote-tbps",
-    "batch",
-    "phase",
-    "kv-len",
-    "prompt",
-    "local-gb",
-    "policy",
-    "window",
-    "steps",
-    "page-mib",
-    "pin-frac",
-    "page-kv",
-    "nmc",
-];
-
-fn cli_err(msg: String) -> FhError {
-    FhError::Config(msg)
-}
-
-/// Parse `--key value` pairs after the subcommand, rejecting flags the
-/// subcommand does not understand (a typo'd flag must not silently fall
-/// back to a default). Flags listed in `bare` are switches: they may
-/// stand alone (`--autoscale`), in which case they read as "on".
-fn parse_flags(
-    cmd: &str,
-    args: &[String],
-    allowed: &[&str],
-    bare: &[&str],
-) -> Result<HashMap<String, String>> {
-    let mut flags = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        let k = &args[i];
-        if !k.starts_with("--") {
-            return Err(cli_err(format!("unexpected argument '{k}' (flags are --key value)")));
-        }
-        let key = k.trim_start_matches("--").to_string();
-        if !allowed.contains(&key.as_str()) {
-            let mut expected: Vec<String> =
-                allowed.iter().map(|a| format!("--{a}")).collect();
-            expected.sort();
-            return Err(cli_err(format!(
-                "unknown flag --{key} for '{cmd}' (expected one of: {})",
-                expected.join(", ")
-            )));
-        }
-        let next = args.get(i + 1);
-        if bare.contains(&key.as_str()) && next.map_or(true, |v| v.starts_with("--")) {
-            flags.insert(key, "on".to_string());
-            i += 1;
-            continue;
-        }
-        let v = next.ok_or_else(|| cli_err(format!("flag {k} needs a value")))?;
-        flags.insert(key, v.clone());
-        i += 2;
-    }
-    Ok(flags)
-}
-
-fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
-where
-    T::Err: std::fmt::Display,
-{
-    match flags.get(key) {
-        Some(v) => v.parse().map_err(|e| cli_err(format!("--{key}: {e}"))),
-        None => Ok(default),
-    }
-}
-
-/// A flag that must parse to a value ≥ 1 (counts, sizes).
-fn positive<T>(flags: &HashMap<String, String>, key: &str, default: T) -> Result<T>
-where
-    T: std::str::FromStr + PartialOrd + From<u8> + std::fmt::Display,
-    T::Err: std::fmt::Display,
-{
-    let v = flag(flags, key, default)?;
-    if v < T::from(1u8) {
-        return Err(cli_err(format!("--{key} must be ≥ 1, got {v}")));
-    }
-    Ok(v)
-}
-
-/// An on/off switch flag.
-fn switch(flags: &HashMap<String, String>, key: &str) -> Result<bool> {
-    match flags.get(key).map(|s| s.to_ascii_lowercase()) {
-        None => Ok(false),
-        Some(v) => match v.as_str() {
-            "on" | "true" | "1" | "yes" => Ok(true),
-            "off" | "false" | "0" | "no" => Ok(false),
-            other => Err(cli_err(format!("--{key} wants on|off, got '{other}'"))),
-        },
-    }
-}
-
-fn system_by_name(name: &str, remote_tbps: f64) -> Result<SystemConfig> {
-    let bw = Bandwidth::tbps(remote_tbps);
-    match name.to_ascii_lowercase().as_str() {
-        "baseline8" => Ok(baseline8()),
-        "fh4-1.5xm" | "fh4_15xm" => Ok(fh4_15xm(bw)),
-        "fh4-2.0xm" | "fh4_20xm" => Ok(fh4_20xm(bw)),
-        other => Err(cli_err(format!(
-            "unknown system preset '{other}' (expected baseline8, fh4-1.5xm or fh4-2.0xm)"
-        ))),
-    }
-}
-
-/// Parse `--disaggregate P:D` (prefill:decode pool sizes).
-fn parse_disaggregate(v: &str) -> Result<(usize, usize)> {
-    let (p, d) = v
-        .split_once(':')
-        .ok_or_else(|| cli_err(format!("--disaggregate wants P:D, got '{v}'")))?;
-    let p: usize = p.parse().map_err(|e| cli_err(format!("--disaggregate prefill: {e}")))?;
-    let d: usize = d.parse().map_err(|e| cli_err(format!("--disaggregate decode: {e}")))?;
-    if p == 0 || d == 0 {
-        return Err(cli_err(format!(
-            "--disaggregate pools must be non-empty, got {p}:{d}"
-        )));
-    }
-    Ok((p, d))
-}
 
 fn run_serve(args: &[String]) -> Result<()> {
     let f = parse_flags("serve", args, SERVE_FLAGS, SERVE_BARE)?;
@@ -233,17 +81,12 @@ fn run_serve(args: &[String]) -> Result<()> {
         Some(v) => Some(parse_disaggregate(v)?),
         None => None,
     };
-    if let Some((p, d)) = disaggregate {
+    if let Some(pools) = disaggregate {
         // Pool sizes define the fleet; an explicit conflicting
         // --replicas would otherwise be silently ignored.
-        if f.contains_key("replicas") && p + d != replicas {
-            return Err(cli_err(format!(
-                "--replicas {replicas} conflicts with --disaggregate {p}:{d} \
-                 (the pools make a {}-replica fleet; drop --replicas or make them agree)",
-                p + d
-            )));
-        }
+        check_disaggregate_replicas(&f, replicas, pools)?;
     }
+    let prefix_cache = parse_prefix_cache(&f)?;
     let kv_budget = match f.get("kv-budget-gb") {
         Some(v) => {
             let gb: f64 = v
@@ -260,9 +103,23 @@ fn run_serve(args: &[String]) -> Result<()> {
         arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
     if TRAFFIC_FLAGS.iter().any(|k| f.contains_key(*k)) {
         // Open-loop traffic engine (DESIGN.md §Traffic).
-        return run_serve_traffic(&f, &m, requests, max_batch, replicas, policy, disaggregate, kv_budget);
+        return run_serve_traffic(
+            &f,
+            &m,
+            requests,
+            max_batch,
+            replicas,
+            policy,
+            disaggregate,
+            kv_budget,
+            prefix_cache,
+        );
     }
-    if replicas <= 1 && disaggregate.is_none() && !f.contains_key("policy") && kv_budget.is_none()
+    if replicas <= 1
+        && disaggregate.is_none()
+        && !f.contains_key("policy")
+        && kv_budget.is_none()
+        && prefix_cache.is_none()
     {
         // Single node, no routing: the original serving path.
         println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
@@ -278,6 +135,7 @@ fn run_serve(args: &[String]) -> Result<()> {
                 disaggregate,
                 sessions,
                 kv_budget,
+                prefix_cache,
             )?
         );
     }
@@ -297,6 +155,7 @@ fn run_serve_traffic(
     policy: Policy,
     disaggregate: Option<(usize, usize)>,
     kv_budget: Option<Bytes>,
+    prefix_cache: Option<PrefixCacheConfig>,
 ) -> Result<()> {
     use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
 
@@ -377,6 +236,7 @@ fn run_serve_traffic(
         kv_budget,
         shed_tokens,
         autoscale,
+        prefix_cache,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);

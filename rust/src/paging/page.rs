@@ -236,6 +236,19 @@ impl PageTable {
         out
     }
 
+    /// Evict *and unregister* `id`: drop its local pages and forget the
+    /// tensor entirely (the shared prefix cache recycles extent slots
+    /// this way — a plain [`Self::evict`] would leave dead entries
+    /// accumulating in victim scans). No-op on pinned tensors.
+    pub fn remove(&mut self, id: TensorId) -> Evicted {
+        if self.tensors.get(&id).is_some_and(|e| e.pinned) {
+            return Evicted::default();
+        }
+        let out = self.evict(id);
+        self.tensors.remove(&id);
+        out
+    }
+
     /// Iterate all tensors (policy victim scans).
     pub fn iter(&self) -> impl Iterator<Item = (&TensorId, &TensorEntry)> {
         self.tensors.iter()
@@ -337,6 +350,29 @@ mod tests {
         // The grown part of the already-resident page counts as resident.
         assert_eq!(t.resident_bytes(), b(200.0));
         assert_eq!(t.missing_bytes(TensorId(9)), b(60.0));
+    }
+
+    #[test]
+    fn remove_unregisters_and_frees_residency() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(4), b(250.0));
+        t.page_in(TensorId(4), 1, true);
+        let ev = t.remove(TensorId(4));
+        assert_eq!(ev.bytes, b(250.0));
+        assert_eq!(ev.dirty_bytes, b(250.0));
+        assert!(!t.contains(TensorId(4)), "entry is gone, not just evicted");
+        assert_eq!(t.resident_bytes(), Bytes::ZERO);
+        assert_eq!(t.registered_bytes(), Bytes::ZERO);
+        // Re-registering the same id starts from scratch.
+        t.register(TensorId(4), b(50.0));
+        assert_eq!(t.registered_bytes(), b(50.0));
+        assert_eq!(t.missing_bytes(TensorId(4)), b(50.0));
+        // Pinned tensors survive removal attempts.
+        t.pin(TensorId(4));
+        t.page_in(TensorId(4), 2, false);
+        assert_eq!(t.remove(TensorId(4)), Evicted::default());
+        assert!(t.contains(TensorId(4)));
+        assert_eq!(t.resident_bytes(), b(50.0));
     }
 
     #[test]

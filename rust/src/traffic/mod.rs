@@ -120,8 +120,21 @@ pub fn generate(cfg: &TrafficConfig) -> Result<Vec<Request>> {
         let grown = turn as usize * class.turn_growth;
         let plen = (rng.range(lo as u64, hi as u64) as usize + grown).min(cfg.max_prompt);
         let gen = rng.range(class.gen_lo as u64, class.gen_hi as u64).max(1) as usize;
+        // Session classes share their *conversation head*: turn `t`
+        // carries the affinity prefix plus everything accumulated by the
+        // previous turns, all derived from (marker, position) — so a
+        // later turn's prompt extends an earlier turn's token chain,
+        // which is exactly what the shared prefix cache
+        // (DESIGN.md §Prefix-Cache) indexes. Only the fresh per-turn
+        // tail varies by request. One-shot classes keep the old shape:
+        // a unique 32-token marker prefix, request-specific tail.
+        let shared = if class.sessions > 0 {
+            (AFFINITY_PREFIX + grown).min(plen)
+        } else {
+            plen.min(AFFINITY_PREFIX)
+        };
         let mut prompt = Vec::with_capacity(plen);
-        for i in 0..plen.min(AFFINITY_PREFIX) {
+        for i in 0..shared {
             prompt.push(prefix_token(marker, i));
         }
         for i in prompt.len()..plen {
@@ -133,6 +146,7 @@ pub fn generate(cfg: &TrafficConfig) -> Result<Vec<Request>> {
             max_new_tokens: gen,
             arrival: t,
             slo: class.slo_for(cfg.slo),
+            ..Default::default()
         });
     }
     Ok(out)
@@ -229,6 +243,41 @@ mod tests {
             lens.last().unwrap() > lens.first().unwrap(),
             "context must grow across turns: {lens:?}"
         );
+    }
+
+    #[test]
+    fn session_turns_extend_a_shared_conversation_head() {
+        // Within one agentic session, turn t+1's prompt must share a
+        // strictly longer prefix with turn t than the 32-token affinity
+        // marker alone — the chain the shared prefix cache reuses.
+        let reqs = generate(&cfg("agentic", 120)).unwrap();
+        let keys: Vec<u64> = reqs.iter().map(|r| r.affinity_key()).collect();
+        let mut best_growth = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            for (j, s) in reqs.iter().enumerate().skip(i + 1) {
+                if keys[i] != keys[j] {
+                    continue;
+                }
+                let common = r
+                    .prompt
+                    .iter()
+                    .zip(&s.prompt)
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                best_growth = best_growth.max(common);
+            }
+        }
+        assert!(
+            best_growth > AFFINITY_PREFIX,
+            "deep session turns must share more than the {AFFINITY_PREFIX}-token marker \
+             (best shared prefix: {best_growth})"
+        );
+        // Requests of different sessions still diverge inside the marker.
+        let distinct = reqs
+            .iter()
+            .zip(reqs.iter().skip(1))
+            .any(|(a, b)| a.affinity_key() != b.affinity_key());
+        assert!(distinct);
     }
 
     #[test]

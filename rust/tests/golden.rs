@@ -10,7 +10,9 @@
 //! `FH_GOLDEN_REGEN=1 cargo test -q --test golden` regenerates it after
 //! an *intentional* cost-model change.
 
-use fenghuang::coordinator::{AutoscaleConfig, Cluster, ClusterConfig, ClusterReport};
+use fenghuang::coordinator::{
+    AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig,
+};
 use fenghuang::models::arch::gpt3_175b;
 use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::Bytes;
@@ -59,6 +61,17 @@ fn observe(prefix: &str, r: &ClusterReport, out: &mut BTreeMap<String, f64>) {
     ] {
         out.insert(k, v);
     }
+    if let Some(pc) = &r.prefix_cache {
+        for (k, v) in [
+            m("prefix_hit_rate", pc.hit_rate),
+            m("prefix_hit_tokens", pc.hit_tokens as f64),
+            m("prefill_tokens_saved", r.fleet.prefill_tokens_saved as f64),
+            m("prefix_fetch_ms", r.fleet.prefix_fetch.as_ms()),
+            m("prefix_pool_peak_gb", pc.pool_bytes_peak.as_gb()),
+        ] {
+            out.insert(k, v);
+        }
+    }
 }
 
 /// Every metric the snapshot pins, from fresh runs.
@@ -82,6 +95,49 @@ fn current_metrics() -> BTreeMap<String, f64> {
         32,
     );
     observe("quad", &quad, &mut out);
+    // The `serve --qps` path end to end: diurnal mixed traffic with the
+    // default SLO and front-door shedding on a 2-replica fleet.
+    let serve_tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps: 12.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat+agentic+batch").expect("mix"),
+        requests: 32,
+        seed: 13,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    let mut fleet = Cluster::fh4(
+        2,
+        &gpt3_175b(),
+        ClusterConfig { shed_tokens: Some(12_000), ..Default::default() },
+    )
+    .expect("cluster");
+    let serve = fleet.run(traffic::generate(&serve_tc).expect("workload")).expect("run");
+    observe("serve", &serve, &mut out);
+    // Shared prefix cache over agentic sessions: the cross-replica reuse
+    // path (DESIGN.md §Prefix-Cache) pinned from day one.
+    let prefix_tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").expect("mix"),
+        requests: 32,
+        seed: 17,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    let mut fleet = Cluster::fh4(
+        2,
+        &gpt3_175b(),
+        ClusterConfig { prefix_cache: Some(PrefixCacheConfig::default()), ..Default::default() },
+    )
+    .expect("cluster");
+    let prefix = fleet.run(traffic::generate(&prefix_tc).expect("workload")).expect("run");
+    assert!(
+        prefix.fleet.prefill_tokens_saved > 0,
+        "agentic sessions must reuse the shared prefix"
+    );
+    observe("prefix", &prefix, &mut out);
     out
 }
 

@@ -1,0 +1,207 @@
+//! Property tests for the shared prefix-KV cache
+//! (DESIGN.md §Prefix-Cache): random seeded insert/lookup sequences
+//! against small pool capacities, with the trie's structural and ledger
+//! invariants re-checked after every operation.
+//!
+//! Invariants pinned:
+//! * longest-prefix lookup never returns more tokens than were inserted
+//!   for any prompt sharing that prefix;
+//! * eviction never orphans children, never breaks parent/child links,
+//!   and keeps the byte ledger exactly `live extents × bytes/token`,
+//!   within the capacity derived from the node's pool tier;
+//! * hit/insert/evict counters obey their conservation laws across
+//!   arbitrary operation interleavings.
+
+use fenghuang::config::fh4_15xm;
+use fenghuang::coordinator::{PrefixCache, PrefixCacheConfig};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::models::memory;
+use fenghuang::paging::{PolicyKind, TierModel};
+use fenghuang::traffic::XorShift;
+use fenghuang::units::Bandwidth;
+
+fn sys() -> fenghuang::config::SystemConfig {
+    fh4_15xm(Bandwidth::tbps(4.8))
+}
+
+fn cache(cfg: PrefixCacheConfig) -> PrefixCache {
+    PrefixCache::new(cfg, &sys(), &gpt3_175b()).expect("cache")
+}
+
+/// Random prompt over a tiny alphabet with a session-style shared head:
+/// prompts of one "session" share their first `head` tokens, so lookups
+/// actually traverse shared chains.
+fn prompt(rng: &mut XorShift, session: u64, head: usize, len: usize) -> Vec<i32> {
+    let mut p = Vec::with_capacity(len);
+    for i in 0..len {
+        if i < head {
+            p.push(((session * 131 + i as u64 * 7) % 17) as i32 + 1);
+        } else {
+            p.push((rng.range(1, 17)) as i32);
+        }
+    }
+    p
+}
+
+/// Longest common prefix of two token slices.
+fn lcp(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+#[test]
+fn random_sequences_preserve_invariants_and_lookup_bounds() {
+    for seed in [1u64, 7, 42] {
+        for policy in [PolicyKind::Lru, PolicyKind::Heat] {
+            let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+            // Tight capacity (~40 extents) so eviction churns constantly.
+            let mut c = cache(PrefixCacheConfig {
+                capacity: Some(bpt * 40.0),
+                policy,
+                max_tokens: 64,
+                ..Default::default()
+            });
+            let mut rng = XorShift::new(seed);
+            // Everything ever inserted, truncated to the indexed depth.
+            let mut inserted: Vec<Vec<i32>> = Vec::new();
+            for step in 0..300 {
+                let session = rng.range(0, 5);
+                let head = rng.range(2, 12) as usize;
+                let len = rng.range(head as u64 + 1, 30) as usize;
+                let p = prompt(&mut rng, session, head, len);
+                if rng.next_f64() < 0.5 {
+                    let before = c.stats.lookups;
+                    let hit = c.lookup(&p);
+                    assert_eq!(c.stats.lookups, before + 1, "every probe is counted");
+                    // The lookup can never know more of this prompt than
+                    // the longest inserted chain sharing its prefix —
+                    // eviction only ever shrinks what is reachable.
+                    let bound = inserted
+                        .iter()
+                        .map(|q| lcp(&p, q))
+                        .max()
+                        .unwrap_or(0)
+                        .min(p.len() - 1)
+                        .min(64);
+                    assert!(
+                        hit.tokens <= bound,
+                        "seed {seed} step {step}: lookup returned {} tokens, \
+                         upper bound {bound}",
+                        hit.tokens
+                    );
+                    if hit.tokens > 0 {
+                        assert!(hit.fetch.value() > 0.0, "hits charge a fetch");
+                        assert!(
+                            (hit.bytes.value() - c.bytes_per_token().value() * hit.tokens as f64)
+                                .abs()
+                                < 1e-6,
+                            "hit bytes must match the extent ledger"
+                        );
+                    }
+                } else {
+                    let replica = rng.range(0, 3) as usize;
+                    c.insert(&p, replica);
+                    inserted.push(p[..p.len().min(64)].to_vec());
+                }
+                c.check_invariants()
+                    .unwrap_or_else(|e| panic!("seed {seed} step {step} [{policy:?}]: {e}"));
+                assert!(c.held_bytes() <= c.capacity(), "capacity breached at step {step}");
+            }
+            assert!(c.stats.evicted_tokens > 0, "tight capacity must churn");
+            // Structural hit guarantee: a chain inserted last is
+            // path-protected during its own insert, so an immediate
+            // re-probe must traverse it.
+            let probe: Vec<i32> = (1..=12).collect();
+            c.insert(&probe, 0);
+            assert_eq!(c.lookup(&probe).tokens, 11);
+            assert!(c.stats.hits > 0, "shared heads must produce hits");
+            c.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn byte_accounting_is_exact_against_the_tier_model() {
+    // Capacity derived from the pool share must equal the TierModel's
+    // remote capacity times the share — the cache and the paging layer
+    // must agree on what the pool is.
+    let share = 0.125;
+    let c = cache(PrefixCacheConfig { pool_share: share, ..Default::default() });
+    let pool = TierModel::from_system(&sys())
+        .remote
+        .capacity
+        .expect("TAB node has a pool");
+    assert!(
+        (c.capacity().value() - pool.value() * share).abs() < 1e-6,
+        "cache capacity {} vs tier share {}",
+        c.capacity().value(),
+        pool.value() * share
+    );
+    // Ledger exactness: insert k extents, held == k × bytes/token to the
+    // bit (all quantities are integer-valued f64s below 2^53).
+    let mut c = cache(PrefixCacheConfig::default());
+    let p: Vec<i32> = (1..=37).collect();
+    c.insert(&p, 0);
+    assert_eq!(c.entries(), 37);
+    assert_eq!(c.held_bytes().value(), c.bytes_per_token().value() * 37.0);
+    // Re-inserting is idempotent on the ledger.
+    c.insert(&p, 1);
+    assert_eq!(c.entries(), 37);
+    assert_eq!(c.held_bytes().value(), c.bytes_per_token().value() * 37.0);
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn counters_are_conserved_across_churn() {
+    let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+    let mut c = cache(PrefixCacheConfig {
+        capacity: Some(bpt * 25.0),
+        max_tokens: 32,
+        ..Default::default()
+    });
+    let mut rng = XorShift::new(99);
+    let mut lookups = 0u64;
+    for _ in 0..200 {
+        let session = rng.range(0, 3);
+        let p = prompt(&mut rng, session, 6, 20);
+        c.insert(&p, 0);
+        let _ = c.lookup(&p);
+        lookups += 1;
+    }
+    assert_eq!(c.stats.lookups, lookups);
+    assert!(c.stats.hits <= c.stats.lookups);
+    assert!(c.stats.hit_tokens <= c.stats.probed_tokens);
+    assert_eq!(
+        c.stats.inserted_tokens - c.stats.evicted_tokens,
+        c.entries() as u64,
+        "inserted − evicted must equal the live extent count"
+    );
+    assert!(c.stats.bytes_peak <= c.capacity());
+    assert!(c.held_bytes() <= c.stats.bytes_peak);
+    c.check_invariants().unwrap();
+}
+
+#[test]
+fn heat_policy_protects_reused_chains() {
+    // One hot session probed repeatedly, many cold one-shot prompts:
+    // under the heat policy the hot chain must survive the churn.
+    let bpt = memory::kv_cache_bytes(&gpt3_175b(), 1, 1);
+    let mut c = cache(PrefixCacheConfig {
+        capacity: Some(bpt * 30.0),
+        policy: PolicyKind::Heat,
+        max_tokens: 32,
+        ..Default::default()
+    });
+    let hot: Vec<i32> = (1..=10).collect();
+    c.insert(&hot, 0);
+    let mut rng = XorShift::new(5);
+    for i in 0..40 {
+        // Cold traffic with a disjoint token alphabet.
+        let cold: Vec<i32> = (0..12).map(|j| 100 + i * 13 + j).collect();
+        c.insert(&cold, 1);
+        // Keep the hot chain hot.
+        assert_eq!(c.lookup(&hot).tokens, 9, "hot chain evicted at round {i}");
+        let _ = rng.next_u64();
+        c.check_invariants().unwrap();
+    }
+    assert!(c.stats.evicted_tokens > 0, "cold churn must evict");
+}

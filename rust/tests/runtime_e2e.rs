@@ -137,7 +137,7 @@ fn serving_loop_over_pjrt_completes_with_real_tokens() {
             prompt: (0..20).map(|i| ((id as usize + i) % meta.vocab) as i32).collect(),
             max_new_tokens: 3,
             arrival: Seconds::ZERO,
-            slo: None,
+            ..Default::default()
         })
         .collect();
     sched.submit_all(reqs);

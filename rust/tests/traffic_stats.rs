@@ -1,0 +1,175 @@
+//! Statistical tests for the open-loop arrival processes
+//! (DESIGN.md §Traffic): the generators must not just run — their
+//! *distributions* must match what they claim to model. Every test is
+//! seeded, so these are deterministic regressions, not flaky monte-carlo
+//! checks; tolerances are sized at many standard errors so only a real
+//! distribution change can trip them.
+
+use fenghuang::traffic::{arrival_times, ArrivalConfig, ArrivalPattern, XorShift};
+use fenghuang::units::Seconds;
+
+fn times(cfg: &ArrivalConfig, n: usize, seed: u64) -> Vec<Seconds> {
+    arrival_times(cfg, n, &mut XorShift::new(seed)).expect("arrivals")
+}
+
+/// Arrival counts per unit-length window over the span covered by `a`.
+fn window_counts(a: &[Seconds], window_s: f64) -> Vec<u64> {
+    let span = a.last().map(|t| t.value()).unwrap_or(0.0);
+    let n = (span / window_s).floor() as usize;
+    let mut counts = vec![0u64; n.max(1)];
+    for t in a {
+        let w = (t.value() / window_s) as usize;
+        if w < counts.len() {
+            counts[w] += 1;
+        }
+    }
+    counts
+}
+
+/// Variance-to-mean ratio (index of dispersion) of window counts: ≈ 1
+/// for a Poisson process, ≫ 1 for a bursty (overdispersed) one.
+fn vmr(counts: &[u64]) -> f64 {
+    let n = counts.len() as f64;
+    let mean = counts.iter().sum::<u64>() as f64 / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = counts.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+    var / mean
+}
+
+#[test]
+fn poisson_sample_mean_matches_target_qps() {
+    // Mean inter-arrival gap of a Poisson process at rate λ is 1/λ; with
+    // n = 5000 the standard error of the sample mean is (1/λ)/√n ≈ 0.07%
+    // of the mean, so a ±10% band is ~70 standard errors — it can only
+    // fail if the generator's rate is actually wrong.
+    for (seed, qps) in [(3u64, 20.0f64), (11, 5.0), (29, 80.0)] {
+        let cfg = ArrivalConfig { pattern: ArrivalPattern::Poisson, qps, ..Default::default() };
+        let n = 5000;
+        let a = times(&cfg, n, seed);
+        assert_eq!(a.len(), n);
+        let span = a.last().unwrap().value();
+        let rate = n as f64 / span;
+        assert!(
+            (rate - qps).abs() < 0.1 * qps,
+            "seed {seed}: empirical rate {rate:.3} vs target {qps}"
+        );
+        // Exponential gaps: the coefficient of variation of the gap
+        // distribution is 1; sample CV must land near it.
+        let gaps: Vec<f64> = std::iter::once(a[0].value())
+            .chain(a.windows(2).map(|w| (w[1] - w[0]).value()))
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.15, "seed {seed}: gap CV {cv:.3} far from exponential");
+    }
+}
+
+#[test]
+fn bursty_counts_are_overdispersed_relative_to_poisson() {
+    // The MMPP on-off process clumps arrivals into on-state bursts: its
+    // window-count variance-to-mean ratio must clearly exceed the
+    // Poisson index of dispersion (≈ 1).
+    let qps = 40.0;
+    let bursty = ArrivalConfig {
+        pattern: ArrivalPattern::Bursty,
+        qps,
+        burst_on: Seconds::new(1.0),
+        burst_off: Seconds::new(3.0),
+        burst_idle_frac: 0.05,
+        ..Default::default()
+    };
+    let poisson = ArrivalConfig { pattern: ArrivalPattern::Poisson, qps, ..Default::default() };
+    let vb = vmr(&window_counts(&times(&bursty, 3000, 5), 1.0));
+    let vp = vmr(&window_counts(&times(&poisson, 3000, 5), 1.0));
+    assert!(vp < 2.0, "Poisson dispersion {vp:.2} should sit near 1");
+    assert!(vb > 2.0, "bursty dispersion {vb:.2} must be overdispersed");
+    assert!(
+        vb > 2.0 * vp,
+        "burstiness must dominate: bursty VMR {vb:.2} vs poisson {vp:.2}"
+    );
+}
+
+#[test]
+fn diurnal_rate_modulation_repeats_with_the_period() {
+    // λ(t) troughs at t ≡ 0 (mod P) and peaks at t ≡ P/2: the peak-window
+    // count must dwarf the trough-window count in *both* of the first two
+    // periods — same phase, one period apart — which pins the period,
+    // not just "some modulation".
+    let period = 20.0;
+    let cfg = ArrivalConfig {
+        pattern: ArrivalPattern::Diurnal,
+        qps: 50.0,
+        diurnal_period: Seconds::new(period),
+        diurnal_floor: 0.05,
+        ..Default::default()
+    };
+    let a = times(&cfg, 1600, 9);
+    let span = a.last().unwrap().value();
+    assert!(span > 2.0 * period, "sample must cover two full periods, got {span:.1}s");
+    let count_in = |lo: f64, hi: f64| {
+        a.iter().filter(|t| t.value() >= lo && t.value() < hi).count() as f64
+    };
+    for cycle in 0..2 {
+        let base = cycle as f64 * period;
+        let trough = count_in(base, base + 0.1 * period);
+        let peak = count_in(base + 0.45 * period, base + 0.55 * period);
+        assert!(
+            peak > 3.0 * trough.max(1.0),
+            "cycle {cycle}: peak window {peak} must dwarf trough window {trough}"
+        );
+    }
+    // Same-phase windows across consecutive periods carry similar rates:
+    // the second peak is within a factor of three of the first (loose —
+    // both are ≈ P·qps/10 in expectation).
+    let p1 = count_in(0.45 * period, 0.55 * period);
+    let p2 = count_in(1.45 * period, 1.55 * period);
+    assert!(
+        p2 > p1 / 3.0 && p2 < p1 * 3.0,
+        "periodicity broken: peak counts {p1} vs {p2} one period apart"
+    );
+}
+
+#[test]
+fn same_seed_regenerates_byte_identical_streams() {
+    // Bit-for-bit regeneration is the contract the golden tests and the
+    // `--seed` CLI flag stand on — assert exact equality, not tolerance.
+    for pattern in ArrivalPattern::synthetic() {
+        let cfg = ArrivalConfig { pattern, qps: 17.0, ..Default::default() };
+        let a = times(&cfg, 500, 123);
+        let b = times(&cfg, 500, 123);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                x.value().to_bits() == y.value().to_bits(),
+                "{} diverged at arrival {i}: {x:?} vs {y:?}",
+                pattern.name()
+            );
+        }
+        let c = times(&cfg, 500, 124);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x != y),
+            "{} must vary with the seed",
+            pattern.name()
+        );
+    }
+    // The full generator composes arrivals + mix draws; it must be
+    // byte-identical too (prompt token streams included).
+    use fenghuang::traffic::{generate, TrafficConfig, WorkloadMix};
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("chat+rag+agentic+batch").expect("mix"),
+        requests: 200,
+        seed: 31,
+        ..Default::default()
+    };
+    let a = generate(&tc).expect("workload");
+    let b = generate(&tc).expect("workload");
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.prompt, y.prompt);
+        assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        assert!(x.arrival.value().to_bits() == y.arrival.value().to_bits());
+    }
+}

@@ -3,19 +3,20 @@
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
 # §Serve-Scale, §Traffic-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
 #   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
+#   scripts/bench_json.sh prefix     # just the shared prefix-cache sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 want="${1:-all}"
 
 case "$want" in
-    all|paging|serve|traffic) ;;
+    all|paging|serve|traffic|prefix) ;;
     *)
-        echo "error: unknown target '$want' (expected: all, paging, serve or traffic)" >&2
+        echo "error: unknown target '$want' (expected: all, paging, serve, traffic or prefix)" >&2
         exit 2
         ;;
 esac
@@ -32,6 +33,9 @@ if [[ "$want" == "all" || "$want" == "serve" ]]; then
 fi
 if [[ "$want" == "all" || "$want" == "traffic" ]]; then
     cargo bench --bench traffic_sweep -- --json
+fi
+if [[ "$want" == "all" || "$want" == "prefix" ]]; then
+    cargo bench --bench prefix_cache -- --json
 fi
 
 echo

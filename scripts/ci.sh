@@ -32,6 +32,29 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+# Test-count floor: future PRs must not silently drop tests. The count
+# is the number of #[test] annotations in the tree (toolchain-free, so
+# it also runs in environments without cargo); the committed floor moves
+# only via scripts/update_test_floor.sh.
+echo "== test-count floor =="
+tests_now=$(grep -rE '^\s*#\[test\]' rust benches examples --include='*.rs' | wc -l | tr -d ' ')
+floor_file=scripts/test_floor.txt
+if [[ -f "$floor_file" ]]; then
+    floor=$(tr -d '[:space:]' < "$floor_file")
+    echo "tests: $tests_now (floor: $floor)"
+    if (( tests_now < floor )); then
+        echo "error: test count dropped below the committed floor" >&2
+        echo "       ($tests_now < $floor — restore the tests, or lower the floor" >&2
+        echo "       deliberately via scripts/update_test_floor.sh with justification)" >&2
+        exit 1
+    fi
+    if (( tests_now > floor )); then
+        echo "notice: test count grew to $tests_now — bump the floor with scripts/update_test_floor.sh"
+    fi
+else
+    echo "notice: $floor_file missing — seed it with scripts/update_test_floor.sh and commit it"
+fi
+
 # The golden regression floor only binds across checkouts once the
 # snapshot the first test run generates is committed (rust/tests/golden.rs).
 if [[ -f rust/tests/golden_values.txt ]] && command -v git >/dev/null \
@@ -53,6 +76,7 @@ BENCHES=(
     fig4_workloads
     paging_sweep
     perf_hotpath
+    prefix_cache
     serve_scale
     tab_latency
     traffic_sweep
