@@ -1,0 +1,284 @@
+//! Bench target: shared-fabric contention sweep
+//! (EXPERIMENTS.md §Contention-Sweep).
+//!
+//! The question this bench exists to ask: do the savings every other
+//! experiment measures survive N replicas hammering one shared TAB pool?
+//! It sweeps replicas × mix × arbitration mode over a fixed-span
+//! replay-arrival stream (gap = 0.6 ms / N, so fleet size scales offered
+//! load against the fixed pool aggregate) with the shared prefix cache
+//! driving real fabric bytes, and reports:
+//!
+//! * fabric busy fraction and queueing-delay percentiles per cell —
+//!   the acceptance trend: both rise monotonically with replica count;
+//! * per-module byte imbalance for interleaved vs hashed placement;
+//! * the FH-vs-baseline communication speedup band: the same booked
+//!   transfers priced over a shared-nothing NVLink link (unloaded) vs
+//!   the contended TAB — EXPERIMENTS.md maps the band against the
+//!   paper's 16x–70x figure.
+//!
+//! `cargo bench --bench fabric_contention -- --json` writes
+//! `BENCH_fabric_contention.json` (scripts/bench_json.sh `contention`);
+//! `-- --smoke` (scripts/ci.sh) shrinks the sweep.
+
+mod common;
+
+use fenghuang::config::baseline8;
+use fenghuang::coordinator::{Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig};
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode, FabricReport};
+use fenghuang::fabric::FabricLatencies;
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::units::Seconds;
+
+const SEED: u64 = 7;
+
+/// Arbitration modes swept, keyed by label.
+fn contention_for(label: &str) -> ContentionConfig {
+    match label {
+        "off" => ContentionConfig::default(),
+        "shared" => ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+        "per-module" => {
+            ContentionConfig { mode: ContentionMode::PerModule, ..Default::default() }
+        }
+        "per-module-hashed" => ContentionConfig {
+            mode: ContentionMode::PerModule,
+            module_interleave: false,
+            ..Default::default()
+        },
+        other => panic!("unknown contention label {other}"),
+    }
+}
+
+/// Fixed-span deterministic stream: `requests` arrivals at a constant
+/// gap of 0.6 ms / replicas, so the offered fabric load scales with the
+/// fleet while the wall span stays put — the cleanest monotone axis.
+fn workload(mix: &str, replicas: usize, requests: usize) -> TrafficConfig {
+    let gap = Seconds::us(600.0 / replicas as f64);
+    TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Replay,
+            qps: 1.0 / gap.value(),
+            replay_gaps: vec![gap],
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse(mix).expect("mix"),
+        requests,
+        seed: SEED,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+    }
+}
+
+fn run(replicas: usize, mix: &str, requests: usize, contention: ContentionConfig) -> ClusterReport {
+    let cfg = ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        contention,
+        ..Default::default()
+    };
+    let mut cluster = Cluster::fh4(replicas, &gpt3_175b(), cfg).expect("cluster");
+    let reqs = traffic::generate(&workload(mix, replicas, requests)).expect("workload");
+    cluster.run(reqs).expect("run")
+}
+
+/// Communication cost of the booked transfer set on the contended TAB:
+/// per-transfer command latency + serialization + queueing.
+fn fh_comm(fr: &FabricReport, lat: &FabricLatencies) -> Seconds {
+    lat.tab_read * fr.transfers as f64 + fr.serialization + fr.queue_total
+}
+
+/// The same transfer set priced over the shared-nothing baseline link,
+/// unloaded: NVLink read+write commands plus raw serialization at the
+/// Baseline8 450 GB/s per-direction link.
+fn baseline_comm(fr: &FabricReport, lat: &FabricLatencies) -> Seconds {
+    (lat.nvlink_read + lat.nvlink_write) * fr.transfers as f64
+        + fr.bytes.over(baseline8().fabric_bw)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    let replica_sweep: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8, 12] };
+    let mixes: &[&str] = if smoke { &["agentic"] } else { &["agentic", "chat+agentic"] };
+    let per_replica_requests = if smoke { 24 } else { 48 };
+    let modes = ["off", "shared", "per-module", "per-module-hashed"];
+    let lat = FabricLatencies::default();
+
+    // Unloaded-baseline identity: an Off ledger with deliberately weird
+    // knobs must not perturb a single bit of the default run.
+    let plain = run(2, mixes[0], per_replica_requests * 2, ContentionConfig::default());
+    let weird_off = ContentionConfig {
+        mode: ContentionMode::Off,
+        ports: 7,
+        modules: 3,
+        window: Seconds::ns(1.0),
+        module_interleave: false,
+    };
+    let off = run(2, mixes[0], per_replica_requests * 2, weird_off);
+    assert_eq!(plain.makespan(), off.makespan(), "Off mode must be bit-identical");
+    assert_eq!(plain.fleet.prefix_fetch, off.fleet.prefix_fetch);
+    assert_eq!(
+        plain.fleet.ttft.percentile_ms(95.0),
+        off.fleet.ttft.percentile_ms(95.0)
+    );
+    assert!(off.fabric.is_none());
+    println!("off-mode identity: bit-identical to the unloaded baseline ✓\n");
+
+    println!(
+        "== fabric-contention sweep (gpt3, {} req/replica, fixed {:.1} ms offered span, seed {SEED}) ==",
+        per_replica_requests,
+        per_replica_requests as f64 * 0.6
+    );
+    println!(
+        "mix            mode               repl  busy%   q-p50(ms)  q-p95(ms)  q-p99(ms)  imbal  hotspot  booked(GB)  fetch(ms)  speedup"
+    );
+
+    let mut band: Option<(f64, f64)> = None;
+    for mix in mixes {
+        for mode in modes {
+            let mut prev_busy = -1.0f64;
+            let mut series: Vec<(usize, f64, f64, f64)> = Vec::new();
+            for &n in replica_sweep {
+                let r = run(n, mix, per_replica_requests * n, contention_for(mode));
+                assert_eq!(r.fleet.completed as usize, per_replica_requests * n);
+                let Some(fr) = r.fabric.clone() else {
+                    // Unloaded baseline row: report the unloaded fetch cost.
+                    println!(
+                        "{:<14} {:<18} {:>4}  {:>5}  {:>9}  {:>9}  {:>9}  {:>5}  {:>7}  {:>10}  {:>9.2}  {:>7}",
+                        mix, mode, n, "—", "—", "—", "—", "—", "—", "—",
+                        r.fleet.prefix_fetch.as_ms(),
+                        "—",
+                    );
+                    json_rows.push(format!(
+                        "{{\"section\": \"sweep\", \"mix\": {}, \"mode\": {}, \"replicas\": {}, \
+                         \"fetch_ms\": {:.4}, \"makespan_s\": {:.6}, \"p95_ttft_ms\": {:.3}}}",
+                        common::json_str(mix),
+                        common::json_str(mode),
+                        n,
+                        r.fleet.prefix_fetch.as_ms(),
+                        r.makespan().value(),
+                        r.fleet.ttft.percentile_ms(95.0),
+                    ));
+                    continue;
+                };
+                assert!(fr.transfers > 0, "prefix traffic must book transfers");
+                let fh = fh_comm(&fr, &lat);
+                let base = baseline_comm(&fr, &lat);
+                let speedup = base.value() / fh.value().max(1e-300);
+                band = Some(match band {
+                    None => (speedup, speedup),
+                    Some((lo, hi)) => (lo.min(speedup), hi.max(speedup)),
+                });
+                println!(
+                    "{:<14} {:<18} {:>4}  {:>5.1}  {:>9.3}  {:>9.3}  {:>9.3}  {:>5.2}  {:>7}  {:>10.1}  {:>9.2}  {:>6.1}x",
+                    mix,
+                    mode,
+                    n,
+                    100.0 * fr.busy_frac,
+                    fr.queue_p50.as_ms(),
+                    fr.queue_p95.as_ms(),
+                    fr.queue_p99.as_ms(),
+                    fr.module_imbalance,
+                    fr.hotspot_module,
+                    fr.bytes.as_gb(),
+                    r.fleet.prefix_fetch.as_ms(),
+                    speedup,
+                );
+                json_rows.push(format!(
+                    "{{\"section\": \"sweep\", \"mix\": {}, \"mode\": {}, \"replicas\": {}, \
+                     \"busy_frac\": {:.6}, \"queue_p50_ms\": {:.4}, \"queue_p95_ms\": {:.4}, \
+                     \"queue_p99_ms\": {:.4}, \"queue_total_ms\": {:.4}, \"imbalance\": {:.4}, \
+                     \"hotspot\": {}, \"bytes_gb\": {:.3}, \"transfers\": {}, \
+                     \"fabric_wait_ms\": {:.4}, \"fetch_ms\": {:.4}, \"makespan_s\": {:.6}, \
+                     \"p95_ttft_ms\": {:.3}, \"fh_comm_ms\": {:.4}, \"baseline_comm_ms\": {:.4}, \
+                     \"speedup\": {:.3}}}",
+                    common::json_str(mix),
+                    common::json_str(mode),
+                    n,
+                    fr.busy_frac,
+                    fr.queue_p50.as_ms(),
+                    fr.queue_p95.as_ms(),
+                    fr.queue_p99.as_ms(),
+                    fr.queue_total.as_ms(),
+                    fr.module_imbalance,
+                    fr.hotspot_module,
+                    fr.bytes.as_gb(),
+                    fr.transfers,
+                    r.fleet.fabric_wait.as_ms(),
+                    r.fleet.prefix_fetch.as_ms(),
+                    r.makespan().value(),
+                    r.fleet.ttft.percentile_ms(95.0),
+                    fh.as_ms(),
+                    base.as_ms(),
+                    speedup,
+                ));
+                // Acceptance trend: more replicas on the same pool can
+                // only busy it more.
+                assert!(
+                    fr.busy_frac >= prev_busy - 1e-12,
+                    "busy fraction regressed at {mix}/{mode}/{n}: {} after {}",
+                    fr.busy_frac,
+                    prev_busy
+                );
+                prev_busy = fr.busy_frac;
+                series.push((n, fr.busy_frac, fr.queue_p99.as_ms(), fr.queue_total.as_ms()));
+            }
+            if series.len() >= 2 {
+                let first = series.first().unwrap();
+                let last = series.last().unwrap();
+                assert!(
+                    last.1 > first.1,
+                    "{mix}/{mode}: busy fraction must grow across the replica sweep \
+                     ({:.4} → {:.4})",
+                    first.1,
+                    last.1
+                );
+                assert!(
+                    last.2 >= first.2 - 1e-9,
+                    "{mix}/{mode}: p99 queueing must not shrink with replicas \
+                     ({:.4} → {:.4} ms)",
+                    first.2,
+                    last.2
+                );
+                assert!(
+                    last.3 >= first.3 - 1e-9,
+                    "{mix}/{mode}: total queueing must not shrink with replicas"
+                );
+            }
+        }
+        // Hashed whole-transfer placement must skew at least as hard as
+        // uniform striping at the same scale (same cell, max replicas).
+        let n = *replica_sweep.last().unwrap();
+        let striped = run(n, mix, per_replica_requests * n, contention_for("per-module"));
+        let hashed =
+            run(n, mix, per_replica_requests * n, contention_for("per-module-hashed"));
+        let si = striped.fabric.as_ref().unwrap().module_imbalance;
+        let hi = hashed.fabric.as_ref().unwrap().module_imbalance;
+        assert!(
+            hi >= si - 1e-9,
+            "{mix}: hashed imbalance {hi:.4} below striped {si:.4}"
+        );
+        println!("  → {mix}: module imbalance striped {si:.3} vs hashed {hi:.3}");
+    }
+
+    let (lo, hi) = band.expect("contended cells must produce a speedup band");
+    assert!(lo.is_finite() && hi.is_finite() && lo > 0.0);
+    println!(
+        "\ncommunication speedup band vs shared-nothing baseline: {lo:.1}x – {hi:.1}x \
+         (paper's bulk-bandwidth ceiling ≈ {:.1}x; its 16x–70x figure is the \
+         small-message latency domain — see EXPERIMENTS.md §Contention-Sweep)",
+        fenghuang::config::fh4_15xm(fenghuang::units::Bandwidth::tbps(
+            fenghuang::config::DEFAULT_REMOTE_TBPS
+        ))
+        .fabric_bw
+        .value()
+            / baseline8().fabric_bw.value(),
+    );
+    json_rows.push(format!(
+        "{{\"section\": \"band\", \"speedup_lo\": {lo:.3}, \"speedup_hi\": {hi:.3}}}"
+    ));
+
+    if common::json_requested() {
+        common::write_rows_json("fabric_contention", &json_rows);
+    }
+}

@@ -12,6 +12,7 @@
 use fenghuang::coordinator::cluster::{session_workload, Cluster, ClusterConfig};
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::{AutoscaleConfig, PrefixCacheConfig};
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
 use fenghuang::models::arch::gpt3_175b;
 use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::Seconds;
@@ -106,5 +107,56 @@ fn main() -> fenghuang::Result<()> {
         rp.makespan().value(),
         rc.makespan().value(),
     );
+
+    println!("== shared-fabric congestion: the same cached traffic, pool arbitrated ==");
+    // Every run above charged the *unloaded* fabric latencies. Here the
+    // TAB is a finite, arbitrated resource (DESIGN.md §Fabric-Contention):
+    // a compressed burst of agentic traffic books its prefix fetches into
+    // the shared pool's bandwidth ledger, and queueing delay appears in
+    // TTFT — the question being whether the savings above survive N
+    // replicas sharing one pool.
+    let burst = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Replay,
+            qps: 10_000.0,
+            replay_gaps: vec![Seconds::us(100.0)],
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("agentic").expect("mix"),
+        requests: 96,
+        seed: 7,
+        max_prompt: model.max_seq as usize,
+        ..Default::default()
+    };
+    for (label, mode, interleave) in [
+        ("unloaded (off)", ContentionMode::Off, true),
+        ("shared pool", ContentionMode::Shared, true),
+        ("per-module, hashed", ContentionMode::PerModule, false),
+    ] {
+        let cfg = ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig {
+                mode,
+                module_interleave: interleave,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut cluster = Cluster::fh4(8, &model, cfg)?;
+        let r = cluster.run(traffic::generate(&burst)?)?;
+        match &r.fabric {
+            Some(fr) => println!(
+                "-- {label} --  p95 TTFT {:.1} ms | fetch stall {:.2} ms | {}",
+                r.fleet.ttft.percentile_ms(95.0),
+                r.fleet.prefix_fetch.as_ms(),
+                fr.summary_line().trim_end(),
+            ),
+            None => println!(
+                "-- {label} --  p95 TTFT {:.1} ms | fetch stall {:.2} ms | fabric unloaded",
+                r.fleet.ttft.percentile_ms(95.0),
+                r.fleet.prefix_fetch.as_ms(),
+            ),
+        }
+    }
     Ok(())
 }

@@ -11,6 +11,7 @@
 use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
 use crate::coordinator::prefix_cache::PrefixCacheConfig;
 use crate::error::{FhError, Result};
+use crate::fabric::contention::{ContentionConfig, ContentionMode};
 use crate::units::{Bandwidth, Bytes};
 use std::collections::HashMap;
 
@@ -38,11 +39,13 @@ pub const SERVE_FLAGS: &[&str] = &[
     "autoscale-min",
     "shed-tokens",
     "seed",
+    "fabric-contention",
 ];
 
 /// Serve flags that may appear without a value (`--autoscale` ≡
-/// `--autoscale on`, `--prefix-cache` ≡ `--prefix-cache on`).
-pub const SERVE_BARE: &[&str] = &["autoscale", "prefix-cache"];
+/// `--autoscale on`, `--prefix-cache` ≡ `--prefix-cache on`,
+/// `--fabric-contention` ≡ `--fabric-contention shared`).
+pub const SERVE_BARE: &[&str] = &["autoscale", "prefix-cache", "fabric-contention"];
 
 /// Any of these flags routes `serve` through the open-loop traffic
 /// engine instead of the legacy fixed-gap workload.
@@ -75,7 +78,11 @@ pub const PAGE_FLAGS: &[&str] = &[
     "pin-frac",
     "page-kv",
     "nmc",
+    "fabric-contention",
 ];
+
+/// Page flags that may appear without a value.
+pub const PAGE_BARE: &[&str] = &["fabric-contention"];
 
 pub fn cli_err(msg: String) -> FhError {
     FhError::Config(msg)
@@ -237,6 +244,39 @@ pub fn parse_prefix_cache(flags: &HashMap<String, String>) -> Result<Option<Pref
     Ok(Some(PrefixCacheConfig { capacity, ..Default::default() }))
 }
 
+/// Build the shared-fabric arbitration config from
+/// `--fabric-contention [off|shared|per-module]`
+/// (DESIGN.md §Fabric-Contention). A bare switch reads as `shared`; the
+/// default is off — every fabric charge stays unloaded and bit-identical.
+pub fn parse_fabric_contention(flags: &HashMap<String, String>) -> Result<ContentionConfig> {
+    match flags.get("fabric-contention") {
+        None => Ok(ContentionConfig::default()),
+        Some(v) => {
+            let mode = ContentionMode::parse(v).ok_or_else(|| {
+                cli_err(format!(
+                    "--fabric-contention wants off, shared or per-module, got '{v}'"
+                ))
+            })?;
+            Ok(ContentionConfig { mode, ..Default::default() })
+        }
+    }
+}
+
+/// Reject active fabric contention on a shared-nothing system: there is
+/// no shared TAB pool to arbitrate (the same rule `FabricClock` enforces,
+/// surfaced at flag-validation time with the preset's name).
+pub fn check_contention_fabric(sys: &SystemConfig, cfg: &ContentionConfig) -> Result<()> {
+    if cfg.mode != ContentionMode::Off && !sys.is_fenghuang() {
+        return Err(cli_err(format!(
+            "--fabric-contention {} models the shared TAB pool, but system '{}' is \
+             shared-nothing (pick a fh4 system or drop the flag)",
+            cfg.mode.name(),
+            sys.name
+        )));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +426,59 @@ mod tests {
     }
 
     #[test]
+    fn fabric_contention_flag_family_parses_and_conflicts() {
+        // Absent → Off (the bit-identical default).
+        let f = parse_flags("serve", &args(&[]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        assert_eq!(parse_fabric_contention(&f).unwrap().mode, ContentionMode::Off);
+        // Bare switch defaults to shared arbitration.
+        let f = parse_flags("serve", &args(&["--fabric-contention"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        assert_eq!(parse_fabric_contention(&f).unwrap().mode, ContentionMode::Shared);
+        // Explicit modes.
+        for (v, want) in [
+            ("off", ContentionMode::Off),
+            ("shared", ContentionMode::Shared),
+            ("per-module", ContentionMode::PerModule),
+        ] {
+            let f = parse_flags(
+                "serve",
+                &args(&["--fabric-contention", v]),
+                SERVE_FLAGS,
+                SERVE_BARE,
+            )
+            .unwrap();
+            assert_eq!(parse_fabric_contention(&f).unwrap().mode, want, "mode {v}");
+        }
+        // Unknown mode is rejected with the expected vocabulary.
+        let f = parse_flags(
+            "serve",
+            &args(&["--fabric-contention", "turbo"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let e = parse_fabric_contention(&f).unwrap_err().to_string();
+        assert!(e.contains("per-module"), "{e}");
+        // The page subcommand takes the same family as a bare switch.
+        let f = parse_flags(
+            "page",
+            &args(&["--fabric-contention", "--model", "gpt3"]),
+            PAGE_FLAGS,
+            PAGE_BARE,
+        )
+        .unwrap();
+        let cfg = parse_fabric_contention(&f).unwrap();
+        assert_eq!(cfg.mode, ContentionMode::Shared);
+        // Active contention conflicts with shared-nothing systems; Off
+        // and TAB systems pass.
+        assert!(check_contention_fabric(&baseline8(), &cfg).is_err());
+        let e = check_contention_fabric(&baseline8(), &cfg).unwrap_err().to_string();
+        assert!(e.contains("Baseline8"), "{e}");
+        check_contention_fabric(&fh4_15xm(Bandwidth::tbps(4.8)), &cfg).unwrap();
+        check_contention_fabric(&baseline8(), &ContentionConfig::default()).unwrap();
+    }
+
+    #[test]
     fn system_presets_resolve_case_insensitively() {
         assert_eq!(system_by_name("baseline8", 4.8).unwrap().name, "Baseline8");
         assert_eq!(system_by_name("FH4-1.5xM", 4.8).unwrap().name, "FH4-1.5xM");
@@ -404,7 +497,12 @@ mod tests {
         for k in SERVE_BARE {
             assert!(SERVE_FLAGS.contains(k), "--{k} missing from SERVE_FLAGS");
         }
+        for k in PAGE_BARE {
+            assert!(PAGE_FLAGS.contains(k), "--{k} missing from PAGE_FLAGS");
+        }
         assert!(SERVE_FLAGS.contains(&"prefix-cache"));
         assert!(SERVE_FLAGS.contains(&"prefix-cache-gb"));
+        assert!(SERVE_FLAGS.contains(&"fabric-contention"));
+        assert!(PAGE_FLAGS.contains(&"fabric-contention"));
     }
 }

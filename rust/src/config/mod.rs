@@ -194,6 +194,16 @@ impl SystemConfig {
         if self.compute_per_gpu.value() <= 0.0 || self.local_bw.value() <= 0.0 {
             return Err(crate::FhError::Config("compute/bandwidth must be positive".into()));
         }
+        if self.fabric_bw.value() <= 0.0 {
+            // A zero/negative fabric bandwidth turns every `bytes / bw`
+            // charge downstream (collectives, paging DMA, prefix fetches,
+            // the contention ledger) into NaN/inf latencies — reject it
+            // at the config boundary instead.
+            return Err(crate::FhError::Config(format!(
+                "fabric bandwidth must be positive, got {} GB/s",
+                self.fabric_bw.as_gbps()
+            )));
+        }
         if self.fabric == FabricKind::TabSharedMemory && self.remote_capacity.value() <= 0.0 {
             return Err(crate::FhError::Config(
                 "FengHuang systems need remote memory capacity".into(),
@@ -330,6 +340,32 @@ mod tests {
         f.remote_capacity = Bytes::ZERO;
         assert!(f.validate().is_err());
         assert!(baseline8().validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_non_positive_bandwidths() {
+        // Zero or negative fabric bandwidth would produce NaN/inf
+        // latencies in every downstream `bytes / bw` charge.
+        for bad_bw in [0.0, -4.8] {
+            let mut f = fh4_15xm(Bandwidth::tbps(4.8));
+            f.fabric_bw = Bandwidth::tbps(bad_bw);
+            let e = f.validate().unwrap_err().to_string();
+            assert!(e.contains("fabric bandwidth"), "{e}");
+            let mut b = baseline8();
+            b.fabric_bw = Bandwidth::gbps(bad_bw);
+            assert!(b.validate().is_err());
+        }
+        // Local-memory bandwidth is equally guarded.
+        let mut f = fh4_15xm(Bandwidth::tbps(4.8));
+        f.local_bw = Bandwidth::ZERO;
+        assert!(f.validate().is_err());
+        let mut f = fh4_15xm(Bandwidth::tbps(4.8));
+        f.local_bw = Bandwidth::tbps(-1.0);
+        assert!(f.validate().is_err());
+        // The positive presets all still pass.
+        for sys in [baseline8(), fh4_15xm(Bandwidth::tbps(4.0)), fh4_20xm(Bandwidth::tbps(6.4))] {
+            sys.validate().unwrap();
+        }
     }
 
     #[test]

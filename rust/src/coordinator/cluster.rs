@@ -33,9 +33,18 @@ use super::router::{Policy, Router};
 use super::scheduler::{SchedMode, Scheduler};
 use crate::config::{fh4_rack, SystemConfig};
 use crate::error::{FhError, Result};
+use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
 use crate::models::arch::ModelArch;
 use crate::models::memory;
 use crate::units::{Bandwidth, Bytes, Seconds};
+
+/// Metadata payload booked for a TAB KV handoff (the page-table
+/// ownership record — the KV itself never moves on a shared pool).
+const HANDOFF_META_BYTES: Bytes = Bytes(4096.0);
+
+/// Metadata payload booked when a replica publishes prefix KV to the
+/// shared cache (trie/page-table update; the KV was produced in-pool).
+const PREFIX_PUBLISH_META_BYTES: Bytes = Bytes(4096.0);
 
 /// Elastic-autoscaler knobs (DESIGN.md §Traffic). Every `interval` of
 /// virtual time the controller reads the fleet's outstanding routed
@@ -92,6 +101,19 @@ pub struct ClusterConfig {
     /// KV produced by any replica becomes reusable by every replica.
     /// Requires a FengHuang (TAB) fabric.
     pub prefix_cache: Option<PrefixCacheConfig>,
+    /// Shared-fabric arbitration (DESIGN.md §Fabric-Contention): books
+    /// the fleet-level transfers — KV handoffs, prefix-cache fetches and
+    /// publications — against per-port / per-module bandwidth budgets and
+    /// charges the resulting queueing delay. `ContentionMode::Off` (the
+    /// default) keeps every charge bit-identical to the unloaded model.
+    /// Active modes require a FengHuang (TAB) fabric; `ports == 0`
+    /// resolves to the fleet size. Scope note: the `kv_budget` spill
+    /// stream (`paging::KvPressure`) is computed inside each replica's
+    /// backend and still pays the *unloaded* fabric bandwidth — a
+    /// contended run with a KV budget understates pool load by those
+    /// spill bytes (DESIGN.md §Fabric-Contention names this the next
+    /// consumer to route through the ledger).
+    pub contention: ContentionConfig,
 }
 
 impl Default for ClusterConfig {
@@ -104,6 +126,7 @@ impl Default for ClusterConfig {
             shed_tokens: None,
             autoscale: None,
             prefix_cache: None,
+            contention: ContentionConfig::default(),
         }
     }
 }
@@ -145,6 +168,9 @@ pub struct ClusterReport {
     pub kv_spilled_peak: Bytes,
     /// Shared prefix-cache observables (None when the cache is off).
     pub prefix_cache: Option<PrefixCacheReport>,
+    /// Shared-fabric arbitration observables: busy fraction, queueing
+    /// percentiles, per-module imbalance (None with contention off).
+    pub fabric: Option<FabricReport>,
     /// Whether the elastic autoscaler drove this run.
     pub elastic: bool,
     /// Provisioned capacity: ∫ active-replica-count dt over the run —
@@ -231,6 +257,9 @@ impl ClusterReport {
                 self.kv_spilled_peak.as_gb()
             ));
         }
+        if let Some(fr) = &self.fabric {
+            s.push_str(&fr.summary_line());
+        }
         if let Some(pc) = &self.prefix_cache {
             s.push_str(&format!(
                 "prefix-cache: hit-rate {:.1}% ({}/{} probes) | {} tokens reused | \
@@ -290,6 +319,12 @@ pub struct Cluster {
     /// Cluster-wide shared prefix-KV cache in the TAB pool — one
     /// instance serving every replica (DESIGN.md §Prefix-Cache).
     prefix_cache: Option<PrefixCache>,
+    /// Shared-fabric arbitration ledger (DESIGN.md §Fabric-Contention);
+    /// None with contention off, keeping every charge unloaded.
+    fabric: Option<FabricClock>,
+    /// Total fabric queueing delay charged to requests (handoffs +
+    /// prefix fetches) — folded into the fleet metrics at report time.
+    fabric_wait: Seconds,
     /// Current active-set size (== fleet size without an autoscaler).
     active: usize,
     /// ∫ active dt accumulator and its last accounting timestamp.
@@ -327,6 +362,15 @@ impl Cluster {
         let prefix_cache = match cfg.prefix_cache {
             Some(pc) => Some(PrefixCache::new(pc, &systems[0], model)?),
             None => None,
+        };
+        // Shared-fabric arbitration: one ledger for the whole rack, one
+        // port per replica, budgets from the (homogeneous) node config.
+        let fabric = match cfg.contention.mode {
+            ContentionMode::Off => None,
+            _ => Some(FabricClock::for_system(
+                &systems[0],
+                cfg.contention.resolved(systems.len()),
+            )?),
         };
         let mut replicas = Vec::with_capacity(systems.len());
         let mut names = Vec::with_capacity(systems.len());
@@ -390,6 +434,8 @@ impl Cluster {
             rejected: 0,
             shed: 0,
             prefix_cache,
+            fabric,
+            fabric_wait: Seconds::ZERO,
             active,
             replica_seconds: 0.0,
             last_account: Seconds::ZERO,
@@ -483,7 +529,17 @@ impl Cluster {
             let ctx = h.tokens.len() as u64;
             let kv = memory::kv_cache_bytes(&self.model, 1, ctx);
             let sys = &self.replicas[idx].backend().sys;
-            let cost = sys.latencies.kv_handoff(kv, sys.fabric_bw, sys.is_fenghuang());
+            let mut cost = sys.latencies.kv_handoff(kv, sys.fabric_bw, sys.is_fenghuang());
+            // Arbitrated fabric: the ownership-record write contends for
+            // command bandwidth with every other fleet transfer (the KV
+            // itself never moves on a shared pool — metadata only). The
+            // fixed Table 3.1 latencies above already cover the wire
+            // time, so only the queueing delay is added.
+            if let Some(clock) = self.fabric.as_mut() {
+                let b = clock.book(h.done_at, HANDOFF_META_BYTES, idx, h.req.id);
+                cost += b.queueing;
+                self.fabric_wait += b.queueing;
+            }
             self.handoffs += 1;
             self.handoff_time += cost;
             let dr = self.decode_router.as_mut().expect("disaggregated");
@@ -566,10 +622,43 @@ impl Cluster {
             if let Some(pc) = self.prefix_cache.as_mut() {
                 req.cached_prefix = hit.tokens;
                 req.prefix_fetch = hit.fetch;
+                let nmc = pc.nmc_gather();
                 // Publish this request's prefix KV: produced into the
                 // pool by `idx`, visible to every replica from the next
                 // arrival on (publication is metadata-only on TAB).
-                pc.insert(&req.prompt, idx);
+                let inserted = pc.insert(&req.prompt, idx);
+                // Arbitrated fabric: re-price the unloaded fetch through
+                // the ledger and book the publication metadata.
+                if let Some(clock) = self.fabric.as_mut() {
+                    let lat = self.replicas[idx].backend().sys.latencies;
+                    if hit.tokens > 0 {
+                        let b =
+                            clock.book(req.arrival, hit.bytes, idx, req.affinity_key());
+                        // NMC gather streams KV in-pool under the
+                        // attention pass: only the command latency and
+                        // the arbitration delay are exposed. A staged
+                        // fetch exposes the whole congestion-adjusted
+                        // transfer (queueing + Eq 4.1 serialization).
+                        req.prefix_fetch = if nmc {
+                            lat.tab_read + b.queueing
+                        } else {
+                            lat.tab_read + (b.completion - req.arrival)
+                        };
+                        self.fabric_wait += b.queueing;
+                    }
+                    // Publication loads the fabric but charges the
+                    // request nothing (metadata write, fire-and-forget).
+                    // A fully-cached prompt publishes nothing — no
+                    // phantom booking for it.
+                    if inserted > 0 {
+                        clock.book(
+                            req.arrival,
+                            PREFIX_PUBLISH_META_BYTES,
+                            idx,
+                            req.affinity_key(),
+                        );
+                    }
+                }
             }
             self.replicas[idx].submit_all(vec![req]);
         }
@@ -622,6 +711,7 @@ impl Cluster {
         let mut kv_spilled_peak = Bytes::ZERO;
         fleet.rejected = self.rejected;
         fleet.shed = self.shed;
+        fleet.fabric_wait = self.fabric_wait;
         for (i, r) in self.replicas.iter().enumerate() {
             fleet.merge(&r.metrics);
             let spilled = r
@@ -661,6 +751,7 @@ impl Cluster {
             policy: self.cfg.policy,
             kv_spilled_peak,
             prefix_cache: self.prefix_cache.as_ref().map(|pc| pc.report()),
+            fabric: self.fabric.as_ref().map(|c| c.report()),
             fleet,
             per_replica,
             imbalance: self.router.imbalance(),
@@ -728,6 +819,7 @@ pub fn demo_serve_cluster(
     sessions: usize,
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
+    contention: ContentionConfig,
 ) -> Result<String> {
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     let cfg = ClusterConfig {
@@ -736,6 +828,7 @@ pub fn demo_serve_cluster(
         disaggregate,
         kv_budget,
         prefix_cache,
+        contention,
         ..Default::default()
     };
     let mut cluster = Cluster::fh4(total, model, cfg)?;
@@ -923,9 +1016,19 @@ mod tests {
 
     #[test]
     fn demo_serve_cluster_reports_fleet_percentiles() {
-        let s =
-            demo_serve_cluster(&gpt3_175b(), 12, 4, 2, Policy::KvAffinity, None, 4, None, None)
-                .unwrap();
+        let s = demo_serve_cluster(
+            &gpt3_175b(),
+            12,
+            4,
+            2,
+            Policy::KvAffinity,
+            None,
+            4,
+            None,
+            None,
+            ContentionConfig::default(),
+        )
+        .unwrap();
         assert!(s.contains("completed 12"), "{s}");
         assert!(s.contains("p99"), "{s}");
         assert!(s.contains("load imbalance"), "{s}");
@@ -942,6 +1045,7 @@ mod tests {
             4,
             None,
             Some(PrefixCacheConfig::default()),
+            ContentionConfig::default(),
         )
         .unwrap();
         assert!(s.contains("completed 12"), "{s}");
@@ -1156,6 +1260,102 @@ mod tests {
         assert!(s.contains("open-loop traffic"), "{s}");
         assert!(s.contains("attainment"), "{s}");
         assert!(s.contains("goodput"), "{s}");
+    }
+
+    #[test]
+    fn fabric_contention_requires_tab_and_reports_the_ledger() {
+        use crate::traffic::{ClassKind, TrafficConfig, WorkloadMix};
+        // Active contention on a shared-nothing rack is rejected.
+        let cfg = ClusterConfig {
+            contention: ContentionConfig {
+                mode: ContentionMode::Shared,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(Cluster::new(crate::config::baseline_rack(2), &gpt3_175b(), cfg).is_err());
+        // Agentic traffic through the shared prefix cache drives real
+        // fabric bytes; the ledger must see them and report.
+        let tc = TrafficConfig {
+            mix: WorkloadMix::of(ClassKind::Agentic),
+            requests: 32,
+            seed: 11,
+            max_prompt: gpt3_175b().max_seq as usize,
+            slo: None,
+            ..Default::default()
+        };
+        let contended_cfg = || ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig {
+                mode: ContentionMode::Shared,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), contended_cfg()).unwrap();
+        let r = c.run(crate::traffic::generate(&tc).unwrap()).unwrap();
+        assert_eq!(r.fleet.completed, 32);
+        let fr = r.fabric.as_ref().expect("contended run must report the ledger");
+        assert!(fr.transfers > 0, "prefix traffic must book transfers");
+        assert!(fr.bytes.value() > 0.0);
+        assert!(fr.busy_frac >= 0.0);
+        assert!(r.summary().contains("fabric contention"), "{}", r.summary());
+        // Deterministic: same seed, same ledger.
+        let mut again = Cluster::fh4(4, &gpt3_175b(), contended_cfg()).unwrap();
+        let r2 = again.run(crate::traffic::generate(&tc).unwrap()).unwrap();
+        assert_eq!(r.makespan(), r2.makespan());
+        let fr2 = r2.fabric.as_ref().unwrap();
+        assert_eq!(fr.transfers, fr2.transfers);
+        assert_eq!(fr.bytes.value(), fr2.bytes.value());
+        assert_eq!(fr.queue_p99, fr2.queue_p99);
+        // Contention can only slow the fleet down vs the unloaded pool,
+        // and the Off default stays silent.
+        let mut off = Cluster::fh4(
+            4,
+            &gpt3_175b(),
+            ClusterConfig {
+                prefix_cache: Some(PrefixCacheConfig::default()),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let ro = off.run(crate::traffic::generate(&tc).unwrap()).unwrap();
+        assert!(ro.fabric.is_none());
+        assert_eq!(ro.fleet.fabric_wait, Seconds::ZERO);
+        assert!(!ro.summary().contains("fabric contention"));
+        // The hit set is timing-independent (lookups precede routing), so
+        // the congestion-priced fetch stall can only grow vs unloaded.
+        assert_eq!(r.fleet.prefill_tokens_saved, ro.fleet.prefill_tokens_saved);
+        assert!(
+            r.fleet.prefix_fetch >= ro.fleet.prefix_fetch - Seconds::ns(1.0),
+            "arbitrated fetches must not undercut the unloaded charge: {:?} vs {:?}",
+            r.fleet.prefix_fetch,
+            ro.fleet.prefix_fetch
+        );
+    }
+
+    #[test]
+    fn contended_handoffs_complete_on_disaggregated_tab_pools() {
+        let cfg = ClusterConfig {
+            policy: Policy::LeastLoaded,
+            disaggregate: Some((2, 2)),
+            contention: ContentionConfig {
+                mode: ContentionMode::PerModule,
+                module_interleave: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(small_workload(16)).unwrap();
+        assert_eq!(r.fleet.completed, 16);
+        assert_eq!(r.handoffs, 16);
+        let fr = r.fabric.as_ref().expect("ledger on");
+        assert_eq!(fr.transfers, 16, "one metadata booking per handoff");
+        assert_eq!(fr.modules, 8);
+        assert!(fr.module_imbalance >= 1.0);
+        // Metadata-only handoffs stay cheap even arbitrated.
+        assert!(r.handoff_time.as_ms() < 10.0, "{} ms", r.handoff_time.as_ms());
     }
 
     #[test]

@@ -227,6 +227,13 @@ impl PrefixCache {
         self.live
     }
 
+    /// Whether hits gather KV in-pool (NMC) instead of staging it — the
+    /// cluster's contention layer prices the two paths differently
+    /// (DESIGN.md §Fabric-Contention).
+    pub fn nmc_gather(&self) -> bool {
+        self.cfg.nmc_gather
+    }
+
     fn tid(slot: usize) -> TensorId {
         TensorId(PREFIX_KV_ID_BASE + slot as u64)
     }

@@ -1,0 +1,464 @@
+//! The bandwidth ledger behind the contention model
+//! (DESIGN.md §Fabric-Contention).
+//!
+//! Time is cut into fixed windows. Each window grants every port a byte
+//! budget of `port_bw × window` and every module bucket a budget of
+//! `(pool_bw / buckets) × window` (one aggregate bucket in
+//! [`ContentionMode::Shared`]). A booking drains its bytes window by
+//! window at the message's Eq 4.1 effective bandwidth, never taking more
+//! than the residual budgets earlier bookings left behind; windows where
+//! nothing can move are pure queueing delay. The walk is greedy and
+//! order-deterministic: the same booking sequence always produces the
+//! same ledger, which is what lets the golden tests pin contended runs.
+
+use super::{ContentionConfig, ContentionMode, FabricReport};
+use crate::config::SystemConfig;
+use crate::error::{FhError, Result};
+use crate::models::mfu;
+use crate::traffic::rng::splitmix64;
+use crate::units::{Bandwidth, Bytes, Seconds};
+use std::collections::BTreeMap;
+
+/// Bytes below this never enter the ledger (sub-microbyte fp dust).
+const BYTE_EPS: f64 = 1e-6;
+
+/// Result of booking one transfer.
+#[derive(Debug, Clone, Copy)]
+pub struct Booking {
+    /// When the last byte lands (start + serialization + queueing).
+    pub completion: Seconds,
+    /// Intrinsic wire time of this message on an *empty* fabric: the
+    /// Eq 4.1 effective bandwidth ([`mfu::transfer_time`] at the port
+    /// bandwidth), further capped by the home module's bandwidth when
+    /// the transfer hashes whole to one module (a hotspotted message
+    /// cannot exceed its module's line rate even with no competition —
+    /// that excess is serialization at the narrow end, not queueing).
+    /// Identical to the unloaded `mfu::transfer_time` in Off, Shared
+    /// and interleaved modes.
+    pub serialization: Seconds,
+    /// Delay attributable purely to arbitration — residual budgets
+    /// exhausted by *other* traffic. Zero on an empty fabric in every
+    /// mode.
+    pub queueing: Seconds,
+}
+
+/// Per-window residual ledger.
+struct Window {
+    /// Bytes each port has booked into this window.
+    ports: Vec<f64>,
+    /// Bytes each module bucket has absorbed in this window.
+    buckets: Vec<f64>,
+}
+
+/// The shared-fabric arbitration clock: books transfers against windowed
+/// per-port / per-module bandwidth budgets and returns congestion-adjusted
+/// completion times.
+pub struct FabricClock {
+    cfg: ContentionConfig,
+    /// Per-port bandwidth (B/s): the unloaded `SystemConfig::fabric_bw`.
+    port_bw: f64,
+    /// Pool aggregate bandwidth (B/s): `fabric_bw × num_gpus` — the
+    /// crossbar serves one node's worth of ports at line rate; a fleet
+    /// sharing the pool shares this aggregate.
+    pool_bw: f64,
+    /// Module buckets (1 in Shared mode, `modules` in PerModule mode).
+    nbuckets: usize,
+    /// Bandwidth of one bucket (B/s).
+    bucket_bw: f64,
+    windows: BTreeMap<u64, Window>,
+    // --- lifetime stats ---
+    port_total: Vec<f64>,
+    module_total: Vec<f64>,
+    transfers: u64,
+    bytes_total: f64,
+    ser_total: f64,
+    queue_total: f64,
+    /// Queueing delay of every booking, seconds (percentiles).
+    queue_samples: Vec<f64>,
+    horizon: f64,
+}
+
+impl FabricClock {
+    /// Build the clock over `sys`'s fabric. `cfg.ports` must already be
+    /// resolved ([`ContentionConfig::resolved`]). Active modes require a
+    /// FengHuang (TAB) node — shared-nothing fabrics have no shared pool
+    /// to arbitrate.
+    pub fn for_system(sys: &SystemConfig, cfg: ContentionConfig) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.mode != ContentionMode::Off && !sys.is_fenghuang() {
+            return Err(FhError::Config(
+                "fabric contention models the shared TAB pool — shared-nothing \
+                 fabrics have no shared fabric to arbitrate (pick a TAB system \
+                 or turn contention off)"
+                    .into(),
+            ));
+        }
+        if sys.fabric_bw.value() <= 0.0 {
+            return Err(FhError::Config(
+                "fabric contention needs a positive fabric bandwidth".into(),
+            ));
+        }
+        let ports = cfg.ports.max(1);
+        let nbuckets = match cfg.mode {
+            ContentionMode::PerModule => cfg.modules.max(1),
+            _ => 1,
+        };
+        let pool_bw = sys.fabric_bw.value() * sys.num_gpus.max(1) as f64;
+        Ok(FabricClock {
+            cfg,
+            port_bw: sys.fabric_bw.value(),
+            pool_bw,
+            nbuckets,
+            bucket_bw: pool_bw / nbuckets as f64,
+            windows: BTreeMap::new(),
+            port_total: vec![0.0; ports],
+            module_total: vec![0.0; nbuckets],
+            transfers: 0,
+            bytes_total: 0.0,
+            ser_total: 0.0,
+            queue_total: 0.0,
+            queue_samples: Vec::new(),
+            horizon: 0.0,
+        })
+    }
+
+    pub fn mode(&self) -> ContentionMode {
+        self.cfg.mode
+    }
+
+    /// Home bucket for a hashed (non-interleaved) transfer, `None` when
+    /// the transfer stripes over all buckets.
+    fn home(&self, key: u64) -> Option<usize> {
+        if self.cfg.mode == ContentionMode::PerModule && !self.cfg.module_interleave {
+            Some((splitmix64(key) % self.nbuckets as u64) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Book a transfer of `bytes` issued by `port` at virtual time
+    /// `start`. `key` is a stable identity (session/tensor id) used only
+    /// to pick the home module when interleaving is off. Off mode (and
+    /// empty transfers) pass through: completion is `start` plus the
+    /// unloaded Eq 4.1 serialization, nothing is recorded.
+    pub fn book(&mut self, start: Seconds, bytes: Bytes, port: usize, key: u64) -> Booking {
+        let ser = mfu::transfer_time(bytes, Bandwidth(self.port_bw));
+        if self.cfg.mode == ContentionMode::Off || bytes.value() <= BYTE_EPS {
+            return Booking {
+                completion: start + ser,
+                serialization: ser,
+                queueing: Seconds::ZERO,
+            };
+        }
+        let port = port % self.port_total.len();
+        // Effective drain rate of this message (Eq 4.1 shaping folded
+        // in). A transfer hashed whole to one module additionally drains
+        // at most at that module's bandwidth, *even on an empty fabric*
+        // — that cap is intrinsic serialization at the narrow end, not
+        // queueing, so it folds into `ser` and the drain rate alike
+        // (keeping `completion = start + ser + queueing` exact and
+        // `queueing` purely arbitration).
+        let eff_bw = bytes.value() / ser.value();
+        let home = self.home(key);
+        let drain_bw = match home {
+            Some(_) => eff_bw.min(self.bucket_bw),
+            None => eff_bw,
+        };
+        let ser = match home {
+            Some(_) => Seconds(bytes.value() / drain_bw),
+            None => ser,
+        };
+        let start_s = start.value().max(0.0);
+        let win_len = self.cfg.window.value();
+        let port_budget = self.port_bw * win_len;
+        let bucket_budget = self.bucket_bw * win_len;
+        let mut remaining = bytes.value();
+        let mut w = (start_s / win_len) as u64;
+        let completion_s;
+        loop {
+            let wstart = w as f64 * win_len;
+            let t_in = start_s.max(wstart);
+            let avail = wstart + win_len - t_in;
+            if avail > 0.0 {
+                let nports = self.port_total.len();
+                let nbuckets = self.nbuckets;
+                let win = self.windows.entry(w).or_insert_with(|| Window {
+                    ports: vec![0.0; nports],
+                    buckets: vec![0.0; nbuckets],
+                });
+                let port_res = (port_budget - win.ports[port]).max(0.0);
+                let bucket_res = match home {
+                    Some(m) => (bucket_budget - win.buckets[m]).max(0.0),
+                    None => {
+                        // Striped: the transfer drains through all buckets
+                        // in lockstep, so the tightest bucket gates it.
+                        let min_res = win
+                            .buckets
+                            .iter()
+                            .map(|&b| (bucket_budget - b).max(0.0))
+                            .fold(f64::INFINITY, f64::min);
+                        min_res * nbuckets as f64
+                    }
+                };
+                let take = remaining.min(drain_bw * avail).min(port_res).min(bucket_res);
+                if take > BYTE_EPS {
+                    win.ports[port] += take;
+                    match home {
+                        Some(m) => {
+                            win.buckets[m] += take;
+                            self.module_total[m] += take;
+                        }
+                        None => {
+                            let per = take / nbuckets as f64;
+                            for (b, t) in
+                                win.buckets.iter_mut().zip(self.module_total.iter_mut())
+                            {
+                                *b += per;
+                                *t += per;
+                            }
+                        }
+                    }
+                    self.port_total[port] += take;
+                    if remaining - take <= BYTE_EPS {
+                        // Final window: the residue drains at the message
+                        // rate from the window entry point.
+                        completion_s = t_in + remaining / drain_bw;
+                        break;
+                    }
+                    remaining -= take;
+                }
+            }
+            w += 1;
+        }
+        let completion = Seconds(completion_s);
+        let queueing = Seconds((completion_s - start_s - ser.value()).max(0.0));
+        self.transfers += 1;
+        self.bytes_total += bytes.value();
+        self.ser_total += ser.value();
+        self.queue_total += queueing.value();
+        self.queue_samples.push(queueing.value());
+        self.horizon = self.horizon.max(completion_s);
+        Booking { completion, serialization: ser, queueing }
+    }
+
+    // --- observability (ledger conservation is pinned by
+    // rust/tests/fabric_props.rs) ---
+
+    /// Total bytes ever booked.
+    pub fn booked_bytes(&self) -> Bytes {
+        Bytes(self.bytes_total)
+    }
+
+    pub fn transfers(&self) -> u64 {
+        self.transfers
+    }
+
+    /// Cumulative bytes per port.
+    pub fn port_bytes(&self) -> Vec<Bytes> {
+        self.port_total.iter().map(|&b| Bytes(b)).collect()
+    }
+
+    /// Cumulative bytes per module bucket.
+    pub fn module_bytes(&self) -> Vec<Bytes> {
+        self.module_total.iter().map(|&b| Bytes(b)).collect()
+    }
+
+    /// Per-window totals (window index, bytes booked in it) — the
+    /// conservation ledger: these sum to [`Self::booked_bytes`].
+    pub fn window_bytes(&self) -> Vec<(u64, Bytes)> {
+        self.windows
+            .iter()
+            .map(|(&w, win)| (w, Bytes(win.ports.iter().sum())))
+            .collect()
+    }
+
+    /// Snapshot the fleet-level observables.
+    pub fn report(&self) -> FabricReport {
+        let mut sorted = self.queue_samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let busy = if self.pool_bw > 0.0 { self.bytes_total / self.pool_bw } else { 0.0 };
+        let (hotspot, max_b) = self
+            .module_total
+            .iter()
+            .enumerate()
+            .fold((0usize, 0.0f64), |(hi, hb), (i, &b)| if b > hb { (i, b) } else { (hi, hb) });
+        let mean_b = self.module_total.iter().sum::<f64>() / self.module_total.len() as f64;
+        let imbalance = if mean_b > 0.0 { max_b / mean_b } else { 1.0 };
+        FabricReport {
+            mode: self.cfg.mode,
+            ports: self.port_total.len(),
+            modules: self.nbuckets,
+            window: self.cfg.window,
+            transfers: self.transfers,
+            bytes: Bytes(self.bytes_total),
+            busy: Seconds(busy),
+            horizon: Seconds(self.horizon),
+            busy_frac: if self.horizon > 0.0 { busy / self.horizon } else { 0.0 },
+            queue_mean: Seconds(if sorted.is_empty() {
+                0.0
+            } else {
+                sorted.iter().sum::<f64>() / sorted.len() as f64
+            }),
+            queue_p50: Seconds(crate::units::percentile_nearest_rank(&sorted, 50.0)),
+            queue_p95: Seconds(crate::units::percentile_nearest_rank(&sorted, 95.0)),
+            queue_p99: Seconds(crate::units::percentile_nearest_rank(&sorted, 99.0)),
+            queue_max: Seconds(sorted.last().copied().unwrap_or(0.0)),
+            queue_total: Seconds(self.queue_total),
+            serialization: Seconds(self.ser_total),
+            module_bytes: self.module_bytes(),
+            module_imbalance: imbalance,
+            hotspot_module: hotspot,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{baseline8, fh4_15xm};
+
+    fn sys() -> SystemConfig {
+        fh4_15xm(Bandwidth::tbps(4.8))
+    }
+
+    fn clock(mode: ContentionMode, ports: usize, interleave: bool) -> FabricClock {
+        let cfg = ContentionConfig {
+            mode,
+            module_interleave: interleave,
+            ..Default::default()
+        }
+        .resolved(ports);
+        FabricClock::for_system(&sys(), cfg).unwrap()
+    }
+
+    #[test]
+    fn shared_nothing_fabric_is_rejected() {
+        let cfg =
+            ContentionConfig { mode: ContentionMode::Shared, ..Default::default() }.resolved(4);
+        assert!(FabricClock::for_system(&baseline8(), cfg).is_err());
+        // Off mode is inert and allowed anywhere.
+        let off = ContentionConfig::default().resolved(4);
+        assert!(FabricClock::for_system(&baseline8(), off).is_ok());
+    }
+
+    #[test]
+    fn off_mode_is_a_bit_identical_passthrough() {
+        let mut c = clock(ContentionMode::Off, 4, true);
+        let bytes = Bytes::mib(64.0);
+        let start = Seconds::ms(3.0);
+        let b = c.book(start, bytes, 0, 1);
+        let unloaded = mfu::transfer_time(bytes, sys().fabric_bw);
+        assert_eq!(b.serialization, unloaded, "Off must reuse the unloaded Eq 4.1 charge");
+        assert_eq!(b.completion, start + unloaded);
+        assert_eq!(b.queueing, Seconds::ZERO);
+        assert_eq!(c.transfers(), 0, "Off bookings never enter the ledger");
+        assert_eq!(c.booked_bytes(), Bytes::ZERO);
+    }
+
+    #[test]
+    fn lone_transfer_sees_no_queueing() {
+        let mut c = clock(ContentionMode::Shared, 4, true);
+        let bytes = Bytes::gb(1.0);
+        let b = c.book(Seconds::ZERO, bytes, 2, 9);
+        assert!(b.queueing < Seconds::ns(1.0), "empty fabric must not queue: {:?}", b);
+        let rel = (b.completion.value() - b.serialization.value()).abs()
+            / b.serialization.value();
+        assert!(rel < 1e-9, "completion {} vs ser {}", b.completion.value(), b.serialization.value());
+        assert_eq!(c.transfers(), 1);
+        assert!((c.booked_bytes().value() - bytes.value()).abs() < 1.0);
+    }
+
+    #[test]
+    fn same_port_overlap_queues_the_second_transfer() {
+        let mut c = clock(ContentionMode::Shared, 4, true);
+        let bytes = Bytes::mib(480.0);
+        let first = c.book(Seconds::ZERO, bytes, 1, 1);
+        let second = c.book(Seconds::ZERO, bytes, 1, 2);
+        assert!(first.queueing < Seconds::ns(1.0));
+        assert!(
+            second.queueing > Seconds::us(1.0),
+            "two simultaneous transfers share one port: {:?}",
+            second
+        );
+        assert!(second.completion > first.completion);
+    }
+
+    #[test]
+    fn distinct_ports_dodge_each_other_until_the_pool_saturates() {
+        // fh4: pool aggregate = 4 ports' worth. Four concurrent ports fit;
+        // the eighth must queue behind the pool budget.
+        let mut c = clock(ContentionMode::Shared, 8, true);
+        let bytes = Bytes::mib(480.0);
+        let mut worst = Seconds::ZERO;
+        let mut first_four_queue = Seconds::ZERO;
+        for p in 0..8 {
+            let b = c.book(Seconds::ZERO, bytes, p, p as u64);
+            if p < 4 {
+                first_four_queue = first_four_queue.max(b.queueing);
+            }
+            worst = worst.max(b.queueing);
+        }
+        assert!(first_four_queue < Seconds::ns(1.0), "pool holds 4 ports at line rate");
+        assert!(worst > Seconds::us(1.0), "8 ports must overrun a 4-port pool");
+    }
+
+    #[test]
+    fn hashed_home_module_cap_is_serialization_not_queueing() {
+        // fh4: pool 19.2 TB/s over 8 modules → 2.4 TB/s per home module,
+        // below a large message's ~4.4 TB/s Eq 4.1 rate. On an EMPTY
+        // fabric the module cap must read as intrinsic serialization,
+        // never as queueing.
+        let mut c = clock(ContentionMode::PerModule, 4, false);
+        let bytes = Bytes::mib(512.0);
+        let b = c.book(Seconds::ZERO, bytes, 0, 7);
+        assert!(b.queueing < Seconds::ns(1.0), "empty fabric must not queue: {b:?}");
+        assert!(
+            b.serialization > mfu::transfer_time(bytes, sys().fabric_bw),
+            "the module cap lengthens the intrinsic wire time"
+        );
+        let rel = (b.completion.value() - b.serialization.value()).abs()
+            / b.serialization.value();
+        assert!(rel < 1e-9, "completion {:?} vs ser {:?}", b.completion, b.serialization);
+    }
+
+    #[test]
+    fn interleaved_striping_is_exactly_balanced_hashed_is_not() {
+        let mut striped = clock(ContentionMode::PerModule, 8, true);
+        let mut hashed = clock(ContentionMode::PerModule, 8, false);
+        for i in 0..40u64 {
+            let bytes = Bytes::mib(8.0 + (i % 5) as f64);
+            striped.book(Seconds::us(i as f64), bytes, (i % 8) as usize, i * 131);
+            hashed.book(Seconds::us(i as f64), bytes, (i % 8) as usize, i * 131);
+        }
+        let rs = striped.report();
+        assert!((rs.module_imbalance - 1.0).abs() < 1e-9, "striping balances exactly");
+        let rh = hashed.report();
+        assert!(rh.module_imbalance >= rs.module_imbalance);
+        assert!(rh.module_imbalance > 1.0, "whole-transfer hashing must skew");
+        assert!(rh.hotspot_module < 8);
+        // Both ledgers conserve bytes.
+        for r in [&rs, &rh] {
+            let total: f64 = r.module_bytes.iter().map(|b| b.value()).sum();
+            assert!((total - r.bytes.value()).abs() < 1e-3 * r.bytes.value());
+        }
+    }
+
+    #[test]
+    fn report_percentiles_and_busy_fraction_are_sane() {
+        let mut c = clock(ContentionMode::Shared, 2, true);
+        for i in 0..16u64 {
+            c.book(Seconds::ZERO, Bytes::mib(256.0), (i % 2) as usize, i);
+        }
+        let r = c.report();
+        assert_eq!(r.transfers, 16);
+        assert!(r.busy_frac > 0.0 && r.busy_frac <= 1.0 + 1e-9, "busy {}", r.busy_frac);
+        assert!(r.queue_p99 >= r.queue_p95);
+        assert!(r.queue_p95 >= r.queue_p50);
+        assert!(r.queue_max >= r.queue_p99);
+        assert!(r.queue_total.value() > 0.0, "16 simultaneous bursts must queue");
+        assert!(r.summary_line().contains("fabric contention (shared"));
+        // Conservation: window ledger sums to the booked total.
+        let windowed: f64 = c.window_bytes().iter().map(|(_, b)| b.value()).sum();
+        assert!((windowed - c.booked_bytes().value()).abs() < 1e-3 * windowed);
+    }
+}

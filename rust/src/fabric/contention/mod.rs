@@ -1,0 +1,259 @@
+//! Contention-aware shared-fabric arbitration (DESIGN.md §Fabric-Contention).
+//!
+//! Every fabric charge elsewhere in the simulator — KV handoffs, page
+//! migrations, prefix-cache fetches, NMC gathers — historically paid the
+//! *unloaded* Table 3.1 latency: N replicas hammering the shared TAB pool
+//! cost the same as one. That is exactly the assumption the paper's
+//! headline claims (16x–70x faster inter-GPU communication, 50% GPU
+//! reduction at equal SLO) lean on, and exactly what a simulator must be
+//! able to falsify. This module models the TAB as a *finite, arbitrated*
+//! resource:
+//!
+//! * a [`FabricClock`] books every transfer (bytes, source port, target
+//!   module) into discrete time windows against per-port and per-module
+//!   bandwidth budgets derived from the node config (port bandwidth =
+//!   `SystemConfig::fabric_bw`, pool aggregate = `fabric_bw × num_gpus`
+//!   — the crossbar serves one node's worth of ports at line rate, and a
+//!   rack sharing the pool shares that aggregate);
+//! * the booking returns a congestion-adjusted completion time: queueing
+//!   delay (windows where the budgets were exhausted by earlier traffic)
+//!   plus serialization at the message-size-efficient bandwidth
+//!   ([`crate::models::mfu::link_eff`], Eq 4.1);
+//! * [`ContentionMode::Off`] is a strict passthrough — consumers keep
+//!   their existing unloaded arithmetic bit-identically (the golden
+//!   tests pin this), so contention is a falsifiable overlay, not a
+//!   silent recost.
+//!
+//! Two arbitration granularities:
+//!
+//! * [`ContentionMode::Shared`] — one aggregate pool budget (the
+//!   crossbar as a single shared pipe);
+//! * [`ContentionMode::PerModule`] — the pool budget splits evenly over
+//!   the memory modules. With `module_interleave` (the paper's §3.3.1
+//!   uniform striping) every transfer spreads over all modules and the
+//!   per-module ledgers stay exactly balanced; without it, transfers
+//!   hash whole to a home module and hot sessions produce hotspots —
+//!   the per-module byte imbalance the fleet report surfaces.
+
+mod clock;
+
+pub use clock::{Booking, FabricClock};
+
+use crate::error::{FhError, Result};
+use crate::units::{Bytes, Seconds};
+
+/// Canonical module count of the modelled TAB pool (the functional
+/// [`crate::fabric::TabPool`] benches and tests stripe over 8 modules).
+pub const DEFAULT_TAB_MODULES: usize = 8;
+
+/// Default accounting window of the bandwidth ledger.
+pub const DEFAULT_WINDOW: Seconds = Seconds(100.0e-6);
+
+/// Arbitration granularity of the shared fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ContentionMode {
+    /// No arbitration: every consumer keeps its unloaded charge
+    /// bit-identically (the pre-contention simulator).
+    #[default]
+    Off,
+    /// One aggregate pool bandwidth budget shared by all ports.
+    Shared,
+    /// The pool budget splits evenly across the memory modules.
+    PerModule,
+}
+
+impl ContentionMode {
+    /// Parse a CLI mode name. A bare `--fabric-contention` switch reads
+    /// as `on`, which means [`ContentionMode::Shared`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(ContentionMode::Off),
+            "on" | "shared" => Some(ContentionMode::Shared),
+            "per-module" | "per_module" | "permodule" => Some(ContentionMode::PerModule),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ContentionMode::Off => "off",
+            ContentionMode::Shared => "shared",
+            ContentionMode::PerModule => "per-module",
+        }
+    }
+}
+
+/// Knobs of the arbitration model
+/// ([`crate::coordinator::ClusterConfig::contention`],
+/// [`crate::paging::PagingConfig::contention`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionConfig {
+    pub mode: ContentionMode,
+    /// Fabric ports contending for the pool. `0` derives from context:
+    /// the cluster uses its replica count, the single-node paging path
+    /// uses 1.
+    pub ports: usize,
+    /// Memory modules behind the pool ([`ContentionMode::PerModule`]
+    /// granularity).
+    pub modules: usize,
+    /// Ledger window: bandwidth budgets are granted per window, so the
+    /// window sets the arbitration timescale (queueing is resolved at
+    /// window granularity).
+    pub window: Seconds,
+    /// Stripe each transfer evenly over all modules (the paper's §3.3.1
+    /// uniform layout). `false` hashes whole transfers to a home module,
+    /// exposing hotspots.
+    pub module_interleave: bool,
+}
+
+impl Default for ContentionConfig {
+    fn default() -> Self {
+        ContentionConfig {
+            mode: ContentionMode::Off,
+            ports: 0,
+            modules: DEFAULT_TAB_MODULES,
+            window: DEFAULT_WINDOW,
+            module_interleave: true,
+        }
+    }
+}
+
+impl ContentionConfig {
+    /// Fill the derive-from-context default for `ports`.
+    pub fn resolved(mut self, default_ports: usize) -> Self {
+        if self.ports == 0 {
+            self.ports = default_ports;
+        }
+        self
+    }
+
+    /// Validate the knobs (a disabled config is always valid).
+    pub fn validate(&self) -> Result<()> {
+        if self.mode == ContentionMode::Off {
+            return Ok(());
+        }
+        if self.ports == 0 {
+            return Err(FhError::Config(
+                "fabric contention needs ≥ 1 port (resolve `ports` before building the clock)"
+                    .into(),
+            ));
+        }
+        if self.modules == 0 {
+            return Err(FhError::Config("fabric contention needs ≥ 1 module".into()));
+        }
+        if self.window.value() <= 0.0 {
+            return Err(FhError::Config(format!(
+                "fabric contention window must be positive, got {}s",
+                self.window.value()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-level observables of the arbitration ledger
+/// ([`crate::coordinator::ClusterReport::fabric`],
+/// [`crate::paging::PagedReport::fabric`]).
+#[derive(Debug, Clone)]
+pub struct FabricReport {
+    pub mode: ContentionMode,
+    pub ports: usize,
+    pub modules: usize,
+    pub window: Seconds,
+    /// Transfers booked through the ledger.
+    pub transfers: u64,
+    /// Total bytes booked.
+    pub bytes: Bytes,
+    /// Wire time the booked bytes demand of the pool aggregate.
+    pub busy: Seconds,
+    /// Latest booked completion (the ledger's horizon).
+    pub horizon: Seconds,
+    /// Fabric busy fraction: `busy / horizon` (0 when nothing booked).
+    pub busy_frac: f64,
+    /// Queueing-delay distribution over all bookings.
+    pub queue_mean: Seconds,
+    pub queue_p50: Seconds,
+    pub queue_p95: Seconds,
+    pub queue_p99: Seconds,
+    pub queue_max: Seconds,
+    /// Total queueing delay across all bookings.
+    pub queue_total: Seconds,
+    /// Total intrinsic serialization across all bookings (Eq 4.1 wire
+    /// time, capped at the home module's bandwidth for hashed
+    /// transfers — see [`Booking::serialization`]).
+    pub serialization: Seconds,
+    /// Cumulative bytes landed on each module.
+    pub module_bytes: Vec<Bytes>,
+    /// Max/mean of `module_bytes` (1.0 when balanced or empty).
+    pub module_imbalance: f64,
+    /// Module holding the most bytes.
+    pub hotspot_module: usize,
+}
+
+impl FabricReport {
+    /// One summary line for the cluster/paging reports.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "fabric contention ({}, {} ports, {} modules): busy {:.1}% of {:.3}s | \
+             queue p50 {:.3} p95 {:.3} p99 {:.3} ms (total {:.3} ms / {} transfers) | \
+             module imbalance {:.3} (hotspot m{}) | {:.2} GB booked\n",
+            self.mode.name(),
+            self.ports,
+            self.modules,
+            100.0 * self.busy_frac,
+            self.horizon.value(),
+            self.queue_p50.as_ms(),
+            self.queue_p95.as_ms(),
+            self.queue_p99.as_ms(),
+            self.queue_total.as_ms(),
+            self.transfers,
+            self.module_imbalance,
+            self.hotspot_module,
+            self.bytes.as_gb(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parses_cli_names() {
+        assert_eq!(ContentionMode::parse("off"), Some(ContentionMode::Off));
+        assert_eq!(ContentionMode::parse("on"), Some(ContentionMode::Shared));
+        assert_eq!(ContentionMode::parse("shared"), Some(ContentionMode::Shared));
+        assert_eq!(ContentionMode::parse("Per-Module"), Some(ContentionMode::PerModule));
+        assert_eq!(ContentionMode::parse("per_module"), Some(ContentionMode::PerModule));
+        assert_eq!(ContentionMode::parse("sideways"), None);
+        assert_eq!(ContentionMode::Shared.name(), "shared");
+        assert_eq!(ContentionMode::default(), ContentionMode::Off);
+    }
+
+    #[test]
+    fn config_resolves_ports_from_context() {
+        let cfg = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() };
+        assert_eq!(cfg.ports, 0);
+        assert_eq!(cfg.resolved(6).ports, 6);
+        // An explicit port count wins over the context default.
+        let explicit = ContentionConfig { ports: 3, ..cfg };
+        assert_eq!(explicit.resolved(6).ports, 3);
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_knobs() {
+        let ok = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() }
+            .resolved(4);
+        ok.validate().unwrap();
+        // Off is valid whatever the other knobs say (it is inert).
+        ContentionConfig::default().validate().unwrap();
+        let bad = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() };
+        assert!(bad.validate().is_err(), "unresolved ports must not pass");
+        let bad = ContentionConfig { modules: 0, ..ok };
+        assert!(bad.validate().is_err());
+        let bad = ContentionConfig { window: Seconds::ZERO, ..ok };
+        assert!(bad.validate().is_err());
+        let bad = ContentionConfig { window: Seconds::new(-1.0), ..ok };
+        assert!(bad.validate().is_err());
+    }
+}

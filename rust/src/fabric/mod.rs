@@ -8,14 +8,21 @@
 //!   numerics cross-checks.
 //! * **Analytic** — [`latency`] (Table 3.1 / Eqs 3.1–3.4),
 //!   [`collectives::tab_collective_time`], [`nvlink::ring_collective_time`]
-//!   and [`analysis`] (§3.3.3) feed the discrete-event simulator.
+//!   and [`analysis`] (§3.3.3) feed the discrete-event simulator, and
+//!   [`contention`] arbitrates the shared pool as a finite resource
+//!   (windowed per-port / per-module bandwidth ledger,
+//!   DESIGN.md §Fabric-Contention).
 
 pub mod analysis;
 pub mod collectives;
+pub mod contention;
 pub mod latency;
 pub mod nvlink;
 pub mod tab;
 
 pub use collectives::{group, Collective, TabCommunicator};
+pub use contention::{
+    Booking, ContentionConfig, ContentionMode, FabricClock, FabricReport,
+};
 pub use latency::FabricLatencies;
 pub use tab::{Region, TabPool};

@@ -8,7 +8,10 @@
 //! * [`hardware`] — xPU / interconnect catalog for the trend figures;
 //! * [`fabric`] — the TAB shared-memory pool with write-accumulate and
 //!   completion notifications (functional + analytic), NVLink ring
-//!   baseline, and the §3.3.3 speed-up analysis;
+//!   baseline, the §3.3.3 speed-up analysis, and the contention-aware
+//!   shared-fabric arbitration layer (windowed per-port / per-module
+//!   bandwidth ledger with an Off mode that is bit-identical to the
+//!   unloaded charges);
 //! * [`trace`] — synthetic operator traces (the Nsight-trace substitute);
 //! * [`sim`] — discrete-event simulator with the tensor prefetcher and
 //!   paging stream (→ Fig 4.1, Table 4.3);
@@ -56,7 +59,10 @@ pub use error::{FhError, Result};
 pub mod prelude {
     pub use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
     pub use crate::error::{FhError, Result};
-    pub use crate::fabric::{Collective, FabricLatencies, TabPool};
+    pub use crate::fabric::{
+        Collective, ContentionConfig, ContentionMode, FabricClock, FabricLatencies,
+        FabricReport, TabPool,
+    };
     pub use crate::models::arch::{self, ModelArch};
     pub use crate::paging::{simulate_paged, PagedReport, PagingConfig, PlacementPolicy, PolicyKind};
     pub use crate::sim::{simulate, SimReport};

@@ -13,6 +13,7 @@
 //!                    [--slo-ttft-ms X] [--slo-tpot-ms Y]
 //!                    [--autoscale [on|off]] [--autoscale-min N]
 //!                    [--shed-tokens T]
+//!                    [--fabric-contention [off|shared|per-module]]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //! fenghuang help
@@ -26,12 +27,13 @@
 //! to defaults.
 
 use fenghuang::cli::{
-    check_disaggregate_replicas, cli_err, flag, parse_disaggregate, parse_flags,
-    parse_prefix_cache, positive, switch, system_by_name, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS,
-    SIMULATE_FLAGS, TRAFFIC_FLAGS,
+    check_contention_fabric, check_disaggregate_replicas, cli_err, flag, parse_disaggregate,
+    parse_fabric_contention, parse_flags, parse_prefix_cache, positive, switch, system_by_name,
+    PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS, SIMULATE_FLAGS, TRAFFIC_FLAGS,
 };
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::PrefixCacheConfig;
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
 use fenghuang::paging::NmcConfig;
 use fenghuang::prelude::*;
 use std::collections::HashMap;
@@ -50,6 +52,7 @@ USAGE:
                      [--replicas 1] [--policy round-robin|least-outstanding-tokens|kv-affinity]
                      [--disaggregate P:D] [--sessions 8] [--kv-budget-gb G]
                      [--prefix-cache [on|off]] [--prefix-cache-gb G]
+                     [--fabric-contention [off|shared|per-module]]
                      open-loop traffic (any of these flags selects the traffic engine):
                      [--qps 8] [--pattern poisson|bursty|diurnal|replay]
                      [--mix chat|rag|agentic|batch, '+'-combined, e.g. chat+rag]
@@ -59,7 +62,7 @@ USAGE:
                      [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
                      [--steps 3] [--page-mib 2] [--pin-frac 0.0] [--page-kv on|off]
-                     [--nmc on|off]
+                     [--nmc on|off] [--fabric-contention [off|shared|per-module]]
   fenghuang help
 ";
 
@@ -87,6 +90,9 @@ fn run_serve(args: &[String]) -> Result<()> {
         check_disaggregate_replicas(&f, replicas, pools)?;
     }
     let prefix_cache = parse_prefix_cache(&f)?;
+    // The serve rack is always FH4 (TAB), so the flag cannot conflict
+    // with the fabric here; `Cluster::new` still enforces the rule.
+    let contention = parse_fabric_contention(&f)?;
     let kv_budget = match f.get("kv-budget-gb") {
         Some(v) => {
             let gb: f64 = v
@@ -113,6 +119,7 @@ fn run_serve(args: &[String]) -> Result<()> {
             disaggregate,
             kv_budget,
             prefix_cache,
+            contention,
         );
     }
     if replicas <= 1
@@ -120,6 +127,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         && !f.contains_key("policy")
         && kv_budget.is_none()
         && prefix_cache.is_none()
+        && contention.mode == ContentionMode::Off
     {
         // Single node, no routing: the original serving path.
         println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
@@ -136,6 +144,7 @@ fn run_serve(args: &[String]) -> Result<()> {
                 sessions,
                 kv_budget,
                 prefix_cache,
+                contention,
             )?
         );
     }
@@ -156,6 +165,7 @@ fn run_serve_traffic(
     disaggregate: Option<(usize, usize)>,
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
+    contention: ContentionConfig,
 ) -> Result<()> {
     use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
 
@@ -237,6 +247,7 @@ fn run_serve_traffic(
         shed_tokens,
         autoscale,
         prefix_cache,
+        contention,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);
@@ -244,7 +255,7 @@ fn run_serve_traffic(
 }
 
 fn run_page(args: &[String]) -> Result<()> {
-    let f = parse_flags("page", args, PAGE_FLAGS, &[])?;
+    let f = parse_flags("page", args, PAGE_FLAGS, PAGE_BARE)?;
     let model: String = flag(&f, "model", "gpt3".to_string())?;
     let system: String = flag(&f, "system", "fh4-1.5xm".to_string())?;
     let remote_tbps: f64 =
@@ -310,15 +321,18 @@ fn run_page(args: &[String]) -> Result<()> {
     }
     let page_kv = switch(&f, "page-kv")?;
     let nmc = switch(&f, "nmc")?;
+    let contention = parse_fabric_contention(&f)?;
 
     let m =
         arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
     let sys = system_by_name(&system, remote_tbps)?;
+    check_contention_fabric(&sys, &contention)?;
     let cfg = PagingConfig {
         page_bytes: Bytes::mib(page_mib),
         local_budget,
         policy: PlacementPolicy { kind, window, page_kv, pin_frac },
         nmc: NmcConfig { enabled: nmc },
+        contention,
         steps,
         ..Default::default()
     };
@@ -385,6 +399,9 @@ fn run_page(args: &[String]) -> Result<()> {
     }
     if nmc {
         println!("  NMC offloads      {:>10} ops executed in-pool", r.nmc_offloads);
+    }
+    if let Some(fr) = &r.fabric {
+        print!("  {}", fr.summary_line());
     }
     Ok(())
 }

@@ -5,8 +5,16 @@
 //! read command per batch (Eq 3.1 fixed part) plus the Eq 4.1
 //! size-dependent serialization of the whole payload. Write-backs of
 //! dirty pages (evicted KV) pay the Eq 3.2 write path symmetrically.
+//!
+//! With a contention clock attached ([`MigrationEngine::with_contention`],
+//! DESIGN.md §Fabric-Contention), every DMA batch is additionally booked
+//! into the shared-fabric bandwidth ledger: the serialization term runs at
+//! the *residual* bandwidth the ledger grants, and exhausted windows show
+//! up as queueing delay. Without a clock, the arithmetic is untouched —
+//! bit-identical to the pre-contention engine.
 
 use crate::config::SystemConfig;
+use crate::fabric::contention::{FabricClock, FabricReport};
 use crate::fabric::FabricLatencies;
 use crate::models::mfu;
 use crate::units::{Bandwidth, Bytes, Seconds};
@@ -43,12 +51,21 @@ pub struct MigrationStats {
 }
 
 /// Charges page moves over the remote fabric.
-#[derive(Debug, Clone)]
 pub struct MigrationEngine {
     cfg: MigrationConfig,
     bw: Bandwidth,
     lat: FabricLatencies,
     pub stats: MigrationStats,
+    /// Shared-fabric arbitration (None = unloaded charges, the
+    /// pre-contention engine).
+    clock: Option<FabricClock>,
+    /// Fabric port this engine's DMA issues from.
+    port: usize,
+    /// The paging stream is serial: each booking starts where the last
+    /// one completed.
+    cursor: Seconds,
+    /// Booking counter (home-module key in hashed per-module mode).
+    seq: u64,
 }
 
 impl MigrationEngine {
@@ -58,7 +75,58 @@ impl MigrationEngine {
             bw: sys.fabric_bw,
             lat: sys.latencies,
             stats: MigrationStats::default(),
+            clock: None,
+            port: 0,
+            cursor: Seconds::ZERO,
+            seq: 0,
         }
+    }
+
+    /// Attach a contention clock: every DMA batch (and NMC stream) this
+    /// engine charges is booked into the shared-fabric ledger from `port`.
+    pub fn with_contention(mut self, clock: FabricClock, port: usize) -> Self {
+        self.clock = Some(clock);
+        self.port = port;
+        self
+    }
+
+    pub fn contended(&self) -> bool {
+        self.clock.is_some()
+    }
+
+    /// Book `bytes` on the ledger at the paging stream's cursor and
+    /// return the congestion-adjusted duration (queueing + serialization
+    /// at the residual bandwidth). `None` without a clock (or with an
+    /// inert Off-mode one) — callers fall back to the unloaded charge,
+    /// keeping Off bit-identical.
+    pub fn book_stream(&mut self, bytes: Bytes) -> Option<Seconds> {
+        let clock = self.clock.as_mut()?;
+        if clock.mode() == crate::fabric::contention::ContentionMode::Off {
+            return None;
+        }
+        self.seq += 1;
+        let b = clock.book(self.cursor, bytes, self.port, self.seq);
+        let d = b.completion - self.cursor;
+        self.cursor = b.completion;
+        Some(d)
+    }
+
+    /// Record an overlapped in-pool stream (the NMC KV gather) on the
+    /// ledger: the bytes load the fabric for arbitration purposes, but
+    /// the stream runs under the compute pass, so nothing is charged and
+    /// the serial DMA cursor does not advance. No-op when uncontended.
+    pub fn book_overlapped(&mut self, bytes: Bytes) {
+        let Some(clock) = self.clock.as_mut() else { return };
+        if clock.mode() == crate::fabric::contention::ContentionMode::Off {
+            return;
+        }
+        self.seq += 1;
+        clock.book(self.cursor, bytes, self.port, self.seq);
+    }
+
+    /// Ledger observables, when contention is on.
+    pub fn fabric_report(&self) -> Option<FabricReport> {
+        self.clock.as_ref().map(|c| c.report())
     }
 
     fn batches(&self, pages: u64) -> u64 {
@@ -76,7 +144,11 @@ impl MigrationEngine {
             return Seconds::ZERO;
         }
         let batches = self.batches(pages);
-        let t = self.lat.tab_read * batches as f64 + mfu::transfer_time(bytes, self.bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d,
+            None => mfu::transfer_time(bytes, self.bw),
+        };
+        let t = self.lat.tab_read * batches as f64 + stream;
         self.stats.pages_in += pages;
         self.stats.bytes_in += bytes;
         self.stats.batches += batches;
@@ -90,7 +162,11 @@ impl MigrationEngine {
             return Seconds::ZERO;
         }
         let batches = self.batches(pages);
-        let t = self.lat.tab_write * batches as f64 + mfu::transfer_time(bytes, self.bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d,
+            None => mfu::transfer_time(bytes, self.bw),
+        };
+        let t = self.lat.tab_write * batches as f64 + stream;
         self.stats.pages_out += pages;
         self.stats.bytes_out += bytes;
         self.stats.batches += batches;
@@ -151,6 +227,73 @@ mod tests {
         assert_eq!(m.stats.writebacks, 1);
         assert_eq!(m.stats.pages_out, 1);
         assert_eq!(m.busy(), t + w);
+    }
+
+    #[test]
+    fn off_clock_and_no_clock_are_bit_identical() {
+        use crate::fabric::contention::{ContentionConfig, FabricClock};
+        let sys = fh4_15xm(Bandwidth::tbps(4.0));
+        let mut plain = MigrationEngine::new(&sys, MigrationConfig::default());
+        let clock =
+            FabricClock::for_system(&sys, ContentionConfig::default().resolved(1)).unwrap();
+        let mut off = MigrationEngine::new(&sys, MigrationConfig::default())
+            .with_contention(clock, 0);
+        for (mib, pages) in [(130.0, 65), (2.0, 1), (512.0, 256)] {
+            assert_eq!(plain.page_in(Bytes::mib(mib), pages), off.page_in(Bytes::mib(mib), pages));
+            assert_eq!(
+                plain.write_back(Bytes::mib(mib), pages),
+                off.write_back(Bytes::mib(mib), pages)
+            );
+        }
+        assert_eq!(plain.busy(), off.busy());
+        assert!(off.contended() && !plain.contended());
+    }
+
+    #[test]
+    fn contended_dma_pays_queueing_once_windows_fill() {
+        use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock};
+        let sys = fh4_15xm(Bandwidth::tbps(4.0));
+        let cfg = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() }
+            .resolved(1);
+        let clock = FabricClock::for_system(&sys, cfg).unwrap();
+        let mut contended =
+            MigrationEngine::new(&sys, MigrationConfig::default()).with_contention(clock, 0);
+        let mut plain = MigrationEngine::new(&sys, MigrationConfig::default());
+        // A serial stream of large DMAs: the single port's window budget
+        // caps each batch, so the contended engine can never be faster,
+        // and its ledger sees every byte.
+        let mut t_c = Seconds::ZERO;
+        let mut t_p = Seconds::ZERO;
+        for _ in 0..4 {
+            t_c += contended.page_in(Bytes::gib(1.0), 512);
+            t_p += plain.page_in(Bytes::gib(1.0), 512);
+        }
+        assert!(t_c >= t_p - Seconds::ns(1.0), "contended {t_c:?} vs plain {t_p:?}");
+        let fr = contended.fabric_report().expect("ledger attached");
+        assert_eq!(fr.transfers, 4);
+        assert!((fr.bytes.value() - 4.0 * Bytes::gib(1.0).value()).abs() < 1.0);
+        assert!(plain.fabric_report().is_none());
+    }
+
+    #[test]
+    fn overlapped_streams_load_the_ledger_without_a_time_charge() {
+        use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock};
+        let sys = fh4_15xm(Bandwidth::tbps(4.0));
+        let cfg = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() }
+            .resolved(1);
+        let clock = FabricClock::for_system(&sys, cfg).unwrap();
+        let mut m =
+            MigrationEngine::new(&sys, MigrationConfig::default()).with_contention(clock, 0);
+        m.book_overlapped(Bytes::gib(1.0));
+        let fr = m.fabric_report().unwrap();
+        assert_eq!(fr.transfers, 1, "overlapped bytes must appear as fabric load");
+        assert!((fr.bytes.value() - Bytes::gib(1.0).value()).abs() < 1.0);
+        assert_eq!(m.busy(), Seconds::ZERO, "no paging-stream time is charged");
+        // Without a clock the call is a no-op.
+        let mut plain = MigrationEngine::new(&sys, MigrationConfig::default());
+        plain.book_overlapped(Bytes::gib(1.0));
+        assert!(plain.fabric_report().is_none());
+        assert_eq!(plain.busy(), Seconds::ZERO);
     }
 
     #[test]

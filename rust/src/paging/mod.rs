@@ -39,6 +39,7 @@ pub use tiers::{KvPressure, Tier, TierModel, TierSpec};
 
 use crate::config::{FabricKind, SystemConfig};
 use crate::error::{FhError, Result};
+use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
 use crate::models::arch::ModelArch;
 use crate::sim::engine;
 use crate::sim::exec::{op_time, op_time_kv_staged};
@@ -66,6 +67,10 @@ pub struct PagingConfig {
     pub policy: PlacementPolicy,
     pub migration: MigrationConfig,
     pub nmc: NmcConfig,
+    /// Shared-fabric arbitration for the paging stream and the NMC
+    /// command/gather path (DESIGN.md §Fabric-Contention). Off keeps the
+    /// unloaded charges bit-identically.
+    pub contention: ContentionConfig,
     /// Steps to co-simulate (≥ 2 exposes the steady state: later decode
     /// steps reuse whatever residency the budget allowed to survive).
     pub steps: usize,
@@ -79,6 +84,7 @@ impl Default for PagingConfig {
             policy: PlacementPolicy::default(),
             migration: MigrationConfig::default(),
             nmc: NmcConfig::default(),
+            contention: ContentionConfig::default(),
             steps: 2,
         }
     }
@@ -115,6 +121,8 @@ pub struct PagedReport {
     pub nmc_offloads: u64,
     /// Eviction events (cumulative).
     pub evictions: u64,
+    /// Shared-fabric arbitration observables (None with contention off).
+    pub fabric: Option<FabricReport>,
 }
 
 impl PagedReport {
@@ -173,6 +181,13 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
     let pol = cfg.policy;
     let mut table = PageTable::new(cfg.page_bytes);
     let mut mig = MigrationEngine::new(sys, cfg.migration);
+    if cfg.contention.mode != ContentionMode::Off {
+        // Single-node paging: one port into the pool; the ledger still
+        // windows the stream, so per-module hotspots and window-budget
+        // exhaustion surface even without fleet neighbours.
+        let clock = FabricClock::for_system(sys, cfg.contention.resolved(1))?;
+        mig = mig.with_contention(clock, 0);
+    }
 
     // Register every weight tensor up front (KV tensors register lazily —
     // they grow with context).
@@ -229,18 +244,22 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
             if cfg.nmc.enabled {
                 match nmc::eligible(op) {
                     Some(NmcKind::ReduceAccumulate) => {
-                        nmc_run = Some(nmc::reduce_time(op, sys));
+                        nmc_run = Some(nmc::reduce_time_contended(op, sys, &mut mig));
                     }
                     Some(NmcKind::EmbeddingGather) => {
-                        nmc_run = Some(nmc::gather_time(op, sys));
+                        nmc_run = Some(nmc::gather_time_contended(op, sys, &mut mig));
                     }
                     Some(NmcKind::KvGather) => {
                         // Gathered pool-side: never staged, even under a
-                        // page_kv policy.
+                        // page_kv policy. The gather still moves its
+                        // bytes through the pool, so the contention
+                        // ledger records them as overlapped load (no
+                        // time charged — the stream runs under the op).
                         if kv_staged {
                             nmc_offloads += 1;
                         }
                         kv_staged = false;
+                        mig.book_overlapped(op.kv_stream_bytes);
                     }
                     None => {}
                 }
@@ -433,6 +452,7 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
         peak_local,
         pinned,
         working_set: table.registered_bytes(),
+        fabric: mig.fabric_report(),
         migration: mig.stats,
         nmc_offloads,
         evictions,
@@ -628,6 +648,38 @@ mod tests {
         // KV pages are dirty → minimal residency writes them back.
         assert!(r.migration.writebacks > 0);
         assert!(r.migration.bytes_out.value() > 0.0);
+    }
+
+    #[test]
+    fn fabric_contention_overlays_the_paging_stream() {
+        let base = decode_report(&decode_cfg());
+        assert!(base.fabric.is_none(), "contention defaults to off");
+        let contended = decode_report(&PagingConfig {
+            contention: ContentionConfig {
+                mode: ContentionMode::Shared,
+                ..Default::default()
+            },
+            ..decode_cfg()
+        });
+        let fr = contended.fabric.as_ref().expect("ledger attached");
+        assert!(fr.transfers > 0, "page DMA must book through the ledger");
+        assert!(fr.bytes.value() > 0.0);
+        // A serial single-port stream sees arbitration overhead but no
+        // self-queueing: never faster than the unloaded engine.
+        assert!(
+            contended.steady_step >= base.steady_step - Seconds::ns(1.0),
+            "contended {:?} vs base {:?}",
+            contended.steady_step,
+            base.steady_step
+        );
+        // An explicit Off config is bit-identical to the default path.
+        let off = decode_report(&PagingConfig {
+            contention: ContentionConfig::default(),
+            ..decode_cfg()
+        });
+        assert_eq!(off.cold_step, base.cold_step);
+        assert_eq!(off.steady_step, base.steady_step);
+        assert_eq!(off.migration.bytes_in.value(), base.migration.bytes_in.value());
     }
 
     #[test]

@@ -73,6 +73,42 @@ pub fn gather_time(op: &Op, sys: &SystemConfig) -> Seconds {
     sys.latencies.tab_read + mfu::transfer_time(op.read_bytes, sys.fabric_bw)
 }
 
+/// [`reduce_time`] with the reduction's wire traffic booked through the
+/// shared-fabric ledger (DESIGN.md §Fabric-Contention): the accumulate
+/// stream runs at whatever residual bandwidth the arbitration grants.
+/// Falls back to the exact unloaded charge when `mig` carries no active
+/// contention clock. Note the contended stream additionally pays the
+/// Eq 4.1 message-size efficiency the ledger models; the unloaded path
+/// keeps the paper's raw `bytes / bandwidth` term.
+pub fn reduce_time_contended(
+    op: &Op,
+    sys: &SystemConfig,
+    mig: &mut crate::paging::MigrationEngine,
+) -> Seconds {
+    let OpKind::Collective(c) = op.kind else {
+        return Seconds::ZERO;
+    };
+    match mig.book_stream(tab_wire_bytes(c, op.comm_payload, sys.num_gpus)) {
+        Some(stream) => {
+            sys.latencies.tab_write_accumulate + sys.latencies.notification_latency() + stream
+        }
+        None => reduce_time(op, sys),
+    }
+}
+
+/// [`gather_time`] with the gathered rows booked through the
+/// shared-fabric ledger; unloaded charge when contention is off.
+pub fn gather_time_contended(
+    op: &Op,
+    sys: &SystemConfig,
+    mig: &mut crate::paging::MigrationEngine,
+) -> Seconds {
+    match mig.book_stream(op.read_bytes) {
+        Some(stream) => sys.latencies.tab_read + stream,
+        None => gather_time(op, sys),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +152,29 @@ mod tests {
         // Eliding the read-back saves exactly the fixed read latency.
         let saved = ordinary - nmc;
         assert!((saved.as_ns() - 220.0).abs() < 1e-6, "saved {} ns", saved.as_ns());
+    }
+
+    #[test]
+    fn contended_variants_fall_back_exactly_when_uncontended() {
+        use crate::paging::{MigrationConfig, MigrationEngine};
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut plain = MigrationEngine::new(&sys, MigrationConfig::default());
+        let t = trace();
+        let ar = t.ops.iter().find(|o| o.is_collective()).unwrap();
+        let embed = t.ops.iter().find(|o| o.op == OpName::Embed).unwrap();
+        assert_eq!(reduce_time_contended(ar, &sys, &mut plain), reduce_time(ar, &sys));
+        assert_eq!(gather_time_contended(embed, &sys, &mut plain), gather_time(embed, &sys));
+        // With an active clock the stream pays Eq 4.1 shaping (and, under
+        // load, queueing): never cheaper than the unloaded wire time.
+        use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock};
+        let cfg = ContentionConfig { mode: ContentionMode::Shared, ..Default::default() }
+            .resolved(1);
+        let clock = FabricClock::for_system(&sys, cfg).unwrap();
+        let mut loaded = MigrationEngine::new(&sys, MigrationConfig::default())
+            .with_contention(clock, 0);
+        let contended = gather_time_contended(embed, &sys, &mut loaded);
+        assert!(contended >= gather_time(embed, &sys) - Seconds::ns(1.0));
+        assert!(loaded.fabric_report().unwrap().transfers == 1);
     }
 
     #[test]

@@ -7,6 +7,17 @@
 //! xorshift64* seeded through a splitmix64 scramble so that nearby seeds
 //! (0, 1, 2, …) still produce decorrelated streams.
 
+/// The splitmix64 finaliser: one avalanche round. The single definition
+/// shared by the seed scramble below and the contention ledger's
+/// home-module hash ([`crate::fabric::contention`]), so the magic
+/// constants cannot drift between copies.
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// xorshift64* generator. Cheap, deterministic, and good enough for
 /// workload synthesis (this is not a cryptographic source).
 #[derive(Debug, Clone)]
@@ -19,10 +30,7 @@ impl XorShift {
     /// maps it away from the forbidden all-zero xorshift state).
     pub fn new(seed: u64) -> Self {
         // splitmix64 finaliser: decorrelates consecutive small seeds.
-        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^= z >> 31;
+        let z = splitmix64(seed);
         XorShift { state: if z == 0 { 0x9E3779B97F4A7C15 } else { z } }
     }
 

@@ -226,6 +226,19 @@ impl FlopRate {
     }
 }
 
+/// Exact nearest-rank percentile over an ascending-sorted sample slice
+/// (0 when empty). The single definition shared by the serving latency
+/// stats (`coordinator::metrics::LatencyStat`) and the fabric
+/// contention ledger (`fabric::contention`), so queue percentiles can
+/// never drift from TTFT/TPOT percentiles in the same report.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize - 1;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
 /// Numeric precision of a tensor element.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dtype {
@@ -299,6 +312,17 @@ mod tests {
         assert_eq!(Dtype::F32.bytes(), 4.0);
         assert_eq!(Dtype::Bf16.bytes(), 2.0);
         assert_eq!(Dtype::Fp8.bytes(), 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_percentile_matches_hand_calc() {
+        assert_eq!(percentile_nearest_rank(&[], 95.0), 0.0);
+        assert_eq!(percentile_nearest_rank(&[17.0], 1.0), 17.0);
+        assert_eq!(percentile_nearest_rank(&[17.0], 100.0), 17.0);
+        let s = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile_nearest_rank(&s, 50.0), 30.0);
+        assert_eq!(percentile_nearest_rank(&s, 100.0), 50.0);
+        assert_eq!(percentile_nearest_rank(&s, 1.0), 10.0);
     }
 
     #[test]

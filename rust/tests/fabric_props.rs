@@ -1,0 +1,208 @@
+//! Property tests for the shared-fabric arbitration ledger
+//! (DESIGN.md §Fabric-Contention): seeded random booking sequences pin
+//! the invariants the cost model rests on —
+//!
+//! * **conservation** — every byte a booking takes lands in exactly one
+//!   window and one module bucket, so the per-window, per-port and
+//!   per-module ledgers all sum to the booked total;
+//! * **monotonicity** — a transfer's completion time never *improves*
+//!   when more load is offered first (residual budgets only shrink);
+//! * **Off identity** — Off mode reproduces the unloaded
+//!   [`FabricLatencies`]-era arithmetic bit-for-bit and records nothing;
+//! * **balance** — uniform striping (§3.3.1) keeps the per-module byte
+//!   ledger exactly balanced; whole-transfer hashing may only skew it.
+
+use fenghuang::config::fh4_15xm;
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode, FabricClock};
+use fenghuang::models::mfu;
+use fenghuang::traffic::XorShift;
+use fenghuang::units::{Bandwidth, Bytes, Seconds};
+
+fn sys() -> fenghuang::config::SystemConfig {
+    fh4_15xm(Bandwidth::tbps(4.8))
+}
+
+fn clock(mode: ContentionMode, ports: usize, interleave: bool) -> FabricClock {
+    let cfg = ContentionConfig { mode, module_interleave: interleave, ..Default::default() }
+        .resolved(ports);
+    FabricClock::for_system(&sys(), cfg).expect("clock")
+}
+
+/// A seeded random booking plan: (start, bytes, port, key).
+fn plan(seed: u64, n: usize, ports: usize) -> Vec<(Seconds, Bytes, usize, u64)> {
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|_| {
+            // Starts inside a 50 ms horizon, sizes from 4 KiB to ~2 GiB
+            // (log-uniform, so both latency- and bandwidth-dominated
+            // messages appear).
+            let start = Seconds::new(rng.next_f64() * 0.05);
+            let log_span = (Bytes::gib(2.0).value() / Bytes::kib(4.0).value()).ln();
+            let bytes = Bytes(Bytes::kib(4.0).value() * (rng.next_f64() * log_span).exp());
+            let port = (rng.next_u64() % ports as u64) as usize;
+            let key = rng.next_u64();
+            (start, bytes, port, key)
+        })
+        .collect()
+}
+
+#[test]
+fn booked_bytes_are_conserved_across_windows_ports_and_modules() {
+    for (mode, interleave) in [
+        (ContentionMode::Shared, true),
+        (ContentionMode::PerModule, true),
+        (ContentionMode::PerModule, false),
+    ] {
+        for seed in [3u64, 17, 90210] {
+            let mut c = clock(mode, 8, interleave);
+            let mut offered = 0.0f64;
+            for (start, bytes, port, key) in plan(seed, 120, 8) {
+                c.book(start, bytes, port, key);
+                offered += bytes.value();
+            }
+            let booked = c.booked_bytes().value();
+            let tol = 1e-6 * offered.max(1.0);
+            assert!(
+                (booked - offered).abs() <= tol,
+                "{mode:?}/{interleave}/{seed}: offered {offered} vs booked {booked}"
+            );
+            let windowed: f64 = c.window_bytes().iter().map(|(_, b)| b.value()).sum();
+            assert!(
+                (windowed - booked).abs() <= tol,
+                "{mode:?}/{interleave}/{seed}: window ledger {windowed} vs booked {booked}"
+            );
+            let by_port: f64 = c.port_bytes().iter().map(|b| b.value()).sum();
+            assert!((by_port - booked).abs() <= tol, "port ledger {by_port} vs {booked}");
+            let by_module: f64 = c.module_bytes().iter().map(|b| b.value()).sum();
+            assert!(
+                (by_module - booked).abs() <= tol,
+                "module ledger {by_module} vs {booked}"
+            );
+            let r = c.report();
+            assert_eq!(r.transfers, 120);
+            assert!((r.bytes.value() - booked).abs() <= tol);
+        }
+    }
+}
+
+#[test]
+fn completion_times_are_monotone_in_offered_load() {
+    // The same probe transfer, booked after ever more background load:
+    // residual budgets only shrink, so its completion never improves.
+    let probe_bytes = Bytes::mib(512.0);
+    for (mode, interleave) in [
+        (ContentionMode::Shared, true),
+        (ContentionMode::PerModule, true),
+        (ContentionMode::PerModule, false),
+    ] {
+        let mut prev = None;
+        for background in [0usize, 4, 16, 48, 96] {
+            let mut c = clock(mode, 8, interleave);
+            let load = plan(11, background, 8);
+            for (start, bytes, port, key) in load {
+                // Background concentrated at t=0..50ms, like the probe.
+                c.book(start, bytes, port, key);
+            }
+            let b = c.book(Seconds::ms(10.0), probe_bytes, 3, 42);
+            assert!(b.queueing.value() >= 0.0);
+            assert!(
+                b.completion >= Seconds::ms(10.0) + b.serialization - Seconds::ns(1.0),
+                "completion can never beat start + serialization"
+            );
+            if let Some(prev) = prev {
+                assert!(
+                    b.completion >= prev,
+                    "{mode:?}/{interleave}: probe completed earlier under \
+                     {background} background transfers ({:?} < {prev:?})",
+                    b.completion
+                );
+            }
+            prev = Some(b.completion);
+        }
+    }
+}
+
+#[test]
+fn same_port_load_queues_harder_than_spread_load() {
+    // All background on the probe's port vs spread over 8 ports: the
+    // port-budget constraint must bite at least as hard.
+    let mk = |same_port: bool| {
+        let mut c = clock(ContentionMode::Shared, 8, true);
+        for i in 0..12u64 {
+            let port = if same_port { 3 } else { (i % 8) as usize };
+            c.book(Seconds::ZERO, Bytes::mib(256.0), port, i);
+        }
+        c.book(Seconds::ZERO, Bytes::mib(256.0), 3, 99).completion
+    };
+    assert!(mk(true) >= mk(false));
+}
+
+#[test]
+fn off_mode_is_bit_identical_to_the_unloaded_charges() {
+    let mut c = clock(ContentionMode::Off, 8, true);
+    let bw = sys().fabric_bw;
+    let mut rng = XorShift::new(5);
+    for _ in 0..64 {
+        let bytes = Bytes(4096.0 + rng.next_f64() * 2e9);
+        let start = Seconds::new(rng.next_f64());
+        let b = c.book(start, bytes, (rng.next_u64() % 8) as usize, rng.next_u64());
+        // Exactly the Eq 4.1 unloaded serialization every consumer used
+        // before this subsystem existed — same f64 ops, same bits.
+        assert_eq!(b.serialization, mfu::transfer_time(bytes, bw));
+        assert_eq!(b.completion, start + mfu::transfer_time(bytes, bw));
+        assert_eq!(b.queueing, Seconds::ZERO);
+    }
+    // Nothing was recorded: the Off clock is inert, so any consumer
+    // holding one behaves as if it held none.
+    assert_eq!(c.transfers(), 0);
+    assert_eq!(c.booked_bytes(), Bytes::ZERO);
+    let r = c.report();
+    assert_eq!(r.transfers, 0);
+    assert_eq!(r.busy_frac, 0.0);
+    assert_eq!(r.queue_p99, Seconds::ZERO);
+}
+
+#[test]
+fn interleave_balances_modules_exactly_hashing_only_skews() {
+    for seed in [1u64, 8, 23] {
+        let mut striped = clock(ContentionMode::PerModule, 8, true);
+        let mut hashed = clock(ContentionMode::PerModule, 8, false);
+        for (start, bytes, port, key) in plan(seed, 90, 8) {
+            striped.book(start, bytes, port, key);
+            hashed.book(start, bytes, port, key);
+        }
+        let rs = striped.report();
+        assert!(
+            (rs.module_imbalance - 1.0).abs() < 1e-9,
+            "seed {seed}: uniform striping must balance exactly, got {}",
+            rs.module_imbalance
+        );
+        let max = rs.module_bytes.iter().map(|b| b.value()).fold(0.0, f64::max);
+        let min = rs.module_bytes.iter().map(|b| b.value()).fold(f64::INFINITY, f64::min);
+        assert!((max - min).abs() <= 1e-6 * max.max(1.0), "striped spread {min}..{max}");
+        let rh = hashed.report();
+        assert!(
+            rh.module_imbalance >= rs.module_imbalance - 1e-9,
+            "seed {seed}: hashed {} below striped {}",
+            rh.module_imbalance,
+            rs.module_imbalance
+        );
+        assert!(rh.hotspot_module < 8);
+    }
+}
+
+#[test]
+fn booking_sequences_are_deterministic() {
+    let run = |seed| {
+        let mut c = clock(ContentionMode::PerModule, 8, false);
+        let mut fingerprint = Vec::new();
+        for (start, bytes, port, key) in plan(seed, 60, 8) {
+            let b = c.book(start, bytes, port, key);
+            fingerprint.push((b.completion.value(), b.queueing.value()));
+        }
+        let r = c.report();
+        (fingerprint, r.queue_p99.value(), r.module_imbalance, r.hotspot_module)
+    };
+    assert_eq!(run(77), run(77), "same plan must reproduce the ledger bit-for-bit");
+    assert_ne!(run(77).0, run(78).0, "different plans must differ");
+}

@@ -13,6 +13,7 @@
 use fenghuang::coordinator::{
     AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig,
 };
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
 use fenghuang::models::arch::gpt3_175b;
 use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::Bytes;
@@ -68,6 +69,19 @@ fn observe(prefix: &str, r: &ClusterReport, out: &mut BTreeMap<String, f64>) {
             m("prefill_tokens_saved", r.fleet.prefill_tokens_saved as f64),
             m("prefix_fetch_ms", r.fleet.prefix_fetch.as_ms()),
             m("prefix_pool_peak_gb", pc.pool_bytes_peak.as_gb()),
+        ] {
+            out.insert(k, v);
+        }
+    }
+    if let Some(fr) = &r.fabric {
+        for (k, v) in [
+            m("fabric_transfers", fr.transfers as f64),
+            m("fabric_bytes_gb", fr.bytes.as_gb()),
+            m("fabric_busy_frac", fr.busy_frac),
+            m("fabric_queue_p99_ms", fr.queue_p99.as_ms()),
+            m("fabric_queue_total_ms", fr.queue_total.as_ms()),
+            m("fabric_imbalance", fr.module_imbalance),
+            m("fabric_wait_ms", r.fleet.fabric_wait.as_ms()),
         ] {
             out.insert(k, v);
         }
@@ -138,6 +152,37 @@ fn current_metrics() -> BTreeMap<String, f64> {
         "agentic sessions must reuse the shared prefix"
     );
     observe("prefix", &prefix, &mut out);
+    // Shared-fabric arbitration (DESIGN.md §Fabric-Contention): the same
+    // agentic reuse path with the pool modelled as a finite resource —
+    // pins the booking algorithm (window walk, residual maths, queueing
+    // attribution) against silent drift.
+    let contention_tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").expect("mix"),
+        requests: 32,
+        seed: 19,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    let mut fleet = Cluster::fh4(
+        4,
+        &gpt3_175b(),
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig {
+                mode: ContentionMode::Shared,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .expect("cluster");
+    let contention =
+        fleet.run(traffic::generate(&contention_tc).expect("workload")).expect("run");
+    assert!(
+        contention.fabric.as_ref().is_some_and(|fr| fr.transfers > 0),
+        "the contended run must book fabric transfers"
+    );
+    observe("contention", &contention, &mut out);
     out
 }
 

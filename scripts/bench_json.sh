@@ -3,20 +3,21 @@
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
 # §Serve-Scale, §Traffic-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
 #   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
 #   scripts/bench_json.sh prefix     # just the shared prefix-cache sweep
+#   scripts/bench_json.sh contention # just the shared-fabric contention sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 want="${1:-all}"
 
 case "$want" in
-    all|paging|serve|traffic|prefix) ;;
+    all|paging|serve|traffic|prefix|contention) ;;
     *)
-        echo "error: unknown target '$want' (expected: all, paging, serve, traffic or prefix)" >&2
+        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix or contention)" >&2
         exit 2
         ;;
 esac
@@ -36,6 +37,9 @@ if [[ "$want" == "all" || "$want" == "traffic" ]]; then
 fi
 if [[ "$want" == "all" || "$want" == "prefix" ]]; then
     cargo bench --bench prefix_cache -- --json
+fi
+if [[ "$want" == "all" || "$want" == "contention" ]]; then
+    cargo bench --bench fabric_contention -- --json
 fi
 
 echo

@@ -70,6 +70,7 @@ fi
 BENCHES=(
     ablations
     collective_speedup
+    fabric_contention
     fig1_trends
     fig2_hw_trends
     fig2_model_trends
