@@ -1,21 +1,61 @@
-//! Hot-path microbenchmarks (§Perf of EXPERIMENTS.md).
+//! Hot-path benchmarks (§Perf of EXPERIMENTS.md).
 //!
 //! L3 targets: trace generation, DES scheduling, whole-simulation
-//! latency, serving-loop throughput, TAB accumulate bandwidth. Run before
-//! and after each optimization; the iteration log lives in EXPERIMENTS.md.
+//! latency, serving-loop throughput, TAB accumulate bandwidth — plus the
+//! cluster-core sections added with the event calendar
+//! (DESIGN.md §Event-Core):
+//!
+//! * `gate` — a fixed 4-replica × 2 000-request diurnal run through the
+//!   event core, always at this size so scripts/ci.sh can compare the
+//!   fresh number against the committed baseline and fail on a > 2×
+//!   regression;
+//! * `event_vs_stepping` — the same workload through the stepping
+//!   oracle (`run_stepping`) and the event core (`run`); in full mode
+//!   (16 replicas × 100 000 requests) the event core must win by ≥ 10×;
+//! * `scale` — the event core alone at fleet scale (full mode:
+//!   64 replicas × 1 000 000 lean requests), which the stepping loop
+//!   cannot reach in bench-able time.
+//!
+//! Run before and after each optimization; the iteration log lives in
+//! EXPERIMENTS.md. `-- --json` writes BENCH_perf_hotpath.json;
+//! `-- --smoke` (scripts/ci.sh) shrinks the comparison/scale sections.
 
 mod common;
 
 use fenghuang::config::{baseline8, fh4_15xm};
-use fenghuang::coordinator::{synthetic_workload, Batcher, Scheduler, SimBackend};
+use fenghuang::coordinator::{
+    synthetic_workload, Batcher, Cluster, ClusterConfig, Request, Scheduler, SimBackend,
+};
 use fenghuang::fabric::tab::TabPool;
 use fenghuang::models::arch::{gpt3_175b, qwen3_235b};
 use fenghuang::sim::{simulate_trace, PrefetchPolicy};
 use fenghuang::trace::{generate, Phase, TraceConfig};
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::{Bandwidth, Seconds};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Diurnal chat stream, the workload shape of the cluster sections.
+/// Same seed at every size so gate runs are comparable across commits.
+fn diurnal_chat(requests: usize, qps: f64) -> Vec<Request> {
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").expect("mix"),
+        requests,
+        seed: 7,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+    };
+    traffic::generate(&tc).expect("workload")
+}
 
 fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
     let fh = fh4_15xm(Bandwidth::tbps(4.8));
 
     // Trace generation (per simulation).
@@ -101,5 +141,102 @@ fn main() {
         });
         let total_bytes = threads * 4 * (1 << 20) * 4;
         println!("  -> {:.2} GB/s aggregate", common::gbps(total_bytes, r.median_ns));
+    }
+
+    // ---- gate: fixed-size event-core run, the CI regression anchor ------
+    // Always 4 replicas × 2000 requests, smoke or not, so every commit's
+    // BENCH_perf_hotpath.json carries a comparable number for the
+    // scripts/ci.sh perf gate.
+    println!("\n== perf-hotpath: event-core gate (4 replicas, 2000 diurnal chat) ==");
+    let gate_reqs = diurnal_chat(2000, 40.0);
+    let r = common::bench("cluster.event-core gate 4r x 2000", 1, 3, || {
+        let mut c = Cluster::fh4(4, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        c.run(gate_reqs.clone()).unwrap().fleet.completed
+    });
+    let gate_ns = r.median_ns;
+    println!(
+        "  -> {:.0} requests/s through the event core",
+        gate_reqs.len() as f64 / gate_ns * 1e9
+    );
+    json_rows.push(format!(
+        "{{\"section\": \"gate\", \"replicas\": 4, \"requests\": 2000, \"event_core_ns\": {gate_ns:.0}}}"
+    ));
+
+    // ---- event core vs stepping oracle ----------------------------------
+    let (cmp_replicas, cmp_requests, cmp_qps) =
+        if smoke { (4usize, 2_000usize, 40.0) } else { (16, 100_000, 200.0) };
+    println!(
+        "\n== perf-hotpath: event core vs stepping oracle ({cmp_replicas} replicas, {cmp_requests} diurnal chat) =="
+    );
+    // The workload is regenerated (same seed → identical stream) rather
+    // than cloned, so the full-mode 100k-request run never holds two
+    // copies in memory at once.
+    let reqs = diurnal_chat(cmp_requests, cmp_qps);
+    let mut cs = Cluster::fh4(cmp_replicas, &gpt3_175b(), ClusterConfig::default()).unwrap();
+    let t0 = Instant::now();
+    let rs = cs.run_stepping(reqs).unwrap();
+    let stepping_ns = t0.elapsed().as_nanos() as f64;
+    let reqs = diurnal_chat(cmp_requests, cmp_qps);
+    let mut ce = Cluster::fh4(cmp_replicas, &gpt3_175b(), ClusterConfig::default()).unwrap();
+    let t0 = Instant::now();
+    let re = ce.run(reqs).unwrap();
+    let event_ns = t0.elapsed().as_nanos() as f64;
+    // The differential harness (rust/tests/event_core_equiv.rs) pins full
+    // bit-identity; the bench sanity-checks the headline counters so a
+    // perf number is never reported for a divergent run.
+    assert_eq!(rs.fleet.completed, re.fleet.completed, "cores must agree on completions");
+    assert_eq!(rs.fleet.tokens_generated, re.fleet.tokens_generated, "cores must agree on tokens");
+    assert_eq!(rs.fleet.clock.to_bits(), re.fleet.clock.to_bits(), "cores must agree on makespan");
+    let speedup = stepping_ns / event_ns;
+    println!(
+        "  stepping {:>10.1} ms   event {:>10.1} ms   speedup {speedup:.2}x",
+        stepping_ns / 1e6,
+        event_ns / 1e6
+    );
+    if !smoke {
+        assert!(
+            speedup >= 10.0,
+            "event core must beat the stepping oracle by >= 10x at 16x100k (got {speedup:.2}x)"
+        );
+    }
+    json_rows.push(format!(
+        "{{\"section\": \"event_vs_stepping\", \"replicas\": {cmp_replicas}, \
+         \"requests\": {cmp_requests}, \"stepping_ns\": {stepping_ns:.0}, \
+         \"event_ns\": {event_ns:.0}, \"speedup\": {speedup:.3}, \"smoke\": {smoke}}}"
+    ));
+
+    // ---- scale: event core only, beyond stepping reach ------------------
+    let (scale_replicas, scale_requests) = if smoke { (8usize, 20_000usize) } else { (64, 1_000_000) };
+    println!(
+        "\n== perf-hotpath: event-core scale ({scale_replicas} replicas, {scale_requests} lean requests) =="
+    );
+    let reqs = synthetic_workload(scale_requests, 64, 32, Seconds::ms(0.5));
+    let mut c = Cluster::fh4(scale_replicas, &gpt3_175b(), ClusterConfig::default()).unwrap();
+    let t0 = Instant::now();
+    let r = c.run(reqs).unwrap();
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(
+        r.fleet.completed + r.fleet.rejected + r.fleet.shed,
+        scale_requests as u64,
+        "every request must be accounted for at scale"
+    );
+    let req_per_s = scale_requests as f64 / wall_ns * 1e9;
+    let tok_per_s = r.fleet.tokens_generated as f64 / wall_ns * 1e9;
+    println!(
+        "  wall {:>10.1} ms   {:>9.0} requests/s   {:>11.0} sim-tokens/s   streaming stats: {}",
+        wall_ns / 1e6,
+        req_per_s,
+        tok_per_s,
+        r.fleet.ttft.is_streaming(),
+    );
+    json_rows.push(format!(
+        "{{\"section\": \"scale\", \"replicas\": {scale_replicas}, \"requests\": {scale_requests}, \
+         \"wall_ns\": {wall_ns:.0}, \"completed\": {}, \"requests_per_s\": {req_per_s:.1}, \
+         \"tokens_per_s\": {tok_per_s:.1}, \"smoke\": {smoke}}}",
+        r.fleet.completed
+    ));
+
+    if common::json_requested() {
+        common::write_rows_json("perf_hotpath", &json_rows);
     }
 }

@@ -1,7 +1,9 @@
 //! Bench target: cluster-scale serving sweep (EXPERIMENTS.md §Serve-Scale).
 //!
-//! 1. Replica-count sweep 1→16 on the paper's three workloads: fleet
-//!    throughput and makespan under a fixed saturating request stream.
+//! 1. Replica-count sweep 1→64 on the paper's three workloads: fleet
+//!    throughput and makespan under a fixed saturating request stream
+//!    (the 32/64-replica points ride the event-driven cluster core,
+//!    DESIGN.md §Event-Core — the stepping loop priced them out).
 //! 2. Policy shoot-out at 4 replicas on a heterogeneous stream:
 //!    round-robin vs least-outstanding-tokens vs kv-affinity (load
 //!    imbalance + tail TTFT).
@@ -35,8 +37,8 @@ fn lopsided(n: usize) -> Vec<Request> {
 fn main() {
     // CI smoke mode (scripts/ci.sh): tiny sweep, same code paths.
     let smoke = common::smoke();
-    let n = if smoke { 16 } else { 48 };
-    let replica_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    let n = if smoke { 16 } else { 256 };
+    let replica_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8, 16, 32, 64] };
     let mut json_rows: Vec<String> = Vec::new();
     println!("== serve-scale: replica sweep (least-outstanding-tokens, {n} requests) ==");
     println!("model     replicas  makespan(s)  tok/s   p95 TTFT(ms)  mean util");

@@ -55,7 +55,7 @@ fn main() {
         vec![gpt3_175b(), grok1(), qwen3_235b()]
     };
     let mixes: &[&str] = if smoke { &["chat"] } else { &["chat", "chat+rag", "agentic+batch"] };
-    let grid_requests = if smoke { 12 } else { 48 };
+    let grid_requests = if smoke { 12 } else { 256 };
     let base_slo = SloTarget { ttft: Seconds::ms(2000.0), tpot: Seconds::ms(80.0) };
 
     println!("== traffic-sweep: pattern × mix grid (4 replicas, {grid_requests} requests, qps 8, seed {SEED}) ==");
@@ -103,7 +103,7 @@ fn main() {
     // the same SLO with ≥ 30 % fewer replica-seconds.
     let elastic_models: Vec<ModelArch> =
         if smoke { vec![gpt3_175b()] } else { vec![gpt3_175b(), qwen3_235b()] };
-    let elastic_requests = if smoke { 32 } else { 192 };
+    let elastic_requests = if smoke { 32 } else { 1024 };
     let elastic_slo = SloTarget { ttft: Seconds::ms(4000.0), tpot: Seconds::ms(150.0) };
 
     println!("\n== traffic-sweep: elastic vs static (diurnal chat+rag, 8-replica fleet, qps 12 peak) ==");

@@ -1,0 +1,202 @@
+//! Request arena for the event-driven cluster core
+//! (DESIGN.md §Event-Core).
+//!
+//! The stepping loop moves whole [`Request`]s — prompt vectors included
+//! — through submit queues, batcher queues and response vectors; at a
+//! million requests those moves and the retained token buffers dominate
+//! both wall-clock and resident memory. The arena fixes the cost shape:
+//! every request is allocated once at workload ingest, all queues carry
+//! a 4-byte [`ReqId`] handle, and the prompt buffer is *retired*
+//! (freed) as soon as admission routing has consumed it — the serving
+//! cost model is length-based, so everything downstream of admission
+//! reads only the frozen scalars.
+//!
+//! Handles never dangle: entries are never removed from the backing
+//! vector, so a `ReqId` stays valid for the arena's whole lifetime and
+//! the scalar metadata (lengths, arrival, SLO, affinity) survives
+//! prompt retirement unchanged. `rust/tests/event_props.rs` pins this.
+
+use super::request::{Request, SloTarget};
+use crate::units::Seconds;
+
+/// Index handle into a [`RequestArena`]. `u32` bounds the arena at ~4
+/// billion requests — far above the 1M+ sweeps this core targets —
+/// while keeping event payloads and queue entries small.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReqId(pub u32);
+
+/// One arena slot: the request's frozen scalar metadata plus its
+/// (retirable) prompt buffer.
+#[derive(Debug)]
+pub struct ArenaEntry {
+    /// Original request id (used for fabric booking attribution).
+    pub id: u64,
+    /// Prompt length, frozen at allocation — valid after retirement.
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub arrival: Seconds,
+    pub slo: Option<SloTarget>,
+    /// Leading tokens served from the shared prefix cache; set by the
+    /// cluster at admission (mirrors `Request::cached_prefix`).
+    pub cached_prefix: usize,
+    /// TAB fetch stall charged to this request's prefill step.
+    pub prefix_fetch: Seconds,
+    /// Session-affinity hash, precomputed at allocation so routing
+    /// never needs the prompt bytes.
+    affinity: u64,
+    prompt: Vec<i32>,
+    retired: bool,
+}
+
+impl ArenaEntry {
+    /// Prompt tokens, empty after [`RequestArena::retire_prompt`].
+    pub fn prompt(&self) -> &[i32] {
+        &self.prompt
+    }
+
+    pub fn affinity_key(&self) -> u64 {
+        self.affinity
+    }
+
+    /// Mirrors [`Request::prefill_len`] on the frozen scalars.
+    pub fn prefill_len(&self) -> usize {
+        self.prompt_len.saturating_sub(self.cached_prefix).max(1)
+    }
+
+    /// Mirrors `Request::work_tokens` on the frozen scalars.
+    pub fn work_tokens(&self) -> u64 {
+        (self.prompt_len + self.max_new_tokens) as u64
+    }
+}
+
+/// Append-only arena of [`ArenaEntry`]s indexed by [`ReqId`].
+#[derive(Default)]
+pub struct RequestArena {
+    entries: Vec<ArenaEntry>,
+}
+
+impl RequestArena {
+    pub fn new() -> Self {
+        RequestArena { entries: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        RequestArena { entries: Vec::with_capacity(n) }
+    }
+
+    /// Move `req` into the arena, freezing its scalar metadata and
+    /// precomputing the affinity hash while the prompt is still here.
+    pub fn alloc(&mut self, req: Request) -> ReqId {
+        assert!(self.entries.len() < u32::MAX as usize, "arena full");
+        let affinity = req.affinity_key();
+        let id = ReqId(self.entries.len() as u32);
+        self.entries.push(ArenaEntry {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            max_new_tokens: req.max_new_tokens,
+            arrival: req.arrival,
+            slo: req.slo,
+            cached_prefix: req.cached_prefix,
+            prefix_fetch: req.prefix_fetch,
+            affinity,
+            prompt: req.prompt,
+            retired: false,
+        });
+        id
+    }
+
+    pub fn get(&self, id: ReqId) -> &ArenaEntry {
+        &self.entries[id.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, id: ReqId) -> &mut ArenaEntry {
+        &mut self.entries[id.0 as usize]
+    }
+
+    /// Free the prompt buffer. The scalar metadata (and the handle)
+    /// stay valid; only `prompt()` becomes empty. Idempotent.
+    pub fn retire_prompt(&mut self, id: ReqId) {
+        let e = &mut self.entries[id.0 as usize];
+        e.prompt = Vec::new();
+        e.retired = true;
+    }
+
+    pub fn is_retired(&self, id: ReqId) -> bool {
+        self.entries[id.0 as usize].retired
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, gen: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt as i32).map(|t| t % 500 + 1).collect(),
+            max_new_tokens: gen,
+            arrival: Seconds::ms(id as f64),
+            slo: None,
+            cached_prefix: 0,
+            prefix_fetch: Seconds::ZERO,
+        }
+    }
+
+    #[test]
+    fn alloc_freezes_scalars_and_affinity() {
+        let r = req(3, 100, 16);
+        let affinity = r.affinity_key();
+        let mut arena = RequestArena::new();
+        let id = arena.alloc(r);
+        let e = arena.get(id);
+        assert_eq!(e.id, 3);
+        assert_eq!(e.prompt_len, 100);
+        assert_eq!(e.work_tokens(), 116);
+        assert_eq!(e.affinity_key(), affinity);
+        assert_eq!(e.prompt().len(), 100);
+    }
+
+    #[test]
+    fn retirement_frees_prompt_but_not_metadata() {
+        let mut arena = RequestArena::new();
+        let id = arena.alloc(req(9, 64, 8));
+        arena.retire_prompt(id);
+        assert!(arena.is_retired(id));
+        let e = arena.get(id);
+        assert!(e.prompt().is_empty());
+        assert_eq!(e.prompt_len, 64);
+        assert_eq!(e.prefill_len(), 64);
+        assert_eq!(e.work_tokens(), 72);
+    }
+
+    #[test]
+    fn prefill_len_mirrors_request_semantics() {
+        let mut arena = RequestArena::new();
+        let id = arena.alloc(req(1, 50, 4));
+        arena.get_mut(id).cached_prefix = 48;
+        assert_eq!(arena.get(id).prefill_len(), 2);
+        arena.get_mut(id).cached_prefix = 50;
+        assert_eq!(arena.get(id).prefill_len(), 1);
+        arena.get_mut(id).cached_prefix = 99;
+        assert_eq!(arena.get(id).prefill_len(), 1);
+    }
+
+    #[test]
+    fn handles_stay_stable_across_allocs() {
+        let mut arena = RequestArena::with_capacity(4);
+        let ids: Vec<ReqId> = (0..100).map(|i| arena.alloc(req(i, 8, 2))).collect();
+        arena.retire_prompt(ids[10]);
+        for (i, id) in ids.iter().enumerate() {
+            assert_eq!(arena.get(*id).id, i as u64);
+        }
+        assert_eq!(arena.len(), 100);
+    }
+}

@@ -1,0 +1,254 @@
+//! Binary-heap event calendar for the event-driven cluster core
+//! (DESIGN.md §Event-Core).
+//!
+//! The calendar replaces the tick-scanning loop's O(replicas) sweep per
+//! arrival with a min-heap over typed events ordered by virtual time.
+//! Determinism is load-bearing: the golden snapshots and the
+//! differential equivalence suite (`rust/tests/event_core_equiv.rs`)
+//! assert *bit*-identical fleet metrics, so ties cannot be resolved by
+//! heap insertion luck. Every event carries a `(time, class, seq)` key:
+//!
+//! * `time` — virtual seconds (finite; `Seconds` debug-asserts this);
+//! * `class` — a fixed per-kind rank so same-instant events replay the
+//!   stepping loop's ordering (an `AutoscaleTick` scheduled at exactly
+//!   an arrival's timestamp fires *before* the arrival, mirroring the
+//!   `while next_scale <= arrival` loop);
+//! * `seq` — a monotone push counter, making same-time same-class
+//!   events FIFO (arrivals pushed in sorted order pop in sorted order).
+//!
+//! Scheduling into the past is a logic bug in the driver, not a
+//! recoverable condition at runtime — `push` rejects it (returns
+//! `false`) and the property suite (`rust/tests/event_props.rs`) pins
+//! the behavior. Scheduling *at* the current instant is allowed: a tick
+//! rescheduling itself at `t + interval` with a degenerate zero
+//! interval would be caught by config validation, not here.
+
+use super::arena::ReqId;
+use crate::units::Seconds;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// The event vocabulary of the cluster core.
+///
+/// Only `Arrival` and `AutoscaleTick` are *global* synchronization
+/// points: the stepping loop this core must replay bit-for-bit advances
+/// every replica exactly at those instants, and router/autoscaler
+/// observations depend on that phasing. Replica-local deadlines
+/// (prefill completion, decode rounds, KV migration, disaggregated
+/// handoff landing) are declared here as first-class kinds so drivers
+/// can schedule them explicitly, but the bit-compatible driver resolves
+/// them lazily inside each sync window (see DESIGN.md §Event-Core for
+/// why promoting them to global events changes router observations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Elastic-fleet autoscaler evaluation at a fixed cadence.
+    AutoscaleTick,
+    /// A disaggregated prefill→decode KV handoff lands on `replica`.
+    HandoffDone { replica: usize },
+    /// A KV page migration (paging layer) completes on `replica`.
+    MigrationDone { replica: usize },
+    /// A prefill batch completes on `replica`.
+    PrefillDone { replica: usize },
+    /// A decode round completes on `replica`.
+    DecodeTick { replica: usize },
+    /// An open-loop request (arena handle) reaches the front door.
+    Arrival { req: ReqId },
+}
+
+impl EventKind {
+    /// Same-timestamp rank: lower pops first. `AutoscaleTick` precedes
+    /// `Arrival` at equal times (the stepping loop fires due ticks
+    /// before admitting the arrival that exposed them); replica-local
+    /// completions sort between the two so injected work lands before
+    /// the next admission reads router state.
+    fn class(self) -> u8 {
+        match self {
+            EventKind::AutoscaleTick => 0,
+            EventKind::HandoffDone { .. } => 1,
+            EventKind::MigrationDone { .. } => 2,
+            EventKind::PrefillDone { .. } => 3,
+            EventKind::DecodeTick { .. } => 4,
+            EventKind::Arrival { .. } => 5,
+        }
+    }
+}
+
+/// One scheduled event. `seq` is assigned by the calendar at push time
+/// and exposed so tests can assert the FIFO tie-break directly.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time: Seconds,
+    pub kind: EventKind,
+    pub seq: u64,
+}
+
+/// Max-heap entry with reversed ordering, so `BinaryHeap::pop` yields
+/// the minimum `(time, class, seq)`. Times are finite (enforced by
+/// `Seconds::new`), so `total_cmp` agrees with the naive `<` everywhere
+/// it matters while staying a total order.
+struct HeapEntry(Event);
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .0
+            .time
+            .value()
+            .total_cmp(&self.0.time.value())
+            .then_with(|| other.0.kind.class().cmp(&self.0.kind.class()))
+            .then_with(|| other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for HeapEntry {}
+
+/// The event calendar: a deterministic min-heap of [`Event`]s.
+#[derive(Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<HeapEntry>,
+    next_seq: u64,
+    /// Time of the last popped event, as a raw f64 so the pre-first-pop
+    /// sentinel can be -∞ (Seconds requires finite values).
+    now: f64,
+    /// `Arrival` events currently scheduled — the driver's cheap "any
+    /// admissions left?" check without scanning the heap.
+    arrivals: usize,
+}
+
+impl EventCalendar {
+    pub fn new() -> Self {
+        EventCalendar {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: f64::NEG_INFINITY,
+            arrivals: 0,
+        }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        EventCalendar { heap: BinaryHeap::with_capacity(n), ..Self::new() }
+    }
+
+    /// Schedule `kind` at `time`. Returns `false` (and schedules
+    /// nothing) if `time` precedes the last popped event — an event in
+    /// the past can never pop in order. Scheduling exactly at the
+    /// current instant is allowed and pops after anything of an equal
+    /// or lower class already queued there.
+    #[must_use]
+    pub fn push(&mut self, time: Seconds, kind: EventKind) -> bool {
+        if time.value() < self.now {
+            return false;
+        }
+        if matches!(kind, EventKind::Arrival { .. }) {
+            self.arrivals += 1;
+        }
+        self.heap.push(HeapEntry(Event { time, kind, seq: self.next_seq }));
+        self.next_seq += 1;
+        true
+    }
+
+    /// Pop the earliest event and advance the calendar's notion of now.
+    pub fn pop(&mut self) -> Option<Event> {
+        let e = self.heap.pop()?.0;
+        self.now = e.time.value();
+        if matches!(e.kind, EventKind::Arrival { .. }) {
+            self.arrivals -= 1;
+        }
+        Some(e)
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<Seconds> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+
+    /// Time of the last popped event (`None` before the first pop).
+    pub fn now(&self) -> Option<Seconds> {
+        self.now.is_finite().then(|| Seconds::new(self.now))
+    }
+
+    /// `Arrival` events still scheduled.
+    pub fn arrivals_scheduled(&self) -> usize {
+        self.arrivals
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut cal = EventCalendar::new();
+        for &t in &[3.0, 1.0, 2.0, 5.0, 4.0] {
+            assert!(cal.push(Seconds::new(t), EventKind::AutoscaleTick));
+        }
+        let times: Vec<f64> = std::iter::from_fn(|| cal.pop())
+            .map(|e| e.time.value())
+            .collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn equal_time_orders_by_class_then_seq() {
+        let mut cal = EventCalendar::new();
+        let t = Seconds::new(1.0);
+        assert!(cal.push(t, EventKind::Arrival { req: ReqId(0) }));
+        assert!(cal.push(t, EventKind::AutoscaleTick));
+        assert!(cal.push(t, EventKind::Arrival { req: ReqId(1) }));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::AutoscaleTick));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(0) }));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(1) }));
+    }
+
+    #[test]
+    fn rejects_push_into_the_past_but_allows_now() {
+        let mut cal = EventCalendar::new();
+        assert!(cal.push(Seconds::new(2.0), EventKind::AutoscaleTick));
+        cal.pop();
+        assert!(!cal.push(Seconds::new(1.0), EventKind::AutoscaleTick));
+        assert!(cal.push(Seconds::new(2.0), EventKind::AutoscaleTick));
+        assert_eq!(cal.len(), 1);
+    }
+
+    #[test]
+    fn tracks_scheduled_arrivals() {
+        let mut cal = EventCalendar::new();
+        assert!(cal.push(Seconds::new(1.0), EventKind::Arrival { req: ReqId(7) }));
+        assert!(cal.push(Seconds::new(1.5), EventKind::AutoscaleTick));
+        assert_eq!(cal.arrivals_scheduled(), 1);
+        cal.pop();
+        assert_eq!(cal.arrivals_scheduled(), 0);
+        assert_eq!(cal.len(), 1);
+    }
+
+    #[test]
+    fn now_is_none_before_first_pop() {
+        let mut cal = EventCalendar::new();
+        assert!(cal.now().is_none());
+        assert!(cal.push(Seconds::new(0.0), EventKind::AutoscaleTick));
+        cal.pop();
+        assert_eq!(cal.now().unwrap().value(), 0.0);
+    }
+}

@@ -9,6 +9,14 @@
 //! routing decision so the router observes *current* outstanding load,
 //! not admission-time guesses.
 //!
+//! [`Cluster::run`] drives the event-driven core (DESIGN.md
+//! §Event-Core): a binary-heap [`EventCalendar`] of typed events, an
+//! arena of [`ReqId`] handles, and lean [`EventReplica`] serving loops.
+//! The original tick-scanning implementation survives as
+//! [`Cluster::run_stepping`] — the oracle the differential suite
+//! (`rust/tests/event_core_equiv.rs`) holds the event core bit-identical
+//! against.
+//!
 //! Two topologies:
 //!
 //! * **Aggregated** — every replica runs the full prefill+decode loop.
@@ -24,8 +32,11 @@
 //! [`FabricLatencies::kv_handoff`]: crate::fabric::FabricLatencies::kv_handoff
 //! [`Handoff`]: super::scheduler::Handoff
 
+use super::arena::{ReqId, RequestArena};
 use super::batcher::Batcher;
+use super::calendar::{EventCalendar, EventKind};
 use super::engine::SimBackend;
+use super::event_core::EventReplica;
 use super::metrics::Metrics;
 use super::prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport};
 use super::request::Request;
@@ -290,6 +301,15 @@ impl ClusterReport {
         }
         s
     }
+}
+
+/// Per-replica observables a core exposes at report time — the common
+/// denominator of a `Scheduler` replica and an [`EventReplica`], so both
+/// cores assemble their [`ClusterReport`] through the same code path.
+struct ReplicaSnap<'a> {
+    metrics: &'a Metrics,
+    handoffs: u64,
+    spilled: Bytes,
 }
 
 /// The multi-replica cluster simulator.
@@ -569,8 +589,257 @@ impl Cluster {
         Ok(())
     }
 
-    /// Serve a workload to completion and produce the fleet report.
+    /// Serve a workload to completion and produce the fleet report,
+    /// driven by the event calendar (DESIGN.md §Event-Core).
+    ///
+    /// Arrivals and autoscaler ticks are the global synchronization
+    /// points; between two of them each [`EventReplica`] resolves its
+    /// own prefill/decode/handoff deadlines locally. Every router and
+    /// autoscaler observation therefore happens at exactly the instants
+    /// — and over exactly the floating-point state — the stepping loop
+    /// produces, which is what keeps the two cores bit-identical.
+    ///
+    /// A `Cluster` is single-shot: run it once (either core).
     pub fn run(&mut self, mut reqs: Vec<Request>) -> Result<ClusterReport> {
+        reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut arena = RequestArena::with_capacity(reqs.len());
+        let mut cal = EventCalendar::with_capacity(reqs.len() + 1);
+        for req in reqs {
+            let arrival = req.arrival;
+            let rid = arena.alloc(req);
+            let ok = cal.push(arrival, EventKind::Arrival { req: rid });
+            debug_assert!(ok, "sorted arrivals cannot land in the past");
+        }
+        let mut evs = self.build_event_replicas();
+        if self.cfg.autoscale.is_some() {
+            // Exactly one tick lives in the calendar at a time; each pop
+            // reschedules the next (or drops it when the run is over).
+            let ok = cal.push(self.next_scale, EventKind::AutoscaleTick);
+            debug_assert!(ok);
+        }
+        while let Some(ev) = cal.pop() {
+            match ev.kind {
+                EventKind::AutoscaleTick => {
+                    let a = self.cfg.autoscale.expect("tick implies autoscale");
+                    // Mirror of the stepping drain loop's `any pending`
+                    // check: the first tick past the last arrival with
+                    // nothing left in flight is dropped — not ticked —
+                    // and the calendar drains to empty.
+                    if cal.arrivals_scheduled() == 0 && !evs.iter().any(|r| r.pending() > 0) {
+                        continue;
+                    }
+                    let t = ev.time;
+                    self.advance_event_replicas(&arena, &mut evs, t)?;
+                    self.autoscale_tick(t);
+                    self.next_scale += a.interval;
+                    let ok = cal.push(self.next_scale, EventKind::AutoscaleTick);
+                    debug_assert!(ok, "tick interval is validated positive");
+                }
+                EventKind::Arrival { req } => {
+                    self.admit_event_arrival(&mut arena, &mut evs, req)?;
+                }
+                // Replica-local deadlines are resolved lazily inside
+                // `advance_event_replicas`; the bit-compatible driver
+                // never schedules them (DESIGN.md §Event-Core).
+                EventKind::PrefillDone { .. }
+                | EventKind::DecodeTick { .. }
+                | EventKind::MigrationDone { .. }
+                | EventKind::HandoffDone { .. } => {}
+            }
+        }
+        // Drain, mirroring the stepping core: prefill/serving pool first
+        // (its completion produces the final handoffs), then decode.
+        for i in 0..self.decode_base {
+            evs[i].run_to_completion(&arena)?;
+            self.drain_event_completions(&mut evs, i);
+            if self.cfg.disaggregate.is_some() {
+                self.transfer_event_handoffs(&arena, &mut evs, i);
+            }
+        }
+        for i in self.decode_base..evs.len() {
+            evs[i].run_to_completion(&arena)?;
+            self.drain_event_completions(&mut evs, i);
+        }
+        let makespan = evs
+            .iter()
+            .map(|r| r.metrics.clock)
+            .fold(Seconds::ZERO, Seconds::max);
+        if self.cfg.autoscale.is_some() {
+            self.account(makespan);
+        } else {
+            self.replica_seconds = evs.len() as f64 * makespan.value();
+        }
+        Ok(self.report_event(&evs))
+    }
+
+    /// Fresh lean replicas mirroring this cluster's fleet: same node
+    /// configs, roles and batching knobs as the `Scheduler` replicas.
+    fn build_event_replicas(&self) -> Vec<EventReplica> {
+        self.replicas
+            .iter()
+            .zip(&self.roles)
+            .map(|(r, &role)| {
+                let mut backend = SimBackend::new(
+                    r.backend().sys.clone(),
+                    self.model.clone(),
+                    self.cfg.max_batch,
+                );
+                if let Some(budget) = self.cfg.kv_budget {
+                    backend = backend.with_kv_budget(budget);
+                }
+                EventReplica::new(
+                    backend,
+                    role,
+                    self.cfg.max_batch,
+                    64,
+                    self.model.max_seq as usize,
+                )
+            })
+            .collect()
+    }
+
+    /// Event-core mirror of the arrival body of [`Cluster::run_stepping`]:
+    /// advance the fleet to the arrival, shed or route, probe and
+    /// publish the prefix cache, submit — then retire the prompt buffer
+    /// (nothing downstream of admission reads token bytes).
+    fn admit_event_arrival(
+        &mut self,
+        arena: &mut RequestArena,
+        evs: &mut [EventReplica],
+        rid: ReqId,
+    ) -> Result<()> {
+        let arrival = arena.get(rid).arrival;
+        self.advance_event_replicas(arena, evs, arrival)?;
+        if let Some(cap) = self.cfg.shed_tokens {
+            if self.router.min_active_load() > cap {
+                self.shed += 1;
+                return Ok(());
+            }
+        }
+        let hit = match self.prefix_cache.as_mut() {
+            Some(pc) => pc.lookup(arena.get(rid).prompt()),
+            None => super::prefix_cache::PrefixHit::MISS,
+        };
+        let warm = if hit.tokens > 0 { hit.replica } else { None };
+        let (prompt_len, affinity, work_tokens) = {
+            let e = arena.get(rid);
+            (e.prompt_len, e.affinity_key(), e.work_tokens())
+        };
+        let charged = match self.cfg.disaggregate {
+            Some(_) => (prompt_len + 1) as u64,
+            None => work_tokens,
+        };
+        let idx = self.router.route_work_warm(affinity, charged, warm);
+        if !evs[idx].admits(prompt_len) {
+            self.router.unroute(idx, charged);
+            self.rejected += 1;
+            return Ok(());
+        }
+        if let Some(pc) = self.prefix_cache.as_mut() {
+            {
+                let e = arena.get_mut(rid);
+                e.cached_prefix = hit.tokens;
+                e.prefix_fetch = hit.fetch;
+            }
+            let nmc = pc.nmc_gather();
+            let inserted = pc.insert(arena.get(rid).prompt(), idx);
+            if let Some(clock) = self.fabric.as_mut() {
+                let lat = evs[idx].backend().sys.latencies;
+                if hit.tokens > 0 {
+                    let b = clock.book(arrival, hit.bytes, idx, affinity);
+                    arena.get_mut(rid).prefix_fetch = if nmc {
+                        lat.tab_read + b.queueing
+                    } else {
+                        lat.tab_read + (b.completion - arrival)
+                    };
+                    self.fabric_wait += b.queueing;
+                }
+                if inserted > 0 {
+                    clock.book(arrival, PREFIX_PUBLISH_META_BYTES, idx, affinity);
+                }
+            }
+        }
+        evs[idx].submit(rid);
+        arena.retire_prompt(rid);
+        Ok(())
+    }
+
+    /// Event-core mirror of [`Cluster::advance_to`].
+    fn advance_event_replicas(
+        &mut self,
+        arena: &RequestArena,
+        evs: &mut [EventReplica],
+        t: Seconds,
+    ) -> Result<()> {
+        for i in 0..self.decode_base {
+            evs[i].run_until(arena, t)?;
+            self.drain_event_completions(evs, i);
+            if self.cfg.disaggregate.is_some() {
+                self.transfer_event_handoffs(arena, evs, i);
+            }
+        }
+        for i in self.decode_base..evs.len() {
+            evs[i].run_until(arena, t)?;
+            self.drain_event_completions(evs, i);
+        }
+        Ok(())
+    }
+
+    /// Event-core mirror of [`Cluster::drain_completions`] — the lean
+    /// replica hands over released work directly, no response scan.
+    fn drain_event_completions(&mut self, evs: &mut [EventReplica], idx: usize) {
+        for w in evs[idx].take_completed_work() {
+            match self.roles[idx] {
+                SchedMode::DecodeOnly => {
+                    if let Some(dr) = self.decode_router.as_mut() {
+                        dr.complete_work(idx - self.decode_base, w);
+                    }
+                }
+                _ => self.router.complete_work(idx, w),
+            }
+        }
+    }
+
+    /// Event-core mirror of [`Cluster::transfer_handoffs`].
+    fn transfer_event_handoffs(
+        &mut self,
+        arena: &RequestArena,
+        evs: &mut [EventReplica],
+        idx: usize,
+    ) {
+        let fresh = evs[idx].take_handoffs();
+        if fresh.is_empty() {
+            return;
+        }
+        let (lat, fabric_bw, is_fh) = {
+            let sys = &evs[idx].backend().sys;
+            (sys.latencies, sys.fabric_bw, sys.is_fenghuang())
+        };
+        for h in fresh {
+            self.router.complete_work(idx, h.len as u64);
+            let ctx = h.len as u64;
+            let kv = memory::kv_cache_bytes(&self.model, 1, ctx);
+            let mut cost = lat.kv_handoff(kv, fabric_bw, is_fh);
+            let e = arena.get(h.id);
+            if let Some(clock) = self.fabric.as_mut() {
+                let b = clock.book(h.done_at, HANDOFF_META_BYTES, idx, e.id);
+                cost += b.queueing;
+                self.fabric_wait += b.queueing;
+            }
+            self.handoffs += 1;
+            self.handoff_time += cost;
+            let dr = self.decode_router.as_mut().expect("disaggregated");
+            let work = (ctx + e.max_new_tokens as u64).saturating_sub(1);
+            let di = self.decode_base + dr.route_work(e.affinity_key(), work);
+            let ready = h.done_at + cost;
+            evs[di].inject(h, ready);
+        }
+    }
+
+    /// Serve a workload to completion with the original tick-stepping
+    /// core. Kept as the reduced oracle for the differential equivalence
+    /// suite — production callers use [`Cluster::run`].
+    pub fn run_stepping(&mut self, mut reqs: Vec<Request>) -> Result<ClusterReport> {
         reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         for mut req in reqs {
             // Autoscaler decisions fire on their own cadence, interleaved
@@ -705,21 +974,62 @@ impl Cluster {
         Ok(self.report())
     }
 
+    /// Stepping-core report: snapshot the `Scheduler` replicas.
     fn report(&self) -> ClusterReport {
+        let snaps: Vec<ReplicaSnap<'_>> = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaSnap {
+                metrics: &r.metrics,
+                handoffs: r.handoffs.len() as u64,
+                spilled: r
+                    .backend()
+                    .kv_pressure()
+                    .map(|kv| kv.spilled_peak)
+                    .unwrap_or(Bytes::ZERO),
+            })
+            .collect();
+        let gpus_per_node = self
+            .replicas
+            .first()
+            .map(|r| r.backend().sys.num_gpus)
+            .unwrap_or(0) as f64;
+        self.assemble_report(&snaps, gpus_per_node)
+    }
+
+    /// Event-core report: snapshot the lean replicas. Field-for-field
+    /// the same assembly as [`Cluster::report`] — shared below, so the
+    /// two cores cannot drift in what they observe.
+    fn report_event(&self, evs: &[EventReplica]) -> ClusterReport {
+        let snaps: Vec<ReplicaSnap<'_>> = evs
+            .iter()
+            .map(|r| ReplicaSnap {
+                metrics: &r.metrics,
+                handoffs: r.handoffs_total(),
+                spilled: r
+                    .backend()
+                    .kv_pressure()
+                    .map(|kv| kv.spilled_peak)
+                    .unwrap_or(Bytes::ZERO),
+            })
+            .collect();
+        let gpus_per_node = evs
+            .first()
+            .map(|r| r.backend().sys.num_gpus)
+            .unwrap_or(0) as f64;
+        self.assemble_report(&snaps, gpus_per_node)
+    }
+
+    fn assemble_report(&self, snaps: &[ReplicaSnap<'_>], gpus_per_node: f64) -> ClusterReport {
         let mut fleet = Metrics::default();
-        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        let mut per_replica = Vec::with_capacity(snaps.len());
         let mut kv_spilled_peak = Bytes::ZERO;
         fleet.rejected = self.rejected;
         fleet.shed = self.shed;
         fleet.fabric_wait = self.fabric_wait;
-        for (i, r) in self.replicas.iter().enumerate() {
-            fleet.merge(&r.metrics);
-            let spilled = r
-                .backend()
-                .kv_pressure()
-                .map(|kv| kv.spilled_peak)
-                .unwrap_or(Bytes::ZERO);
-            kv_spilled_peak = kv_spilled_peak.max(spilled);
+        for (i, r) in snaps.iter().enumerate() {
+            fleet.merge(r.metrics);
+            kv_spilled_peak = kv_spilled_peak.max(r.spilled);
             let routed_tokens = match self.roles[i] {
                 SchedMode::DecodeOnly => self
                     .decode_router
@@ -732,20 +1042,15 @@ impl Cluster {
                 name: self.names[i].clone(),
                 role: self.roles[i],
                 completed: r.metrics.completed,
-                handoffs: r.handoffs.len() as u64,
+                handoffs: r.handoffs,
                 routed_tokens,
                 busy: r.metrics.busy,
                 clock: r.metrics.clock,
                 utilization: r.metrics.utilization(),
                 paging_stall: r.metrics.paging_stall,
-                kv_spilled_peak: spilled,
+                kv_spilled_peak: r.spilled,
             });
         }
-        let gpus_per_node = self
-            .replicas
-            .first()
-            .map(|r| r.backend().sys.num_gpus)
-            .unwrap_or(0) as f64;
         ClusterReport {
             model: self.model.name.clone(),
             policy: self.cfg.policy,

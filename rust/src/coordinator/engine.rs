@@ -120,35 +120,28 @@ impl SimBackend {
     fn bucket(len: u64) -> u64 {
         len.next_power_of_two().max(64)
     }
-}
 
-impl Backend for SimBackend {
-    fn max_concurrency(&self) -> usize {
-        self.max_conc
+    /// Modelled cost of one batched prefill at `padded_len`, memoised per
+    /// (batch, length-bucket). The length-based entry point: the event
+    /// core (`coordinator::event_core`) calls it directly, skipping
+    /// token materialisation; the trait path delegates here.
+    pub fn prefill_cost(&mut self, batch: u64, padded_len: u64) -> Result<Seconds> {
+        let key = (batch, Self::bucket(padded_len));
+        if let Some(t) = self.prefill_cache.get(&key) {
+            return Ok(*t);
+        }
+        let r = sim::simulate(&self.sys, &self.model, batch, Phase::Prefill { prompt_len: key.1 })?;
+        self.prefill_cache.insert(key, r.total);
+        Ok(r.total)
     }
 
-    fn prefill(&mut self, items: &[PrefillItem], padded_len: usize) -> Result<(Seconds, Vec<i32>)> {
-        let batch = items.len() as u64;
-        let key = (batch, Self::bucket(padded_len as u64));
-        let t = match self.prefill_cache.get(&key) {
-            Some(t) => *t,
-            None => {
-                let r = sim::simulate(
-                    &self.sys,
-                    &self.model,
-                    batch,
-                    Phase::Prefill { prompt_len: key.1 },
-                )?;
-                self.prefill_cache.insert(key, r.total);
-                r.total
-            }
-        };
-        Ok((t, items.iter().map(|i| pseudo_token(i.id)).collect()))
-    }
-
-    fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)> {
-        let batch = seqs.len() as u64;
-        let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(1) as u64;
+    /// Modelled cost of advancing `batch` sequences one token, with the
+    /// longest at `max_len` and `total_tokens` of KV resident across the
+    /// batch. The compute term is memoised per (batch, length-bucket);
+    /// the KV-pressure stall uses the *exact* resident footprint and is
+    /// charged on every call (the pressure state advances per step, memo
+    /// hit or not).
+    pub fn decode_cost(&mut self, batch: u64, max_len: u64, total_tokens: u64) -> Result<Seconds> {
         let key = (batch, Self::bucket(max_len));
         let mut t = match self.decode_cache.get(&key) {
             Some(t) => *t,
@@ -160,14 +153,32 @@ impl Backend for SimBackend {
             }
         };
         if let Some(kv) = self.kv.as_mut() {
-            // Exact resident KV across the batch (not the bucketed cost
-            // key): a decode step touches all of it.
-            let total_tokens: u64 = seqs.iter().map(|s| s.len() as u64).sum();
             let resident = memory::kv_cache_bytes(&self.model, 1, total_tokens);
             let stall = kv.step_stall(resident, resident);
             t += stall;
             self.pending_stall += stall;
         }
+        Ok(t)
+    }
+}
+
+impl Backend for SimBackend {
+    fn max_concurrency(&self) -> usize {
+        self.max_conc
+    }
+
+    fn prefill(&mut self, items: &[PrefillItem], padded_len: usize) -> Result<(Seconds, Vec<i32>)> {
+        let t = self.prefill_cost(items.len() as u64, padded_len as u64)?;
+        Ok((t, items.iter().map(|i| pseudo_token(i.id)).collect()))
+    }
+
+    fn decode_step(&mut self, seqs: &[Vec<i32>]) -> Result<(Seconds, Vec<i32>)> {
+        let batch = seqs.len() as u64;
+        let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(1) as u64;
+        // Exact resident KV across the batch (not the bucketed cost
+        // key): a decode step touches all of it.
+        let total_tokens: u64 = seqs.iter().map(|s| s.len() as u64).sum();
+        let t = self.decode_cost(batch, max_len, total_tokens)?;
         Ok((t, seqs.iter().enumerate().map(|(i, s)| pseudo_token(s.len() as u64 + i as u64)).collect()))
     }
 
@@ -223,6 +234,23 @@ mod tests {
         assert_eq!(kv.stall_total, stall);
         assert!(free.take_paging_stall() == Seconds::ZERO);
         assert!(free.kv_pressure().is_none());
+    }
+
+    #[test]
+    fn cost_entry_points_match_trait_path() {
+        // The event core calls prefill_cost/decode_cost directly; the
+        // equivalence suite depends on them pricing identically to the
+        // token-materialising trait path.
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut via_trait = SimBackend::new(sys.clone(), gpt3_175b(), 8);
+        let mut via_cost = SimBackend::new(sys, gpt3_175b(), 8);
+        let items: Vec<PrefillItem> =
+            (0..4).map(|i| PrefillItem { id: i, tokens: vec![1; 700] }).collect();
+        let (p, _) = via_trait.prefill(&items, 704).unwrap();
+        assert_eq!(p, via_cost.prefill_cost(4, 704).unwrap());
+        let seqs = vec![vec![1i32; 1000]; 4];
+        let (d, _) = via_trait.decode_step(&seqs).unwrap();
+        assert_eq!(d, via_cost.decode_cost(4, 1000, 4000).unwrap());
     }
 
     #[test]

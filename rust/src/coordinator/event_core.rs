@@ -1,0 +1,421 @@
+//! Lean per-replica serving loop for the event-driven cluster core
+//! (DESIGN.md §Event-Core).
+//!
+//! [`EventReplica`] is a step-exact mirror of
+//! [`Scheduler<SimBackend>`](super::scheduler::Scheduler) that works on
+//! [`ReqId`] arena handles and sequence *lengths* instead of moving
+//! `Request`s and materialising token vectors. The simulation backend's
+//! costs are length-based, so nothing observable changes: every clock
+//! advance, metric record and completion happens in the same order with
+//! the same floating-point inputs as the stepping loop — the
+//! differential suite (`rust/tests/event_core_equiv.rs`) holds the two
+//! cores bit-identical. What *does* change is the cost shape: no token
+//! clones per decode round, no response retention, O(active) state per
+//! replica — the difference between thousands and millions of requests
+//! per run.
+//!
+//! Mirror discipline: any behavioral edit to `scheduler.rs`'s
+//! `step_bounded` / `step_prefill` / `step_decode` / `finish_done` /
+//! `admit_injected` / `run_until` must land here too, and vice versa.
+//! The equivalence suite exists to catch the drift.
+
+use super::arena::{ReqId, RequestArena};
+use super::engine::{Backend, SimBackend};
+use super::metrics::Metrics;
+use super::scheduler::SchedMode;
+use crate::error::Result;
+use crate::units::Seconds;
+use std::collections::VecDeque;
+
+/// An active (decoding) sequence: lengths and timestamps only.
+#[derive(Debug, Clone, Copy)]
+struct ActiveSeq {
+    id: ReqId,
+    /// Mirror of the stepping loop's `tokens.len()`: prompt + 1 after
+    /// prefill, +1 per decode round.
+    len: usize,
+    generated: usize,
+    ttft: Seconds,
+}
+
+/// Handle-based mirror of [`Handoff`](super::scheduler::Handoff): a
+/// prefilled sequence leaving a prefill-pool replica.
+#[derive(Debug, Clone, Copy)]
+pub struct LeanHandoff {
+    pub id: ReqId,
+    /// Mirror of `Handoff::tokens.len()`: prompt + first token.
+    pub len: usize,
+    pub ttft: Seconds,
+    pub generated: usize,
+    /// Prefill-replica clock when the sequence became ready.
+    pub done_at: Seconds,
+}
+
+/// One replica of the event-driven cluster core.
+pub struct EventReplica {
+    backend: SimBackend,
+    mode: SchedMode,
+    /// Batcher mirror knobs (`Batcher::{max_batch, tile, max_prompt}`).
+    max_batch: usize,
+    tile: usize,
+    max_prompt: usize,
+    queue: VecDeque<ReqId>,
+    active: Vec<ActiveSeq>,
+    /// Handed-off sequences waiting on their KV transfer: (ready, seq).
+    injected: Vec<(Seconds, LeanHandoff)>,
+    /// Handoffs produced since the cluster last collected them.
+    handoffs_out: Vec<LeanHandoff>,
+    handoffs_total: u64,
+    /// Router work released by completions since the last drain, in
+    /// completion order (the stepping loop's `responses[].tokens.len()`).
+    completed_work: Vec<u64>,
+    pub metrics: Metrics,
+    clock: Seconds,
+}
+
+impl EventReplica {
+    pub fn new(
+        backend: SimBackend,
+        mode: SchedMode,
+        max_batch: usize,
+        tile: usize,
+        max_prompt: usize,
+    ) -> Self {
+        assert!(max_batch >= 1 && tile >= 1);
+        EventReplica {
+            backend,
+            mode,
+            max_batch,
+            tile,
+            max_prompt,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            injected: Vec::new(),
+            handoffs_out: Vec::new(),
+            handoffs_total: 0,
+            completed_work: Vec::new(),
+            metrics: Metrics::default(),
+            clock: Seconds::ZERO,
+        }
+    }
+
+    /// Admission rule mirror (`Batcher::admits` on the frozen prompt
+    /// length): the cluster consults this before charging the router.
+    pub fn admits(&self, prompt_len: usize) -> bool {
+        prompt_len <= self.max_prompt && prompt_len > 0
+    }
+
+    /// Enqueue an admitted request. The cluster submits at the arrival
+    /// sync point, when this replica's clock has already reached the
+    /// arrival — so the stepping loop's future-queue holding pattern
+    /// collapses to a direct queue push.
+    pub fn submit(&mut self, id: ReqId) {
+        self.queue.push_back(id);
+    }
+
+    /// Adopt a prefilled sequence; decodable once the clock reaches
+    /// `ready` (KV transfer complete).
+    pub fn inject(&mut self, handoff: LeanHandoff, ready: Seconds) {
+        self.injected.push((ready, handoff));
+    }
+
+    /// Outstanding work: queued + active + in-flight injected sequences.
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len() + self.injected.len()
+    }
+
+    /// Work released by completions since the last call, in completion
+    /// order (the cluster feeds these to the router).
+    pub fn take_completed_work(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.completed_work)
+    }
+
+    /// Handoffs produced since the last call.
+    pub fn take_handoffs(&mut self) -> Vec<LeanHandoff> {
+        std::mem::take(&mut self.handoffs_out)
+    }
+
+    /// Lifetime handoff count (per-replica report line).
+    pub fn handoffs_total(&self) -> u64 {
+        self.handoffs_total
+    }
+
+    pub fn backend(&self) -> &SimBackend {
+        &self.backend
+    }
+
+    pub fn clock(&self) -> Seconds {
+        self.clock
+    }
+
+    pub fn mode(&self) -> SchedMode {
+        self.mode
+    }
+
+    /// Mirror of `Scheduler::admit_injected`: earliest-ready first,
+    /// never beyond the concurrency cap, then complete anything that
+    /// arrived already at its generation budget.
+    fn admit_injected(&mut self, arena: &RequestArena) {
+        let clock = self.clock;
+        loop {
+            if self.active.len() >= self.backend.max_concurrency() {
+                break;
+            }
+            let mut best: Option<usize> = None;
+            for (i, (ready, _)) in self.injected.iter().enumerate() {
+                if *ready <= clock && best.map_or(true, |b| *ready < self.injected[b].0) {
+                    best = Some(i);
+                }
+            }
+            let Some(i) = best else { break };
+            let (_, h) = self.injected.swap_remove(i);
+            self.active.push(ActiveSeq {
+                id: h.id,
+                len: h.len,
+                generated: h.generated,
+                ttft: h.ttft,
+            });
+        }
+        self.finish_done(arena);
+    }
+
+    /// Earliest injected-ready time (the arrival stream lives in the
+    /// cluster's calendar, not here).
+    fn next_ready_time(&self) -> Option<Seconds> {
+        self.injected
+            .iter()
+            .map(|(t, _)| *t)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mirror of `Scheduler::step_bounded`.
+    fn step_bounded(&mut self, arena: &RequestArena, limit: Option<Seconds>) -> Result<bool> {
+        self.admit_injected(arena);
+        let past = |t: Seconds| limit.is_some_and(|l| t >= l);
+        let room = self.backend.max_concurrency().saturating_sub(self.active.len());
+        if !self.queue.is_empty() && room > 0 {
+            if past(self.clock) {
+                return Ok(false);
+            }
+            self.step_prefill(arena, room)?;
+        } else if !self.active.is_empty() {
+            if past(self.clock) {
+                return Ok(false);
+            }
+            self.step_decode(arena)?;
+        } else if let Some(t) = self.next_ready_time() {
+            if limit.is_some_and(|l| t > l) {
+                return Ok(false);
+            }
+            self.clock = self.clock.max(t);
+        } else {
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Mirror of `Scheduler::run_until`, plus a fast path for a fully
+    /// idle replica: with nothing queued, active or in flight, the step
+    /// loop can only fall through to the idle catch-up, so skip its
+    /// bookkeeping — this is what keeps 64-replica fleets O(1) per sync
+    /// point on replicas the router isn't feeding.
+    pub fn run_until(&mut self, arena: &RequestArena, t: Seconds) -> Result<()> {
+        if self.queue.is_empty() && self.active.is_empty() && self.injected.is_empty() {
+            if self.clock < t {
+                self.clock = t;
+            }
+            return Ok(());
+        }
+        while self.clock < t && self.step_bounded(arena, Some(t))? {}
+        if self.clock < t && self.active.is_empty() && self.queue.is_empty() {
+            self.clock = t;
+        }
+        Ok(())
+    }
+
+    /// Mirror of `Scheduler::run_to_completion` (metrics only — there
+    /// are no responses to return).
+    pub fn run_to_completion(&mut self, arena: &RequestArena) -> Result<()> {
+        while self.step_bounded(arena, None)? {}
+        self.metrics.clock = self.clock;
+        Ok(())
+    }
+
+    /// Mirror of `Batcher::next_batch` + `Scheduler::step_prefill`.
+    fn step_prefill(&mut self, arena: &RequestArena, room: usize) -> Result<()> {
+        let n = room.min(self.max_batch).min(self.queue.len());
+        if n == 0 {
+            return Ok(());
+        }
+        let batch: Vec<ReqId> = self.queue.drain(..n).collect();
+        // Padding follows the *prefill* length (cached prefix tokens
+        // never enter the kernel), exactly as the batcher computes it.
+        let longest = batch.iter().map(|&id| arena.get(id).prefill_len()).max().unwrap_or(1);
+        let padded_len = longest.div_ceil(self.tile) * self.tile;
+        // Prefix-KV fetch stalls sum in batch order (f64 addition order
+        // is part of the bit-identity contract).
+        let fetch: Seconds = batch.iter().map(|&id| arena.get(id).prefix_fetch).sum();
+        let compute = self.backend.prefill_cost(n as u64, padded_len as u64)?;
+        let elapsed = compute + fetch;
+        self.clock += elapsed;
+        self.metrics.busy += elapsed;
+        self.metrics.prefix_fetch += fetch;
+        for id in batch {
+            let e = arena.get(id);
+            self.metrics.prefill_tokens += e.prompt_len as u64;
+            self.metrics.prefill_tokens_saved += e.cached_prefix.min(e.prompt_len) as u64;
+            let ttft = self.clock - e.arrival;
+            self.metrics.ttft.record(ttft);
+            self.metrics.tokens_generated += 1;
+            if self.mode == SchedMode::PrefillOnly {
+                self.handoffs_out.push(LeanHandoff {
+                    id,
+                    len: e.prompt_len + 1,
+                    ttft,
+                    generated: 1,
+                    done_at: self.clock,
+                });
+                self.handoffs_total += 1;
+            } else {
+                self.active.push(ActiveSeq { id, len: e.prompt_len + 1, generated: 1, ttft });
+            }
+        }
+        self.finish_done(arena);
+        Ok(())
+    }
+
+    /// Mirror of `Scheduler::step_decode`.
+    fn step_decode(&mut self, arena: &RequestArena) -> Result<()> {
+        let batch = self.active.len() as u64;
+        let max_len = self.active.iter().map(|a| a.len).max().unwrap_or(1) as u64;
+        let total_tokens: u64 = self.active.iter().map(|a| a.len as u64).sum();
+        let elapsed = self.backend.decode_cost(batch, max_len, total_tokens)?;
+        self.clock += elapsed;
+        self.metrics.busy += elapsed;
+        self.metrics.paging_stall += self.backend.take_paging_stall();
+        let per_tok = elapsed; // one step produced one token per sequence
+        let metrics = &mut self.metrics;
+        for a in &mut self.active {
+            a.len += 1;
+            a.generated += 1;
+            metrics.tokens_generated += 1;
+            metrics.tpot.record(per_tok);
+        }
+        self.finish_done(arena);
+        Ok(())
+    }
+
+    /// Mirror of `Scheduler::finish_done`: complete sequences at their
+    /// generation budget, in active order, releasing their final length
+    /// as router work.
+    fn finish_done(&mut self, arena: &RequestArena) {
+        let clock = self.clock;
+        let metrics = &mut self.metrics;
+        let completed_work = &mut self.completed_work;
+        self.active.retain(|a| {
+            let e = arena.get(a.id);
+            if a.generated >= e.max_new_tokens {
+                let total = clock - e.arrival;
+                metrics.e2e.record(total);
+                metrics.completed += 1;
+                if let Some(slo) = e.slo {
+                    metrics.slo_total += 1;
+                    let tpot = if a.generated > 1 {
+                        (total - a.ttft) / (a.generated - 1) as f64
+                    } else {
+                        Seconds::ZERO
+                    };
+                    if slo.met(a.ttft, tpot) {
+                        metrics.slo_met += 1;
+                        metrics.goodput_tokens += a.generated as u64;
+                    }
+                }
+                completed_work.push(a.len as u64);
+                false
+            } else {
+                true
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::fh4_15xm;
+    use crate::coordinator::batcher::Batcher;
+    use crate::coordinator::request::Request;
+    use crate::coordinator::scheduler::Scheduler;
+    use crate::models::arch::gpt3_175b;
+    use crate::units::Bandwidth;
+
+    fn requests() -> Vec<Request> {
+        (0..12)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![(i % 7) as i32 + 1; 64 + (i as usize % 5) * 40],
+                max_new_tokens: 4 + (i as usize % 3),
+                arrival: Seconds::ms(3.0 * i as f64),
+                ..Default::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lean_replica_matches_scheduler_bit_for_bit() {
+        // Single replica, no router: drive the stepping scheduler and
+        // the lean mirror over the same stream and demand identical
+        // metrics — the unit-scale version of the differential suite.
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let model = gpt3_175b();
+        let backend = SimBackend::new(sys.clone(), model.clone(), 4);
+        let mut sched = Scheduler::new(backend, Batcher::new(4, 64, model.max_seq as usize));
+        sched.submit_all(requests());
+        sched.run_to_completion().unwrap();
+
+        let backend = SimBackend::new(sys, model.clone(), 4);
+        let mut ev =
+            EventReplica::new(backend, SchedMode::Full, 4, 64, model.max_seq as usize);
+        let mut arena = RequestArena::new();
+        for req in requests() {
+            let arrival = req.arrival;
+            let rid = arena.alloc(req);
+            ev.run_until(&arena, arrival).unwrap();
+            ev.submit(rid);
+        }
+        ev.run_to_completion(&arena).unwrap();
+
+        assert_eq!(ev.metrics.completed, sched.metrics.completed);
+        assert_eq!(ev.metrics.tokens_generated, sched.metrics.tokens_generated);
+        assert_eq!(ev.metrics.clock.value().to_bits(), sched.metrics.clock.value().to_bits());
+        assert_eq!(ev.metrics.busy.value().to_bits(), sched.metrics.busy.value().to_bits());
+        assert_eq!(
+            ev.metrics.ttft.mean_ms().to_bits(),
+            sched.metrics.ttft.mean_ms().to_bits()
+        );
+        assert_eq!(
+            ev.metrics.e2e.percentile_ms(95.0).to_bits(),
+            sched.metrics.e2e.percentile_ms(95.0).to_bits()
+        );
+        // Released router work equals the stepping responses' lengths.
+        let work = ev.take_completed_work();
+        let want: Vec<u64> = sched.responses.iter().map(|r| r.tokens.len() as u64).collect();
+        assert_eq!(work, want);
+    }
+
+    #[test]
+    fn admits_mirrors_batcher_rule() {
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let ev = EventReplica::new(
+            SimBackend::new(sys, gpt3_175b(), 4),
+            SchedMode::Full,
+            4,
+            64,
+            100,
+        );
+        assert!(!ev.admits(0));
+        assert!(ev.admits(1));
+        assert!(ev.admits(100));
+        assert!(!ev.admits(101));
+    }
+}

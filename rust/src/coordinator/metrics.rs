@@ -3,44 +3,227 @@
 
 use crate::units::Seconds;
 
-/// Online latency statistics with exact percentiles (stores samples; the
-/// serving demos run ≤ thousands of requests).
+/// Samples per stat above which percentile accumulation switches from
+/// exact (stored samples, nearest-rank) to a streaming log-spaced
+/// histogram. Below the threshold behavior is *bitwise* identical to
+/// the historical exact path — the golden snapshots and the
+/// differential equivalence suite depend on that.
+pub const STREAMING_THRESHOLD: usize = 65_536;
+
+/// Sub-bins per power-of-two octave: 64 gives a worst-case relative
+/// error of 1/128 ≈ 0.78 % for any in-range value (the representative
+/// is the arithmetic midpoint of a bin whose width is lo/64).
+const HIST_SUBS_LOG2: u32 = 6;
+const HIST_SUBS: usize = 1 << HIST_SUBS_LOG2;
+/// Octave range: 2^-40 ms (≈ 1 fs) … 2^40 ms (≈ 35 years). Values
+/// outside land in the under/overflow bins; the overflow bin reports
+/// the exact running max.
+const HIST_MIN_EXP: i64 = -40;
+const HIST_MAX_EXP: i64 = 40;
+const HIST_NBINS: usize = ((HIST_MAX_EXP - HIST_MIN_EXP) as usize) * HIST_SUBS + 2;
+
+/// Fixed-bin log-spaced histogram: 64 sub-bins per octave over 80
+/// octaves, plus an underflow bin (index 0: zero, negative, non-finite,
+/// sub-range) and an overflow bin (last index). Bin index and
+/// representative come straight from the f64 bit pattern, so `record`
+/// is a shift-and-mask — no branches on magnitude.
+#[derive(Debug, Clone)]
+struct StreamingHist {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl StreamingHist {
+    fn new() -> Self {
+        StreamingHist { counts: vec![0; HIST_NBINS], count: 0, sum: 0.0, max: 0.0 }
+    }
+
+    fn bin_of(v: f64) -> usize {
+        if !(v > 0.0) {
+            return 0; // zero, negative, NaN
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i64 - 1023;
+        if exp < HIST_MIN_EXP {
+            return 0; // includes subnormals (biased exponent 0)
+        }
+        if exp >= HIST_MAX_EXP {
+            return HIST_NBINS - 1;
+        }
+        let sub = ((bits >> (52 - HIST_SUBS_LOG2)) & (HIST_SUBS as u64 - 1)) as usize;
+        (exp - HIST_MIN_EXP) as usize * HIST_SUBS + sub + 1
+    }
+
+    /// Arithmetic midpoint of the bin's value range — the estimate
+    /// reported for any percentile landing in this bin.
+    fn representative(bin: usize) -> f64 {
+        if bin == 0 {
+            return 0.0;
+        }
+        let i = bin - 1;
+        let exp = HIST_MIN_EXP + (i / HIST_SUBS) as i64;
+        let sub = (i % HIST_SUBS) as f64;
+        let base = 2.0f64.powi(exp as i32);
+        let lo = base * (1.0 + sub / HIST_SUBS as f64);
+        let hi = base * (1.0 + (sub + 1.0) / HIST_SUBS as f64);
+        0.5 * (lo + hi)
+    }
+
+    fn record(&mut self, ms: f64) {
+        self.counts[Self::bin_of(ms)] += 1;
+        self.count += 1;
+        self.sum += ms;
+        self.max = self.max.max(ms);
+    }
+
+    fn absorb(&mut self, other: &StreamingHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank percentile over the binned counts: walk bins until
+    /// the cumulative count reaches the rank, report that bin's
+    /// representative. The overflow bin reports the exact max, and the
+    /// result is clamped to it (midpoints can overshoot when the max
+    /// sits low in its bin).
+    fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil().max(1.0) as u64).min(self.count);
+        let mut seen = 0u64;
+        for (bin, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                if bin == HIST_NBINS - 1 {
+                    return self.max;
+                }
+                return Self::representative(bin).min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Online latency statistics. Exact percentiles (stored samples,
+/// nearest-rank) up to [`STREAMING_THRESHOLD`] samples — bitwise
+/// identical to the historical behavior, which the golden snapshots
+/// pin — then a streaming log-spaced histogram with ≤ 1 % relative
+/// error on percentiles and O(1) memory, so million-request event-core
+/// sweeps don't retain a sample per token
+/// (statistical bounds tested in `rust/tests/stream_stats.rs`).
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStat {
     samples_ms: Vec<f64>,
+    hist: Option<Box<StreamingHist>>,
 }
 
 impl LatencyStat {
     pub fn record(&mut self, v: Seconds) {
-        self.samples_ms.push(v.as_ms());
+        let ms = v.as_ms();
+        if let Some(h) = self.hist.as_mut() {
+            h.record(ms);
+            return;
+        }
+        self.samples_ms.push(ms);
+        if self.samples_ms.len() > STREAMING_THRESHOLD {
+            self.engage_streaming();
+        }
+    }
+
+    /// Fold the stored samples into a fresh histogram (in record order,
+    /// so the running sum accumulates exactly as the exact path would)
+    /// and drop the sample buffer.
+    fn engage_streaming(&mut self) {
+        let mut h = Box::new(StreamingHist::new());
+        for &ms in &self.samples_ms {
+            h.record(ms);
+        }
+        self.hist = Some(h);
+        self.samples_ms = Vec::new();
+    }
+
+    /// True once this stat has crossed to the streaming histogram.
+    pub fn is_streaming(&self) -> bool {
+        self.hist.is_some()
     }
 
     pub fn count(&self) -> usize {
-        self.samples_ms.len()
+        match &self.hist {
+            Some(h) => h.count as usize,
+            None => self.samples_ms.len(),
+        }
     }
 
     pub fn mean_ms(&self) -> f64 {
-        if self.samples_ms.is_empty() {
-            return 0.0;
+        match &self.hist {
+            Some(h) => {
+                if h.count == 0 {
+                    0.0
+                } else {
+                    h.sum / h.count as f64
+                }
+            }
+            None => {
+                if self.samples_ms.is_empty() {
+                    return 0.0;
+                }
+                self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+            }
         }
-        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
     }
 
-    /// Exact percentile (nearest-rank; shared definition in
-    /// [`crate::units::percentile_nearest_rank`]).
+    /// Percentile: exact nearest-rank below the streaming threshold
+    /// (shared definition in [`crate::units::percentile_nearest_rank`]),
+    /// histogram estimate (≤ 1 % relative error) above it.
     pub fn percentile_ms(&self, p: f64) -> f64 {
-        let mut s = self.samples_ms.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::units::percentile_nearest_rank(&s, p)
+        match &self.hist {
+            Some(h) => h.percentile(p),
+            None => {
+                let mut s = self.samples_ms.clone();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                crate::units::percentile_nearest_rank(&s, p)
+            }
+        }
     }
 
+    /// Exact on both paths (the histogram tracks the running max).
     pub fn max_ms(&self) -> f64 {
-        self.samples_ms.iter().copied().fold(0.0, f64::max)
+        match &self.hist {
+            Some(h) => h.max,
+            None => self.samples_ms.iter().copied().fold(0.0, f64::max),
+        }
     }
 
-    /// Absorb another stat's samples (fleet aggregation).
+    /// Absorb another stat (fleet aggregation). Stays exact — sample
+    /// concatenation, the historical behavior — while the combined
+    /// count fits under the threshold; otherwise the merged stat is
+    /// streaming and absorbs the other side bin-wise (or sample-wise if
+    /// the other side is still exact).
     pub fn merge(&mut self, other: &LatencyStat) {
-        self.samples_ms.extend_from_slice(&other.samples_ms);
+        let both_exact = self.hist.is_none() && other.hist.is_none();
+        if both_exact && self.samples_ms.len() + other.samples_ms.len() <= STREAMING_THRESHOLD {
+            self.samples_ms.extend_from_slice(&other.samples_ms);
+            return;
+        }
+        if self.hist.is_none() {
+            self.engage_streaming();
+        }
+        let h = self.hist.as_mut().expect("engaged above");
+        match &other.hist {
+            Some(oh) => h.absorb(oh),
+            None => {
+                for &ms in &other.samples_ms {
+                    h.record(ms);
+                }
+            }
+        }
     }
 }
 
@@ -412,5 +595,75 @@ mod tests {
             ..Default::default()
         };
         assert!((m.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_bins_are_monotone_and_tight() {
+        // Bin index must be nondecreasing in the value, and the
+        // representative within 1 % of any value mapping to its bin.
+        let mut prev_bin = 0usize;
+        let mut v = 1e-9f64;
+        while v < 1e9 {
+            let bin = StreamingHist::bin_of(v);
+            assert!(bin >= prev_bin, "bin order broke at {v}");
+            prev_bin = bin;
+            if bin > 0 && bin < HIST_NBINS - 1 {
+                let rep = StreamingHist::representative(bin);
+                assert!(
+                    (rep - v).abs() / v < 0.01,
+                    "representative {rep} off by >1% from {v} (bin {bin})"
+                );
+            }
+            v *= 1.07;
+        }
+        // Degenerate inputs land in the underflow bin, not a panic.
+        assert_eq!(StreamingHist::bin_of(0.0), 0);
+        assert_eq!(StreamingHist::bin_of(-5.0), 0);
+        assert_eq!(StreamingHist::bin_of(f64::NAN), 0);
+        assert_eq!(StreamingHist::bin_of(1e-300), 0);
+        assert_eq!(StreamingHist::bin_of(1e300), HIST_NBINS - 1);
+    }
+
+    #[test]
+    fn streaming_engages_past_threshold_and_preserves_aggregates() {
+        let mut s = LatencyStat::default();
+        let n = STREAMING_THRESHOLD + 100;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let ms = 1.0 + (i % 997) as f64;
+            sum += ms;
+            s.record(Seconds::ms(ms));
+        }
+        assert!(s.is_streaming());
+        assert_eq!(s.count(), n);
+        assert_eq!(s.max_ms(), 997.0, "max stays exact on the streaming path");
+        assert!((s.mean_ms() - sum / n as f64).abs() / (sum / n as f64) < 1e-12);
+        let p50 = s.percentile_ms(50.0);
+        assert!((p50 - 499.0).abs() / 499.0 < 0.01, "p50 {p50} off exact 499 by >1%");
+        // Below the threshold the stat must not have engaged.
+        let mut small = LatencyStat::default();
+        for _ in 0..STREAMING_THRESHOLD {
+            small.record(Seconds::ms(1.0));
+        }
+        assert!(!small.is_streaming());
+    }
+
+    #[test]
+    fn merge_crossing_threshold_engages_streaming() {
+        let mut a = LatencyStat::default();
+        let mut b = LatencyStat::default();
+        for i in 0..STREAMING_THRESHOLD / 2 + 100 {
+            a.record(Seconds::ms(1.0 + (i % 100) as f64));
+            b.record(Seconds::ms(201.0 + (i % 100) as f64));
+        }
+        assert!(!a.is_streaming() && !b.is_streaming());
+        let total = a.count() + b.count();
+        a.merge(&b);
+        assert!(a.is_streaming(), "merge past the threshold must engage streaming");
+        assert_eq!(a.count(), total);
+        assert_eq!(a.max_ms(), 300.0);
+        // All of b sits above all of a → p75 lands in b's range.
+        let p75 = a.percentile_ms(75.0);
+        assert!((201.0..=300.0).contains(&p75), "p75 {p75} outside b's band");
     }
 }

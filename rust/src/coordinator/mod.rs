@@ -12,14 +12,22 @@
 //!   least-outstanding-tokens, KV-affinity) with a warm-page hit-probe;
 //! * [`cluster`] — rack-scale co-simulation of N replicas with routed
 //!   dispatch and optional disaggregated prefill/decode pools;
+//! * [`calendar`] / [`arena`] / [`event_core`] — the event-driven
+//!   cluster core (DESIGN.md §Event-Core): a deterministic binary-heap
+//!   event calendar, arena-allocated request handles, and lean
+//!   per-replica serving loops held bit-identical to the stepping
+//!   oracle by a differential test harness;
 //! * [`prefix_cache`] — cluster-wide shared prefix-KV cache in the TAB
 //!   pool: cross-replica prefill reuse (DESIGN.md §Prefix-Cache);
 //! * [`metrics`] — latency/throughput accounting, per-replica and
 //!   fleet-level.
 
+pub mod arena;
 pub mod batcher;
+pub mod calendar;
 pub mod cluster;
 pub mod engine;
+pub mod event_core;
 pub mod metrics;
 pub mod prefix_cache;
 pub mod request;
@@ -28,14 +36,17 @@ pub mod scheduler;
 #[cfg(feature = "pjrt")]
 pub mod tp;
 
+pub use arena::{ArenaEntry, ReqId, RequestArena};
 pub use batcher::Batcher;
+pub use calendar::{Event, EventCalendar, EventKind};
 pub use cluster::{
     demo_serve_cluster, demo_serve_traffic, session_workload, AutoscaleConfig, Cluster,
     ClusterConfig, ClusterReport,
 };
 pub use engine::{Backend, SimBackend};
+pub use event_core::{EventReplica, LeanHandoff};
 pub use prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport, PrefixHit};
-pub use metrics::Metrics;
+pub use metrics::{LatencyStat, Metrics, STREAMING_THRESHOLD};
 pub use request::{Request, Response, SloTarget};
 pub use router::{Policy, Router};
 pub use scheduler::{SchedMode, Scheduler};

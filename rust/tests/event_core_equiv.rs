@@ -1,0 +1,347 @@
+//! Differential equivalence harness: the event-driven cluster core
+//! (`Cluster::run`, DESIGN.md §Event-Core) against the tick-stepping
+//! oracle (`Cluster::run_stepping`), on seeded scenarios covering every
+//! cluster feature, asserting *bit*-identical fleet metrics — not
+//! tolerance-close: `f64::to_bits` equality on every latency aggregate,
+//! clock, integral and ledger observable. Any reordered floating-point
+//! add, skipped sync point or drifted router observation fails here
+//! before it can silently skew an experiment.
+
+use fenghuang::coordinator::{
+    session_workload, AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig,
+    Request,
+};
+use fenghuang::coordinator::metrics::LatencyStat;
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::units::{Bytes, Seconds};
+
+/// Collect every f64 observable of a report as (label, bits).
+fn bits(label: &str, v: f64, out: &mut Vec<(String, u64)>) {
+    out.push((label.to_string(), v.to_bits()));
+}
+
+fn stat_bits(prefix: &str, s: &LatencyStat, out: &mut Vec<(String, u64)>) {
+    bits(&format!("{prefix}.count"), s.count() as f64, out);
+    bits(&format!("{prefix}.mean_ms"), s.mean_ms(), out);
+    for p in [50.0, 95.0, 99.0] {
+        bits(&format!("{prefix}.p{p}"), s.percentile_ms(p), out);
+    }
+    bits(&format!("{prefix}.max_ms"), s.max_ms(), out);
+}
+
+fn observe(r: &ClusterReport) -> Vec<(String, u64)> {
+    let mut out = Vec::new();
+    let f = &r.fleet;
+    for (k, v) in [
+        ("completed", f.completed as f64),
+        ("rejected", f.rejected as f64),
+        ("shed", f.shed as f64),
+        ("tokens_generated", f.tokens_generated as f64),
+        ("slo_total", f.slo_total as f64),
+        ("slo_met", f.slo_met as f64),
+        ("goodput_tokens", f.goodput_tokens as f64),
+        ("prefill_tokens", f.prefill_tokens as f64),
+        ("prefill_tokens_saved", f.prefill_tokens_saved as f64),
+        ("prefix_fetch", f.prefix_fetch.value()),
+        ("clock", f.clock.value()),
+        ("busy", f.busy.value()),
+        ("paging_stall", f.paging_stall.value()),
+        ("fabric_wait", f.fabric_wait.value()),
+        ("imbalance", r.imbalance),
+        ("handoffs", r.handoffs as f64),
+        ("handoff_time", r.handoff_time.value()),
+        ("kv_spilled_peak", r.kv_spilled_peak.value()),
+        ("replica_seconds", r.replica_seconds),
+        ("gpu_seconds", r.gpu_seconds),
+        ("elastic", r.elastic as u8 as f64),
+        ("scale_events", r.scale_events.len() as f64),
+    ] {
+        bits(k, v, &mut out);
+    }
+    for (i, &(t, n)) in r.scale_events.iter().enumerate() {
+        bits(&format!("scale[{i}].t"), t.value(), &mut out);
+        bits(&format!("scale[{i}].n"), n as f64, &mut out);
+    }
+    stat_bits("ttft", &f.ttft, &mut out);
+    stat_bits("tpot", &f.tpot, &mut out);
+    stat_bits("e2e", &f.e2e, &mut out);
+    for (i, p) in r.per_replica.iter().enumerate() {
+        out.push((format!("r[{i}].name:{}", p.name), 0));
+        out.push((format!("r[{i}].role:{:?}", p.role), 0));
+        for (k, v) in [
+            ("completed", p.completed as f64),
+            ("handoffs", p.handoffs as f64),
+            ("routed_tokens", p.routed_tokens as f64),
+            ("busy", p.busy.value()),
+            ("clock", p.clock.value()),
+            ("utilization", p.utilization),
+            ("paging_stall", p.paging_stall.value()),
+            ("kv_spilled_peak", p.kv_spilled_peak.value()),
+        ] {
+            bits(&format!("r[{i}].{k}"), v, &mut out);
+        }
+    }
+    if let Some(pc) = &r.prefix_cache {
+        for (k, v) in [
+            ("lookups", pc.lookups as f64),
+            ("hits", pc.hits as f64),
+            ("hit_tokens", pc.hit_tokens as f64),
+            ("inserted_tokens", pc.inserted_tokens as f64),
+            ("evicted_tokens", pc.evicted_tokens as f64),
+            ("entries", pc.entries as f64),
+            ("pool_bytes_held", pc.pool_bytes_held.value()),
+            ("pool_bytes_peak", pc.pool_bytes_peak.value()),
+            ("capacity", pc.capacity.value()),
+            ("hit_rate", pc.hit_rate),
+            ("token_hit_rate", pc.token_hit_rate),
+        ] {
+            bits(&format!("pc.{k}"), v, &mut out);
+        }
+    } else {
+        out.push(("pc.none".to_string(), 0));
+    }
+    if let Some(fr) = &r.fabric {
+        for (k, v) in [
+            ("ports", fr.ports as f64),
+            ("modules", fr.modules as f64),
+            ("window", fr.window.value()),
+            ("transfers", fr.transfers as f64),
+            ("bytes", fr.bytes.value()),
+            ("busy", fr.busy.value()),
+            ("horizon", fr.horizon.value()),
+            ("busy_frac", fr.busy_frac),
+            ("queue_mean", fr.queue_mean.value()),
+            ("queue_p50", fr.queue_p50.value()),
+            ("queue_p95", fr.queue_p95.value()),
+            ("queue_p99", fr.queue_p99.value()),
+            ("queue_max", fr.queue_max.value()),
+            ("queue_total", fr.queue_total.value()),
+            ("serialization", fr.serialization.value()),
+            ("module_imbalance", fr.module_imbalance),
+        ] {
+            bits(&format!("fab.{k}"), v, &mut out);
+        }
+        for (i, b) in fr.module_bytes.iter().enumerate() {
+            bits(&format!("fab.module[{i}]"), b.value(), &mut out);
+        }
+    } else {
+        out.push(("fab.none".to_string(), 0));
+    }
+    out
+}
+
+/// Run the same (cluster-config, workload) pair through both cores and
+/// demand bit-identical reports.
+fn assert_equivalent(scenario: &str, cfg: ClusterConfig, replicas: usize, reqs: Vec<Request>) {
+    let model = gpt3_175b();
+    let mut stepping = Cluster::fh4(replicas, &model, cfg.clone()).expect("stepping cluster");
+    let oracle = stepping.run_stepping(reqs.clone()).expect("stepping run");
+    let mut event = Cluster::fh4(replicas, &model, cfg).expect("event cluster");
+    let fast = event.run(reqs).expect("event run");
+    let a = observe(&oracle);
+    let b = observe(&fast);
+    assert_eq!(a.len(), b.len(), "{scenario}: observable sets differ in shape");
+    for ((ka, va), (kb, vb)) in a.iter().zip(&b) {
+        assert_eq!(ka, kb, "{scenario}: observable order diverged");
+        assert_eq!(
+            va, vb,
+            "{scenario}: `{ka}` differs — stepping {} vs event {}",
+            f64::from_bits(*va),
+            f64::from_bits(*vb),
+        );
+    }
+}
+
+fn traffic_reqs(tc: &TrafficConfig) -> Vec<Request> {
+    traffic::generate(tc).expect("workload")
+}
+
+#[test]
+fn equiv_kv_pressure_bursty() {
+    // Bursty chat+rag against a binding per-replica KV budget: paging
+    // stalls are charged inside decode costs, where any divergence in
+    // step sequencing would compound.
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 10.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat+rag").unwrap(),
+        requests: 24,
+        seed: 7,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "kv-pressure",
+        ClusterConfig { kv_budget: Some(Bytes::gb(2.0)), ..Default::default() },
+        2,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_elastic_diurnal() {
+    // Diurnal chat on an autoscaled fleet: tick/arrival interleaving,
+    // the replica-seconds integral and the scale-event log must match
+    // to the bit.
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps: 10.0,
+            diurnal_period: Seconds::new(8.0),
+            diurnal_floor: 0.05,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").unwrap(),
+        requests: 48,
+        seed: 7,
+        max_prompt: 4096,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "elastic-diurnal",
+        ClusterConfig {
+            autoscale: Some(AutoscaleConfig { target_tokens: 2048, ..Default::default() }),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_prefix_cache_agentic() {
+    // Agentic sessions through the shared prefix cache: lookup/insert
+    // ordering, cached-prefix discounts and fetch stalls.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 32,
+        seed: 17,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "prefix-agentic",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_fabric_contention() {
+    // Prefix traffic through the arbitrated fabric: every booking's
+    // (time, bytes, port, id) tuple must be issued in the same order or
+    // the ledger's queueing delays diverge.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 32,
+        seed: 19,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "contention",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_disaggregated_handoff() {
+    // Prefill/decode pools: handoff costing, decode-router placement and
+    // injected-sequence admission.
+    assert_equivalent(
+        "disaggregated",
+        ClusterConfig { disaggregate: Some((2, 2)), ..Default::default() },
+        4,
+        session_workload(24, 6, 512, 12, Seconds::ms(2.0)),
+    );
+}
+
+#[test]
+fn equiv_disaggregated_contended() {
+    // Handoff metadata bookings through a per-module ledger.
+    assert_equivalent(
+        "disaggregated-contended",
+        ClusterConfig {
+            disaggregate: Some((2, 2)),
+            contention: ContentionConfig {
+                mode: ContentionMode::PerModule,
+                module_interleave: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        4,
+        session_workload(16, 4, 256, 8, Seconds::ms(5.0)),
+    );
+}
+
+#[test]
+fn equiv_shed_heavy_burst() {
+    // Simultaneous burst against a tiny shed watermark: the shed/admit
+    // decision depends on router load at each arrival sync — the most
+    // order-sensitive path in the cluster.
+    let mut reqs = session_workload(24, 4, 256, 8, Seconds::ms(5.0));
+    for r in &mut reqs {
+        r.arrival = Seconds::ZERO;
+    }
+    assert_equivalent(
+        "shed-burst",
+        ClusterConfig { shed_tokens: Some(600), ..Default::default() },
+        2,
+        reqs,
+    );
+}
+
+#[test]
+fn equiv_rejection_and_affinity() {
+    // KV-affinity routing plus inadmissible prompts: rejected requests
+    // must unroute identically, leaving identical router state behind.
+    let mut reqs = session_workload(20, 4, 256, 8, Seconds::ms(5.0));
+    let cap = gpt3_175b().max_seq as usize;
+    reqs[3].prompt = vec![1; cap + 1];
+    reqs[11].prompt = vec![2; cap * 2];
+    assert_equivalent(
+        "affinity-rejection",
+        ClusterConfig {
+            policy: fenghuang::coordinator::Policy::KvAffinity,
+            ..Default::default()
+        },
+        4,
+        reqs,
+    );
+}
+
+#[test]
+fn equiv_zero_requests() {
+    // Degenerate inputs: both cores must agree on the empty run too —
+    // including the autoscaled empty run, where the first tick must be
+    // dropped rather than tick forever.
+    assert_equivalent("empty", ClusterConfig::default(), 2, Vec::new());
+    assert_equivalent(
+        "empty-elastic",
+        ClusterConfig {
+            autoscale: Some(AutoscaleConfig::default()),
+            ..Default::default()
+        },
+        2,
+        Vec::new(),
+    );
+}

@@ -1,0 +1,211 @@
+//! Property tests for the event-calendar core (DESIGN.md §Event-Core):
+//! time-ordering and FIFO invariants of `EventCalendar` under random
+//! schedules, past-rejection, drain-to-empty at run end, and arena
+//! handle stability across prompt retirement.
+
+use fenghuang::coordinator::{
+    AutoscaleConfig, Cluster, ClusterConfig, EventCalendar, EventKind, ReqId, Request,
+    RequestArena, session_workload,
+};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::XorShift;
+use fenghuang::units::Seconds;
+
+#[test]
+fn pop_times_are_nondecreasing_under_random_schedules() {
+    // Random pushes interleaved with pops, every new event scheduled at
+    // or after the calendar's current instant (as real drivers must):
+    // the popped time sequence is nondecreasing, with no event lost.
+    for seed in 1..=10u64 {
+        let mut rng = XorShift::new(seed);
+        let mut cal = EventCalendar::new();
+        let mut pushed = 0usize;
+        let mut popped = 0usize;
+        let mut last = f64::NEG_INFINITY;
+        let mut horizon = 0.0f64;
+        for _ in 0..500 {
+            if rng.next_f64() < 0.6 || cal.is_empty() {
+                // Schedule relative to now (never into the past).
+                let base = cal.now().map(|t| t.value()).unwrap_or(0.0);
+                let t = base + rng.next_f64() * 10.0;
+                horizon = horizon.max(t);
+                let kind = match rng.range(0, 3) {
+                    0 => EventKind::AutoscaleTick,
+                    1 => EventKind::Arrival { req: ReqId(pushed as u32) },
+                    _ => EventKind::DecodeTick { replica: pushed % 7 },
+                };
+                assert!(cal.push(Seconds::new(t), kind), "in-future push must be accepted");
+                pushed += 1;
+            } else {
+                let e = cal.pop().expect("non-empty calendar pops");
+                assert!(
+                    e.time.value() >= last,
+                    "seed {seed}: pop at {} after {}",
+                    e.time.value(),
+                    last
+                );
+                last = e.time.value();
+                popped += 1;
+            }
+        }
+        while let Some(e) = cal.pop() {
+            assert!(e.time.value() >= last);
+            last = e.time.value();
+            popped += 1;
+        }
+        assert_eq!(pushed, popped, "seed {seed}: every pushed event pops exactly once");
+        assert!(cal.is_empty());
+        assert_eq!(cal.arrivals_scheduled(), 0);
+        assert!(last <= horizon + 1e-12);
+    }
+}
+
+#[test]
+fn equal_timestamps_pop_fifo_within_a_class() {
+    // 100 arrivals at the same instant: they pop in push order (the
+    // monotone `seq` tie-break), which is what makes sorted workload
+    // ingestion replay deterministically.
+    let mut cal = EventCalendar::new();
+    let t = Seconds::new(2.5);
+    for i in 0..100u32 {
+        assert!(cal.push(t, EventKind::Arrival { req: ReqId(i) }));
+    }
+    let mut seqs = Vec::new();
+    for want in 0..100u32 {
+        let e = cal.pop().unwrap();
+        match e.kind {
+            EventKind::Arrival { req } => assert_eq!(req, ReqId(want), "FIFO at equal time"),
+            other => panic!("unexpected kind {other:?}"),
+        }
+        seqs.push(e.seq);
+    }
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seq is strictly monotone");
+}
+
+#[test]
+fn class_orders_same_instant_events_like_the_stepping_loop() {
+    // At one timestamp: autoscale tick first, then replica-local
+    // completions, then arrivals — regardless of push order.
+    let mut cal = EventCalendar::new();
+    let t = Seconds::new(1.0);
+    assert!(cal.push(t, EventKind::Arrival { req: ReqId(0) }));
+    assert!(cal.push(t, EventKind::DecodeTick { replica: 3 }));
+    assert!(cal.push(t, EventKind::PrefillDone { replica: 1 }));
+    assert!(cal.push(t, EventKind::AutoscaleTick));
+    assert!(cal.push(t, EventKind::MigrationDone { replica: 0 }));
+    assert!(cal.push(t, EventKind::HandoffDone { replica: 2 }));
+    let order: Vec<EventKind> = std::iter::from_fn(|| cal.pop()).map(|e| e.kind).collect();
+    assert_eq!(
+        order,
+        vec![
+            EventKind::AutoscaleTick,
+            EventKind::HandoffDone { replica: 2 },
+            EventKind::MigrationDone { replica: 0 },
+            EventKind::PrefillDone { replica: 1 },
+            EventKind::DecodeTick { replica: 3 },
+            EventKind::Arrival { req: ReqId(0) },
+        ]
+    );
+}
+
+#[test]
+fn no_event_can_be_scheduled_in_the_past() {
+    let mut cal = EventCalendar::new();
+    assert!(cal.push(Seconds::new(5.0), EventKind::AutoscaleTick));
+    assert!(cal.push(Seconds::new(1.0), EventKind::AutoscaleTick));
+    cal.pop(); // now = 1.0
+    cal.pop(); // now = 5.0
+    assert!(!cal.push(Seconds::new(4.999), EventKind::AutoscaleTick), "past push rejected");
+    assert!(cal.is_empty(), "rejected push schedules nothing");
+    assert!(cal.push(Seconds::new(5.0), EventKind::AutoscaleTick), "push at now is legal");
+    assert!(cal.push(Seconds::new(5.1), EventKind::Arrival { req: ReqId(0) }));
+    assert_eq!(cal.len(), 2);
+    // A rejected push must not bump the arrival gauge either.
+    assert!(!cal.push(Seconds::new(0.0), EventKind::Arrival { req: ReqId(1) }));
+    assert_eq!(cal.arrivals_scheduled(), 1);
+}
+
+#[test]
+fn calendar_drains_empty_at_run_end() {
+    // Replay the driver's schedule shape: N arrivals plus a
+    // self-rescheduling tick that stops once arrivals and work run out.
+    let mut cal = EventCalendar::new();
+    for i in 0..40u32 {
+        assert!(cal.push(Seconds::new(i as f64 * 0.25), EventKind::Arrival { req: ReqId(i) }));
+    }
+    let interval = Seconds::new(1.0);
+    assert!(cal.push(interval, EventKind::AutoscaleTick));
+    let mut pending = 0usize; // work the "fleet" still holds
+    let mut next_scale = interval;
+    while let Some(e) = cal.pop() {
+        match e.kind {
+            EventKind::Arrival { .. } => pending += 2, // two steps of work each
+            EventKind::AutoscaleTick => {
+                if cal.arrivals_scheduled() == 0 && pending == 0 {
+                    continue; // dropped: the calendar must now drain
+                }
+                pending = pending.saturating_sub(3); // fleet drains between ticks
+                next_scale += interval;
+                assert!(cal.push(next_scale, EventKind::AutoscaleTick));
+            }
+            other => panic!("driver never schedules {other:?}"),
+        }
+    }
+    assert!(cal.is_empty(), "run end leaves no orphaned events");
+    assert_eq!(cal.arrivals_scheduled(), 0);
+
+    // And end-to-end: an autoscaled event-core run terminates with every
+    // request accounted for — the loop exits only by draining the
+    // calendar, so completion *is* the drain proof.
+    let reqs = session_workload(32, 4, 256, 8, Seconds::ms(5.0));
+    let cfg = ClusterConfig {
+        autoscale: Some(AutoscaleConfig { target_tokens: 1024, ..Default::default() }),
+        ..Default::default()
+    };
+    let mut c = Cluster::fh4(4, &gpt3_175b(), cfg).unwrap();
+    let r = c.run(reqs).unwrap();
+    assert_eq!(r.fleet.completed + r.fleet.rejected + r.fleet.shed, 32);
+}
+
+#[test]
+fn arena_handles_never_dangle_across_retirement() {
+    let mut arena = RequestArena::new();
+    let mut rng = XorShift::new(42);
+    let mut ids: Vec<ReqId> = Vec::new();
+    let mut expect: Vec<(u64, usize, usize)> = Vec::new();
+    for i in 0..500u64 {
+        let plen = 1 + rng.range(1, 300) as usize;
+        let gen = 1 + rng.range(0, 40) as usize;
+        ids.push(arena.alloc(Request {
+            id: i,
+            prompt: vec![(i % 500) as i32 + 1; plen],
+            max_new_tokens: gen,
+            arrival: Seconds::ms(i as f64),
+            ..Default::default()
+        }));
+        expect.push((i, plen, gen));
+        // Retire a random earlier request mid-stream, like the driver
+        // does after each admission.
+        if i % 3 == 0 {
+            let victim = ids[rng.range(0, ids.len() as u64 - 1) as usize];
+            arena.retire_prompt(victim);
+            assert!(arena.is_retired(victim));
+        }
+    }
+    // Retire everything (idempotent for the already-retired) and check
+    // every handle still resolves to its frozen metadata.
+    for &id in &ids {
+        arena.retire_prompt(id);
+    }
+    for (id, &(orig, plen, gen)) in ids.iter().zip(&expect) {
+        let e = arena.get(*id);
+        assert_eq!(e.id, orig);
+        assert_eq!(e.prompt_len, plen);
+        assert_eq!(e.max_new_tokens, gen);
+        assert_eq!(e.work_tokens(), (plen + gen) as u64);
+        assert!(e.prompt().is_empty(), "retired prompts hold no tokens");
+        assert!(e.prefill_len() >= 1);
+        assert_eq!(e.arrival, Seconds::ms(orig as f64));
+    }
+    assert_eq!(arena.len(), 500);
+}

@@ -1,0 +1,198 @@
+//! Statistical tests for the streaming percentile accumulator
+//! (DESIGN.md §Event-Core): below [`STREAMING_THRESHOLD`] the stat is
+//! bitwise the historical exact nearest-rank path (golden snapshots
+//! depend on it); above it, the log-spaced histogram must estimate
+//! p50/p95/p99 within 1 % relative error against the exact sorted
+//! reference on exponential, bimodal and heavy-tailed samples, and
+//! `merge()` of streaming accumulators must match the pooled stat
+//! within the same tolerance.
+
+use fenghuang::coordinator::metrics::{LatencyStat, STREAMING_THRESHOLD};
+use fenghuang::traffic::XorShift;
+use fenghuang::units::{percentile_nearest_rank, Seconds};
+
+fn record_all(stat: &mut LatencyStat, samples: &[f64]) {
+    for &ms in samples {
+        stat.record(Seconds::ms(ms));
+    }
+}
+
+fn exact_percentile(samples: &[f64], p: f64) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_nearest_rank(&s, p)
+}
+
+fn rel_err(est: f64, exact: f64) -> f64 {
+    if exact == 0.0 {
+        est.abs()
+    } else {
+        (est - exact).abs() / exact.abs()
+    }
+}
+
+fn assert_streaming_close(name: &str, samples: &[f64]) {
+    assert!(samples.len() > STREAMING_THRESHOLD, "{name}: must engage streaming");
+    let mut stat = LatencyStat::default();
+    record_all(&mut stat, samples);
+    assert!(stat.is_streaming(), "{name}: past threshold ⇒ streaming");
+    assert_eq!(stat.count(), samples.len());
+    for p in [50.0, 95.0, 99.0] {
+        let exact = exact_percentile(samples, p);
+        let est = stat.percentile_ms(p);
+        assert!(
+            rel_err(est, exact) < 0.01,
+            "{name}: p{p} streaming {est} vs exact {exact} ({:.3} % off)",
+            100.0 * rel_err(est, exact)
+        );
+    }
+    // The running max and running mean are exact, not binned.
+    let max = samples.iter().copied().fold(0.0, f64::max);
+    assert_eq!(stat.max_ms().to_bits(), max.to_bits(), "{name}: max is exact");
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    assert!(rel_err(stat.mean_ms(), mean) < 1e-12, "{name}: mean is a running sum");
+}
+
+fn exponential_samples(n: usize, seed: u64, mean_ms: f64) -> Vec<f64> {
+    let mut rng = XorShift::new(seed);
+    (0..n).map(|_| rng.exp(mean_ms)).collect()
+}
+
+fn bimodal_samples(n: usize, seed: u64) -> Vec<f64> {
+    // 70 % fast mode around 2–3 ms, 30 % slow mode around 50–60 ms —
+    // the shape of a fleet with a saturated minority.
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|_| {
+            if rng.next_f64() < 0.7 {
+                2.0 + rng.next_f64()
+            } else {
+                50.0 + 10.0 * rng.next_f64()
+            }
+        })
+        .collect()
+}
+
+fn heavy_tail_samples(n: usize, seed: u64) -> Vec<f64> {
+    // Pareto(x_m = 1 ms, α = 1.5): infinite variance, the tail shape
+    // that breaks fixed-linear-bin histograms.
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|_| {
+            let u = rng.next_f64();
+            1.0 / (1.0 - u).powf(1.0 / 1.5)
+        })
+        .collect()
+}
+
+#[test]
+fn exact_path_is_bitwise_nearest_rank_below_threshold() {
+    let samples = exponential_samples(10_000, 3, 7.5);
+    let mut stat = LatencyStat::default();
+    record_all(&mut stat, &samples);
+    assert!(!stat.is_streaming(), "below threshold stays exact");
+    assert_eq!(stat.count(), samples.len());
+    for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+        assert_eq!(
+            stat.percentile_ms(p).to_bits(),
+            exact_percentile(&samples, p).to_bits(),
+            "exact path must be bitwise nearest-rank at p{p}"
+        );
+    }
+    // At exactly the threshold the stat still holds raw samples: the
+    // golden snapshots never see a histogram estimate.
+    let mut edge = LatencyStat::default();
+    record_all(&mut edge, &exponential_samples(STREAMING_THRESHOLD, 4, 7.5));
+    assert!(!edge.is_streaming());
+}
+
+#[test]
+fn streaming_percentiles_within_one_percent_on_exponential() {
+    assert_streaming_close(
+        "exponential",
+        &exponential_samples(STREAMING_THRESHOLD + 15_000, 11, 12.0),
+    );
+}
+
+#[test]
+fn streaming_percentiles_within_one_percent_on_bimodal() {
+    assert_streaming_close("bimodal", &bimodal_samples(STREAMING_THRESHOLD + 15_000, 12));
+}
+
+#[test]
+fn streaming_percentiles_within_one_percent_on_heavy_tail() {
+    assert_streaming_close("heavy-tail", &heavy_tail_samples(STREAMING_THRESHOLD + 15_000, 13));
+}
+
+#[test]
+fn merge_of_exact_stats_below_threshold_stays_bitwise() {
+    // merge() of two small stats is sample concatenation: identical to
+    // one stat that recorded the concatenated sequence.
+    let a = exponential_samples(5_000, 21, 4.0);
+    let b = bimodal_samples(5_000, 22);
+    let mut merged = LatencyStat::default();
+    record_all(&mut merged, &a);
+    let mut other = LatencyStat::default();
+    record_all(&mut other, &b);
+    merged.merge(&other);
+    assert!(!merged.is_streaming());
+    let mut pooled = LatencyStat::default();
+    record_all(&mut pooled, &a);
+    record_all(&mut pooled, &b);
+    assert_eq!(merged.count(), pooled.count());
+    for p in [50.0, 95.0, 99.0, 100.0] {
+        assert_eq!(merged.percentile_ms(p).to_bits(), pooled.percentile_ms(p).to_bits());
+    }
+    assert_eq!(merged.mean_ms().to_bits(), pooled.mean_ms().to_bits());
+}
+
+#[test]
+fn merge_crossing_threshold_matches_pooled_within_tolerance() {
+    // Two exact halves whose union exceeds the threshold: the merge
+    // engages streaming and must still track the pooled exact stats.
+    let a = exponential_samples(STREAMING_THRESHOLD / 2 + 5_000, 31, 6.0);
+    let b = heavy_tail_samples(STREAMING_THRESHOLD / 2 + 5_000, 32);
+    let mut merged = LatencyStat::default();
+    record_all(&mut merged, &a);
+    let mut other = LatencyStat::default();
+    record_all(&mut other, &b);
+    assert!(!merged.is_streaming() && !other.is_streaming());
+    merged.merge(&other);
+    assert!(merged.is_streaming(), "crossing the threshold engages streaming");
+    let pooled: Vec<f64> = a.iter().chain(&b).copied().collect();
+    assert_eq!(merged.count(), pooled.len());
+    for p in [50.0, 95.0, 99.0] {
+        let exact = exact_percentile(&pooled, p);
+        let est = merged.percentile_ms(p);
+        assert!(
+            rel_err(est, exact) < 0.01,
+            "merged p{p}: {est} vs pooled {exact}"
+        );
+    }
+    let max = pooled.iter().copied().fold(0.0, f64::max);
+    assert_eq!(merged.max_ms().to_bits(), max.to_bits());
+}
+
+#[test]
+fn merge_of_two_streaming_stats_matches_pooled_within_tolerance() {
+    let a = bimodal_samples(STREAMING_THRESHOLD + 2_000, 41);
+    let b = exponential_samples(STREAMING_THRESHOLD + 2_000, 42, 9.0);
+    let mut sa = LatencyStat::default();
+    record_all(&mut sa, &a);
+    let mut sb = LatencyStat::default();
+    record_all(&mut sb, &b);
+    assert!(sa.is_streaming() && sb.is_streaming());
+    sa.merge(&sb);
+    let pooled: Vec<f64> = a.iter().chain(&b).copied().collect();
+    assert_eq!(sa.count(), pooled.len());
+    for p in [50.0, 95.0, 99.0] {
+        let exact = exact_percentile(&pooled, p);
+        let est = sa.percentile_ms(p);
+        assert!(
+            rel_err(est, exact) < 0.01,
+            "two-streaming merge p{p}: {est} vs pooled {exact}"
+        );
+    }
+    let mean = pooled.iter().sum::<f64>() / pooled.len() as f64;
+    assert!(rel_err(sa.mean_ms(), mean) < 1e-12);
+}

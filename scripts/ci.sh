@@ -87,6 +87,41 @@ for b in "${BENCHES[@]}"; do
     cargo bench --bench "$b" -- --json --smoke
 done
 
+# Perf gate: the event-core gate row of BENCH_perf_hotpath.json is a
+# fixed-size run (4 replicas × 2000 requests, smoke and full alike), so
+# the fresh number is directly comparable to the committed baseline.
+# Fail on a >2x wall-clock regression; CI machines are noisy enough that
+# a tighter bound would flake.
+echo "== perf gate: event-core 4x2000 =="
+extract_gate_ns() {
+    grep -o '"section": "gate"[^}]*' "$1" 2>/dev/null \
+        | sed -n 's/.*"event_core_ns": \([0-9.eE+-]*\).*/\1/p' | head -n1
+}
+new_ns=$(extract_gate_ns BENCH_perf_hotpath.json || true)
+if [[ -z "$new_ns" ]]; then
+    echo "error: no gate row in BENCH_perf_hotpath.json (benches/perf_hotpath.rs must emit it)" >&2
+    exit 1
+fi
+base_ns=""
+if command -v git >/dev/null; then
+    base_file=$(mktemp)
+    if git show HEAD:BENCH_perf_hotpath.json > "$base_file" 2>/dev/null; then
+        base_ns=$(extract_gate_ns "$base_file" || true)
+    fi
+    rm -f "$base_file"
+fi
+if [[ -n "$base_ns" ]]; then
+    echo "gate: fresh ${new_ns} ns vs committed baseline ${base_ns} ns"
+    if awk -v n="$new_ns" -v b="$base_ns" 'BEGIN { exit !(b > 0 && n > 2.0 * b) }'; then
+        echo "error: event-core gate regressed >2x (${new_ns} ns vs ${base_ns} ns baseline) —" >&2
+        echo "       find the regression, or re-baseline deliberately by committing the new JSON" >&2
+        exit 1
+    fi
+else
+    echo "notice: no committed BENCH_perf_hotpath.json baseline — commit the generated one"
+    echo "        so the perf gate binds on the next run."
+fi
+
 echo
 echo "smoke artifacts:"
 ls -l BENCH_*.json
