@@ -1,0 +1,340 @@
+//! Bench target: fault-injection sweep (EXPERIMENTS.md §Fault-Sweep).
+//!
+//! The question this bench exists to ask: does the shared pool survive
+//! operations? Every other experiment measures a healthy fleet; this one
+//! injects the three fault classes (DESIGN.md §Faults) into a serving
+//! run and reports the availability cost:
+//!
+//! * **passthrough** — an armed-but-empty schedule is bit-identical to
+//!   no schedule at all (the fault machinery is free when unused);
+//! * **crash/recovery** — a replica crash under SLO-carrying load,
+//!   swept over repair times: the SLO-attainment dip is nonzero, the
+//!   fleet recovers before the run ends, and recovery time is monotone
+//!   in the repair time;
+//! * **module blast radius** — a hottest-module kill under striped vs
+//!   hashed extent placement: hashed concentration invalidates at least
+//!   as many bytes as uniform striping (pigeonhole over chains);
+//! * **link degradation** — a contention-budget squeeze makes the run
+//!   strictly wait longer on the fabric, then budgets recover.
+//!
+//! SLO targets are self-calibrating: the crash cells set each request's
+//! TTFT target to the healthy run's p95, so the pre-fault baseline sits
+//! near 0.95 attainment whatever the hardware model says and the dip
+//! measures the fault, not the calibration.
+//!
+//! `cargo bench --bench fault_sweep -- --json` writes
+//! `BENCH_fault_sweep.json` (scripts/bench_json.sh `faults`);
+//! `-- --smoke` (scripts/ci.sh) shrinks the sweep.
+
+mod common;
+
+use fenghuang::coordinator::{
+    Cluster, ClusterConfig, ClusterReport, PoolPlacement, PrefixCacheConfig, Request, SloTarget,
+};
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
+use fenghuang::faults::{FaultKind, FaultSchedule, FaultSpec, ModuleSel};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::units::Seconds;
+
+const SEED: u64 = 13;
+const REPLICAS: usize = 4;
+
+/// Fixed-gap replay stream: deterministic arrivals, chat-mix lengths.
+fn workload(requests: usize) -> Vec<Request> {
+    let gap = Seconds::us(600.0);
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Replay,
+            qps: 1.0 / gap.value(),
+            replay_gaps: vec![gap],
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").expect("mix"),
+        requests,
+        seed: SEED,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+    };
+    traffic::generate(&tc).expect("workload")
+}
+
+fn run(cfg: ClusterConfig, reqs: Vec<Request>) -> ClusterReport {
+    let mut cluster = Cluster::fh4(REPLICAS, &gpt3_175b(), cfg).expect("cluster");
+    cluster.run(reqs).expect("run")
+}
+
+/// Uniform-chain session workload for the blast-radius cells: 16
+/// sessions, every prompt of a session identical (`chain_len` tokens,
+/// distinct first token per session), so each session is exactly one
+/// trie chain of the same depth and the hottest-module comparison is a
+/// pure chains-per-module pigeonhole.
+fn uniform_sessions(requests: usize, chain_len: usize) -> Vec<Request> {
+    let sessions = 16;
+    let gap = Seconds::us(600.0);
+    (0..requests)
+        .map(|i| {
+            let s = (i % sessions) as i32;
+            Request {
+                id: i as u64,
+                prompt: (0..chain_len as i32).map(|t| s * 1024 + t + 1).collect(),
+                max_new_tokens: 16,
+                arrival: gap * i as f64,
+                ..Default::default()
+            }
+        })
+        .collect()
+}
+
+fn crash_schedule(at: Seconds, repair: Seconds, window: Seconds) -> FaultSchedule {
+    FaultSchedule {
+        events: vec![FaultSpec {
+            at,
+            kind: FaultKind::ReplicaCrash { replica: 1, repair },
+        }],
+        window,
+        epsilon: 0.1,
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
+    let requests = if smoke { 48 } else { 96 };
+
+    // ── Passthrough: an armed-but-empty schedule must not move a bit ──
+    let featureful = || ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        contention: ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+        ..Default::default()
+    };
+    let plain = run(featureful(), workload(requests));
+    let armed = run(
+        ClusterConfig { faults: Some(FaultSchedule::default()), ..featureful() },
+        workload(requests),
+    );
+    for (label, a, b) in [
+        ("makespan", plain.makespan().value(), armed.makespan().value()),
+        ("ttft_p99", plain.fleet.ttft.percentile_ms(99.0), armed.fleet.ttft.percentile_ms(99.0)),
+        ("fabric_wait", plain.fleet.fabric_wait.value(), armed.fleet.fabric_wait.value()),
+        ("prefix_fetch", plain.fleet.prefix_fetch.value(), armed.fleet.prefix_fetch.value()),
+    ] {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "empty fault schedule perturbed `{label}`: {a} vs {b}"
+        );
+    }
+    println!("passthrough: empty schedule bit-identical to no schedule ✓\n");
+
+    // ── Crash/recovery: repair-time sweep under self-calibrated SLOs ──
+    let healthy = run(ClusterConfig::default(), workload(requests));
+    assert_eq!(
+        (healthy.fleet.completed + healthy.fleet.rejected + healthy.fleet.shed) as usize,
+        requests
+    );
+    assert!(healthy.fleet.completed > 0, "calibration needs healthy completions");
+    let slo = SloTarget {
+        ttft: Seconds::ms(healthy.fleet.ttft.percentile_ms(95.0)),
+        tpot: Seconds::ms(10_000.0),
+    };
+    let span = workload(requests).last().unwrap().arrival;
+    let crash_at = span * 0.4;
+    let window = span * 0.08;
+    let repair_fracs: &[f64] = if smoke { &[0.05, 0.3] } else { &[0.05, 0.15, 0.3] };
+
+    println!(
+        "== crash/recovery sweep (gpt3, {REPLICAS} replicas, {requests} req, crash r1 @ {:.1} ms, \
+         slo ttft = healthy p95 {:.2} ms, seed {SEED}) ==",
+        crash_at.as_ms(),
+        slo.ttft.as_ms()
+    );
+    println!("repair(ms)  dip%   recovery(ms)  requeued  lost-tok  goodput-lost  makespan(ms)");
+    let mut prev_recovery = -1.0f64;
+    for &frac in repair_fracs {
+        let repair = span * frac;
+        let mut reqs = workload(requests);
+        for r in &mut reqs {
+            r.slo = Some(slo);
+        }
+        let r = run(
+            ClusterConfig {
+                faults: Some(crash_schedule(crash_at, repair, window)),
+                ..Default::default()
+            },
+            reqs,
+        );
+        let fr = r.faults.as_ref().expect("fault report");
+        assert_eq!(fr.crashes, 1);
+        assert_eq!(fr.rejoins, 1);
+        assert!(fr.requests_requeued > 0, "a mid-run crash must evacuate work");
+        assert_eq!(
+            r.fleet.completed + r.fleet.rejected + r.fleet.shed,
+            requests as u64,
+            "conservation under crash"
+        );
+        // The availability story the subsystem exists to tell: the dip
+        // is real, and the fleet climbs back out of it.
+        assert!(
+            fr.slo_dip > 0.0,
+            "a replica crash under calibrated SLOs must dent attainment \
+             (baseline {:.3}, dip {:.3})",
+            fr.baseline_attainment,
+            fr.dip_attainment
+        );
+        assert!(
+            fr.recovered,
+            "the fleet must recover before the run ends (repair {:.1} ms)",
+            repair.as_ms()
+        );
+        let rec = fr.recovery_time.expect("recovered implies a recovery time").value();
+        assert!(
+            rec >= prev_recovery - 1e-9,
+            "recovery time must be monotone in repair time: {:.4} s after {:.4} s",
+            rec,
+            prev_recovery
+        );
+        prev_recovery = rec;
+        println!(
+            "{:>10.1}  {:>4.1}  {:>12.1}  {:>8}  {:>8}  {:>12.0}  {:>12.1}",
+            repair.as_ms(),
+            100.0 * fr.slo_dip,
+            rec * 1e3,
+            fr.requests_requeued,
+            fr.tokens_lost,
+            fr.goodput_lost_tokens,
+            r.makespan().as_ms(),
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"crash\", \"repair_ms\": {:.3}, \"slo_dip\": {:.6}, \
+             \"baseline_attainment\": {:.6}, \"dip_attainment\": {:.6}, \
+             \"recovery_ms\": {:.3}, \"recovered\": {}, \"requeued\": {}, \
+             \"reprefilled\": {}, \"tokens_lost\": {}, \"goodput_lost\": {:.1}, \
+             \"makespan_ms\": {:.3}}}",
+            repair.as_ms(),
+            fr.slo_dip,
+            fr.baseline_attainment,
+            fr.dip_attainment,
+            rec * 1e3,
+            fr.recovered,
+            fr.requests_requeued,
+            fr.requests_reprefilled,
+            fr.tokens_lost,
+            fr.goodput_lost_tokens,
+            r.makespan().as_ms(),
+        ));
+    }
+
+    // ── Module blast radius: striped vs hashed placement ──
+    println!("\n== hottest-module kill, striped vs hashed chain placement ==");
+    let chain_len = 128;
+    let module_at = Seconds::us(600.0) * 20.0; // after all 16 chains exist
+    let mut blast = Vec::new();
+    for placement in [PoolPlacement::Striped, PoolPlacement::Hashed] {
+        let r = run(
+            ClusterConfig {
+                prefix_cache: Some(PrefixCacheConfig {
+                    modules: 8,
+                    placement,
+                    ..Default::default()
+                }),
+                faults: Some(FaultSchedule {
+                    events: vec![FaultSpec {
+                        at: module_at,
+                        kind: FaultKind::ModuleFailure { module: ModuleSel::Hottest },
+                    }],
+                    ..Default::default()
+                }),
+                ..Default::default()
+            },
+            uniform_sessions(requests, chain_len),
+        );
+        let fr = r.faults.as_ref().expect("fault report");
+        assert_eq!(fr.module_failures, 1);
+        assert!(
+            fr.extents_invalidated > 0,
+            "{placement:?}: a hottest-module kill over 16 live chains must invalidate extents"
+        );
+        println!(
+            "{placement:?}: invalidated {:.1} MB / {} extents, reprefilled {}",
+            fr.bytes_invalidated.value() / 1e6,
+            fr.extents_invalidated,
+            fr.requests_reprefilled,
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"module\", \"placement\": {}, \"bytes_invalidated\": {:.1}, \
+             \"extents_invalidated\": {}, \"reprefilled\": {}, \"makespan_ms\": {:.3}}}",
+            common::json_str(&format!("{placement:?}")),
+            fr.bytes_invalidated.value(),
+            fr.extents_invalidated,
+            fr.requests_reprefilled,
+            r.makespan().as_ms(),
+        ));
+        blast.push(fr.extents_invalidated);
+    }
+    // 16 equal-depth chains into 8 modules: striping spreads exactly 2
+    // per module, hashing collides to ≥ 2 by pigeonhole — the pooled
+    // concentration risk the paper's shared TAB design accepts.
+    assert!(
+        blast[1] >= blast[0] && blast[0] > 0,
+        "hashed blast radius {} must be ≥ striped {} (> 0)",
+        blast[1],
+        blast[0]
+    );
+
+    // ── Link degradation: squeezed budgets stretch fabric waits ──
+    println!("\n== link degradation under shared arbitration ==");
+    let base = run(featureful(), workload(requests));
+    assert!(
+        base.fleet.fabric_wait.value() > 0.0,
+        "the contended baseline must queue on the fabric at all"
+    );
+    let deg = run(
+        ClusterConfig {
+            faults: Some(FaultSchedule {
+                events: vec![FaultSpec {
+                    at: Seconds::ZERO,
+                    kind: FaultKind::LinkDegrade {
+                        factor: 0.05,
+                        duration: span * 2.0,
+                    },
+                }],
+                ..Default::default()
+            }),
+            ..featureful()
+        },
+        workload(requests),
+    );
+    let fr = deg.faults.as_ref().expect("fault report");
+    assert_eq!(fr.link_degrades, 1);
+    assert!(
+        deg.fleet.fabric_wait.value() > base.fleet.fabric_wait.value(),
+        "a 20x budget squeeze must stretch fabric queueing: {:.4} ms vs {:.4} ms",
+        deg.fleet.fabric_wait.as_ms(),
+        base.fleet.fabric_wait.as_ms()
+    );
+    assert!(
+        deg.makespan().value() >= base.makespan().value() - 1e-12,
+        "degraded links cannot finish the run sooner"
+    );
+    println!(
+        "fabric wait {:.3} ms → {:.3} ms, makespan {:.1} ms → {:.1} ms",
+        base.fleet.fabric_wait.as_ms(),
+        deg.fleet.fabric_wait.as_ms(),
+        base.makespan().as_ms(),
+        deg.makespan().as_ms(),
+    );
+    json_rows.push(format!(
+        "{{\"section\": \"degrade\", \"factor\": 0.05, \"fabric_wait_base_ms\": {:.4}, \
+         \"fabric_wait_degraded_ms\": {:.4}, \"makespan_base_ms\": {:.3}, \
+         \"makespan_degraded_ms\": {:.3}}}",
+        base.fleet.fabric_wait.as_ms(),
+        deg.fleet.fabric_wait.as_ms(),
+        base.makespan().as_ms(),
+        deg.makespan().as_ms(),
+    ));
+
+    if common::json_requested() {
+        common::write_rows_json("fault_sweep", &json_rows);
+    }
+}

@@ -12,6 +12,7 @@ use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
 use crate::coordinator::prefix_cache::PrefixCacheConfig;
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode};
+use crate::faults::FaultSchedule;
 use crate::units::{Bandwidth, Bytes};
 use std::collections::HashMap;
 
@@ -40,6 +41,7 @@ pub const SERVE_FLAGS: &[&str] = &[
     "shed-tokens",
     "seed",
     "fabric-contention",
+    "faults",
 ];
 
 /// Serve flags that may appear without a value (`--autoscale` ≡
@@ -259,6 +261,19 @@ pub fn parse_fabric_contention(flags: &HashMap<String, String>) -> Result<Conten
             })?;
             Ok(ContentionConfig { mode, ..Default::default() })
         }
+    }
+}
+
+/// Build the fault schedule from `--faults SPEC` (DESIGN.md §Faults),
+/// validated against the fleet size. An absent flag is `None` — the
+/// cluster's fault paths stay a strict bit-identical passthrough.
+pub fn parse_faults(
+    flags: &HashMap<String, String>,
+    replicas: usize,
+) -> Result<Option<FaultSchedule>> {
+    match flags.get("faults") {
+        None => Ok(None),
+        Some(v) => Ok(Some(FaultSchedule::parse(v, replicas)?)),
     }
 }
 
@@ -487,6 +502,30 @@ mod tests {
     }
 
     #[test]
+    fn faults_flag_builds_the_schedule() {
+        // Absent → None: the fault paths stay passthrough.
+        let f = parse_flags("serve", &args(&[]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        assert!(parse_faults(&f, 4).unwrap().is_none());
+        // An explicit schedule parses against the fleet size.
+        let f = parse_flags(
+            "serve",
+            &args(&["--faults", "crash@0.5:r1:repair0.2,window=0.1"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let fs = parse_faults(&f, 4).unwrap().unwrap();
+        assert_eq!(fs.events.len(), 1);
+        // A crash target outside the fleet is rejected at parse time.
+        assert!(parse_faults(&f, 1).is_err());
+        // Garbage specs fail with the grammar vocabulary.
+        let f = parse_flags("serve", &args(&["--faults", "meteor@1"]), SERVE_FLAGS, SERVE_BARE)
+            .unwrap();
+        let e = parse_faults(&f, 4).unwrap_err().to_string();
+        assert!(e.contains("crash@"), "{e}");
+    }
+
+    #[test]
     fn whitelists_cover_the_documented_surface() {
         // The traffic selector flags must all be valid serve flags, and
         // every bare switch must be in the whitelist too — otherwise a
@@ -503,6 +542,7 @@ mod tests {
         assert!(SERVE_FLAGS.contains(&"prefix-cache"));
         assert!(SERVE_FLAGS.contains(&"prefix-cache-gb"));
         assert!(SERVE_FLAGS.contains(&"fabric-contention"));
+        assert!(SERVE_FLAGS.contains(&"faults"));
         assert!(PAGE_FLAGS.contains(&"fabric-contention"));
     }
 }

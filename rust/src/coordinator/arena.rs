@@ -41,6 +41,9 @@ pub struct ArenaEntry {
     pub cached_prefix: usize,
     /// TAB fetch stall charged to this request's prefill step.
     pub prefix_fetch: Seconds,
+    /// TAB module the cached prefix lives on (mirrors
+    /// `Request::prefix_home`; revoked on module failure).
+    pub prefix_home: Option<usize>,
     /// Session-affinity hash, precomputed at allocation so routing
     /// never needs the prompt bytes.
     affinity: u64,
@@ -98,6 +101,7 @@ impl RequestArena {
             slo: req.slo,
             cached_prefix: req.cached_prefix,
             prefix_fetch: req.prefix_fetch,
+            prefix_home: req.prefix_home,
             affinity,
             prompt: req.prompt,
             retired: false,
@@ -147,6 +151,7 @@ mod tests {
             slo: None,
             cached_prefix: 0,
             prefix_fetch: Seconds::ZERO,
+            prefix_home: None,
         }
     }
 

@@ -53,6 +53,22 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Take the whole queue in FIFO order — the crash-evacuation path
+    /// (DESIGN.md §Faults): a dead replica's queued requests leave
+    /// through here to be re-routed by the cluster.
+    pub fn drain_queue(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Visit every queued request mutably, FIFO order. The fault layer
+    /// uses this to revoke cached-prefix grants whose TAB module died
+    /// while the request was still waiting.
+    pub fn for_each_queued_mut(&mut self, mut f: impl FnMut(&mut Request)) {
+        for r in self.queue.iter_mut() {
+            f(r);
+        }
+    }
+
     /// Form the next prefill batch: up to `room` requests (bounded by
     /// `max_batch`), padded to the longest member rounded up to the tile.
     pub fn next_batch(&mut self, room: usize) -> Option<PrefillBatch> {

@@ -41,6 +41,12 @@ use std::collections::BinaryHeap;
 /// why promoting them to global events changes router observations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EventKind {
+    /// Fault injection: entry `idx` of the cluster's fault timeline
+    /// fires (DESIGN.md §Faults). Ranked before every other kind so a
+    /// fault scheduled exactly at a tick or arrival hits the fleet the
+    /// tick/arrival then observes — mirroring the stepping loop's
+    /// fault-before-tick-before-arrival ordering at equal instants.
+    Fault { idx: usize },
     /// Elastic-fleet autoscaler evaluation at a fixed cadence.
     AutoscaleTick,
     /// A disaggregated prefill→decode KV handoff lands on `replica`.
@@ -63,12 +69,13 @@ impl EventKind {
     /// the next admission reads router state.
     fn class(self) -> u8 {
         match self {
-            EventKind::AutoscaleTick => 0,
-            EventKind::HandoffDone { .. } => 1,
-            EventKind::MigrationDone { .. } => 2,
-            EventKind::PrefillDone { .. } => 3,
-            EventKind::DecodeTick { .. } => 4,
-            EventKind::Arrival { .. } => 5,
+            EventKind::Fault { .. } => 0,
+            EventKind::AutoscaleTick => 1,
+            EventKind::HandoffDone { .. } => 2,
+            EventKind::MigrationDone { .. } => 3,
+            EventKind::PrefillDone { .. } => 4,
+            EventKind::DecodeTick { .. } => 5,
+            EventKind::Arrival { .. } => 6,
         }
     }
 }
@@ -216,7 +223,9 @@ mod tests {
         let t = Seconds::new(1.0);
         assert!(cal.push(t, EventKind::Arrival { req: ReqId(0) }));
         assert!(cal.push(t, EventKind::AutoscaleTick));
+        assert!(cal.push(t, EventKind::Fault { idx: 0 }));
         assert!(cal.push(t, EventKind::Arrival { req: ReqId(1) }));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::Fault { idx: 0 }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::AutoscaleTick));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(0) }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(1) }));

@@ -45,6 +45,9 @@ use super::scheduler::{SchedMode, Scheduler};
 use crate::config::{fh4_rack, SystemConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
+use crate::faults::{
+    recovery_stats, CompletionEvent, FaultKind, FaultReport, FaultSchedule, FaultSpec, ModuleSel,
+};
 use crate::models::arch::ModelArch;
 use crate::models::memory;
 use crate::units::{Bandwidth, Bytes, Seconds};
@@ -125,6 +128,13 @@ pub struct ClusterConfig {
     /// spill bytes (DESIGN.md §Fabric-Contention names this the next
     /// consumer to route through the ledger).
     pub contention: ContentionConfig,
+    /// Deterministic fault injection (DESIGN.md §Faults): replica
+    /// crashes with re-queue and timed rejoin, TAB-module failures that
+    /// invalidate pool-resident prefix KV, and link-degradation windows
+    /// on the contention ledger. `None` — and `Some` with an empty
+    /// schedule — are strict passthroughs: both cores run the exact
+    /// code paths (and floats) of a fault-free build.
+    pub faults: Option<FaultSchedule>,
 }
 
 impl Default for ClusterConfig {
@@ -138,6 +148,7 @@ impl Default for ClusterConfig {
             autoscale: None,
             prefix_cache: None,
             contention: ContentionConfig::default(),
+            faults: None,
         }
     }
 }
@@ -182,6 +193,9 @@ pub struct ClusterReport {
     /// Shared-fabric arbitration observables: busy fraction, queueing
     /// percentiles, per-module imbalance (None with contention off).
     pub fabric: Option<FabricReport>,
+    /// Fault-injection observables — per-class counts, blast radius and
+    /// windowed recovery (None when no schedule was configured).
+    pub faults: Option<FaultReport>,
     /// Whether the elastic autoscaler drove this run.
     pub elastic: bool,
     /// Provisioned capacity: ∫ active-replica-count dt over the run —
@@ -299,6 +313,10 @@ impl ClusterReport {
                 self.scale_events.len(),
             ));
         }
+        if let Some(fr) = &self.faults {
+            s.push_str(&fr.summary_line());
+            s.push('\n');
+        }
         s
     }
 }
@@ -310,6 +328,45 @@ struct ReplicaSnap<'a> {
     metrics: &'a Metrics,
     handoffs: u64,
     spilled: Bytes,
+    /// Completion trace for the fault-recovery report — empty unless a
+    /// fault schedule armed trace recording on the replica.
+    trace: &'a [CompletionEvent],
+}
+
+/// Mutable fault-injection state of one run (DESIGN.md §Faults): the
+/// concrete timeline both cores replay, plus the counters the
+/// [`FaultReport`] aggregates at report time.
+struct FaultState {
+    /// [`FaultSchedule::timeline`] — explicit faults plus the rejoins
+    /// derived from crash repair times, in stable time order. Empty
+    /// means strict passthrough: no fault code path executes.
+    timeline: Vec<FaultSpec>,
+    crashes: u64,
+    rejoins: u64,
+    module_failures: u64,
+    link_degrades: u64,
+    requeued: u64,
+    reprefilled: u64,
+    tokens_lost: u64,
+    bytes_invalidated: Bytes,
+    extents_invalidated: u64,
+}
+
+impl FaultState {
+    fn new(timeline: Vec<FaultSpec>) -> Self {
+        FaultState {
+            timeline,
+            crashes: 0,
+            rejoins: 0,
+            module_failures: 0,
+            link_degrades: 0,
+            requeued: 0,
+            reprefilled: 0,
+            tokens_lost: 0,
+            bytes_invalidated: Bytes::ZERO,
+            extents_invalidated: 0,
+        }
+    }
 }
 
 /// The multi-replica cluster simulator.
@@ -353,6 +410,9 @@ pub struct Cluster {
     /// Next autoscaler decision time.
     next_scale: Seconds,
     scale_events: Vec<(Seconds, usize)>,
+    /// Fault timeline and counters (DESIGN.md §Faults); an empty
+    /// timeline keeps every fault code path dormant.
+    fstate: FaultState,
 }
 
 impl Cluster {
@@ -385,12 +445,95 @@ impl Cluster {
         };
         // Shared-fabric arbitration: one ledger for the whole rack, one
         // port per replica, budgets from the (homogeneous) node config.
-        let fabric = match cfg.contention.mode {
+        let mut fabric = match cfg.contention.mode {
             ContentionMode::Off => None,
             _ => Some(FabricClock::for_system(
                 &systems[0],
                 cfg.contention.resolved(systems.len()),
             )?),
+        };
+        // Fault schedule: validate against the fleet it will hit, derive
+        // the concrete timeline, and register the (static) degrade
+        // profile on the contention clock so both cores price every
+        // fabric window identically (DESIGN.md §Faults).
+        let fault_timeline = match &cfg.faults {
+            Some(fs) => {
+                fs.validate()?;
+                let timeline = fs.timeline();
+                let mut down = vec![false; systems.len()];
+                for spec in &timeline {
+                    match spec.kind {
+                        FaultKind::ReplicaCrash { replica, .. } => {
+                            if cfg.disaggregate.is_some() {
+                                return Err(FhError::Config(
+                                    "replica-crash faults drive aggregated fleets only \
+                                     (a dead prefill pool has no evacuation target; \
+                                     drop --disaggregate)"
+                                        .into(),
+                                ));
+                            }
+                            if replica >= systems.len() {
+                                return Err(FhError::Config(format!(
+                                    "fault schedule crashes replica {replica} but the \
+                                     fleet has {}",
+                                    systems.len()
+                                )));
+                            }
+                            if down[replica] {
+                                return Err(FhError::Config(format!(
+                                    "replica {replica} crashes again before its rejoin"
+                                )));
+                            }
+                            down[replica] = true;
+                            if down.iter().all(|&d| d) {
+                                return Err(FhError::Config(
+                                    "fault schedule takes the whole fleet down at once \
+                                     — nothing would serve the re-queued requests"
+                                        .into(),
+                                ));
+                            }
+                        }
+                        FaultKind::ReplicaRejoin { replica } => {
+                            debug_assert!(
+                                replica < systems.len(),
+                                "rejoins derive from bounds-checked crashes"
+                            );
+                            down[replica] = false;
+                        }
+                        FaultKind::ModuleFailure { module } => {
+                            let Some(pc) = &cfg.prefix_cache else {
+                                return Err(FhError::Config(
+                                    "module-failure faults kill shared prefix-KV extents \
+                                     — enable the prefix cache (--prefix-cache)"
+                                        .into(),
+                                ));
+                            };
+                            if let ModuleSel::Index(m) = module {
+                                if m >= pc.modules {
+                                    return Err(FhError::Config(format!(
+                                        "fault schedule fails TAB module {m} but the \
+                                         pool spreads over {}",
+                                        pc.modules
+                                    )));
+                                }
+                            }
+                        }
+                        FaultKind::LinkDegrade { factor, duration } => {
+                            let Some(clock) = fabric.as_mut() else {
+                                return Err(FhError::Config(
+                                    "link-degrade faults scale contention budgets — \
+                                     enable arbitration (--fabric-contention shared \
+                                     or per-module)"
+                                        .into(),
+                                ));
+                            };
+                            clock.degrade(spec.at, spec.at + duration, factor);
+                        }
+                    }
+                }
+                timeline
+            }
+            None => Vec::new(),
         };
         let mut replicas = Vec::with_capacity(systems.len());
         let mut names = Vec::with_capacity(systems.len());
@@ -408,7 +551,13 @@ impl Cluster {
                 backend = backend.with_kv_budget(budget);
             }
             let batcher = Batcher::new(cfg.max_batch, 64, model.max_seq as usize);
-            replicas.push(Scheduler::new(backend, batcher).with_mode(role));
+            let mut sched = Scheduler::new(backend, batcher).with_mode(role);
+            if !fault_timeline.is_empty() {
+                // The recovery report needs a completion trace; healthy
+                // runs record nothing (passthrough).
+                sched = sched.with_trace();
+            }
+            replicas.push(sched);
             roles.push(role);
         }
         let mut router = Router::new(serving_pool, cfg.policy);
@@ -461,6 +610,7 @@ impl Cluster {
             last_account: Seconds::ZERO,
             next_scale,
             scale_events: Vec::new(),
+            fstate: FaultState::new(fault_timeline),
         })
     }
 
@@ -611,6 +761,13 @@ impl Cluster {
             debug_assert!(ok, "sorted arrivals cannot land in the past");
         }
         let mut evs = self.build_event_replicas();
+        // The whole fault timeline is known up front — schedule it all;
+        // at equal instants the calendar fires faults before ticks and
+        // arrivals (class order), and earlier-listed faults first (seq).
+        for (i, spec) in self.fstate.timeline.iter().enumerate() {
+            let ok = cal.push(spec.at, EventKind::Fault { idx: i });
+            debug_assert!(ok, "fault times are validated non-negative");
+        }
         if self.cfg.autoscale.is_some() {
             // Exactly one tick lives in the calendar at a time; each pop
             // reschedules the next (or drops it when the run is over).
@@ -619,6 +776,18 @@ impl Cluster {
         }
         while let Some(ev) = cal.pop() {
             match ev.kind {
+                EventKind::Fault { idx } => {
+                    // Advance-then-apply: bring the fleet to the fault
+                    // instant only when something is actually in flight
+                    // — a fault landing on an idle fleet (e.g. a rejoin
+                    // long after the drain) must not stretch makespan.
+                    // The stepping core applies the same rule.
+                    let t = ev.time;
+                    if evs.iter().any(|r| r.pending() > 0) {
+                        self.advance_event_replicas(&arena, &mut evs, t)?;
+                    }
+                    self.apply_fault_event(&mut arena, &mut evs, idx, t)?;
+                }
                 EventKind::AutoscaleTick => {
                     let a = self.cfg.autoscale.expect("tick implies autoscale");
                     // Mirror of the stepping drain loop's `any pending`
@@ -687,13 +856,18 @@ impl Cluster {
                 if let Some(budget) = self.cfg.kv_budget {
                     backend = backend.with_kv_budget(budget);
                 }
-                EventReplica::new(
+                let ev = EventReplica::new(
                     backend,
                     role,
                     self.cfg.max_batch,
                     64,
                     self.model.max_seq as usize,
-                )
+                );
+                if self.fstate.timeline.is_empty() {
+                    ev
+                } else {
+                    ev.with_trace()
+                }
             })
             .collect()
     }
@@ -740,6 +914,7 @@ impl Cluster {
                 let e = arena.get_mut(rid);
                 e.cached_prefix = hit.tokens;
                 e.prefix_fetch = hit.fetch;
+                e.prefix_home = hit.home;
             }
             let nmc = pc.nmc_gather();
             let inserted = pc.insert(arena.get(rid).prompt(), idx);
@@ -760,7 +935,13 @@ impl Cluster {
             }
         }
         evs[idx].submit(rid);
-        arena.retire_prompt(rid);
+        // Prompt retirement is the event core's memory win, but a fault
+        // schedule may need the tokens again — crash evacuees re-probe
+        // the cache and re-publish on re-admission — so faulted runs
+        // keep them resident. Healthy runs retire as before.
+        if self.fstate.timeline.is_empty() {
+            arena.retire_prompt(rid);
+        }
         Ok(())
     }
 
@@ -836,20 +1017,267 @@ impl Cluster {
         }
     }
 
+    /// Apply fault `idx` of the timeline at instant `t` — event-core
+    /// side. The stepping twin is [`Cluster::apply_fault_stepping`];
+    /// every router/cache/fabric mutation must match it exactly.
+    fn apply_fault_event(
+        &mut self,
+        arena: &mut RequestArena,
+        evs: &mut [EventReplica],
+        idx: usize,
+        t: Seconds,
+    ) -> Result<()> {
+        match self.fstate.timeline[idx].kind {
+            FaultKind::ReplicaCrash { replica, .. } => {
+                self.fstate.crashes += 1;
+                let (evacuees, lost) = evs[replica].evacuate();
+                // Release every evacuee's routing charge before the
+                // replica leaves the pool, then re-route in evacuation
+                // order (queue FIFO, then the active set) — the router
+                // must observe the dead replica with zero load.
+                for &rid in &evacuees {
+                    self.router.complete_work(replica, arena.get(rid).work_tokens());
+                }
+                self.router.mark_dead(replica);
+                self.fstate.tokens_lost += lost;
+                self.fstate.requeued += evacuees.len() as u64;
+                for rid in evacuees {
+                    self.readmit_event(arena, evs, rid, t);
+                }
+            }
+            FaultKind::ReplicaRejoin { replica } => {
+                // Back in the pool with cold caches: zero outstanding
+                // load, no warm pages — the router will refill it.
+                self.router.mark_alive(replica);
+                self.fstate.rejoins += 1;
+            }
+            FaultKind::ModuleFailure { module } => {
+                let pc = self
+                    .prefix_cache
+                    .as_mut()
+                    .expect("validated: module faults require the prefix cache");
+                let m = match module {
+                    ModuleSel::Index(i) => i,
+                    ModuleSel::Hottest => pc.hottest_module(),
+                };
+                let (bytes, extents) = pc.fail_module(m);
+                self.fstate.module_failures += 1;
+                self.fstate.bytes_invalidated += bytes;
+                self.fstate.extents_invalidated += extents;
+                // Queued requests holding a grant on the dead module
+                // must prefill those tokens after all; decodes already
+                // running used their local HBM copy and are unaffected.
+                let mut revoked = 0u64;
+                for ev in evs.iter() {
+                    let ids: Vec<ReqId> = ev.queued_ids().collect();
+                    for rid in ids {
+                        let e = arena.get_mut(rid);
+                        if e.cached_prefix > 0 && e.prefix_home == Some(m) {
+                            e.cached_prefix = 0;
+                            e.prefix_fetch = Seconds::ZERO;
+                            e.prefix_home = None;
+                            revoked += 1;
+                        }
+                    }
+                }
+                self.fstate.reprefilled += revoked;
+            }
+            FaultKind::LinkDegrade { .. } => {
+                // The degrade profile registered on the contention clock
+                // at construction (the schedule is static); the event
+                // only marks the injection for the report.
+                self.fstate.link_degrades += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-route one crash evacuee at fault time `t` — the admission path
+    /// minus shedding (an already-admitted request is never dropped at
+    /// the door) with the prior prefix grant revoked: the in-flight
+    /// fetch died with the replica, so the request re-probes the pool.
+    fn readmit_event(&mut self, arena: &mut RequestArena, evs: &mut [EventReplica], rid: ReqId, t: Seconds) {
+        {
+            let e = arena.get_mut(rid);
+            if e.cached_prefix > 0 {
+                self.fstate.reprefilled += 1;
+            }
+            e.cached_prefix = 0;
+            e.prefix_fetch = Seconds::ZERO;
+            e.prefix_home = None;
+        }
+        let hit = match self.prefix_cache.as_mut() {
+            Some(pc) => pc.lookup(arena.get(rid).prompt()),
+            None => super::prefix_cache::PrefixHit::MISS,
+        };
+        let warm = if hit.tokens > 0 { hit.replica } else { None };
+        let (prompt_len, affinity, charged) = {
+            let e = arena.get(rid);
+            // Crash faults are aggregated-only, so the charge is always
+            // the full work estimate.
+            (e.prompt_len, e.affinity_key(), e.work_tokens())
+        };
+        let idx = self.router.route_work_warm(affinity, charged, warm);
+        if !evs[idx].admits(prompt_len) {
+            self.router.unroute(idx, charged);
+            self.rejected += 1;
+            return;
+        }
+        if let Some(pc) = self.prefix_cache.as_mut() {
+            {
+                let e = arena.get_mut(rid);
+                e.cached_prefix = hit.tokens;
+                e.prefix_fetch = hit.fetch;
+                e.prefix_home = hit.home;
+            }
+            let nmc = pc.nmc_gather();
+            let inserted = pc.insert(arena.get(rid).prompt(), idx);
+            if let Some(clock) = self.fabric.as_mut() {
+                let lat = evs[idx].backend().sys.latencies;
+                if hit.tokens > 0 {
+                    let b = clock.book(t, hit.bytes, idx, affinity);
+                    arena.get_mut(rid).prefix_fetch = if nmc {
+                        lat.tab_read + b.queueing
+                    } else {
+                        lat.tab_read + (b.completion - t)
+                    };
+                    self.fabric_wait += b.queueing;
+                }
+                if inserted > 0 {
+                    clock.book(t, PREFIX_PUBLISH_META_BYTES, idx, affinity);
+                }
+            }
+        }
+        evs[idx].submit(rid);
+    }
+
+    /// Stepping-core twin of [`Cluster::apply_fault_event`].
+    fn apply_fault_stepping(&mut self, spec: FaultSpec, t: Seconds) -> Result<()> {
+        match spec.kind {
+            FaultKind::ReplicaCrash { replica, .. } => {
+                self.fstate.crashes += 1;
+                let (evacuees, lost) = self.replicas[replica].evacuate();
+                for r in &evacuees {
+                    self.router.complete_work(replica, r.work_tokens());
+                }
+                self.router.mark_dead(replica);
+                self.fstate.tokens_lost += lost;
+                self.fstate.requeued += evacuees.len() as u64;
+                for r in evacuees {
+                    self.readmit_stepping(r, t);
+                }
+            }
+            FaultKind::ReplicaRejoin { replica } => {
+                self.router.mark_alive(replica);
+                self.fstate.rejoins += 1;
+            }
+            FaultKind::ModuleFailure { module } => {
+                let pc = self
+                    .prefix_cache
+                    .as_mut()
+                    .expect("validated: module faults require the prefix cache");
+                let m = match module {
+                    ModuleSel::Index(i) => i,
+                    ModuleSel::Hottest => pc.hottest_module(),
+                };
+                let (bytes, extents) = pc.fail_module(m);
+                self.fstate.module_failures += 1;
+                self.fstate.bytes_invalidated += bytes;
+                self.fstate.extents_invalidated += extents;
+                let mut revoked = 0u64;
+                for r in self.replicas.iter_mut() {
+                    revoked += r.revoke_cached_prefix(|h| h == m) as u64;
+                }
+                self.fstate.reprefilled += revoked;
+            }
+            FaultKind::LinkDegrade { .. } => {
+                self.fstate.link_degrades += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stepping-core twin of [`Cluster::readmit_event`].
+    fn readmit_stepping(&mut self, mut req: Request, t: Seconds) {
+        if req.cached_prefix > 0 {
+            self.fstate.reprefilled += 1;
+        }
+        req.cached_prefix = 0;
+        req.prefix_fetch = Seconds::ZERO;
+        req.prefix_home = None;
+        let hit = match self.prefix_cache.as_mut() {
+            Some(pc) => pc.lookup(&req.prompt),
+            None => super::prefix_cache::PrefixHit::MISS,
+        };
+        let warm = if hit.tokens > 0 { hit.replica } else { None };
+        let charged = req.work_tokens();
+        let idx = self.router.route_work_warm(req.affinity_key(), charged, warm);
+        if !self.replicas[idx].admits(&req) {
+            self.router.unroute(idx, charged);
+            self.rejected += 1;
+            return;
+        }
+        if let Some(pc) = self.prefix_cache.as_mut() {
+            req.cached_prefix = hit.tokens;
+            req.prefix_fetch = hit.fetch;
+            req.prefix_home = hit.home;
+            let nmc = pc.nmc_gather();
+            let inserted = pc.insert(&req.prompt, idx);
+            if let Some(clock) = self.fabric.as_mut() {
+                let lat = self.replicas[idx].backend().sys.latencies;
+                if hit.tokens > 0 {
+                    let b = clock.book(t, hit.bytes, idx, req.affinity_key());
+                    req.prefix_fetch = if nmc {
+                        lat.tab_read + b.queueing
+                    } else {
+                        lat.tab_read + (b.completion - t)
+                    };
+                    self.fabric_wait += b.queueing;
+                }
+                if inserted > 0 {
+                    clock.book(t, PREFIX_PUBLISH_META_BYTES, idx, req.affinity_key());
+                }
+            }
+        }
+        self.replicas[idx].submit_all(vec![req]);
+    }
+
     /// Serve a workload to completion with the original tick-stepping
     /// core. Kept as the reduced oracle for the differential equivalence
     /// suite — production callers use [`Cluster::run`].
     pub fn run_stepping(&mut self, mut reqs: Vec<Request>) -> Result<ClusterReport> {
         reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let timeline: Vec<FaultSpec> = self.fstate.timeline.clone();
+        let mut fi = 0usize;
         for mut req in reqs {
-            // Autoscaler decisions fire on their own cadence, interleaved
-            // in virtual-time order with the arrivals.
-            if let Some(a) = self.cfg.autoscale {
-                while self.next_scale <= req.arrival {
-                    let t = self.next_scale;
-                    self.advance_to(t)?;
-                    self.autoscale_tick(t);
-                    self.next_scale += a.interval;
+            // Faults and autoscaler decisions fire on their own cadence,
+            // interleaved in virtual-time order with the arrivals. Ties
+            // follow the event calendar's class order: fault, then tick,
+            // then the arrival itself.
+            loop {
+                let fault_due = timeline.get(fi).map(|s| s.at).filter(|&ft| ft <= req.arrival);
+                let tick_due = self
+                    .cfg
+                    .autoscale
+                    .filter(|_| self.next_scale <= req.arrival)
+                    .map(|a| (self.next_scale, a.interval));
+                match (fault_due, tick_due) {
+                    (Some(ft), tick) if tick.map_or(true, |(ts, _)| ft <= ts) => {
+                        // An idle-fleet fault must not stretch the
+                        // makespan: only advance when work is in flight.
+                        if self.replicas.iter().any(|r| r.pending() > 0) {
+                            self.advance_to(ft)?;
+                        }
+                        let spec = timeline[fi];
+                        self.apply_fault_stepping(spec, ft)?;
+                        fi += 1;
+                    }
+                    (_, Some((ts, interval))) => {
+                        self.advance_to(ts)?;
+                        self.autoscale_tick(ts);
+                        self.next_scale += interval;
+                    }
+                    _ => break,
                 }
             }
             self.advance_to(req.arrival)?;
@@ -891,6 +1319,7 @@ impl Cluster {
             if let Some(pc) = self.prefix_cache.as_mut() {
                 req.cached_prefix = hit.tokens;
                 req.prefix_fetch = hit.fetch;
+                req.prefix_home = hit.home;
                 let nmc = pc.nmc_gather();
                 // Publish this request's prefix KV: produced into the
                 // pool by `idx`, visible to every replica from the next
@@ -937,12 +1366,35 @@ impl Cluster {
         // charge whatever the controller provisions for the tail rather
         // than freezing at the last arrival's active set. (Autoscale is
         // aggregated-only, so the simple any-pending loop is safe.)
-        if let Some(a) = self.cfg.autoscale {
-            while self.replicas.iter().any(|r| r.pending() > 0) {
-                let t = self.next_scale;
-                self.advance_to(t)?;
-                self.autoscale_tick(t);
-                self.next_scale += a.interval;
+        // Faults past the last arrival interleave here in time order;
+        // ticks cease permanently on the first no-backlog check, exactly
+        // like the event calendar dropping an AutoscaleTick once the
+        // arrivals are exhausted and nothing is pending.
+        let mut ticking = self.cfg.autoscale.is_some();
+        loop {
+            match timeline.get(fi).map(|s| s.at) {
+                Some(ft) if !ticking || ft <= self.next_scale => {
+                    if self.replicas.iter().any(|r| r.pending() > 0) {
+                        self.advance_to(ft)?;
+                    }
+                    let spec = timeline[fi];
+                    self.apply_fault_stepping(spec, ft)?;
+                    fi += 1;
+                }
+                _ => {
+                    if !ticking {
+                        break;
+                    }
+                    if !self.replicas.iter().any(|r| r.pending() > 0) {
+                        ticking = false;
+                        continue;
+                    }
+                    let a = self.cfg.autoscale.expect("ticking implies autoscale");
+                    let t = self.next_scale;
+                    self.advance_to(t)?;
+                    self.autoscale_tick(t);
+                    self.next_scale += a.interval;
+                }
             }
         }
         // Drain. Prefill/serving pool first; in disaggregated mode its
@@ -987,6 +1439,7 @@ impl Cluster {
                     .kv_pressure()
                     .map(|kv| kv.spilled_peak)
                     .unwrap_or(Bytes::ZERO),
+                trace: r.trace(),
             })
             .collect();
         let gpus_per_node = self
@@ -1011,6 +1464,7 @@ impl Cluster {
                     .kv_pressure()
                     .map(|kv| kv.spilled_peak)
                     .unwrap_or(Bytes::ZERO),
+                trace: r.trace(),
             })
             .collect();
         let gpus_per_node = evs
@@ -1051,12 +1505,42 @@ impl Cluster {
                 kv_spilled_peak: r.spilled,
             });
         }
+        // Fault accounting: counters from the injection state, recovery
+        // statistics from the merged per-replica completion traces
+        // (empty schedule ⇒ the all-healthy FaultReport::empty shape).
+        let faults = self.cfg.faults.as_ref().map(|fs| {
+            let mut fr = FaultReport::empty(fs);
+            fr.crashes = self.fstate.crashes;
+            fr.rejoins = self.fstate.rejoins;
+            fr.module_failures = self.fstate.module_failures;
+            fr.link_degrades = self.fstate.link_degrades;
+            fr.requests_requeued = self.fstate.requeued;
+            fr.requests_reprefilled = self.fstate.reprefilled;
+            fr.tokens_lost = self.fstate.tokens_lost;
+            fr.bytes_invalidated = self.fstate.bytes_invalidated;
+            fr.extents_invalidated = self.fstate.extents_invalidated;
+            if let Some(first) = self.fstate.timeline.first().map(|s| s.at) {
+                let mut completions: Vec<CompletionEvent> =
+                    snaps.iter().flat_map(|s| s.trace.iter().copied()).collect();
+                completions.sort_by(|a, b| a.at.value().total_cmp(&b.at.value()));
+                let rs = recovery_stats(&completions, first, fleet.clock, fs.window, fs.epsilon);
+                fr.first_fault = Some(first);
+                fr.baseline_attainment = rs.baseline_attainment;
+                fr.dip_attainment = rs.dip_attainment;
+                fr.slo_dip = rs.slo_dip;
+                fr.recovery_time = rs.recovery_time;
+                fr.recovered = rs.recovered;
+                fr.goodput_lost_tokens = rs.goodput_lost_tokens;
+            }
+            fr
+        });
         ClusterReport {
             model: self.model.name.clone(),
             policy: self.cfg.policy,
             kv_spilled_peak,
             prefix_cache: self.prefix_cache.as_ref().map(|pc| pc.report()),
             fabric: self.fabric.as_ref().map(|c| c.report()),
+            faults,
             fleet,
             per_replica,
             imbalance: self.router.imbalance(),
@@ -1125,6 +1609,7 @@ pub fn demo_serve_cluster(
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
     contention: ContentionConfig,
+    faults: Option<FaultSchedule>,
 ) -> Result<String> {
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     let cfg = ClusterConfig {
@@ -1134,6 +1619,7 @@ pub fn demo_serve_cluster(
         kv_budget,
         prefix_cache,
         contention,
+        faults,
         ..Default::default()
     };
     let mut cluster = Cluster::fh4(total, model, cfg)?;
@@ -1332,6 +1818,7 @@ mod tests {
             None,
             None,
             ContentionConfig::default(),
+            None,
         )
         .unwrap();
         assert!(s.contains("completed 12"), "{s}");
@@ -1351,6 +1838,7 @@ mod tests {
             None,
             Some(PrefixCacheConfig::default()),
             ContentionConfig::default(),
+            None,
         )
         .unwrap();
         assert!(s.contains("completed 12"), "{s}");

@@ -24,6 +24,7 @@ use super::engine::{Backend, SimBackend};
 use super::metrics::Metrics;
 use super::scheduler::SchedMode;
 use crate::error::Result;
+use crate::faults::CompletionEvent;
 use crate::units::Seconds;
 use std::collections::VecDeque;
 
@@ -71,6 +72,11 @@ pub struct EventReplica {
     completed_work: Vec<u64>,
     pub metrics: Metrics,
     clock: Seconds,
+    /// Per-completion trace for windowed recovery analysis (DESIGN.md
+    /// §Faults); armed by [`Self::with_trace`], off (and unallocated) on
+    /// healthy runs.
+    record_trace: bool,
+    trace: Vec<CompletionEvent>,
 }
 
 impl EventReplica {
@@ -96,7 +102,21 @@ impl EventReplica {
             completed_work: Vec::new(),
             metrics: Metrics::default(),
             clock: Seconds::ZERO,
+            record_trace: false,
+            trace: Vec::new(),
         }
+    }
+
+    /// Record a [`CompletionEvent`] per finished request (mirror of
+    /// `Scheduler::with_trace`). Default off.
+    pub fn with_trace(mut self) -> Self {
+        self.record_trace = true;
+        self
+    }
+
+    /// Completion trace recorded under [`Self::with_trace`].
+    pub fn trace(&self) -> &[CompletionEvent] {
+        &self.trace
     }
 
     /// Admission rule mirror (`Batcher::admits` on the frozen prompt
@@ -128,6 +148,28 @@ impl EventReplica {
     /// order (the cluster feeds these to the router).
     pub fn take_completed_work(&mut self) -> Vec<u64> {
         std::mem::take(&mut self.completed_work)
+    }
+
+    /// Crash evacuation (DESIGN.md §Faults): strip every request this
+    /// replica still owns — queue in submission order, then the active
+    /// set in batch order — mirroring `Scheduler::evacuate` (whose
+    /// `batcher.queue ++ future` is exactly submission order). The
+    /// second return is the active set's generated-token count: decode
+    /// progress lost with the replica's local KV.
+    pub fn evacuate(&mut self) -> (Vec<ReqId>, u64) {
+        let mut out: Vec<ReqId> = self.queue.drain(..).collect();
+        let mut lost = 0u64;
+        for a in self.active.drain(..) {
+            lost += a.generated as u64;
+            out.push(a.id);
+        }
+        (out, lost)
+    }
+
+    /// Queued (not yet prefilled) requests, FIFO — the fault layer scans
+    /// these to revoke cached-prefix grants of a dead TAB module.
+    pub fn queued_ids(&self) -> impl Iterator<Item = ReqId> + '_ {
+        self.queue.iter().copied()
     }
 
     /// Handoffs produced since the last call.
@@ -312,6 +354,8 @@ impl EventReplica {
         let clock = self.clock;
         let metrics = &mut self.metrics;
         let completed_work = &mut self.completed_work;
+        let record_trace = self.record_trace;
+        let trace = &mut self.trace;
         self.active.retain(|a| {
             let e = arena.get(a.id);
             if a.generated >= e.max_new_tokens {
@@ -329,6 +373,21 @@ impl EventReplica {
                         metrics.slo_met += 1;
                         metrics.goodput_tokens += a.generated as u64;
                     }
+                }
+                if record_trace {
+                    let slo_ok = e.slo.map(|slo| {
+                        let tpot = if a.generated > 1 {
+                            (total - a.ttft) / (a.generated - 1) as f64
+                        } else {
+                            Seconds::ZERO
+                        };
+                        slo.met(a.ttft, tpot)
+                    });
+                    trace.push(CompletionEvent {
+                        at: clock,
+                        tokens: a.generated as u64,
+                        slo: slo_ok,
+                    });
                 }
                 completed_work.push(a.len as u64);
                 false

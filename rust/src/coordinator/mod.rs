@@ -45,7 +45,7 @@ pub use cluster::{
 };
 pub use engine::{Backend, SimBackend};
 pub use event_core::{EventReplica, LeanHandoff};
-pub use prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport, PrefixHit};
+pub use prefix_cache::{PoolPlacement, PrefixCache, PrefixCacheConfig, PrefixCacheReport, PrefixHit};
 pub use metrics::{LatencyStat, Metrics, STREAMING_THRESHOLD};
 pub use request::{Request, Response, SloTarget};
 pub use router::{Policy, Router};

@@ -31,6 +31,7 @@ use crate::models::arch::ModelArch;
 use crate::models::memory;
 use crate::paging::{PageTable, PlacementPolicy, PolicyKind, TierModel, DEFAULT_PAGE_BYTES};
 use crate::trace::TensorId;
+use crate::traffic::rng::splitmix64;
 use crate::units::{Bandwidth, Bytes, Seconds};
 use std::collections::HashSet;
 
@@ -39,6 +40,23 @@ use std::collections::HashSet;
 /// this cache owns its own table, the offset just keeps debug output
 /// unambiguous).
 const PREFIX_KV_ID_BASE: u64 = 1 << 41;
+
+/// Where a prefix chain's extents live among the TAB pool's physical
+/// modules (DESIGN.md §Faults). Placement is invisible to healthy runs —
+/// it only determines the *blast radius* of a module failure: how many
+/// cached chains one dead module takes with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolPlacement {
+    /// Chains round-robin across modules in insertion order — the
+    /// even-spread baseline; a module failure loses ~1/modules of the
+    /// chains regardless of popularity.
+    Striped,
+    /// A chain homes on `hash(first token) % modules` — content-addressed
+    /// placement (what a consistent-hashed pool allocator does). Popular
+    /// hash buckets concentrate: the hottest module carries ≥ the striped
+    /// share, so its failure invalidates at least as many bytes.
+    Hashed,
+}
 
 /// Knobs of the shared prefix cache ([`super::cluster::ClusterConfig`]).
 #[derive(Debug, Clone, Copy)]
@@ -58,6 +76,11 @@ pub struct PrefixCacheConfig {
     /// NMC gather: attention reads cached KV in-pool, eliding the page-in
     /// — the fetch charge collapses to the fixed TAB command latency.
     pub nmc_gather: bool,
+    /// Physical TAB modules the reserved share spreads over (≥ 1). Only
+    /// the fault layer observes module boundaries.
+    pub modules: usize,
+    /// Chain → module assignment (DESIGN.md §Faults).
+    pub placement: PoolPlacement,
 }
 
 impl Default for PrefixCacheConfig {
@@ -68,6 +91,8 @@ impl Default for PrefixCacheConfig {
             policy: PolicyKind::Lru,
             max_tokens: 1024,
             nmc_gather: false,
+            modules: 8,
+            placement: PoolPlacement::Striped,
         }
     }
 }
@@ -108,11 +133,20 @@ pub struct PrefixHit {
     /// Stall charged to the request's prefill step for fetching the
     /// cached KV out of the pool.
     pub fetch: Seconds,
+    /// TAB module the matched chain is homed on — the fault layer
+    /// revokes hits whose module dies before the request prefills
+    /// (DESIGN.md §Faults).
+    pub home: Option<usize>,
 }
 
 impl PrefixHit {
-    pub const MISS: PrefixHit =
-        PrefixHit { tokens: 0, bytes: Bytes::ZERO, replica: None, fetch: Seconds::ZERO };
+    pub const MISS: PrefixHit = PrefixHit {
+        tokens: 0,
+        bytes: Bytes::ZERO,
+        replica: None,
+        fetch: Seconds::ZERO,
+        home: None,
+    };
 }
 
 /// One trie node: the KV extent of one prompt token, reached through the
@@ -127,6 +161,10 @@ struct Node {
     /// Replica that last inserted/extended through this node (warm-page
     /// probe for the router).
     last_replica: usize,
+    /// TAB module the extent lives on. A whole chain shares its depth-1
+    /// ancestor's home (extents of one prefix are written contiguously),
+    /// so the blast radius of a module failure is chain-granular.
+    home: usize,
 }
 
 /// Cluster-wide shared prefix-KV cache (one instance per
@@ -149,6 +187,11 @@ pub struct PrefixCache {
     /// Monotone access counter; advanced once per node touch so victim
     /// ordering never ties (deterministic eviction).
     tick: u64,
+    /// Live extents per TAB module — the fault layer's blast-radius
+    /// ledger (`Σ module_extents == live`, pinned by the invariants).
+    module_extents: Vec<u64>,
+    /// Depth-1 chains ever created; drives striped round-robin homing.
+    chains: u64,
     pub stats: PrefixCacheStats,
 }
 
@@ -170,6 +213,9 @@ impl PrefixCache {
         }
         if cfg.max_tokens == 0 {
             return Err(FhError::Config("prefix-cache max_tokens must be ≥ 1".into()));
+        }
+        if cfg.modules == 0 {
+            return Err(FhError::Config("prefix-cache modules must be ≥ 1".into()));
         }
         let tiers = TierModel::from_system(sys);
         let pool = tiers.remote.capacity.ok_or_else(|| {
@@ -193,9 +239,12 @@ impl PrefixCache {
                 children: Vec::new(),
                 depth: 0,
                 last_replica: 0,
+                home: 0,
             })],
             free: Vec::new(),
             live: 0,
+            module_extents: vec![0; cfg.modules],
+            chains: 0,
             table: PageTable::new(DEFAULT_PAGE_BYTES),
             policy: PlacementPolicy { kind: cfg.policy, ..Default::default() },
             capacity,
@@ -265,11 +314,13 @@ impl PrefixCache {
         let mut cur = 0usize;
         let mut depth = 0usize;
         let mut replica = None;
+        let mut home = None;
         while depth < limit {
             let Some(next) = self.child(cur, prompt[depth]) else { break };
             cur = next;
             depth += 1;
             replica = Some(self.node(cur).last_replica);
+            home = Some(self.node(cur).home);
             self.tick += 1;
             self.table.touch(Self::tid(cur), self.tick);
         }
@@ -288,7 +339,7 @@ impl PrefixCache {
         } else {
             self.lat.read_latency(bytes, self.fabric_bw)
         };
-        PrefixHit { tokens: depth, bytes, replica, fetch }
+        PrefixHit { tokens: depth, bytes, replica, fetch, home }
     }
 
     /// Publish the prefix KV `replica` produced for `prompt`: extend the
@@ -322,13 +373,30 @@ impl PrefixCache {
                 }
             };
             let depth = self.node(cur).depth + 1;
+            // Chain-granular module homing: a new depth-1 node opens a
+            // chain and picks its module by placement policy; deeper
+            // extents inherit the chain's home.
+            let home = if depth == 1 {
+                let h = match self.cfg.placement {
+                    PoolPlacement::Striped => (self.chains % self.cfg.modules as u64) as usize,
+                    PoolPlacement::Hashed => {
+                        (splitmix64(tok as u32 as u64) % self.cfg.modules as u64) as usize
+                    }
+                };
+                self.chains += 1;
+                h
+            } else {
+                self.node(cur).home
+            };
             self.nodes[slot] = Some(Node {
                 token: tok,
                 parent: cur,
                 children: Vec::new(),
                 depth,
                 last_replica: replica,
+                home,
             });
+            self.module_extents[home] += 1;
             let parent = self.nodes[cur].as_mut().expect("live trie node");
             let at = parent
                 .children
@@ -408,7 +476,71 @@ impl PrefixCache {
         self.table.remove(Self::tid(slot));
         self.free.push(slot);
         self.live -= 1;
+        self.module_extents[node.home] -= 1;
         self.stats.evicted_tokens += 1;
+    }
+
+    /// Pool bytes homed on module `m`.
+    pub fn module_bytes(&self, m: usize) -> Bytes {
+        self.bytes_per_token * self.module_extents[m] as f64
+    }
+
+    /// Module holding the most live extents (lowest index on ties) — the
+    /// `module@T:hot` fault target.
+    pub fn hottest_module(&self) -> usize {
+        let mut best = 0usize;
+        for (m, &n) in self.module_extents.iter().enumerate() {
+            if n > self.module_extents[best] {
+                best = m;
+            }
+        }
+        best
+    }
+
+    /// A TAB module dies: every extent homed on `m` — whole chains, by
+    /// construction — is invalidated through the paging ledger and
+    /// detached from the trie. Returns `(bytes, extents)` invalidated;
+    /// the bytes are exactly `module_bytes(m)` before the call (pinned by
+    /// `rust/tests/fault_props.rs`). Subsequent lookups miss these
+    /// prefixes and re-publish them cold on whichever module the
+    /// placement policy picks next.
+    pub fn fail_module(&mut self, m: usize) -> (Bytes, u64) {
+        let doomed = self.module_bytes(m);
+        // Depth-1 chain roots homed on m, in slot order (deterministic).
+        let roots: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter_map(|(slot, n)| {
+                n.as_ref().filter(|n| n.depth == 1 && n.home == m).map(|_| slot)
+            })
+            .collect();
+        let mut freed = 0u64;
+        for root in roots {
+            // Detach the chain from the trie root, then free its whole
+            // subtree; children are unhooked wholesale, so this is the
+            // one place extents die with children still attached.
+            let token = self.node(root).token;
+            let sentinel = self.nodes[0].as_mut().expect("root sentinel");
+            if let Ok(i) = sentinel.children.binary_search_by_key(&token, |&(t, _)| t) {
+                sentinel.children.remove(i);
+            }
+            let mut stack = vec![root];
+            while let Some(slot) = stack.pop() {
+                let node = self.nodes[slot].take().expect("live trie node");
+                debug_assert_eq!(node.home, m, "chain homing must be uniform");
+                stack.extend(node.children.iter().map(|&(_, c)| c));
+                self.table.remove(Self::tid(slot));
+                self.free.push(slot);
+                self.live -= 1;
+                freed += 1;
+            }
+        }
+        debug_assert_eq!(freed, self.module_extents[m], "blast radius must match the ledger");
+        self.module_extents[m] = 0;
+        self.stats.evicted_tokens += freed;
+        (doomed, freed)
     }
 
     /// Hit rate over lookups (0 when nothing was probed).
@@ -435,13 +567,24 @@ impl PrefixCache {
     /// counter conservation. Returns a description of the first violation.
     pub fn check_invariants(&self) -> std::result::Result<(), String> {
         let mut live = 0usize;
+        let mut per_module = vec![0u64; self.cfg.modules];
         for (slot, n) in self.nodes.iter().enumerate() {
             let Some(n) = n else { continue };
             if slot != 0 {
                 live += 1;
+                if n.home >= self.cfg.modules {
+                    return Err(format!("node {slot} homed on phantom module {}", n.home));
+                }
+                per_module[n.home] += 1;
                 let Some(parent) = self.nodes.get(n.parent).and_then(|p| p.as_ref()) else {
                     return Err(format!("node {slot} has a dead parent {}", n.parent));
                 };
+                if n.depth > 1 && n.home != parent.home {
+                    return Err(format!(
+                        "node {slot} home {} splits its chain (parent home {})",
+                        n.home, parent.home
+                    ));
+                }
                 if parent
                     .children
                     .binary_search_by_key(&n.token, |&(t, _)| t)
@@ -483,6 +626,12 @@ impl PrefixCache {
         }
         if live != self.live {
             return Err(format!("live counter {} vs walked {live}", self.live));
+        }
+        if per_module != self.module_extents {
+            return Err(format!(
+                "module ledger {:?} vs walked {per_module:?}",
+                self.module_extents
+            ));
         }
         let expect = self.bytes_per_token * live as f64;
         let held = self.held_bytes();
@@ -703,6 +852,94 @@ mod tests {
             survivors
         };
         assert_eq!(run(), run(), "victim selection must not depend on hash order");
+    }
+
+    #[test]
+    fn striped_placement_round_robins_chains() {
+        let mut c = cache(PrefixCacheConfig {
+            modules: 4,
+            placement: PoolPlacement::Striped,
+            ..Default::default()
+        });
+        // 8 chains of 5 tokens with distinct first tokens → 2 chains
+        // (10 extents) per module, exactly.
+        for s in 0..8i32 {
+            let prompt: Vec<i32> = (0..5).map(|i| s * 1000 + i + 1).collect();
+            assert_eq!(c.insert(&prompt, 0), 5);
+        }
+        for m in 0..4 {
+            assert_eq!(c.module_bytes(m), c.bytes_per_token() * 10.0);
+        }
+        assert_eq!(c.hottest_module(), 0, "even spread ties break to the lowest index");
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hashed_placement_is_content_addressed() {
+        let mk = || {
+            let mut c = cache(PrefixCacheConfig {
+                modules: 4,
+                placement: PoolPlacement::Hashed,
+                ..Default::default()
+            });
+            for s in 0..16i32 {
+                let prompt: Vec<i32> = (0..3).map(|i| s * 1000 + i + 1).collect();
+                c.insert(&prompt, 0);
+            }
+            c
+        };
+        let a = mk();
+        let b = mk();
+        for m in 0..4 {
+            assert_eq!(a.module_bytes(m), b.module_bytes(m), "hashing must be deterministic");
+        }
+        // A chain's hit reports the home its first token hashes to,
+        // independent of insertion order.
+        let mut c = mk();
+        for s in 0..16i32 {
+            let prompt: Vec<i32> = (0..3).map(|i| s * 1000 + i + 1).collect();
+            let want = (splitmix64(prompt[0] as u32 as u64) % 4) as usize;
+            assert_eq!(c.lookup(&prompt).home, Some(want));
+        }
+        a.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fail_module_invalidates_exactly_its_ledger() {
+        let mut c = cache(PrefixCacheConfig {
+            modules: 3,
+            placement: PoolPlacement::Striped,
+            ..Default::default()
+        });
+        for s in 0..6i32 {
+            let prompt: Vec<i32> = (0..8).map(|i| s * 1000 + i + 1).collect();
+            c.insert(&prompt, 0);
+        }
+        let m = 1usize; // chains 1 and 4 homed here (striped)
+        let doomed = c.module_bytes(m);
+        let held = c.held_bytes();
+        let (bytes, extents) = c.fail_module(m);
+        assert_eq!(bytes, doomed);
+        assert_eq!(extents, 16, "two 8-token chains die with the module");
+        assert_eq!(c.module_bytes(m), Bytes::ZERO);
+        assert!((c.held_bytes().value() - (held - bytes).value()).abs() < 1e-6);
+        c.check_invariants().unwrap();
+        for s in 0..6i32 {
+            let prompt: Vec<i32> = (0..8).map(|i| s * 1000 + i + 1).collect();
+            let hit = c.lookup(&prompt);
+            if s as usize % 3 == m {
+                assert_eq!(hit.tokens, 0, "chain {s} should have died with module {m}");
+            } else {
+                assert_eq!(hit.tokens, 7, "chain {s} must survive a foreign module failure");
+            }
+        }
+        // A second failure of the same module is a no-op.
+        assert_eq!(c.fail_module(m), (Bytes::ZERO, 0));
+        // Re-publication lands the prefix cold on a fresh chain.
+        let prompt: Vec<i32> = (0..8).map(|i| 1000 + i + 1).collect();
+        assert_eq!(c.insert(&prompt, 0), 8);
+        assert_eq!(c.lookup(&prompt).tokens, 7);
+        c.check_invariants().unwrap();
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub struct Request {
     /// Stall charged to this request's prefill step for fetching the
     /// cached prefix KV out of the TAB pool.
     pub prefix_fetch: Seconds,
+    /// TAB module the cached prefix is homed on (`Some` only when
+    /// `cached_prefix > 0`). The fault layer revokes the hit — resetting
+    /// all three prefix fields — when that module dies before the
+    /// request prefills (DESIGN.md §Faults).
+    pub prefix_home: Option<usize>,
 }
 
 impl Request {

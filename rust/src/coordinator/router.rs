@@ -66,6 +66,12 @@ pub struct Router {
     spill_tokens: u64,
     /// Replicas currently receiving new work (always ≥ 1, ≤ n).
     active: usize,
+    /// Replicas the fault layer took out entirely (DESIGN.md §Faults):
+    /// unlike a deactivated replica, a dead one cannot even drain.
+    dead: Vec<bool>,
+    /// Count of `true` entries in `dead` — the healthy fast paths gate
+    /// on zero so fault support never perturbs a healthy run.
+    dead_count: usize,
 }
 
 impl Router {
@@ -79,6 +85,8 @@ impl Router {
             affinity: HashMap::new(),
             spill_tokens: DEFAULT_SPILL_TOKENS,
             active: replicas,
+            dead: vec![false; replicas],
+            dead_count: 0,
         }
     }
 
@@ -109,20 +117,86 @@ impl Router {
         self.active
     }
 
+    /// Take `replica` out of routing entirely (crash — DESIGN.md
+    /// §Faults). Unlike a deactivated replica it cannot even drain;
+    /// its outstanding load is released by the evacuation path, not
+    /// here. Idempotent.
+    pub fn mark_dead(&mut self, replica: usize) {
+        if !self.dead[replica] {
+            self.dead[replica] = true;
+            self.dead_count += 1;
+        }
+    }
+
+    /// The repaired replica rejoins routing (cold caches). Idempotent.
+    pub fn mark_alive(&mut self, replica: usize) {
+        if self.dead[replica] {
+            self.dead[replica] = false;
+            self.dead_count -= 1;
+        }
+    }
+
+    pub fn is_dead(&self, replica: usize) -> bool {
+        self.dead[replica]
+    }
+
+    /// Whether a sticky/warm home may keep receiving work. This is the
+    /// ONE re-home predicate shared by both deactivation paths — the
+    /// autoscale drain (home left the active prefix) and a crash (home
+    /// marked dead): in either case the session must silently re-home
+    /// through the policy fallback instead of routing to a replica
+    /// that can no longer take work. `min` is the caller's
+    /// [`Self::min_active_load`] snapshot (one load read per route).
+    fn sticky_home_usable(&self, home: usize, min: u64) -> bool {
+        home < self.active && !self.dead[home] && self.load[home] <= min + self.spill_tokens
+    }
+
     fn least_loaded(&self) -> usize {
-        self.load[..self.active]
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, &l)| l)
-            .map(|(i, _)| i)
-            .unwrap()
+        if self.dead_count == 0 {
+            return self.load[..self.active]
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap();
+        }
+        self.least_loaded_alive()
+    }
+
+    /// Fault path of [`Self::least_loaded`]: smallest-load *alive*
+    /// replica, preferring the active prefix, spilling to alive
+    /// drain-set replicas when every active replica is dead, and
+    /// (defensively — `Cluster::new` rejects all-dead schedules)
+    /// falling back to replica 0. First index wins ties, matching the
+    /// healthy path.
+    fn least_loaded_alive(&self) -> usize {
+        let pick = |lo: usize, hi: usize| -> Option<usize> {
+            let mut best = None;
+            for i in lo..hi {
+                if self.dead[i] {
+                    continue;
+                }
+                if best.map(|b: usize| self.load[i] < self.load[b]).unwrap_or(true) {
+                    best = Some(i);
+                }
+            }
+            best
+        };
+        pick(0, self.active).or_else(|| pick(self.active, self.load.len())).unwrap_or(0)
     }
 
     /// Smallest outstanding load across the active set (the front-door
     /// shed check reads this: if even the emptiest active replica is
-    /// over the watermark, the fleet is saturated).
+    /// over the watermark, the fleet is saturated). Dead replicas do
+    /// not count — their (evacuated) load is no signal of capacity.
     pub fn min_active_load(&self) -> u64 {
-        *self.load[..self.active].iter().min().unwrap()
+        if self.dead_count == 0 {
+            return *self.load[..self.active].iter().min().unwrap();
+        }
+        let alive_min = |lo: usize, hi: usize| {
+            (lo..hi).filter(|&i| !self.dead[i]).map(|i| self.load[i]).min()
+        };
+        alive_min(0, self.active).or_else(|| alive_min(0, self.load.len())).unwrap_or(0)
     }
 
     /// Total outstanding load across the whole fleet, draining replicas
@@ -141,17 +215,34 @@ impl Router {
     pub fn route_work(&mut self, key: u64, work: u64) -> usize {
         let idx = match self.policy {
             Policy::RoundRobin => {
-                let i = self.next;
-                self.next = (self.next + 1) % self.active;
-                i
+                if self.dead_count == 0 {
+                    let i = self.next;
+                    self.next = (self.next + 1) % self.active;
+                    i
+                } else {
+                    // Cycle past dead slots; an all-dead active prefix
+                    // spills to the least-loaded alive replica.
+                    let mut i = self.next;
+                    let mut scanned = 0;
+                    while scanned < self.active && self.dead[i] {
+                        i = (i + 1) % self.active;
+                        scanned += 1;
+                    }
+                    if self.dead[i] {
+                        i = self.least_loaded_alive();
+                    }
+                    self.next = (i + 1) % self.active;
+                    i
+                }
             }
             Policy::LeastLoaded => self.least_loaded(),
             Policy::KvAffinity => {
                 let min = self.min_active_load();
                 match self.affinity.get(&key) {
                     // A sticky replica outside the active set re-homes
-                    // (it is draining and must not receive new work).
-                    Some(&i) if i < self.active && self.load[i] <= min + self.spill_tokens => i,
+                    // (it is draining and must not receive new work) —
+                    // same predicate as a dead one (crash re-queue).
+                    Some(&i) if self.sticky_home_usable(i, min) => i,
                     _ => {
                         let i = self.least_loaded();
                         self.affinity.insert(key, i);
@@ -176,7 +267,7 @@ impl Router {
     pub fn route_work_warm(&mut self, key: u64, work: u64, warm: Option<usize>) -> usize {
         if self.policy == Policy::LeastLoaded {
             if let Some(i) = warm {
-                if i < self.active && self.load[i] <= self.min_active_load() + self.spill_tokens {
+                if self.sticky_home_usable(i, self.min_active_load()) {
                     self.load[i] += work;
                     self.routed[i] += work;
                     return i;
@@ -403,6 +494,91 @@ mod tests {
         assert_eq!(next, 0, "session must re-home into the active set");
         // Sticky thereafter (home now inside the active set).
         assert_eq!(r.route(&session_req(2, 9, 100)), 0);
+    }
+
+    #[test]
+    fn dead_replicas_receive_no_new_work() {
+        // Every policy must refuse a dead replica, exactly like the
+        // autoscale drain set — the shared re-home predicate.
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded, Policy::KvAffinity] {
+            let mut r = Router::new(3, policy);
+            r.mark_dead(1);
+            assert!(r.is_dead(1));
+            // Distinct sessions so kv-affinity takes a fresh routing
+            // decision per request rather than riding one sticky home.
+            for i in 0..9 {
+                let pick = r.route(&session_req(i, i as i32 + 100, 50));
+                assert_ne!(pick, 1, "{policy:?} routed to a dead replica");
+            }
+            // Rejoin: the replica is eligible again.
+            r.mark_alive(1);
+            let picks: Vec<usize> =
+                (9..30).map(|i| r.route(&session_req(i, i as i32 + 100, 50))).collect();
+            assert!(picks.contains(&1), "{policy:?} never re-used the rejoined replica");
+        }
+    }
+
+    #[test]
+    fn round_robin_skips_dead_and_keeps_cycling() {
+        let mut r = Router::new(3, Policy::RoundRobin);
+        r.mark_dead(0);
+        let picks: Vec<usize> = (0..4).map(|i| r.route(&req(i, 10))).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn sticky_sessions_rehome_off_dead_replicas() {
+        let mut r = Router::new(4, Policy::KvAffinity);
+        // Bias replica 0 so the session homes elsewhere.
+        r.route(&req(100, 2000));
+        let home = r.route(&session_req(0, 9, 100));
+        assert!(home >= 1);
+        r.mark_dead(home);
+        let next = r.route(&session_req(1, 9, 100));
+        assert_ne!(next, home, "session must re-home off the dead replica");
+        // Sticky on the new home thereafter — the crash path behaves
+        // exactly like the drain path re-home.
+        assert_eq!(r.route(&session_req(2, 9, 100)), next);
+    }
+
+    #[test]
+    fn warm_probe_never_picks_a_dead_replica() {
+        let mut r = Router::new(3, Policy::LeastLoaded);
+        r.mark_dead(2);
+        assert_ne!(r.route_work_warm(7, 10, Some(2)), 2);
+    }
+
+    #[test]
+    fn min_active_load_ignores_dead_replicas() {
+        let mut r = Router::new(2, Policy::LeastLoaded);
+        let a = r.route(&req(0, 100));
+        let b = r.route(&req(1, 500));
+        // Kill the lighter replica: the shed signal must read the
+        // surviving one's load, not the dead minimum.
+        let (light, heavy) = if r.load(a) < r.load(b) { (a, b) } else { (b, a) };
+        r.mark_dead(light);
+        assert_eq!(r.min_active_load(), r.load(heavy));
+        // An all-dead active prefix falls back to alive replicas
+        // beyond it.
+        let mut r = Router::new(3, Policy::LeastLoaded);
+        r.route(&req(0, 100));
+        r.set_active(2);
+        r.mark_dead(0);
+        r.mark_dead(1);
+        assert_eq!(r.min_active_load(), r.load(2));
+        assert_eq!(r.route(&req(1, 10)), 2, "work spills to the alive drain-set replica");
+    }
+
+    #[test]
+    fn mark_dead_and_alive_are_idempotent() {
+        let mut r = Router::new(2, Policy::RoundRobin);
+        r.mark_dead(0);
+        r.mark_dead(0);
+        r.mark_alive(0);
+        assert!(!r.is_dead(0), "double-kill then one repair must leave the replica alive");
+        r.mark_alive(0);
+        let picks: Vec<usize> = (0..4).map(|i| r.route(&req(i, 10))).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1], "healthy cycling restored");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::engine::{Backend, PrefillItem};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::error::Result;
+use crate::faults::CompletionEvent;
 use crate::units::Seconds;
 use std::collections::VecDeque;
 
@@ -84,6 +85,11 @@ pub struct Scheduler<B: Backend> {
     pub metrics: Metrics,
     pub responses: Vec<Response>,
     clock: Seconds,
+    /// Per-completion trace for windowed recovery analysis (DESIGN.md
+    /// §Faults). Off (and never allocated) unless [`Self::with_trace`]
+    /// armed it — healthy runs skip the recording branch entirely.
+    record_trace: bool,
+    trace: Vec<CompletionEvent>,
 }
 
 impl<B: Backend> Scheduler<B> {
@@ -99,6 +105,8 @@ impl<B: Backend> Scheduler<B> {
             metrics: Metrics::default(),
             responses: Vec::new(),
             clock: Seconds::ZERO,
+            record_trace: false,
+            trace: Vec::new(),
         }
     }
 
@@ -106,6 +114,18 @@ impl<B: Backend> Scheduler<B> {
     pub fn with_mode(mut self, mode: SchedMode) -> Self {
         self.mode = mode;
         self
+    }
+
+    /// Record a [`CompletionEvent`] per finished request (the fault
+    /// layer's recovery-window input). Default off.
+    pub fn with_trace(mut self) -> Self {
+        self.record_trace = true;
+        self
+    }
+
+    /// Completion trace recorded under [`Self::with_trace`].
+    pub fn trace(&self) -> &[CompletionEvent] {
+        &self.trace
     }
 
     pub fn mode(&self) -> SchedMode {
@@ -338,6 +358,21 @@ impl<B: Backend> Scheduler<B> {
                         self.metrics.goodput_tokens += a.generated as u64;
                     }
                 }
+                if self.record_trace {
+                    let slo_ok = a.req.slo.map(|slo| {
+                        let tpot = if a.generated > 1 {
+                            (total - a.ttft) / (a.generated - 1) as f64
+                        } else {
+                            Seconds::ZERO
+                        };
+                        slo.met(a.ttft, tpot)
+                    });
+                    self.trace.push(CompletionEvent {
+                        at: clock,
+                        tokens: a.generated as u64,
+                        slo: slo_ok,
+                    });
+                }
                 self.responses.push(Response {
                     id: a.req.id,
                     tokens: a.tokens,
@@ -350,6 +385,45 @@ impl<B: Backend> Scheduler<B> {
             }
         }
         self.active = kept;
+    }
+
+    /// Crash evacuation (DESIGN.md §Faults): strip every request still
+    /// owned by this replica — batcher queue, unarrived future, then the
+    /// active set in batch order — and hand them back for re-routing.
+    /// The second return is the generated-token count of the active set:
+    /// decode progress lost with the replica's local KV. Metrics already
+    /// recorded (TTFT of evacuated prefills) stay recorded, exactly as a
+    /// real fleet's monitoring would have seen them.
+    pub fn evacuate(&mut self) -> (Vec<Request>, u64) {
+        let mut out = self.batcher.drain_queue();
+        out.extend(self.future.drain(..));
+        let mut lost = 0u64;
+        for a in self.active.drain(..) {
+            lost += a.generated as u64;
+            out.push(a.req);
+        }
+        (out, lost)
+    }
+
+    /// Revoke cached-prefix grants for queued (not yet prefilled)
+    /// requests whose home TAB module satisfies `pred` — the module died
+    /// before their prefill ran, so the pooled KV no longer exists. The
+    /// request re-prefills from scratch. Returns the revocation count.
+    pub fn revoke_cached_prefix(&mut self, pred: impl Fn(usize) -> bool) -> usize {
+        let mut n = 0usize;
+        let mut revoke = |r: &mut Request| {
+            if r.cached_prefix > 0 && r.prefix_home.is_some_and(&pred) {
+                r.cached_prefix = 0;
+                r.prefix_fetch = Seconds::ZERO;
+                r.prefix_home = None;
+                n += 1;
+            }
+        };
+        self.batcher.for_each_queued_mut(&mut revoke);
+        for r in self.future.iter_mut() {
+            revoke(r);
+        }
+        n
     }
 
     pub fn clock(&self) -> Seconds {

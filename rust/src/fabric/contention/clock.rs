@@ -76,6 +76,13 @@ pub struct FabricClock {
     /// Queueing delay of every booking, seconds (percentiles).
     queue_samples: Vec<f64>,
     horizon: f64,
+    /// Link-degradation intervals `(start_s, end_s, factor)` from the
+    /// fault layer (DESIGN.md §Faults): windows whose start falls inside
+    /// an interval shrink their port and bucket budgets by `factor`.
+    /// Registered up-front from the static fault timeline, so bookings
+    /// replay identically in both cluster cores; empty on healthy runs —
+    /// the budget arithmetic is untouched then (bit-identity).
+    degrades: Vec<(f64, f64, f64)>,
 }
 
 impl FabricClock {
@@ -119,11 +126,29 @@ impl FabricClock {
             queue_total: 0.0,
             queue_samples: Vec::new(),
             horizon: 0.0,
+            degrades: Vec::new(),
         })
     }
 
     pub fn mode(&self) -> ContentionMode {
         self.cfg.mode
+    }
+
+    /// Register a link-degradation interval: bandwidth budgets shrink by
+    /// `factor` (∈ (0, 1]) for windows starting in `[start, end)`.
+    /// Overlapping intervals compound to the tightest factor.
+    pub fn degrade(&mut self, start: Seconds, end: Seconds, factor: f64) {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "degrade factor out of range");
+        self.degrades.push((start.value(), end.value(), factor));
+    }
+
+    /// Tightest degrade factor covering a window starting at `wstart`
+    /// (1.0 when none applies). Only called when `degrades` is non-empty.
+    fn degrade_factor(&self, wstart: f64) -> f64 {
+        self.degrades
+            .iter()
+            .filter(|&&(s, e, _)| wstart >= s && wstart < e)
+            .fold(1.0, |acc, &(_, _, f)| acc.min(f))
     }
 
     /// Home bucket for a hashed (non-interleaved) transfer, `None` when
@@ -170,13 +195,22 @@ impl FabricClock {
         };
         let start_s = start.value().max(0.0);
         let win_len = self.cfg.window.value();
-        let port_budget = self.port_bw * win_len;
-        let bucket_budget = self.bucket_bw * win_len;
+        let port_budget_full = self.port_bw * win_len;
+        let bucket_budget_full = self.bucket_bw * win_len;
         let mut remaining = bytes.value();
         let mut w = (start_s / win_len) as u64;
         let completion_s;
         loop {
             let wstart = w as f64 * win_len;
+            // Degraded links shrink this window's budgets. Healthy runs
+            // skip the scaling entirely — same multiplications, same
+            // bits as before the fault layer existed.
+            let (port_budget, bucket_budget) = if self.degrades.is_empty() {
+                (port_budget_full, bucket_budget_full)
+            } else {
+                let f = self.degrade_factor(wstart);
+                (port_budget_full * f, bucket_budget_full * f)
+            };
             let t_in = start_s.max(wstart);
             let avail = wstart + win_len - t_in;
             if avail > 0.0 {
@@ -441,6 +475,41 @@ mod tests {
             let total: f64 = r.module_bytes.iter().map(|b| b.value()).sum();
             assert!((total - r.bytes.value()).abs() < 1e-3 * r.bytes.value());
         }
+    }
+
+    #[test]
+    fn degraded_windows_queue_what_healthy_windows_absorb() {
+        let mk = |degraded: bool| {
+            let mut c = clock(ContentionMode::Shared, 4, true);
+            if degraded {
+                c.degrade(Seconds::ZERO, Seconds::ms(10.0), 0.25);
+            }
+            c.book(Seconds::ZERO, Bytes::mib(480.0), 0, 1)
+        };
+        let healthy = mk(false);
+        let degraded = mk(true);
+        assert!(
+            degraded.completion > healthy.completion,
+            "a quartered link must finish later: {degraded:?} vs {healthy:?}"
+        );
+        assert!(degraded.queueing > healthy.queueing, "the slowdown is arbitration, not wire");
+        assert_eq!(
+            degraded.serialization, healthy.serialization,
+            "degradation never rewrites the intrinsic Eq 4.1 charge"
+        );
+    }
+
+    #[test]
+    fn degrade_recovery_restores_full_budgets() {
+        let mut c = clock(ContentionMode::Shared, 4, true);
+        c.degrade(Seconds::ZERO, Seconds::ms(1.0), 0.25);
+        let mut healthy = clock(ContentionMode::Shared, 4, true);
+        // Booked entirely after the interval: bit-identical to a clock
+        // that never degraded.
+        let after = c.book(Seconds::ms(2.0), Bytes::mib(64.0), 1, 3);
+        let want = healthy.book(Seconds::ms(2.0), Bytes::mib(64.0), 1, 3);
+        assert_eq!(after.completion.value().to_bits(), want.completion.value().to_bits());
+        assert_eq!(after.queueing.value().to_bits(), want.queueing.value().to_bits());
     }
 
     #[test]

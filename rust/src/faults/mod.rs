@@ -1,0 +1,43 @@
+//! Fault-injection and recovery subsystem (DESIGN.md §Faults).
+//!
+//! Every scenario the simulator expressed before this module was a
+//! healthy fleet, yet the paper's cost and GPU-reduction claims assume
+//! the disaggregated TAB pool stays up. Pooling concentrates blast
+//! radius: one TAB module failure takes KV pages and cached prefixes
+//! for *every* replica with it. This module provides the vocabulary to
+//! ask whether the shared pool survives operations:
+//!
+//! * [`FaultSchedule`] — a deterministic, seeded list of timed faults
+//!   (explicit `(time, fault)` entries and/or a seeded random process
+//!   per fault class, materialised at parse time so the schedule the
+//!   cluster sees is always a concrete timeline);
+//! * [`FaultKind`] — the three fault classes with recovery semantics:
+//!   **replica crash** (in-flight requests re-queued through the
+//!   router, the replica's local KV lost — re-prefill vs
+//!   re-fetch-from-pool depending on TAB residency — and the replica
+//!   rejoins cold after a configurable repair time), **TAB module
+//!   failure** (every prefix-KV extent homed on the dead module is
+//!   invalidated through the radix trie and its paging ledger; striped
+//!   vs hashed placement changes the blast radius), and **link
+//!   degradation** (per-port / per-module contention budgets drop by a
+//!   factor for a bounded interval);
+//! * [`FaultReport`] — per-class counts, recovery time (first fault →
+//!   SLO attainment back within ε of the pre-fault window), windowed
+//!   SLO-attainment dip, goodput lost, requests re-queued /
+//!   re-prefilled and bytes invalidated.
+//!
+//! **Passthrough guarantee.** Like [`ContentionMode::Off`], an absent
+//! or empty schedule is a strict no-op: no fault events enter the
+//! calendar, no completion traces are recorded, and no arithmetic runs
+//! that could perturb a healthy run — no-fault runs stay bit-identical
+//! with the subsystem compiled in (pinned by
+//! `rust/tests/fault_props.rs` and the differential harness
+//! `rust/tests/event_core_equiv.rs`).
+//!
+//! [`ContentionMode::Off`]: crate::fabric::contention::ContentionMode::Off
+
+pub mod report;
+pub mod schedule;
+
+pub use report::{recovery_stats, CompletionEvent, FaultReport, RecoveryStats};
+pub use schedule::{FaultKind, FaultSchedule, FaultSpec, ModuleSel};

@@ -1,0 +1,339 @@
+//! Fault observables: what a faulted run reports (DESIGN.md §Faults).
+//!
+//! The recovery metrics are computed from a *completion trace* — one
+//! [`CompletionEvent`] per finished request, recorded by both cluster
+//! cores only when a schedule is active (healthy runs record nothing,
+//! preserving the passthrough guarantee). The trace is cut into fixed
+//! windows from the first fault instant; per-window SLO attainment
+//! against the pre-fault baseline yields the dip, the recovery time and
+//! the goodput lost.
+
+use super::schedule::FaultSchedule;
+use crate::units::{Bytes, Seconds};
+
+/// One completed request, as the recovery report sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletionEvent {
+    /// Virtual completion time.
+    pub at: Seconds,
+    /// Tokens generated (the goodput contribution when the SLO held).
+    pub tokens: u64,
+    /// SLO verdict (`None` when the request carried no target).
+    pub slo: Option<bool>,
+}
+
+/// Windowed-attainment recovery metrics ([`recovery_stats`]).
+#[derive(Debug, Clone, Copy)]
+pub struct RecoveryStats {
+    /// SLO attainment over completions before the first fault (1.0
+    /// when nothing with an SLO completed pre-fault).
+    pub baseline_attainment: f64,
+    /// Worst per-window attainment from the first fault on.
+    pub dip_attainment: f64,
+    /// `max(0, baseline − dip)` — the headline availability hit.
+    pub slo_dip: f64,
+    /// First fault → end of the last window whose attainment sat below
+    /// `baseline − ε`. `Some(0)` when attainment never dipped; `None`
+    /// when the run ended still dipped (see `recovered`).
+    pub recovery_time: Option<Seconds>,
+    /// Whether attainment returned within ε of the baseline before the
+    /// run ended.
+    pub recovered: bool,
+    /// Σ over windows of `max(0, baseline_rate × span − slo-met
+    /// tokens)`: goodput the pre-fault trajectory promised but the
+    /// faulted fleet did not deliver.
+    pub goodput_lost_tokens: f64,
+}
+
+/// Cut `completions` (time-sorted) into `window`-wide slices from the
+/// first fault instant and score SLO attainment per slice against the
+/// pre-fault baseline. `end` is the run's makespan; the last (possibly
+/// partial) window is pro-rated in the goodput integral.
+pub fn recovery_stats(
+    completions: &[CompletionEvent],
+    first_fault: Seconds,
+    end: Seconds,
+    window: Seconds,
+    epsilon: f64,
+) -> RecoveryStats {
+    let ff = first_fault.value();
+    let w = window.value();
+    debug_assert!(w > 0.0, "fault report window must be positive");
+
+    // Pre-fault baseline: attainment and the goodput rate to hold the
+    // faulted windows against.
+    let mut base_met = 0u64;
+    let mut base_total = 0u64;
+    let mut base_tokens = 0.0f64;
+    for c in completions {
+        if c.at.value() >= ff {
+            break;
+        }
+        if let Some(met) = c.slo {
+            base_total += 1;
+            if met {
+                base_met += 1;
+                base_tokens += c.tokens as f64;
+            }
+        }
+    }
+    let baseline = if base_total == 0 { 1.0 } else { base_met as f64 / base_total as f64 };
+    let base_rate = if ff > 0.0 { base_tokens / ff } else { 0.0 };
+
+    let end_s = end.value().max(ff);
+    let k0 = (ff / w).floor() as u64;
+    let mut i = completions.partition_point(|c| c.at.value() < k0 as f64 * w);
+    let mut dip = f64::INFINITY;
+    let mut last_bad: Option<u64> = None;
+    let mut last_data: Option<u64> = None;
+    let mut goodput_lost = 0.0f64;
+    let mut k = k0;
+    loop {
+        let wstart = k as f64 * w;
+        let wend = wstart + w;
+        let mut met = 0u64;
+        let mut total = 0u64;
+        let mut met_tokens = 0.0f64;
+        while i < completions.len() && completions[i].at.value() < wend {
+            if let Some(m) = completions[i].slo {
+                total += 1;
+                if m {
+                    met += 1;
+                    met_tokens += completions[i].tokens as f64;
+                }
+            }
+            i += 1;
+        }
+        let span = (end_s.min(wend) - wstart).clamp(0.0, w);
+        goodput_lost += (base_rate * span - met_tokens).max(0.0);
+        if total > 0 {
+            let att = met as f64 / total as f64;
+            dip = dip.min(att);
+            last_data = Some(k);
+            if att < baseline - epsilon {
+                last_bad = Some(k);
+            }
+        }
+        k += 1;
+        if k as f64 * w > end_s {
+            break;
+        }
+    }
+    if !dip.is_finite() {
+        dip = baseline; // no post-fault data: nothing observable dipped
+    }
+    let (recovery_time, recovered) = match last_bad {
+        None => (Some(Seconds::ZERO), true),
+        Some(bad) => {
+            if last_data.map(|d| d > bad).unwrap_or(false) {
+                (Some(Seconds::new((bad + 1) as f64 * w - ff)), true)
+            } else {
+                (None, false) // the run ended inside the dip
+            }
+        }
+    };
+    RecoveryStats {
+        baseline_attainment: baseline,
+        dip_attainment: dip,
+        slo_dip: (baseline - dip).max(0.0),
+        recovery_time,
+        recovered,
+        goodput_lost_tokens: goodput_lost,
+    }
+}
+
+/// Fault observables of one cluster run
+/// ([`crate::coordinator::cluster::ClusterReport`] `faults`).
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    /// Replica crashes injected.
+    pub crashes: u64,
+    /// Crashed replicas that rejoined before the run ended.
+    pub rejoins: u64,
+    /// TAB module failures injected.
+    pub module_failures: u64,
+    /// Link-degradation intervals injected.
+    pub link_degrades: u64,
+    /// In-flight requests evacuated off crashed replicas and re-routed.
+    pub requests_requeued: u64,
+    /// Requests whose cached prefix was lost (crash evacuation or
+    /// module failure) and must run full prefill again.
+    pub requests_reprefilled: u64,
+    /// Decode tokens thrown away by crashes (generated on the dead
+    /// replica, regenerated after re-queue).
+    pub tokens_lost: u64,
+    /// Prefix-KV bytes invalidated by module failures — exactly the
+    /// dead modules' ledger bytes (pinned by `rust/tests/fault_props.rs`).
+    pub bytes_invalidated: Bytes,
+    /// Prefix-KV token extents invalidated by module failures.
+    pub extents_invalidated: u64,
+    /// Instant of the first scheduled fault (`None` for an empty
+    /// timeline).
+    pub first_fault: Option<Seconds>,
+    /// Pre-fault SLO attainment.
+    pub baseline_attainment: f64,
+    /// Worst windowed attainment from the first fault on.
+    pub dip_attainment: f64,
+    /// `baseline − dip`, clamped at 0.
+    pub slo_dip: f64,
+    /// First fault → attainment back within ε of baseline.
+    pub recovery_time: Option<Seconds>,
+    /// Whether the fleet got back within ε before the run ended.
+    pub recovered: bool,
+    /// Goodput the pre-fault trajectory promised but the faulted run
+    /// did not deliver.
+    pub goodput_lost_tokens: f64,
+    /// Report window width used for the windowed metrics.
+    pub window: Seconds,
+}
+
+impl FaultReport {
+    /// All-zero report for a configured-but-empty schedule.
+    pub fn empty(schedule: &FaultSchedule) -> FaultReport {
+        FaultReport {
+            crashes: 0,
+            rejoins: 0,
+            module_failures: 0,
+            link_degrades: 0,
+            requests_requeued: 0,
+            requests_reprefilled: 0,
+            tokens_lost: 0,
+            bytes_invalidated: Bytes::ZERO,
+            extents_invalidated: 0,
+            first_fault: None,
+            baseline_attainment: 1.0,
+            dip_attainment: 1.0,
+            slo_dip: 0.0,
+            recovery_time: Some(Seconds::ZERO),
+            recovered: true,
+            goodput_lost_tokens: 0.0,
+            window: schedule.window,
+        }
+    }
+
+    /// One-line summary for [`crate::coordinator::cluster::ClusterReport`].
+    pub fn summary_line(&self) -> String {
+        format!(
+            "faults: {} crash / {} module / {} degrade | requeued {} reprefilled {} \
+             tokens lost {} | invalidated {:.1} MB ({} extents) | slo dip {:.1}% \
+             recovery {} | goodput lost {:.0} tok",
+            self.crashes,
+            self.module_failures,
+            self.link_degrades,
+            self.requests_requeued,
+            self.requests_reprefilled,
+            self.tokens_lost,
+            self.bytes_invalidated.value() / 1e6,
+            self.extents_invalidated,
+            100.0 * self.slo_dip,
+            match self.recovery_time {
+                Some(t) => format!("{:.0} ms", t.value() * 1e3),
+                None => "not reached".to_string(),
+            },
+            self.goodput_lost_tokens,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at: f64, tokens: u64, slo: Option<bool>) -> CompletionEvent {
+        CompletionEvent { at: Seconds::new(at), tokens, slo }
+    }
+
+    #[test]
+    fn healthy_trace_reports_no_dip() {
+        let trace: Vec<CompletionEvent> =
+            (0..40).map(|i| ev(0.05 * i as f64, 10, Some(true))).collect();
+        let s = recovery_stats(&trace, Seconds::new(1.0), Seconds::new(2.0), Seconds::new(0.25), 0.05);
+        assert_eq!(s.baseline_attainment, 1.0);
+        assert_eq!(s.dip_attainment, 1.0);
+        assert_eq!(s.slo_dip, 0.0);
+        assert_eq!(s.recovery_time, Some(Seconds::ZERO));
+        assert!(s.recovered);
+        assert!(s.goodput_lost_tokens.abs() < 1e-9, "rate held: {}", s.goodput_lost_tokens);
+    }
+
+    #[test]
+    fn dip_and_recovery_are_located() {
+        // 1.0 attainment before the fault at t=1; zero attainment in
+        // [1.0, 1.5); recovered from 1.5 on.
+        let mut trace = Vec::new();
+        for i in 0..20 {
+            trace.push(ev(0.05 * i as f64, 10, Some(true)));
+        }
+        for i in 0..10 {
+            trace.push(ev(1.0 + 0.05 * i as f64, 10, Some(false)));
+        }
+        for i in 0..10 {
+            trace.push(ev(1.5 + 0.05 * i as f64, 10, Some(true)));
+        }
+        let s = recovery_stats(&trace, Seconds::new(1.0), Seconds::new(2.0), Seconds::new(0.25), 0.05);
+        assert_eq!(s.baseline_attainment, 1.0);
+        assert_eq!(s.dip_attainment, 0.0);
+        assert_eq!(s.slo_dip, 1.0);
+        assert!(s.recovered);
+        // Bad windows are [1.0,1.25) and [1.25,1.5): recovery at 1.5.
+        assert_eq!(s.recovery_time, Some(Seconds::new(0.5)));
+        // Two dipped windows lost their whole goodput promise
+        // (rate 200 tok/s × 0.5 s), the recovered windows kept it.
+        assert!((s.goodput_lost_tokens - 100.0).abs() < 1e-6, "{}", s.goodput_lost_tokens);
+    }
+
+    #[test]
+    fn run_ending_inside_the_dip_is_not_recovered() {
+        let mut trace = Vec::new();
+        for i in 0..20 {
+            trace.push(ev(0.05 * i as f64, 10, Some(true)));
+        }
+        for i in 0..10 {
+            trace.push(ev(1.0 + 0.05 * i as f64, 10, Some(false)));
+        }
+        let s = recovery_stats(&trace, Seconds::new(1.0), Seconds::new(1.5), Seconds::new(0.25), 0.05);
+        assert!(!s.recovered);
+        assert_eq!(s.recovery_time, None);
+        assert!(s.slo_dip > 0.9);
+    }
+
+    #[test]
+    fn no_slo_traffic_defaults_to_full_attainment() {
+        let trace: Vec<CompletionEvent> = (0..10).map(|i| ev(0.1 * i as f64, 5, None)).collect();
+        let s = recovery_stats(&trace, Seconds::new(0.5), Seconds::new(1.0), Seconds::new(0.25), 0.05);
+        assert_eq!(s.baseline_attainment, 1.0);
+        assert_eq!(s.dip_attainment, 1.0);
+        assert!(s.recovered);
+        assert_eq!(s.goodput_lost_tokens, 0.0, "no baseline rate without slo-met tokens");
+    }
+
+    #[test]
+    fn deeper_dips_lose_more_goodput() {
+        let base: Vec<CompletionEvent> = (0..20).map(|i| ev(0.05 * i as f64, 10, Some(true))).collect();
+        let lost_for = |bad_windows: usize| {
+            let mut trace = base.clone();
+            for i in 0..(bad_windows * 5) {
+                trace.push(ev(1.0 + 0.05 * i as f64, 10, Some(false)));
+            }
+            for i in 0..5 {
+                trace.push(ev(1.0 + (bad_windows * 5) as f64 * 0.05 + 0.05 * i as f64, 10, Some(true)));
+            }
+            let end = trace.last().unwrap().at + Seconds::new(0.05);
+            recovery_stats(&trace, Seconds::new(1.0), end, Seconds::new(0.25), 0.05)
+        };
+        let short = lost_for(1);
+        let long = lost_for(3);
+        assert!(long.goodput_lost_tokens > short.goodput_lost_tokens);
+        assert!(long.recovery_time.unwrap() > short.recovery_time.unwrap());
+        assert!(short.recovered && long.recovered);
+    }
+
+    #[test]
+    fn empty_report_is_all_zero() {
+        let r = FaultReport::empty(&FaultSchedule::default());
+        assert_eq!(r.crashes + r.module_failures + r.link_degrades, 0);
+        assert_eq!(r.slo_dip, 0.0);
+        assert!(r.recovered);
+        assert!(r.summary_line().contains("0 crash"));
+    }
+}

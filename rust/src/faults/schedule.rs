@@ -1,0 +1,486 @@
+//! Fault schedules: the timed fault vocabulary and its CLI grammar
+//! (DESIGN.md §Faults).
+//!
+//! A schedule is a list of explicit [`FaultSpec`]s. The `random:` spec
+//! form materialises a seeded random process per fault class into the
+//! same explicit list at parse time, so the cluster only ever sees a
+//! concrete, reproducible timeline. [`FaultSchedule::timeline`] derives
+//! the replica-rejoin events from crash repair times and returns the
+//! whole set in stable time order — the exact injection sequence both
+//! cluster cores replay.
+
+use crate::error::{FhError, Result};
+use crate::traffic::rng::{splitmix64, XorShift};
+use crate::units::Seconds;
+
+/// Which TAB module a [`FaultKind::ModuleFailure`] kills.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModuleSel {
+    /// A fixed module index (must be < the prefix cache's module count).
+    Index(usize),
+    /// The module holding the most cached bytes at fault time — the
+    /// worst-case blast radius (lowest index wins ties).
+    Hottest,
+}
+
+/// One fault class, with its recovery semantics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// `replica` dies: in-flight requests re-queue through the router,
+    /// its local KV is lost (pool-resident prefixes survive), and it
+    /// rejoins cold after `repair`.
+    ReplicaCrash { replica: usize, repair: Seconds },
+    /// `replica` comes back with cold caches. Derived from
+    /// [`FaultKind::ReplicaCrash`] by [`FaultSchedule::timeline`] —
+    /// never written explicitly.
+    ReplicaRejoin { replica: usize },
+    /// A TAB module dies: every prefix-KV extent homed on it is
+    /// invalidated through the radix trie and the paging ledger.
+    /// Permanent (re-warmed only by later traffic).
+    ModuleFailure { module: ModuleSel },
+    /// Per-port and per-module contention budgets scale by `factor`
+    /// for `duration`, then recover.
+    LinkDegrade { factor: f64, duration: Seconds },
+}
+
+/// One timed fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub at: Seconds,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule
+/// ([`crate::coordinator::cluster::ClusterConfig`] `faults`). An empty
+/// schedule is a strict passthrough — see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Explicit faults (rejoins are derived, never listed here).
+    pub events: Vec<FaultSpec>,
+    /// SLO-attainment window width for the recovery report.
+    pub window: Seconds,
+    /// Recovery tolerance: attainment within `epsilon` of the pre-fault
+    /// baseline counts as recovered.
+    pub epsilon: f64,
+}
+
+/// Default report window (250 ms) — several decode rounds at paper
+/// scale, so per-window attainment is not all-or-nothing.
+pub const DEFAULT_FAULT_WINDOW: Seconds = Seconds(0.25);
+
+/// Default recovery tolerance.
+pub const DEFAULT_FAULT_EPSILON: f64 = 0.05;
+
+/// Default crash repair time.
+pub const DEFAULT_REPAIR: Seconds = Seconds(1.0);
+
+impl Default for FaultSchedule {
+    fn default() -> Self {
+        FaultSchedule {
+            events: Vec::new(),
+            window: DEFAULT_FAULT_WINDOW,
+            epsilon: DEFAULT_FAULT_EPSILON,
+        }
+    }
+}
+
+fn num(s: &str, what: &str) -> Result<f64> {
+    s.parse::<f64>()
+        .ok()
+        .filter(|v| v.is_finite())
+        .ok_or_else(|| FhError::Config(format!("--faults: {what} `{s}` is not a finite number")))
+}
+
+impl FaultSchedule {
+    /// No faults scheduled (the passthrough case).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a `--faults` spec: comma-separated items, each one of
+    ///
+    /// * `crash@T:rN[:repairX]` — replica N crashes at T seconds,
+    ///   rejoins after X seconds (default 1.0);
+    /// * `module@T:hot` / `module@T:mI` — TAB module failure at T,
+    ///   hottest module or fixed index I;
+    /// * `degrade@T:xF:dD` — link budgets scale by factor F for D
+    ///   seconds starting at T;
+    /// * `window=W` / `eps=E` — recovery-report knobs;
+    /// * `random:seed=S:horizon=H[:crash=R][:module=R][:degrade=R][:repair=X]`
+    ///   — seeded Poisson processes per fault class (rates R in
+    ///   events/second over `[0, H)`), materialised immediately.
+    ///
+    /// `replicas` bounds the crash targets (random crashes draw from
+    /// it; explicit `rN` is checked against it).
+    pub fn parse(spec: &str, replicas: usize) -> Result<FaultSchedule> {
+        let mut out = FaultSchedule::default();
+        for raw in spec.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(v) = item.strip_prefix("window=") {
+                out.window = Seconds::new(num(v, "window")?);
+            } else if let Some(v) = item.strip_prefix("eps=") {
+                out.epsilon = num(v, "eps")?;
+            } else if let Some(body) = item.strip_prefix("random:") {
+                out.events.extend(parse_random(body, replicas)?);
+            } else if let Some(body) = item.strip_prefix("crash@") {
+                out.events.push(parse_crash(body, replicas)?);
+            } else if let Some(body) = item.strip_prefix("module@") {
+                out.events.push(parse_module(body)?);
+            } else if let Some(body) = item.strip_prefix("degrade@") {
+                out.events.push(parse_degrade(body)?);
+            } else {
+                return Err(FhError::Config(format!(
+                    "--faults: unknown item `{item}` (expected crash@…, module@…, \
+                     degrade@…, random:…, window=… or eps=…)"
+                )));
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Context-free sanity checks (fleet-dependent checks — replica and
+    /// module bounds against the actual cluster, prefix-cache and
+    /// contention prerequisites — live in `Cluster::new`).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.window.value() > 0.0) {
+            return Err(FhError::Config("fault report window must be > 0".into()));
+        }
+        if !(self.epsilon >= 0.0 && self.epsilon.is_finite()) {
+            return Err(FhError::Config("fault recovery epsilon must be ≥ 0".into()));
+        }
+        for e in &self.events {
+            if e.at.value() < 0.0 {
+                return Err(FhError::Config("fault times must be ≥ 0".into()));
+            }
+            match e.kind {
+                FaultKind::ReplicaCrash { repair, .. } => {
+                    if repair.value() < 0.0 {
+                        return Err(FhError::Config("crash repair time must be ≥ 0".into()));
+                    }
+                }
+                FaultKind::ReplicaRejoin { .. } => {
+                    return Err(FhError::Config(
+                        "rejoin events are derived from crashes, never scheduled directly"
+                            .into(),
+                    ));
+                }
+                FaultKind::ModuleFailure { .. } => {}
+                FaultKind::LinkDegrade { factor, duration } => {
+                    // The floor keeps degraded window budgets far above
+                    // the ledger's byte epsilon, so bookings always make
+                    // progress.
+                    if !(factor >= 1e-6 && factor <= 1.0) {
+                        return Err(FhError::Config(format!(
+                            "degrade factor must be in [1e-6, 1], got {factor}"
+                        )));
+                    }
+                    if !(duration.value() > 0.0) {
+                        return Err(FhError::Config("degrade duration must be > 0".into()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The concrete injection sequence: explicit events plus the
+    /// rejoin derived from each crash (`at + repair`), in stable time
+    /// order — at equal instants, explicit faults fire before derived
+    /// rejoins, and earlier-listed events before later ones.
+    pub fn timeline(&self) -> Vec<FaultSpec> {
+        let mut all = self.events.clone();
+        for e in &self.events {
+            if let FaultKind::ReplicaCrash { replica, repair } = e.kind {
+                all.push(FaultSpec {
+                    at: e.at + repair,
+                    kind: FaultKind::ReplicaRejoin { replica },
+                });
+            }
+        }
+        all.sort_by(|a, b| a.at.value().total_cmp(&b.at.value()));
+        all
+    }
+}
+
+fn parse_crash(body: &str, replicas: usize) -> Result<FaultSpec> {
+    let mut parts = body.split(':');
+    let at = Seconds::new(num(parts.next().unwrap_or(""), "crash time")?);
+    let target = parts.next().ok_or_else(|| {
+        FhError::Config(format!("--faults: crash@{body} needs a replica (`:rN`)"))
+    })?;
+    let replica = target
+        .strip_prefix('r')
+        .and_then(|v| v.parse::<usize>().ok())
+        .ok_or_else(|| {
+            FhError::Config(format!("--faults: crash target `{target}` is not `rN`"))
+        })?;
+    if replica >= replicas {
+        return Err(FhError::Config(format!(
+            "--faults: crash replica r{replica} out of range (fleet has {replicas})"
+        )));
+    }
+    let repair = match parts.next() {
+        Some(v) => {
+            let x = v.strip_prefix("repair").ok_or_else(|| {
+                FhError::Config(format!("--faults: crash option `{v}` is not `repairX`"))
+            })?;
+            Seconds::new(num(x, "repair time")?)
+        }
+        None => DEFAULT_REPAIR,
+    };
+    if let Some(extra) = parts.next() {
+        return Err(FhError::Config(format!("--faults: crash has extra field `{extra}`")));
+    }
+    Ok(FaultSpec { at, kind: FaultKind::ReplicaCrash { replica, repair } })
+}
+
+fn parse_module(body: &str) -> Result<FaultSpec> {
+    let mut parts = body.split(':');
+    let at = Seconds::new(num(parts.next().unwrap_or(""), "module-failure time")?);
+    let sel = parts.next().ok_or_else(|| {
+        FhError::Config(format!("--faults: module@{body} needs a target (`:hot` or `:mI`)"))
+    })?;
+    let module = if sel == "hot" {
+        ModuleSel::Hottest
+    } else {
+        let idx = sel.strip_prefix('m').and_then(|v| v.parse::<usize>().ok()).ok_or_else(
+            || FhError::Config(format!("--faults: module target `{sel}` is not `hot` or `mI`")),
+        )?;
+        ModuleSel::Index(idx)
+    };
+    if let Some(extra) = parts.next() {
+        return Err(FhError::Config(format!("--faults: module has extra field `{extra}`")));
+    }
+    Ok(FaultSpec { at, kind: FaultKind::ModuleFailure { module } })
+}
+
+fn parse_degrade(body: &str) -> Result<FaultSpec> {
+    let mut parts = body.split(':');
+    let at = Seconds::new(num(parts.next().unwrap_or(""), "degrade time")?);
+    let mut factor = None;
+    let mut duration = None;
+    for p in parts {
+        if let Some(v) = p.strip_prefix('x') {
+            factor = Some(num(v, "degrade factor")?);
+        } else if let Some(v) = p.strip_prefix('d') {
+            duration = Some(Seconds::new(num(v, "degrade duration")?));
+        } else {
+            return Err(FhError::Config(format!(
+                "--faults: degrade field `{p}` is not `xF` or `dD`"
+            )));
+        }
+    }
+    let factor = factor
+        .ok_or_else(|| FhError::Config("--faults: degrade needs a factor (`:xF`)".into()))?;
+    let duration = duration
+        .ok_or_else(|| FhError::Config("--faults: degrade needs a duration (`:dD`)".into()))?;
+    Ok(FaultSpec { at, kind: FaultKind::LinkDegrade { factor, duration } })
+}
+
+/// Materialise the `random:` spec: an independent seeded Poisson
+/// process per fault class (exponential inter-fault gaps at the class
+/// rate) over `[0, horizon)`. Classes draw from decorrelated
+/// substreams of the one seed, in the fixed order crash → module →
+/// degrade, so adding one class never perturbs another's timeline.
+fn parse_random(body: &str, replicas: usize) -> Result<Vec<FaultSpec>> {
+    let mut seed = None;
+    let mut horizon = None;
+    let mut crash_rate = 0.0f64;
+    let mut module_rate = 0.0f64;
+    let mut degrade_rate = 0.0f64;
+    let mut repair = DEFAULT_REPAIR;
+    for p in body.split(':') {
+        if let Some(v) = p.strip_prefix("seed=") {
+            seed = Some(v.parse::<u64>().map_err(|_| {
+                FhError::Config(format!("--faults: random seed `{v}` is not an integer"))
+            })?);
+        } else if let Some(v) = p.strip_prefix("horizon=") {
+            horizon = Some(num(v, "random horizon")?);
+        } else if let Some(v) = p.strip_prefix("crash=") {
+            crash_rate = num(v, "crash rate")?;
+        } else if let Some(v) = p.strip_prefix("module=") {
+            module_rate = num(v, "module rate")?;
+        } else if let Some(v) = p.strip_prefix("degrade=") {
+            degrade_rate = num(v, "degrade rate")?;
+        } else if let Some(v) = p.strip_prefix("repair=") {
+            repair = Seconds::new(num(v, "repair time")?);
+        } else {
+            return Err(FhError::Config(format!("--faults: unknown random field `{p}`")));
+        }
+    }
+    let seed =
+        seed.ok_or_else(|| FhError::Config("--faults: random needs `seed=S`".into()))?;
+    let horizon = horizon
+        .filter(|h| *h > 0.0)
+        .ok_or_else(|| FhError::Config("--faults: random needs `horizon=H` > 0".into()))?;
+    let mut out = Vec::new();
+    for (class, rate) in
+        [("crash", crash_rate), ("module", module_rate), ("degrade", degrade_rate)]
+    {
+        if rate <= 0.0 {
+            continue;
+        }
+        let salt = class.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+        let mut rng = XorShift::new(splitmix64(seed ^ salt));
+        let mut t = rng.exp(1.0 / rate);
+        while t < horizon {
+            let at = Seconds::new(t);
+            let kind = match class {
+                "crash" => FaultKind::ReplicaCrash {
+                    replica: (rng.next_u64() % replicas.max(1) as u64) as usize,
+                    repair,
+                },
+                "module" => FaultKind::ModuleFailure { module: ModuleSel::Hottest },
+                _ => FaultKind::LinkDegrade {
+                    factor: 0.25 + 0.5 * rng.next_f64(),
+                    duration: Seconds::new(horizon / 10.0),
+                },
+            };
+            out.push(FaultSpec { at, kind });
+            t += rng.exp(1.0 / rate);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_default_schedules_are_passthrough() {
+        assert!(FaultSchedule::default().is_empty());
+        assert!(FaultSchedule::default().timeline().is_empty());
+        let s = FaultSchedule::parse("", 4).unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.window, DEFAULT_FAULT_WINDOW);
+        assert_eq!(s.epsilon, DEFAULT_FAULT_EPSILON);
+    }
+
+    #[test]
+    fn explicit_grammar_round_trips() {
+        let s = FaultSchedule::parse(
+            "crash@0.5:r1:repair0.2, module@1.0:hot, module@2:m3, degrade@0.1:x0.5:d0.3, \
+             window=0.1, eps=0.02",
+            4,
+        )
+        .unwrap();
+        assert_eq!(s.events.len(), 4);
+        assert_eq!(s.window, Seconds::new(0.1));
+        assert_eq!(s.epsilon, 0.02);
+        assert_eq!(
+            s.events[0],
+            FaultSpec {
+                at: Seconds::new(0.5),
+                kind: FaultKind::ReplicaCrash { replica: 1, repair: Seconds::new(0.2) },
+            }
+        );
+        assert_eq!(s.events[1].kind, FaultKind::ModuleFailure { module: ModuleSel::Hottest });
+        assert_eq!(s.events[2].kind, FaultKind::ModuleFailure { module: ModuleSel::Index(3) });
+        assert_eq!(
+            s.events[3].kind,
+            FaultKind::LinkDegrade { factor: 0.5, duration: Seconds::new(0.3) }
+        );
+    }
+
+    #[test]
+    fn crash_defaults_and_bounds() {
+        let s = FaultSchedule::parse("crash@1:r0", 2).unwrap();
+        assert_eq!(
+            s.events[0].kind,
+            FaultKind::ReplicaCrash { replica: 0, repair: DEFAULT_REPAIR }
+        );
+        assert!(FaultSchedule::parse("crash@1:r2", 2).is_err(), "out-of-fleet replica");
+        assert!(FaultSchedule::parse("crash@1", 2).is_err(), "missing replica");
+        assert!(FaultSchedule::parse("crash@1:x0", 2).is_err(), "bad target");
+        assert!(FaultSchedule::parse("crash@-1:r0", 2).is_err(), "negative time");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        for bad in [
+            "explode@1:r0",
+            "module@1",
+            "module@1:q2",
+            "degrade@1:x0.5",
+            "degrade@1:d0.5",
+            "degrade@1:x0:d1",
+            "degrade@1:x2:d1",
+            "degrade@1:x0.5:d0",
+            "window=0",
+            "eps=nan",
+            "crash@nan:r0",
+            "random:horizon=1",
+            "random:seed=1",
+            "random:seed=1:horizon=1:bogus=2",
+        ] {
+            assert!(FaultSchedule::parse(bad, 4).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn timeline_derives_rejoins_in_stable_time_order() {
+        let s = FaultSchedule::parse("crash@1:r0:repair0.5, module@1.2:hot", 2).unwrap();
+        let t = s.timeline();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].at, Seconds::new(1.0));
+        assert!(matches!(t[0].kind, FaultKind::ReplicaCrash { .. }));
+        assert_eq!(t[1].at, Seconds::new(1.2));
+        assert!(matches!(t[1].kind, FaultKind::ModuleFailure { .. }));
+        assert_eq!(t[2].at, Seconds::new(1.5));
+        assert_eq!(t[2].kind, FaultKind::ReplicaRejoin { replica: 0 });
+        // Zero repair: the crash still precedes its own rejoin.
+        let s = FaultSchedule::parse("crash@1:r0:repair0", 2).unwrap();
+        let t = s.timeline();
+        assert!(matches!(t[0].kind, FaultKind::ReplicaCrash { .. }));
+        assert!(matches!(t[1].kind, FaultKind::ReplicaRejoin { .. }));
+        assert_eq!(t[0].at, t[1].at);
+    }
+
+    #[test]
+    fn random_process_is_seeded_and_bounded() {
+        let spec = "random:seed=7:horizon=10:crash=0.5:module=0.3:degrade=0.2";
+        let a = FaultSchedule::parse(spec, 4).unwrap();
+        let b = FaultSchedule::parse(spec, 4).unwrap();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty(), "rates over a 10 s horizon should fire");
+        for e in &a.events {
+            assert!(e.at.value() >= 0.0 && e.at.value() < 10.0);
+            if let FaultKind::ReplicaCrash { replica, repair } = e.kind {
+                assert!(replica < 4);
+                assert_eq!(repair, DEFAULT_REPAIR);
+            }
+            if let FaultKind::LinkDegrade { factor, duration } = e.kind {
+                assert!((0.25..0.75).contains(&factor));
+                assert_eq!(duration, Seconds::new(1.0));
+            }
+        }
+        let c = FaultSchedule::parse("random:seed=8:horizon=10:crash=0.5", 4).unwrap();
+        assert_ne!(a.events, c.events, "different seeds diverge");
+        // Dropping a class never perturbs the surviving classes.
+        let crash_only = FaultSchedule::parse("random:seed=7:horizon=10:crash=0.5", 4).unwrap();
+        let crashes: Vec<_> = a
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FaultKind::ReplicaCrash { .. }))
+            .cloned()
+            .collect();
+        assert_eq!(crash_only.events, crashes);
+    }
+
+    #[test]
+    fn random_mixes_with_explicit_items() {
+        let s =
+            FaultSchedule::parse("crash@0.5:r0, random:seed=3:horizon=5:module=1.0", 2).unwrap();
+        assert!(s.events.len() >= 2);
+        assert!(matches!(s.events[0].kind, FaultKind::ReplicaCrash { .. }));
+        let t = s.timeline();
+        for w in t.windows(2) {
+            assert!(w[0].at <= w[1].at, "timeline must be time-sorted");
+        }
+    }
+}

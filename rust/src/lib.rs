@@ -24,6 +24,9 @@
 //!   disaggregated prefill/decode pools, front-door load shedding, an
 //!   SLO-driven elastic autoscaler, and a cluster-wide shared prefix-KV
 //!   cache in the TAB pool (cross-replica prefill reuse);
+//! * [`faults`] — deterministic fault injection and recovery accounting
+//!   (replica crash/rejoin, TAB module failure, link degradation) with a
+//!   strict bit-identical passthrough when no schedule is armed;
 //! * [`cli`] — unit-tested flag parsing for the `fenghuang` binary;
 //! * [`traffic`] — deterministic open-loop workload engine: seedable
 //!   RNG, arrival processes (Poisson / bursty / diurnal / replay), and
@@ -44,6 +47,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod fabric;
+pub mod faults;
 pub mod hardware;
 pub mod models;
 pub mod paging;

@@ -14,6 +14,7 @@
 //!                    [--autoscale [on|off]] [--autoscale-min N]
 //!                    [--shed-tokens T]
 //!                    [--fabric-contention [off|shared|per-module]]
+//!                    [--faults SPEC]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //! fenghuang help
@@ -28,8 +29,9 @@
 
 use fenghuang::cli::{
     check_contention_fabric, check_disaggregate_replicas, cli_err, flag, parse_disaggregate,
-    parse_fabric_contention, parse_flags, parse_prefix_cache, positive, switch, system_by_name,
-    PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS, SIMULATE_FLAGS, TRAFFIC_FLAGS,
+    parse_fabric_contention, parse_faults, parse_flags, parse_prefix_cache, positive, switch,
+    system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS, SIMULATE_FLAGS,
+    TRAFFIC_FLAGS,
 };
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::PrefixCacheConfig;
@@ -58,6 +60,8 @@ USAGE:
                      [--mix chat|rag|agentic|batch, '+'-combined, e.g. chat+rag]
                      [--slo-ttft-ms 2000] [--slo-tpot-ms 80] [--seed 42]
                      [--autoscale [on|off]] [--autoscale-min 1] [--shed-tokens T]
+                     [--faults 'crash@T:rN[:repairX],module@T:hot|mI,degrade@T:xF:dD,
+                               random:seed=S:horizon=H[:crash=R][:module=R][:degrade=R]']
   fenghuang page     [--model gpt3] [--system fh4-1.5xm|fh4-2.0xm] [--remote-tbps 4.8]
                      [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
@@ -93,6 +97,8 @@ fn run_serve(args: &[String]) -> Result<()> {
     // The serve rack is always FH4 (TAB), so the flag cannot conflict
     // with the fabric here; `Cluster::new` still enforces the rule.
     let contention = parse_fabric_contention(&f)?;
+    let fleet = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
+    let faults = parse_faults(&f, fleet)?;
     let kv_budget = match f.get("kv-budget-gb") {
         Some(v) => {
             let gb: f64 = v
@@ -120,6 +126,7 @@ fn run_serve(args: &[String]) -> Result<()> {
             kv_budget,
             prefix_cache,
             contention,
+            faults,
         );
     }
     if replicas <= 1
@@ -128,6 +135,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         && kv_budget.is_none()
         && prefix_cache.is_none()
         && contention.mode == ContentionMode::Off
+        && faults.is_none()
     {
         // Single node, no routing: the original serving path.
         println!("{}", fenghuang::coordinator::demo_serve(&m, requests, max_batch)?);
@@ -145,6 +153,7 @@ fn run_serve(args: &[String]) -> Result<()> {
                 kv_budget,
                 prefix_cache,
                 contention,
+                faults,
             )?
         );
     }
@@ -166,6 +175,7 @@ fn run_serve_traffic(
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
     contention: ContentionConfig,
+    faults: Option<fenghuang::faults::FaultSchedule>,
 ) -> Result<()> {
     use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
 
@@ -248,6 +258,7 @@ fn run_serve_traffic(
         autoscale,
         prefix_cache,
         contention,
+        faults,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);

@@ -13,6 +13,7 @@ use fenghuang::coordinator::{
 };
 use fenghuang::coordinator::metrics::LatencyStat;
 use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
+use fenghuang::faults::FaultSchedule;
 use fenghuang::models::arch::gpt3_175b;
 use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
 use fenghuang::units::{Bytes, Seconds};
@@ -128,6 +129,30 @@ fn observe(r: &ClusterReport) -> Vec<(String, u64)> {
         }
     } else {
         out.push(("fab.none".to_string(), 0));
+    }
+    if let Some(ft) = &r.faults {
+        for (k, v) in [
+            ("crashes", ft.crashes as f64),
+            ("rejoins", ft.rejoins as f64),
+            ("module_failures", ft.module_failures as f64),
+            ("link_degrades", ft.link_degrades as f64),
+            ("requeued", ft.requests_requeued as f64),
+            ("reprefilled", ft.requests_reprefilled as f64),
+            ("tokens_lost", ft.tokens_lost as f64),
+            ("bytes_invalidated", ft.bytes_invalidated.value()),
+            ("extents_invalidated", ft.extents_invalidated as f64),
+            ("first_fault", ft.first_fault.map(|s| s.value()).unwrap_or(-1.0)),
+            ("baseline_attainment", ft.baseline_attainment),
+            ("dip_attainment", ft.dip_attainment),
+            ("slo_dip", ft.slo_dip),
+            ("recovery_time", ft.recovery_time.map(|s| s.value()).unwrap_or(-1.0)),
+            ("recovered", ft.recovered as u8 as f64),
+            ("goodput_lost", ft.goodput_lost_tokens),
+        ] {
+            bits(&format!("faults.{k}"), v, &mut out);
+        }
+    } else {
+        out.push(("faults.none".to_string(), 0));
     }
     out
 }
@@ -326,6 +351,153 @@ fn equiv_rejection_and_affinity() {
         },
         4,
         reqs,
+    );
+}
+
+fn fault_spec(spec: &str, replicas: usize) -> Option<FaultSchedule> {
+    Some(FaultSchedule::parse(spec, replicas).expect("fault spec"))
+}
+
+#[test]
+fn equiv_fault_crash_midrun() {
+    // A replica crash mid-run: evacuation order, router release/mark-dead
+    // sequencing and the re-admission routing must be identical — any
+    // divergence shifts every later decision.
+    assert_equivalent(
+        "fault-crash",
+        ClusterConfig {
+            faults: fault_spec("crash@0.02:r1:repair0.05", 4),
+            ..Default::default()
+        },
+        4,
+        session_workload(24, 6, 512, 12, Seconds::ms(2.0)),
+    );
+}
+
+#[test]
+fn equiv_fault_crash_elastic() {
+    // Crash + rejoin interleaved with autoscaler ticks: the merged
+    // fault/tick loop in the stepping core must replay the event
+    // calendar's class order (fault before tick at equal instants).
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 12.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").unwrap(),
+        requests: 32,
+        seed: 11,
+        max_prompt: 4096,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "fault-crash-elastic",
+        ClusterConfig {
+            autoscale: Some(AutoscaleConfig { target_tokens: 2048, ..Default::default() }),
+            faults: fault_spec("crash@0.4:r2:repair0.3", 3),
+            ..Default::default()
+        },
+        3,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_fault_module_failure() {
+    // TAB module failure under the shared prefix cache: trie-ledger
+    // invalidation plus queued-grant revocation, hottest-module
+    // selection included.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 32,
+        seed: 17,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "fault-module",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            faults: fault_spec("module@0.3:hot,module@0.9:m0", 4),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_fault_link_degrade() {
+    // Link degradation over the arbitrated fabric: the shrunken window
+    // budgets stretch every booking identically in both cores.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 32,
+        seed: 19,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "fault-degrade",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+            faults: fault_spec("degrade@0.1:x0.25:d0.5", 4),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_fault_combined() {
+    // All three fault classes in one schedule against the full feature
+    // stack (prefix cache + per-module arbitration).
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("chat+agentic").unwrap(),
+        requests: 40,
+        seed: 23,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "fault-combined",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            contention: ContentionConfig {
+                mode: ContentionMode::PerModule,
+                ..Default::default()
+            },
+            faults: fault_spec(
+                "degrade@0.05:x0.5:d0.4,crash@0.2:r3:repair0.25,module@0.35:hot",
+                4,
+            ),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_empty_fault_schedule() {
+    // An armed-but-empty schedule (knobs only, no events) must still be
+    // a passthrough in both cores — and agree with the no-schedule run
+    // on every non-fault observable.
+    assert_equivalent(
+        "fault-empty",
+        ClusterConfig {
+            faults: Some(FaultSchedule::default()),
+            ..Default::default()
+        },
+        2,
+        session_workload(16, 4, 256, 8, Seconds::ms(5.0)),
     );
 }
 

@@ -1,0 +1,260 @@
+//! Property tests for the fault-injection subsystem (DESIGN.md §Faults).
+//!
+//! Invariants pinned:
+//! * **passthrough** — an absent schedule and an armed-but-empty one
+//!   produce bit-identical fleet metrics on both cluster cores: the
+//!   fault machinery must cost a healthy run nothing, not even an f64
+//!   rounding step;
+//! * **conservation** — every submitted request is completed, rejected
+//!   or shed exactly once, crashes and re-admissions included;
+//! * **blast radius** — `PrefixCache::fail_module` invalidates exactly
+//!   the bytes the per-module ledger attributed to the dead module, for
+//!   both striped and hashed placement;
+//! * **determinism** — a seeded random schedule materialises the same
+//!   timeline every parse, and a faulted run replays bit-identically;
+//! * **golden scenario** — a fixed three-fault schedule reports exactly
+//!   the per-class counts and recovery shape it was constructed to.
+
+use fenghuang::config::fh4_15xm;
+use fenghuang::coordinator::{
+    session_workload, Cluster, ClusterConfig, ClusterReport, PoolPlacement, PrefixCache,
+    PrefixCacheConfig,
+};
+use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
+use fenghuang::faults::{FaultKind, FaultSchedule};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::models::memory;
+use fenghuang::units::{Bandwidth, Bytes, Seconds};
+
+fn run_cluster(cfg: ClusterConfig, replicas: usize, n: usize) -> ClusterReport {
+    let mut cluster = Cluster::fh4(replicas, &gpt3_175b(), cfg).expect("cluster");
+    cluster
+        .run(session_workload(n, 6, 512, 12, Seconds::ms(2.0)))
+        .expect("run")
+}
+
+/// The non-fault observables a passthrough must hold bit-identical.
+fn fingerprint(r: &ClusterReport) -> Vec<u64> {
+    vec![
+        (r.fleet.completed as f64).to_bits(),
+        (r.fleet.rejected as f64).to_bits(),
+        (r.fleet.shed as f64).to_bits(),
+        (r.fleet.tokens_generated as f64).to_bits(),
+        r.fleet.clock.value().to_bits(),
+        r.fleet.busy.value().to_bits(),
+        r.fleet.prefix_fetch.value().to_bits(),
+        r.fleet.fabric_wait.value().to_bits(),
+        r.fleet.ttft.mean_ms().to_bits(),
+        r.fleet.ttft.percentile_ms(99.0).to_bits(),
+        r.fleet.tpot.mean_ms().to_bits(),
+        r.fleet.e2e.percentile_ms(95.0).to_bits(),
+        r.imbalance.to_bits(),
+        r.replica_seconds.to_bits(),
+        r.kv_spilled_peak.value().to_bits(),
+    ]
+}
+
+#[test]
+fn empty_schedule_is_bit_identical_passthrough() {
+    let featureful = || ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        contention: ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+        ..Default::default()
+    };
+    let absent = run_cluster(featureful(), 4, 24);
+    let empty = run_cluster(
+        ClusterConfig { faults: Some(FaultSchedule::default()), ..featureful() },
+        4,
+        24,
+    );
+    assert_eq!(fingerprint(&absent), fingerprint(&empty), "event core passthrough");
+    assert!(absent.faults.is_none(), "no schedule → no fault report");
+    let fr = empty.faults.as_ref().expect("armed schedule reports");
+    assert_eq!(fr.crashes + fr.module_failures + fr.link_degrades, 0);
+    assert!(fr.recovered, "a fault-free run is trivially recovered");
+
+    // Stepping core: same passthrough law.
+    let mut a = Cluster::fh4(4, &gpt3_175b(), featureful()).expect("cluster");
+    let sa = a
+        .run_stepping(session_workload(24, 6, 512, 12, Seconds::ms(2.0)))
+        .expect("stepping");
+    let mut b = Cluster::fh4(
+        4,
+        &gpt3_175b(),
+        ClusterConfig { faults: Some(FaultSchedule::default()), ..featureful() },
+    )
+    .expect("cluster");
+    let sb = b
+        .run_stepping(session_workload(24, 6, 512, 12, Seconds::ms(2.0)))
+        .expect("stepping");
+    assert_eq!(fingerprint(&sa), fingerprint(&sb), "stepping core passthrough");
+}
+
+#[test]
+fn conservation_holds_under_crash_faults() {
+    let n = 32;
+    let cfg = ClusterConfig {
+        faults: Some(
+            FaultSchedule::parse("crash@0.01:r1:repair0.05,crash@0.03:r2:repair0.1", 4)
+                .expect("spec"),
+        ),
+        ..Default::default()
+    };
+    let r = run_cluster(cfg, 4, n);
+    let fr = r.faults.as_ref().expect("fault report");
+    assert_eq!(fr.crashes, 2);
+    assert_eq!(fr.rejoins, 2, "every crash derives its rejoin");
+    assert!(fr.requests_requeued > 0, "mid-run crashes must evacuate work");
+    assert_eq!(
+        r.fleet.completed + r.fleet.rejected + r.fleet.shed,
+        n as u64,
+        "every request is completed, rejected or shed exactly once \
+         (requeued {} / lost {} tokens)",
+        fr.requests_requeued,
+        fr.tokens_lost,
+    );
+}
+
+#[test]
+fn module_blast_radius_matches_the_ledger() {
+    let sys = fh4_15xm(Bandwidth::tbps(4.8));
+    let model = gpt3_175b();
+    for placement in [PoolPlacement::Striped, PoolPlacement::Hashed] {
+        let mut pc = PrefixCache::new(
+            PrefixCacheConfig { modules: 8, placement, max_tokens: 64, ..Default::default() },
+            &sys,
+            &model,
+        )
+        .expect("cache");
+        // 16 chains with distinct first tokens — chain-granular homing
+        // spreads (striped) or collides (hashed) across the 8 modules.
+        for s in 0..16i32 {
+            let prompt: Vec<i32> = (0..32).map(|i| s * 64 + i + 1).collect();
+            assert!(pc.insert(&prompt, 0) > 0, "fresh chain must insert");
+        }
+        let per_module: Vec<Bytes> = (0..8).map(|m| pc.module_bytes(m)).collect();
+        let total: f64 = per_module.iter().map(|b| b.value()).sum();
+        let bpt = memory::kv_cache_bytes(&model, 1, 1);
+        assert!(
+            (total - bpt.value() * 16.0 * 32.0).abs() < 1e-3,
+            "ledger must account every inserted extent ({placement:?})"
+        );
+        let hot = pc.hottest_module();
+        assert!(
+            per_module.iter().all(|b| b.value() <= per_module[hot].value()),
+            "hottest_module must name the max ({placement:?})"
+        );
+        // Kill every module in turn: each blast radius is exactly what
+        // the ledger said, and the pool ends empty.
+        for m in 0..8 {
+            let before = pc.module_bytes(m);
+            let (bytes, extents) = pc.fail_module(m);
+            assert_eq!(bytes.value(), before.value(), "blast == ledger ({placement:?}, m{m})");
+            assert_eq!(pc.module_bytes(m).value(), 0.0);
+            if before.value() > 0.0 {
+                assert!(extents > 0);
+            }
+        }
+        assert!((0..8).all(|m| pc.module_bytes(m).value() == 0.0));
+        // A killed prefix is a miss, then re-inserts cold.
+        let prompt: Vec<i32> = (0..32).map(|i| i + 1).collect();
+        assert_eq!(pc.lookup(&prompt).tokens, 0, "dead extents must not hit");
+        assert!(pc.insert(&prompt, 0) > 0, "re-publication after failure");
+    }
+}
+
+#[test]
+fn hashed_placement_concentrates_at_least_as_much_as_striped() {
+    let sys = fh4_15xm(Bandwidth::tbps(4.8));
+    let model = gpt3_175b();
+    let hot_bytes = |placement: PoolPlacement| -> f64 {
+        let mut pc = PrefixCache::new(
+            PrefixCacheConfig { modules: 8, placement, max_tokens: 64, ..Default::default() },
+            &sys,
+            &model,
+        )
+        .expect("cache");
+        for s in 0..16i32 {
+            let prompt: Vec<i32> = (0..32).map(|i| s * 64 + i + 1).collect();
+            pc.insert(&prompt, 0);
+        }
+        pc.module_bytes(pc.hottest_module()).value()
+    };
+    let striped = hot_bytes(PoolPlacement::Striped);
+    let hashed = hot_bytes(PoolPlacement::Hashed);
+    assert!(striped > 0.0 && hashed > 0.0);
+    // Round-robin chain placement is the uniform lower bound; hashing 16
+    // chains into 8 modules collides by pigeonhole, so its hottest
+    // module carries at least the striped share.
+    assert!(
+        hashed >= striped - 1e-9,
+        "hashed hottest module {hashed:.1} B below striped {striped:.1} B"
+    );
+}
+
+#[test]
+fn random_schedules_and_faulted_runs_are_deterministic() {
+    let spec = "random:seed=9:horizon=0.5:crash=4.0:module=2.0:degrade=2.0";
+    let a = FaultSchedule::parse(spec, 4).expect("spec");
+    let b = FaultSchedule::parse(spec, 4).expect("spec");
+    assert_eq!(a, b, "same seed → same materialised timeline");
+    assert!(!a.is_empty(), "rates × horizon chosen to land events");
+    // Crash targets must stay inside the fleet.
+    for e in &a.events {
+        if let FaultKind::ReplicaCrash { replica, .. } = e.kind {
+            assert!(replica < 4);
+        }
+    }
+    // A faulted cluster run replays bit-identically (no hidden clocks,
+    // no ambient randomness in the fault paths).
+    let cfg = || ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        faults: Some(FaultSchedule::parse("crash@0.02:r1:repair0.05,module@0.04:hot", 4).unwrap()),
+        ..Default::default()
+    };
+    let r1 = run_cluster(cfg(), 4, 24);
+    let r2 = run_cluster(cfg(), 4, 24);
+    assert_eq!(fingerprint(&r1), fingerprint(&r2), "faulted runs must replay exactly");
+    let (f1, f2) = (r1.faults.unwrap(), r2.faults.unwrap());
+    assert_eq!(f1.requests_requeued, f2.requests_requeued);
+    assert_eq!(f1.tokens_lost, f2.tokens_lost);
+    assert_eq!(f1.slo_dip.to_bits(), f2.slo_dip.to_bits());
+}
+
+#[test]
+fn golden_three_fault_scenario_reports_its_shape() {
+    let cfg = ClusterConfig {
+        prefix_cache: Some(PrefixCacheConfig::default()),
+        contention: ContentionConfig { mode: ContentionMode::Shared, ..Default::default() },
+        faults: Some(
+            FaultSchedule::parse(
+                "degrade@0.005:x0.5:d0.1,crash@0.02:r1:repair0.08,module@0.03:hot,window=0.02",
+                4,
+            )
+            .expect("spec"),
+        ),
+        ..Default::default()
+    };
+    let r = run_cluster(cfg, 4, 32);
+    let fr = r.faults.as_ref().expect("fault report");
+    assert_eq!(fr.crashes, 1);
+    assert_eq!(fr.rejoins, 1);
+    assert_eq!(fr.module_failures, 1);
+    assert_eq!(fr.link_degrades, 1);
+    assert_eq!(fr.first_fault.map(|s| s.value()), Some(0.005));
+    assert!(fr.window.value() > 0.0);
+    assert!(
+        fr.bytes_invalidated.value() > 0.0,
+        "a hot-module kill under agentic-style sessions must invalidate bytes"
+    );
+    assert!(fr.baseline_attainment >= 0.0 && fr.baseline_attainment <= 1.0);
+    assert!(fr.dip_attainment >= 0.0 && fr.dip_attainment <= 1.0);
+    assert!(fr.slo_dip >= 0.0);
+    // The summary line carries the per-class counts for the CLI.
+    let line = fr.summary_line();
+    assert!(line.contains("1 crash"), "{line}");
+    assert!(line.contains("1 module"), "{line}");
+    assert!(line.contains("1 degrade"), "{line}");
+    // All work still conserved.
+    assert_eq!(r.fleet.completed + r.fleet.rejected + r.fleet.shed, 32);
+}

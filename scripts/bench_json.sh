@@ -1,23 +1,24 @@
 #!/usr/bin/env bash
 # Emit the machine-readable bench artifacts (BENCH_*.json at the repo
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
-# §Serve-Scale, §Traffic-Sweep).
+# §Serve-Scale, §Traffic-Sweep, §Fault-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention + fault_sweep
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
 #   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
 #   scripts/bench_json.sh prefix     # just the shared prefix-cache sweep
 #   scripts/bench_json.sh contention # just the shared-fabric contention sweep
+#   scripts/bench_json.sh faults     # just the fault-injection sweep
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 want="${1:-all}"
 
 case "$want" in
-    all|paging|serve|traffic|prefix|contention) ;;
+    all|paging|serve|traffic|prefix|contention|faults) ;;
     *)
-        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix or contention)" >&2
+        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix, contention or faults)" >&2
         exit 2
         ;;
 esac
@@ -40,6 +41,9 @@ if [[ "$want" == "all" || "$want" == "prefix" ]]; then
 fi
 if [[ "$want" == "all" || "$want" == "contention" ]]; then
     cargo bench --bench fabric_contention -- --json
+fi
+if [[ "$want" == "all" || "$want" == "faults" ]]; then
+    cargo bench --bench fault_sweep -- --json
 fi
 
 echo

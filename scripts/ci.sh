@@ -71,6 +71,7 @@ BENCHES=(
     ablations
     collective_speedup
     fabric_contention
+    fault_sweep
     fig1_trends
     fig2_hw_trends
     fig2_model_trends
