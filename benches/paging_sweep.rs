@@ -10,12 +10,19 @@
 //! slowdown stays inside the paper's "performance maintained" envelope
 //! while local capacity drops ≥ 90% vs the Baseline8 144 GB HBM.
 //!
+//! A second grid sweeps the 3-tier hierarchy (DESIGN.md §Tiering):
+//! local budget × pool share × flash multiple, with the stable heat
+//! bands homed on high-bandwidth flash. Expected shape: the smallest
+//! feasible local budget shrinks monotonically as the flash tier grows
+//! (flash room displaces permanently-HBM-homed bytes), and a flash tier
+//! behind a roomy pool reproduces the 2-tier numbers bit for bit.
+//!
 //! `cargo bench --bench paging_sweep -- --json` additionally writes
 //! `BENCH_paging_sweep.json` at the repo root (scripts/bench_json.sh).
 
 mod common;
 
-use fenghuang::config::fh4_15xm;
+use fenghuang::config::{fh4_15xm, FlashConfig, DEFAULT_FLASH_TBPS};
 use fenghuang::models::arch::{gpt3_175b, grok1, qwen3_235b};
 use fenghuang::paging::{
     simulate_paged, NmcConfig, PagingConfig, PlacementPolicy, PolicyKind,
@@ -119,6 +126,133 @@ fn main() {
         }
     }
 
+    // 3-tier flash grid: local budget × pool share × flash multiple,
+    // all in units of the model's working set (minimal residency).
+    let mut flash_rows: Vec<String> = Vec::new();
+    let shares: &[f64] = if smoke { &[0.25] } else { &[0.25, 0.50] };
+    let mults: &[f64] = if smoke { &[0.25, 1.00] } else { &[0.25, 0.50, 1.00] };
+    let lfracs: &[f64] = if smoke { &[0.20, 0.50] } else { &[0.10, 0.20, 0.50] };
+    println!(
+        "\n== flash capacity grid (minimal residency, flash @ {DEFAULT_FLASH_TBPS} TB/s) =="
+    );
+    for model in models.clone() {
+        let full_cfg = PagingConfig {
+            policy: PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() },
+            steps: 2,
+            ..Default::default()
+        };
+        let full = simulate_paged(&sys, &model, batch, phase, &full_cfg).expect("full residency");
+        let ws_gb = full.working_set.as_gb();
+        // Pin the 2-tier contract: a flash tier behind an uncapped pool
+        // never receives a band, so every observable must match the
+        // flash-less run bit for bit.
+        let mut echo_sys = sys.clone();
+        echo_sys.flash = Some(FlashConfig::gb(2.0 * ws_gb));
+        let echo = simulate_paged(&echo_sys, &model, batch, phase, &full_cfg)
+            .expect("flash echo");
+        assert_eq!(echo.steady_step, full.steady_step, "{}: flash-off echo", model.name);
+        assert_eq!(echo.cold_step, full.cold_step, "{}: flash-off echo", model.name);
+        assert_eq!(echo.peak_local, full.peak_local, "{}: flash-off echo", model.name);
+        assert_eq!(
+            echo.migration.bytes_in, full.migration.bytes_in,
+            "{}: flash-off echo",
+            model.name
+        );
+        assert_eq!(echo.migration.flash_pages_in, 0, "{}: nothing may touch flash", model.name);
+
+        println!(
+            "\n{}: working set {ws_gb:.1} GB/GPU (pool share × flash multiple grid)",
+            model.name
+        );
+        println!(
+            "{:>6} {:>6} {:>6} {:>11} {:>9} {:>9} {:>9} {:>8}",
+            "share", "flash", "local", "steady ms", "slowdown", "flash GB", "HBM GB", "peak GB"
+        );
+        for &share in shares {
+            // The smallest feasible local budget can only shrink as the
+            // flash tier grows: flash room displaces bytes that would
+            // otherwise be permanently HBM-homed.
+            let mut prev_min: Option<f64> = None;
+            for &mult in mults {
+                let mut fsys = sys.clone();
+                fsys.flash = Some(FlashConfig {
+                    capacity: Bytes::gb(ws_gb * mult),
+                    bandwidth: Bandwidth::tbps(DEFAULT_FLASH_TBPS),
+                });
+                let mut min_feasible: Option<f64> = None;
+                for &lf in lfracs {
+                    let cfg = PagingConfig {
+                        local_budget: Some(Bytes::gb(ws_gb * lf)),
+                        pool_budget: Some(Bytes::gb(ws_gb * share)),
+                        steps: 2,
+                        ..Default::default()
+                    };
+                    match simulate_paged(&fsys, &model, batch, phase, &cfg) {
+                        Ok(r) => {
+                            min_feasible = min_feasible.or(Some(lf));
+                            let slowdown = r.steady_step / full.steady_step;
+                            println!(
+                                "{:>5.0}% {:>5.0}% {:>5.0}% {:>11.3} {:>8.3}x {:>9.2} {:>9.2} {:>8.2}",
+                                share * 100.0,
+                                mult * 100.0,
+                                lf * 100.0,
+                                r.steady_step.as_ms(),
+                                slowdown,
+                                r.flash_homed.as_gb(),
+                                r.local_homed.as_gb(),
+                                r.peak_local.as_gb(),
+                            );
+                            flash_rows.push(format!(
+                                "{{\"model\": {}, \"policy\": {}, \"budget_frac\": {lf}, \
+                                 \"budget_gb\": {:.3}, \"pool_share\": {share}, \
+                                 \"pool_gb\": {:.3}, \"flash_mult\": {mult}, \
+                                 \"flash_gb\": {:.3}, \"flash_bw_tbps\": {DEFAULT_FLASH_TBPS}, \
+                                 \"steady_ms\": {:.6}, \"full_ms\": {:.6}, \
+                                 \"slowdown\": {:.4}, \"peak_gb\": {:.3}, \
+                                 \"flash_homed_gb\": {:.3}, \"hbm_homed_gb\": {:.3}, \
+                                 \"flash_paged_gb\": {:.3}}}",
+                                common::json_str(&model.name),
+                                common::json_str(PolicyKind::MinimalResidency.name()),
+                                ws_gb * lf,
+                                ws_gb * share,
+                                ws_gb * mult,
+                                r.steady_step.as_ms(),
+                                full.steady_step.as_ms(),
+                                r.steady_step / full.steady_step,
+                                r.peak_local.as_gb(),
+                                r.flash_homed.as_gb(),
+                                r.local_homed.as_gb(),
+                                r.migration.flash_bytes_in.as_gb(),
+                            ));
+                        }
+                        Err(e) => println!(
+                            "{:>5.0}% {:>5.0}% {:>5.0}%   infeasible ({e})",
+                            share * 100.0,
+                            mult * 100.0,
+                            lf * 100.0,
+                        ),
+                    }
+                }
+                if let Some(p) = prev_min {
+                    let c = min_feasible.unwrap_or_else(|| {
+                        panic!(
+                            "{} share {share}: feasibility regressed — flash ×{mult} \
+                             serves no budget a smaller tier served",
+                            model.name
+                        )
+                    });
+                    assert!(
+                        c <= p + 1e-12,
+                        "{} share {share}: min feasible local frac rose {p} → {c} \
+                         as flash grew to ×{mult}",
+                        model.name
+                    );
+                }
+                prev_min = min_feasible.or(prev_min);
+            }
+        }
+    }
+
     // NMC ablation at the paper-band budget.
     println!("\n== NMC offload ablation (minimal residency, 15% budget) ==");
     for model in models {
@@ -151,7 +285,7 @@ fn main() {
     }
 
     if common::json_requested() {
-        let json_rows: Vec<String> = rows
+        let mut json_rows: Vec<String> = rows
             .iter()
             .map(|r| {
                 format!(
@@ -173,6 +307,7 @@ fn main() {
                 )
             })
             .collect();
+        json_rows.extend(flash_rows);
         common::write_rows_json("paging_sweep", &json_rows);
     }
 }

@@ -8,7 +8,7 @@
 //! flags and out-of-range values fail with actionable messages instead
 //! of silently falling back to defaults.
 
-use crate::config::{baseline8, fh4_15xm, fh4_20xm, SystemConfig};
+use crate::config::{baseline8, fh4_15xm, fh4_20xm, FlashConfig, SystemConfig};
 use crate::coordinator::prefix_cache::PrefixCacheConfig;
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode};
@@ -41,6 +41,8 @@ pub const SERVE_FLAGS: &[&str] = &[
     "shed-tokens",
     "seed",
     "fabric-contention",
+    "flash-gb",
+    "flash-bw",
     "faults",
 ];
 
@@ -81,6 +83,9 @@ pub const PAGE_FLAGS: &[&str] = &[
     "page-kv",
     "nmc",
     "fabric-contention",
+    "flash-gb",
+    "flash-bw",
+    "pool-gb",
 ];
 
 /// Page flags that may appear without a value.
@@ -261,6 +266,46 @@ pub fn parse_fabric_contention(flags: &HashMap<String, String>) -> Result<Conten
             })?;
             Ok(ContentionConfig { mode, ..Default::default() })
         }
+    }
+}
+
+/// Build the high-bandwidth flash tier from `--flash-gb G` and
+/// `--flash-bw TBPS` (DESIGN.md §Tiering). `--flash-gb` alone takes the
+/// HBF default bandwidth ([`crate::config::DEFAULT_FLASH_TBPS`]);
+/// `--flash-bw` without a capacity is a conflict — a bandwidth alone
+/// does not define a tier.
+pub fn parse_flash(flags: &HashMap<String, String>) -> Result<Option<FlashConfig>> {
+    let gb = match flags.get("flash-gb") {
+        Some(v) => {
+            let gb: f64 = v.parse().map_err(|e| cli_err(format!("--flash-gb: {e}")))?;
+            if gb <= 0.0 {
+                return Err(cli_err(format!("--flash-gb must be > 0, got {gb}")));
+            }
+            Some(gb)
+        }
+        None => None,
+    };
+    let bw = match flags.get("flash-bw") {
+        Some(v) => {
+            let tbps: f64 = v.parse().map_err(|e| cli_err(format!("--flash-bw: {e}")))?;
+            if tbps <= 0.0 {
+                return Err(cli_err(format!("--flash-bw must be > 0 TB/s, got {tbps}")));
+            }
+            Some(tbps)
+        }
+        None => None,
+    };
+    match (gb, bw) {
+        (Some(gb), Some(tbps)) => Ok(Some(FlashConfig {
+            capacity: Bytes::gb(gb),
+            bandwidth: Bandwidth::tbps(tbps),
+        })),
+        (Some(gb), None) => Ok(Some(FlashConfig::gb(gb))),
+        (None, Some(_)) => Err(cli_err(
+            "--flash-bw needs --flash-gb (a bandwidth alone does not define a flash tier)"
+                .into(),
+        )),
+        (None, None) => Ok(None),
     }
 }
 
@@ -544,5 +589,53 @@ mod tests {
         assert!(SERVE_FLAGS.contains(&"fabric-contention"));
         assert!(SERVE_FLAGS.contains(&"faults"));
         assert!(PAGE_FLAGS.contains(&"fabric-contention"));
+        // The flash-tier family is reachable from both subcommands; the
+        // pool cap only makes sense where the paging orchestrator runs.
+        for k in ["flash-gb", "flash-bw"] {
+            assert!(SERVE_FLAGS.contains(&k), "--{k} missing from SERVE_FLAGS");
+            assert!(PAGE_FLAGS.contains(&k), "--{k} missing from PAGE_FLAGS");
+        }
+        assert!(PAGE_FLAGS.contains(&"pool-gb"));
+        assert!(!SERVE_FLAGS.contains(&"pool-gb"));
+    }
+
+    #[test]
+    fn flash_flag_family_builds_the_tier() {
+        use crate::config::DEFAULT_FLASH_TBPS;
+        // Absent → None: the 2-tier model, bit-identically.
+        let f = parse_flags("page", &args(&[]), PAGE_FLAGS, PAGE_BARE).unwrap();
+        assert!(parse_flash(&f).unwrap().is_none());
+        // Capacity alone takes the HBF default bandwidth.
+        let f = parse_flags("page", &args(&["--flash-gb", "1024"]), PAGE_FLAGS, PAGE_BARE)
+            .unwrap();
+        let fc = parse_flash(&f).unwrap().unwrap();
+        assert_eq!(fc.capacity, Bytes::gb(1024.0));
+        assert_eq!(fc.bandwidth, Bandwidth::tbps(DEFAULT_FLASH_TBPS));
+        // Both knobs together.
+        let f = parse_flags(
+            "page",
+            &args(&["--flash-gb", "512", "--flash-bw", "0.8"]),
+            PAGE_FLAGS,
+            PAGE_BARE,
+        )
+        .unwrap();
+        let fc = parse_flash(&f).unwrap().unwrap();
+        assert_eq!(fc.capacity, Bytes::gb(512.0));
+        assert_eq!(fc.bandwidth, Bandwidth::tbps(0.8));
+        // Bandwidth without a capacity is a conflict, not a default.
+        let f = parse_flags("page", &args(&["--flash-bw", "1.6"]), PAGE_FLAGS, PAGE_BARE)
+            .unwrap();
+        let e = parse_flash(&f).unwrap_err().to_string();
+        assert!(e.contains("--flash-gb"), "{e}");
+        // Non-positive and garbage values are rejected.
+        for bad in [
+            ["--flash-gb", "0"].as_slice(),
+            ["--flash-gb", "-4"].as_slice(),
+            ["--flash-gb", "64", "--flash-bw", "fast"].as_slice(),
+            ["--flash-gb", "64", "--flash-bw", "-1"].as_slice(),
+        ] {
+            let f = parse_flags("page", &args(bad), PAGE_FLAGS, PAGE_BARE).unwrap();
+            assert!(parse_flash(&f).is_err(), "{bad:?} must fail");
+        }
     }
 }

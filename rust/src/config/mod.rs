@@ -22,6 +22,35 @@ pub enum FabricKind {
     TabSharedMemory,
 }
 
+/// A high-bandwidth-flash tier behind the TAB pool (Ma & Patterson,
+/// PAPERS.md): ~10× HBM capacity at near-HBM bandwidth, sitting below
+/// the pool in the HBM ↔ pool ↔ flash hierarchy (DESIGN.md §Tiering).
+/// `None` on a [`SystemConfig`] means the legacy 2-tier model, which
+/// stays bit-identical to the pre-flash simulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlashConfig {
+    /// Flash capacity behind the pool.
+    pub capacity: Bytes,
+    /// Media streaming rate of the flash tier (the HBF design point is
+    /// HBM-like, i.e. TB/s-class, not NVMe-class).
+    pub bandwidth: Bandwidth,
+}
+
+/// Default flash media rate (TB/s) for `--flash-gb` without an explicit
+/// `--flash-bw`: a third of the FH4 local HBM rate — "HBM-like", per the
+/// Ma & Patterson HBF sketch, while still clearly slower than HBM.
+pub const DEFAULT_FLASH_TBPS: f64 = 1.6;
+
+impl FlashConfig {
+    /// Flash tier of `capacity_gb` at the default HBF media rate.
+    pub fn gb(capacity_gb: f64) -> Self {
+        FlashConfig {
+            capacity: Bytes::gb(capacity_gb),
+            bandwidth: Bandwidth::tbps(DEFAULT_FLASH_TBPS),
+        }
+    }
+}
+
 /// One node configuration (a row of Tables 4.1 + 4.2).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -43,6 +72,9 @@ pub struct SystemConfig {
     pub fabric_bw: Bandwidth,
     /// Remote memory capacity behind the TAB (0 for shared-nothing).
     pub remote_capacity: Bytes,
+    /// Optional third tier below the pool. Requires a TAB fabric — flash
+    /// sits behind the same crossbar ports as the pool.
+    pub flash: Option<FlashConfig>,
     pub latencies: FabricLatencies,
     /// Multiplier on compute time representing framework-level overheads
     /// (kernel-launch gaps, NCCL stream synchronisation, scheduler
@@ -74,6 +106,13 @@ impl SystemConfig {
         self.fabric == FabricKind::TabSharedMemory
     }
 
+    /// Attach a flash tier below the pool (builder style for presets and
+    /// tests; validation still rejects flash on non-TAB systems).
+    pub fn with_flash(mut self, flash: FlashConfig) -> Self {
+        self.flash = Some(flash);
+        self
+    }
+
     /// Serialise to a flat `key = value` TOML subset.
     pub fn to_toml(&self) -> Result<String> {
         let cap = match self.local_capacity {
@@ -83,6 +122,17 @@ impl SystemConfig {
         let fabric = match self.fabric {
             FabricKind::NvlinkRing => "nvlink",
             FabricKind::TabSharedMemory => "tab",
+        };
+        // Flash keys are emitted only when the tier exists, so configs
+        // written by the pre-flash format stay parseable and 2-tier
+        // configs round-trip to the exact same bytes as before.
+        let flash = match self.flash {
+            Some(f) => format!(
+                "flash_gb = {}\nflash_bw_tbps = {}\n",
+                f.capacity.as_gb(),
+                f.bandwidth.as_tbps()
+            ),
+            None => String::new(),
         };
         let l = &self.latencies;
         Ok(format!(
@@ -94,7 +144,7 @@ impl SystemConfig {
              fabric = \"{}\"\n\
              fabric_bw_gbps = {}\n\
              remote_capacity_gb = {}\n\
-             framework_overhead = {}\n\
+             {}framework_overhead = {}\n\
              tab_read_ns = {}\n\
              tab_write_ns = {}\n\
              tab_writeacc_ns = {}\n\
@@ -109,6 +159,7 @@ impl SystemConfig {
             fabric,
             self.fabric_bw.as_gbps(),
             self.remote_capacity.as_gb(),
+            flash,
             self.framework_overhead,
             l.tab_read.as_ns(),
             l.tab_write.as_ns(),
@@ -155,6 +206,28 @@ impl SystemConfig {
                 crate::FhError::Config(format!("local_capacity_gb: {e}"))
             })?))
         };
+        // Optional flash tier: both keys or neither (a bandwidth without
+        // a capacity describes a tier that does not exist).
+        let flash = match (kv.get("flash_gb"), kv.get("flash_bw_tbps")) {
+            (None, None) => None,
+            (Some(g), bw) => {
+                let gb: f64 = g
+                    .parse()
+                    .map_err(|e| crate::FhError::Config(format!("flash_gb: {e}")))?;
+                let tbps = match bw {
+                    Some(b) => b
+                        .parse()
+                        .map_err(|e| crate::FhError::Config(format!("flash_bw_tbps: {e}")))?,
+                    None => DEFAULT_FLASH_TBPS,
+                };
+                Some(FlashConfig { capacity: Bytes::gb(gb), bandwidth: Bandwidth::tbps(tbps) })
+            }
+            (None, Some(_)) => {
+                return Err(crate::FhError::Config(
+                    "flash_bw_tbps without flash_gb — give the tier a capacity".into(),
+                ));
+            }
+        };
         use crate::units::Seconds;
         Ok(SystemConfig {
             name: get("name")?,
@@ -165,6 +238,7 @@ impl SystemConfig {
             fabric,
             fabric_bw: Bandwidth::gbps(num("fabric_bw_gbps")?),
             remote_capacity: Bytes::gb(num("remote_capacity_gb")?),
+            flash,
             latencies: FabricLatencies {
                 tab_read: Seconds::ns(num("tab_read_ns")?),
                 tab_write: Seconds::ns(num("tab_write_ns")?),
@@ -209,6 +283,22 @@ impl SystemConfig {
                 "FengHuang systems need remote memory capacity".into(),
             ));
         }
+        if let Some(f) = self.flash {
+            if self.fabric != FabricKind::TabSharedMemory {
+                return Err(crate::FhError::Config(
+                    "flash tier sits behind the TAB crossbar — shared-nothing \
+                     systems have no pool to back it"
+                        .into(),
+                ));
+            }
+            if f.capacity.value() <= 0.0 || f.bandwidth.value() <= 0.0 {
+                return Err(crate::FhError::Config(format!(
+                    "flash tier needs positive capacity and bandwidth, got {} GB at {} TB/s",
+                    f.capacity.as_gb(),
+                    f.bandwidth.as_tbps()
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -230,6 +320,7 @@ pub fn baseline8() -> SystemConfig {
         fabric: FabricKind::NvlinkRing,
         fabric_bw: h200.link_bw_unidir(),           // 450 GB/s
         remote_capacity: Bytes::ZERO,
+        flash: None,
         latencies: FabricLatencies::default(),
         framework_overhead: 1.55,
     }
@@ -246,6 +337,7 @@ fn fh4(name: &str, local_speedup: f64, remote_bw: Bandwidth) -> SystemConfig {
         fabric: FabricKind::TabSharedMemory,
         fabric_bw: remote_bw,
         remote_capacity: Bytes::gb(1152.0),
+        flash: None,
         latencies: FabricLatencies::default(),
         framework_overhead: 1.0,
     }
@@ -366,6 +458,48 @@ mod tests {
         for sys in [baseline8(), fh4_15xm(Bandwidth::tbps(4.0)), fh4_20xm(Bandwidth::tbps(6.4))] {
             sys.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn flash_tier_round_trips_and_validates() {
+        // 2-tier serialisation is byte-identical to the pre-flash format.
+        let plain = fh4_15xm(Bandwidth::tbps(4.8));
+        let toml = plain.to_toml().unwrap();
+        assert!(!toml.contains("flash"), "no flash keys on a 2-tier config");
+        assert!(SystemConfig::from_toml(&toml).unwrap().flash.is_none());
+
+        // 3-tier round-trips exactly.
+        let f = plain.clone().with_flash(FlashConfig {
+            capacity: Bytes::gb(1024.0),
+            bandwidth: Bandwidth::tbps(1.2),
+        });
+        f.validate().unwrap();
+        let back = SystemConfig::from_toml(&f.to_toml().unwrap()).unwrap();
+        assert_eq!(back.flash, f.flash);
+
+        // flash_gb alone picks the default media rate.
+        let toml2 = format!("{}flash_gb = 512\n", plain.to_toml().unwrap());
+        let with_default = SystemConfig::from_toml(&toml2).unwrap().flash.unwrap();
+        assert_eq!(with_default.capacity.as_gb(), 512.0);
+        assert_eq!(with_default.bandwidth.as_tbps(), DEFAULT_FLASH_TBPS);
+
+        // Bandwidth without capacity is a malformed tier.
+        let toml3 = format!("{}flash_bw_tbps = 1.6\n", plain.to_toml().unwrap());
+        assert!(SystemConfig::from_toml(&toml3).is_err());
+    }
+
+    #[test]
+    fn flash_validation_rejects_bad_tiers() {
+        // Flash behind a shared-nothing fabric has no pool to back it.
+        let b = baseline8().with_flash(FlashConfig::gb(1024.0));
+        assert!(b.validate().unwrap_err().to_string().contains("flash"));
+        // Non-positive capacity or bandwidth is rejected like any tier.
+        let mut f = fh4_15xm(Bandwidth::tbps(4.8)).with_flash(FlashConfig::gb(1024.0));
+        f.validate().unwrap();
+        f.flash = Some(FlashConfig { capacity: Bytes::ZERO, bandwidth: Bandwidth::tbps(1.6) });
+        assert!(f.validate().is_err());
+        f.flash = Some(FlashConfig { capacity: Bytes::gb(64.0), bandwidth: Bandwidth::ZERO });
+        assert!(f.validate().is_err());
     }
 
     #[test]

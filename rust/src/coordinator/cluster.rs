@@ -42,7 +42,7 @@ use super::prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport};
 use super::request::Request;
 use super::router::{Policy, Router};
 use super::scheduler::{SchedMode, Scheduler};
-use crate::config::{fh4_rack, SystemConfig};
+use crate::config::{fh4_rack, FlashConfig, SystemConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
 use crate::faults::{
@@ -128,6 +128,12 @@ pub struct ClusterConfig {
     /// spill bytes (DESIGN.md §Fabric-Contention names this the next
     /// consumer to route through the ledger).
     pub contention: ContentionConfig,
+    /// Rack-level high-bandwidth flash tier (DESIGN.md §Tiering):
+    /// applied uniformly to every replica's node config, so each
+    /// replica's KV pressure spills HBM → pool → flash in order
+    /// instead of treating the pool as bottomless. `None` keeps the
+    /// 2-tier model bit-identically.
+    pub flash: Option<FlashConfig>,
     /// Deterministic fault injection (DESIGN.md §Faults): replica
     /// crashes with re-queue and timed rejoin, TAB-module failures that
     /// invalidate pool-resident prefix KV, and link-degradation windows
@@ -148,6 +154,7 @@ impl Default for ClusterConfig {
             autoscale: None,
             prefix_cache: None,
             contention: ContentionConfig::default(),
+            flash: None,
             faults: None,
         }
     }
@@ -425,6 +432,18 @@ impl Cluster {
         if systems.is_empty() {
             return Err(FhError::Config("cluster needs at least one replica".into()));
         }
+        // A rack-level flash tier applies uniformly: every replica's
+        // node gains the same backing store below its pool slice.
+        let systems: Vec<SystemConfig> = match cfg.flash {
+            Some(f) => systems
+                .into_iter()
+                .map(|mut s| {
+                    s.flash = Some(f);
+                    s
+                })
+                .collect(),
+            None => systems,
+        };
         let (serving_pool, decode_base) = match cfg.disaggregate {
             Some((p, d)) => {
                 if p == 0 || d == 0 || p + d != systems.len() {
@@ -1609,6 +1628,7 @@ pub fn demo_serve_cluster(
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
     contention: ContentionConfig,
+    flash: Option<FlashConfig>,
     faults: Option<FaultSchedule>,
 ) -> Result<String> {
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
@@ -1619,6 +1639,7 @@ pub fn demo_serve_cluster(
         kv_budget,
         prefix_cache,
         contention,
+        flash,
         faults,
         ..Default::default()
     };
@@ -1819,6 +1840,7 @@ mod tests {
             None,
             ContentionConfig::default(),
             None,
+            None,
         )
         .unwrap();
         assert!(s.contains("completed 12"), "{s}");
@@ -1838,6 +1860,7 @@ mod tests {
             None,
             Some(PrefixCacheConfig::default()),
             ContentionConfig::default(),
+            None,
             None,
         )
         .unwrap();
@@ -2172,5 +2195,43 @@ mod tests {
         assert!(r.makespan() >= rf.makespan());
         let stalls: Seconds = r.per_replica.iter().map(|p| p.paging_stall).sum();
         assert_eq!(stalls, r.fleet.paging_stall);
+    }
+
+    #[test]
+    fn rack_flash_tier_prices_kv_spill_past_the_pool() {
+        use crate::config::{fh4_rack, FlashConfig};
+        use crate::units::Bandwidth;
+        // Shrink each replica's pool slice so KV spill punches through
+        // it into flash; a slow flash tier can then only add stall
+        // relative to the same spill served pool-only.
+        let mk = |flash: Option<FlashConfig>| {
+            let mut systems = fh4_rack(2, Bandwidth::tbps(4.8));
+            for s in &mut systems {
+                s.remote_capacity = Bytes::gb(3.0);
+            }
+            let cfg =
+                ClusterConfig { kv_budget: Some(Bytes::gb(2.0)), flash, ..Default::default() };
+            let mut c = Cluster::new(systems, &gpt3_175b(), cfg).unwrap();
+            c.run(small_workload(12)).unwrap()
+        };
+        let pool_only = mk(None);
+        let slow_flash = mk(Some(FlashConfig {
+            capacity: Bytes::gb(2048.0),
+            bandwidth: Bandwidth::tbps(0.4),
+        }));
+        assert_eq!(slow_flash.fleet.completed, 12);
+        assert!(pool_only.kv_spilled_peak.value() > 0.0, "budget must bind");
+        assert!(slow_flash.kv_spilled_peak.value() > 0.0);
+        assert!(
+            slow_flash.fleet.paging_stall >= pool_only.fleet.paging_stall,
+            "flash {:?} vs pool {:?}",
+            slow_flash.fleet.paging_stall,
+            pool_only.fleet.paging_stall
+        );
+        // When the spill actually overflows the 3 GB pool slice, the
+        // 0.4 TB/s flash leg is strictly slower than 4.8 TB/s pool.
+        if slow_flash.kv_spilled_peak.as_gb() > 3.5 {
+            assert!(slow_flash.fleet.paging_stall > pool_only.fleet.paging_stall);
+        }
     }
 }

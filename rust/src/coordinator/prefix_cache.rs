@@ -218,7 +218,7 @@ impl PrefixCache {
             return Err(FhError::Config("prefix-cache modules must be ≥ 1".into()));
         }
         let tiers = TierModel::from_system(sys);
-        let pool = tiers.remote.capacity.ok_or_else(|| {
+        let pool = tiers.pool().capacity.ok_or_else(|| {
             FhError::Config("TAB node reports no remote pool capacity".into())
         })?;
         let capacity = match cfg.capacity {
@@ -734,7 +734,7 @@ mod tests {
     #[test]
     fn capacity_derives_from_the_pool_tier() {
         let sys = fh4_15xm(Bandwidth::tbps(4.8));
-        let pool = TierModel::from_system(&sys).remote.capacity.unwrap();
+        let pool = TierModel::from_system(&sys).pool().capacity.unwrap();
         let c = cache(PrefixCacheConfig { pool_share: 0.25, ..Default::default() });
         assert!((c.capacity().value() - (pool * 0.25).value()).abs() < 1e-6);
         // Explicit capacity wins, clamped to the pool.

@@ -14,9 +14,11 @@
 //!                    [--autoscale [on|off]] [--autoscale-min N]
 //!                    [--shed-tokens T]
 //!                    [--fabric-contention [off|shared|per-module]]
+//!                    [--flash-gb G] [--flash-bw TBPS]
 //!                    [--faults SPEC]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
+//!                    [--flash-gb G] [--flash-bw TBPS] [--pool-gb G]
 //! fenghuang help
 //! ```
 //!
@@ -29,9 +31,9 @@
 
 use fenghuang::cli::{
     check_contention_fabric, check_disaggregate_replicas, cli_err, flag, parse_disaggregate,
-    parse_fabric_contention, parse_faults, parse_flags, parse_prefix_cache, positive, switch,
-    system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS, SIMULATE_FLAGS,
-    TRAFFIC_FLAGS,
+    parse_fabric_contention, parse_faults, parse_flags, parse_flash, parse_prefix_cache,
+    positive, switch, system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS,
+    SIMULATE_FLAGS, TRAFFIC_FLAGS,
 };
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::PrefixCacheConfig;
@@ -55,6 +57,7 @@ USAGE:
                      [--disaggregate P:D] [--sessions 8] [--kv-budget-gb G]
                      [--prefix-cache [on|off]] [--prefix-cache-gb G]
                      [--fabric-contention [off|shared|per-module]]
+                     [--flash-gb G] [--flash-bw 1.6]
                      open-loop traffic (any of these flags selects the traffic engine):
                      [--qps 8] [--pattern poisson|bursty|diurnal|replay]
                      [--mix chat|rag|agentic|batch, '+'-combined, e.g. chat+rag]
@@ -67,6 +70,7 @@ USAGE:
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
                      [--steps 3] [--page-mib 2] [--pin-frac 0.0] [--page-kv on|off]
                      [--nmc on|off] [--fabric-contention [off|shared|per-module]]
+                     [--flash-gb G] [--flash-bw 1.6] [--pool-gb G]
   fenghuang help
 ";
 
@@ -97,6 +101,7 @@ fn run_serve(args: &[String]) -> Result<()> {
     // The serve rack is always FH4 (TAB), so the flag cannot conflict
     // with the fabric here; `Cluster::new` still enforces the rule.
     let contention = parse_fabric_contention(&f)?;
+    let flash = parse_flash(&f)?;
     let fleet = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
     let faults = parse_faults(&f, fleet)?;
     let kv_budget = match f.get("kv-budget-gb") {
@@ -126,6 +131,7 @@ fn run_serve(args: &[String]) -> Result<()> {
             kv_budget,
             prefix_cache,
             contention,
+            flash,
             faults,
         );
     }
@@ -135,6 +141,7 @@ fn run_serve(args: &[String]) -> Result<()> {
         && kv_budget.is_none()
         && prefix_cache.is_none()
         && contention.mode == ContentionMode::Off
+        && flash.is_none()
         && faults.is_none()
     {
         // Single node, no routing: the original serving path.
@@ -153,6 +160,7 @@ fn run_serve(args: &[String]) -> Result<()> {
                 kv_budget,
                 prefix_cache,
                 contention,
+                flash,
                 faults,
             )?
         );
@@ -175,6 +183,7 @@ fn run_serve_traffic(
     kv_budget: Option<Bytes>,
     prefix_cache: Option<PrefixCacheConfig>,
     contention: ContentionConfig,
+    flash: Option<fenghuang::config::FlashConfig>,
     faults: Option<fenghuang::faults::FaultSchedule>,
 ) -> Result<()> {
     use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
@@ -258,6 +267,7 @@ fn run_serve_traffic(
         autoscale,
         prefix_cache,
         contention,
+        flash,
         faults,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
@@ -333,14 +343,34 @@ fn run_page(args: &[String]) -> Result<()> {
     let page_kv = switch(&f, "page-kv")?;
     let nmc = switch(&f, "nmc")?;
     let contention = parse_fabric_contention(&f)?;
+    let flash = parse_flash(&f)?;
+    let pool_budget = match f.get("pool-gb") {
+        Some(v) => {
+            let gb: f64 = v.parse().map_err(|e| cli_err(format!("--pool-gb: {e}")))?;
+            if gb <= 0.0 {
+                return Err(cli_err(format!("--pool-gb must be > 0, got {gb}")));
+            }
+            if flash.is_none() {
+                return Err(cli_err(
+                    "--pool-gb caps the pool's home capacity of the 3-tier hierarchy — \
+                     give --flash-gb too"
+                        .into(),
+                ));
+            }
+            Some(Bytes::gb(gb))
+        }
+        None => None,
+    };
 
     let m =
         arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
-    let sys = system_by_name(&system, remote_tbps)?;
+    let mut sys = system_by_name(&system, remote_tbps)?;
+    sys.flash = flash;
     check_contention_fabric(&sys, &contention)?;
     let cfg = PagingConfig {
         page_bytes: Bytes::mib(page_mib),
         local_budget,
+        pool_budget,
         policy: PlacementPolicy { kind, window, page_kv, pin_frac },
         nmc: NmcConfig { enabled: nmc },
         contention,
@@ -375,7 +405,17 @@ fn run_page(args: &[String]) -> Result<()> {
         Some(b) => println!("  local budget      {:>10.2} GB", b.as_gb()),
         None => println!("  local budget       unlimited"),
     }
-    println!("  working set       {:>10.2} GB (remote pool)", r.working_set.as_gb());
+    if flash.is_some() {
+        println!(
+            "  working set       {:>10.2} GB (pool {:.2} GB, flash {:.2} GB, HBM {:.2} GB)",
+            r.working_set.as_gb(),
+            r.pool_homed.as_gb(),
+            r.flash_homed.as_gb(),
+            r.local_homed.as_gb()
+        );
+    } else {
+        println!("  working set       {:>10.2} GB (remote pool)", r.working_set.as_gb());
+    }
     println!("  cold step         {:>10.3} ms", r.cold_step.as_ms());
     println!("  steady step       {:>10.3} ms", r.steady_step.as_ms());
     println!("  full-residency    {:>10.3} ms  (slowdown {slowdown:.3}x)", full.steady_step.as_ms());
@@ -398,6 +438,22 @@ fn run_page(args: &[String]) -> Result<()> {
         r.migration.pages_in,
         r.migration.batches
     );
+    if r.migration.flash_bytes_in.value() > 0.0 {
+        println!(
+            "  from flash        {:>10.2} GB in {} pages",
+            r.migration.flash_bytes_in.as_gb(),
+            r.migration.flash_pages_in
+        );
+    }
+    if r.migration.demotions > 0 || r.migration.promotions > 0 {
+        println!(
+            "  band moves        {:>10} demotions ({:.2} GB), {} promotions ({:.2} GB)",
+            r.migration.demotions,
+            r.migration.demoted_bytes.as_gb(),
+            r.migration.promotions,
+            r.migration.promoted_bytes.as_gb()
+        );
+    }
     if r.migration.bytes_out.value() > 0.0 {
         println!(
             "  written back      {:>10.2} GB ({} write-backs)",

@@ -48,12 +48,26 @@ pub struct MigrationStats {
     pub time_out: Seconds,
     /// Eviction events that required a write-back.
     pub writebacks: u64,
+    /// Page-ins served from the flash tier (also counted in
+    /// `pages_in`/`bytes_in`; their time folds into `time_in`).
+    pub flash_pages_in: u64,
+    pub flash_bytes_in: Bytes,
+    /// Pool→flash home demotions (heat-band placement; time in
+    /// `time_out`).
+    pub demotions: u64,
+    pub demoted_bytes: Bytes,
+    /// Flash→pool promotions on re-touch (time in `time_in`).
+    pub promotions: u64,
+    pub promoted_bytes: Bytes,
 }
 
 /// Charges page moves over the remote fabric.
 pub struct MigrationEngine {
     cfg: MigrationConfig,
     bw: Bandwidth,
+    /// Media rate of the flash tier (= `bw` when no flash is
+    /// configured; only the flash-path methods read it).
+    flash_bw: Bandwidth,
     lat: FabricLatencies,
     pub stats: MigrationStats,
     /// Shared-fabric arbitration (None = unloaded charges, the
@@ -73,6 +87,7 @@ impl MigrationEngine {
         MigrationEngine {
             cfg,
             bw: sys.fabric_bw,
+            flash_bw: sys.flash.map(|f| f.bandwidth).unwrap_or(sys.fabric_bw),
             lat: sys.latencies,
             stats: MigrationStats::default(),
             clock: None,
@@ -156,6 +171,76 @@ impl MigrationEngine {
         t
     }
 
+    /// Charge a batched page-in of `bytes` whose home is the *flash*
+    /// tier: the same command structure as [`Self::page_in`] (flash sits
+    /// behind the same TAB ports), but serialization is capped by the
+    /// flash media rate. Under contention the bytes are booked into the
+    /// fabric ledger like any transfer, and the stream takes the slower
+    /// of the booked completion and the unloaded flash serialization.
+    pub fn page_in_flash(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let media = mfu::transfer_time(bytes, self.flash_bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d.max(media),
+            None => media,
+        };
+        let t = self.lat.tab_read * batches as f64 + stream;
+        self.stats.pages_in += pages;
+        self.stats.bytes_in += bytes;
+        self.stats.flash_pages_in += pages;
+        self.stats.flash_bytes_in += bytes;
+        self.stats.batches += batches;
+        self.stats.time_in += t;
+        t
+    }
+
+    /// Charge a pool→flash demotion of `bytes` spanning `pages`
+    /// (heat-band placement writing a stable band down-tier): the write
+    /// path's fixed command latency per batch, serialization at the
+    /// flash media rate, booked through the contention ledger like any
+    /// other transfer.
+    pub fn demote(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let media = mfu::transfer_time(bytes, self.flash_bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d.max(media),
+            None => media,
+        };
+        let t = self.lat.tab_write * batches as f64 + stream;
+        self.stats.demotions += 1;
+        self.stats.demoted_bytes += bytes;
+        self.stats.batches += batches;
+        self.stats.time_out += t;
+        t
+    }
+
+    /// Charge a flash→pool promotion of `bytes` spanning `pages` (a
+    /// re-touched band climbing back above the stable band): read from
+    /// the flash media, write into the pool.
+    pub fn promote(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let media = mfu::transfer_time(bytes, self.flash_bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d.max(media),
+            None => media,
+        };
+        let t = self.lat.tab_write * batches as f64 + stream;
+        self.stats.promotions += 1;
+        self.stats.promoted_bytes += bytes;
+        self.stats.batches += batches;
+        self.stats.time_in += t;
+        t
+    }
+
     /// Charge a write-back of `bytes` of dirty pages spanning `pages`.
     pub fn write_back(&mut self, bytes: Bytes, pages: u64) -> Seconds {
         if pages == 0 || bytes.value() <= 0.0 {
@@ -165,6 +250,28 @@ impl MigrationEngine {
         let stream = match self.book_stream(bytes) {
             Some(d) => d,
             None => mfu::transfer_time(bytes, self.bw),
+        };
+        let t = self.lat.tab_write * batches as f64 + stream;
+        self.stats.pages_out += pages;
+        self.stats.bytes_out += bytes;
+        self.stats.batches += batches;
+        self.stats.time_out += t;
+        self.stats.writebacks += 1;
+        t
+    }
+
+    /// Charge a write-back of `bytes` of dirty pages whose home is the
+    /// flash tier: the write command path, serialization capped by the
+    /// flash media rate.
+    pub fn write_back_flash(&mut self, bytes: Bytes, pages: u64) -> Seconds {
+        if pages == 0 || bytes.value() <= 0.0 {
+            return Seconds::ZERO;
+        }
+        let batches = self.batches(pages);
+        let media = mfu::transfer_time(bytes, self.flash_bw);
+        let stream = match self.book_stream(bytes) {
+            Some(d) => d.max(media),
+            None => media,
         };
         let t = self.lat.tab_write * batches as f64 + stream;
         self.stats.pages_out += pages;
@@ -294,6 +401,49 @@ mod tests {
         plain.book_overlapped(Bytes::gib(1.0));
         assert!(plain.fabric_report().is_none());
         assert_eq!(plain.busy(), Seconds::ZERO);
+    }
+
+    #[test]
+    fn flash_paths_serialize_at_the_media_rate() {
+        use crate::config::FlashConfig;
+        // Without a flash tier the flash paths degrade to fabric rate:
+        // bitwise the same charge as the pool read path.
+        let mut m = engine();
+        let pool_t = m.page_in(Bytes::mib(512.0), 256);
+        let flash_t = m.page_in_flash(Bytes::mib(512.0), 256);
+        assert_eq!(pool_t, flash_t);
+        assert_eq!(m.stats.flash_pages_in, 256);
+        assert_eq!(m.stats.pages_in, 512, "flash page-ins count in the total");
+
+        // A 1 TB/s flash tier under a 4 TB/s fabric: ~4× the stream time.
+        let mut sys = fh4_15xm(Bandwidth::tbps(4.0));
+        sys.flash =
+            Some(FlashConfig { capacity: Bytes::gb(1024.0), bandwidth: Bandwidth::tbps(1.0) });
+        let mut f = MigrationEngine::new(&sys, MigrationConfig::default());
+        let slow = f.page_in_flash(Bytes::mib(512.0), 256);
+        assert!(
+            slow > flash_t * 3.0 && slow < flash_t * 5.0,
+            "flash {} µs vs fabric {} µs",
+            slow.as_us(),
+            flash_t.as_us()
+        );
+        // The pool path of the same engine is untouched by the flash bw.
+        assert_eq!(f.page_in(Bytes::mib(512.0), 256), pool_t);
+
+        // Demotion and promotion ride the write path (90 ns fixed vs
+        // 220 ns) with the same media-rate serialization.
+        let d = f.demote(Bytes::mib(512.0), 256);
+        let p = f.promote(Bytes::mib(512.0), 256);
+        assert_eq!(d, p);
+        assert!(d < slow, "write fixed path below read fixed path");
+        assert_eq!(f.stats.demotions, 1);
+        assert_eq!(f.stats.demoted_bytes, Bytes::mib(512.0));
+        assert_eq!(f.stats.promotions, 1);
+        assert_eq!(f.stats.promoted_bytes, Bytes::mib(512.0));
+        // Empty moves stay free on every path.
+        assert_eq!(f.page_in_flash(Bytes::ZERO, 0), Seconds::ZERO);
+        assert_eq!(f.demote(Bytes::ZERO, 0), Seconds::ZERO);
+        assert_eq!(f.promote(Bytes::ZERO, 0), Seconds::ZERO);
     }
 
     #[test]

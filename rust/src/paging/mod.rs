@@ -64,6 +64,12 @@ pub struct PagingConfig {
     /// Local-tier budget for paged bytes. `None` = uncapped (the
     /// orchestrator reports the peak instead of enforcing it).
     pub local_budget: Option<Bytes>,
+    /// Home capacity of the pool tier when a flash tier is configured
+    /// (the capacity-ratio knob of the flash sweep). `None` = the
+    /// system's full `remote_capacity`. Setting it without `sys.flash`
+    /// is a config error — a 2-tier pool is deliberately uncapped, as in
+    /// the pre-flash model.
+    pub pool_budget: Option<Bytes>,
     pub policy: PlacementPolicy,
     pub migration: MigrationConfig,
     pub nmc: NmcConfig,
@@ -81,6 +87,7 @@ impl Default for PagingConfig {
         PagingConfig {
             page_bytes: DEFAULT_PAGE_BYTES,
             local_budget: None,
+            pool_budget: None,
             policy: PlacementPolicy::default(),
             migration: MigrationConfig::default(),
             nmc: NmcConfig::default(),
@@ -115,6 +122,14 @@ pub struct PagedReport {
     pub pinned: Bytes,
     /// Total registered (remote) working set.
     pub working_set: Bytes,
+    /// End-of-run bytes homed on the pool tier (= working set in the
+    /// 2-tier model).
+    pub pool_homed: Bytes,
+    /// End-of-run bytes homed on the flash tier (zero without flash).
+    pub flash_homed: Bytes,
+    /// Bytes permanently resident in HBM because neither backing tier
+    /// had room at placement (pinned; zero without flash).
+    pub local_homed: Bytes,
     /// Cumulative migration counters over all steps.
     pub migration: MigrationStats,
     /// Ops executed in-pool by NMC (cumulative).
@@ -178,6 +193,24 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
             return Err(FhError::Config("local budget must be positive".into()));
         }
     }
+    // The 3-tier hierarchy: pool homes are capped (pool_budget, else the
+    // full remote capacity) only when a flash tier exists below them to
+    // take the displaced bands. 2-tier configs keep the uncapped pool of
+    // the pre-flash model and never enter any flash code path.
+    let flash_cap = TierModel::from_system(sys).flash().and_then(|f| f.capacity);
+    if let Some(pb) = cfg.pool_budget {
+        if flash_cap.is_none() {
+            return Err(FhError::Config(
+                "pool_budget caps the pool's home capacity of the 3-tier hierarchy — \
+                 configure a flash tier (sys.flash / --flash-gb) first"
+                    .into(),
+            ));
+        }
+        if pb.value() <= 0.0 {
+            return Err(FhError::Config("pool budget must be positive".into()));
+        }
+    }
+    let pool_cap = flash_cap.map(|_| cfg.pool_budget.unwrap_or(sys.remote_capacity));
     let pol = cfg.policy;
     let mut table = PageTable::new(cfg.page_bytes);
     let mut mig = MigrationEngine::new(sys, cfg.migration);
@@ -194,6 +227,44 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
     for op in &tr.ops {
         for w in &op.weights {
             table.register(w.id, w.bytes);
+        }
+    }
+    // Load-time heat-band placement (3-tier only). No access statistics
+    // exist yet, so program order is the heat proxy — every op re-runs
+    // each step, and earlier bands are re-touched first. The pool takes
+    // the leading bands up to its cap, flash the stable remainder; what
+    // fits in neither backing tier must live in HBM permanently (pinned;
+    // its one-time load is charged on first fetch like any pinned
+    // weight). Runtime re-touches then promote bands back up.
+    let mut local_homed = Bytes::ZERO;
+    if let (Some(pool_cap), Some(flash_cap)) = (pool_cap, flash_cap) {
+        let mut pool_used = Bytes::ZERO;
+        let mut flash_used = Bytes::ZERO;
+        let mut placed: HashSet<TensorId> = HashSet::new();
+        for op in &tr.ops {
+            for w in &op.weights {
+                if !placed.insert(w.id) {
+                    continue;
+                }
+                if pool_used + w.bytes <= pool_cap {
+                    pool_used += w.bytes;
+                } else if flash_used + w.bytes <= flash_cap {
+                    flash_used += w.bytes;
+                    table.set_home(w.id, Tier::Flash);
+                } else {
+                    local_homed += table.pin(w.id);
+                    table.set_home(w.id, Tier::LocalHbm);
+                }
+            }
+        }
+        if let Some(budget) = cfg.local_budget {
+            if local_homed.value() > budget.value() * (1.0 + 1e-9) {
+                return Err(FhError::LocalMemoryThrash {
+                    op: format!("{}/placement", tr.model),
+                    need_gb: local_homed.as_gb(),
+                    cap_gb: budget.as_gb(),
+                });
+            }
         }
     }
     // Weight pinning: reserve up to pin_frac × budget, program order.
@@ -247,7 +318,18 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                         nmc_run = Some(nmc::reduce_time_contended(op, sys, &mut mig));
                     }
                     Some(NmcKind::EmbeddingGather) => {
-                        nmc_run = Some(nmc::gather_time_contended(op, sys, &mut mig));
+                        // NMC executes *in the pool*: a flash-homed
+                        // table cannot be gathered in-memory — it falls
+                        // through to the normal path and pages in like
+                        // any dense weight (NMC never elides a
+                        // flash-tier fetch).
+                        let in_pool = op
+                            .weights
+                            .iter()
+                            .all(|w| table.entry(w.id).map_or(true, |e| e.home != Tier::Flash));
+                        if in_pool {
+                            nmc_run = Some(nmc::gather_time_contended(op, sys, &mut mig));
+                        }
                     }
                     Some(NmcKind::KvGather) => {
                         // Gathered pool-side: never staged, even under a
@@ -255,11 +337,18 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                         // bytes through the pool, so the contention
                         // ledger records them as overlapped load (no
                         // time charged — the stream runs under the op).
-                        if kv_staged {
-                            nmc_offloads += 1;
+                        // A KV band demoted to flash is out of the
+                        // gather engine's reach and stages normally.
+                        let in_pool = table
+                            .entry(kv_tensor_id(op.layer))
+                            .map_or(true, |e| e.home != Tier::Flash);
+                        if in_pool {
+                            if kv_staged {
+                                nmc_offloads += 1;
+                            }
+                            kv_staged = false;
+                            mig.book_overlapped(op.kv_stream_bytes);
                         }
-                        kv_staged = false;
-                        mig.book_overlapped(op.kv_stream_bytes);
                     }
                     None => {}
                 }
@@ -288,6 +377,28 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                 let kvid = kv_tensor_id(op.layer);
                 table.register(kvid, op.kv_stream_bytes);
                 needed.push((kvid, true));
+                if let (Some(pool_cap), Some(flash_cap)) = (pool_cap, flash_cap) {
+                    // KV growth can push the pool's homes past its cap:
+                    // sink the coldest stable band to flash (charged on
+                    // the serial paging stream like a write-back). Bands
+                    // the current op needs are protected; a full flash
+                    // tier simply leaves the pool over-committed.
+                    let over = table.bytes_homed(Tier::RemotePool) - pool_cap;
+                    if over.value() > 0.0 {
+                        let protect: HashSet<TensorId> =
+                            needed.iter().map(|(id, _)| *id).collect();
+                        for victim in pol.demotion_victims(&table, over, &protect, None) {
+                            let vbytes =
+                                table.entry(victim).map_or(Bytes::ZERO, |e| e.bytes);
+                            let room = flash_cap - table.bytes_homed(Tier::Flash);
+                            if vbytes > room {
+                                break;
+                            }
+                            let vb = table.set_home(victim, Tier::Flash);
+                            writeback_debt += mig.demote(vb, table.pages_for(vb));
+                        }
+                    }
+                }
             }
             let mut missing = Bytes::ZERO;
             for (id, _) in &needed {
@@ -310,7 +421,13 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                         evictions += 1;
                         if ev.dirty_bytes.value() > 0.0 {
                             let pages = table.pages_for(ev.dirty_bytes);
-                            writeback_debt += mig.write_back(ev.dirty_bytes, pages);
+                            // Dirty pages write back to their home tier
+                            // (flash-homed bands at the media rate).
+                            writeback_debt += if table.home(victim) == Some(Tier::Flash) {
+                                mig.write_back_flash(ev.dirty_bytes, pages)
+                            } else {
+                                mig.write_back(ev.dirty_bytes, pages)
+                            };
                         }
                         if fetched_at.is_none() {
                             // Carried bytes from an earlier step release
@@ -338,9 +455,66 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
             // Fetch missing pages (batched), touch hits.
             let mut t_fetch = std::mem::take(&mut writeback_debt);
             if missing.value() > 0.0 {
+                if let (Some(pool_cap), Some(flash_cap)) = (pool_cap, flash_cap) {
+                    // Promotion on re-touch: a flash-homed tensor
+                    // fetched *again* is climbing the heat bands — copy
+                    // it back into the pool, displacing a strictly
+                    // colder band (hysteresis: a uniformly-warm working
+                    // set stays put instead of churning through the
+                    // pool every step).
+                    let protect: HashSet<TensorId> =
+                        needed.iter().map(|(id, _)| *id).collect();
+                    for (id, _) in &needed {
+                        let (retouch, bytes, heat) = match table.entry(*id) {
+                            Some(e) => (
+                                e.home == Tier::Flash
+                                    && e.heat > 0
+                                    && e.bytes.value() > 0.0,
+                                e.bytes,
+                                e.heat,
+                            ),
+                            None => (false, Bytes::ZERO, 0),
+                        };
+                        if !retouch {
+                            continue;
+                        }
+                        let over = table.bytes_homed(Tier::RemotePool) + bytes - pool_cap;
+                        if over.value() <= 0.0 {
+                            table.set_home(*id, Tier::RemotePool);
+                            t_fetch += mig.promote(bytes, table.pages_for(bytes));
+                            continue;
+                        }
+                        let victims =
+                            pol.demotion_victims(&table, over, &protect, Some(heat));
+                        let freed: Bytes = victims
+                            .iter()
+                            .map(|v| table.entry(*v).map_or(Bytes::ZERO, |e| e.bytes))
+                            .sum();
+                        // The promoted band leaves flash as the victims
+                        // arrive, so flash room is checked net of it.
+                        let flash_after =
+                            table.bytes_homed(Tier::Flash) + freed - bytes;
+                        if freed >= over
+                            && flash_after.value() <= flash_cap.value() * (1.0 + 1e-9)
+                        {
+                            for victim in victims {
+                                let vb = table.set_home(victim, Tier::Flash);
+                                t_fetch += mig.demote(vb, table.pages_for(vb));
+                            }
+                            table.set_home(*id, Tier::RemotePool);
+                            t_fetch += mig.promote(bytes, table.pages_for(bytes));
+                        }
+                        // else: no strictly colder band to displace —
+                        // the tensor stays flash-homed for now.
+                    }
+                }
                 let mut moved = Bytes::ZERO;
                 let mut pages = 0u64;
+                let mut moved_flash = Bytes::ZERO;
+                let mut pages_flash = 0u64;
                 for (id, dirty) in &needed {
+                    let from_flash =
+                        table.entry(*id).is_some_and(|e| e.home == Tier::Flash);
                     let (b, p) = table.page_in(*id, now, *dirty);
                     if b.value() > 0.0 {
                         open.insert(
@@ -354,10 +528,18 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                             released_at_end: false,
                         });
                     }
-                    moved += b;
-                    pages += p;
+                    if from_flash {
+                        moved_flash += b;
+                        pages_flash += p;
+                    } else {
+                        moved += b;
+                        pages += p;
+                    }
                 }
                 t_fetch += mig.page_in(moved, pages);
+                if moved_flash.value() > 0.0 {
+                    t_fetch += mig.page_in_flash(moved_flash, pages_flash);
+                }
             } else {
                 for (id, _) in &needed {
                     table.touch(*id, now);
@@ -377,7 +559,11 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
                         evictions += 1;
                         if ev.dirty_bytes.value() > 0.0 {
                             let pages = table.pages_for(ev.dirty_bytes);
-                            writeback_debt += mig.write_back(ev.dirty_bytes, pages);
+                            writeback_debt += if table.home(*id) == Some(Tier::Flash) {
+                                mig.write_back_flash(ev.dirty_bytes, pages)
+                            } else {
+                                mig.write_back(ev.dirty_bytes, pages)
+                            };
                         }
                         match idx {
                             Some(i) => {
@@ -452,6 +638,9 @@ pub fn orchestrate(sys: &SystemConfig, tr: &Trace, cfg: &PagingConfig) -> Result
         peak_local,
         pinned,
         working_set: table.registered_bytes(),
+        pool_homed: table.bytes_homed(Tier::RemotePool),
+        flash_homed: table.bytes_homed(Tier::Flash),
+        local_homed,
         fabric: mig.fabric_report(),
         migration: mig.stats,
         nmc_offloads,
@@ -680,6 +869,71 @@ mod tests {
         assert_eq!(off.cold_step, base.cold_step);
         assert_eq!(off.steady_step, base.steady_step);
         assert_eq!(off.migration.bytes_in.value(), base.migration.bytes_in.value());
+    }
+
+    #[test]
+    fn flash_with_roomy_pool_is_bit_identical_to_two_tiers() {
+        use crate::config::FlashConfig;
+        let base = decode_report(&decode_cfg());
+        let mut fsys = sys();
+        fsys.flash = Some(FlashConfig::gb(2048.0));
+        let r = simulate_paged(&fsys, &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }, &decode_cfg())
+            .unwrap();
+        // The 1152 GB pool homes the whole shard, so no band ever reaches
+        // flash and every observable matches the 2-tier run bit for bit.
+        assert_eq!(r.cold_step, base.cold_step);
+        assert_eq!(r.steady_step, base.steady_step);
+        assert_eq!(r.exposed, base.exposed);
+        assert_eq!(r.paging_busy, base.paging_busy);
+        assert_eq!(r.peak_local, base.peak_local);
+        assert_eq!(r.migration.bytes_in, base.migration.bytes_in);
+        assert_eq!(r.migration.time_in, base.migration.time_in);
+        assert_eq!(r.migration.flash_pages_in, 0);
+        assert_eq!(r.migration.demotions, 0);
+        assert_eq!(r.flash_homed, Bytes::ZERO);
+        assert_eq!(r.pool_homed, r.working_set);
+        assert_eq!(r.local_homed, Bytes::ZERO);
+    }
+
+    #[test]
+    fn capped_pool_homes_the_stable_band_on_flash() {
+        use crate::config::FlashConfig;
+        let mut fsys = sys();
+        fsys.flash = Some(FlashConfig::gb(2048.0));
+        let cfg = PagingConfig { pool_budget: Some(Bytes::gb(40.0)), ..decode_cfg() };
+        let r =
+            simulate_paged(&fsys, &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }, &cfg).unwrap();
+        // The gpt3/tp4 shard is ~87 GB: ~40 GB leads stay pool-homed, the
+        // stable remainder lives on flash and pages in at the media rate.
+        assert!(r.flash_homed.as_gb() > 10.0, "flash homed {} GB", r.flash_homed.as_gb());
+        assert!(r.pool_homed.as_gb() <= 40.0 * (1.0 + 1e-9));
+        assert_eq!(r.local_homed, Bytes::ZERO, "flash had room for the spill");
+        assert!(r.migration.flash_bytes_in.value() > 0.0);
+        assert!(r.migration.flash_pages_in > 0);
+        // Conservation: every registered byte is homed on exactly one tier.
+        let homed = r.pool_homed + r.flash_homed + r.local_homed;
+        assert!(
+            (homed.value() - r.working_set.value()).abs() < 1.0,
+            "homed {} vs working set {}",
+            homed.as_gb(),
+            r.working_set.as_gb()
+        );
+        // Streaming part of each step from 1.6 TB/s flash instead of the
+        // 4.8 TB/s pool can only slow the steady state down.
+        let base = decode_report(&decode_cfg());
+        assert!(
+            r.steady_step >= base.steady_step - Seconds::ns(1.0),
+            "flash {:?} vs pool {:?}",
+            r.steady_step,
+            base.steady_step
+        );
+    }
+
+    #[test]
+    fn pool_budget_requires_a_flash_tier() {
+        let cfg = PagingConfig { pool_budget: Some(Bytes::gb(40.0)), ..decode_cfg() };
+        let r = simulate_paged(&sys(), &gpt3_175b(), 8, Phase::Decode { kv_len: 4608 }, &cfg);
+        assert!(matches!(r, Err(FhError::Config(_))), "got {r:?}");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! must write back), and access metadata (heat / last use) that the
 //! eviction policies in [`super::policy`] consume.
 
+use super::tiers::Tier;
 use crate::trace::TensorId;
 use crate::units::Bytes;
 use std::collections::HashMap;
@@ -47,6 +48,13 @@ pub struct TensorEntry {
     pub last_use: u64,
     /// Number of touches since registration.
     pub heat: u64,
+    /// Backing tier holding the tensor's authoritative copy (DESIGN.md
+    /// §Tiering). Pool by default; heat-band placement demotes stable
+    /// bands to [`Tier::Flash`] and promotes them back on re-touch.
+    /// [`Tier::LocalHbm`] marks tensors permanently resident because no
+    /// backing tier had room. [`Residency::Remote`] pages live at this
+    /// tier; in the 2-tier model the field never leaves `RemotePool`.
+    pub home: Tier,
 }
 
 impl TensorEntry {
@@ -78,6 +86,12 @@ pub struct PageTable {
     tensors: HashMap<TensorId, TensorEntry>,
     resident: Bytes,
     peak_resident: Bytes,
+    // Per-tier homed-byte ledgers, maintained incrementally so reads are
+    // O(1) *and* deterministic — recomputing by HashMap iteration would
+    // sum f64s in a per-process random order.
+    homed_local: Bytes,
+    homed_pool: Bytes,
+    homed_flash: Bytes,
 }
 
 impl PageTable {
@@ -88,6 +102,17 @@ impl PageTable {
             tensors: HashMap::new(),
             resident: Bytes::ZERO,
             peak_resident: Bytes::ZERO,
+            homed_local: Bytes::ZERO,
+            homed_pool: Bytes::ZERO,
+            homed_flash: Bytes::ZERO,
+        }
+    }
+
+    fn homed_counter(&mut self, tier: Tier) -> &mut Bytes {
+        match tier {
+            Tier::LocalHbm => &mut self.homed_local,
+            Tier::RemotePool => &mut self.homed_pool,
+            Tier::Flash => &mut self.homed_flash,
         }
     }
 
@@ -112,10 +137,12 @@ impl PageTable {
             pinned: false,
             last_use: 0,
             heat: 0,
+            home: Tier::RemotePool,
         });
         if bytes <= entry.bytes {
             return;
         }
+        let bytes_before = entry.bytes;
         let want_pages = (bytes.value() / page.value()).ceil() as usize;
         // Re-size the (previously last, possibly partial) page up to full.
         if let Some(last) = entry.pages.last_mut() {
@@ -137,6 +164,9 @@ impl PageTable {
             remaining = remaining - b;
         }
         entry.bytes = entry.pages.iter().map(|p| p.bytes).sum();
+        let grown = entry.bytes - bytes_before;
+        let home = entry.home;
+        *self.homed_counter(home) += grown;
         self.resident += resident_delta;
         self.peak_resident = self.peak_resident.max(self.resident);
     }
@@ -192,6 +222,40 @@ impl PageTable {
         (moved, pages)
     }
 
+    /// Backing tier of `id`'s authoritative copy.
+    pub fn home(&self, id: TensorId) -> Option<Tier> {
+        self.tensors.get(&id).map(|e| e.home)
+    }
+
+    /// Re-home `id`'s authoritative copy on `tier` (demotion/promotion).
+    /// Returns the tensor's bytes — the payload the migration engine
+    /// charges for the move — or [`Bytes::ZERO`] when nothing changed
+    /// (unknown tensor, or already homed there).
+    pub fn set_home(&mut self, id: TensorId, tier: Tier) -> Bytes {
+        let Some(e) = self.tensors.get_mut(&id) else {
+            return Bytes::ZERO;
+        };
+        if e.home == tier {
+            return Bytes::ZERO;
+        }
+        let (from, bytes) = (e.home, e.bytes);
+        e.home = tier;
+        let c = self.homed_counter(from);
+        *c = *c - bytes;
+        *self.homed_counter(tier) += bytes;
+        bytes
+    }
+
+    /// Registered bytes whose authoritative copy lives on `tier` (O(1),
+    /// maintained incrementally — deterministic across runs).
+    pub fn bytes_homed(&self, tier: Tier) -> Bytes {
+        match tier {
+            Tier::LocalHbm => self.homed_local,
+            Tier::RemotePool => self.homed_pool,
+            Tier::Flash => self.homed_flash,
+        }
+    }
+
     /// Record an access without moving pages.
     pub fn touch(&mut self, id: TensorId, now: u64) {
         if let Some(e) = self.tensors.get_mut(&id) {
@@ -245,7 +309,10 @@ impl PageTable {
             return Evicted::default();
         }
         let out = self.evict(id);
-        self.tensors.remove(&id);
+        if let Some(e) = self.tensors.remove(&id) {
+            let c = self.homed_counter(e.home);
+            *c = *c - e.bytes;
+        }
         out
     }
 
@@ -373,6 +440,39 @@ mod tests {
         assert_eq!(t.remove(TensorId(4)), Evicted::default());
         assert!(t.contains(TensorId(4)));
         assert_eq!(t.resident_bytes(), b(50.0));
+    }
+
+    #[test]
+    fn home_ledger_tracks_moves_growth_and_removal() {
+        let mut t = PageTable::new(b(100.0));
+        t.register(TensorId(1), b(250.0));
+        t.register(TensorId(2), b(100.0));
+        assert_eq!(t.home(TensorId(1)), Some(Tier::RemotePool), "pool by default");
+        assert_eq!(t.bytes_homed(Tier::RemotePool), b(350.0));
+        assert_eq!(t.bytes_homed(Tier::Flash), Bytes::ZERO);
+
+        // Demotion moves the ledger and returns the payload.
+        assert_eq!(t.set_home(TensorId(1), Tier::Flash), b(250.0));
+        assert_eq!(t.bytes_homed(Tier::RemotePool), b(100.0));
+        assert_eq!(t.bytes_homed(Tier::Flash), b(250.0));
+        // Re-homing to the same tier is free — no phantom transfer.
+        assert_eq!(t.set_home(TensorId(1), Tier::Flash), Bytes::ZERO);
+        // Unknown tensors move nothing.
+        assert_eq!(t.set_home(TensorId(99), Tier::Flash), Bytes::ZERO);
+
+        // KV-style growth lands on the tensor's current home.
+        t.register(TensorId(1), b(400.0));
+        assert_eq!(t.bytes_homed(Tier::Flash), b(400.0));
+
+        // Promotion back, then removal releases the ledger.
+        assert_eq!(t.set_home(TensorId(1), Tier::RemotePool), b(400.0));
+        t.remove(TensorId(1));
+        assert_eq!(t.bytes_homed(Tier::RemotePool), b(100.0));
+
+        // Local homing (no backing tier had room).
+        t.set_home(TensorId(2), Tier::LocalHbm);
+        assert_eq!(t.bytes_homed(Tier::LocalHbm), b(100.0));
+        assert_eq!(t.bytes_homed(Tier::RemotePool), Bytes::ZERO);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! stateless whole-tensor path.
 
 use super::page::PageTable;
+use super::tiers::Tier;
 use crate::sim::prefetcher::PrefetchPolicy;
 use crate::trace::{Op, OpKind, TensorId};
 use crate::units::Bytes;
@@ -115,14 +116,60 @@ impl PlacementPolicy {
         match self.kind {
             // Minimal residency evicts eagerly after use; when pressure
             // still arises (working sets bigger than budget), fall back to
-            // coldest-first like LRU.
+            // coldest-first like LRU. The trailing TensorId breaks
+            // last_use/heat ties: candidates come out of a HashMap whose
+            // iteration order is seeded per process, so without it the
+            // victim order of tied tensors (common — registered in the
+            // same op batch) would differ run to run.
             PolicyKind::MinimalResidency | PolicyKind::Lru => {
-                cands.sort_unstable_by_key(|c| c.1);
+                cands.sort_unstable_by_key(|c| (c.1, c.0));
             }
             PolicyKind::Heat => {
-                cands.sort_unstable_by_key(|c| (c.2, c.1));
+                cands.sort_unstable_by_key(|c| (c.2, c.1, c.0));
             }
         }
+        let mut out = Vec::new();
+        let mut freed = Bytes::ZERO;
+        for (id, _, _, bytes) in cands {
+            if freed >= need {
+                break;
+            }
+            out.push(id);
+            freed += bytes;
+        }
+        out
+    }
+
+    /// Pick pool→flash demotion victims freeing at least `need` bytes of
+    /// pool-homed capacity, coldest heat band first (heat, then recency,
+    /// then id — fully deterministic). Only pool-homed, unpinned,
+    /// non-resident tensors outside `protect` qualify: demoting a tensor
+    /// whose pages are staged in HBM would detach the local copy from
+    /// its authoritative home mid-flight, and a tensor hot enough to be
+    /// resident is by definition not in the stable band. When
+    /// `below_heat` is set, only tensors *strictly colder* than that
+    /// heat qualify — the hysteresis that keeps promotion from churning
+    /// a uniformly-warm working set through the pool.
+    pub fn demotion_victims(
+        &self,
+        table: &PageTable,
+        need: Bytes,
+        protect: &HashSet<TensorId>,
+        below_heat: Option<u64>,
+    ) -> Vec<TensorId> {
+        let mut cands: Vec<(TensorId, u64, u64, Bytes)> = table
+            .iter()
+            .filter(|(id, e)| {
+                e.home == Tier::RemotePool
+                    && !e.pinned
+                    && e.resident_bytes().value() <= 0.0
+                    && e.bytes.value() > 0.0
+                    && !protect.contains(id)
+                    && below_heat.map_or(true, |h| e.heat < h)
+            })
+            .map(|(id, e)| (*id, e.heat, e.last_use, e.bytes))
+            .collect();
+        cands.sort_unstable_by_key(|c| (c.1, c.2, c.0));
         let mut out = Vec::new();
         let mut freed = Bytes::ZERO;
         for (id, _, _, bytes) in cands {
@@ -190,6 +237,31 @@ mod tests {
         let p = PlacementPolicy { kind: PolicyKind::Lru, ..Default::default() };
         let v = p.victims(&t, Bytes::new(500.0), &protect);
         assert_eq!(v, vec![TensorId(2)], "only the unprotected unpinned tensor");
+    }
+
+    #[test]
+    fn demotion_picks_the_coldest_band_deterministically() {
+        // Non-resident pool-homed tensors, ordered (heat, last_use, id).
+        let mut t = PageTable::new(Bytes::new(64.0));
+        for id in 1u64..=4 {
+            t.register(TensorId(id), Bytes::new(100.0));
+        }
+        t.touch(TensorId(1), 5);
+        t.touch(TensorId(1), 6);
+        t.touch(TensorId(4), 7);
+        let p = PlacementPolicy::default();
+        // Heat: id1=2, id4=1, id2=id3=0 — the 2/3 tie breaks by id.
+        let v = p.demotion_victims(&t, Bytes::new(250.0), &HashSet::new(), None);
+        assert_eq!(v, vec![TensorId(2), TensorId(3), TensorId(4)]);
+        // Hysteresis: only tensors strictly colder than heat 1 qualify.
+        let v = p.demotion_victims(&t, Bytes::new(500.0), &HashSet::new(), Some(1));
+        assert_eq!(v, vec![TensorId(2), TensorId(3)]);
+        // Resident, already-demoted, and protected tensors never qualify.
+        t.page_in(TensorId(2), 1, false);
+        t.set_home(TensorId(3), Tier::Flash);
+        let protect: HashSet<TensorId> = [TensorId(4)].into_iter().collect();
+        let v = p.demotion_victims(&t, Bytes::new(500.0), &protect, None);
+        assert_eq!(v, vec![TensorId(1)]);
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! Memory-tier model: GPU-local HBM → FengHuang remote pool, plus the
-//! per-replica KV capacity-pressure model the cluster layer charges
-//! (DESIGN.md §Paging).
+//! Memory-tier model: GPU-local HBM → FengHuang remote pool → optional
+//! high-bandwidth flash, plus the per-replica KV capacity-pressure model
+//! the cluster layer charges (DESIGN.md §Paging, §Tiering).
 //!
 //! Capacities and bandwidths are drawn from the node's [`SystemConfig`]
 //! (which in turn comes from the `hardware` catalog presets): the local
-//! tier is the GPU HBM (`local_bw`, `local_capacity`), the remote tier is
-//! the pool behind the TAB crossbar (`fabric_bw`, `remote_capacity`).
+//! tier is the GPU HBM (`local_bw`, `local_capacity`), the second tier is
+//! the pool behind the TAB crossbar (`fabric_bw`, `remote_capacity`), and
+//! the optional third tier is the flash envelope (`sys.flash`). The model
+//! is an ordered hierarchy — [`TierModel::tiers`] sorts fastest first —
+//! and a 2-tier model (no flash) behaves bit-identically to the original
+//! fixed local/remote pair.
 
 use crate::config::{FabricKind, SystemConfig};
 use crate::fabric::FabricLatencies;
@@ -13,12 +17,14 @@ use crate::models::mfu;
 use crate::units::{Bandwidth, Bytes, Seconds};
 
 /// Which tier a page lives in.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Tier {
     /// GPU-local HBM (the paging cache on FengHuang nodes).
     LocalHbm,
     /// The FengHuang remote pool behind the TAB.
     RemotePool,
+    /// High-bandwidth flash behind the pool (Ma & Patterson HBF).
+    Flash,
 }
 
 /// One tier's capacity/bandwidth envelope.
@@ -31,25 +37,26 @@ pub struct TierSpec {
     pub bandwidth: Bandwidth,
 }
 
-/// The two-tier hierarchy of a FengHuang node.
+/// The ordered memory hierarchy of a FengHuang node, fastest tier first.
+/// Two tiers (HBM, pool) always exist; flash is present only when the
+/// system config carries a [`crate::config::FlashConfig`].
 #[derive(Debug, Clone)]
 pub struct TierModel {
-    pub local: TierSpec,
-    pub remote: TierSpec,
+    pub tiers: Vec<TierSpec>,
 }
 
 impl TierModel {
     /// Derive the hierarchy from a node config (per-GPU view: the paging
     /// simulator models one GPU's shard of the working set).
     pub fn from_system(sys: &SystemConfig) -> Self {
-        TierModel {
-            local: TierSpec {
+        let mut tiers = vec![
+            TierSpec {
                 tier: Tier::LocalHbm,
                 name: format!("{}/local", sys.name),
                 capacity: sys.local_capacity,
                 bandwidth: sys.local_bw,
             },
-            remote: TierSpec {
+            TierSpec {
                 tier: Tier::RemotePool,
                 name: format!("{}/pool", sys.name),
                 capacity: if sys.remote_capacity.value() > 0.0 {
@@ -59,12 +66,36 @@ impl TierModel {
                 },
                 bandwidth: sys.fabric_bw,
             },
+        ];
+        if let Some(f) = sys.flash {
+            tiers.push(TierSpec {
+                tier: Tier::Flash,
+                name: format!("{}/flash", sys.name),
+                capacity: Some(f.capacity),
+                bandwidth: f.bandwidth,
+            });
         }
+        TierModel { tiers }
+    }
+
+    /// The GPU-local HBM tier (always tier 0).
+    pub fn local(&self) -> &TierSpec {
+        &self.tiers[0]
+    }
+
+    /// The TAB pool tier (always tier 1).
+    pub fn pool(&self) -> &TierSpec {
+        &self.tiers[1]
+    }
+
+    /// The flash tier, when the hierarchy has one.
+    pub fn flash(&self) -> Option<&TierSpec> {
+        self.tiers.get(2)
     }
 
     /// Override the local budget (the Table 4.3 sweep knob).
     pub fn with_local_budget(mut self, budget: Option<Bytes>) -> Self {
-        self.local.capacity = budget;
+        self.tiers[0].capacity = budget;
         self
     }
 }
@@ -73,11 +104,13 @@ impl TierModel {
 /// subsystem; EXPERIMENTS.md §Capacity-Sweep).
 ///
 /// A serving replica holds the KV cache of every active sequence. Under a
-/// finite local budget the overflow spills to the remote tier; each
-/// decode step must then stream the spilled fraction of the KV it touches
-/// back over the fabric — an added serial stall on top of the modelled
-/// step time (conservative: no overlap with compute is assumed for the
-/// spilled fraction).
+/// finite local budget the overflow spills down the hierarchy in order —
+/// HBM → pool → flash — and each decode step must then stream the spilled
+/// fraction of the KV it touches back over the fabric, the slice past the
+/// pool's capacity at flash bandwidth (an added serial stall on top of
+/// the modelled step time; conservative: no overlap with compute is
+/// assumed for the spilled fraction). Without a flash tier the pool is
+/// uncapped, as in the original 2-tier model.
 #[derive(Debug, Clone)]
 pub struct KvPressure {
     /// Per-replica local KV budget (aggregate across the node's GPUs).
@@ -85,8 +118,14 @@ pub struct KvPressure {
     remote_bw: Bandwidth,
     lat: FabricLatencies,
     shared_pool: bool,
-    /// High-water mark of bytes spilled to the remote tier.
+    /// Pool capacity beyond which spill lands on flash. `None` = legacy
+    /// 2-tier model (uncapped pool, no flash configured).
+    pool_cap: Option<Bytes>,
+    flash_bw: Bandwidth,
+    /// High-water mark of bytes spilled out of local HBM.
     pub spilled_peak: Bytes,
+    /// High-water mark of spill past the pool cap (flash-tier bytes).
+    pub flash_spilled_peak: Bytes,
     /// Total stall charged to decode steps.
     pub stall_total: Seconds,
     /// Decode steps that paid a paging stall.
@@ -95,12 +134,19 @@ pub struct KvPressure {
 
 impl KvPressure {
     pub fn new(budget: Bytes, sys: &SystemConfig) -> Self {
+        let (pool_cap, flash_bw) = match sys.flash {
+            Some(f) => (Some(sys.remote_capacity), f.bandwidth),
+            None => (None, sys.fabric_bw),
+        };
         KvPressure {
             budget,
             remote_bw: sys.fabric_bw,
             lat: sys.latencies,
             shared_pool: sys.fabric == FabricKind::TabSharedMemory,
+            pool_cap,
+            flash_bw,
             spilled_peak: Bytes::ZERO,
+            flash_spilled_peak: Bytes::ZERO,
             stall_total: Seconds::ZERO,
             steps_stalled: 0,
         }
@@ -115,20 +161,44 @@ impl KvPressure {
         }
     }
 
+    /// The slice of spill past the pool's capacity — served from flash.
+    /// Zero in the 2-tier model, where the pool is uncapped.
+    pub fn flash_spilled(&self, total: Bytes) -> Bytes {
+        let spill = self.spilled(total);
+        match self.pool_cap {
+            Some(cap) if spill > cap => spill - cap,
+            _ => Bytes::ZERO,
+        }
+    }
+
     /// Stall charged to one decode step that touches `touched` bytes of a
     /// `total`-byte resident KV footprint. The spilled fraction of the
-    /// touched bytes streams from the remote tier (Eq 4.1 link
-    /// efficiency), behind one fixed command latency.
+    /// touched bytes streams from the backing tiers (Eq 4.1 link
+    /// efficiency) behind one fixed command latency — pool bytes at
+    /// fabric bandwidth, the slice past the pool cap at flash bandwidth.
     pub fn step_stall(&mut self, total: Bytes, touched: Bytes) -> Seconds {
         let spill = self.spilled(total);
         self.spilled_peak = self.spilled_peak.max(spill);
+        let flash_spill = self.flash_spilled(total);
+        self.flash_spilled_peak = self.flash_spilled_peak.max(flash_spill);
         if spill.value() <= 0.0 || total.value() <= 0.0 {
             return Seconds::ZERO;
         }
+        if touched.value() <= 0.0 {
+            // Nothing streamed this step: no command is issued, so there
+            // is no fixed latency either. (The earlier model charged a
+            // phantom tab_read/nvlink_read here and bumped
+            // steps_stalled even though zero bytes moved.)
+            return Seconds::ZERO;
+        }
         let frac = (spill / total).min(1.0);
-        let remote_touched = touched * frac;
+        let frac_flash = (flash_spill / total).min(frac);
+        let frac_pool = frac - frac_flash;
         let fixed = if self.shared_pool { self.lat.tab_read } else { self.lat.nvlink_read };
-        let stall = fixed + mfu::transfer_time(remote_touched, self.remote_bw);
+        let mut stall = fixed + mfu::transfer_time(touched * frac_pool, self.remote_bw);
+        if flash_spill.value() > 0.0 {
+            stall += mfu::transfer_time(touched * frac_flash, self.flash_bw);
+        }
         self.stall_total += stall;
         self.steps_stalled += 1;
         stall
@@ -138,24 +208,42 @@ impl KvPressure {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{baseline8, fh4_15xm};
+    use crate::config::{baseline8, fh4_15xm, FlashConfig};
 
     #[test]
     fn tier_model_mirrors_system_config() {
         let sys = fh4_15xm(Bandwidth::tbps(4.8));
         let t = TierModel::from_system(&sys);
-        assert_eq!(t.local.tier, Tier::LocalHbm);
-        assert!(t.local.capacity.is_none(), "FH4 local is uncapped");
-        assert_eq!(t.local.bandwidth, sys.local_bw);
-        assert_eq!(t.remote.tier, Tier::RemotePool);
-        assert_eq!(t.remote.capacity, Some(sys.remote_capacity));
-        assert_eq!(t.remote.bandwidth, sys.fabric_bw);
+        assert_eq!(t.tiers.len(), 2, "no flash configured → 2 tiers");
+        assert_eq!(t.local().tier, Tier::LocalHbm);
+        assert!(t.local().capacity.is_none(), "FH4 local is uncapped");
+        assert_eq!(t.local().bandwidth, sys.local_bw);
+        assert_eq!(t.pool().tier, Tier::RemotePool);
+        assert_eq!(t.pool().capacity, Some(sys.remote_capacity));
+        assert_eq!(t.pool().bandwidth, sys.fabric_bw);
+        assert!(t.flash().is_none());
         let capped = t.with_local_budget(Some(Bytes::gb(12.0)));
-        assert_eq!(capped.local.capacity, Some(Bytes::gb(12.0)));
+        assert_eq!(capped.local().capacity, Some(Bytes::gb(12.0)));
 
         let b = TierModel::from_system(&baseline8());
-        assert_eq!(b.local.capacity, baseline8().local_capacity);
-        assert!(b.remote.capacity.is_none(), "shared-nothing has no pool");
+        assert_eq!(b.local().capacity, baseline8().local_capacity);
+        assert!(b.pool().capacity.is_none(), "shared-nothing has no pool");
+    }
+
+    #[test]
+    fn flash_tier_appears_ordered_below_the_pool() {
+        let flash = FlashConfig { capacity: Bytes::gb(1024.0), bandwidth: Bandwidth::tbps(1.6) };
+        let sys = fh4_15xm(Bandwidth::tbps(4.8)).with_flash(flash);
+        let t = TierModel::from_system(&sys);
+        assert_eq!(t.tiers.len(), 3);
+        let f = t.flash().expect("flash tier present");
+        assert_eq!(f.tier, Tier::Flash);
+        assert_eq!(f.name, "FH4-1.5xM/flash");
+        assert_eq!(f.capacity, Some(flash.capacity));
+        assert_eq!(f.bandwidth, flash.bandwidth);
+        // The hierarchy stays ordered fastest-first.
+        assert!(t.local().bandwidth > t.pool().bandwidth);
+        assert!(t.pool().bandwidth > f.bandwidth);
     }
 
     #[test]
@@ -183,5 +271,72 @@ mod tests {
         // More spill → more stall.
         let s2 = kv.step_stall(Bytes::gb(80.0), Bytes::gb(80.0));
         assert!(s2 > s);
+    }
+
+    #[test]
+    fn zero_touch_steps_charge_nothing() {
+        // Regression: a decode step under spill that touches zero KV
+        // bytes used to pay the full command latency and count as a
+        // stalled step.
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut kv = KvPressure::new(Bytes::gb(10.0), &sys);
+        let s = kv.step_stall(Bytes::gb(40.0), Bytes::ZERO);
+        assert_eq!(s, Seconds::ZERO);
+        assert_eq!(kv.steps_stalled, 0);
+        assert_eq!(kv.stall_total, Seconds::ZERO);
+        // The spill high-water mark still advances — the footprint is
+        // real even when this step streamed nothing.
+        assert_eq!(kv.spilled_peak, Bytes::gb(30.0));
+        // A positive-touch stall on the same footprint is unchanged by
+        // the zero-touch guard: bitwise equal to a fresh instance that
+        // never saw the zero-touch step.
+        let s_after = kv.step_stall(Bytes::gb(40.0), Bytes::gb(40.0));
+        let mut fresh = KvPressure::new(Bytes::gb(10.0), &sys);
+        let s_fresh = fresh.step_stall(Bytes::gb(40.0), Bytes::gb(40.0));
+        assert_eq!(s_after, s_fresh);
+        assert_eq!(kv.steps_stalled, 1);
+    }
+
+    #[test]
+    fn flash_tier_serves_spill_past_the_pool_cap() {
+        // Pool capped at 20 GB, flash below it at a quarter of the
+        // fabric rate: spilling 40 GB puts 20 GB on the pool and 20 GB
+        // on flash, which must stall more than an uncapped pool would.
+        let mut slow = fh4_15xm(Bandwidth::tbps(4.8));
+        slow.remote_capacity = Bytes::gb(20.0);
+        slow.flash =
+            Some(FlashConfig { capacity: Bytes::gb(1024.0), bandwidth: Bandwidth::tbps(1.2) });
+        let mut kv = KvPressure::new(Bytes::gb(10.0), &slow);
+        assert_eq!(kv.flash_spilled(Bytes::gb(50.0)), Bytes::gb(20.0));
+        let s_flash = kv.step_stall(Bytes::gb(50.0), Bytes::gb(50.0));
+        assert_eq!(kv.flash_spilled_peak, Bytes::gb(20.0));
+
+        let plain = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut kv2 = KvPressure::new(Bytes::gb(10.0), &plain);
+        let s_pool = kv2.step_stall(Bytes::gb(50.0), Bytes::gb(50.0));
+        assert!(
+            s_flash > s_pool,
+            "flash-backed spill {} ms vs uncapped pool {} ms",
+            s_flash.as_ms(),
+            s_pool.as_ms()
+        );
+
+        // A flash tier running at exactly fabric bandwidth costs the
+        // same stream time up to the Eq 4.1 ramp of splitting one
+        // message into two (never cheaper, and within a fraction of a
+        // percent at GB-scale transfers).
+        let mut same = fh4_15xm(Bandwidth::tbps(4.8));
+        same.remote_capacity = Bytes::gb(20.0);
+        same.flash =
+            Some(FlashConfig { capacity: Bytes::gb(1024.0), bandwidth: Bandwidth::tbps(4.8) });
+        let mut kv3 = KvPressure::new(Bytes::gb(10.0), &same);
+        let s_same = kv3.step_stall(Bytes::gb(50.0), Bytes::gb(50.0));
+        assert!(s_same >= s_pool);
+        assert!(
+            (s_same.value() - s_pool.value()) / s_pool.value() < 1e-2,
+            "equal-bandwidth flash split {} ms vs pool {} ms",
+            s_same.as_ms(),
+            s_pool.as_ms()
+        );
     }
 }

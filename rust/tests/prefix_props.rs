@@ -127,7 +127,7 @@ fn byte_accounting_is_exact_against_the_tier_model() {
     let share = 0.125;
     let c = cache(PrefixCacheConfig { pool_share: share, ..Default::default() });
     let pool = TierModel::from_system(&sys())
-        .remote
+        .pool()
         .capacity
         .expect("TAB node has a pool");
     assert!(
