@@ -1,0 +1,233 @@
+//! Bench target: multi-tenant isolation sweep (EXPERIMENTS.md
+//! §Tenant-Sweep).
+//!
+//! The question this bench exists to ask: when tenant B dumps a batch
+//! burst on the shared fleet, how much of tenant A's interactive tail
+//! does each admission policy give away? Three sections:
+//!
+//! * **passthrough** — a single-tenant `TenantsConfig` is bit-identical
+//!   to the tenants-off fleet (the tenancy machinery is free when
+//!   unused);
+//! * **burst sweep** — tenant A's steady chat lane against a B batch
+//!   burst swept over burst sizes, under DRR weighted fair queueing and
+//!   under global-FIFO admission. The wall this bench pins: WFQ's
+//!   tenant-A p99-TTFT degradation (vs A running solo) is *strictly*
+//!   smaller than FIFO's at every burst size — FIFO parks A's arrivals
+//!   behind B's backlog even though A's home replica is idle;
+//! * **cold start** — a third tenant with no home replica must page its
+//!   model in through the pool: swaps and cold-start latency are
+//!   reported as first-class per-tenant metrics.
+//!
+//! `cargo bench --bench tenant_sweep -- --json` writes
+//! `BENCH_tenant_sweep.json` (scripts/bench_json.sh `tenants`);
+//! `-- --smoke` (scripts/ci.sh) shrinks the sweep.
+
+mod common;
+
+use fenghuang::coordinator::tenancy::{TenantArbitration, TenantsConfig};
+use fenghuang::coordinator::{Cluster, ClusterConfig, ClusterReport, Request};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{generate_tenant_workload, ArrivalConfig, ArrivalPattern, TrafficConfig};
+use fenghuang::units::Seconds;
+
+const REPLICAS: usize = 2;
+const ADMIT_TOKENS: u64 = 1500;
+
+/// Tenant A: steady interactive traffic, one request every 80 ms.
+fn chat_lane(requests: usize) -> Vec<Request> {
+    (0..requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: vec![(i % 509) as i32 + 1; 200],
+            max_new_tokens: 40,
+            arrival: Seconds::new(0.08 * i as f64),
+            tenant: 0,
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// Tenant B: `burst` heavyweight batch requests dumped at t = 50 ms
+/// (prompt + generation inside gpt2's 1024-token context).
+fn batch_burst(burst: usize) -> Vec<Request> {
+    (0..burst)
+        .map(|i| Request {
+            id: (1 << 40) | i as u64,
+            prompt: vec![((i + 7) % 509) as i32 + 1; 600],
+            max_new_tokens: 200,
+            arrival: Seconds::new(0.05),
+            tenant: 1,
+            ..Default::default()
+        })
+        .collect()
+}
+
+fn merged(requests: usize, burst: usize) -> Vec<Request> {
+    let mut reqs = chat_lane(requests);
+    reqs.extend(batch_burst(burst));
+    reqs.sort_by(|x, y| x.arrival.partial_cmp(&y.arrival).expect("finite arrivals"));
+    reqs
+}
+
+fn two_tenants(mode: TenantArbitration) -> TenantsConfig {
+    let mut tc = TenantsConfig::parse("alpha/gpt2,beta/gpt2").expect("spec");
+    tc.arbitration = mode;
+    tc.admit_tokens = Some(ADMIT_TOKENS);
+    tc
+}
+
+fn run(cfg: ClusterConfig, reqs: Vec<Request>) -> ClusterReport {
+    let mut cluster = Cluster::fh4(REPLICAS, &gpt3_175b(), cfg).expect("cluster");
+    cluster.run(reqs).expect("run")
+}
+
+fn tenant_p99(r: &ClusterReport, tenant: usize) -> f64 {
+    r.tenants.as_ref().expect("tenant reports")[tenant].ttft.percentile_ms(99.0)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let mut json_rows: Vec<String> = Vec::new();
+    let requests = if smoke { 16 } else { 24 };
+
+    // ── Passthrough: a single-tenant config must not move a bit ──
+    let plain = run(ClusterConfig::default(), chat_lane(requests));
+    let single = run(
+        ClusterConfig {
+            tenants: Some(TenantsConfig::single(gpt3_175b())),
+            ..Default::default()
+        },
+        chat_lane(requests),
+    );
+    for (label, a, b) in [
+        ("makespan", plain.makespan().value(), single.makespan().value()),
+        ("ttft_p99", plain.fleet.ttft.percentile_ms(99.0), single.fleet.ttft.percentile_ms(99.0)),
+        ("busy", plain.fleet.busy.value(), single.fleet.busy.value()),
+        ("swap_stall", plain.fleet.swap_stall.value(), single.fleet.swap_stall.value()),
+    ] {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "single-tenant config perturbed `{label}`: {a} vs {b}"
+        );
+    }
+    println!("passthrough: single-tenant config bit-identical to tenants-off ✓\n");
+
+    // ── Burst sweep: B steals bandwidth from A, per arbitration mode ──
+    let solo = run(
+        ClusterConfig { tenants: Some(two_tenants(TenantArbitration::Wfq)), ..Default::default() },
+        chat_lane(requests),
+    );
+    let solo_p99 = tenant_p99(&solo, 0);
+    let bursts: &[usize] = if smoke { &[8, 16] } else { &[4, 8, 16, 24] };
+    println!(
+        "== tenant burst sweep (gpt2×2 tenants, {REPLICAS} replicas, {requests} chat req, \
+         gate {ADMIT_TOKENS} tok, solo A p99 {solo_p99:.2} ms) =="
+    );
+    println!("burst  mode  A-p99(ms)  A-degr(ms)  B-p99(ms)  completed");
+    let mut prev_fifo_deg = -1.0f64;
+    for &burst in bursts {
+        let mut degr = [0.0f64; 2];
+        for (mi, mode) in [TenantArbitration::Wfq, TenantArbitration::Fifo].into_iter().enumerate()
+        {
+            let r = run(
+                ClusterConfig { tenants: Some(two_tenants(mode)), ..Default::default() },
+                merged(requests, burst),
+            );
+            assert_eq!(
+                r.fleet.completed as usize,
+                requests + burst,
+                "conservation: every request completes"
+            );
+            let a_p99 = tenant_p99(&r, 0);
+            let b_p99 = tenant_p99(&r, 1);
+            let deg = a_p99 - solo_p99;
+            degr[mi] = deg;
+            println!(
+                "{burst:>5}  {:<4}  {a_p99:>9.2}  {deg:>10.2}  {b_p99:>9.2}  {:>9}",
+                mode.name(),
+                r.fleet.completed
+            );
+            json_rows.push(format!(
+                "{{\"section\": \"burst\", \"burst\": {burst}, \"mode\": {}, \
+                 \"a_p99_ms\": {a_p99:.4}, \"a_solo_p99_ms\": {solo_p99:.4}, \
+                 \"a_degradation_ms\": {deg:.4}, \"b_p99_ms\": {b_p99:.4}, \
+                 \"completed\": {}}}",
+                common::json_str(mode.name()),
+                r.fleet.completed
+            ));
+        }
+        // The wall: fair queueing must give away strictly less of A's
+        // tail than the no-isolation baseline, at every burst size.
+        assert!(
+            degr[0] < degr[1],
+            "WFQ must degrade tenant A strictly less than FIFO at burst {burst}: \
+             wfq +{:.3} ms vs fifo +{:.3} ms",
+            degr[0],
+            degr[1]
+        );
+        // FIFO's damage grows with the backlog parked ahead of A.
+        assert!(
+            degr[1] >= prev_fifo_deg - 1e-9,
+            "FIFO degradation fell as the burst grew: +{:.3} ms after +{:.3} ms",
+            degr[1],
+            prev_fifo_deg
+        );
+        prev_fifo_deg = degr[1];
+    }
+
+    // ── Cold start: a homeless tenant pages its model in via the pool ──
+    let mut spec = TenantsConfig::parse(
+        "alpha/gpt2/weight=3/mix=chat,beta/gpt2-xl/mix=batch,gamma/gpt2/mix=rag",
+    )
+    .expect("spec");
+    spec.admit_tokens = Some(2048);
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 16.0,
+            ..Default::default()
+        },
+        requests: if smoke { 18 } else { 27 },
+        seed: 23,
+        max_prompt: 1024,
+        slo: None,
+        ..Default::default()
+    };
+    let reqs = generate_tenant_workload(&spec, &tc).expect("workload");
+    let r = run(ClusterConfig { tenants: Some(spec), ..Default::default() }, reqs);
+    let ts = r.tenants.as_ref().expect("tenant reports");
+    let swaps: u64 = ts.iter().map(|t| t.swaps).sum();
+    assert!(swaps > 0, "three tenants on two replicas must cold-start at least once");
+    assert!(
+        r.fleet.swap_stall.value() > 0.0,
+        "cold starts must charge swap stalls into the fleet ledger"
+    );
+    println!("\n== cold start (3 tenants, {REPLICAS} replicas) ==");
+    println!("tenant  swaps  cold-start-total(ms)  p99-cold(ms)  pool-held(GB)");
+    for t in ts {
+        println!(
+            "{:<6}  {:>5}  {:>20.2}  {:>12.2}  {:>13.3}",
+            t.name,
+            t.swaps,
+            t.cold_start_total.as_ms(),
+            t.cold_start.percentile_ms(99.0),
+            t.pool_bytes_held.as_gb()
+        );
+        json_rows.push(format!(
+            "{{\"section\": \"cold_start\", \"tenant\": {}, \"swaps\": {}, \
+             \"cold_start_total_ms\": {:.4}, \"cold_start_p99_ms\": {:.4}, \
+             \"pool_bytes_held_gb\": {:.6}, \"completed\": {}}}",
+            common::json_str(&t.name),
+            t.swaps,
+            t.cold_start_total.as_ms(),
+            t.cold_start.percentile_ms(99.0),
+            t.pool_bytes_held.as_gb(),
+            t.completed
+        ));
+    }
+
+    if common::json_requested() {
+        common::write_rows_json("tenant_sweep", &json_rows);
+    }
+}

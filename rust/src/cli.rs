@@ -10,6 +10,7 @@
 
 use crate::config::{baseline8, fh4_15xm, fh4_20xm, FlashConfig, SystemConfig};
 use crate::coordinator::prefix_cache::PrefixCacheConfig;
+use crate::coordinator::tenancy::{TenantArbitration, TenantsConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode};
 use crate::faults::FaultSchedule;
@@ -44,6 +45,9 @@ pub const SERVE_FLAGS: &[&str] = &[
     "flash-gb",
     "flash-bw",
     "faults",
+    "tenants",
+    "tenant-mode",
+    "admit-tokens",
 ];
 
 /// Serve flags that may appear without a value (`--autoscale` ≡
@@ -322,6 +326,36 @@ pub fn parse_faults(
     }
 }
 
+/// Build the multi-tenant config from `--tenants SPEC`, `--tenant-mode
+/// wfq|fifo` and `--admit-tokens N` (DESIGN.md §Multi-Tenant). An absent
+/// `--tenants` is `None` — the single-model serving paths stay a strict
+/// bit-identical passthrough — and makes the companion flags conflicts
+/// rather than silent no-ops.
+pub fn parse_tenants(flags: &HashMap<String, String>) -> Result<Option<TenantsConfig>> {
+    let Some(spec) = flags.get("tenants") else {
+        for k in ["tenant-mode", "admit-tokens"] {
+            if flags.contains_key(k) {
+                return Err(cli_err(format!("--{k} needs --tenants")));
+            }
+        }
+        return Ok(None);
+    };
+    let mut tc = TenantsConfig::parse(spec)?;
+    if let Some(v) = flags.get("tenant-mode") {
+        tc.arbitration = TenantArbitration::parse(v).ok_or_else(|| {
+            cli_err(format!("--tenant-mode wants wfq or fifo, got '{v}'"))
+        })?;
+    }
+    if let Some(v) = flags.get("admit-tokens") {
+        let gate: u64 = v.parse().map_err(|e| cli_err(format!("--admit-tokens: {e}")))?;
+        if gate == 0 {
+            return Err(cli_err("--admit-tokens must be ≥ 1 token".into()));
+        }
+        tc.admit_tokens = Some(gate);
+    }
+    Ok(Some(tc))
+}
+
 /// Reject active fabric contention on a shared-nothing system: there is
 /// no shared TAB pool to arbitrate (the same rule `FabricClock` enforces,
 /// surfaced at flag-validation time with the preset's name).
@@ -597,6 +631,56 @@ mod tests {
         }
         assert!(PAGE_FLAGS.contains(&"pool-gb"));
         assert!(!SERVE_FLAGS.contains(&"pool-gb"));
+        // The multi-tenant family is serve-only.
+        for k in ["tenants", "tenant-mode", "admit-tokens"] {
+            assert!(SERVE_FLAGS.contains(&k), "--{k} missing from SERVE_FLAGS");
+            assert!(!PAGE_FLAGS.contains(&k), "--{k} leaked into PAGE_FLAGS");
+        }
+    }
+
+    #[test]
+    fn tenants_flag_family_builds_the_config() {
+        // Absent → None: single-model serving stays passthrough.
+        let f = parse_flags("serve", &args(&[]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        assert!(parse_tenants(&f).unwrap().is_none());
+        // A two-tenant spec with QoS knobs parses end to end.
+        let f = parse_flags(
+            "serve",
+            &args(&[
+                "--tenants",
+                "alpha/gpt2/weight=3/mix=chat,beta/gpt2-xl/quota=500000/mix=batch",
+                "--tenant-mode",
+                "fifo",
+                "--admit-tokens",
+                "2048",
+            ]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let tc = parse_tenants(&f).unwrap().unwrap();
+        assert_eq!(tc.tenants.len(), 2);
+        assert_eq!(tc.tenants[0].name, "alpha");
+        assert!((tc.tenants[0].weight - 3.0).abs() < 1e-12);
+        assert_eq!(tc.tenants[1].quota_tokens, Some(500_000));
+        assert_eq!(tc.arbitration, TenantArbitration::Fifo);
+        assert_eq!(tc.admit_tokens, Some(2048));
+        // Companion flags without --tenants are conflicts, not no-ops.
+        for lone in [["--tenant-mode", "wfq"], ["--admit-tokens", "1024"]] {
+            let f = parse_flags("serve", &args(&lone), SERVE_FLAGS, SERVE_BARE).unwrap();
+            let e = parse_tenants(&f).unwrap_err().to_string();
+            assert!(e.contains("--tenants"), "{e}");
+        }
+        // Bad values are rejected with the grammar vocabulary.
+        for bad in [
+            ["--tenants", "alpha/gpt2", "--tenant-mode", "strict"].as_slice(),
+            ["--tenants", "alpha/gpt2", "--admit-tokens", "0"].as_slice(),
+            ["--tenants", "alpha/no-such-model"].as_slice(),
+            ["--tenants", "alpha/gpt2/weight=-1"].as_slice(),
+        ] {
+            let f = parse_flags("serve", &args(bad), SERVE_FLAGS, SERVE_BARE).unwrap();
+            assert!(parse_tenants(&f).is_err(), "{bad:?} must fail");
+        }
     }
 
     #[test]

@@ -44,6 +44,11 @@ pub struct ArenaEntry {
     /// TAB module the cached prefix lives on (mirrors
     /// `Request::prefix_home`; revoked on module failure).
     pub prefix_home: Option<usize>,
+    /// Owning tenant (mirrors `Request::tenant`); 0 single-tenant.
+    pub tenant: usize,
+    /// Model-swap cold-start stall charged at this request's prefill
+    /// step (mirrors `Request::swap_stall`); set at admission.
+    pub swap_stall: Seconds,
     /// Session-affinity hash, precomputed at allocation so routing
     /// never needs the prompt bytes.
     affinity: u64,
@@ -102,6 +107,8 @@ impl RequestArena {
             cached_prefix: req.cached_prefix,
             prefix_fetch: req.prefix_fetch,
             prefix_home: req.prefix_home,
+            tenant: req.tenant,
+            swap_stall: req.swap_stall,
             affinity,
             prompt: req.prompt,
             retired: false,
@@ -148,10 +155,7 @@ mod tests {
             prompt: (0..prompt as i32).map(|t| t % 500 + 1).collect(),
             max_new_tokens: gen,
             arrival: Seconds::ms(id as f64),
-            slo: None,
-            cached_prefix: 0,
-            prefix_fetch: Seconds::ZERO,
-            prefix_home: None,
+            ..Default::default()
         }
     }
 

@@ -49,6 +49,12 @@ pub enum EventKind {
     Fault { idx: usize },
     /// Elastic-fleet autoscaler evaluation at a fixed cadence.
     AutoscaleTick,
+    /// Multi-tenant admission pump: drain the tenant arbiter's queues
+    /// into replicas whose gate has freed (DESIGN.md §Multi-Tenant).
+    /// Ranked after `AutoscaleTick` so an admission at a shared instant
+    /// sees the tick's fleet resize, and before replica-local
+    /// completions/arrivals like the tick itself.
+    TenantTick,
     /// A disaggregated prefill→decode KV handoff lands on `replica`.
     HandoffDone { replica: usize },
     /// A KV page migration (paging layer) completes on `replica`.
@@ -71,11 +77,12 @@ impl EventKind {
         match self {
             EventKind::Fault { .. } => 0,
             EventKind::AutoscaleTick => 1,
-            EventKind::HandoffDone { .. } => 2,
-            EventKind::MigrationDone { .. } => 3,
-            EventKind::PrefillDone { .. } => 4,
-            EventKind::DecodeTick { .. } => 5,
-            EventKind::Arrival { .. } => 6,
+            EventKind::TenantTick => 2,
+            EventKind::HandoffDone { .. } => 3,
+            EventKind::MigrationDone { .. } => 4,
+            EventKind::PrefillDone { .. } => 5,
+            EventKind::DecodeTick { .. } => 6,
+            EventKind::Arrival { .. } => 7,
         }
     }
 }
@@ -222,11 +229,13 @@ mod tests {
         let mut cal = EventCalendar::new();
         let t = Seconds::new(1.0);
         assert!(cal.push(t, EventKind::Arrival { req: ReqId(0) }));
+        assert!(cal.push(t, EventKind::TenantTick));
         assert!(cal.push(t, EventKind::AutoscaleTick));
         assert!(cal.push(t, EventKind::Fault { idx: 0 }));
         assert!(cal.push(t, EventKind::Arrival { req: ReqId(1) }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Fault { idx: 0 }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::AutoscaleTick));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::TenantTick));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(0) }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(1) }));
     }

@@ -37,11 +37,14 @@ use super::batcher::Batcher;
 use super::calendar::{EventCalendar, EventKind};
 use super::engine::SimBackend;
 use super::event_core::EventReplica;
-use super::metrics::Metrics;
+use super::metrics::{LatencyStat, Metrics};
 use super::prefix_cache::{PrefixCache, PrefixCacheConfig, PrefixCacheReport};
 use super::request::Request;
 use super::router::{Policy, Router};
 use super::scheduler::{SchedMode, Scheduler};
+use super::tenancy::{
+    pick_replica, Admit, Pick, Queued, TenantArbiter, TenantReport, TenantStats, TenantsConfig,
+};
 use crate::config::{fh4_rack, FlashConfig, SystemConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
@@ -141,6 +144,14 @@ pub struct ClusterConfig {
     /// schedule — are strict passthroughs: both cores run the exact
     /// code paths (and floats) of a fault-free build.
     pub faults: Option<FaultSchedule>,
+    /// Multi-tenant serving (DESIGN.md §Multi-Tenant): each tenant
+    /// brings its own model, QoS class and traffic mix; admissions are
+    /// arbitrated across tenants at the router (WFQ or FIFO), cold
+    /// tenants page their weights in from the pool/flash tier, and the
+    /// report grows per-tenant SLO/goodput/cold-start observables.
+    /// `None` is a strict passthrough: both cores run the exact code
+    /// paths (and floats) of a single-model build.
+    pub tenants: Option<TenantsConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -156,6 +167,7 @@ impl Default for ClusterConfig {
             contention: ContentionConfig::default(),
             flash: None,
             faults: None,
+            tenants: None,
         }
     }
 }
@@ -195,6 +207,13 @@ pub struct ClusterReport {
     /// Peak KV bytes spilled to the remote tier on any replica (the
     /// fleet stall total lives in `fleet.paging_stall`).
     pub kv_spilled_peak: Bytes,
+    /// Peak KV bytes any replica pushed past its pool slice into the
+    /// flash tier (zero without a flash tier or when the pool held).
+    pub flash_spilled_peak: Bytes,
+    /// Per-tenant observables (DESIGN.md §Multi-Tenant): SLO attainment,
+    /// goodput, cold-start latency, quota shedding, pool bytes parked.
+    /// `None` when multi-tenancy is off.
+    pub tenants: Option<Vec<TenantReport>>,
     /// Shared prefix-cache observables (None when the cache is off).
     pub prefix_cache: Option<PrefixCacheReport>,
     /// Shared-fabric arbitration observables: busy fraction, queueing
@@ -289,6 +308,18 @@ impl ClusterReport {
                 self.kv_spilled_peak.as_gb()
             ));
         }
+        if self.flash_spilled_peak.value() > 0.0 {
+            s.push_str(&format!(
+                "flash tier: peak spill {:.2} GB past the pool slice\n",
+                self.flash_spilled_peak.as_gb()
+            ));
+        }
+        if let Some(tenants) = &self.tenants {
+            for t in tenants {
+                s.push_str(&t.summary_line());
+                s.push('\n');
+            }
+        }
         if let Some(fr) = &self.fabric {
             s.push_str(&fr.summary_line());
         }
@@ -335,8 +366,11 @@ struct ReplicaSnap<'a> {
     metrics: &'a Metrics,
     handoffs: u64,
     spilled: Bytes,
-    /// Completion trace for the fault-recovery report — empty unless a
-    /// fault schedule armed trace recording on the replica.
+    /// Peak spill past the pool slice into flash (zero without a tier).
+    flash: Bytes,
+    /// Completion trace for the fault-recovery and per-tenant reports —
+    /// empty unless a fault schedule or a tenants config armed trace
+    /// recording on the replica.
     trace: &'a [CompletionEvent],
 }
 
@@ -420,6 +454,13 @@ pub struct Cluster {
     /// Fault timeline and counters (DESIGN.md §Faults); an empty
     /// timeline keeps every fault code path dormant.
     fstate: FaultState,
+    /// Multi-tenant state (DESIGN.md §Multi-Tenant): replica → tenant
+    /// model assignment (mutated by cold-start swaps), per-tenant
+    /// counters, and the next admission-pump tick. Dormant without a
+    /// tenants config.
+    tassign: Vec<usize>,
+    tstats: Vec<TenantStats>,
+    next_admit: Seconds,
 }
 
 impl Cluster {
@@ -554,6 +595,31 @@ impl Cluster {
             }
             None => Vec::new(),
         };
+        // Multi-tenant validation (DESIGN.md §Multi-Tenant): tenancy
+        // composes with the gate, shedding and the autoscaler, but not
+        // with features whose state is keyed on one fleet-wide model.
+        if let Some(tc) = &cfg.tenants {
+            tc.validate()?;
+            if cfg.disaggregate.is_some() {
+                return Err(FhError::Config(
+                    "multi-tenant serving drives aggregated fleets only (drop --disaggregate)"
+                        .into(),
+                ));
+            }
+            if cfg.prefix_cache.is_some() {
+                return Err(FhError::Config(
+                    "the shared prefix cache is keyed on a single model — drop \
+                     --prefix-cache when serving multiple tenants"
+                        .into(),
+                ));
+            }
+            if cfg.faults.is_some() {
+                return Err(FhError::Config(
+                    "fault injection does not compose with multi-tenancy yet (drop --faults)"
+                        .into(),
+                ));
+            }
+        }
         let mut replicas = Vec::with_capacity(systems.len());
         let mut names = Vec::with_capacity(systems.len());
         let mut roles = Vec::with_capacity(systems.len());
@@ -565,15 +631,22 @@ impl Cluster {
                 None => SchedMode::Full,
             };
             names.push(sys.name.clone());
-            let mut backend = SimBackend::new(sys, model.clone(), cfg.max_batch);
+            // Tenant fleets boot round-robin over the tenant models so
+            // every tenant starts with a warm home somewhere; cold-start
+            // swaps rebalance the assignment as traffic skews.
+            let rmodel = match &cfg.tenants {
+                Some(tc) => tc.tenants[i % tc.tenants.len()].model.clone(),
+                None => model.clone(),
+            };
+            let mut backend = SimBackend::new(sys, rmodel.clone(), cfg.max_batch);
             if let Some(budget) = cfg.kv_budget {
                 backend = backend.with_kv_budget(budget);
             }
-            let batcher = Batcher::new(cfg.max_batch, 64, model.max_seq as usize);
+            let batcher = Batcher::new(cfg.max_batch, 64, rmodel.max_seq as usize);
             let mut sched = Scheduler::new(backend, batcher).with_mode(role);
-            if !fault_timeline.is_empty() {
-                // The recovery report needs a completion trace; healthy
-                // runs record nothing (passthrough).
+            if !fault_timeline.is_empty() || cfg.tenants.is_some() {
+                // The recovery and per-tenant reports need a completion
+                // trace; plain healthy runs record nothing (passthrough).
                 sched = sched.with_trace();
             }
             replicas.push(sched);
@@ -606,6 +679,14 @@ impl Cluster {
             .map(|(_, d)| Router::new(d, Policy::LeastLoaded));
         let n = replicas.len();
         let next_scale = cfg.autoscale.map(|a| a.interval).unwrap_or(Seconds::ZERO);
+        let (tassign, tstats, next_admit) = match &cfg.tenants {
+            Some(tc) => (
+                (0..n).map(|i| i % tc.tenants.len()).collect(),
+                vec![TenantStats::default(); tc.tenants.len()],
+                tc.admit_interval,
+            ),
+            None => (vec![0; n], Vec::new(), Seconds::ZERO),
+        };
         Ok(Cluster {
             replicas,
             names,
@@ -630,6 +711,9 @@ impl Cluster {
             next_scale,
             scale_events: Vec::new(),
             fstate: FaultState::new(fault_timeline),
+            tassign,
+            tstats,
+            next_admit,
         })
     }
 
@@ -664,10 +748,13 @@ impl Cluster {
 
     /// One autoscaler decision at virtual time `t` (DESIGN.md §Traffic):
     /// provision `ceil(outstanding / target_tokens)` active replicas —
-    /// up immediately, down one step per tick.
-    fn autoscale_tick(&mut self, t: Seconds) {
+    /// up immediately, down one step per tick. `queued_extra` is work
+    /// the tenant arbiter holds at the front door (zero without
+    /// tenants): demand the router can't see yet but the controller
+    /// must still provision for.
+    fn autoscale_tick(&mut self, t: Seconds, queued_extra: u64) {
         let Some(a) = self.cfg.autoscale else { return };
-        let outstanding = self.router.total_load();
+        let outstanding = self.router.total_load() + queued_extra;
         let desired = (outstanding.div_ceil(a.target_tokens).max(1) as usize)
             .clamp(a.min_replicas, self.replicas.len());
         let next = if desired > self.active {
@@ -793,6 +880,18 @@ impl Cluster {
             let ok = cal.push(self.next_scale, EventKind::AutoscaleTick);
             debug_assert!(ok);
         }
+        // Multi-tenant arbitration state lives on the run's stack: the
+        // admission closures borrow the cluster and the arbiter
+        // disjointly (DESIGN.md §Multi-Tenant). Pump ticks are only
+        // armed when admissions can actually be deferred — a single
+        // ungated tenant drains at each arrival, keeping that config
+        // bit-identical to a tenants-off run.
+        let mut arb: Option<TenantArbiter<ReqId>> =
+            self.cfg.tenants.as_ref().map(TenantArbiter::new);
+        if self.cfg.tenants.as_ref().is_some_and(|tc| tc.needs_ticks()) {
+            let ok = cal.push(self.next_admit, EventKind::TenantTick);
+            debug_assert!(ok, "admit interval is validated positive");
+        }
         while let Some(ev) = cal.pop() {
             match ev.kind {
                 EventKind::Fault { idx } => {
@@ -811,21 +910,52 @@ impl Cluster {
                     let a = self.cfg.autoscale.expect("tick implies autoscale");
                     // Mirror of the stepping drain loop's `any pending`
                     // check: the first tick past the last arrival with
-                    // nothing left in flight is dropped — not ticked —
-                    // and the calendar drains to empty.
-                    if cal.arrivals_scheduled() == 0 && !evs.iter().any(|r| r.pending() > 0) {
+                    // nothing left in flight (and nothing the arbiter is
+                    // still holding) is dropped — not ticked — and the
+                    // calendar drains to empty.
+                    if cal.arrivals_scheduled() == 0
+                        && arb.as_ref().map_or(true, |a| a.is_empty())
+                        && !evs.iter().any(|r| r.pending() > 0)
+                    {
                         continue;
                     }
                     let t = ev.time;
                     self.advance_event_replicas(&arena, &mut evs, t)?;
-                    self.autoscale_tick(t);
+                    let queued = arb.as_ref().map_or(0, |a| a.queued_tokens());
+                    self.autoscale_tick(t, queued);
                     self.next_scale += a.interval;
                     let ok = cal.push(self.next_scale, EventKind::AutoscaleTick);
                     debug_assert!(ok, "tick interval is validated positive");
                 }
-                EventKind::Arrival { req } => {
-                    self.admit_event_arrival(&mut arena, &mut evs, req)?;
+                EventKind::TenantTick => {
+                    let interval = self
+                        .cfg
+                        .tenants
+                        .as_ref()
+                        .expect("tick implies tenants")
+                        .admit_interval;
+                    // Same drop rule as the autoscale tick: once the
+                    // arrivals are exhausted with nothing queued at the
+                    // door or in flight, the pump retires for good.
+                    if cal.arrivals_scheduled() == 0
+                        && arb.as_ref().map_or(true, |a| a.is_empty())
+                        && !evs.iter().any(|r| r.pending() > 0)
+                    {
+                        continue;
+                    }
+                    let t = ev.time;
+                    self.advance_event_replicas(&arena, &mut evs, t)?;
+                    if let Some(arb) = arb.as_mut() {
+                        self.pump_event(&mut arena, &mut evs, arb, t);
+                    }
+                    self.next_admit += interval;
+                    let ok = cal.push(self.next_admit, EventKind::TenantTick);
+                    debug_assert!(ok, "admit interval is validated positive");
                 }
+                EventKind::Arrival { req } => match arb.as_mut() {
+                    Some(arb) => self.enqueue_event_arrival(&mut arena, &mut evs, arb, req)?,
+                    None => self.admit_event_arrival(&mut arena, &mut evs, req)?,
+                },
                 // Replica-local deadlines are resolved lazily inside
                 // `advance_event_replicas`; the bit-compatible driver
                 // never schedules them (DESIGN.md §Event-Core).
@@ -866,10 +996,17 @@ impl Cluster {
         self.replicas
             .iter()
             .zip(&self.roles)
-            .map(|(r, &role)| {
+            .enumerate()
+            .map(|(i, (r, &role))| {
+                // Same boot assignment as the stepping fleet: tenant
+                // models round-robin, the fleet model otherwise.
+                let rmodel = match &self.cfg.tenants {
+                    Some(tc) => tc.tenants[i % tc.tenants.len()].model.clone(),
+                    None => self.model.clone(),
+                };
                 let mut backend = SimBackend::new(
                     r.backend().sys.clone(),
-                    self.model.clone(),
+                    rmodel.clone(),
                     self.cfg.max_batch,
                 );
                 if let Some(budget) = self.cfg.kv_budget {
@@ -880,9 +1017,9 @@ impl Cluster {
                     role,
                     self.cfg.max_batch,
                     64,
-                    self.model.max_seq as usize,
+                    rmodel.max_seq as usize,
                 );
-                if self.fstate.timeline.is_empty() {
+                if self.fstate.timeline.is_empty() && self.cfg.tenants.is_none() {
                     ev
                 } else {
                     ev.with_trace()
@@ -962,6 +1099,111 @@ impl Cluster {
             arena.retire_prompt(rid);
         }
         Ok(())
+    }
+
+    /// Multi-tenant arrival, event core: advance the fleet, shed- and
+    /// quota-check at the front door, hand the request to the arbiter,
+    /// and pump admissions at the arrival instant. Mirror of the
+    /// tenants-on arrival body of [`Cluster::run_stepping`].
+    fn enqueue_event_arrival(
+        &mut self,
+        arena: &mut RequestArena,
+        evs: &mut [EventReplica],
+        arb: &mut TenantArbiter<ReqId>,
+        rid: ReqId,
+    ) -> Result<()> {
+        let arrival = arena.get(rid).arrival;
+        self.advance_event_replicas(arena, evs, arrival)?;
+        if let Some(cap) = self.cfg.shed_tokens {
+            if self.router.min_active_load() > cap {
+                self.shed += 1;
+                return Ok(());
+            }
+        }
+        let (tenant, work, prompt_len, affinity) = {
+            let e = arena.get(rid);
+            (e.tenant, e.work_tokens(), e.prompt_len, e.affinity_key())
+        };
+        let tc = self.cfg.tenants.as_ref().expect("arbiter implies tenants");
+        if let Some(quota) = tc.tenants[tenant].quota_tokens {
+            if self.tstats[tenant].enqueued_tokens + work > quota {
+                self.tstats[tenant].shed_quota += 1;
+                self.shed += 1;
+                return Ok(());
+            }
+        }
+        self.tstats[tenant].enqueued_tokens += work;
+        arb.enqueue(tenant, Queued { work, prompt_len, affinity, payload: rid });
+        // Nothing downstream of admission reads prompt bytes (tenancy
+        // forbids the prefix cache and faults), so retire eagerly.
+        arena.retire_prompt(rid);
+        self.pump_event(arena, evs, arb, arrival);
+        Ok(())
+    }
+
+    /// Drain the arbiter into the fleet at instant `t`, event core. The
+    /// admission closure picks a replica, routes, admission-checks
+    /// against the tenant's model, swaps a cold tenant's model in, and
+    /// submits; each verdict feeds the arbiter's deficit accounting.
+    /// Mirror of [`Cluster::pump_stepping`].
+    fn pump_event(
+        &mut self,
+        arena: &mut RequestArena,
+        evs: &mut [EventReplica],
+        arb: &mut TenantArbiter<ReqId>,
+        t: Seconds,
+    ) {
+        let tc = self.cfg.tenants.clone().expect("arbiter implies tenants");
+        let gate = tc.admit_tokens.unwrap_or(u64::MAX);
+        arb.pump(|tenant, q| {
+            let load: Vec<u64> = (0..evs.len()).map(|i| self.router.load(i)).collect();
+            let pending: Vec<usize> = evs.iter().map(|r| r.pending()).collect();
+            let pick =
+                pick_replica(tenant, &self.tassign, &load, &pending, self.active, gate);
+            let idx = match pick {
+                Pick::Fleet => self.router.route_work(q.affinity, q.work),
+                Pick::Assigned(i) | Pick::Swap(i) => {
+                    self.router.route_to(i, q.work);
+                    i
+                }
+                Pick::Blocked => return Admit::Blocked(q),
+            };
+            let max_seq = tc.tenants[tenant].model.max_seq as usize;
+            if q.prompt_len == 0 || q.prompt_len > max_seq {
+                self.router.unroute(idx, q.work);
+                self.rejected += 1;
+                return Admit::Rejected;
+            }
+            if matches!(pick, Pick::Swap(_)) {
+                let model = &tc.tenants[tenant].model;
+                let bytes = memory::param_bytes(model);
+                // Weights page in from the flash tier when the rack has
+                // one, else over the pool fabric; an arbitrated fabric
+                // adds the ledger's queueing delay on top.
+                let bw = match self.cfg.flash {
+                    Some(f) => f.bandwidth,
+                    None => evs[idx].backend().sys.fabric_bw,
+                };
+                let mut stall = bytes.over(bw);
+                if let Some(clock) = self.fabric.as_mut() {
+                    let b = clock.book(t, bytes, idx, q.affinity);
+                    stall += b.queueing;
+                    self.fabric_wait += b.queueing;
+                }
+                evs[idx].set_model(model.clone());
+                self.tassign[idx] = tenant;
+                self.tstats[tenant].swaps += 1;
+                self.tstats[tenant].cold_start.record(stall);
+                self.tstats[tenant].cold_start_total += stall;
+                // The triggering request pays the cold start as a serial
+                // stall on its prefill step.
+                arena.get_mut(q.payload).swap_stall = stall;
+            }
+            self.tstats[tenant].admitted_requests += 1;
+            self.tstats[tenant].admitted_tokens += q.work;
+            evs[idx].submit(q.payload);
+            Admit::Served
+        });
     }
 
     /// Event-core mirror of [`Cluster::advance_to`].
@@ -1261,6 +1503,58 @@ impl Cluster {
         self.replicas[idx].submit_all(vec![req]);
     }
 
+    /// Stepping-core twin of [`Cluster::pump_event`]: drain the tenant
+    /// arbiter in weighted-fair order, placing each admitted request on
+    /// its tenant's replica (swapping an idle one when the tenant has no
+    /// home) and charging cold-start transfers through the fabric clock.
+    fn pump_stepping(&mut self, arb: &mut TenantArbiter<Request>, t: Seconds) {
+        let tc = self.cfg.tenants.clone().expect("arbiter implies tenants");
+        let gate = tc.admit_tokens.unwrap_or(u64::MAX);
+        arb.pump(|tenant, mut q| {
+            let load: Vec<u64> = (0..self.replicas.len()).map(|i| self.router.load(i)).collect();
+            let pending: Vec<usize> = self.replicas.iter().map(|r| r.pending()).collect();
+            let pick = pick_replica(tenant, &self.tassign, &load, &pending, self.active, gate);
+            let idx = match pick {
+                Pick::Fleet => self.router.route_work(q.affinity, q.work),
+                Pick::Assigned(i) | Pick::Swap(i) => {
+                    self.router.route_to(i, q.work);
+                    i
+                }
+                Pick::Blocked => return Admit::Blocked(q),
+            };
+            let max_seq = tc.tenants[tenant].model.max_seq as usize;
+            if q.prompt_len == 0 || q.prompt_len > max_seq {
+                self.router.unroute(idx, q.work);
+                self.rejected += 1;
+                return Admit::Rejected;
+            }
+            if matches!(pick, Pick::Swap(_)) {
+                let model = &tc.tenants[tenant].model;
+                let bytes = memory::param_bytes(model);
+                let bw = match self.cfg.flash {
+                    Some(f) => f.bandwidth,
+                    None => self.replicas[idx].backend().sys.fabric_bw,
+                };
+                let mut stall = bytes.over(bw);
+                if let Some(clock) = self.fabric.as_mut() {
+                    let b = clock.book(t, bytes, idx, q.affinity);
+                    stall += b.queueing;
+                    self.fabric_wait += b.queueing;
+                }
+                self.replicas[idx].set_model(model.clone());
+                self.tassign[idx] = tenant;
+                self.tstats[tenant].swaps += 1;
+                self.tstats[tenant].cold_start.record(stall);
+                self.tstats[tenant].cold_start_total += stall;
+                q.payload.swap_stall = stall;
+            }
+            self.tstats[tenant].admitted_requests += 1;
+            self.tstats[tenant].admitted_tokens += q.work;
+            self.replicas[idx].submit_all(vec![q.payload]);
+            Admit::Served
+        });
+    }
+
     /// Serve a workload to completion with the original tick-stepping
     /// core. Kept as the reduced oracle for the differential equivalence
     /// suite — production callers use [`Cluster::run`].
@@ -1268,20 +1562,44 @@ impl Cluster {
         reqs.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let timeline: Vec<FaultSpec> = self.fstate.timeline.clone();
         let mut fi = 0usize;
+        // Multi-tenant arbitration state (mirror of the stack state in
+        // [`Cluster::run`]); pump ticks are only armed when admissions
+        // can actually be deferred.
+        let mut arb: Option<TenantArbiter<Request>> =
+            self.cfg.tenants.as_ref().map(TenantArbiter::new);
+        let admit_interval = self
+            .cfg
+            .tenants
+            .as_ref()
+            .map(|tc| tc.admit_interval)
+            .unwrap_or(Seconds::ZERO);
+        let admit_ticking = self.cfg.tenants.as_ref().is_some_and(|tc| tc.needs_ticks());
         for mut req in reqs {
-            // Faults and autoscaler decisions fire on their own cadence,
-            // interleaved in virtual-time order with the arrivals. Ties
-            // follow the event calendar's class order: fault, then tick,
+            // Faults, autoscaler decisions and tenant admission pumps
+            // fire on their own cadences, interleaved in virtual-time
+            // order with the arrivals. Ties follow the event calendar's
+            // class order: fault, then scale tick, then admission pump,
             // then the arrival itself.
             loop {
-                let fault_due = timeline.get(fi).map(|s| s.at).filter(|&ft| ft <= req.arrival);
-                let tick_due = self
-                    .cfg
-                    .autoscale
-                    .filter(|_| self.next_scale <= req.arrival)
-                    .map(|a| (self.next_scale, a.interval));
-                match (fault_due, tick_due) {
-                    (Some(ft), tick) if tick.map_or(true, |(ts, _)| ft <= ts) => {
+                let mut due: Option<(Seconds, u8)> = None;
+                let mut consider = |t: Seconds, class: u8| {
+                    if due.map_or(true, |(dt, dc)| t < dt || (t == dt && class < dc)) {
+                        due = Some((t, class));
+                    }
+                };
+                if let Some(ft) =
+                    timeline.get(fi).map(|s| s.at).filter(|&ft| ft <= req.arrival)
+                {
+                    consider(ft, 0);
+                }
+                if self.cfg.autoscale.is_some() && self.next_scale <= req.arrival {
+                    consider(self.next_scale, 1);
+                }
+                if admit_ticking && self.next_admit <= req.arrival {
+                    consider(self.next_admit, 2);
+                }
+                match due {
+                    Some((ft, 0)) => {
                         // An idle-fleet fault must not stretch the
                         // makespan: only advance when work is in flight.
                         if self.replicas.iter().any(|r| r.pending() > 0) {
@@ -1291,12 +1609,21 @@ impl Cluster {
                         self.apply_fault_stepping(spec, ft)?;
                         fi += 1;
                     }
-                    (_, Some((ts, interval))) => {
+                    Some((ts, 1)) => {
                         self.advance_to(ts)?;
-                        self.autoscale_tick(ts);
-                        self.next_scale += interval;
+                        let queued = arb.as_ref().map_or(0, |a| a.queued_tokens());
+                        self.autoscale_tick(ts, queued);
+                        self.next_scale +=
+                            self.cfg.autoscale.expect("due implies autoscale").interval;
                     }
-                    _ => break,
+                    Some((ta, _)) => {
+                        self.advance_to(ta)?;
+                        if let Some(arb) = arb.as_mut() {
+                            self.pump_stepping(arb, ta);
+                        }
+                        self.next_admit += admit_interval;
+                    }
+                    None => break,
                 }
             }
             self.advance_to(req.arrival)?;
@@ -1308,6 +1635,32 @@ impl Cluster {
                     self.shed += 1;
                     continue;
                 }
+            }
+            // Multi-tenant front door: quota-check, hand to the arbiter,
+            // pump at the arrival instant (mirror of
+            // [`Cluster::enqueue_event_arrival`]).
+            if let Some(arb) = arb.as_mut() {
+                let tenant = req.tenant;
+                let work = req.work_tokens();
+                let tc = self.cfg.tenants.as_ref().expect("arbiter implies tenants");
+                if let Some(quota) = tc.tenants[tenant].quota_tokens {
+                    if self.tstats[tenant].enqueued_tokens + work > quota {
+                        self.tstats[tenant].shed_quota += 1;
+                        self.shed += 1;
+                        continue;
+                    }
+                }
+                self.tstats[tenant].enqueued_tokens += work;
+                let arrival = req.arrival;
+                let q = Queued {
+                    work,
+                    prompt_len: req.prompt_len(),
+                    affinity: req.affinity_key(),
+                    payload: req,
+                };
+                arb.enqueue(tenant, q);
+                self.pump_stepping(arb, arrival);
+                continue;
             }
             // Shared prefix-cache probe (DESIGN.md §Prefix-Cache): the
             // longest cached prefix of this prompt skips prefill compute
@@ -1390,9 +1743,30 @@ impl Cluster {
         // like the event calendar dropping an AutoscaleTick once the
         // arrivals are exhausted and nothing is pending.
         let mut ticking = self.cfg.autoscale.is_some();
+        let mut pumping = admit_ticking;
         loop {
-            match timeline.get(fi).map(|s| s.at) {
-                Some(ft) if !ticking || ft <= self.next_scale => {
+            // Retirement mirrors the calendar dropping a tick: the first
+            // due tick that observes no backlog (fleet idle, arbiter
+            // drained) ends that cadence for good.
+            let idle = !self.replicas.iter().any(|r| r.pending() > 0)
+                && arb.as_ref().map_or(true, |a| a.is_empty());
+            let mut due: Option<(Seconds, u8)> = None;
+            let mut consider = |t: Seconds, class: u8| {
+                if due.map_or(true, |(dt, dc)| t < dt || (t == dt && class < dc)) {
+                    due = Some((t, class));
+                }
+            };
+            if let Some(s) = timeline.get(fi) {
+                consider(s.at, 0);
+            }
+            if ticking {
+                consider(self.next_scale, 1);
+            }
+            if pumping {
+                consider(self.next_admit, 2);
+            }
+            match due {
+                Some((ft, 0)) => {
                     if self.replicas.iter().any(|r| r.pending() > 0) {
                         self.advance_to(ft)?;
                     }
@@ -1400,20 +1774,29 @@ impl Cluster {
                     self.apply_fault_stepping(spec, ft)?;
                     fi += 1;
                 }
-                _ => {
-                    if !ticking {
-                        break;
-                    }
-                    if !self.replicas.iter().any(|r| r.pending() > 0) {
+                Some((t, 1)) => {
+                    if idle {
                         ticking = false;
                         continue;
                     }
-                    let a = self.cfg.autoscale.expect("ticking implies autoscale");
-                    let t = self.next_scale;
                     self.advance_to(t)?;
-                    self.autoscale_tick(t);
-                    self.next_scale += a.interval;
+                    let queued = arb.as_ref().map_or(0, |a| a.queued_tokens());
+                    self.autoscale_tick(t, queued);
+                    self.next_scale +=
+                        self.cfg.autoscale.expect("ticking implies autoscale").interval;
                 }
+                Some((t, _)) => {
+                    if idle {
+                        pumping = false;
+                        continue;
+                    }
+                    self.advance_to(t)?;
+                    if let Some(arb) = arb.as_mut() {
+                        self.pump_stepping(arb, t);
+                    }
+                    self.next_admit += admit_interval;
+                }
+                None => break,
             }
         }
         // Drain. Prefill/serving pool first; in disaggregated mode its
@@ -1458,6 +1841,11 @@ impl Cluster {
                     .kv_pressure()
                     .map(|kv| kv.spilled_peak)
                     .unwrap_or(Bytes::ZERO),
+                flash: r
+                    .backend()
+                    .kv_pressure()
+                    .map(|kv| kv.flash_spilled_peak)
+                    .unwrap_or(Bytes::ZERO),
                 trace: r.trace(),
             })
             .collect();
@@ -1483,6 +1871,11 @@ impl Cluster {
                     .kv_pressure()
                     .map(|kv| kv.spilled_peak)
                     .unwrap_or(Bytes::ZERO),
+                flash: r
+                    .backend()
+                    .kv_pressure()
+                    .map(|kv| kv.flash_spilled_peak)
+                    .unwrap_or(Bytes::ZERO),
                 trace: r.trace(),
             })
             .collect();
@@ -1497,12 +1890,14 @@ impl Cluster {
         let mut fleet = Metrics::default();
         let mut per_replica = Vec::with_capacity(snaps.len());
         let mut kv_spilled_peak = Bytes::ZERO;
+        let mut flash_spilled_peak = Bytes::ZERO;
         fleet.rejected = self.rejected;
         fleet.shed = self.shed;
         fleet.fabric_wait = self.fabric_wait;
         for (i, r) in snaps.iter().enumerate() {
             fleet.merge(r.metrics);
             kv_spilled_peak = kv_spilled_peak.max(r.spilled);
+            flash_spilled_peak = flash_spilled_peak.max(r.flash);
             let routed_tokens = match self.roles[i] {
                 SchedMode::DecodeOnly => self
                     .decode_router
@@ -1553,10 +1948,69 @@ impl Cluster {
             }
             fr
         });
+        // Per-tenant accounting: front-door counters live in `tstats`;
+        // completion-side numbers (TTFT tail, SLO attainment, goodput)
+        // come from the merged per-replica traces, which both cores
+        // populate in identical order.
+        let tenants = self.cfg.tenants.as_ref().map(|tc| {
+            tc.tenants
+                .iter()
+                .enumerate()
+                .map(|(ti, t)| {
+                    let stats = &self.tstats[ti];
+                    let mut ttft = LatencyStat::default();
+                    let mut completed = 0u64;
+                    let mut tokens_generated = 0u64;
+                    let mut slo_total = 0u64;
+                    let mut slo_met = 0u64;
+                    let mut goodput_tokens = 0u64;
+                    for s in snaps {
+                        for ev in s.trace.iter().filter(|e| e.tenant == ti) {
+                            completed += 1;
+                            tokens_generated += ev.tokens;
+                            ttft.record(ev.ttft);
+                            if let Some(ok) = ev.slo {
+                                slo_total += 1;
+                                if ok {
+                                    slo_met += 1;
+                                    goodput_tokens += ev.tokens;
+                                }
+                            }
+                        }
+                    }
+                    let homed = self.tassign.iter().take(self.active).any(|&a| a == ti);
+                    TenantReport {
+                        name: t.name.clone(),
+                        model: t.model.name.clone(),
+                        weight: t.weight,
+                        admitted_requests: stats.admitted_requests,
+                        admitted_tokens: stats.admitted_tokens,
+                        enqueued_tokens: stats.enqueued_tokens,
+                        shed_quota: stats.shed_quota,
+                        completed,
+                        tokens_generated,
+                        slo_total,
+                        slo_met,
+                        goodput_tokens,
+                        ttft,
+                        swaps: stats.swaps,
+                        cold_start: stats.cold_start.clone(),
+                        cold_start_total: stats.cold_start_total,
+                        pool_bytes_held: if homed {
+                            Bytes::ZERO
+                        } else {
+                            memory::param_bytes(&t.model)
+                        },
+                    }
+                })
+                .collect()
+        });
         ClusterReport {
             model: self.model.name.clone(),
             policy: self.cfg.policy,
             kv_spilled_peak,
+            flash_spilled_peak,
+            tenants,
             prefix_cache: self.prefix_cache.as_ref().map(|pc| pc.report()),
             fabric: self.fabric.as_ref().map(|c| c.report()),
             faults,
@@ -1667,6 +2121,35 @@ pub fn demo_serve_traffic(
         "open-loop traffic: {} requests, mix {}, pattern {} @ {:.1} qps peak, seed {}\n{}",
         tc.requests,
         tc.mix.name(),
+        tc.arrivals.pattern.name(),
+        tc.arrivals.qps,
+        tc.seed,
+        report.summary()
+    ))
+}
+
+/// `fenghuang serve --tenants …`: multi-tenant multi-model serving over
+/// one shared pool (DESIGN.md §Multi-Tenant). `cfg.tenants` must be
+/// populated; each tenant drives its share of the open-loop traffic
+/// with its own mix and SLO scale.
+pub fn demo_serve_tenants(
+    replicas: usize,
+    cfg: ClusterConfig,
+    tc: &crate::traffic::TrafficConfig,
+) -> Result<String> {
+    let tenants = cfg
+        .tenants
+        .clone()
+        .ok_or_else(|| FhError::Config("demo_serve_tenants requires cfg.tenants".into()))?;
+    let reqs = crate::traffic::tenants::generate_tenant_workload(&tenants, tc)?;
+    let base = tenants.tenants[0].model.clone();
+    let mut cluster = Cluster::fh4(replicas, &base, cfg)?;
+    let report = cluster.run(reqs)?;
+    Ok(format!(
+        "multi-tenant serving: {} tenants ({}), {} requests, pattern {} @ {:.1} qps peak, seed {}\n{}",
+        tenants.tenants.len(),
+        tenants.arbitration.name(),
+        tc.requests,
         tc.arrivals.pattern.name(),
         tc.arrivals.qps,
         tc.seed,
@@ -2233,5 +2716,123 @@ mod tests {
         if slow_flash.kv_spilled_peak.as_gb() > 3.5 {
             assert!(slow_flash.fleet.paging_stall > pool_only.fleet.paging_stall);
         }
+    }
+
+    #[test]
+    fn flash_spill_peak_surfaces_in_report_and_summary() {
+        use crate::config::{fh4_rack, FlashConfig};
+        use crate::units::Bandwidth;
+        // A sliver of a pool slice forces nearly all KV spill through to
+        // the flash tier, so the fleet report must surface the overflow.
+        let mut systems = fh4_rack(2, Bandwidth::tbps(4.8));
+        for s in &mut systems {
+            s.remote_capacity = Bytes::gb(0.25);
+        }
+        let cfg = ClusterConfig {
+            kv_budget: Some(Bytes::gb(2.0)),
+            flash: Some(FlashConfig {
+                capacity: Bytes::gb(2048.0),
+                bandwidth: Bandwidth::tbps(1.0),
+            }),
+            ..Default::default()
+        };
+        let mut c = Cluster::new(systems, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(small_workload(12)).unwrap();
+        assert!(r.kv_spilled_peak.value() > 0.0, "budget must bind");
+        assert!(
+            r.flash_spilled_peak.value() > 0.0,
+            "spill past a 0.25 GB pool slice must reach flash"
+        );
+        assert!(r.flash_spilled_peak.value() <= r.kv_spilled_peak.value());
+        assert!(r.summary().contains("flash tier: peak spill"), "{}", r.summary());
+        // Without a flash tier the observable stays zero and silent.
+        let mut plain = Cluster::fh4(2, &gpt3_175b(), ClusterConfig::default()).unwrap();
+        let rp = plain.run(small_workload(12)).unwrap();
+        assert_eq!(rp.flash_spilled_peak, Bytes::ZERO);
+        assert!(!rp.summary().contains("flash tier"));
+    }
+
+    fn two_tenant_cfg() -> super::super::tenancy::TenantsConfig {
+        use super::super::tenancy::{TenantConfig, TenantsConfig};
+        use crate::models::arch::{gpt2, gpt2_xl};
+        TenantsConfig::new(vec![
+            TenantConfig::new("alpha", gpt2()),
+            TenantConfig::new("beta", gpt2_xl()),
+        ])
+    }
+
+    #[test]
+    fn tenancy_rejects_unsupported_compositions() {
+        use crate::faults::{FaultKind, FaultSchedule, FaultSpec};
+        let tenants = Some(two_tenant_cfg());
+        let bad = ClusterConfig {
+            tenants: tenants.clone(),
+            disaggregate: Some((1, 1)),
+            ..Default::default()
+        };
+        assert!(Cluster::fh4(2, &gpt3_175b(), bad).is_err());
+        let bad = ClusterConfig {
+            tenants: tenants.clone(),
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            ..Default::default()
+        };
+        assert!(Cluster::fh4(2, &gpt3_175b(), bad).is_err());
+        let mut faults = FaultSchedule::default();
+        faults.events.push(FaultSpec {
+            at: Seconds::ms(5.0),
+            kind: FaultKind::ReplicaCrash { replica: 0, repair: Seconds::new(1.0) },
+        });
+        let bad = ClusterConfig { tenants, faults: Some(faults), ..Default::default() };
+        assert!(Cluster::fh4(2, &gpt3_175b(), bad).is_err());
+    }
+
+    #[test]
+    fn two_tenant_run_reports_per_tenant_observables() {
+        use crate::traffic::{generate_tenant_workload, TrafficConfig};
+        let tenants = two_tenant_cfg();
+        let tc = TrafficConfig { requests: 24, seed: 11, ..Default::default() };
+        let reqs = generate_tenant_workload(&tenants, &tc).unwrap();
+        let cfg = ClusterConfig { tenants: Some(tenants), ..Default::default() };
+        let mut c = Cluster::fh4(2, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(reqs).unwrap();
+        let ts = r.tenants.as_ref().expect("tenants config implies tenant reports");
+        assert_eq!(ts.len(), 2);
+        // Both tenants were homed at boot (round-robin): no cold starts,
+        // every request admitted and completed.
+        for t in ts {
+            assert!(t.admitted_requests > 0, "{}", t.name);
+            assert_eq!(t.completed, t.admitted_requests, "{}", t.name);
+            assert_eq!(t.swaps, 0, "{}", t.name);
+            assert_eq!(t.pool_bytes_held, Bytes::ZERO, "{}", t.name);
+            assert!(t.ttft.count() == t.completed as usize, "{}", t.name);
+        }
+        let completed: u64 = ts.iter().map(|t| t.completed).sum();
+        assert_eq!(completed, r.fleet.completed);
+        assert!(r.summary().contains("tenant alpha"), "{}", r.summary());
+        assert!(r.summary().contains("tenant beta"), "{}", r.summary());
+    }
+
+    #[test]
+    fn cold_tenant_swaps_models_and_pays_the_transfer() {
+        use crate::traffic::{generate_tenant_workload, TrafficConfig};
+        // One replica, two tenants: whoever is not resident must swap
+        // the model in through the pool, and the report prices it.
+        let tenants = two_tenant_cfg();
+        let tc = TrafficConfig { requests: 12, seed: 5, ..Default::default() };
+        let reqs = generate_tenant_workload(&tenants, &tc).unwrap();
+        let cfg = ClusterConfig { tenants: Some(tenants), ..Default::default() };
+        let mut c = Cluster::fh4(1, &gpt3_175b(), cfg).unwrap();
+        let r = c.run(reqs).unwrap();
+        let ts = r.tenants.as_ref().unwrap();
+        let swaps: u64 = ts.iter().map(|t| t.swaps).sum();
+        assert!(swaps >= 1, "a single replica cannot host both tenants warm");
+        let cold: Seconds = ts.iter().map(|t| t.cold_start_total).sum();
+        assert!(cold > Seconds::ZERO, "cold starts must cost transfer time");
+        assert_eq!(r.fleet.completed, ts.iter().map(|t| t.completed).sum::<u64>());
+        // Exactly one tenant still holds the replica at end of run; the
+        // other's weights are parked in the pool.
+        let parked = ts.iter().filter(|t| t.pool_bytes_held.value() > 0.0).count();
+        assert_eq!(parked, 1);
+        assert!(r.fleet.swap_stall > Seconds::ZERO, "swap stalls reach fleet metrics");
     }
 }

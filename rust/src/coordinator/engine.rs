@@ -117,6 +117,16 @@ impl SimBackend {
         self.kv.as_ref()
     }
 
+    /// Swap the served model in place (multi-tenant cold start,
+    /// DESIGN.md §Multi-Tenant). Both memo caches are keyed only by
+    /// (batch, length-bucket), so stale entries priced for the old
+    /// model would corrupt every later step — drop them.
+    pub fn set_model(&mut self, model: ModelArch) {
+        self.model = model;
+        self.prefill_cache.clear();
+        self.decode_cache.clear();
+    }
+
     fn bucket(len: u64) -> u64 {
         len.next_power_of_two().max(64)
     }
@@ -251,6 +261,23 @@ mod tests {
         let seqs = vec![vec![1i32; 1000]; 4];
         let (d, _) = via_trait.decode_step(&seqs).unwrap();
         assert_eq!(d, via_cost.decode_cost(4, 1000, 4000).unwrap());
+    }
+
+    #[test]
+    fn set_model_drops_stale_cost_caches() {
+        use crate::models::arch::gpt2_xl;
+        let sys = fh4_15xm(Bandwidth::tbps(4.8));
+        let mut b = SimBackend::new(sys.clone(), gpt3_175b(), 8);
+        let big = b.prefill_cost(4, 704).unwrap();
+        let _ = b.decode_cost(4, 1000, 4000).unwrap();
+        assert_eq!(b.prefill_cache.len(), 1);
+        b.set_model(gpt2_xl());
+        assert!(b.prefill_cache.is_empty() && b.decode_cache.is_empty());
+        let small = b.prefill_cost(4, 704).unwrap();
+        assert!(small < big, "swapped-in model must be re-priced, not memo-served");
+        // And the new prices match a backend born with the new model.
+        let mut fresh = SimBackend::new(sys, gpt2_xl(), 8);
+        assert_eq!(small, fresh.prefill_cost(4, 704).unwrap());
     }
 
     #[test]

@@ -186,6 +186,13 @@ impl EventReplica {
         &self.backend
     }
 
+    /// Repoint this replica at a different model (multi-tenant cold
+    /// start) — mirror of `Scheduler::set_model`.
+    pub fn set_model(&mut self, model: crate::models::arch::ModelArch) {
+        self.max_prompt = model.max_seq as usize;
+        self.backend.set_model(model);
+    }
+
     pub fn clock(&self) -> Seconds {
         self.clock
     }
@@ -297,11 +304,15 @@ impl EventReplica {
         // Prefix-KV fetch stalls sum in batch order (f64 addition order
         // is part of the bit-identity contract).
         let fetch: Seconds = batch.iter().map(|&id| arena.get(id).prefix_fetch).sum();
+        // Cold-start model-swap stalls sum the same way (DESIGN.md
+        // §Multi-Tenant); zero outside the multi-tenant layer.
+        let swap: Seconds = batch.iter().map(|&id| arena.get(id).swap_stall).sum();
         let compute = self.backend.prefill_cost(n as u64, padded_len as u64)?;
-        let elapsed = compute + fetch;
+        let elapsed = compute + fetch + swap;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
         self.metrics.prefix_fetch += fetch;
+        self.metrics.swap_stall += swap;
         for id in batch {
             let e = arena.get(id);
             self.metrics.prefill_tokens += e.prompt_len as u64;
@@ -387,6 +398,8 @@ impl EventReplica {
                         at: clock,
                         tokens: a.generated as u64,
                         slo: slo_ok,
+                        tenant: e.tenant,
+                        ttft: a.ttft,
                     });
                 }
                 completed_work.push(a.len as u64);

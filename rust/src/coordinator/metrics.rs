@@ -264,6 +264,10 @@ pub struct Metrics {
     /// arbitration layer (handoffs + prefix fetches; zero with
     /// contention off — DESIGN.md §Fabric-Contention).
     pub fabric_wait: Seconds,
+    /// Model-swap cold-start stall charged to prefill steps when a
+    /// multi-tenant admission paged another tenant's weights onto this
+    /// replica (zero on single-model fleets — DESIGN.md §Multi-Tenant).
+    pub swap_stall: Seconds,
 }
 
 impl Metrics {
@@ -340,6 +344,7 @@ impl Metrics {
         self.busy += other.busy;
         self.paging_stall += other.paging_stall;
         self.fabric_wait += other.fabric_wait;
+        self.swap_stall += other.swap_stall;
         self.clock = self.clock.max(other.clock);
     }
 
@@ -351,6 +356,11 @@ impl Metrics {
         };
         let fabric = if self.fabric_wait.value() > 0.0 {
             format!(" | fabric wait {:.3} ms", self.fabric_wait.as_ms())
+        } else {
+            String::new()
+        };
+        let swap = if self.swap_stall.value() > 0.0 {
+            format!(" | model-swap stall {:.3} ms", self.swap_stall.as_ms())
         } else {
             String::new()
         };
@@ -377,7 +387,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "completed {} | rejected {}{shed} | tokens {} | wall {:.3}s{stall}{fabric}\n{prefix}{slo}\
+            "completed {} | rejected {}{shed} | tokens {} | wall {:.3}s{stall}{fabric}{swap}\n{prefix}{slo}\
              TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}\n\
              TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}\n\
              E2E   mean {:.2} ms  p95 {:.2}\n\
@@ -585,6 +595,17 @@ mod tests {
         assert!(a.summary().contains("fabric wait"), "{}", a.summary());
         // Silent when the arbitration layer charged nothing.
         assert!(!Metrics::default().summary().contains("fabric wait"));
+    }
+
+    #[test]
+    fn swap_stall_merges_and_reports() {
+        let mut a = Metrics { swap_stall: Seconds::ms(40.0), ..Default::default() };
+        let b = Metrics { swap_stall: Seconds::ms(60.0), ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.swap_stall, Seconds::ms(100.0));
+        assert!(a.summary().contains("model-swap stall"), "{}", a.summary());
+        // Silent on single-model fleets where no swap ever happens.
+        assert!(!Metrics::default().summary().contains("model-swap"));
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //!   oracle by a differential test harness;
 //! * [`prefix_cache`] — cluster-wide shared prefix-KV cache in the TAB
 //!   pool: cross-replica prefill reuse (DESIGN.md §Prefix-Cache);
+//! * [`tenancy`] — multi-tenant serving: per-tenant models and QoS,
+//!   weighted-fair admission arbitration, cold-start model swaps
+//!   (DESIGN.md §Multi-Tenant);
 //! * [`metrics`] — latency/throughput accounting, per-replica and
 //!   fleet-level.
 
@@ -33,6 +36,7 @@ pub mod prefix_cache;
 pub mod request;
 pub mod router;
 pub mod scheduler;
+pub mod tenancy;
 #[cfg(feature = "pjrt")]
 pub mod tp;
 
@@ -40,8 +44,8 @@ pub use arena::{ArenaEntry, ReqId, RequestArena};
 pub use batcher::Batcher;
 pub use calendar::{Event, EventCalendar, EventKind};
 pub use cluster::{
-    demo_serve_cluster, demo_serve_traffic, session_workload, AutoscaleConfig, Cluster,
-    ClusterConfig, ClusterReport,
+    demo_serve_cluster, demo_serve_tenants, demo_serve_traffic, session_workload, AutoscaleConfig,
+    Cluster, ClusterConfig, ClusterReport,
 };
 pub use engine::{Backend, SimBackend};
 pub use event_core::{EventReplica, LeanHandoff};
@@ -50,6 +54,7 @@ pub use metrics::{LatencyStat, Metrics, STREAMING_THRESHOLD};
 pub use request::{Request, Response, SloTarget};
 pub use router::{Policy, Router};
 pub use scheduler::{SchedMode, Scheduler};
+pub use tenancy::{TenantArbitration, TenantConfig, TenantReport, TenantsConfig};
 
 use crate::config::fh4_15xm;
 use crate::error::Result;

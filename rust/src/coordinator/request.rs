@@ -47,6 +47,13 @@ pub struct Request {
     /// all three prefix fields — when that module dies before the
     /// request prefills (DESIGN.md §Faults).
     pub prefix_home: Option<usize>,
+    /// Owning tenant (DESIGN.md §Multi-Tenant); 0 on single-tenant
+    /// fleets, where it is never read.
+    pub tenant: usize,
+    /// Model-swap cold-start stall charged to this request's prefill
+    /// step when its admission forced a replica to page a different
+    /// tenant's weights in. Zero everywhere else.
+    pub swap_stall: Seconds,
 }
 
 impl Request {

@@ -277,6 +277,17 @@ impl Router {
         self.route_work(key, work)
     }
 
+    /// Direct placement, bypassing the policy: charge `work` to a
+    /// replica the caller already picked. The multi-tenant admission
+    /// layer uses this after `tenancy::pick_replica` has chosen the
+    /// tenant's home (or swap target); the load/routed accounting — and
+    /// hence `complete_work`/`unroute` symmetry — stays identical to a
+    /// policy route (DESIGN.md §Multi-Tenant).
+    pub fn route_to(&mut self, replica: usize, work: u64) {
+        self.load[replica] += work;
+        self.routed[replica] += work;
+    }
+
     /// Report completion of a request previously routed to `replica`.
     pub fn complete(&mut self, replica: usize, req: &Request) {
         self.complete_work(replica, req.work_tokens());
@@ -370,6 +381,24 @@ mod tests {
         // Releasing more than outstanding saturates at zero.
         r.complete_work(idx, 10_000);
         assert_eq!(r.load(idx), 0);
+    }
+
+    #[test]
+    fn route_to_charges_like_a_policy_route() {
+        let mut r = Router::new(3, Policy::LeastLoaded);
+        r.route_to(2, 100);
+        assert_eq!(r.load(2), 100);
+        assert_eq!(r.routed(), &[0, 0, 100]);
+        // Same release/revoke symmetry as route_work.
+        r.complete_work(2, 40);
+        assert_eq!(r.load(2), 60);
+        r.unroute(2, 60);
+        assert_eq!(r.load(2), 0);
+        assert_eq!(r.routed(), &[0, 0, 40]);
+        // Direct placement must not perturb the policy's RR cursor or
+        // least-loaded view beyond the charged load itself.
+        let next = r.route_work(1, 10);
+        assert_ne!(next, 2, "replica 2 still carries routed history but no load");
     }
 
     #[test]

@@ -286,11 +286,16 @@ impl<B: Backend> Scheduler<B> {
         // pooled KV must be fetched before attention can run over the
         // full context: the TAB read is a serial stall on the step.
         let fetch: Seconds = batch.requests.iter().map(|r| r.prefix_fetch).sum();
+        // Cold-start model swaps (DESIGN.md §Multi-Tenant) stall the
+        // first prefill the same way: weight paging is serial with the
+        // step. Zero for every request outside the multi-tenant layer.
+        let swap: Seconds = batch.requests.iter().map(|r| r.swap_stall).sum();
         let (compute, first_tokens) = self.backend.prefill(&items, batch.padded_len)?;
-        let elapsed = compute + fetch;
+        let elapsed = compute + fetch + swap;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
         self.metrics.prefix_fetch += fetch;
+        self.metrics.swap_stall += swap;
         for (req, first) in batch.requests.into_iter().zip(first_tokens) {
             self.metrics.prefill_tokens += req.prompt_len() as u64;
             self.metrics.prefill_tokens_saved +=
@@ -371,6 +376,8 @@ impl<B: Backend> Scheduler<B> {
                         at: clock,
                         tokens: a.generated as u64,
                         slo: slo_ok,
+                        tenant: a.req.tenant,
+                        ttft: a.ttft,
                     });
                 }
                 self.responses.push(Response {
@@ -434,6 +441,16 @@ impl<B: Backend> Scheduler<B> {
     /// node config off it for KV-handoff costing).
     pub fn backend(&self) -> &B {
         &self.backend
+    }
+}
+
+impl Scheduler<super::engine::SimBackend> {
+    /// Repoint this replica at a different model (multi-tenant cold
+    /// start, DESIGN.md §Multi-Tenant). The admission limit follows the
+    /// new model's context window; the backend reprices its step caches.
+    pub fn set_model(&mut self, model: crate::models::arch::ModelArch) {
+        self.batcher.max_prompt = model.max_seq as usize;
+        self.backend.set_model(model);
     }
 }
 

@@ -1,0 +1,843 @@
+//! Multi-tenant admission arbitration (DESIGN.md §Multi-Tenant; →
+//! EXPERIMENTS.md §Tenant-Sweep).
+//!
+//! The paper's rack-level pitch is one *shared* disaggregated pool
+//! multiplexed across workloads. This module supplies the missing
+//! control plane: each tenant brings its own [`ModelArch`], QoS class
+//! (SLO scale, token quota) and traffic mix, and the cluster arbitrates
+//! admissions across tenants at the router with either deficit-round-
+//! robin weighted fair queueing ([`TenantArbitration::Wfq`]) or a naive
+//! global FIFO ([`TenantArbitration::Fifo`]) — the baseline the
+//! tenant-isolation tests show leaking a neighbour's burst into an
+//! innocent tenant's tail latency.
+//!
+//! Everything here is deliberately *pure* bookkeeping over integers so
+//! both simulation cores (`Cluster::run` on the event calendar and the
+//! `run_stepping` oracle) share byte-identical decisions; the
+//! differential harness in `rust/tests/event_core_equiv.rs` pins that.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::metrics::LatencyStat;
+use crate::error::{FhError, Result};
+use crate::models::arch::{by_name, ModelArch};
+use crate::traffic::{ClassKind, WorkloadMix};
+use crate::units::{Bytes, Seconds};
+
+/// Default DRR base quantum: admitted tokens a weight-1.0 tenant may
+/// release per round. One round fits a typical chat request, so light
+/// interactive tenants interleave ahead of a batch tenant's backlog.
+pub const DEFAULT_QUANTUM: u64 = 8192;
+
+/// Default cadence of the admission pump between arrivals (only armed
+/// when a gate or replica contention can actually defer admissions).
+pub const DEFAULT_ADMIT_INTERVAL_MS: f64 = 10.0;
+
+/// Arbitration discipline multiplexing tenants onto the shared fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantArbitration {
+    /// Deficit-round-robin weighted fair queueing (default): weights
+    /// scale per-round deficit quanta, so a backlogged tenant's
+    /// admitted tokens track its weight share to within one request.
+    Wfq,
+    /// Naive global arrival order — the "no isolation" baseline.
+    Fifo,
+}
+
+impl TenantArbitration {
+    /// Parse a CLI mode name.
+    pub fn parse(s: &str) -> Option<TenantArbitration> {
+        match s.to_ascii_lowercase().as_str() {
+            "wfq" | "drr" | "fair" => Some(TenantArbitration::Wfq),
+            "fifo" | "none" => Some(TenantArbitration::Fifo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TenantArbitration::Wfq => "wfq",
+            TenantArbitration::Fifo => "fifo",
+        }
+    }
+}
+
+/// One tenant: its model, QoS class, and traffic shape.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    pub name: String,
+    /// Model this tenant is served with; replicas holding a different
+    /// model must swap (cold start) before taking the tenant's work.
+    pub model: ModelArch,
+    /// WFQ weight (scales the per-round deficit quantum). Must be > 0.
+    pub weight: f64,
+    /// Front-door token quota: total work tokens the tenant may enqueue
+    /// over a run. Exhaustion sheds at admission, before routing.
+    pub quota_tokens: Option<u64>,
+    /// Latency-tier scale on the fleet base SLO (>1 = relaxed tier).
+    pub slo_scale: f64,
+    /// Workload mix this tenant's traffic is drawn from.
+    pub mix: WorkloadMix,
+}
+
+impl TenantConfig {
+    /// A weight-1.0 chat tenant with no quota at the base latency tier.
+    pub fn new(name: &str, model: ModelArch) -> TenantConfig {
+        TenantConfig {
+            name: name.to_string(),
+            model,
+            weight: 1.0,
+            quota_tokens: None,
+            slo_scale: 1.0,
+            mix: WorkloadMix::of(ClassKind::Chat),
+        }
+    }
+}
+
+/// Fleet-level tenancy configuration (`ClusterConfig::tenants`).
+#[derive(Debug, Clone)]
+pub struct TenantsConfig {
+    pub tenants: Vec<TenantConfig>,
+    pub arbitration: TenantArbitration,
+    /// Admission gate: a replica only takes new work while its routed
+    /// load is at or below this many tokens. `None` admits eagerly —
+    /// the arbiter never queues, so WFQ and FIFO coincide.
+    pub admit_tokens: Option<u64>,
+    /// DRR base quantum in tokens at weight 1.0.
+    pub quantum: u64,
+    /// Cadence of the admission pump between arrivals.
+    pub admit_interval: Seconds,
+}
+
+impl TenantsConfig {
+    /// Default arbitration (WFQ, no gate) over the given tenants.
+    pub fn new(tenants: Vec<TenantConfig>) -> TenantsConfig {
+        TenantsConfig {
+            tenants,
+            arbitration: TenantArbitration::Wfq,
+            admit_tokens: None,
+            quantum: DEFAULT_QUANTUM,
+            admit_interval: Seconds::ms(DEFAULT_ADMIT_INTERVAL_MS),
+        }
+    }
+
+    /// One default tenant on `model` — semantically the single-tenant
+    /// fleet, pinned bit-identical to tenants-off by the property tests.
+    pub fn single(model: ModelArch) -> TenantsConfig {
+        let name = model.name.clone();
+        TenantsConfig::new(vec![TenantConfig::new(&name, model)])
+    }
+
+    /// Whether the run needs admission-pump ticks between arrivals: a
+    /// gate can defer admissions, or multiple tenants contend for
+    /// replicas (model swaps wait for an idle one). A single ungated
+    /// tenant drains fully at each arrival, so no ticks are scheduled —
+    /// that keeps the single-tenant config bit-identical to tenants-off.
+    pub fn needs_ticks(&self) -> bool {
+        self.admit_tokens.is_some() || self.tenants.len() > 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(FhError::Config("tenants config needs at least one tenant".into()));
+        }
+        for t in &self.tenants {
+            if !t.weight.is_finite() || !(t.weight > 0.0) {
+                return Err(FhError::Config(format!(
+                    "tenant '{}' weight must be a positive finite number, got {}",
+                    t.name, t.weight
+                )));
+            }
+            if !(t.slo_scale > 0.0) {
+                return Err(FhError::Config(format!(
+                    "tenant '{}' slo-scale must be > 0, got {}",
+                    t.name, t.slo_scale
+                )));
+            }
+        }
+        if self.quantum == 0 {
+            return Err(FhError::Config("tenant quantum must be ≥ 1 token".into()));
+        }
+        if self.admit_interval.value() <= 0.0 {
+            return Err(FhError::Config("tenant admit interval must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse the `serve --tenants` grammar: tenants separated by `,`,
+    /// fields within a tenant by `/`. The first two fields are
+    /// `name/model`; the rest are `key=value` with keys `weight`,
+    /// `quota`, `slo-scale`, and `mix` (the mix value uses the usual
+    /// `chat:3+batch` grammar). Example:
+    /// `alpha/gpt3/weight=3/mix=chat,beta/qwen3/quota=500000/mix=batch`.
+    pub fn parse(spec: &str) -> Result<TenantsConfig> {
+        let mut tenants = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(FhError::Config("empty tenant entry in --tenants spec".into()));
+            }
+            let mut fields = part.split('/');
+            let name = fields.next().unwrap_or("").trim();
+            let model_name = fields.next().unwrap_or("").trim();
+            if name.is_empty() || model_name.is_empty() {
+                return Err(FhError::Config(format!(
+                    "tenant entry '{part}' must start with name/model"
+                )));
+            }
+            let model = by_name(model_name).ok_or_else(|| {
+                FhError::Config(format!("unknown model '{model_name}' in --tenants spec"))
+            })?;
+            let mut t = TenantConfig::new(name, model);
+            for field in fields {
+                let (key, value) = field.split_once('=').ok_or_else(|| {
+                    FhError::Config(format!("tenant option '{field}' must be key=value"))
+                })?;
+                let value = value.trim();
+                match key.trim() {
+                    "weight" => {
+                        t.weight = value.parse().map_err(|_| {
+                            FhError::Config(format!("bad tenant weight '{value}'"))
+                        })?;
+                    }
+                    "quota" => {
+                        t.quota_tokens = Some(value.parse().map_err(|_| {
+                            FhError::Config(format!("bad tenant quota '{value}'"))
+                        })?);
+                    }
+                    "slo-scale" => {
+                        t.slo_scale = value.parse().map_err(|_| {
+                            FhError::Config(format!("bad tenant slo-scale '{value}'"))
+                        })?;
+                    }
+                    "mix" => {
+                        t.mix = WorkloadMix::parse(value).ok_or_else(|| {
+                            FhError::Config(format!("bad tenant mix '{value}'"))
+                        })?;
+                    }
+                    other => {
+                        return Err(FhError::Config(format!(
+                            "unknown tenant option '{other}' (weight|quota|slo-scale|mix)"
+                        )));
+                    }
+                }
+            }
+            tenants.push(t);
+        }
+        let cfg = TenantsConfig::new(tenants);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// One queued admission candidate. `work` is the router charge (prompt
+/// plus decode-token work), `payload` the core-specific handle: an
+/// owned `Request` on the stepping core, an arena id on the event core.
+#[derive(Debug)]
+pub struct Queued<T> {
+    pub work: u64,
+    pub prompt_len: usize,
+    pub affinity: u64,
+    pub payload: T,
+}
+
+/// Verdict from one admission attempt.
+pub enum Admit<T> {
+    /// Routed and submitted — charge the tenant's deficit.
+    Served,
+    /// Inadmissible (e.g. prompt over the model context); dropped
+    /// without a deficit charge.
+    Rejected,
+    /// No replica can take it right now — hand it back and stop
+    /// draining this tenant until capacity frees.
+    Blocked(Queued<T>),
+}
+
+/// The admission arbiter: per-tenant FIFO queues drained by either
+/// strict global arrival order or deficit round robin. Owns no clock
+/// and no floats — callers pump it at arrivals and admission ticks.
+#[derive(Debug)]
+pub struct TenantArbiter<T> {
+    arbitration: TenantArbitration,
+    queues: Vec<VecDeque<Queued<T>>>,
+    /// FIFO mode only: global arrival order of tenant indices.
+    order: VecDeque<usize>,
+    deficit: Vec<u64>,
+    quantum: Vec<u64>,
+    queued_tokens: u64,
+}
+
+impl<T> TenantArbiter<T> {
+    pub fn new(cfg: &TenantsConfig) -> TenantArbiter<T> {
+        let quantum = cfg
+            .tenants
+            .iter()
+            .map(|t| (((cfg.quantum as f64) * t.weight).round() as u64).max(1))
+            .collect();
+        TenantArbiter {
+            arbitration: cfg.arbitration,
+            queues: cfg.tenants.iter().map(|_| VecDeque::new()).collect(),
+            order: VecDeque::new(),
+            deficit: vec![0; cfg.tenants.len()],
+            quantum,
+            queued_tokens: 0,
+        }
+    }
+
+    pub fn enqueue(&mut self, tenant: usize, item: Queued<T>) {
+        self.queued_tokens += item.work;
+        self.queues[tenant].push_back(item);
+        if self.arbitration == TenantArbitration::Fifo {
+            self.order.push_back(tenant);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Total router-charge tokens waiting across all tenants (feeds the
+    /// autoscaler's outstanding-work signal).
+    pub fn queued_tokens(&self) -> u64 {
+        self.queued_tokens
+    }
+
+    pub fn queued(&self, tenant: usize) -> usize {
+        self.queues[tenant].len()
+    }
+
+    /// Drain admissible work through `try_admit`. FIFO pops strict
+    /// global arrival order and stops at the first blocked head — one
+    /// tenant's backlog stalls everyone behind it. WFQ runs deficit
+    /// round robin: each round every unblocked backlogged tenant
+    /// accrues its weighted quantum and releases heads while credit
+    /// lasts; a head blocked on capacity refunds the round's quantum so
+    /// a stall cannot bank an unbounded burst.
+    pub fn pump<F>(&mut self, mut try_admit: F)
+    where
+        F: FnMut(usize, Queued<T>) -> Admit<T>,
+    {
+        match self.arbitration {
+            TenantArbitration::Fifo => self.pump_fifo(&mut try_admit),
+            TenantArbitration::Wfq => self.pump_wfq(&mut try_admit),
+        }
+    }
+
+    fn pump_fifo<F>(&mut self, try_admit: &mut F)
+    where
+        F: FnMut(usize, Queued<T>) -> Admit<T>,
+    {
+        while let Some(&t) = self.order.front() {
+            let Some(q) = self.queues[t].pop_front() else {
+                self.order.pop_front();
+                continue;
+            };
+            let work = q.work;
+            match try_admit(t, q) {
+                Admit::Served | Admit::Rejected => {
+                    self.order.pop_front();
+                    self.queued_tokens -= work;
+                }
+                Admit::Blocked(q) => {
+                    self.queues[t].push_front(q);
+                    break;
+                }
+            }
+        }
+    }
+
+    fn pump_wfq<F>(&mut self, try_admit: &mut F)
+    where
+        F: FnMut(usize, Queued<T>) -> Admit<T>,
+    {
+        let n = self.queues.len();
+        let mut blocked = vec![false; n];
+        loop {
+            let mut served = false;
+            let mut accruing = false;
+            for t in 0..n {
+                if self.queues[t].is_empty() {
+                    self.deficit[t] = 0;
+                    continue;
+                }
+                if blocked[t] {
+                    continue;
+                }
+                self.deficit[t] = self.deficit[t].saturating_add(self.quantum[t]);
+                loop {
+                    let Some(head) = self.queues[t].front() else { break };
+                    if head.work > self.deficit[t] {
+                        // Not enough credit yet: keep the accrual and
+                        // return next round — the classic DRR build-up
+                        // toward a request larger than one quantum.
+                        accruing = true;
+                        break;
+                    }
+                    let q = self.queues[t].pop_front().unwrap();
+                    let work = q.work;
+                    match try_admit(t, q) {
+                        Admit::Served => {
+                            self.deficit[t] -= work;
+                            self.queued_tokens -= work;
+                            served = true;
+                        }
+                        Admit::Rejected => {
+                            self.queued_tokens -= work;
+                            served = true;
+                        }
+                        Admit::Blocked(q) => {
+                            self.queues[t].push_front(q);
+                            self.deficit[t] =
+                                self.deficit[t].saturating_sub(self.quantum[t]);
+                            blocked[t] = true;
+                            break;
+                        }
+                    }
+                }
+                if self.queues[t].is_empty() {
+                    self.deficit[t] = 0;
+                }
+            }
+            if !served && !accruing {
+                break;
+            }
+        }
+    }
+}
+
+/// Replica choice for one queued admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pick {
+    /// The whole active fleet already serves this tenant and no gate
+    /// binds: defer to the router policy. This is the path single-tenant
+    /// runs take, keeping them bit-identical to tenants-off.
+    Fleet,
+    /// Least-loaded active replica already holding the tenant's model.
+    Assigned(usize),
+    /// Tenant holds no replica: claim this idle one and swap its model
+    /// in (cold start).
+    Swap(usize),
+    /// Nothing can take the request right now; leave it queued.
+    Blocked,
+}
+
+/// Decide where one admission goes. Pure so both simulation cores share
+/// the byte-identical decision: `tassign` maps replica → tenant,
+/// `load`/`pending` are the router charge and in-flight depth per
+/// replica, `active` the autoscaler's active prefix, and `gate` the
+/// admission watermark (`u64::MAX` when ungated).
+pub fn pick_replica(
+    tenant: usize,
+    tassign: &[usize],
+    load: &[u64],
+    pending: &[usize],
+    active: usize,
+    gate: u64,
+) -> Pick {
+    let n = active.min(tassign.len());
+    if gate == u64::MAX && (0..n).all(|i| tassign[i] == tenant) {
+        return Pick::Fleet;
+    }
+    let mut best: Option<usize> = None;
+    let mut has_home = false;
+    for i in 0..n {
+        if tassign[i] != tenant {
+            continue;
+        }
+        has_home = true;
+        if load[i] <= gate && best.map_or(true, |b| load[i] < load[b]) {
+            best = Some(i);
+        }
+    }
+    if let Some(i) = best {
+        return Pick::Assigned(i);
+    }
+    if !has_home {
+        // Only a fully cold tenant swaps; a gated-but-homed tenant
+        // waits rather than thrashing models across the fleet.
+        for i in 0..n {
+            if pending[i] == 0 && load[i] == 0 {
+                return Pick::Swap(i);
+            }
+        }
+    }
+    Pick::Blocked
+}
+
+/// Cluster-side per-tenant accounting, updated identically by both
+/// cores at enqueue/admission time.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// Work tokens accepted past the quota check (charged against
+    /// `quota_tokens`).
+    pub enqueued_tokens: u64,
+    pub admitted_requests: u64,
+    pub admitted_tokens: u64,
+    /// Requests shed at the front door on quota exhaustion.
+    pub shed_quota: u64,
+    /// Model swaps performed on behalf of this tenant.
+    pub swaps: u64,
+    /// Cold-start latency per swap (weight page-in + fabric queueing).
+    pub cold_start: LatencyStat,
+    pub cold_start_total: Seconds,
+}
+
+/// Per-tenant slice of a finished run (`ClusterReport::tenants`).
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub model: String,
+    pub weight: f64,
+    pub admitted_requests: u64,
+    pub admitted_tokens: u64,
+    pub enqueued_tokens: u64,
+    pub shed_quota: u64,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub slo_total: u64,
+    pub slo_met: u64,
+    /// Tokens from completions that met their SLO.
+    pub goodput_tokens: u64,
+    pub ttft: LatencyStat,
+    pub swaps: u64,
+    pub cold_start: LatencyStat,
+    pub cold_start_total: Seconds,
+    /// Model weights parked in the shared pool because the tenant holds
+    /// no replica at end of run (cold model footprint).
+    pub pool_bytes_held: Bytes,
+}
+
+impl TenantReport {
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_total == 0 {
+            return 1.0;
+        }
+        self.slo_met as f64 / self.slo_total as f64
+    }
+
+    /// One human-readable line for `ClusterReport::summary`.
+    pub fn summary_line(&self) -> String {
+        let slo = if self.slo_total > 0 {
+            format!(
+                " | slo {:.1}% | goodput {} tok",
+                100.0 * self.slo_attainment(),
+                self.goodput_tokens
+            )
+        } else {
+            String::new()
+        };
+        let swaps = if self.swaps > 0 {
+            format!(
+                " | swaps {} (cold-start mean {:.1} ms)",
+                self.swaps,
+                self.cold_start.mean_ms()
+            )
+        } else {
+            String::new()
+        };
+        let quota = if self.shed_quota > 0 {
+            format!(" | quota-shed {}", self.shed_quota)
+        } else {
+            String::new()
+        };
+        let parked = if self.pool_bytes_held.value() > 0.0 {
+            format!(" | {:.1} GB parked in pool", self.pool_bytes_held.as_gb())
+        } else {
+            String::new()
+        };
+        format!(
+            "tenant {} ({}, w {:.1}): admitted {} ({} tok) | completed {} | \
+             ttft p99 {:.1} ms{slo}{swaps}{quota}{parked}",
+            self.name,
+            self.model,
+            self.weight,
+            self.admitted_requests,
+            self.admitted_tokens,
+            self.completed,
+            self.ttft.percentile_ms(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::arch::{gpt2, gpt2_xl};
+
+    fn two_tenant_cfg(w_a: f64, w_b: f64, quantum: u64) -> TenantsConfig {
+        let mut cfg = TenantsConfig::new(vec![
+            TenantConfig::new("a", gpt2()),
+            TenantConfig::new("b", gpt2()),
+        ]);
+        cfg.tenants[0].weight = w_a;
+        cfg.tenants[1].weight = w_b;
+        cfg.quantum = quantum;
+        cfg
+    }
+
+    fn item(work: u64) -> Queued<u64> {
+        Queued { work, prompt_len: work as usize, affinity: 0, payload: 0 }
+    }
+
+    #[test]
+    fn spec_parses_names_models_and_options() {
+        let cfg = TenantsConfig::parse(
+            "alpha/gpt2/weight=3/mix=chat:2+batch,beta/gpt2-xl/quota=1000/slo-scale=2.5",
+        )
+        .unwrap();
+        assert_eq!(cfg.tenants.len(), 2);
+        assert_eq!(cfg.tenants[0].name, "alpha");
+        assert_eq!(cfg.tenants[0].weight, 3.0);
+        assert_eq!(cfg.tenants[0].mix.name(), "chat+batch");
+        assert_eq!(cfg.tenants[1].model.name, gpt2_xl().name);
+        assert_eq!(cfg.tenants[1].quota_tokens, Some(1000));
+        assert_eq!(cfg.tenants[1].slo_scale, 2.5);
+        assert_eq!(cfg.arbitration, TenantArbitration::Wfq);
+    }
+
+    #[test]
+    fn spec_rejects_bad_entries() {
+        assert!(TenantsConfig::parse("").is_err());
+        assert!(TenantsConfig::parse("alpha").is_err());
+        assert!(TenantsConfig::parse("alpha/not-a-model").is_err());
+        assert!(TenantsConfig::parse("alpha/gpt2/weight=-1").is_err());
+        assert!(TenantsConfig::parse("alpha/gpt2/bogus=1").is_err());
+        assert!(TenantsConfig::parse("alpha/gpt2/mix=nope").is_err());
+    }
+
+    #[test]
+    fn arbitration_names_roundtrip() {
+        for mode in [TenantArbitration::Wfq, TenantArbitration::Fifo] {
+            assert_eq!(TenantArbitration::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(TenantArbitration::parse("drr"), Some(TenantArbitration::Wfq));
+        assert_eq!(TenantArbitration::parse("what"), None);
+    }
+
+    #[test]
+    fn wfq_shares_track_weights_within_one_request() {
+        // Both tenants backlogged with equal demand; admission capacity
+        // of 1000 tokens per pump. DRR must split it 3:1 by weight to
+        // within one quantum + one max request.
+        let cfg = two_tenant_cfg(3.0, 1.0, 100);
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        for _ in 0..100 {
+            arb.enqueue(0, item(50));
+            arb.enqueue(1, item(50));
+        }
+        let mut capacity = 1000u64;
+        let mut admitted = [0u64; 2];
+        arb.pump(|t, q| {
+            if q.work > capacity {
+                return Admit::Blocked(q);
+            }
+            capacity -= q.work;
+            admitted[t] += q.work;
+            Admit::Served
+        });
+        assert_eq!(admitted[0] + admitted[1], 1000);
+        let ideal_a = 750i64;
+        assert!(
+            (admitted[0] as i64 - ideal_a).abs() <= 350,
+            "weighted share off: {admitted:?}"
+        );
+        assert!(admitted[1] > 0, "light tenant starved: {admitted:?}");
+    }
+
+    #[test]
+    fn wfq_banks_credit_for_a_request_larger_than_one_quantum() {
+        let cfg = two_tenant_cfg(1.0, 1.0, 10);
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        arb.enqueue(0, item(95));
+        let mut admitted = 0u64;
+        arb.pump(|_, q| {
+            admitted += q.work;
+            Admit::Served
+        });
+        assert_eq!(admitted, 95, "large request must accrue credit, not starve");
+        assert!(arb.is_empty());
+    }
+
+    #[test]
+    fn wfq_blocked_tenant_does_not_stall_the_other() {
+        let cfg = two_tenant_cfg(1.0, 1.0, 100);
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        for _ in 0..5 {
+            arb.enqueue(0, item(10));
+            arb.enqueue(1, item(10));
+        }
+        let mut admitted = [0u64; 2];
+        arb.pump(|t, q| {
+            if t == 0 {
+                return Admit::Blocked(q);
+            }
+            admitted[t] += q.work;
+            Admit::Served
+        });
+        assert_eq!(admitted, [0, 50], "tenant 1 must drain around blocked tenant 0");
+        assert_eq!(arb.queued(0), 5);
+        assert_eq!(arb.queued_tokens(), 50);
+    }
+
+    #[test]
+    fn fifo_blocked_head_stalls_everyone_behind_it() {
+        let mut cfg = two_tenant_cfg(1.0, 1.0, 100);
+        cfg.arbitration = TenantArbitration::Fifo;
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        arb.enqueue(0, item(10)); // blocked head
+        arb.enqueue(1, item(10)); // admissible, but behind it
+        let mut admitted = [0u64; 2];
+        arb.pump(|t, q| {
+            if t == 0 {
+                return Admit::Blocked(q);
+            }
+            admitted[t] += q.work;
+            Admit::Served
+        });
+        assert_eq!(admitted, [0, 0], "FIFO must not overtake a blocked head");
+        assert_eq!(arb.queued_tokens(), 20);
+    }
+
+    #[test]
+    fn fifo_preserves_global_arrival_order() {
+        let mut cfg = two_tenant_cfg(1.0, 1.0, 100);
+        cfg.arbitration = TenantArbitration::Fifo;
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        for (t, w) in [(1usize, 1u64), (0, 2), (1, 3), (0, 4)] {
+            arb.enqueue(t, item(w));
+        }
+        let mut seen = Vec::new();
+        arb.pump(|t, q| {
+            seen.push((t, q.work));
+            Admit::Served
+        });
+        assert_eq!(seen, vec![(1, 1), (0, 2), (1, 3), (0, 4)]);
+        assert!(arb.is_empty());
+    }
+
+    #[test]
+    fn rejected_items_are_dropped_without_deficit_charge() {
+        let cfg = two_tenant_cfg(1.0, 1.0, 100);
+        let mut arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        arb.enqueue(0, item(60));
+        arb.enqueue(0, item(60));
+        let mut calls = 0;
+        arb.pump(|_, _| {
+            calls += 1;
+            Admit::Rejected
+        });
+        // Both drained despite 120 > one quantum: rejects charge nothing.
+        assert_eq!(calls, 2);
+        assert!(arb.is_empty());
+        assert_eq!(arb.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn pick_prefers_fleet_when_ungated_and_uncontended() {
+        let tassign = [0usize, 0, 0];
+        let p = pick_replica(0, &tassign, &[5, 0, 9], &[1, 0, 2], 3, u64::MAX);
+        assert_eq!(p, Pick::Fleet);
+        // A gate forces explicit least-loaded placement even then.
+        let p = pick_replica(0, &tassign, &[5, 0, 9], &[1, 0, 2], 3, 100);
+        assert_eq!(p, Pick::Assigned(1));
+    }
+
+    #[test]
+    fn pick_takes_least_loaded_home_replica_within_gate() {
+        let tassign = [0usize, 1, 0, 1];
+        let p = pick_replica(1, &tassign, &[0, 80, 0, 40], &[0; 4], 4, 100);
+        assert_eq!(p, Pick::Assigned(3));
+        // Both homes over the gate: queue rather than swap elsewhere.
+        let p = pick_replica(1, &tassign, &[0, 180, 0, 140], &[0; 4], 4, 100);
+        assert_eq!(p, Pick::Blocked);
+    }
+
+    #[test]
+    fn pick_swaps_lowest_idle_replica_for_a_cold_tenant() {
+        let tassign = [0usize, 0];
+        // Tenant 2 holds nothing; replica 0 busy, replica 1 idle.
+        let p = pick_replica(2, &tassign, &[50, 0], &[2, 0], 2, u64::MAX);
+        assert_eq!(p, Pick::Swap(1));
+        // No idle replica → blocked.
+        let p = pick_replica(2, &tassign, &[50, 10], &[2, 1], 2, u64::MAX);
+        assert_eq!(p, Pick::Blocked);
+    }
+
+    #[test]
+    fn pick_ignores_replicas_outside_the_active_prefix() {
+        let tassign = [0usize, 1];
+        // Replica 1 is tenant 1's home but scaled out of the active set.
+        let p = pick_replica(1, &tassign, &[0, 0], &[0, 0], 1, u64::MAX);
+        assert_eq!(p, Pick::Swap(0));
+    }
+
+    #[test]
+    fn weighted_quanta_scale_and_floor_at_one_token() {
+        let mut cfg = two_tenant_cfg(3.0, 1.0, 100);
+        cfg.tenants.push(TenantConfig::new("c", gpt2()));
+        cfg.tenants[2].weight = 1e-9;
+        let arb: TenantArbiter<u64> = TenantArbiter::new(&cfg);
+        assert_eq!(arb.quantum, vec![300, 100, 1]);
+    }
+
+    #[test]
+    fn single_helper_builds_one_default_tenant() {
+        let cfg = TenantsConfig::single(gpt2());
+        assert_eq!(cfg.tenants.len(), 1);
+        assert!(!cfg.needs_ticks(), "ungated single tenant must not tick");
+        let mut gated = cfg.clone();
+        gated.admit_tokens = Some(4096);
+        assert!(gated.needs_ticks());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(TenantsConfig::new(vec![]).validate().is_err());
+        let mut cfg = TenantsConfig::single(gpt2());
+        cfg.quantum = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::single(gpt2());
+        cfg.admit_interval = Seconds::ZERO;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TenantsConfig::single(gpt2());
+        cfg.tenants[0].weight = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn tenant_report_summary_gates_optional_segments() {
+        let mut r = TenantReport {
+            name: "a".into(),
+            model: "gpt2".into(),
+            weight: 1.0,
+            admitted_requests: 4,
+            admitted_tokens: 400,
+            enqueued_tokens: 400,
+            shed_quota: 0,
+            completed: 4,
+            tokens_generated: 100,
+            slo_total: 0,
+            slo_met: 0,
+            goodput_tokens: 0,
+            ttft: LatencyStat::default(),
+            swaps: 0,
+            cold_start: LatencyStat::default(),
+            cold_start_total: Seconds::ZERO,
+            pool_bytes_held: Bytes::ZERO,
+        };
+        let line = r.summary_line();
+        assert!(!line.contains("slo") && !line.contains("swaps"), "{line}");
+        r.slo_total = 4;
+        r.slo_met = 3;
+        r.swaps = 2;
+        r.cold_start.record(Seconds::ms(10.0));
+        r.shed_quota = 1;
+        r.pool_bytes_held = Bytes::gb(2.0);
+        let line = r.summary_line();
+        assert!(line.contains("slo 75.0%"), "{line}");
+        assert!(line.contains("swaps 2"), "{line}");
+        assert!(line.contains("quota-shed 1"), "{line}");
+        assert!(line.contains("parked in pool"), "{line}");
+    }
+}

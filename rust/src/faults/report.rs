@@ -11,7 +11,10 @@
 use super::schedule::FaultSchedule;
 use crate::units::{Bytes, Seconds};
 
-/// One completed request, as the recovery report sees it.
+/// One completed request, as the recovery report sees it. The
+/// multi-tenant layer reuses the same trace (armed whenever tenants are
+/// configured) to slice completions per tenant, so the event also
+/// carries the owning tenant and the observed TTFT.
 #[derive(Debug, Clone, Copy)]
 pub struct CompletionEvent {
     /// Virtual completion time.
@@ -20,6 +23,10 @@ pub struct CompletionEvent {
     pub tokens: u64,
     /// SLO verdict (`None` when the request carried no target).
     pub slo: Option<bool>,
+    /// Owning tenant (0 on single-tenant fleets).
+    pub tenant: usize,
+    /// Time to first token, for per-tenant tail-latency reporting.
+    pub ttft: Seconds,
 }
 
 /// Windowed-attainment recovery metrics ([`recovery_stats`]).
@@ -240,7 +247,7 @@ mod tests {
     use super::*;
 
     fn ev(at: f64, tokens: u64, slo: Option<bool>) -> CompletionEvent {
-        CompletionEvent { at: Seconds::new(at), tokens, slo }
+        CompletionEvent { at: Seconds::new(at), tokens, slo, tenant: 0, ttft: Seconds::ZERO }
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //!                    [--fabric-contention [off|shared|per-module]]
 //!                    [--flash-gb G] [--flash-bw TBPS]
 //!                    [--faults SPEC]
+//!                    [--tenants SPEC] [--tenant-mode wfq|fifo]
+//!                    [--admit-tokens N]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //!                    [--flash-gb G] [--flash-bw TBPS] [--pool-gb G]
@@ -32,8 +34,8 @@
 use fenghuang::cli::{
     check_contention_fabric, check_disaggregate_replicas, cli_err, flag, parse_disaggregate,
     parse_fabric_contention, parse_faults, parse_flags, parse_flash, parse_prefix_cache,
-    positive, switch, system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE, SERVE_FLAGS,
-    SIMULATE_FLAGS, TRAFFIC_FLAGS,
+    parse_tenants, positive, switch, system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE,
+    SERVE_FLAGS, SIMULATE_FLAGS, TRAFFIC_FLAGS,
 };
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::PrefixCacheConfig;
@@ -65,6 +67,9 @@ USAGE:
                      [--autoscale [on|off]] [--autoscale-min 1] [--shed-tokens T]
                      [--faults 'crash@T:rN[:repairX],module@T:hot|mI,degrade@T:xF:dD,
                                random:seed=S:horizon=H[:crash=R][:module=R][:degrade=R]']
+                     multi-tenant serving over one shared pool:
+                     [--tenants 'name/model[/weight=W][/quota=Q][/slo-scale=S][/mix=M],…']
+                     [--tenant-mode wfq|fifo] [--admit-tokens N]
   fenghuang page     [--model gpt3] [--system fh4-1.5xm|fh4-2.0xm] [--remote-tbps 4.8]
                      [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
@@ -118,8 +123,23 @@ fn run_serve(args: &[String]) -> Result<()> {
     };
     let m =
         arch::by_name(&model).ok_or_else(|| cli_err(format!("unknown model '{model}'")))?;
-    if TRAFFIC_FLAGS.iter().any(|k| f.contains_key(*k)) {
-        // Open-loop traffic engine (DESIGN.md §Traffic).
+    let tenants = parse_tenants(&f)?;
+    if tenants.is_some() {
+        // Each tenant names its own model and mix; a fleet-wide --model
+        // or --mix would be silently ignored — reject instead.
+        for k in ["model", "mix"] {
+            if f.contains_key(k) {
+                return Err(cli_err(format!(
+                    "--{k} conflicts with --tenants (each tenant carries its own \
+                     model and mix in the spec)"
+                )));
+            }
+        }
+    }
+    if tenants.is_some() || TRAFFIC_FLAGS.iter().any(|k| f.contains_key(*k)) {
+        // Open-loop traffic engine (DESIGN.md §Traffic); multi-tenant
+        // serving always rides it — per-tenant mixes need per-tenant
+        // streams (DESIGN.md §Multi-Tenant).
         return run_serve_traffic(
             &f,
             &m,
@@ -133,6 +153,7 @@ fn run_serve(args: &[String]) -> Result<()> {
             contention,
             flash,
             faults,
+            tenants,
         );
     }
     if replicas <= 1
@@ -185,6 +206,7 @@ fn run_serve_traffic(
     contention: ContentionConfig,
     flash: Option<fenghuang::config::FlashConfig>,
     faults: Option<fenghuang::faults::FaultSchedule>,
+    tenants: Option<fenghuang::coordinator::TenantsConfig>,
 ) -> Result<()> {
     use fenghuang::coordinator::{AutoscaleConfig, ClusterConfig, SloTarget};
 
@@ -269,9 +291,14 @@ fn run_serve_traffic(
         contention,
         flash,
         faults,
+        tenants,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
-    println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);
+    if cfg.tenants.is_some() {
+        println!("{}", fenghuang::coordinator::demo_serve_tenants(total, cfg, &tc)?);
+    } else {
+        println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);
+    }
     Ok(())
 }
 

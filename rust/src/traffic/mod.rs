@@ -13,7 +13,10 @@
 //!   diurnal ramp, and replay-from-slice;
 //! * [`mix`] — workload classes (chat, long-prompt RAG, agentic
 //!   multi-turn with session-prefix reuse, offline batch) with per-class
-//!   prompt/output length distributions and SLO posture.
+//!   prompt/output length distributions and SLO posture;
+//! * [`tenants`] — per-tenant stream composition for multi-tenant
+//!   serving: one seed lane, mix, and SLO tier per tenant, merged into
+//!   a single arrival-ordered workload (DESIGN.md §Multi-Tenant).
 //!
 //! [`generate`] composes the three: requests arrive per the pattern, are
 //! classed per the mix weights, and carry per-request [`SloTarget`]s the
@@ -25,10 +28,12 @@
 pub mod arrival;
 pub mod mix;
 pub mod rng;
+pub mod tenants;
 
 pub use arrival::{arrival_times, ArrivalConfig, ArrivalPattern};
 pub use mix::{ClassKind, ClassSpec, WorkloadMix};
 pub use rng::XorShift;
+pub use tenants::generate_tenant_workload;
 
 use crate::coordinator::request::{Request, SloTarget, AFFINITY_PREFIX};
 use crate::error::{FhError, Result};

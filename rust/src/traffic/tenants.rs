@@ -1,0 +1,133 @@
+//! Per-tenant traffic composition (DESIGN.md §Multi-Tenant).
+//!
+//! Each tenant of a [`TenantsConfig`] drives its own slice of the
+//! open-loop stream: its own [`WorkloadMix`], its own seed lane, its
+//! own SLO tier (the fleet base SLO scaled by `slo_scale`), and a
+//! prompt cap clamped to *its* model's context window. The per-tenant
+//! streams are merged into one arrival-ordered workload with the
+//! owning tenant stamped on every request — the cluster's admission
+//! arbiter keys on that field.
+
+use crate::coordinator::request::{Request, SloTarget};
+use crate::coordinator::tenancy::TenantsConfig;
+use crate::error::Result;
+use crate::traffic::{generate, TrafficConfig};
+
+/// Tag a request id with its tenant lane so merged ids stay unique
+/// (per-tenant generators all count from zero).
+const TENANT_ID_SHIFT: u32 = 40;
+
+/// The [`TrafficConfig`] one tenant's slice of the stream is drawn
+/// from: `base` shapes arrivals/volume, the tenant shapes everything
+/// workload-specific. Exposed for tests and benches that want a solo
+/// baseline of a single tenant's traffic.
+pub fn tenant_traffic(tenants: &TenantsConfig, base: &TrafficConfig, ti: usize) -> TrafficConfig {
+    let t = &tenants.tenants[ti];
+    let n = tenants.tenants.len();
+    let share = base.requests / n + usize::from(ti < base.requests % n);
+    TrafficConfig {
+        mix: t.mix.clone(),
+        requests: share,
+        // Distinct seed lane per tenant: tenant B's draws never shift
+        // tenant A's stream when B's share changes.
+        seed: base.seed ^ (ti as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+        max_prompt: base.max_prompt.min(t.model.max_seq as usize),
+        slo: base.slo.map(|s| SloTarget { ttft: s.ttft * t.slo_scale, tpot: s.tpot * t.slo_scale }),
+        ..base.clone()
+    }
+}
+
+/// Draw every tenant's stream and merge by arrival time (stable — ties
+/// keep tenant-index order, so the merge is deterministic and the two
+/// simulation cores see the identical sequence).
+pub fn generate_tenant_workload(
+    tenants: &TenantsConfig,
+    base: &TrafficConfig,
+) -> Result<Vec<Request>> {
+    tenants.validate()?;
+    let mut out = Vec::with_capacity(base.requests);
+    for ti in 0..tenants.tenants.len() {
+        let cfg = tenant_traffic(tenants, base, ti);
+        for mut r in generate(&cfg)? {
+            r.tenant = ti;
+            r.id |= (ti as u64) << TENANT_ID_SHIFT;
+            out.push(r);
+        }
+    }
+    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tenancy::{TenantConfig, TenantsConfig};
+    use crate::models::arch::{gpt2, gpt2_xl};
+    use crate::traffic::WorkloadMix;
+
+    fn two_tenants() -> TenantsConfig {
+        let mut a = TenantConfig::new("alpha", gpt2());
+        a.mix = WorkloadMix::parse("chat").unwrap();
+        let mut b = TenantConfig::new("beta", gpt2_xl());
+        b.mix = WorkloadMix::parse("batch").unwrap();
+        b.slo_scale = 4.0;
+        TenantsConfig::new(vec![a, b])
+    }
+
+    #[test]
+    fn workload_is_merged_sorted_and_stamped() {
+        let tc = TrafficConfig { requests: 41, seed: 9, ..Default::default() };
+        let reqs = generate_tenant_workload(&two_tenants(), &tc).unwrap();
+        assert_eq!(reqs.len(), 41);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        let a = reqs.iter().filter(|r| r.tenant == 0).count();
+        let b = reqs.iter().filter(|r| r.tenant == 1).count();
+        assert_eq!((a, b), (21, 20), "remainder goes to the earlier tenant");
+        // Ids unique across the merge.
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 41);
+    }
+
+    #[test]
+    fn tenant_lanes_are_independent_and_deterministic() {
+        let tenants = two_tenants();
+        let tc = TrafficConfig { requests: 40, seed: 9, ..Default::default() };
+        let x = generate_tenant_workload(&tenants, &tc).unwrap();
+        let y = generate_tenant_workload(&tenants, &tc).unwrap();
+        for (a, b) in x.iter().zip(&y) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.arrival, b.arrival);
+        }
+        // Tenant A's stream is untouched by B's mix changing.
+        let mut other = two_tenants();
+        other.tenants[1].mix = WorkloadMix::parse("rag").unwrap();
+        let z = generate_tenant_workload(&other, &tc).unwrap();
+        let lane = |reqs: &[Request]| -> Vec<(u64, usize)> {
+            reqs.iter().filter(|r| r.tenant == 0).map(|r| (r.id, r.prompt.len())).collect()
+        };
+        assert_eq!(lane(&x), lane(&z));
+    }
+
+    #[test]
+    fn slo_scale_and_context_clamp_apply() {
+        let tenants = two_tenants();
+        let tc = TrafficConfig { requests: 30, seed: 3, ..Default::default() };
+        let a_cfg = tenant_traffic(&tenants, &tc, 0);
+        assert!(a_cfg.max_prompt <= gpt2().max_seq as usize);
+        let reqs = generate_tenant_workload(&tenants, &tc).unwrap();
+        for r in reqs.iter().filter(|r| r.tenant == 0) {
+            assert!(r.prompt.len() <= gpt2().max_seq as usize);
+        }
+        // Tenant with slo_scale would see scaled targets; batch carries
+        // none, so pin the scale through the per-tenant config instead.
+        let b_cfg = tenant_traffic(&tenants, &tc, 1);
+        let base = tc.slo.unwrap();
+        let scaled = b_cfg.slo.unwrap();
+        assert!((scaled.ttft.value() - 4.0 * base.ttft.value()).abs() < 1e-12);
+    }
+}

@@ -12,10 +12,13 @@ use fenghuang::coordinator::{
     Request,
 };
 use fenghuang::coordinator::metrics::LatencyStat;
+use fenghuang::coordinator::tenancy::{TenantArbitration, TenantsConfig};
 use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
 use fenghuang::faults::FaultSchedule;
 use fenghuang::models::arch::gpt3_175b;
-use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::traffic::{
+    self, generate_tenant_workload, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix,
+};
 use fenghuang::units::{Bytes, Seconds};
 
 /// Collect every f64 observable of a report as (label, bits).
@@ -50,10 +53,12 @@ fn observe(r: &ClusterReport) -> Vec<(String, u64)> {
         ("busy", f.busy.value()),
         ("paging_stall", f.paging_stall.value()),
         ("fabric_wait", f.fabric_wait.value()),
+        ("swap_stall", f.swap_stall.value()),
         ("imbalance", r.imbalance),
         ("handoffs", r.handoffs as f64),
         ("handoff_time", r.handoff_time.value()),
         ("kv_spilled_peak", r.kv_spilled_peak.value()),
+        ("flash_spilled_peak", r.flash_spilled_peak.value()),
         ("replica_seconds", r.replica_seconds),
         ("gpu_seconds", r.gpu_seconds),
         ("elastic", r.elastic as u8 as f64),
@@ -153,6 +158,33 @@ fn observe(r: &ClusterReport) -> Vec<(String, u64)> {
         }
     } else {
         out.push(("faults.none".to_string(), 0));
+    }
+    if let Some(ts) = &r.tenants {
+        for (i, t) in ts.iter().enumerate() {
+            out.push((format!("tenant[{i}].name:{}", t.name), 0));
+            out.push((format!("tenant[{i}].model:{}", t.model), 0));
+            for (k, v) in [
+                ("weight", t.weight),
+                ("admitted_requests", t.admitted_requests as f64),
+                ("admitted_tokens", t.admitted_tokens as f64),
+                ("enqueued_tokens", t.enqueued_tokens as f64),
+                ("shed_quota", t.shed_quota as f64),
+                ("completed", t.completed as f64),
+                ("tokens_generated", t.tokens_generated as f64),
+                ("slo_total", t.slo_total as f64),
+                ("slo_met", t.slo_met as f64),
+                ("goodput_tokens", t.goodput_tokens as f64),
+                ("swaps", t.swaps as f64),
+                ("cold_start_total", t.cold_start_total.value()),
+                ("pool_bytes_held", t.pool_bytes_held.value()),
+            ] {
+                bits(&format!("tenant[{i}].{k}"), v, &mut out);
+            }
+            stat_bits(&format!("tenant[{i}].ttft"), &t.ttft, &mut out);
+            stat_bits(&format!("tenant[{i}].cold_start"), &t.cold_start, &mut out);
+        }
+    } else {
+        out.push(("tenants.none".to_string(), 0));
     }
     out
 }
@@ -498,6 +530,96 @@ fn equiv_empty_fault_schedule() {
         },
         2,
         session_workload(16, 4, 256, 8, Seconds::ms(5.0)),
+    );
+}
+
+fn tenant_spec(spec: &str) -> TenantsConfig {
+    TenantsConfig::parse(spec).expect("tenant spec")
+}
+
+#[test]
+fn equiv_tenants_wfq_bursty() {
+    // Two tenants on two models through the weighted-fair admission
+    // arbiter under a binding gate: the DRR deficit walk, admit-tick
+    // pump and per-tenant trace counters must replay bit-identically in
+    // both cores.
+    let mut tenants = tenant_spec("alpha/gpt2/weight=3/mix=chat,beta/gpt2-xl/mix=batch");
+    tenants.admit_tokens = Some(2048);
+    let base = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 20.0,
+            ..Default::default()
+        },
+        requests: 32,
+        seed: 29,
+        max_prompt: 1024,
+        ..Default::default()
+    };
+    let reqs = generate_tenant_workload(&tenants, &base).expect("tenant workload");
+    assert_equivalent(
+        "tenants-wfq-bursty",
+        ClusterConfig { tenants: Some(tenants), ..Default::default() },
+        2,
+        reqs,
+    );
+}
+
+#[test]
+fn equiv_tenants_cold_swap_storm() {
+    // Three tenants over two replicas: the homeless tenant keeps forcing
+    // cold-start model swaps, whose fabric transfer charge and swap
+    // stalls must land on the same requests in the same order.
+    let mut tenants = tenant_spec("alpha/gpt2,beta/gpt2-xl,gamma/gpt2/quota=8000");
+    tenants.arbitration = TenantArbitration::Fifo;
+    tenants.admit_tokens = Some(1024);
+    let base = TrafficConfig {
+        arrivals: ArrivalConfig { qps: 15.0, ..Default::default() },
+        requests: 30,
+        seed: 31,
+        max_prompt: 1024,
+        slo: None,
+        ..Default::default()
+    };
+    let reqs = generate_tenant_workload(&tenants, &base).expect("tenant workload");
+    assert_equivalent(
+        "tenants-cold-swap",
+        ClusterConfig { tenants: Some(tenants), ..Default::default() },
+        2,
+        reqs,
+    );
+}
+
+#[test]
+fn equiv_tenants_burst_autoscale() {
+    // A tenant burst interleaved with autoscaler ticks: the merged
+    // admit-tick/scale-tick loop in the stepping core must replay the
+    // event calendar's class order, and the autoscaler must see the
+    // same queued-but-unadmitted token backlog at every tick.
+    let mut tenants = tenant_spec("alpha/gpt2/weight=2/mix=chat,beta/gpt2/mix=batch");
+    tenants.admit_tokens = Some(2048);
+    let base = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 25.0,
+            ..Default::default()
+        },
+        requests: 36,
+        seed: 37,
+        max_prompt: 1024,
+        slo: None,
+        ..Default::default()
+    };
+    let reqs = generate_tenant_workload(&tenants, &base).expect("tenant workload");
+    assert_equivalent(
+        "tenants-burst-autoscale",
+        ClusterConfig {
+            tenants: Some(tenants),
+            autoscale: Some(AutoscaleConfig { target_tokens: 2048, ..Default::default() }),
+            ..Default::default()
+        },
+        3,
+        reqs,
     );
 }
 

@@ -11,11 +11,13 @@
 //! an *intentional* cost-model change.
 
 use fenghuang::coordinator::{
-    AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig,
+    AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig, TenantsConfig,
 };
 use fenghuang::fabric::contention::{ContentionConfig, ContentionMode};
 use fenghuang::models::arch::gpt3_175b;
-use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+use fenghuang::traffic::{
+    self, generate_tenant_workload, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix,
+};
 use fenghuang::units::Bytes;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -71,6 +73,23 @@ fn observe(prefix: &str, r: &ClusterReport, out: &mut BTreeMap<String, f64>) {
             m("prefix_pool_peak_gb", pc.pool_bytes_peak.as_gb()),
         ] {
             out.insert(k, v);
+        }
+    }
+    if let Some(ts) = &r.tenants {
+        for t in ts {
+            let p = |k: &str, v: f64| (format!("{prefix}.tenant.{}.{k}", t.name), v);
+            for (k, v) in [
+                p("completed", t.completed as f64),
+                p("slo_attainment", t.slo_attainment()),
+                p("goodput_tokens", t.goodput_tokens as f64),
+                p("p95_ttft_ms", t.ttft.percentile_ms(95.0)),
+                p("swaps", t.swaps as f64),
+                p("cold_start_total_ms", t.cold_start_total.as_ms()),
+                p("pool_bytes_held_gb", t.pool_bytes_held.as_gb()),
+                p("shed_quota", t.shed_quota as f64),
+            ] {
+                out.insert(k, v);
+            }
         }
     }
     if let Some(fr) = &r.fabric {
@@ -183,6 +202,41 @@ fn current_metrics() -> BTreeMap<String, f64> {
         "the contended run must book fabric transfers"
     );
     observe("contention", &contention, &mut out);
+    // Multi-tenant serving over one shared pool (DESIGN.md
+    // §Multi-Tenant): three tenants on two replicas under WFQ with a
+    // binding gate, so the pin covers per-tenant SLO attainment and
+    // goodput, the DRR admission walk, and the cold-start swap path —
+    // the homeless third tenant must page its model in through the pool.
+    let mut tenant_cfg = TenantsConfig::parse(
+        "alpha/gpt2/weight=3/mix=chat,beta/gpt2-xl/mix=batch,gamma/gpt2/mix=rag",
+    )
+    .expect("tenant spec");
+    tenant_cfg.admit_tokens = Some(2048);
+    let tenant_tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 16.0,
+            ..Default::default()
+        },
+        requests: 27,
+        seed: 23,
+        max_prompt: 1024,
+        ..Default::default()
+    };
+    let reqs = generate_tenant_workload(&tenant_cfg, &tenant_tc).expect("workload");
+    let mut fleet = Cluster::fh4(
+        2,
+        &gpt3_175b(),
+        ClusterConfig { tenants: Some(tenant_cfg), ..Default::default() },
+    )
+    .expect("cluster");
+    let tenant_run = fleet.run(reqs).expect("run");
+    let ts = tenant_run.tenants.as_ref().expect("tenant reports");
+    assert!(
+        ts.iter().any(|t| t.swaps > 0),
+        "the homeless tenant must cold-start at least once"
+    );
+    observe("tenants", &tenant_run, &mut out);
     out
 }
 

@@ -1,0 +1,244 @@
+//! Property wall for multi-tenant serving (DESIGN.md §Multi-Tenant):
+//! the invariants the admission arbiter and per-tenant accounting must
+//! hold on *every* run, checked on both simulation cores.
+//!
+//! * work conservation — every generated request is admitted, quota-shed
+//!   or rejected, per tenant and in the fleet totals;
+//! * quotas are never exceeded — a tenant's enqueued work tokens stay at
+//!   or under its front-door quota;
+//! * weighted share — under DRR a backlogged tenant's admitted tokens
+//!   track its weight share to within one round's quantum;
+//! * single-tenant passthrough — `TenantsConfig::single` is bit-identical
+//!   to a tenants-off fleet on both cores.
+
+use fenghuang::coordinator::tenancy::{
+    Admit, Queued, TenantArbiter, TenantArbitration, TenantsConfig,
+};
+use fenghuang::coordinator::{Cluster, ClusterConfig, ClusterReport, Request};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::traffic::{
+    self, generate_tenant_workload, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix,
+};
+
+/// Run the same scenario through the stepping oracle and the event core.
+fn run_both(cfg: ClusterConfig, replicas: usize, reqs: Vec<Request>) -> (ClusterReport, ClusterReport) {
+    let model = gpt3_175b();
+    let mut s = Cluster::fh4(replicas, &model, cfg.clone()).expect("stepping cluster");
+    let stepping = s.run_stepping(reqs.clone()).expect("stepping run");
+    let mut e = Cluster::fh4(replicas, &model, cfg).expect("event cluster");
+    let event = e.run(reqs).expect("event run");
+    (stepping, event)
+}
+
+fn two_tenant_workload(tenants: &TenantsConfig, requests: usize, seed: u64) -> Vec<Request> {
+    let base = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 18.0,
+            ..Default::default()
+        },
+        requests,
+        seed,
+        max_prompt: 1024,
+        slo: None,
+        ..Default::default()
+    };
+    generate_tenant_workload(tenants, &base).expect("tenant workload")
+}
+
+#[test]
+fn single_tenant_is_bit_identical_to_tenants_off() {
+    // `TenantsConfig::single` must be a pure passthrough: same model,
+    // no gate, one tenant — every float the fleet reports is bitwise
+    // the number the pre-tenancy simulator produced, on both cores.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("chat+rag").unwrap(),
+        requests: 24,
+        seed: 41,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    let reqs = traffic::generate(&tc).expect("workload");
+    let (off_s, off_e) = run_both(ClusterConfig::default(), 3, reqs.clone());
+    let on_cfg = ClusterConfig {
+        tenants: Some(TenantsConfig::single(gpt3_175b())),
+        ..Default::default()
+    };
+    let (on_s, on_e) = run_both(on_cfg, 3, reqs);
+    for (core, off, on) in [("stepping", &off_s, &on_s), ("event", &off_e, &on_e)] {
+        assert_eq!(off.fleet.completed, on.fleet.completed, "{core}: completed");
+        assert_eq!(off.fleet.tokens_generated, on.fleet.tokens_generated, "{core}: tokens");
+        assert_eq!(off.fleet.shed, on.fleet.shed, "{core}: shed");
+        for (k, a, b) in [
+            ("clock", off.fleet.clock.value(), on.fleet.clock.value()),
+            ("busy", off.fleet.busy.value(), on.fleet.busy.value()),
+            ("ttft.mean", off.fleet.ttft.mean_ms(), on.fleet.ttft.mean_ms()),
+            ("ttft.p99", off.fleet.ttft.percentile_ms(99.0), on.fleet.ttft.percentile_ms(99.0)),
+            ("e2e.mean", off.fleet.e2e.mean_ms(), on.fleet.e2e.mean_ms()),
+            ("imbalance", off.imbalance, on.imbalance),
+            ("replica_seconds", off.replica_seconds, on.replica_seconds),
+            ("gpu_seconds", off.gpu_seconds, on.gpu_seconds),
+            ("swap_stall", off.fleet.swap_stall.value(), on.fleet.swap_stall.value()),
+        ] {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{core}: `{k}` drifted under single-tenant config — {a} vs {b}"
+            );
+        }
+    }
+    // The single-tenant run still reports its (one) tenant.
+    let ts = on_s.tenants.as_ref().expect("tenant report");
+    assert_eq!(ts.len(), 1);
+    assert_eq!(ts[0].completed, on_s.fleet.completed);
+    assert_eq!(ts[0].swaps, 0, "a single tenant never cold-starts");
+}
+
+#[test]
+fn work_is_conserved_per_tenant_and_fleet() {
+    // Every generated request must be accounted exactly once: admitted
+    // (and, fault-free, completed) or shed at the quota front door. The
+    // fleet totals are the sums of the tenant rows.
+    let mut tenants =
+        TenantsConfig::parse("alpha/gpt2/weight=2/mix=chat,beta/gpt2-xl/quota=9000/mix=batch")
+            .expect("spec");
+    tenants.admit_tokens = Some(2048);
+    let reqs = two_tenant_workload(&tenants, 30, 43);
+    let cfg = ClusterConfig { tenants: Some(tenants), ..Default::default() };
+    let (s, e) = run_both(cfg, 2, reqs.clone());
+    for (core, r) in [("stepping", &s), ("event", &e)] {
+        let ts = r.tenants.as_ref().expect("tenant reports");
+        assert_eq!(ts.len(), 2, "{core}");
+        let mut completed = 0;
+        let mut shed = 0;
+        for (ti, t) in ts.iter().enumerate() {
+            let generated = reqs.iter().filter(|q| q.tenant == ti).count() as u64;
+            assert!(generated > 0, "{core}: tenant {ti} got no traffic");
+            assert_eq!(
+                t.admitted_requests + t.shed_quota,
+                generated,
+                "{core}: tenant '{}' leaked requests",
+                t.name
+            );
+            assert_eq!(
+                t.completed, t.admitted_requests,
+                "{core}: tenant '{}' admitted work must complete on a fault-free run",
+                t.name
+            );
+            completed += t.completed;
+            shed += t.shed_quota;
+        }
+        assert_eq!(r.fleet.completed, completed, "{core}: fleet completed ≠ Σ tenants");
+        assert_eq!(r.fleet.shed, shed, "{core}: fleet shed ≠ Σ tenant quota sheds");
+        assert_eq!(r.fleet.rejected, 0, "{core}: clamped prompts are always admissible");
+    }
+}
+
+#[test]
+fn quota_is_never_exceeded() {
+    // The front door sheds *before* enqueueing: a tenant's enqueued work
+    // tokens can never pass its quota, and a binding quota must actually
+    // shed on this workload.
+    let mut tenants =
+        TenantsConfig::parse("alpha/gpt2/mix=chat,beta/gpt2-xl/quota=9000/mix=batch")
+            .expect("spec");
+    tenants.admit_tokens = Some(2048);
+    let reqs = two_tenant_workload(&tenants, 30, 47);
+    let cfg = ClusterConfig { tenants: Some(tenants), ..Default::default() };
+    let (s, e) = run_both(cfg, 2, reqs);
+    for (core, r) in [("stepping", &s), ("event", &e)] {
+        let ts = r.tenants.as_ref().expect("tenant reports");
+        let beta = &ts[1];
+        assert!(
+            beta.enqueued_tokens <= 9000,
+            "{core}: quota exceeded — {} tokens enqueued over a 9000-token quota",
+            beta.enqueued_tokens
+        );
+        assert!(beta.shed_quota > 0, "{core}: quota never bound; pick a tighter one");
+        assert!(beta.admitted_tokens <= beta.enqueued_tokens, "{core}");
+        // The unlimited tenant is untouched by its neighbour's quota.
+        assert_eq!(ts[0].shed_quota, 0, "{core}");
+    }
+}
+
+#[test]
+fn wfq_admitted_share_tracks_weights_within_one_round() {
+    // The DRR guarantee, stated on the arbiter itself: with two
+    // backlogged tenants at weights 3:1 and requests no larger than the
+    // base quantum, any admission prefix keeps tenant A within one
+    // round's quantum of 3× tenant B's admitted tokens.
+    const WORK: u64 = 1000;
+    const EACH: i64 = 40;
+    let mut tc = TenantsConfig::parse("a/gpt2/weight=3,b/gpt2").expect("spec");
+    tc.quantum = WORK; // one request of credit per round at weight 1
+    let mut arb: TenantArbiter<u64> = TenantArbiter::new(&tc);
+    for i in 0..EACH as u64 {
+        for t in 0..2 {
+            arb.enqueue(t, Queued { work: WORK, prompt_len: 800, affinity: i, payload: i });
+        }
+    }
+    let mut seq = Vec::new();
+    arb.pump(|t, q| {
+        seq.push((t, q.work));
+        Admit::Served
+    });
+    assert_eq!(seq.len(), 2 * EACH as usize, "work conservation: everything admitted");
+    assert!(arb.is_empty());
+    assert_eq!(arb.queued_tokens(), 0);
+    let (mut a, mut b) = (0i64, 0i64);
+    let mut remaining = [EACH, EACH];
+    // One round hands A a 3×WORK quantum, so the prefix deviation from
+    // the exact 3:1 share is bounded by one round plus one request.
+    let bound = 3 * WORK as i64 + WORK as i64;
+    for (i, &(t, w)) in seq.iter().enumerate() {
+        if t == 0 {
+            a += w as i64;
+        } else {
+            b += w as i64;
+        }
+        remaining[t] -= 1;
+        if remaining[0] > 0 && remaining[1] > 0 {
+            assert!(
+                (a - 3 * b).abs() <= bound,
+                "DRR share bound violated: a={a} b={b} after {} admissions",
+                i + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn fifo_head_of_line_blocks_every_tenant_behind_it() {
+    // The no-isolation baseline, stated as a property: a blocked FIFO
+    // head stalls *all* later arrivals, theirs or not — exactly the
+    // failure mode WFQ exists to remove.
+    let mut tc = TenantsConfig::parse("a/gpt2,b/gpt2").expect("spec");
+    tc.arbitration = TenantArbitration::Fifo;
+    let mut arb: TenantArbiter<u64> = TenantArbiter::new(&tc);
+    arb.enqueue(1, Queued { work: 4000, prompt_len: 900, affinity: 0, payload: 0 });
+    arb.enqueue(0, Queued { work: 100, prompt_len: 50, affinity: 1, payload: 1 });
+    let mut offered = Vec::new();
+    arb.pump(|t, q| {
+        offered.push(t);
+        Admit::Blocked(q)
+    });
+    assert_eq!(offered, vec![1], "FIFO must stop at the blocked head");
+    assert_eq!(arb.queued(0), 1, "tenant a's request is stuck behind b's head");
+    assert_eq!(arb.queued_tokens(), 4100);
+    // WFQ on the same backlog reaches past the stall.
+    let mut tc2 = TenantsConfig::parse("a/gpt2,b/gpt2").expect("spec");
+    tc2.arbitration = TenantArbitration::Wfq;
+    let mut arb2: TenantArbiter<u64> = TenantArbiter::new(&tc2);
+    arb2.enqueue(1, Queued { work: 4000, prompt_len: 900, affinity: 0, payload: 0 });
+    arb2.enqueue(0, Queued { work: 100, prompt_len: 50, affinity: 1, payload: 1 });
+    let mut served = Vec::new();
+    arb2.pump(|t, q| {
+        if t == 1 {
+            Admit::Blocked(q)
+        } else {
+            served.push(t);
+            Admit::Served
+        }
+    });
+    assert_eq!(served, vec![0], "WFQ admits tenant a around b's blocked head");
+}

@@ -3,13 +3,14 @@
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
 # §Serve-Scale, §Traffic-Sweep, §Fault-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention + fault_sweep + perf_hotpath
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention + fault_sweep + tenant_sweep + perf_hotpath
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
 #   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
 #   scripts/bench_json.sh prefix     # just the shared prefix-cache sweep
 #   scripts/bench_json.sh contention # just the shared-fabric contention sweep
 #   scripts/bench_json.sh faults     # just the fault-injection sweep
+#   scripts/bench_json.sh tenants    # just the multi-tenant isolation sweep
 #   scripts/bench_json.sh perf       # just the hot-path micro-benchmarks
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,9 +18,9 @@ cd "$(dirname "$0")/.."
 want="${1:-all}"
 
 case "$want" in
-    all|paging|serve|traffic|prefix|contention|faults|perf) ;;
+    all|paging|serve|traffic|prefix|contention|faults|tenants|perf) ;;
     *)
-        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix, contention, faults or perf)" >&2
+        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix, contention, faults, tenants or perf)" >&2
         exit 2
         ;;
 esac
@@ -45,6 +46,9 @@ if [[ "$want" == "all" || "$want" == "contention" ]]; then
 fi
 if [[ "$want" == "all" || "$want" == "faults" ]]; then
     cargo bench --bench fault_sweep -- --json
+fi
+if [[ "$want" == "all" || "$want" == "tenants" ]]; then
+    cargo bench --bench tenant_sweep -- --json
 fi
 if [[ "$want" == "all" || "$want" == "perf" ]]; then
     cargo bench --bench perf_hotpath -- --json

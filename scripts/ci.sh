@@ -81,6 +81,7 @@ BENCHES=(
     prefix_cache
     serve_scale
     tab_latency
+    tenant_sweep
     traffic_sweep
 )
 for b in "${BENCHES[@]}"; do
