@@ -1,0 +1,125 @@
+//! Telemetry overhead gate (EXPERIMENTS.md §Telemetry-Overhead).
+//!
+//! Runs the perf-gate scenario (4 replicas × 2 000 diurnal chat
+//! requests through the event core — the same shape as
+//! `perf_hotpath`'s gate section) three ways:
+//!
+//! * **off** — `telemetry: None`, twice, asserting the runs are
+//!   bit-identical (the strict-passthrough guarantee, from the bench's
+//!   side of the fence);
+//! * **on** — default 100 ms sampling, asserting every *count* matches
+//!   the off run exactly and every recorded span conserves its TTFT
+//!   bitwise;
+//! * **timed** — median wall time of both; in full (non-smoke) mode the
+//!   telemetry-on run must cost < 10 % over telemetry-off.
+//!
+//! `-- --json` writes BENCH_telemetry_overhead.json (scripts/bench_json.sh).
+
+mod common;
+
+use fenghuang::coordinator::{Cluster, ClusterConfig, ClusterReport, Request};
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::telemetry::TelemetryConfig;
+use fenghuang::traffic::{self, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix};
+
+/// The perf-gate workload: same shape and seed as `perf_hotpath`'s gate
+/// section so the overhead number rides a known scenario.
+fn diurnal_chat(requests: usize, qps: f64) -> Vec<Request> {
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").expect("mix"),
+        requests,
+        seed: 7,
+        max_prompt: gpt3_175b().max_seq as usize,
+        slo: None,
+    };
+    traffic::generate(&tc).expect("workload")
+}
+
+fn run(cfg: &ClusterConfig, reqs: &[Request]) -> ClusterReport {
+    let mut c = Cluster::fh4(4, &gpt3_175b(), cfg.clone()).expect("cluster");
+    c.run(reqs.to_vec()).expect("run")
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let reqs = diurnal_chat(2000, 40.0);
+    let off_cfg = ClusterConfig::default();
+    let on_cfg = ClusterConfig { telemetry: Some(TelemetryConfig::default()), ..Default::default() };
+
+    // Correctness fence before any timing: off is bit-identical run to
+    // run, on changes no count, and the spans conserve TTFT bitwise.
+    let off = run(&off_cfg, &reqs);
+    let off2 = run(&off_cfg, &reqs);
+    assert!(off.telemetry.is_none(), "off run must publish no telemetry");
+    assert_eq!(
+        off.fleet.clock.to_bits(),
+        off2.fleet.clock.to_bits(),
+        "telemetry-off runs must be bit-identical"
+    );
+    assert_eq!(
+        off.fleet.ttft.mean_ms().to_bits(),
+        off2.fleet.ttft.mean_ms().to_bits(),
+        "telemetry-off latency stats must be bit-identical"
+    );
+    let on = run(&on_cfg, &reqs);
+    let tel = on.telemetry.as_ref().expect("telemetry report");
+    assert_eq!(on.fleet.completed, off.fleet.completed, "completions must not shift");
+    assert_eq!(on.fleet.tokens_generated, off.fleet.tokens_generated, "tokens must not shift");
+    assert_eq!(on.fleet.shed, off.fleet.shed, "sheds must not shift");
+    assert_eq!(on.fleet.rejected, off.fleet.rejected, "rejections must not shift");
+    assert_eq!(
+        on.fleet.ttft.mean_ms().to_bits(),
+        off.fleet.ttft.mean_ms().to_bits(),
+        "ttft must not shift under observation"
+    );
+    assert_eq!(tel.spans.len() as u64, on.fleet.completed, "one span per completion");
+    for s in &tel.spans {
+        assert!(s.conserves_ttft(), "span {} must conserve its measured TTFT", s.id);
+    }
+    assert!(!tel.samples.is_empty(), "gate run must produce samples");
+    println!(
+        "fence: {} completions, {} spans, {} samples — counts identical on/off\n",
+        on.fleet.completed,
+        tel.spans.len(),
+        tel.samples.len()
+    );
+
+    // Timed comparison.
+    let iters = if smoke { 3 } else { 7 };
+    let r_off = common::bench("cluster.gate 4r x 2000 telemetry off", 1, iters, || {
+        run(&off_cfg, &reqs).fleet.completed
+    });
+    let r_on = common::bench("cluster.gate 4r x 2000 telemetry on", 1, iters, || {
+        run(&on_cfg, &reqs).fleet.completed
+    });
+    let overhead = r_on.median_ns / r_off.median_ns - 1.0;
+    println!("\n  -> telemetry-on overhead {:+.2}% on the perf-gate scenario", overhead * 100.0);
+    if !smoke {
+        assert!(
+            overhead < 0.10,
+            "telemetry-on overhead must stay < 10% on the perf gate (got {:.1}%)",
+            overhead * 100.0
+        );
+    }
+
+    if common::json_requested() {
+        common::write_rows_json(
+            "telemetry_overhead",
+            &[format!(
+                "{{\"section\": \"gate\", \"replicas\": 4, \"requests\": 2000, \
+                 \"off_ns\": {:.0}, \"on_ns\": {:.0}, \"overhead_frac\": {:.4}, \
+                 \"spans\": {}, \"samples\": {}, \"smoke\": {smoke}}}",
+                r_off.median_ns,
+                r_on.median_ns,
+                overhead,
+                tel.spans.len(),
+                tel.samples.len()
+            )],
+        );
+    }
+}

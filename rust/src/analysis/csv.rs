@@ -24,12 +24,25 @@ pub fn render_csv(which: &str) -> Result<String> {
     }
 }
 
-fn fig1() -> String {
-    let mut s = String::from("year,users_millions,model,params_b\n");
-    for (year, users, name, params) in super::trends::AI_TREND {
-        let _ = writeln!(s, "{year},{users},{name},{params}");
+/// Assemble a CSV table from a header and pre-rendered rows — the shared
+/// sink for data-carrying exports that cannot be a named artifact above
+/// (e.g. the telemetry time-series of a live run,
+/// `telemetry::export::timeseries_csv`).
+pub fn table(header: &str, rows: &[String]) -> String {
+    let mut s = String::with_capacity(header.len() + 1 + rows.iter().map(|r| r.len() + 1).sum::<usize>());
+    let _ = writeln!(s, "{header}");
+    for row in rows {
+        let _ = writeln!(s, "{row}");
     }
     s
+}
+
+fn fig1() -> String {
+    let rows: Vec<String> = super::trends::AI_TREND
+        .iter()
+        .map(|(year, users, name, params)| format!("{year},{users},{name},{params}"))
+        .collect();
+    table("year,users_millions,model,params_b", &rows)
 }
 
 fn fig2_model() -> String {
@@ -168,5 +181,12 @@ mod tests {
     #[test]
     fn unknown_artifact_rejected() {
         assert!(render_csv("fig99").is_err());
+    }
+
+    #[test]
+    fn table_helper_emits_header_plus_rows() {
+        let t = table("a,b", &["1,2".to_string(), "3,4".to_string()]);
+        assert_eq!(t, "a,b\n1,2\n3,4\n");
+        assert_eq!(table("a,b", &[]), "a,b\n");
     }
 }

@@ -14,7 +14,8 @@ use crate::coordinator::tenancy::{TenantArbitration, TenantsConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode};
 use crate::faults::FaultSchedule;
-use crate::units::{Bandwidth, Bytes};
+use crate::telemetry::TelemetryConfig;
+use crate::units::{Bandwidth, Bytes, Seconds};
 use std::collections::HashMap;
 
 /// Flags understood by `fenghuang simulate`.
@@ -48,12 +49,17 @@ pub const SERVE_FLAGS: &[&str] = &[
     "tenants",
     "tenant-mode",
     "admit-tokens",
+    "telemetry",
+    "telemetry-interval-ms",
+    "trace-out",
+    "timeseries-out",
 ];
 
 /// Serve flags that may appear without a value (`--autoscale` ≡
 /// `--autoscale on`, `--prefix-cache` ≡ `--prefix-cache on`,
-/// `--fabric-contention` ≡ `--fabric-contention shared`).
-pub const SERVE_BARE: &[&str] = &["autoscale", "prefix-cache", "fabric-contention"];
+/// `--fabric-contention` ≡ `--fabric-contention shared`,
+/// `--telemetry` ≡ `--telemetry on`).
+pub const SERVE_BARE: &[&str] = &["autoscale", "prefix-cache", "fabric-contention", "telemetry"];
 
 /// Any of these flags routes `serve` through the open-loop traffic
 /// engine instead of the legacy fixed-gap workload.
@@ -67,6 +73,10 @@ pub const TRAFFIC_FLAGS: &[&str] = &[
     "autoscale-min",
     "shed-tokens",
     "seed",
+    "telemetry",
+    "telemetry-interval-ms",
+    "trace-out",
+    "timeseries-out",
 ];
 
 /// Flags understood by `fenghuang page`.
@@ -356,6 +366,38 @@ pub fn parse_tenants(flags: &HashMap<String, String>) -> Result<Option<TenantsCo
     Ok(Some(tc))
 }
 
+/// Build the telemetry config from `--telemetry [on|off]`,
+/// `--telemetry-interval-ms MS`, `--trace-out PATH` and
+/// `--timeseries-out PATH` (DESIGN.md §Telemetry). An absent
+/// `--telemetry` is `None` — the observability paths stay a strict
+/// bit-identical passthrough — and makes the companion flags conflicts
+/// rather than silent no-ops (an export path on a run that records
+/// nothing must not produce an empty file).
+pub fn parse_telemetry(flags: &HashMap<String, String>) -> Result<Option<TelemetryConfig>> {
+    let explicit = flags.contains_key("telemetry");
+    let on = switch(flags, "telemetry")?;
+    if !on {
+        for k in ["telemetry-interval-ms", "trace-out", "timeseries-out"] {
+            if flags.contains_key(k) {
+                return Err(cli_err(if explicit {
+                    format!("--{k} conflicts with --telemetry off")
+                } else {
+                    format!("--{k} needs --telemetry")
+                }));
+            }
+        }
+        return Ok(None);
+    }
+    let mut tel = TelemetryConfig::default();
+    if let Some(v) = flags.get("telemetry-interval-ms") {
+        let ms: f64 =
+            v.parse().map_err(|e| cli_err(format!("--telemetry-interval-ms: {e}")))?;
+        tel.interval = Seconds::ms(ms);
+    }
+    tel.validate()?;
+    Ok(Some(tel))
+}
+
 /// Reject active fabric contention on a shared-nothing system: there is
 /// no shared TAB pool to arbitrate (the same rule `FabricClock` enforces,
 /// surfaced at flag-validation time with the preset's name).
@@ -635,6 +677,65 @@ mod tests {
         for k in ["tenants", "tenant-mode", "admit-tokens"] {
             assert!(SERVE_FLAGS.contains(&k), "--{k} missing from SERVE_FLAGS");
             assert!(!PAGE_FLAGS.contains(&k), "--{k} leaked into PAGE_FLAGS");
+        }
+        // The telemetry family is serve-only and rides the traffic engine.
+        for k in ["telemetry", "telemetry-interval-ms", "trace-out", "timeseries-out"] {
+            assert!(SERVE_FLAGS.contains(&k), "--{k} missing from SERVE_FLAGS");
+            assert!(TRAFFIC_FLAGS.contains(&k), "--{k} missing from TRAFFIC_FLAGS");
+            assert!(!PAGE_FLAGS.contains(&k), "--{k} leaked into PAGE_FLAGS");
+        }
+        assert!(SERVE_BARE.contains(&"telemetry"));
+    }
+
+    #[test]
+    fn telemetry_flag_family_builds_the_config() {
+        // Absent → None: the observability paths stay passthrough.
+        let f = parse_flags("serve", &args(&[]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        assert!(parse_telemetry(&f).unwrap().is_none());
+        // Bare switch → defaults.
+        let f = parse_flags("serve", &args(&["--telemetry"]), SERVE_FLAGS, SERVE_BARE).unwrap();
+        let tel = parse_telemetry(&f).unwrap().unwrap();
+        assert_eq!(tel.interval, TelemetryConfig::default().interval);
+        // Explicit interval override.
+        let f = parse_flags(
+            "serve",
+            &args(&["--telemetry", "--telemetry-interval-ms", "25"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let tel = parse_telemetry(&f).unwrap().unwrap();
+        assert_eq!(tel.interval, Seconds::ms(25.0));
+        // Companion flags without --telemetry are conflicts, not no-ops;
+        // so is an explicit off alongside them.
+        for lone in [
+            ["--telemetry-interval-ms", "50"],
+            ["--trace-out", "t.json"],
+            ["--timeseries-out", "t.csv"],
+        ] {
+            let f = parse_flags("serve", &args(&lone), SERVE_FLAGS, SERVE_BARE).unwrap();
+            let e = parse_telemetry(&f).unwrap_err().to_string();
+            assert!(e.contains("--telemetry"), "{e}");
+        }
+        let f = parse_flags(
+            "serve",
+            &args(&["--telemetry", "off", "--trace-out", "t.json"]),
+            SERVE_FLAGS,
+            SERVE_BARE,
+        )
+        .unwrap();
+        let e = parse_telemetry(&f).unwrap_err().to_string();
+        assert!(e.contains("conflicts"), "{e}");
+        // Non-positive and garbage intervals are rejected.
+        for bad in ["0", "-10", "soon"] {
+            let f = parse_flags(
+                "serve",
+                &args(&["--telemetry", "--telemetry-interval-ms", bad]),
+                SERVE_FLAGS,
+                SERVE_BARE,
+            )
+            .unwrap();
+            assert!(parse_telemetry(&f).is_err(), "--telemetry-interval-ms {bad} must fail");
         }
     }
 

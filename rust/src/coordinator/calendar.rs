@@ -55,6 +55,12 @@ pub enum EventKind {
     /// sees the tick's fleet resize, and before replica-local
     /// completions/arrivals like the tick itself.
     TenantTick,
+    /// Telemetry time-series sampling tick (DESIGN.md §Telemetry):
+    /// advance every replica to the instant and record fleet gauges.
+    /// Ranked after `TenantTick` so the sample sees the instant's
+    /// admissions, and before replica-local completions/arrivals like
+    /// the other ticks.
+    TelemetryTick,
     /// A disaggregated prefill→decode KV handoff lands on `replica`.
     HandoffDone { replica: usize },
     /// A KV page migration (paging layer) completes on `replica`.
@@ -78,11 +84,12 @@ impl EventKind {
             EventKind::Fault { .. } => 0,
             EventKind::AutoscaleTick => 1,
             EventKind::TenantTick => 2,
-            EventKind::HandoffDone { .. } => 3,
-            EventKind::MigrationDone { .. } => 4,
-            EventKind::PrefillDone { .. } => 5,
-            EventKind::DecodeTick { .. } => 6,
-            EventKind::Arrival { .. } => 7,
+            EventKind::TelemetryTick => 3,
+            EventKind::HandoffDone { .. } => 4,
+            EventKind::MigrationDone { .. } => 5,
+            EventKind::PrefillDone { .. } => 6,
+            EventKind::DecodeTick { .. } => 7,
+            EventKind::Arrival { .. } => 8,
         }
     }
 }
@@ -229,6 +236,7 @@ mod tests {
         let mut cal = EventCalendar::new();
         let t = Seconds::new(1.0);
         assert!(cal.push(t, EventKind::Arrival { req: ReqId(0) }));
+        assert!(cal.push(t, EventKind::TelemetryTick));
         assert!(cal.push(t, EventKind::TenantTick));
         assert!(cal.push(t, EventKind::AutoscaleTick));
         assert!(cal.push(t, EventKind::Fault { idx: 0 }));
@@ -236,6 +244,7 @@ mod tests {
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Fault { idx: 0 }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::AutoscaleTick));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::TenantTick));
+        assert!(matches!(cal.pop().unwrap().kind, EventKind::TelemetryTick));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(0) }));
         assert!(matches!(cal.pop().unwrap().kind, EventKind::Arrival { req: ReqId(1) }));
     }

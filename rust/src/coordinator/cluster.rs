@@ -49,10 +49,14 @@ use crate::config::{fh4_rack, FlashConfig, SystemConfig};
 use crate::error::{FhError, Result};
 use crate::fabric::contention::{ContentionConfig, ContentionMode, FabricClock, FabricReport};
 use crate::faults::{
-    recovery_stats, CompletionEvent, FaultKind, FaultReport, FaultSchedule, FaultSpec, ModuleSel,
+    attainment_windows, recovery_stats, CompletionEvent, FaultKind, FaultReport, FaultSchedule,
+    FaultSpec, ModuleSel,
 };
 use crate::models::arch::ModelArch;
 use crate::models::memory;
+use crate::telemetry::{
+    RequestSpan, StallLedger, TelemetryConfig, TelemetryReport, TelemetrySample, TelemetrySampler,
+};
 use crate::units::{Bandwidth, Bytes, Seconds};
 
 /// Metadata payload booked for a TAB KV handoff (the page-table
@@ -152,6 +156,12 @@ pub struct ClusterConfig {
     /// `None` is a strict passthrough: both cores run the exact code
     /// paths (and floats) of a single-model build.
     pub tenants: Option<TenantsConfig>,
+    /// Deterministic observability (DESIGN.md §Telemetry): per-request
+    /// lifecycle spans, a fleet stall-attribution ledger, and a
+    /// windowed time-series tick pumped by both cores. `None` is a
+    /// strict passthrough: no tick is scheduled, no span is recorded,
+    /// and every metric stays bit-identical to a pre-telemetry build.
+    pub telemetry: Option<TelemetryConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -168,6 +178,7 @@ impl Default for ClusterConfig {
             flash: None,
             faults: None,
             tenants: None,
+            telemetry: None,
         }
     }
 }
@@ -222,6 +233,9 @@ pub struct ClusterReport {
     /// Fault-injection observables — per-class counts, blast radius and
     /// windowed recovery (None when no schedule was configured).
     pub faults: Option<FaultReport>,
+    /// Telemetry slice of the run — request spans, interval gauges, and
+    /// the rolling-attainment curve (None with telemetry off).
+    pub telemetry: Option<TelemetryReport>,
     /// Whether the elastic autoscaler drove this run.
     pub elastic: bool,
     /// Provisioned capacity: ∫ active-replica-count dt over the run —
@@ -355,6 +369,10 @@ impl ClusterReport {
             s.push_str(&fr.summary_line());
             s.push('\n');
         }
+        if let Some(tel) = &self.telemetry {
+            s.push_str(&tel.summary_line());
+            s.push('\n');
+        }
         s
     }
 }
@@ -461,6 +479,10 @@ pub struct Cluster {
     tassign: Vec<usize>,
     tstats: Vec<TenantStats>,
     next_admit: Seconds,
+    /// Telemetry time-series recorder and the next sampling tick
+    /// (DESIGN.md §Telemetry). Dormant without a telemetry config.
+    sampler: Option<TelemetrySampler>,
+    next_telemetry: Seconds,
 }
 
 impl Cluster {
@@ -620,6 +642,11 @@ impl Cluster {
                 ));
             }
         }
+        // Telemetry composes with every feature; only the interval needs
+        // validating (DESIGN.md §Telemetry).
+        if let Some(tel) = &cfg.telemetry {
+            tel.validate()?;
+        }
         let mut replicas = Vec::with_capacity(systems.len());
         let mut names = Vec::with_capacity(systems.len());
         let mut roles = Vec::with_capacity(systems.len());
@@ -644,10 +671,14 @@ impl Cluster {
             }
             let batcher = Batcher::new(cfg.max_batch, 64, rmodel.max_seq as usize);
             let mut sched = Scheduler::new(backend, batcher).with_mode(role);
-            if !fault_timeline.is_empty() || cfg.tenants.is_some() {
-                // The recovery and per-tenant reports need a completion
-                // trace; plain healthy runs record nothing (passthrough).
+            if !fault_timeline.is_empty() || cfg.tenants.is_some() || cfg.telemetry.is_some() {
+                // The recovery, per-tenant and rolling-attainment
+                // reports need a completion trace; plain healthy runs
+                // record nothing (passthrough).
                 sched = sched.with_trace();
+            }
+            if cfg.telemetry.is_some() {
+                sched = sched.with_telemetry();
             }
             replicas.push(sched);
             roles.push(role);
@@ -687,6 +718,10 @@ impl Cluster {
             ),
             None => (vec![0; n], Vec::new(), Seconds::ZERO),
         };
+        let (sampler, next_telemetry) = match &cfg.telemetry {
+            Some(tel) => (Some(TelemetrySampler::new(tel.interval)), tel.interval),
+            None => (None, Seconds::ZERO),
+        };
         Ok(Cluster {
             replicas,
             names,
@@ -714,6 +749,8 @@ impl Cluster {
             tassign,
             tstats,
             next_admit,
+            sampler,
+            next_telemetry,
         })
     }
 
@@ -770,6 +807,89 @@ impl Cluster {
             self.router.set_active(next);
             self.scale_events.push((t, next));
         }
+    }
+
+    /// Record one fleet gauge snapshot at tick instant `t`, stepping
+    /// core. Every field is an integer counter or a pure copy of state
+    /// both cores hold bit-identically at the tick (a global sync
+    /// point), so [`Cluster::sample_event`] reads the same values.
+    fn sample_stepping(&mut self, t: Seconds) {
+        if self.sampler.is_none() {
+            return;
+        }
+        let mut pending = 0u64;
+        let mut completed = 0u64;
+        let mut tokens_generated = 0u64;
+        let mut slo_total = 0u64;
+        let mut slo_met = 0u64;
+        for r in &self.replicas {
+            pending += r.pending() as u64;
+            completed += r.metrics.completed;
+            tokens_generated += r.metrics.tokens_generated;
+            slo_total += r.metrics.slo_total;
+            slo_met += r.metrics.slo_met;
+        }
+        let sample = TelemetrySample {
+            at: t,
+            active_replicas: self.active,
+            routed_tokens: self.router.total_load(),
+            pending,
+            completed,
+            tokens_generated,
+            shed: self.shed,
+            rejected: self.rejected,
+            slo_total,
+            slo_met,
+            pool_bytes: self
+                .prefix_cache
+                .as_ref()
+                .map_or(0.0, |pc| pc.held_bytes().value()),
+            fabric_busy: self
+                .fabric
+                .as_ref()
+                .map_or(Seconds::ZERO, |c| c.busy_time()),
+        };
+        self.sampler.as_mut().expect("checked above").record(sample);
+    }
+
+    /// Event-core twin of [`Cluster::sample_stepping`].
+    fn sample_event(&mut self, evs: &[EventReplica], t: Seconds) {
+        if self.sampler.is_none() {
+            return;
+        }
+        let mut pending = 0u64;
+        let mut completed = 0u64;
+        let mut tokens_generated = 0u64;
+        let mut slo_total = 0u64;
+        let mut slo_met = 0u64;
+        for r in evs {
+            pending += r.pending() as u64;
+            completed += r.metrics.completed;
+            tokens_generated += r.metrics.tokens_generated;
+            slo_total += r.metrics.slo_total;
+            slo_met += r.metrics.slo_met;
+        }
+        let sample = TelemetrySample {
+            at: t,
+            active_replicas: self.active,
+            routed_tokens: self.router.total_load(),
+            pending,
+            completed,
+            tokens_generated,
+            shed: self.shed,
+            rejected: self.rejected,
+            slo_total,
+            slo_met,
+            pool_bytes: self
+                .prefix_cache
+                .as_ref()
+                .map_or(0.0, |pc| pc.held_bytes().value()),
+            fabric_busy: self
+                .fabric
+                .as_ref()
+                .map_or(Seconds::ZERO, |c| c.busy_time()),
+        };
+        self.sampler.as_mut().expect("checked above").record(sample);
     }
 
     /// Release router load for responses this replica finished since the
@@ -892,6 +1012,10 @@ impl Cluster {
             let ok = cal.push(self.next_admit, EventKind::TenantTick);
             debug_assert!(ok, "admit interval is validated positive");
         }
+        if self.cfg.telemetry.is_some() {
+            let ok = cal.push(self.next_telemetry, EventKind::TelemetryTick);
+            debug_assert!(ok, "telemetry interval is validated positive");
+        }
         while let Some(ev) = cal.pop() {
             match ev.kind {
                 EventKind::Fault { idx } => {
@@ -952,6 +1076,29 @@ impl Cluster {
                     let ok = cal.push(self.next_admit, EventKind::TenantTick);
                     debug_assert!(ok, "admit interval is validated positive");
                 }
+                EventKind::TelemetryTick => {
+                    let interval = self
+                        .cfg
+                        .telemetry
+                        .as_ref()
+                        .expect("tick implies telemetry")
+                        .interval;
+                    // Same drop rule as the other ticks: the first due
+                    // sample that observes neither arrivals, queued
+                    // admissions nor in-flight work retires the series.
+                    if cal.arrivals_scheduled() == 0
+                        && arb.as_ref().map_or(true, |a| a.is_empty())
+                        && !evs.iter().any(|r| r.pending() > 0)
+                    {
+                        continue;
+                    }
+                    let t = ev.time;
+                    self.advance_event_replicas(&arena, &mut evs, t)?;
+                    self.sample_event(&evs, t);
+                    self.next_telemetry += interval;
+                    let ok = cal.push(self.next_telemetry, EventKind::TelemetryTick);
+                    debug_assert!(ok, "telemetry interval is validated positive");
+                }
                 EventKind::Arrival { req } => match arb.as_mut() {
                     Some(arb) => self.enqueue_event_arrival(&mut arena, &mut evs, arb, req)?,
                     None => self.admit_event_arrival(&mut arena, &mut evs, req)?,
@@ -987,7 +1134,7 @@ impl Cluster {
         } else {
             self.replica_seconds = evs.len() as f64 * makespan.value();
         }
-        Ok(self.report_event(&evs))
+        Ok(self.report_event(&mut evs))
     }
 
     /// Fresh lean replicas mirroring this cluster's fleet: same node
@@ -1019,7 +1166,15 @@ impl Cluster {
                     64,
                     rmodel.max_seq as usize,
                 );
-                if self.fstate.timeline.is_empty() && self.cfg.tenants.is_none() {
+                let ev = if self.cfg.telemetry.is_some() {
+                    ev.with_telemetry()
+                } else {
+                    ev
+                };
+                if self.fstate.timeline.is_empty()
+                    && self.cfg.tenants.is_none()
+                    && self.cfg.telemetry.is_none()
+                {
                     ev
                 } else {
                     ev.with_trace()
@@ -1574,12 +1729,20 @@ impl Cluster {
             .map(|tc| tc.admit_interval)
             .unwrap_or(Seconds::ZERO);
         let admit_ticking = self.cfg.tenants.as_ref().is_some_and(|tc| tc.needs_ticks());
+        let telemetry_on = self.cfg.telemetry.is_some();
+        let telemetry_interval = self
+            .cfg
+            .telemetry
+            .as_ref()
+            .map(|tel| tel.interval)
+            .unwrap_or(Seconds::ZERO);
         for mut req in reqs {
-            // Faults, autoscaler decisions and tenant admission pumps
-            // fire on their own cadences, interleaved in virtual-time
-            // order with the arrivals. Ties follow the event calendar's
-            // class order: fault, then scale tick, then admission pump,
-            // then the arrival itself.
+            // Faults, autoscaler decisions, tenant admission pumps and
+            // telemetry samples fire on their own cadences, interleaved
+            // in virtual-time order with the arrivals. Ties follow the
+            // event calendar's class order: fault, then scale tick, then
+            // admission pump, then telemetry sample, then the arrival
+            // itself.
             loop {
                 let mut due: Option<(Seconds, u8)> = None;
                 let mut consider = |t: Seconds, class: u8| {
@@ -1597,6 +1760,9 @@ impl Cluster {
                 }
                 if admit_ticking && self.next_admit <= req.arrival {
                     consider(self.next_admit, 2);
+                }
+                if telemetry_on && self.next_telemetry <= req.arrival {
+                    consider(self.next_telemetry, 3);
                 }
                 match due {
                     Some((ft, 0)) => {
@@ -1616,12 +1782,17 @@ impl Cluster {
                         self.next_scale +=
                             self.cfg.autoscale.expect("due implies autoscale").interval;
                     }
-                    Some((ta, _)) => {
+                    Some((ta, 2)) => {
                         self.advance_to(ta)?;
                         if let Some(arb) = arb.as_mut() {
                             self.pump_stepping(arb, ta);
                         }
                         self.next_admit += admit_interval;
+                    }
+                    Some((tt, _)) => {
+                        self.advance_to(tt)?;
+                        self.sample_stepping(tt);
+                        self.next_telemetry += telemetry_interval;
                     }
                     None => break,
                 }
@@ -1744,6 +1915,7 @@ impl Cluster {
         // arrivals are exhausted and nothing is pending.
         let mut ticking = self.cfg.autoscale.is_some();
         let mut pumping = admit_ticking;
+        let mut sampling = telemetry_on;
         loop {
             // Retirement mirrors the calendar dropping a tick: the first
             // due tick that observes no backlog (fleet idle, arbiter
@@ -1765,6 +1937,9 @@ impl Cluster {
             if pumping {
                 consider(self.next_admit, 2);
             }
+            if sampling {
+                consider(self.next_telemetry, 3);
+            }
             match due {
                 Some((ft, 0)) => {
                     if self.replicas.iter().any(|r| r.pending() > 0) {
@@ -1785,7 +1960,7 @@ impl Cluster {
                     self.next_scale +=
                         self.cfg.autoscale.expect("ticking implies autoscale").interval;
                 }
-                Some((t, _)) => {
+                Some((t, 2)) => {
                     if idle {
                         pumping = false;
                         continue;
@@ -1795,6 +1970,15 @@ impl Cluster {
                         self.pump_stepping(arb, t);
                     }
                     self.next_admit += admit_interval;
+                }
+                Some((t, _)) => {
+                    if idle {
+                        sampling = false;
+                        continue;
+                    }
+                    self.advance_to(t)?;
+                    self.sample_stepping(t);
+                    self.next_telemetry += telemetry_interval;
                 }
                 None => break,
             }
@@ -1828,8 +2012,17 @@ impl Cluster {
         Ok(self.report())
     }
 
-    /// Stepping-core report: snapshot the `Scheduler` replicas.
-    fn report(&self) -> ClusterReport {
+    /// Stepping-core report: snapshot the `Scheduler` replicas. Takes
+    /// `&mut self` only to drain recorded telemetry spans and samples
+    /// (stamping each span with its replica index) before the
+    /// immutable snapshot borrow.
+    fn report(&mut self) -> ClusterReport {
+        let spans = stamp_spans(self.replicas.iter_mut().map(|r| r.take_spans()));
+        let samples = self
+            .sampler
+            .as_mut()
+            .map(|s| std::mem::take(&mut s.samples))
+            .unwrap_or_default();
         let snaps: Vec<ReplicaSnap<'_>> = self
             .replicas
             .iter()
@@ -1854,13 +2047,19 @@ impl Cluster {
             .first()
             .map(|r| r.backend().sys.num_gpus)
             .unwrap_or(0) as f64;
-        self.assemble_report(&snaps, gpus_per_node)
+        self.assemble_report(&snaps, gpus_per_node, spans, samples)
     }
 
     /// Event-core report: snapshot the lean replicas. Field-for-field
     /// the same assembly as [`Cluster::report`] — shared below, so the
     /// two cores cannot drift in what they observe.
-    fn report_event(&self, evs: &[EventReplica]) -> ClusterReport {
+    fn report_event(&mut self, evs: &mut [EventReplica]) -> ClusterReport {
+        let spans = stamp_spans(evs.iter_mut().map(|r| r.take_spans()));
+        let samples = self
+            .sampler
+            .as_mut()
+            .map(|s| std::mem::take(&mut s.samples))
+            .unwrap_or_default();
         let snaps: Vec<ReplicaSnap<'_>> = evs
             .iter()
             .map(|r| ReplicaSnap {
@@ -1883,10 +2082,16 @@ impl Cluster {
             .first()
             .map(|r| r.backend().sys.num_gpus)
             .unwrap_or(0) as f64;
-        self.assemble_report(&snaps, gpus_per_node)
+        self.assemble_report(&snaps, gpus_per_node, spans, samples)
     }
 
-    fn assemble_report(&self, snaps: &[ReplicaSnap<'_>], gpus_per_node: f64) -> ClusterReport {
+    fn assemble_report(
+        &self,
+        snaps: &[ReplicaSnap<'_>],
+        gpus_per_node: f64,
+        spans: Vec<RequestSpan>,
+        samples: Vec<TelemetrySample>,
+    ) -> ClusterReport {
         let mut fleet = Metrics::default();
         let mut per_replica = Vec::with_capacity(snaps.len());
         let mut kv_spilled_peak = Bytes::ZERO;
@@ -1979,6 +2184,13 @@ impl Cluster {
                         }
                     }
                     let homed = self.tassign.iter().take(self.active).any(|&a| a == ti);
+                    // Per-tenant stall attribution (DESIGN.md
+                    // §Telemetry): fold the tenant's spans into its own
+                    // ledger. Empty — and silent — with telemetry off.
+                    let mut ledger = StallLedger::default();
+                    for s in spans.iter().filter(|s| s.tenant == ti) {
+                        ledger.charge(s);
+                    }
                     TenantReport {
                         name: t.name.clone(),
                         model: t.model.name.clone(),
@@ -2001,9 +2213,27 @@ impl Cluster {
                         } else {
                             memory::param_bytes(&t.model)
                         },
+                        ledger,
                     }
                 })
                 .collect()
+        });
+        // Telemetry slice: the drained spans and samples, the fleet
+        // ledger (already merged through the per-replica metrics), and
+        // a rolling-attainment curve cut from the completion trace by
+        // the fault layer's window slicer (telemetry arms trace
+        // recording precisely so this reuse works).
+        let telemetry = self.cfg.telemetry.as_ref().map(|tel| {
+            let mut completions: Vec<CompletionEvent> =
+                snaps.iter().flat_map(|s| s.trace.iter().copied()).collect();
+            completions.sort_by(|a, b| a.at.value().total_cmp(&b.at.value()));
+            TelemetryReport {
+                interval: tel.interval,
+                attainment: attainment_windows(&completions, fleet.clock, tel.interval),
+                ledger: fleet.ledger,
+                spans,
+                samples,
+            }
         });
         ClusterReport {
             model: self.model.name.clone(),
@@ -2014,6 +2244,7 @@ impl Cluster {
             prefix_cache: self.prefix_cache.as_ref().map(|pc| pc.report()),
             fabric: self.fabric.as_ref().map(|c| c.report()),
             faults,
+            telemetry,
             fleet,
             per_replica,
             imbalance: self.router.imbalance(),
@@ -2025,6 +2256,21 @@ impl Cluster {
             scale_events: self.scale_events.clone(),
         }
     }
+}
+
+/// Concatenate per-replica telemetry span drains, stamping each span
+/// with its replica index — the hot paths record spans with
+/// `replica: 0` because a replica-local serving loop has no notion of
+/// its fleet position (DESIGN.md §Telemetry).
+fn stamp_spans(per_replica: impl Iterator<Item = Vec<RequestSpan>>) -> Vec<RequestSpan> {
+    let mut out = Vec::new();
+    for (i, mut v) in per_replica.enumerate() {
+        for s in &mut v {
+            s.replica = i;
+        }
+        out.append(&mut v);
+    }
+    out
 }
 
 /// Deterministic multi-session workload: `n` requests spread over
@@ -2114,10 +2360,22 @@ pub fn demo_serve_traffic(
     cfg: ClusterConfig,
     tc: &crate::traffic::TrafficConfig,
 ) -> Result<String> {
+    demo_serve_traffic_report(model, replicas, cfg, tc).map(|(s, _)| s)
+}
+
+/// [`demo_serve_traffic`] variant that also returns the structured
+/// report — `main` drives the telemetry exporters (`--trace-out` /
+/// `--timeseries-out`) off the same run instead of re-simulating.
+pub fn demo_serve_traffic_report(
+    model: &ModelArch,
+    replicas: usize,
+    cfg: ClusterConfig,
+    tc: &crate::traffic::TrafficConfig,
+) -> Result<(String, ClusterReport)> {
     let mut cluster = Cluster::fh4(replicas, model, cfg)?;
     let reqs = crate::traffic::generate(tc)?;
     let report = cluster.run(reqs)?;
-    Ok(format!(
+    let text = format!(
         "open-loop traffic: {} requests, mix {}, pattern {} @ {:.1} qps peak, seed {}\n{}",
         tc.requests,
         tc.mix.name(),
@@ -2125,7 +2383,8 @@ pub fn demo_serve_traffic(
         tc.arrivals.qps,
         tc.seed,
         report.summary()
-    ))
+    );
+    Ok((text, report))
 }
 
 /// `fenghuang serve --tenants …`: multi-tenant multi-model serving over
@@ -2137,6 +2396,17 @@ pub fn demo_serve_tenants(
     cfg: ClusterConfig,
     tc: &crate::traffic::TrafficConfig,
 ) -> Result<String> {
+    demo_serve_tenants_report(replicas, cfg, tc).map(|(s, _)| s)
+}
+
+/// [`demo_serve_tenants`] variant that also returns the structured
+/// report, for the same exporter plumbing as
+/// [`demo_serve_traffic_report`].
+pub fn demo_serve_tenants_report(
+    replicas: usize,
+    cfg: ClusterConfig,
+    tc: &crate::traffic::TrafficConfig,
+) -> Result<(String, ClusterReport)> {
     let tenants = cfg
         .tenants
         .clone()
@@ -2145,7 +2415,7 @@ pub fn demo_serve_tenants(
     let base = tenants.tenants[0].model.clone();
     let mut cluster = Cluster::fh4(replicas, &base, cfg)?;
     let report = cluster.run(reqs)?;
-    Ok(format!(
+    let text = format!(
         "multi-tenant serving: {} tenants ({}), {} requests, pattern {} @ {:.1} qps peak, seed {}\n{}",
         tenants.tenants.len(),
         tenants.arbitration.name(),
@@ -2154,7 +2424,8 @@ pub fn demo_serve_tenants(
         tc.arrivals.qps,
         tc.seed,
         report.summary()
-    ))
+    );
+    Ok((text, report))
 }
 
 #[cfg(test)]

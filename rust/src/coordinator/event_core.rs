@@ -25,6 +25,7 @@ use super::metrics::Metrics;
 use super::scheduler::SchedMode;
 use crate::error::Result;
 use crate::faults::CompletionEvent;
+use crate::telemetry::{RequestSpan, SpanKind, SpanStart};
 use crate::units::Seconds;
 use std::collections::VecDeque;
 
@@ -37,6 +38,9 @@ struct ActiveSeq {
     len: usize,
     generated: usize,
     ttft: Seconds,
+    /// Prefill attribution captured when the batch ran; `None` for
+    /// injected sequences (mirror of `Active::start`).
+    start: Option<SpanStart>,
 }
 
 /// Handle-based mirror of [`Handoff`](super::scheduler::Handoff): a
@@ -77,6 +81,11 @@ pub struct EventReplica {
     /// healthy runs.
     record_trace: bool,
     trace: Vec<CompletionEvent>,
+    /// Per-request lifecycle spans (DESIGN.md §Telemetry); armed by
+    /// [`Self::with_telemetry`], off (and unallocated) otherwise —
+    /// mirror of `Scheduler::{record_spans, spans}`.
+    record_spans: bool,
+    spans: Vec<RequestSpan>,
 }
 
 impl EventReplica {
@@ -104,6 +113,8 @@ impl EventReplica {
             clock: Seconds::ZERO,
             record_trace: false,
             trace: Vec::new(),
+            record_spans: false,
+            spans: Vec::new(),
         }
     }
 
@@ -117,6 +128,20 @@ impl EventReplica {
     /// Completion trace recorded under [`Self::with_trace`].
     pub fn trace(&self) -> &[CompletionEvent] {
         &self.trace
+    }
+
+    /// Record a [`RequestSpan`] per completed lifecycle phase and charge
+    /// the metrics stall ledger (mirror of `Scheduler::with_telemetry`).
+    /// Default off.
+    pub fn with_telemetry(mut self) -> Self {
+        self.record_spans = true;
+        self
+    }
+
+    /// Drain the recorded spans (cluster report assembly stamps the
+    /// replica index on them).
+    pub fn take_spans(&mut self) -> Vec<RequestSpan> {
+        std::mem::take(&mut self.spans)
     }
 
     /// Admission rule mirror (`Batcher::admits` on the frozen prompt
@@ -223,6 +248,7 @@ impl EventReplica {
                 len: h.len,
                 generated: h.generated,
                 ttft: h.ttft,
+                start: None,
             });
         }
         self.finish_done(arena);
@@ -308,6 +334,10 @@ impl EventReplica {
         // §Multi-Tenant); zero outside the multi-tenant layer.
         let swap: Seconds = batch.iter().map(|&id| arena.get(id).swap_stall).sum();
         let compute = self.backend.prefill_cost(n as u64, padded_len as u64)?;
+        // Span attribution (DESIGN.md §Telemetry): `queue_end` plus the
+        // `elapsed` association below is what `SpanStart::prefill_done`
+        // replays bitwise — keep them in sync (and with scheduler.rs).
+        let queue_end = self.clock;
         let elapsed = compute + fetch + swap;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
@@ -321,6 +351,26 @@ impl EventReplica {
             self.metrics.ttft.record(ttft);
             self.metrics.tokens_generated += 1;
             if self.mode == SchedMode::PrefillOnly {
+                // Mirror of the scheduler's handoff-side span emission.
+                if self.record_spans {
+                    let span = RequestSpan {
+                        id: e.id,
+                        replica: 0,
+                        tenant: e.tenant,
+                        kind: SpanKind::PrefillHandoff,
+                        arrival: e.arrival,
+                        queue_end,
+                        prefill_compute: compute,
+                        prefix_fetch: fetch,
+                        swap_stall: swap,
+                        prefill_done: self.clock,
+                        ttft,
+                        finish: self.clock,
+                        generated: 1,
+                    };
+                    self.metrics.ledger.charge(&span);
+                    self.spans.push(span);
+                }
                 self.handoffs_out.push(LeanHandoff {
                     id,
                     len: e.prompt_len + 1,
@@ -330,7 +380,14 @@ impl EventReplica {
                 });
                 self.handoffs_total += 1;
             } else {
-                self.active.push(ActiveSeq { id, len: e.prompt_len + 1, generated: 1, ttft });
+                let start = Some(SpanStart { queue_end, compute, fetch, swap });
+                self.active.push(ActiveSeq {
+                    id,
+                    len: e.prompt_len + 1,
+                    generated: 1,
+                    ttft,
+                    start,
+                });
             }
         }
         self.finish_done(arena);
@@ -367,6 +424,8 @@ impl EventReplica {
         let completed_work = &mut self.completed_work;
         let record_trace = self.record_trace;
         let trace = &mut self.trace;
+        let record_spans = self.record_spans;
+        let spans = &mut self.spans;
         self.active.retain(|a| {
             let e = arena.get(a.id);
             if a.generated >= e.max_new_tokens {
@@ -401,6 +460,44 @@ impl EventReplica {
                         tenant: e.tenant,
                         ttft: a.ttft,
                     });
+                }
+                if record_spans {
+                    let span = match a.start {
+                        Some(st) => RequestSpan {
+                            id: e.id,
+                            replica: 0,
+                            tenant: e.tenant,
+                            kind: SpanKind::Full,
+                            arrival: e.arrival,
+                            queue_end: st.queue_end,
+                            prefill_compute: st.compute,
+                            prefix_fetch: st.fetch,
+                            swap_stall: st.swap,
+                            prefill_done: st.prefill_done(),
+                            ttft: a.ttft,
+                            finish: clock,
+                            generated: a.generated as u64,
+                        },
+                        // Injected sequence: prefill was attributed on
+                        // the prefill replica's `PrefillHandoff` span.
+                        None => RequestSpan {
+                            id: e.id,
+                            replica: 0,
+                            tenant: e.tenant,
+                            kind: SpanKind::DecodeInjected,
+                            arrival: e.arrival,
+                            queue_end: e.arrival,
+                            prefill_compute: Seconds::ZERO,
+                            prefix_fetch: Seconds::ZERO,
+                            swap_stall: Seconds::ZERO,
+                            prefill_done: e.arrival + a.ttft,
+                            ttft: a.ttft,
+                            finish: clock,
+                            generated: a.generated as u64,
+                        },
+                    };
+                    metrics.ledger.charge(&span);
+                    spans.push(span);
                 }
                 completed_work.push(a.len as u64);
                 false

@@ -268,6 +268,10 @@ pub struct Metrics {
     /// multi-tenant admission paged another tenant's weights onto this
     /// replica (zero on single-model fleets — DESIGN.md §Multi-Tenant).
     pub swap_stall: Seconds,
+    /// Stall-attribution ledger folded from request spans (DESIGN.md
+    /// §Telemetry); stays zero — and silent in the summary — unless the
+    /// serving loop was armed with telemetry.
+    pub ledger: crate::telemetry::StallLedger,
 }
 
 impl Metrics {
@@ -345,6 +349,7 @@ impl Metrics {
         self.paging_stall += other.paging_stall;
         self.fabric_wait += other.fabric_wait;
         self.swap_stall += other.swap_stall;
+        self.ledger.merge(&other.ledger);
         self.clock = self.clock.max(other.clock);
     }
 
@@ -375,6 +380,11 @@ impl Metrics {
         } else {
             String::new()
         };
+        let stalls = if self.ledger.is_zero() {
+            String::new()
+        } else {
+            format!("{}\n", self.ledger.summary_line())
+        };
         let slo = if self.slo_total > 0 {
             format!(
                 "SLO   attainment {:.1}% ({}/{}) | goodput {:.1} tok/s\n",
@@ -387,7 +397,7 @@ impl Metrics {
             String::new()
         };
         format!(
-            "completed {} | rejected {}{shed} | tokens {} | wall {:.3}s{stall}{fabric}{swap}\n{prefix}{slo}\
+            "completed {} | rejected {}{shed} | tokens {} | wall {:.3}s{stall}{fabric}{swap}\n{prefix}{stalls}{slo}\
              TTFT  mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}\n\
              TPOT  mean {:.3} ms  p50 {:.3}  p95 {:.3}  p99 {:.3}\n\
              E2E   mean {:.2} ms  p95 {:.2}\n\
@@ -606,6 +616,37 @@ mod tests {
         assert!(a.summary().contains("model-swap stall"), "{}", a.summary());
         // Silent on single-model fleets where no swap ever happens.
         assert!(!Metrics::default().summary().contains("model-swap"));
+    }
+
+    #[test]
+    fn stall_ledger_merges_and_reports() {
+        use crate::telemetry::{RequestSpan, SpanKind, StallLedger};
+        let span = RequestSpan {
+            id: 1,
+            replica: 0,
+            tenant: 0,
+            kind: SpanKind::Full,
+            arrival: Seconds::ZERO,
+            queue_end: Seconds::ms(2.0),
+            prefill_compute: Seconds::ms(8.0),
+            prefix_fetch: Seconds::ZERO,
+            swap_stall: Seconds::ZERO,
+            prefill_done: Seconds::ms(10.0),
+            ttft: Seconds::ms(10.0),
+            finish: Seconds::ms(20.0),
+            generated: 4,
+        };
+        let mut a = Metrics::default();
+        a.ledger.charge(&span);
+        let mut b = Metrics::default();
+        b.ledger.charge(&span);
+        a.merge(&b);
+        assert_eq!(a.ledger.spans, 2);
+        assert_eq!(a.ledger.ttft_total, Seconds::ms(20.0));
+        assert!(a.summary().contains("stalls (2 spans"), "{}", a.summary());
+        // Telemetry off → zero ledger, silent summary.
+        assert_eq!(Metrics::default().ledger, StallLedger::default());
+        assert!(!Metrics::default().summary().contains("stalls"));
     }
 
     #[test]

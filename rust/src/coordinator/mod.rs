@@ -44,8 +44,9 @@ pub use arena::{ArenaEntry, ReqId, RequestArena};
 pub use batcher::Batcher;
 pub use calendar::{Event, EventCalendar, EventKind};
 pub use cluster::{
-    demo_serve_cluster, demo_serve_tenants, demo_serve_traffic, session_workload, AutoscaleConfig,
-    Cluster, ClusterConfig, ClusterReport,
+    demo_serve_cluster, demo_serve_tenants, demo_serve_tenants_report, demo_serve_traffic,
+    demo_serve_traffic_report, session_workload, AutoscaleConfig, Cluster, ClusterConfig,
+    ClusterReport,
 };
 pub use engine::{Backend, SimBackend};
 pub use event_core::{EventReplica, LeanHandoff};

@@ -29,6 +29,7 @@ use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::error::Result;
 use crate::faults::CompletionEvent;
+use crate::telemetry::{RequestSpan, SpanKind, SpanStart};
 use crate::units::Seconds;
 use std::collections::VecDeque;
 
@@ -68,6 +69,9 @@ struct Active {
     tokens: Vec<i32>,
     ttft: Seconds,
     generated: usize,
+    /// Prefill attribution captured when the batch ran; `None` for
+    /// injected sequences (their prefill happened on another replica).
+    start: Option<SpanStart>,
 }
 
 /// The serving loop coordinator.
@@ -90,6 +94,11 @@ pub struct Scheduler<B: Backend> {
     /// armed it — healthy runs skip the recording branch entirely.
     record_trace: bool,
     trace: Vec<CompletionEvent>,
+    /// Per-request lifecycle spans (DESIGN.md §Telemetry). Off (and
+    /// never allocated) unless [`Self::with_telemetry`] armed it —
+    /// telemetry-off runs skip every recording branch.
+    record_spans: bool,
+    spans: Vec<RequestSpan>,
 }
 
 impl<B: Backend> Scheduler<B> {
@@ -107,6 +116,8 @@ impl<B: Backend> Scheduler<B> {
             clock: Seconds::ZERO,
             record_trace: false,
             trace: Vec::new(),
+            record_spans: false,
+            spans: Vec::new(),
         }
     }
 
@@ -126,6 +137,19 @@ impl<B: Backend> Scheduler<B> {
     /// Completion trace recorded under [`Self::with_trace`].
     pub fn trace(&self) -> &[CompletionEvent] {
         &self.trace
+    }
+
+    /// Record a [`RequestSpan`] per completed lifecycle phase and charge
+    /// the metrics stall ledger (DESIGN.md §Telemetry). Default off.
+    pub fn with_telemetry(mut self) -> Self {
+        self.record_spans = true;
+        self
+    }
+
+    /// Drain the recorded spans (cluster report assembly stamps the
+    /// replica index on them).
+    pub fn take_spans(&mut self) -> Vec<RequestSpan> {
+        std::mem::take(&mut self.spans)
     }
 
     pub fn mode(&self) -> SchedMode {
@@ -191,6 +215,7 @@ impl<B: Backend> Scheduler<B> {
                 tokens: h.tokens,
                 ttft: h.ttft,
                 generated: h.generated,
+                start: None,
             });
         }
         // A handed-off request may already have hit its generation budget
@@ -291,6 +316,11 @@ impl<B: Backend> Scheduler<B> {
         // step. Zero for every request outside the multi-tenant layer.
         let swap: Seconds = batch.requests.iter().map(|r| r.swap_stall).sum();
         let (compute, first_tokens) = self.backend.prefill(&items, batch.padded_len)?;
+        // Span attribution (DESIGN.md §Telemetry) reconstructs the clock
+        // advance below bitwise: `SpanStart::prefill_done` replays
+        // `queue_end + ((compute + fetch) + swap)` — keep the `elapsed`
+        // association in sync with it.
+        let queue_end = self.clock;
         let elapsed = compute + fetch + swap;
         self.clock += elapsed;
         self.metrics.busy += elapsed;
@@ -306,6 +336,28 @@ impl<B: Backend> Scheduler<B> {
             tokens.push(first);
             self.metrics.tokens_generated += 1;
             if self.mode == SchedMode::PrefillOnly {
+                // The prefill side of a handoff is this replica's last
+                // sight of the request: emit its span now (the decode
+                // replica emits the matching `DecodeInjected` span).
+                if self.record_spans {
+                    let span = RequestSpan {
+                        id: req.id,
+                        replica: 0,
+                        tenant: req.tenant,
+                        kind: SpanKind::PrefillHandoff,
+                        arrival: req.arrival,
+                        queue_end,
+                        prefill_compute: compute,
+                        prefix_fetch: fetch,
+                        swap_stall: swap,
+                        prefill_done: self.clock,
+                        ttft,
+                        finish: self.clock,
+                        generated: 1,
+                    };
+                    self.metrics.ledger.charge(&span);
+                    self.spans.push(span);
+                }
                 self.handoffs.push(Handoff {
                     req,
                     tokens,
@@ -314,7 +366,8 @@ impl<B: Backend> Scheduler<B> {
                     done_at: self.clock,
                 });
             } else {
-                self.active.push(Active { req, tokens, ttft, generated: 1 });
+                let start = Some(SpanStart { queue_end, compute, fetch, swap });
+                self.active.push(Active { req, tokens, ttft, generated: 1, start });
             }
         }
         self.finish_done();
@@ -379,6 +432,44 @@ impl<B: Backend> Scheduler<B> {
                         tenant: a.req.tenant,
                         ttft: a.ttft,
                     });
+                }
+                if self.record_spans {
+                    let span = match a.start {
+                        Some(st) => RequestSpan {
+                            id: a.req.id,
+                            replica: 0,
+                            tenant: a.req.tenant,
+                            kind: SpanKind::Full,
+                            arrival: a.req.arrival,
+                            queue_end: st.queue_end,
+                            prefill_compute: st.compute,
+                            prefix_fetch: st.fetch,
+                            swap_stall: st.swap,
+                            prefill_done: st.prefill_done(),
+                            ttft: a.ttft,
+                            finish: clock,
+                            generated: a.generated as u64,
+                        },
+                        // Injected sequence: prefill was attributed on
+                        // the prefill replica's `PrefillHandoff` span.
+                        None => RequestSpan {
+                            id: a.req.id,
+                            replica: 0,
+                            tenant: a.req.tenant,
+                            kind: SpanKind::DecodeInjected,
+                            arrival: a.req.arrival,
+                            queue_end: a.req.arrival,
+                            prefill_compute: Seconds::ZERO,
+                            prefix_fetch: Seconds::ZERO,
+                            swap_stall: Seconds::ZERO,
+                            prefill_done: a.req.arrival + a.ttft,
+                            ttft: a.ttft,
+                            finish: clock,
+                            generated: a.generated as u64,
+                        },
+                    };
+                    self.metrics.ledger.charge(&span);
+                    self.spans.push(span);
                 }
                 self.responses.push(Response {
                     id: a.req.id,
@@ -646,5 +737,31 @@ mod tests {
         assert_eq!(r.ttft, Seconds::ms(12.0), "handoff TTFT is preserved");
         // 3 decode steps after the 50 ms transfer.
         assert!(r.total.as_ms() >= 53.0 - 1e-9, "total {}", r.total.as_ms());
+    }
+
+    #[test]
+    fn telemetry_spans_conserve_ttft_and_leave_the_clock_untouched() {
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut s = Scheduler::new(backend, Batcher::new(4, 64, 4096)).with_telemetry();
+        s.submit_all((0..6).map(|i| req(i, 16, 3, 0.0)).collect());
+        s.run_to_completion().unwrap();
+        assert_eq!(s.metrics.ledger.spans, 6);
+        let spans = s.take_spans();
+        assert_eq!(spans.len(), 6);
+        for sp in &spans {
+            assert!(sp.conserves_ttft(), "span {} drifted", sp.id);
+            assert_eq!(sp.kind, SpanKind::Full);
+            assert_eq!(sp.generated, 3);
+        }
+        // Recording is pure observation: the same run without telemetry
+        // lands on a bit-identical clock and records no ledger.
+        let backend = MockBackend::new(4, Seconds::ms(10.0), Seconds::ms(1.0));
+        let mut off = Scheduler::new(backend, Batcher::new(4, 64, 4096));
+        off.submit_all((0..6).map(|i| req(i, 16, 3, 0.0)).collect());
+        off.run_to_completion().unwrap();
+        assert!(off.metrics.ledger.is_zero());
+        assert!(off.take_spans().is_empty());
+        assert_eq!(off.clock().value().to_bits(), s.clock().value().to_bits());
+        assert_eq!(off.metrics.completed, s.metrics.completed);
     }
 }

@@ -505,6 +505,11 @@ pub struct TenantReport {
     /// Model weights parked in the shared pool because the tenant holds
     /// no replica at end of run (cold model footprint).
     pub pool_bytes_held: Bytes,
+    /// Stall attribution folded from this tenant's request spans
+    /// (DESIGN.md §Telemetry) — explains *why* a tenant's latency looks
+    /// the way it does (queue wait under WFQ vs swap stalls vs decode).
+    /// Zero — and silent in the summary — with telemetry off.
+    pub ledger: crate::telemetry::StallLedger,
 }
 
 impl TenantReport {
@@ -545,9 +550,14 @@ impl TenantReport {
         } else {
             String::new()
         };
+        let stalls = if self.ledger.is_zero() {
+            String::new()
+        } else {
+            format!(" | {}", self.ledger.summary_line())
+        };
         format!(
             "tenant {} ({}, w {:.1}): admitted {} ({} tok) | completed {} | \
-             ttft p99 {:.1} ms{slo}{swaps}{quota}{parked}",
+             ttft p99 {:.1} ms{slo}{swaps}{quota}{parked}{stalls}",
             self.name,
             self.model,
             self.weight,
@@ -825,19 +835,25 @@ mod tests {
             cold_start: LatencyStat::default(),
             cold_start_total: Seconds::ZERO,
             pool_bytes_held: Bytes::ZERO,
+            ledger: crate::telemetry::StallLedger::default(),
         };
         let line = r.summary_line();
         assert!(!line.contains("slo") && !line.contains("swaps"), "{line}");
+        assert!(!line.contains("stalls"), "zero ledger stays silent: {line}");
         r.slo_total = 4;
         r.slo_met = 3;
         r.swaps = 2;
         r.cold_start.record(Seconds::ms(10.0));
         r.shed_quota = 1;
         r.pool_bytes_held = Bytes::gb(2.0);
+        r.ledger.spans = 4;
+        r.ledger.queue_wait = Seconds::ms(8.0);
+        r.ledger.decode = Seconds::ms(40.0);
         let line = r.summary_line();
         assert!(line.contains("slo 75.0%"), "{line}");
         assert!(line.contains("swaps 2"), "{line}");
         assert!(line.contains("quota-shed 1"), "{line}");
         assert!(line.contains("parked in pool"), "{line}");
+        assert!(line.contains("stalls (4 spans"), "{line}");
     }
 }

@@ -283,6 +283,13 @@ impl FabricClock {
         Bytes(self.bytes_total)
     }
 
+    /// Cumulative pool busy time implied by the booked bytes — the
+    /// `busy` field of [`Self::report`] without the percentile sort,
+    /// cheap enough for the telemetry sampler to read every tick.
+    pub fn busy_time(&self) -> Seconds {
+        Seconds(if self.pool_bw > 0.0 { self.bytes_total / self.pool_bw } else { 0.0 })
+    }
+
     pub fn transfers(&self) -> u64 {
         self.transfers
     }

@@ -39,5 +39,5 @@
 pub mod report;
 pub mod schedule;
 
-pub use report::{recovery_stats, CompletionEvent, FaultReport, RecoveryStats};
+pub use report::{attainment_windows, recovery_stats, CompletionEvent, FaultReport, RecoveryStats};
 pub use schedule::{FaultKind, FaultSchedule, FaultSpec, ModuleSel};

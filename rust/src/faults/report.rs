@@ -149,6 +149,49 @@ pub fn recovery_stats(
     }
 }
 
+/// Windowed SLO-attainment time-series over a whole run: cut
+/// `completions` (time-sorted) into `window`-wide slices from t = 0 and
+/// score attainment per slice. Returns `(window_start, attainment)`
+/// rows. Windows with no SLO-carrying completions carry the previous
+/// window's value forward (1.0 before any data), so the series is
+/// plottable without gaps. Used by the telemetry report, which reuses
+/// the fault-recovery completion trace
+/// ([`crate::telemetry::TelemetryReport`]).
+pub fn attainment_windows(
+    completions: &[CompletionEvent],
+    end: Seconds,
+    window: Seconds,
+) -> Vec<(Seconds, f64)> {
+    let w = window.value();
+    debug_assert!(w > 0.0, "attainment window must be positive");
+    let end_s = end.value();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut carry = 1.0f64;
+    let mut k = 0u64;
+    while (k as f64) * w < end_s || k == 0 {
+        let wstart = k as f64 * w;
+        let wend = wstart + w;
+        let mut met = 0u64;
+        let mut total = 0u64;
+        while i < completions.len() && completions[i].at.value() < wend {
+            if let Some(m) = completions[i].slo {
+                total += 1;
+                if m {
+                    met += 1;
+                }
+            }
+            i += 1;
+        }
+        if total > 0 {
+            carry = met as f64 / total as f64;
+        }
+        out.push((Seconds::new(wstart), carry));
+        k += 1;
+    }
+    out
+}
+
 /// Fault observables of one cluster run
 /// ([`crate::coordinator::cluster::ClusterReport`] `faults`).
 #[derive(Debug, Clone)]
@@ -333,6 +376,34 @@ mod tests {
         assert!(long.goodput_lost_tokens > short.goodput_lost_tokens);
         assert!(long.recovery_time.unwrap() > short.recovery_time.unwrap());
         assert!(short.recovered && long.recovered);
+    }
+
+    #[test]
+    fn attainment_windows_carry_forward_and_score() {
+        // [0,0.25): 1.0; [0.25,0.5): empty → carries 1.0;
+        // [0.5,0.75): 0.5; [0.75,1.0): empty → carries 0.5.
+        let trace = vec![
+            ev(0.1, 10, Some(true)),
+            ev(0.2, 10, Some(true)),
+            ev(0.55, 10, Some(true)),
+            ev(0.6, 10, Some(false)),
+        ];
+        let rows = attainment_windows(&trace, Seconds::new(1.0), Seconds::new(0.25));
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0], (Seconds::new(0.0), 1.0));
+        assert_eq!(rows[1], (Seconds::new(0.25), 1.0));
+        assert_eq!(rows[2], (Seconds::new(0.5), 0.5));
+        assert_eq!(rows[3], (Seconds::new(0.75), 0.5));
+    }
+
+    #[test]
+    fn attainment_windows_empty_trace_is_all_ones() {
+        let rows = attainment_windows(&[], Seconds::new(0.5), Seconds::new(0.2));
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|&(_, a)| a == 1.0));
+        // Zero-length runs still yield one (degenerate) window.
+        let rows = attainment_windows(&[], Seconds::ZERO, Seconds::new(0.2));
+        assert_eq!(rows.len(), 1);
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //! * [`faults`] — deterministic fault injection and recovery accounting
 //!   (replica crash/rejoin, TAB module failure, link degradation) with a
 //!   strict bit-identical passthrough when no schedule is armed;
+//! * [`telemetry`] — deterministic observability: per-request span
+//!   traces with a bitwise TTFT stall-attribution ledger, a windowed
+//!   fleet time-series sampler pumped identically by both cluster
+//!   cores, and Chrome-trace / CSV exporters (off = bit-identical
+//!   passthrough);
 //! * [`cli`] — unit-tested flag parsing for the `fenghuang` binary;
 //! * [`traffic`] — deterministic open-loop workload engine: seedable
 //!   RNG, arrival processes (Poisson / bursty / diurnal / replay), and
@@ -53,6 +58,7 @@ pub mod models;
 pub mod paging;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod trace;
 pub mod traffic;
 pub mod units;

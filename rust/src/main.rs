@@ -18,6 +18,8 @@
 //!                    [--faults SPEC]
 //!                    [--tenants SPEC] [--tenant-mode wfq|fifo]
 //!                    [--admit-tokens N]
+//!                    [--telemetry [on|off]] [--telemetry-interval-ms MS]
+//!                    [--trace-out PATH] [--timeseries-out PATH]
 //! fenghuang page     [--model M] [--system S] [--local-gb G] [--policy P]
 //!                    [--window W] [--steps N] [--nmc on] [--page-kv on]
 //!                    [--flash-gb G] [--flash-bw TBPS] [--pool-gb G]
@@ -34,8 +36,8 @@
 use fenghuang::cli::{
     check_contention_fabric, check_disaggregate_replicas, cli_err, flag, parse_disaggregate,
     parse_fabric_contention, parse_faults, parse_flags, parse_flash, parse_prefix_cache,
-    parse_tenants, positive, switch, system_by_name, PAGE_BARE, PAGE_FLAGS, SERVE_BARE,
-    SERVE_FLAGS, SIMULATE_FLAGS, TRAFFIC_FLAGS,
+    parse_telemetry, parse_tenants, positive, switch, system_by_name, PAGE_BARE, PAGE_FLAGS,
+    SERVE_BARE, SERVE_FLAGS, SIMULATE_FLAGS, TRAFFIC_FLAGS,
 };
 use fenghuang::coordinator::router::Policy;
 use fenghuang::coordinator::PrefixCacheConfig;
@@ -70,6 +72,9 @@ USAGE:
                      multi-tenant serving over one shared pool:
                      [--tenants 'name/model[/weight=W][/quota=Q][/slo-scale=S][/mix=M],…']
                      [--tenant-mode wfq|fifo] [--admit-tokens N]
+                     telemetry (span traces, stall ledger, time-series):
+                     [--telemetry [on|off]] [--telemetry-interval-ms 100]
+                     [--trace-out trace.json] [--timeseries-out series.csv]
   fenghuang page     [--model gpt3] [--system fh4-1.5xm|fh4-2.0xm] [--remote-tbps 4.8]
                      [--batch 8] [--phase decode|prefill] [--kv-len 4608] [--prompt 4096]
                      [--local-gb 12|unlimited] [--policy minimal|lru|heat] [--window 10]
@@ -243,6 +248,7 @@ fn run_serve_traffic(
         )));
     }
     let seed: u64 = flag(f, "seed", 42)?;
+    let telemetry = parse_telemetry(f)?;
     let autoscale = if switch(f, "autoscale")? {
         let min: usize = positive(f, "autoscale-min", 1)?;
         Some(AutoscaleConfig { min_replicas: min, ..Default::default() })
@@ -292,12 +298,27 @@ fn run_serve_traffic(
         flash,
         faults,
         tenants,
+        telemetry,
     };
     let total = disaggregate.map(|(p, d)| p + d).unwrap_or(replicas);
-    if cfg.tenants.is_some() {
-        println!("{}", fenghuang::coordinator::demo_serve_tenants(total, cfg, &tc)?);
+    let multi_tenant = cfg.tenants.is_some();
+    let (text, report) = if multi_tenant {
+        fenghuang::coordinator::demo_serve_tenants_report(total, cfg, &tc)?
     } else {
-        println!("{}", fenghuang::coordinator::demo_serve_traffic(m, total, cfg, &tc)?);
+        fenghuang::coordinator::demo_serve_traffic_report(m, total, cfg, &tc)?
+    };
+    println!("{text}");
+    if let Some(tel) = &report.telemetry {
+        if let Some(path) = f.get("trace-out") {
+            std::fs::write(path, fenghuang::telemetry::export::chrome_trace(tel))
+                .map_err(|e| cli_err(format!("--trace-out {path}: {e}")))?;
+            println!("wrote Chrome trace (load in Perfetto / chrome://tracing): {path}");
+        }
+        if let Some(path) = f.get("timeseries-out") {
+            std::fs::write(path, fenghuang::telemetry::export::timeseries_csv(tel))
+                .map_err(|e| cli_err(format!("--timeseries-out {path}: {e}")))?;
+            println!("wrote telemetry time-series CSV: {path}");
+        }
     }
     Ok(())
 }

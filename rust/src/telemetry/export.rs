@@ -1,0 +1,254 @@
+//! Telemetry exporters (DESIGN.md §Telemetry): Chrome trace-event JSON
+//! (Perfetto / `chrome://tracing` loadable) and the time-series CSV.
+//!
+//! Trace schema: one process (`pid` 0, "fenghuang fleet") with one
+//! thread track per replica. Each request span renders as up to three
+//! `"X"` complete events on its replica's track — `queue`
+//! (arrival → batch formation), `prefill` (batch formation → first
+//! token, with the compute/fetch/swap attribution in `args`) and
+//! `decode` (first → last token). Sampler gauges render as `"C"`
+//! counter events. Timestamps are virtual-clock microseconds.
+
+use super::{SpanKind, TelemetryReport};
+use crate::analysis::csv;
+use std::fmt::Write as _;
+
+fn us(s: crate::units::Seconds) -> f64 {
+    s.value() * 1e6
+}
+
+fn push_event(out: &mut String, body: &str, first: &mut bool) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+    out.push_str("    ");
+    out.push_str(body);
+}
+
+/// Render the report as Chrome trace-event JSON
+/// (`serve --trace-out t.json`).
+pub fn chrome_trace(report: &TelemetryReport) -> String {
+    let mut out = String::from("{\"traceEvents\": [\n");
+    let mut first = true;
+    push_event(
+        &mut out,
+        "{\"ph\": \"M\", \"pid\": 0, \"name\": \"process_name\", \
+         \"args\": {\"name\": \"fenghuang fleet\"}}",
+        &mut first,
+    );
+    let mut replicas: Vec<usize> = report.spans.iter().map(|s| s.replica).collect();
+    replicas.sort_unstable();
+    replicas.dedup();
+    for r in &replicas {
+        push_event(
+            &mut out,
+            &format!(
+                "{{\"ph\": \"M\", \"pid\": 0, \"tid\": {r}, \"name\": \"thread_name\", \
+                 \"args\": {{\"name\": \"replica {r}\"}}}}"
+            ),
+            &mut first,
+        );
+    }
+    for s in &report.spans {
+        let tid = s.replica;
+        if s.kind != SpanKind::DecodeInjected {
+            let queue = us(s.queue_wait());
+            if queue > 0.0 {
+                push_event(
+                    &mut out,
+                    &format!(
+                        "{{\"ph\": \"X\", \"pid\": 0, \"tid\": {tid}, \"name\": \"queue\", \
+                         \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"req\": {}}}}}",
+                        us(s.arrival),
+                        queue,
+                        s.id
+                    ),
+                    &mut first,
+                );
+            }
+            push_event(
+                &mut out,
+                &format!(
+                    "{{\"ph\": \"X\", \"pid\": 0, \"tid\": {tid}, \"name\": \"prefill\", \
+                     \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"req\": {}, \
+                     \"compute_ms\": {:.6}, \"fetch_ms\": {:.6}, \"swap_ms\": {:.6}, \
+                     \"ttft_ms\": {:.6}, \"tenant\": {}}}}}",
+                    us(s.queue_end),
+                    us(s.prefill_done - s.queue_end),
+                    s.id,
+                    s.prefill_compute.as_ms(),
+                    s.prefix_fetch.as_ms(),
+                    s.swap_stall.as_ms(),
+                    s.ttft.as_ms(),
+                    s.tenant
+                ),
+                &mut first,
+            );
+        }
+        let decode = us(s.decode_time());
+        if s.kind != SpanKind::PrefillHandoff && decode > 0.0 {
+            push_event(
+                &mut out,
+                &format!(
+                    "{{\"ph\": \"X\", \"pid\": 0, \"tid\": {tid}, \"name\": \"decode\", \
+                     \"ts\": {:.3}, \"dur\": {:.3}, \"args\": {{\"req\": {}, \
+                     \"generated\": {}}}}}",
+                    us(s.prefill_done),
+                    decode,
+                    s.id,
+                    s.generated
+                ),
+                &mut first,
+            );
+        }
+    }
+    for sample in &report.samples {
+        let ts = us(sample.at);
+        for (name, v) in [
+            ("pending", sample.pending as f64),
+            ("routed_tokens", sample.routed_tokens as f64),
+            ("active_replicas", sample.active_replicas as f64),
+            ("pool_bytes", sample.pool_bytes),
+        ] {
+            push_event(
+                &mut out,
+                &format!(
+                    "{{\"ph\": \"C\", \"pid\": 0, \"name\": \"{name}\", \"ts\": {ts:.3}, \
+                     \"args\": {{\"{name}\": {v}}}}}"
+                ),
+                &mut first,
+            );
+        }
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Render the sampler series as CSV (`serve --timeseries-out t.csv`),
+/// one row per tick; the rolling-attainment column joins the fault
+/// layer's window series by index (both are `interval`-wide from t=0).
+pub fn timeseries_csv(report: &TelemetryReport) -> String {
+    let rows: Vec<String> = report
+        .samples
+        .iter()
+        .enumerate()
+        .map(|(k, s)| {
+            let mut row = String::new();
+            let _ = write!(
+                row,
+                "{:.6},{},{},{},{},{},{},{},{},{},{:.4},{:.0},{:.6}",
+                s.at.value(),
+                s.active_replicas,
+                s.routed_tokens,
+                s.pending,
+                s.completed,
+                s.tokens_generated,
+                s.shed,
+                s.rejected,
+                s.slo_total,
+                s.slo_met,
+                report.attainment.get(k).map(|&(_, a)| a).unwrap_or(1.0),
+                s.pool_bytes,
+                s.fabric_busy.value(),
+            );
+            row
+        })
+        .collect();
+    csv::table(
+        "t_s,active_replicas,routed_tokens,pending,completed,tokens_generated,\
+         shed,rejected,slo_total,slo_met,rolling_attainment,pool_bytes,fabric_busy_s",
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{RequestSpan, StallLedger, TelemetrySample, TelemetrySampler};
+    use crate::units::Seconds;
+
+    fn report() -> TelemetryReport {
+        let mk = |id: u64, kind: SpanKind| {
+            let arrival = Seconds::ms(id as f64);
+            let queue_end = arrival + Seconds::ms(1.0);
+            let done = queue_end + Seconds::ms(5.0);
+            RequestSpan {
+                id,
+                replica: (id % 2) as usize,
+                tenant: 0,
+                kind,
+                arrival,
+                queue_end,
+                prefill_compute: Seconds::ms(5.0),
+                prefix_fetch: Seconds::ZERO,
+                swap_stall: Seconds::ZERO,
+                prefill_done: done,
+                ttft: done - arrival,
+                finish: if kind == SpanKind::PrefillHandoff { done } else { done + Seconds::ms(8.0) },
+                generated: if kind == SpanKind::PrefillHandoff { 1 } else { 4 },
+            }
+        };
+        let mut sampler = TelemetrySampler::new(Seconds::ms(10.0));
+        for k in 1..=2u64 {
+            sampler.record(TelemetrySample {
+                at: Seconds::ms(10.0 * k as f64),
+                active_replicas: 2,
+                routed_tokens: 64 * k,
+                pending: 3,
+                completed: k,
+                tokens_generated: 4 * k,
+                shed: 0,
+                rejected: 0,
+                slo_total: k,
+                slo_met: k,
+                pool_bytes: 0.0,
+                fabric_busy: Seconds::ZERO,
+            });
+        }
+        TelemetryReport {
+            interval: Seconds::ms(10.0),
+            spans: vec![
+                mk(0, SpanKind::Full),
+                mk(1, SpanKind::PrefillHandoff),
+                mk(2, SpanKind::DecodeInjected),
+            ],
+            samples: sampler.samples,
+            attainment: vec![(Seconds::ZERO, 1.0), (Seconds::ms(10.0), 1.0)],
+            ledger: StallLedger::default(),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_balanced_structure_and_expected_tracks() {
+        let t = chrome_trace(&report());
+        assert!(t.starts_with("{\"traceEvents\": ["));
+        assert!(t.trim_end().ends_with("]}"));
+        assert_eq!(t.matches('{').count(), t.matches('}').count(), "unbalanced braces");
+        assert_eq!(t.matches('[').count(), t.matches(']').count());
+        assert!(t.contains("\"thread_name\""));
+        assert!(t.contains("\"prefill\"") && t.contains("\"decode\"") && t.contains("\"queue\""));
+        // The handoff span must not render a decode slice, the injected
+        // span must not render a prefill slice.
+        assert_eq!(t.matches("\"name\": \"prefill\"").count(), 2);
+        assert_eq!(t.matches("\"name\": \"decode\"").count(), 2);
+        assert!(t.contains("\"ph\": \"C\""), "counter tracks missing");
+        // No trailing comma before the closing bracket.
+        assert!(!t.contains(",\n]"));
+    }
+
+    #[test]
+    fn timeseries_csv_is_rectangular() {
+        let csv = timeseries_csv(&report());
+        let mut lines = csv.lines();
+        let cols = lines.next().unwrap().split(',').count();
+        assert_eq!(cols, 13);
+        let mut rows = 0;
+        for l in lines {
+            assert_eq!(l.split(',').count(), cols, "ragged: {l}");
+            rows += 1;
+        }
+        assert_eq!(rows, 2);
+        assert!(csv.contains("rolling_attainment"));
+    }
+}

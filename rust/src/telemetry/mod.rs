@@ -1,0 +1,464 @@
+//! Deterministic observability layer (DESIGN.md §Telemetry).
+//!
+//! Three pillars, driven identically by both cluster cores:
+//!
+//! * **Request span traces** — every completed request carries a causal
+//!   lifecycle breakdown (queue wait → prefill compute → prefix fetch →
+//!   swap stall → decode), recorded by the serving loops as pure copies
+//!   of values the hot path already computed. The per-span conservation
+//!   identity is *bitwise*: `prefill_done = queue_end + ((compute +
+//!   fetch) + swap)` in exactly the association the serving loops used
+//!   for `elapsed`, and `ttft = prefill_done − arrival` — so the span
+//!   components provably sum to the measured TTFT
+//!   (`rust/tests/telemetry_props.rs`).
+//! * **Windowed time-series** — a [`TelemetrySampler`] pumped by the
+//!   `TelemetryTick` event class / the stepping loop's merged tick,
+//!   recording fleet gauges per interval (active replicas, queue depth,
+//!   cumulative counters, pool bytes, fabric busy time).
+//! * **A fleet stall-attribution ledger** — [`StallLedger`], embedded
+//!   in `Metrics` and merged per replica and per tenant, totalling
+//!   where every second of request latency went.
+//!
+//! **Passthrough proof obligation:** with telemetry off nothing here is
+//! constructed, no tick is scheduled, and the serving loops take no
+//! telemetry branch that touches an `f64` on the clock/metrics path —
+//! so a telemetry-off run is bit-identical to the pre-telemetry
+//! simulator. A telemetry-ON run leaves every *count* (completions,
+//! tokens, SLO verdicts, shed/rejected) untouched — recording is pure
+//! observation — though like autoscale ticks the sampling tick can
+//! stretch an idle replica's clock to the tick instant, so makespans
+//! may differ from the off run. Both pinned by
+//! `rust/tests/telemetry_props.rs` and `benches/telemetry_overhead.rs`.
+
+pub mod export;
+
+use crate::error::{FhError, Result};
+use crate::units::Seconds;
+
+/// Telemetry knobs (`ClusterConfig::telemetry`; CLI `serve --telemetry
+/// [--telemetry-interval-ms N]`). `None` = subsystem fully dormant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Sampling interval of the time-series tick (also the window width
+    /// of the rolling-attainment curve).
+    pub interval: Seconds,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { interval: Seconds::ms(100.0) }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.interval.value() <= 0.0 {
+            return Err(FhError::Config(format!(
+                "telemetry interval must be positive (got {} s)",
+                self.interval.value()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Where a span's lifecycle was observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole lifecycle on one replica (prefill + decode).
+    Full,
+    /// Prefill-only side of a disaggregated handoff: the span ends at
+    /// the handoff instant (`finish = prefill_done`, `generated = 1`).
+    PrefillHandoff,
+    /// Decode side of a handoff: prefill components are zero (they were
+    /// charged on the prefill replica), `ttft` is carried over, and
+    /// `prefill_done` is reconstructed as `arrival + ttft`.
+    DecodeInjected,
+}
+
+/// Prefill-step attribution captured by the serving loops when a batch
+/// completes: pure copies of the values the hot path already computed,
+/// in the exact shape needed to reconstruct the clock advance bitwise.
+///
+/// The serving loops advance their clock by `elapsed = compute + fetch
+/// + swap` (left-to-right association — part of the bit-identity
+/// contract); [`SpanStart::prefill_done`] replays that association.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpanStart {
+    /// Replica clock just before the prefill batch ran (end of this
+    /// request's queue wait).
+    pub queue_end: Seconds,
+    /// Batch prefill compute (shared by every request in the batch —
+    /// TTFT semantics charge each request the whole batch cost).
+    pub compute: Seconds,
+    /// Batch prefix-cache fetch stall (serial, batch-summed).
+    pub fetch: Seconds,
+    /// Batch cold-start model-swap stall (serial, batch-summed).
+    pub swap: Seconds,
+}
+
+impl SpanStart {
+    /// Replica clock at prefill completion, reconstructed in the serving
+    /// loops' exact f64 association.
+    pub fn prefill_done(&self) -> Seconds {
+        self.queue_end + ((self.compute + self.fetch) + self.swap)
+    }
+}
+
+/// One completed request's lifecycle trace.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestSpan {
+    pub id: u64,
+    /// Replica the span was observed on (stamped at report drain).
+    pub replica: usize,
+    pub tenant: usize,
+    pub kind: SpanKind,
+    pub arrival: Seconds,
+    /// Clock at batch formation: `queue_end − arrival` is the admit
+    /// queue wait.
+    pub queue_end: Seconds,
+    pub prefill_compute: Seconds,
+    pub prefix_fetch: Seconds,
+    pub swap_stall: Seconds,
+    /// Clock at prefill completion (first token emitted).
+    pub prefill_done: Seconds,
+    /// Measured time-to-first-token, exactly as the metrics recorded it.
+    pub ttft: Seconds,
+    /// Clock at the last token (= `prefill_done` for `PrefillHandoff`).
+    pub finish: Seconds,
+    pub generated: u64,
+}
+
+impl RequestSpan {
+    pub fn queue_wait(&self) -> Seconds {
+        self.queue_end - self.arrival
+    }
+
+    pub fn decode_time(&self) -> Seconds {
+        self.finish - self.prefill_done
+    }
+
+    /// Bitwise conservation: the span components reconstruct the
+    /// measured TTFT exactly (no tolerance). Holds for every span whose
+    /// prefill was observed in place; `DecodeInjected` spans carry
+    /// their prefill attribution on the matching `PrefillHandoff` span.
+    pub fn conserves_ttft(&self) -> bool {
+        if self.kind == SpanKind::DecodeInjected {
+            return true;
+        }
+        let start = SpanStart {
+            queue_end: self.queue_end,
+            compute: self.prefill_compute,
+            fetch: self.prefix_fetch,
+            swap: self.swap_stall,
+        };
+        let done = start.prefill_done();
+        done.value().to_bits() == self.prefill_done.value().to_bits()
+            && (done - self.arrival).value().to_bits() == self.ttft.value().to_bits()
+    }
+}
+
+/// Fleet-level stall-attribution totals: where request latency went.
+/// Lives in `Metrics` (merged per replica) and in `TenantReport`
+/// (folded from the tenant's spans).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StallLedger {
+    /// Spans folded in.
+    pub spans: u64,
+    /// Σ arrival → batch formation.
+    pub queue_wait: Seconds,
+    /// Σ prefill compute charged (batch cost per request — the TTFT
+    /// convention).
+    pub prefill_exec: Seconds,
+    /// Σ prefix-cache fetch stalls charged.
+    pub prefix_fetch: Seconds,
+    /// Σ cold-start model-swap stalls charged.
+    pub swap_stall: Seconds,
+    /// Σ prefill completion → last token.
+    pub decode: Seconds,
+    /// Σ measured TTFT over the charged spans.
+    pub ttft_total: Seconds,
+    /// Σ measured end-to-end latency over finishing spans.
+    pub e2e_total: Seconds,
+}
+
+impl StallLedger {
+    pub fn is_zero(&self) -> bool {
+        self.spans == 0
+    }
+
+    /// Fold one span in. Prefill attribution comes from `Full` and
+    /// `PrefillHandoff` spans; decode/e2e from `Full` and
+    /// `DecodeInjected` spans — so in a disaggregated fleet each phase
+    /// is charged exactly once.
+    pub fn charge(&mut self, s: &RequestSpan) {
+        self.spans += 1;
+        if s.kind != SpanKind::DecodeInjected {
+            self.queue_wait += s.queue_wait();
+            self.prefill_exec += s.prefill_compute;
+            self.prefix_fetch += s.prefix_fetch;
+            self.swap_stall += s.swap_stall;
+            self.ttft_total += s.ttft;
+        }
+        if s.kind != SpanKind::PrefillHandoff {
+            self.decode += s.decode_time();
+            self.e2e_total += s.finish - s.arrival;
+        }
+    }
+
+    pub fn merge(&mut self, other: &StallLedger) {
+        self.spans += other.spans;
+        self.queue_wait += other.queue_wait;
+        self.prefill_exec += other.prefill_exec;
+        self.prefix_fetch += other.prefix_fetch;
+        self.swap_stall += other.swap_stall;
+        self.decode += other.decode;
+        self.ttft_total += other.ttft_total;
+        self.e2e_total += other.e2e_total;
+    }
+
+    /// One human-readable attribution line, shared by the fleet summary
+    /// (`Metrics::summary`) and the per-tenant summary
+    /// (`TenantReport::summary_line`) so the formats can't drift.
+    pub fn summary_line(&self) -> String {
+        if self.is_zero() {
+            return String::new();
+        }
+        let n = self.spans as f64;
+        let opt = |label: &str, v: Seconds| {
+            if v.value() > 0.0 {
+                format!(" {label} {:.1}", v.as_ms() / n)
+            } else {
+                String::new()
+            }
+        };
+        format!(
+            "stalls ({} spans, ms/req): queue {:.1} prefill {:.1}{}{} decode {:.1} | \
+             ttft mean {:.1} e2e mean {:.1}",
+            self.spans,
+            self.queue_wait.as_ms() / n,
+            self.prefill_exec.as_ms() / n,
+            opt("fetch", self.prefix_fetch),
+            opt("swap", self.swap_stall),
+            self.decode.as_ms() / n,
+            self.ttft_total.as_ms() / n,
+            self.e2e_total.as_ms() / n,
+        )
+    }
+}
+
+/// One fleet gauge snapshot, taken at a `TelemetryTick` by both cores
+/// after advancing every replica to the tick instant (a global sync
+/// point, so each field is bit-identical across cores — pinned by
+/// `rust/tests/event_core_equiv.rs`).
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetrySample {
+    pub at: Seconds,
+    /// Active (scaled-in, alive) replicas.
+    pub active_replicas: usize,
+    /// Router's outstanding routed work, in tokens.
+    pub routed_tokens: u64,
+    /// Σ queued + in-flight requests over the fleet.
+    pub pending: u64,
+    /// Cumulative completions so far.
+    pub completed: u64,
+    /// Cumulative tokens generated so far.
+    pub tokens_generated: u64,
+    /// Cumulative front-door sheds so far.
+    pub shed: u64,
+    /// Cumulative rejections so far.
+    pub rejected: u64,
+    /// Cumulative SLO-scored completions so far.
+    pub slo_total: u64,
+    /// Cumulative SLO-met completions so far.
+    pub slo_met: u64,
+    /// Prefix-cache bytes resident in the pool (0 with the cache off).
+    pub pool_bytes: f64,
+    /// Fabric busy seconds booked so far (0 with contention off).
+    pub fabric_busy: Seconds,
+}
+
+/// The windowed time-series recorder (one per cluster run).
+#[derive(Debug, Clone)]
+pub struct TelemetrySampler {
+    pub interval: Seconds,
+    pub samples: Vec<TelemetrySample>,
+}
+
+impl TelemetrySampler {
+    pub fn new(interval: Seconds) -> Self {
+        TelemetrySampler { interval, samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, s: TelemetrySample) {
+        debug_assert!(
+            self.samples.last().map_or(true, |p| p.at <= s.at),
+            "telemetry samples must be recorded in time order"
+        );
+        self.samples.push(s);
+    }
+}
+
+/// Telemetry slice of a finished run (`ClusterReport::telemetry`).
+#[derive(Debug, Clone)]
+pub struct TelemetryReport {
+    pub interval: Seconds,
+    /// Per-request lifecycle spans, in replica-index then completion
+    /// order (deterministic across cores).
+    pub spans: Vec<RequestSpan>,
+    /// Interval gauges, in tick order.
+    pub samples: Vec<TelemetrySample>,
+    /// Rolling SLO attainment per interval-wide window, computed from
+    /// the completion trace by the fault layer's window slicer
+    /// (`faults::report::attainment_windows` — the same windows
+    /// recovery accounting scores dips with). `(window start,
+    /// attainment)`; empty windows carry the last value forward.
+    pub attainment: Vec<(Seconds, f64)>,
+    /// Fleet stall-attribution totals (also merged into
+    /// `Metrics::ledger`).
+    pub ledger: StallLedger,
+}
+
+impl TelemetryReport {
+    /// One line for `ClusterReport::summary` (the ledger prints through
+    /// the fleet metrics summary, not here).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "telemetry: {} spans | {} samples @ {:.0} ms{}",
+            self.spans.len(),
+            self.samples.len(),
+            self.interval.as_ms(),
+            match self.attainment.last() {
+                Some((_, a)) if self.samples.iter().any(|s| s.slo_total > 0) =>
+                    format!(" | rolling slo {:.1}%", 100.0 * a),
+                _ => String::new(),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_span() -> RequestSpan {
+        let start = SpanStart {
+            queue_end: Seconds::ms(10.0),
+            compute: Seconds::ms(7.0),
+            fetch: Seconds::ms(2.0),
+            swap: Seconds::ms(1.0),
+        };
+        let arrival = Seconds::ms(4.0);
+        let done = start.prefill_done();
+        RequestSpan {
+            id: 42,
+            replica: 1,
+            tenant: 0,
+            kind: SpanKind::Full,
+            arrival,
+            queue_end: start.queue_end,
+            prefill_compute: start.compute,
+            prefix_fetch: start.fetch,
+            swap_stall: start.swap,
+            prefill_done: done,
+            ttft: done - arrival,
+            finish: done + Seconds::ms(30.0),
+            generated: 16,
+        }
+    }
+
+    #[test]
+    fn config_validates_interval() {
+        assert!(TelemetryConfig::default().validate().is_ok());
+        assert!(TelemetryConfig { interval: Seconds::ZERO }.validate().is_err());
+        assert!(TelemetryConfig { interval: Seconds::new(-1.0) }.validate().is_err());
+    }
+
+    #[test]
+    fn span_conservation_is_bitwise() {
+        let s = full_span();
+        assert!(s.conserves_ttft());
+        // Any drifted component breaks the identity.
+        let mut bad = s;
+        bad.prefill_compute += Seconds::new(1e-13);
+        assert!(!bad.conserves_ttft());
+        // An injected decode span carries no prefill attribution.
+        let mut inj = s;
+        inj.kind = SpanKind::DecodeInjected;
+        inj.prefill_compute = Seconds::ZERO;
+        assert!(inj.conserves_ttft());
+    }
+
+    #[test]
+    fn ledger_charges_each_phase_once_across_a_handoff() {
+        let s = full_span();
+        let mut pre = s;
+        pre.kind = SpanKind::PrefillHandoff;
+        pre.finish = pre.prefill_done;
+        pre.generated = 1;
+        let mut inj = s;
+        inj.kind = SpanKind::DecodeInjected;
+        inj.prefill_compute = Seconds::ZERO;
+        inj.prefix_fetch = Seconds::ZERO;
+        inj.swap_stall = Seconds::ZERO;
+        inj.queue_end = inj.arrival;
+        inj.prefill_done = inj.arrival + inj.ttft;
+
+        let mut whole = StallLedger::default();
+        whole.charge(&s);
+        let mut split = StallLedger::default();
+        split.charge(&pre);
+        split.charge(&inj);
+        assert_eq!(split.spans, 2);
+        assert_eq!(split.prefill_exec, whole.prefill_exec);
+        assert_eq!(split.ttft_total, whole.ttft_total);
+        assert!((split.decode.value() - whole.decode.value()).abs() < 1e-12);
+        assert!(split.queue_wait == whole.queue_wait);
+    }
+
+    #[test]
+    fn ledger_merge_adds_fields_and_summary_gates_segments() {
+        let mut a = StallLedger::default();
+        a.charge(&full_span());
+        let mut b = StallLedger::default();
+        b.charge(&full_span());
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.spans, 2);
+        assert_eq!(m.ttft_total, a.ttft_total + b.ttft_total);
+        let line = m.summary_line();
+        assert!(line.contains("queue") && line.contains("fetch") && line.contains("swap"), "{line}");
+        // Zero fetch/swap segments disappear.
+        let mut plain = full_span();
+        plain.prefix_fetch = Seconds::ZERO;
+        plain.swap_stall = Seconds::ZERO;
+        let mut l = StallLedger::default();
+        l.charge(&plain);
+        let line = l.summary_line();
+        assert!(!line.contains("fetch") && !line.contains("swap"), "{line}");
+        assert_eq!(StallLedger::default().summary_line(), "");
+    }
+
+    #[test]
+    fn sampler_records_in_order() {
+        let mut s = TelemetrySampler::new(Seconds::ms(10.0));
+        for k in 0..3u64 {
+            s.record(TelemetrySample {
+                at: Seconds::ms(10.0) * (k + 1) as f64,
+                active_replicas: 2,
+                routed_tokens: 100 * k,
+                pending: k,
+                completed: k,
+                tokens_generated: 10 * k,
+                shed: 0,
+                rejected: 0,
+                slo_total: k,
+                slo_met: k,
+                pool_bytes: 0.0,
+                fabric_busy: Seconds::ZERO,
+            });
+        }
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.samples.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+}

@@ -180,13 +180,77 @@ fn observe(r: &ClusterReport) -> Vec<(String, u64)> {
             ] {
                 bits(&format!("tenant[{i}].{k}"), v, &mut out);
             }
+            ledger_bits(&format!("tenant[{i}].ledger"), &t.ledger, &mut out);
             stat_bits(&format!("tenant[{i}].ttft"), &t.ttft, &mut out);
             stat_bits(&format!("tenant[{i}].cold_start"), &t.cold_start, &mut out);
         }
     } else {
         out.push(("tenants.none".to_string(), 0));
     }
+    if let Some(tel) = &r.telemetry {
+        bits("tel.interval", tel.interval.value(), &mut out);
+        ledger_bits("tel.ledger", &tel.ledger, &mut out);
+        bits("tel.spans", tel.spans.len() as f64, &mut out);
+        for (i, s) in tel.spans.iter().enumerate() {
+            out.push((format!("tel.span[{i}].kind:{:?}", s.kind), s.id));
+            bits(&format!("tel.span[{i}].replica"), s.replica as f64, &mut out);
+            bits(&format!("tel.span[{i}].tenant"), s.tenant as f64, &mut out);
+            for (k, v) in [
+                ("arrival", s.arrival.value()),
+                ("queue_end", s.queue_end.value()),
+                ("prefill_compute", s.prefill_compute.value()),
+                ("prefix_fetch", s.prefix_fetch.value()),
+                ("swap_stall", s.swap_stall.value()),
+                ("prefill_done", s.prefill_done.value()),
+                ("ttft", s.ttft.value()),
+                ("finish", s.finish.value()),
+                ("generated", s.generated as f64),
+            ] {
+                bits(&format!("tel.span[{i}].{k}"), v, &mut out);
+            }
+        }
+        bits("tel.samples", tel.samples.len() as f64, &mut out);
+        for (i, s) in tel.samples.iter().enumerate() {
+            for (k, v) in [
+                ("at", s.at.value()),
+                ("active_replicas", s.active_replicas as f64),
+                ("routed_tokens", s.routed_tokens as f64),
+                ("pending", s.pending as f64),
+                ("completed", s.completed as f64),
+                ("tokens_generated", s.tokens_generated as f64),
+                ("shed", s.shed as f64),
+                ("rejected", s.rejected as f64),
+                ("slo_total", s.slo_total as f64),
+                ("slo_met", s.slo_met as f64),
+                ("pool_bytes", s.pool_bytes),
+                ("fabric_busy", s.fabric_busy.value()),
+            ] {
+                bits(&format!("tel.sample[{i}].{k}"), v, &mut out);
+            }
+        }
+        for (i, &(t, a)) in tel.attainment.iter().enumerate() {
+            bits(&format!("tel.att[{i}].t"), t.value(), &mut out);
+            bits(&format!("tel.att[{i}].a"), a, &mut out);
+        }
+    } else {
+        out.push(("telemetry.none".to_string(), 0));
+    }
     out
+}
+
+fn ledger_bits(prefix: &str, l: &fenghuang::telemetry::StallLedger, out: &mut Vec<(String, u64)>) {
+    for (k, v) in [
+        ("spans", l.spans as f64),
+        ("queue_wait", l.queue_wait.value()),
+        ("prefill_exec", l.prefill_exec.value()),
+        ("prefix_fetch", l.prefix_fetch.value()),
+        ("swap_stall", l.swap_stall.value()),
+        ("decode", l.decode.value()),
+        ("ttft_total", l.ttft_total.value()),
+        ("e2e_total", l.e2e_total.value()),
+    ] {
+        bits(&format!("{prefix}.{k}"), v, out);
+    }
 }
 
 /// Run the same (cluster-config, workload) pair through both cores and
@@ -620,6 +684,68 @@ fn equiv_tenants_burst_autoscale() {
         },
         3,
         reqs,
+    );
+}
+
+#[test]
+fn equiv_telemetry_elastic_kv_pressure() {
+    // Telemetry sampling across autoscaler ticks and KV paging: the
+    // sampler's tick interleaves with scale ticks in the calendar and
+    // the merged stepping loop; every sample gauge, span field and
+    // ledger total must replay bit-identically in both cores.
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Diurnal,
+            qps: 10.0,
+            diurnal_period: Seconds::new(8.0),
+            diurnal_floor: 0.05,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat").unwrap(),
+        requests: 48,
+        seed: 7,
+        max_prompt: 4096,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "telemetry-elastic",
+        ClusterConfig {
+            autoscale: Some(AutoscaleConfig { target_tokens: 2048, ..Default::default() }),
+            kv_budget: Some(Bytes::gb(2.0)),
+            telemetry: Some(fenghuang::telemetry::TelemetryConfig {
+                interval: Seconds::ms(50.0),
+            }),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
+    );
+}
+
+#[test]
+fn equiv_telemetry_faulted_prefix() {
+    // Telemetry over a faulted run with the shared prefix cache: tick
+    // class order against fault events, evacuation-perturbed spans, and
+    // the rolling-attainment windows over the completion trace.
+    let tc = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 32,
+        seed: 17,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    assert_equivalent(
+        "telemetry-faulted",
+        ClusterConfig {
+            prefix_cache: Some(PrefixCacheConfig::default()),
+            faults: fault_spec("crash@0.3:r1:repair0.2,module@0.6:hot", 4),
+            telemetry: Some(fenghuang::telemetry::TelemetryConfig {
+                interval: Seconds::ms(50.0),
+            }),
+            ..Default::default()
+        },
+        4,
+        traffic_reqs(&tc),
     );
 }
 

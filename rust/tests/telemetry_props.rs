@@ -1,0 +1,347 @@
+//! Telemetry properties (DESIGN.md §Telemetry), on BOTH cluster cores:
+//!
+//! * **Stall-attribution conservation** — every recorded span
+//!   reconstructs its measured TTFT *bitwise* from its components
+//!   (`RequestSpan::conserves_ttft`), and the fleet ledger is exactly
+//!   the per-replica charge/merge fold of the published spans — no
+//!   latency second appears or disappears in attribution.
+//! * **Off is a strict passthrough** — a telemetry-off run publishes no
+//!   telemetry and stays deterministic; a telemetry-ON run leaves every
+//!   count (completions, tokens, SLO verdicts, shed/rejected)
+//!   untouched.
+//! * **Sampler/exporter sanity** — samples are tick-ordered with
+//!   monotone cumulative counters, attainment stays in [0, 1], and the
+//!   exporters render every span and sample.
+
+use fenghuang::config::FlashConfig;
+use fenghuang::coordinator::tenancy::TenantsConfig;
+use fenghuang::coordinator::{
+    AutoscaleConfig, Cluster, ClusterConfig, ClusterReport, PrefixCacheConfig, Request,
+};
+use fenghuang::faults::FaultSchedule;
+use fenghuang::models::arch::gpt3_175b;
+use fenghuang::telemetry::export::{chrome_trace, timeseries_csv};
+use fenghuang::telemetry::{SpanKind, StallLedger, TelemetryConfig};
+use fenghuang::traffic::{
+    self, generate_tenant_workload, ArrivalConfig, ArrivalPattern, TrafficConfig, WorkloadMix,
+};
+use fenghuang::units::{Bytes, Seconds};
+
+fn chat_reqs(requests: usize, seed: u64) -> Vec<Request> {
+    let tc = TrafficConfig {
+        arrivals: ArrivalConfig {
+            pattern: ArrivalPattern::Bursty,
+            qps: 12.0,
+            ..Default::default()
+        },
+        mix: WorkloadMix::parse("chat+rag").unwrap(),
+        requests,
+        seed,
+        max_prompt: 4096,
+        ..Default::default()
+    };
+    traffic::generate(&tc).expect("workload")
+}
+
+fn telemetry(ms: f64) -> Option<TelemetryConfig> {
+    Some(TelemetryConfig { interval: Seconds::ms(ms) })
+}
+
+/// The seeded scenario matrix: every cluster feature family with
+/// telemetry armed.
+fn scenarios() -> Vec<(&'static str, ClusterConfig, usize, Vec<Request>)> {
+    let agentic = TrafficConfig {
+        mix: WorkloadMix::parse("agentic").unwrap(),
+        requests: 28,
+        seed: 17,
+        max_prompt: gpt3_175b().max_seq as usize,
+        ..Default::default()
+    };
+    let mut tenants = TenantsConfig::parse("alpha/gpt2/weight=2/mix=chat,beta/gpt2/mix=batch")
+        .expect("tenant spec");
+    tenants.admit_tokens = Some(2048);
+    let tenant_tc = TrafficConfig {
+        arrivals: ArrivalConfig { qps: 15.0, ..Default::default() },
+        requests: 24,
+        seed: 29,
+        max_prompt: 1024,
+        ..Default::default()
+    };
+    let tenant_reqs = generate_tenant_workload(&tenants, &tenant_tc).expect("tenant workload");
+    vec![
+        (
+            "plain",
+            ClusterConfig { telemetry: telemetry(50.0), ..Default::default() },
+            2,
+            chat_reqs(24, 7),
+        ),
+        (
+            "kv-flash-autoscale",
+            ClusterConfig {
+                kv_budget: Some(Bytes::gb(2.0)),
+                flash: Some(FlashConfig::gb(64.0)),
+                autoscale: Some(AutoscaleConfig { target_tokens: 2048, ..Default::default() }),
+                telemetry: telemetry(50.0),
+                ..Default::default()
+            },
+            3,
+            chat_reqs(32, 11),
+        ),
+        (
+            "faulted-prefix",
+            ClusterConfig {
+                prefix_cache: Some(PrefixCacheConfig::default()),
+                faults: Some(
+                    FaultSchedule::parse("crash@0.3:r1:repair0.2,module@0.6:hot", 4)
+                        .expect("fault spec"),
+                ),
+                telemetry: telemetry(50.0),
+                ..Default::default()
+            },
+            4,
+            traffic::generate(&agentic).expect("workload"),
+        ),
+        (
+            "tenants",
+            ClusterConfig { tenants: Some(tenants), telemetry: telemetry(50.0), ..Default::default() },
+            2,
+            tenant_reqs,
+        ),
+        (
+            "disaggregated",
+            ClusterConfig {
+                disaggregate: Some((2, 2)),
+                telemetry: telemetry(50.0),
+                ..Default::default()
+            },
+            4,
+            fenghuang::coordinator::session_workload(24, 6, 512, 12, Seconds::ms(2.0)),
+        ),
+    ]
+}
+
+fn run_event(cfg: &ClusterConfig, replicas: usize, reqs: &[Request]) -> ClusterReport {
+    let mut c = Cluster::fh4(replicas, &gpt3_175b(), cfg.clone()).expect("cluster");
+    c.run(reqs.to_vec()).expect("run")
+}
+
+fn run_stepping(cfg: &ClusterConfig, replicas: usize, reqs: &[Request]) -> ClusterReport {
+    let mut c = Cluster::fh4(replicas, &gpt3_175b(), cfg.clone()).expect("cluster");
+    c.run_stepping(reqs.to_vec()).expect("run")
+}
+
+fn ledger_bits(l: &StallLedger) -> [u64; 8] {
+    [
+        l.spans,
+        l.queue_wait.value().to_bits(),
+        l.prefill_exec.value().to_bits(),
+        l.prefix_fetch.value().to_bits(),
+        l.swap_stall.value().to_bits(),
+        l.decode.value().to_bits(),
+        l.ttft_total.value().to_bits(),
+        l.e2e_total.value().to_bits(),
+    ]
+}
+
+/// The full property battery on one finished report.
+fn check_report(name: &str, r: &ClusterReport) {
+    let tel = r.telemetry.as_ref().unwrap_or_else(|| panic!("{name}: telemetry missing"));
+
+    // Per-span bitwise TTFT conservation: components replay the clock
+    // advance exactly, no epsilon.
+    for s in &tel.spans {
+        assert!(
+            s.conserves_ttft(),
+            "{name}: span {} ({:?}) does not conserve ttft: queue_end {} + ({} + {}) + {} \
+             vs prefill_done {} (ttft {})",
+            s.id,
+            s.kind,
+            s.queue_end.value(),
+            s.prefill_compute.value(),
+            s.prefix_fetch.value(),
+            s.swap_stall.value(),
+            s.prefill_done.value(),
+            s.ttft.value(),
+        );
+        assert!(s.finish >= s.prefill_done, "{name}: span {} finishes before TTFT", s.id);
+        assert!(s.queue_end >= s.arrival, "{name}: span {} queued before arriving", s.id);
+    }
+
+    // Every finishing lifecycle yields exactly one decode-side span.
+    let finishing = tel
+        .spans
+        .iter()
+        .filter(|s| s.kind != SpanKind::PrefillHandoff)
+        .count() as u64;
+    assert_eq!(finishing, r.fleet.completed, "{name}: span count vs completions");
+
+    // The fleet ledger is exactly the per-replica charge/merge fold of
+    // the published spans — same grouping, same order, bit-for-bit.
+    let mut per: Vec<StallLedger> = vec![StallLedger::default(); r.per_replica.len()];
+    for s in &tel.spans {
+        per[s.replica].charge(s);
+    }
+    let mut replay = StallLedger::default();
+    for l in &per {
+        replay.merge(l);
+    }
+    assert_eq!(
+        ledger_bits(&replay),
+        ledger_bits(&tel.ledger),
+        "{name}: ledger is not the bitwise fold of its spans"
+    );
+    assert_eq!(ledger_bits(&tel.ledger), ledger_bits(&r.fleet.ledger), "{name}: fleet ledger");
+
+    // Tenant ledgers partition the spans.
+    if let Some(tenants) = &r.tenants {
+        let charged: u64 = tenants.iter().map(|t| t.ledger.spans).sum();
+        assert_eq!(charged, tel.ledger.spans, "{name}: tenant ledgers must partition spans");
+    }
+
+    // Samples are tick-ordered with monotone cumulative counters.
+    for w in tel.samples.windows(2) {
+        assert!(w[0].at < w[1].at, "{name}: sample ticks must advance");
+        assert!(w[0].completed <= w[1].completed, "{name}: completions ran backwards");
+        assert!(w[0].tokens_generated <= w[1].tokens_generated, "{name}: tokens ran backwards");
+        assert!(w[0].slo_met <= w[1].slo_met, "{name}: slo_met ran backwards");
+        assert!(w[0].shed <= w[1].shed && w[0].rejected <= w[1].rejected, "{name}: drops");
+    }
+    for s in &tel.samples {
+        assert!(s.active_replicas >= 1, "{name}: sampled an empty fleet");
+        assert!(s.slo_met <= s.slo_total, "{name}: slo_met > slo_total");
+        assert!(s.completed <= r.fleet.completed, "{name}: sample outran the run");
+    }
+
+    // Rolling attainment: interval-wide windows from t = 0, in [0, 1].
+    assert!(!tel.attainment.is_empty(), "{name}: attainment series empty");
+    assert_eq!(tel.attainment[0].0, Seconds::ZERO, "{name}: first window starts at 0");
+    for &(t, a) in &tel.attainment {
+        assert!((0.0..=1.0).contains(&a), "{name}: attainment {a} out of range at {t:?}");
+    }
+
+    // Exporters render every span and sample.
+    let trace = chrome_trace(tel);
+    assert_eq!(trace.matches('{').count(), trace.matches('}').count(), "{name}: trace braces");
+    let prefills = tel.spans.iter().filter(|s| s.kind != SpanKind::DecodeInjected).count();
+    assert_eq!(
+        trace.matches("\"name\": \"prefill\"").count(),
+        prefills,
+        "{name}: trace must carry one prefill slice per observed prefill"
+    );
+    let csv = timeseries_csv(tel);
+    assert_eq!(csv.lines().count(), tel.samples.len() + 1, "{name}: csv rows vs samples");
+}
+
+#[test]
+fn spans_conserve_ttft_and_ledger_folds_bitwise_event_core() {
+    for (name, cfg, replicas, reqs) in scenarios() {
+        check_report(name, &run_event(&cfg, replicas, &reqs));
+    }
+}
+
+#[test]
+fn spans_conserve_ttft_and_ledger_folds_bitwise_stepping_core() {
+    for (name, cfg, replicas, reqs) in scenarios() {
+        check_report(name, &run_stepping(&cfg, replicas, &reqs));
+    }
+}
+
+#[test]
+fn disaggregated_handoffs_pair_prefill_and_decode_spans() {
+    let cfg = ClusterConfig {
+        disaggregate: Some((2, 2)),
+        telemetry: telemetry(50.0),
+        ..Default::default()
+    };
+    let r = run_event(&cfg, 4, &fenghuang::coordinator::session_workload(24, 6, 512, 12, Seconds::ms(2.0)));
+    let tel = r.telemetry.as_ref().unwrap();
+    let handoffs: Vec<_> =
+        tel.spans.iter().filter(|s| s.kind == SpanKind::PrefillHandoff).collect();
+    let injected: Vec<_> =
+        tel.spans.iter().filter(|s| s.kind == SpanKind::DecodeInjected).collect();
+    assert!(!handoffs.is_empty(), "disaggregated run produced no handoff spans");
+    assert_eq!(handoffs.len(), injected.len(), "unpaired handoff spans");
+    for d in &injected {
+        let p = handoffs
+            .iter()
+            .find(|p| p.id == d.id)
+            .unwrap_or_else(|| panic!("decode span {} has no prefill side", d.id));
+        // The decode side carries the measured TTFT over verbatim and
+        // reconstructs prefill_done from it.
+        assert_eq!(p.ttft.value().to_bits(), d.ttft.value().to_bits(), "ttft handoff {}", d.id);
+        assert_eq!(
+            (d.arrival + d.ttft).value().to_bits(),
+            d.prefill_done.value().to_bits(),
+            "injected prefill_done reconstruction {}",
+            d.id
+        );
+        // Prefill attribution lives only on the prefill side.
+        assert_eq!(d.prefill_compute, Seconds::ZERO);
+        assert_eq!(d.prefix_fetch, Seconds::ZERO);
+        assert_eq!(d.swap_stall, Seconds::ZERO);
+    }
+}
+
+#[test]
+fn telemetry_off_publishes_nothing_and_stays_deterministic() {
+    let reqs = chat_reqs(24, 7);
+    let cfg = ClusterConfig::default();
+    let a = run_event(&cfg, 2, &reqs);
+    let b = run_event(&cfg, 2, &reqs);
+    assert!(a.telemetry.is_none(), "off run must publish no telemetry");
+    assert!(a.fleet.ledger.is_zero(), "off run must charge no ledger");
+    assert!(!a.summary().contains("stalls ("), "off summary must not grow a stalls line");
+    for (x, y) in [
+        (a.fleet.clock.value(), b.fleet.clock.value()),
+        (a.fleet.ttft.mean_ms(), b.fleet.ttft.mean_ms()),
+        (a.fleet.e2e.mean_ms(), b.fleet.e2e.mean_ms()),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "off runs must be bit-identical");
+    }
+}
+
+#[test]
+fn telemetry_on_leaves_every_count_untouched() {
+    // The sampling tick may stretch idle replicas' clocks (like
+    // autoscale ticks), but what happened — completions, tokens, SLO
+    // verdicts, drops — must be exactly the off run's.
+    for (name, cfg, replicas, reqs) in scenarios() {
+        let on = run_event(&cfg, replicas, &reqs);
+        let off_cfg = ClusterConfig { telemetry: None, ..cfg };
+        let off = run_event(&off_cfg, replicas, &reqs);
+        assert_eq!(on.fleet.completed, off.fleet.completed, "{name}: completed");
+        assert_eq!(on.fleet.tokens_generated, off.fleet.tokens_generated, "{name}: tokens");
+        assert_eq!(on.fleet.slo_total, off.fleet.slo_total, "{name}: slo_total");
+        assert_eq!(on.fleet.slo_met, off.fleet.slo_met, "{name}: slo_met");
+        assert_eq!(on.fleet.shed, off.fleet.shed, "{name}: shed");
+        assert_eq!(on.fleet.rejected, off.fleet.rejected, "{name}: rejected");
+        assert_eq!(
+            on.fleet.ttft.mean_ms().to_bits(),
+            off.fleet.ttft.mean_ms().to_bits(),
+            "{name}: ttft must not shift under observation"
+        );
+    }
+}
+
+#[test]
+fn ledger_ttft_total_sums_measured_ttfts() {
+    // The headline acceptance property, stated directly: the ledger's
+    // TTFT total is the sum of the measured per-request TTFTs — the
+    // same numbers the latency metrics recorded.
+    let cfg = ClusterConfig { telemetry: telemetry(50.0), ..Default::default() };
+    let r = run_event(&cfg, 2, &chat_reqs(24, 7));
+    let tel = r.telemetry.as_ref().unwrap();
+    let naive: f64 = tel
+        .spans
+        .iter()
+        .filter(|s| s.kind != SpanKind::DecodeInjected)
+        .map(|s| s.ttft.value())
+        .sum();
+    let total = tel.ledger.ttft_total.value();
+    assert!(
+        (naive - total).abs() <= 1e-9 * naive.max(1.0),
+        "ledger ttft_total {total} vs span sum {naive}"
+    );
+    assert_eq!(tel.ledger.spans as usize, tel.spans.len());
+    assert!(tel.ledger.e2e_total >= tel.ledger.ttft_total);
+}

@@ -3,7 +3,7 @@
 # root) that seed the perf trajectory (EXPERIMENTS.md §Capacity-Sweep,
 # §Serve-Scale, §Traffic-Sweep, §Fault-Sweep).
 #
-#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention + fault_sweep + tenant_sweep + perf_hotpath
+#   scripts/bench_json.sh            # paging_sweep + serve_scale + traffic_sweep + prefix_cache + fabric_contention + fault_sweep + tenant_sweep + telemetry_overhead + perf_hotpath
 #   scripts/bench_json.sh paging     # just the capacity sweep
 #   scripts/bench_json.sh serve      # just the cluster sweep
 #   scripts/bench_json.sh traffic    # just the open-loop traffic sweep
@@ -11,6 +11,7 @@
 #   scripts/bench_json.sh contention # just the shared-fabric contention sweep
 #   scripts/bench_json.sh faults     # just the fault-injection sweep
 #   scripts/bench_json.sh tenants    # just the multi-tenant isolation sweep
+#   scripts/bench_json.sh telemetry  # just the telemetry overhead gate
 #   scripts/bench_json.sh perf       # just the hot-path micro-benchmarks
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -18,9 +19,9 @@ cd "$(dirname "$0")/.."
 want="${1:-all}"
 
 case "$want" in
-    all|paging|serve|traffic|prefix|contention|faults|tenants|perf) ;;
+    all|paging|serve|traffic|prefix|contention|faults|tenants|telemetry|perf) ;;
     *)
-        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix, contention, faults, tenants or perf)" >&2
+        echo "error: unknown target '$want' (expected: all, paging, serve, traffic, prefix, contention, faults, tenants, telemetry or perf)" >&2
         exit 2
         ;;
 esac
@@ -49,6 +50,9 @@ if [[ "$want" == "all" || "$want" == "faults" ]]; then
 fi
 if [[ "$want" == "all" || "$want" == "tenants" ]]; then
     cargo bench --bench tenant_sweep -- --json
+fi
+if [[ "$want" == "all" || "$want" == "telemetry" ]]; then
+    cargo bench --bench telemetry_overhead -- --json
 fi
 if [[ "$want" == "all" || "$want" == "perf" ]]; then
     cargo bench --bench perf_hotpath -- --json

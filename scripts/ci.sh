@@ -81,6 +81,7 @@ BENCHES=(
     prefix_cache
     serve_scale
     tab_latency
+    telemetry_overhead
     tenant_sweep
     traffic_sweep
 )
